@@ -1,0 +1,48 @@
+//! Cluster-scale serving: N simulated GPU nodes behind a least-loaded
+//! router, plus the fig12 shared-predictor overhead measurement.
+//!
+//! ```text
+//! cargo run --release --example cluster_sim -- --nodes 8 --rps 8
+//! ```
+
+use sagesched::cluster::{run_cluster_experiment, ClusterSim};
+use sagesched::prelude::*;
+use sagesched::util::cli::Args;
+use sagesched::util::stats::mean;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let nodes = args.usize_or("nodes", 8);
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.rps = args.f64_or("rps", 8.0);
+    cfg.workload.n_requests = args.usize_or("n-per-node", 400);
+
+    println!("# {nodes}-node cluster, {} rps/node\n", cfg.workload.rps);
+    let reports = run_cluster_experiment(&cfg, nodes)?;
+    println!("| node | requests | mean TTLT | p99 TTLT | mean TTFT |");
+    println!("|---|---|---|---|---|");
+    for (i, r) in reports.iter().enumerate() {
+        println!(
+            "| {i} | {} | {:.2} | {:.2} | {:.3} |",
+            r.measured, r.ttlt.mean, r.ttlt.p99, r.ttft.mean
+        );
+    }
+    let ttlts: Vec<f64> = reports.iter().map(|r| r.ttlt.mean).collect();
+    println!(
+        "\ncluster mean TTLT {:.2}s (node spread {:.2}..{:.2})",
+        mean(&ttlts),
+        ttlts.iter().cloned().fold(f64::INFINITY, f64::min),
+        ttlts.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    );
+
+    // shared predictor/scheduler overhead at this scale (fig12)
+    let sim = ClusterSim::new(cfg);
+    let o = sim.measure(nodes);
+    println!(
+        "\nper-request overhead at {nodes} nodes: predict {:.2} ms + sched {:.2} ms = {:.2} ms",
+        o.predict_latency * 1e3,
+        o.sched_latency * 1e3,
+        o.total_latency * 1e3
+    );
+    Ok(())
+}

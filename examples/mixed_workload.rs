@@ -1,0 +1,64 @@
+//! Mixed-workload scheduler shoot-out: the paper's six schedulers over the
+//! mixed ShareGPT/Alpaca/Write trace, at a configurable load.
+//!
+//! ```text
+//! cargo run --release --example mixed_workload -- --rps 8 --n 1200 --engine h800-qwen32b
+//! ```
+
+use sagesched::config::{EngineProfile, PolicyKind, PredictorKind};
+use sagesched::metrics::RunReport;
+use sagesched::prelude::*;
+use sagesched::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rps = args.f64_or("rps", 8.0);
+    let n = args.usize_or("n", 1200);
+    let engine = EngineProfile::by_name(&args.str_or("engine", "h800-qwen32b"))
+        .expect("unknown engine profile");
+    let seeds: Vec<u64> = (0..args.u64_or("seeds", 2)).collect();
+
+    println!(
+        "# mixed workload: {} @ {rps} rps, {n} requests, {} seed(s)\n",
+        engine.name,
+        seeds.len()
+    );
+    println!("{}", RunReport::markdown_header());
+
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    for policy in PolicyKind::PAPER_BASELINES {
+        let mut ttlt = 0.0;
+        let mut last = None;
+        for &seed in &seeds {
+            let mut cfg = ExperimentConfig::default();
+            cfg.engine = engine.clone();
+            cfg.policy = policy;
+            // each baseline uses the predictor its paper describes
+            cfg.predictor = match policy {
+                PolicyKind::Ssjf => PredictorKind::Proxy,
+                _ => PredictorKind::History,
+            };
+            cfg.workload.rps = rps;
+            cfg.workload.n_requests = n;
+            cfg.seed = seed;
+            let report = run_experiment(&cfg)?;
+            ttlt += report.ttlt.mean;
+            last = Some(report);
+        }
+        let report = last.unwrap();
+        println!("{}", report.markdown_row());
+        rows.push((policy.name().to_string(), ttlt / seeds.len() as f64, report.ttft.mean));
+    }
+
+    let sage = rows.iter().find(|(n, _, _)| n == "sagesched").unwrap().1;
+    let best_other = rows
+        .iter()
+        .filter(|(n, _, _)| n != "sagesched")
+        .map(|(_, t, _)| *t)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "\nSageSched vs best baseline: {:+.1}% mean TTLT",
+        (best_other - sage) / best_other * 100.0
+    );
+    Ok(())
+}

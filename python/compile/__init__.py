@@ -1,0 +1,5 @@
+"""Build-time python package: L1 Pallas kernels + L2 jax model + AOT export.
+
+Never imported at runtime — `make artifacts` runs once, the rust binary is
+self-contained afterwards.
+"""

@@ -1,0 +1,100 @@
+"""AOT export: lower the L2 model to HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Writes:
+  artifacts/prefill.hlo.txt   (tokens[P], length[])            -> (logits, k, v)
+  artifacts/decode.hlo.txt    (tokens[B], pos[B], k, v)        -> (logits, k, v)
+  artifacts/embed.hlo.txt     (tokens[E], length[])            -> (emb,)
+  artifacts/meta.json         shape/vocab metadata for the rust loader
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import model
+from .params import init_params
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (see module docstring).
+
+    ``print_large_constants=True`` is load-bearing: the model weights are
+    baked into the graph as constants, and the default printer elides any
+    literal bigger than a few elements as ``constant({...})`` — which the
+    rust-side text parser would reject. f32 literals print with 9
+    significant digits, enough to round-trip bit-exactly.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower_all(params):
+    """Lower the three entry points at their compiled shapes."""
+    i32 = jnp.int32
+    tok_p = jax.ShapeDtypeStruct((C.PREFILL_LEN,), i32)
+    tok_e = jax.ShapeDtypeStruct((C.EMBED_LEN,), i32)
+    scalar = jax.ShapeDtypeStruct((), i32)
+    tok_b = jax.ShapeDtypeStruct((C.DECODE_BATCH,), i32)
+    pos_b = jax.ShapeDtypeStruct((C.DECODE_BATCH,), i32)
+    cache = jax.ShapeDtypeStruct(
+        (C.N_LAYERS, C.DECODE_BATCH, C.N_HEADS, C.MAX_SEQ, C.D_HEAD),
+        jnp.float32,
+    )
+
+    prefill = functools.partial(model.prefill, params)
+    decode = functools.partial(model.decode, params)
+    embed = functools.partial(model.embed, params)
+
+    return {
+        "prefill": jax.jit(prefill).lower(tok_p, scalar),
+        # donate the KV caches: the emitted input_output_alias lets PJRT
+        # update them in place instead of materializing fresh 1 MB outputs
+        # each step (§Perf L2)
+        "decode": jax.jit(decode, donate_argnums=(2, 3)).lower(
+            tok_b, pos_b, cache, cache
+        ),
+        "embed": jax.jit(embed).lower(tok_e, scalar),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    params = init_params()
+    for name, lowered in lower_all(params).items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+    meta_path = os.path.join(args.out, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(C.META, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Shared model/artifact configuration for the SageSched tiny-LLM stack.
+
+The rust runtime reads the same values from ``artifacts/meta.json`` (written
+by ``aot.py``); keep this file the single source of truth on the python side.
+
+The model is deliberately tiny (~115k params): the point of the real-model
+path is to prove the three-layer stack composes (Pallas kernel -> jax model
+-> HLO text -> rust/PJRT) and to produce *genuinely stochastic* output
+lengths via temperature sampling to EOS — not to serve a production LLM.
+"""
+
+# --- tokenizer (byte-level; mirrored by rust/src/tokenizer/) ---
+BYTE_VOCAB = 256
+BOS_ID = 256
+EOS_ID = 257
+PAD_ID = 258
+VOCAB = 259
+
+# --- architecture ---
+D_MODEL = 64
+N_LAYERS = 2
+N_HEADS = 4
+D_HEAD = D_MODEL // N_HEADS
+D_FF = 256
+
+# --- compiled shapes ---
+MAX_SEQ = 256      # KV-cache capacity per sequence (S)
+PREFILL_LEN = 64   # fixed prompt pad length for the prefill executable (P)
+DECODE_BATCH = 8   # fixed lane count for the decode executable (B)
+EMBED_LEN = 64     # fixed pad length for the embedder executable
+
+# --- pallas kernel tiling ---
+KV_BLOCK = 64      # flash-decode KV block size (S must be a multiple)
+
+SEED = 0
+
+META = dict(
+    vocab=VOCAB, bos_id=BOS_ID, eos_id=EOS_ID, pad_id=PAD_ID,
+    d_model=D_MODEL, n_layers=N_LAYERS, n_heads=N_HEADS, d_head=D_HEAD,
+    d_ff=D_FF, max_seq=MAX_SEQ, prefill_len=PREFILL_LEN,
+    decode_batch=DECODE_BATCH, embed_len=EMBED_LEN, kv_block=KV_BLOCK,
+    seed=SEED,
+)

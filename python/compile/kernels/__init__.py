@@ -1,0 +1,1 @@
+"""L1: Pallas kernels for the serving hot-spot (+ pure-jnp oracles)."""

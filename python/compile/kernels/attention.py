@@ -1,0 +1,107 @@
+"""L1: Pallas flash-decode attention kernel.
+
+One decode step of multi-head attention against a (padded, fixed-capacity)
+KV cache. This is the compute hot-spot of the serving path: per step, per
+sequence, it streams the whole KV cache once — exactly the memory-bound
+behaviour SageSched's cost model (C = O^2/2 + I*O) integrates over a
+request's lifetime.
+
+Hardware adaptation (paper targets CUDA GPUs): instead of one threadblock
+per (batch, head) with shared-memory tiles, we give Pallas a grid over
+(batch, head) and express the HBM->VMEM schedule with BlockSpecs: the
+kernel instance sees its own q row and the full [S, Dh] K/V planes for its
+(b, h), and walks them in VMEM-sized KV_BLOCK chunks with an online-softmax
+(flash-decoding) accumulator. On a real TPU the chunk loop becomes the
+MXU-feeding inner loop; on CPU we must run interpret=True (Mosaic
+custom-calls cannot execute on the CPU PJRT plugin).
+
+VMEM budget per instance (S=256, Dh=16, f32):
+  K plane 16 KiB + V plane 16 KiB + q/acc/stats < 1 KiB  => ~33 KiB,
+comfortably under the ~16 MiB/core VMEM of contemporary TPUs; the design
+scales to S=8k (1 MiB/plane) before block-level double buffering of the
+K/V planes themselves becomes necessary.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import config as C
+
+
+def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, kv_block: int):
+    """Kernel body for one (batch, head) grid instance.
+
+    len_ref: [1]      int32  — valid KV length for this sequence (<= S)
+    q_ref:   [Dh]     f32    — this step's query row (batch/head dims squeezed)
+    k_ref:   [S, Dh]  f32    — cached keys (padded with garbage past len)
+    v_ref:   [S, Dh]  f32    — cached values
+    o_ref:   [Dh]     f32    — attention output
+    """
+    seq_len = len_ref[0]
+    q = q_ref[:]  # [Dh]
+    scale = jnp.float32(1.0 / (q.shape[-1] ** 0.5))
+
+    s_total = k_ref.shape[0]
+    n_blocks = s_total // kv_block
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = i * kv_block
+        k_blk = k_ref[pl.ds(start, kv_block), :]          # [BS, Dh]
+        v_blk = v_ref[pl.ds(start, kv_block), :]          # [BS, Dh]
+        scores = (k_blk @ q) * scale                       # [BS]
+        idx = start + jax.lax.iota(jnp.int32, kv_block)
+        scores = jnp.where(idx < seq_len, scores, -jnp.inf)
+        m_cur = jnp.maximum(m_prev, jnp.max(scores))
+        # guard the all-masked-block case: exp(-inf - -inf) -> use safe max
+        m_safe = jnp.where(jnp.isneginf(m_cur), 0.0, m_cur)
+        p = jnp.exp(scores - m_safe)                       # [BS]
+        p = jnp.where(idx < seq_len, p, 0.0)
+        corr = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
+        l_cur = l_prev * corr + jnp.sum(p)
+        acc_cur = acc_prev * corr + p @ v_blk              # [Dh]
+        return m_cur, l_cur, acc_cur
+
+    m0 = jnp.float32(-jnp.inf)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros_like(q)
+    _, l_fin, acc_fin = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    # seq_len >= 1 always holds on the decode path (the current token's KV
+    # is written before attention), but stay safe for padded idle lanes.
+    denom = jnp.where(l_fin > 0.0, l_fin, 1.0)
+    o_ref[:] = acc_fin / denom
+
+
+def flash_decode(q, k_cache, v_cache, lens, *, kv_block: int = C.KV_BLOCK,
+                 interpret: bool = True):
+    """Batched flash-decode attention.
+
+    q:       [B, H, Dh]    current-step queries
+    k_cache: [B, H, S, Dh] padded key cache
+    v_cache: [B, H, S, Dh] padded value cache
+    lens:    [B] int32     valid lengths (including the current position)
+    returns  [B, H, Dh]
+    """
+    b, h, dh = q.shape
+    s = k_cache.shape[2]
+    assert s % kv_block == 0, (s, kv_block)
+    assert k_cache.shape == (b, h, s, dh) and v_cache.shape == (b, h, s, dh)
+
+    kernel = functools.partial(_flash_decode_kernel, kv_block=kv_block)
+    grid = (b, h)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),                  # lens[b]
+            pl.BlockSpec((None, None, dh), lambda i, j: (i, j, 0)),  # q[b, h]
+            pl.BlockSpec((None, None, s, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, s, dh), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=interpret,
+    )(lens, q, k_cache, v_cache)

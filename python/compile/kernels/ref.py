@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package must
+match its reference here to float tolerance (checked by
+``python/tests/test_kernel.py`` with hypothesis sweeps over shapes/values).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_decode_attention(q, k_cache, v_cache, lens):
+    """Reference for kernels.attention.flash_decode.
+
+    q:       [B, H, Dh]
+    k_cache: [B, H, S, Dh]
+    v_cache: [B, H, S, Dh]
+    lens:    [B] int32 — valid KV length per sequence
+    returns  [B, H, Dh]
+    """
+    b, h, dh = q.shape
+    s = k_cache.shape[2]
+    scale = 1.0 / (dh ** 0.5)
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k_cache) * scale
+    idx = jnp.arange(s)[None, None, :]
+    mask = idx < lens[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    # softmax with fully-masked-row safety (idle lanes with len == 0)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    denom = jnp.where(denom > 0.0, denom, 1.0)
+    w = p / denom
+    return jnp.einsum("bhs,bhsd->bhd", w, v_cache)

@@ -1,0 +1,153 @@
+"""L2: the tiny decoder-only LM served by the rust coordinator.
+
+Three entry points, each AOT-lowered to HLO text by ``aot.py``:
+
+  * ``prefill``  — full causal forward over a padded prompt, emitting the
+    next-token logits at the last valid position plus the populated KV cache.
+    Compiled at batch 1 (one prompt at a time, vLLM-style non-chunked
+    prefill).
+  * ``decode``   — one token step for a fixed lane batch, calling the L1
+    Pallas flash-decode kernel (kernels.attention) against the KV cache and
+    appending this step's K/V in place. This is the request-path hot loop.
+  * ``embed``    — mean-pooled, L2-normalized token embedding of a prompt;
+    the semantic embedder behind SageSched's history-based predictor.
+
+Everything is a pure function of (params, inputs); ``aot.py`` closes over
+deterministic params so the HLO artifacts are self-contained constants.
+Sampling (temperature, EOS detection) happens in rust — keeping the
+stochastic path out of the compiled graph is what lets the coordinator own
+RNG seeds and reproduce runs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+from .kernels.attention import flash_decode
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _split_heads(x):
+    """[..., H*Dh] -> [..., H, Dh]"""
+    return x.reshape(x.shape[:-1] + (C.N_HEADS, C.D_HEAD))
+
+
+def _merge_heads(x):
+    """[..., H, Dh] -> [..., H*Dh]"""
+    return x.reshape(x.shape[:-2] + (C.N_HEADS * C.D_HEAD,))
+
+
+def _ffn(layer, x):
+    h = jax.nn.gelu(x @ layer["w1"])
+    return h @ layer["w2"]
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens, length):
+    """Causal forward over one padded prompt.
+
+    tokens: [P] int32 (PAD-padded), length: [] int32 (valid prefix length)
+    returns (logits [V], k_cache [L, H, S, Dh], v_cache [L, H, S, Dh])
+    """
+    p = tokens.shape[0]
+    s = C.MAX_SEQ
+    pos = jnp.arange(p)
+    x = params["tok_emb"][tokens] + params["pos_emb"][:p]          # [P, D]
+
+    valid = pos < length                                            # [P]
+    causal = pos[:, None] >= pos[None, :]                           # [P, P]
+    mask = causal & valid[None, :]                                  # [P, P]
+
+    k_caches, v_caches = [], []
+    for layer in params["layers"]:
+        h = _layer_norm(x, layer["ln1_g"], layer["ln1_b"])
+        q = _split_heads(h @ layer["wq"])                           # [P, H, Dh]
+        k = _split_heads(h @ layer["wk"])
+        v = _split_heads(h @ layer["wv"])
+        scores = jnp.einsum("phd,qhd->hpq", q, k) / (C.D_HEAD ** 0.5)
+        scores = jnp.where(mask[None, :, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("hpq,qhd->phd", w, v)                      # [P, H, Dh]
+        x = x + _merge_heads(att) @ layer["wo"]
+        x = x + _ffn(layer, _layer_norm(x, layer["ln2_g"], layer["ln2_b"]))
+
+        # pad K/V out to cache capacity S, layout [H, S, Dh]
+        k_pad = jnp.zeros((C.N_HEADS, s, C.D_HEAD), jnp.float32)
+        v_pad = jnp.zeros((C.N_HEADS, s, C.D_HEAD), jnp.float32)
+        k_caches.append(k_pad.at[:, :p, :].set(k.transpose(1, 0, 2)))
+        v_caches.append(v_pad.at[:, :p, :].set(v.transpose(1, 0, 2)))
+
+    x = _layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    logits_all = x @ params["tok_emb"].T + params["eos_bias"]       # [P, V]
+    last = jnp.clip(length - 1, 0, p - 1)
+    logits = logits_all[last]                                       # [V]
+    return logits, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode(params, tokens, positions, k_cache, v_cache):
+    """One decode step over B lanes.
+
+    tokens:    [B] int32 — previously sampled token per lane
+    positions: [B] int32 — index this token occupies (== current seq len - 1)
+    k_cache:   [L, B, H, S, Dh]; v_cache same — caches *before* this step
+    returns (logits [B, V], k_cache', v_cache') with this step's K/V written
+    at ``positions``. Idle lanes should carry position 0 and PAD tokens;
+    their outputs are ignored by the coordinator.
+    """
+    x = params["tok_emb"][tokens] + params["pos_emb"][positions]    # [B, D]
+    lens = positions + 1                                            # [B]
+
+    new_k, new_v = [], []
+    for li, layer in enumerate(params["layers"]):
+        h = _layer_norm(x, layer["ln1_g"], layer["ln1_b"])
+        q = _split_heads(h @ layer["wq"])                           # [B, H, Dh]
+        k = _split_heads(h @ layer["wk"])
+        v = _split_heads(h @ layer["wv"])
+
+        # write this step's K/V at `positions` (per-lane dynamic update)
+        def write(cache, upd):
+            # cache [B, H, S, Dh], upd [B, H, Dh]
+            def one(c, u, p):
+                return jax.lax.dynamic_update_slice(
+                    c, u[:, None, :], (0, p, 0))
+            return jax.vmap(one)(cache, upd, positions)
+
+        kc = write(k_cache[li], k)
+        vc = write(v_cache[li], v)
+        new_k.append(kc)
+        new_v.append(vc)
+
+        att = flash_decode(q, kc, vc, lens)                         # [B, H, Dh]
+        x = x + _merge_heads(att) @ layer["wo"]
+        x = x + _ffn(layer, _layer_norm(x, layer["ln2_g"], layer["ln2_b"]))
+
+    x = _layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    logits = x @ params["tok_emb"].T + params["eos_bias"]           # [B, V]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# embed (predictor-side semantic embedding)
+# ---------------------------------------------------------------------------
+
+def embed(params, tokens, length):
+    """Mean-pooled, L2-normalized prompt embedding. tokens: [E], length: []"""
+    e = tokens.shape[0]
+    emb = params["tok_emb"][tokens]                                 # [E, D]
+    pos = jnp.arange(e)
+    w = (pos < length).astype(jnp.float32)[:, None]
+    mean = jnp.sum(emb * w, axis=0) / jnp.maximum(jnp.sum(w), 1.0)
+    norm = jnp.sqrt(jnp.sum(mean * mean)) + 1e-8
+    return mean / norm

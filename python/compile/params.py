@@ -1,0 +1,51 @@
+"""Deterministic parameter initialization for the tiny decoder-only LM.
+
+Weights are generated from a fixed PRNG seed and *baked into the HLO text as
+constants* by ``aot.py`` — the rust side never handles a weights file, which
+keeps the artifact path identical to the reference round-trip
+(/opt/xla-example/load_hlo).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+
+
+def init_params(seed: int = C.SEED):
+    """Build the parameter pytree. Scales follow standard transformer init."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4 + 8 * C.N_LAYERS)
+    it = iter(range(len(ks)))
+
+    def normal(key, shape, scale):
+        return (scale * jax.random.normal(key, shape)).astype(jnp.float32)
+
+    d, h, dh, dff = C.D_MODEL, C.N_HEADS, C.D_HEAD, C.D_FF
+    params = {
+        # token embedding is tied with the unembedding projection
+        "tok_emb": normal(ks[next(it)], (C.VOCAB, d), 0.02),
+        "pos_emb": normal(ks[next(it)], (C.MAX_SEQ, d), 0.01),
+        "ln_f_g": jnp.ones((d,), jnp.float32),
+        "ln_f_b": jnp.zeros((d,), jnp.float32),
+        "layers": [],
+    }
+    # bias the EOS logit upward so random weights still terminate generations
+    # at plausible lengths (output-length uncertainty is the point).
+    params["eos_bias"] = jnp.zeros((C.VOCAB,), jnp.float32).at[C.EOS_ID].set(1.5)
+
+    for _ in range(C.N_LAYERS):
+        layer = {
+            "ln1_g": jnp.ones((d,), jnp.float32),
+            "ln1_b": jnp.zeros((d,), jnp.float32),
+            "wq": normal(ks[next(it)], (d, h * dh), d ** -0.5),
+            "wk": normal(ks[next(it)], (d, h * dh), d ** -0.5),
+            "wv": normal(ks[next(it)], (d, h * dh), d ** -0.5),
+            "wo": normal(ks[next(it)], (h * dh, d), (h * dh) ** -0.5),
+            "ln2_g": jnp.ones((d,), jnp.float32),
+            "ln2_b": jnp.zeros((d,), jnp.float32),
+            "w1": normal(ks[next(it)], (d, dff), d ** -0.5),
+            "w2": normal(ks[next(it)], (dff, d), dff ** -0.5),
+        }
+        params["layers"].append(layer)
+    return params

@@ -1,0 +1,138 @@
+"""L2 correctness: prefill/decode consistency, shapes, and embedder sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import config as C
+from compile import model
+from compile.params import init_params
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params()
+
+
+def byte_tokens(text: str):
+    return [C.BOS_ID] + [b for b in text.encode("utf-8")]
+
+
+def pad_to(tokens, n):
+    assert len(tokens) <= n
+    return jnp.asarray(tokens + [C.PAD_ID] * (n - len(tokens)), jnp.int32)
+
+
+def run_prefill(params, tokens):
+    toks = pad_to(tokens, C.PREFILL_LEN)
+    return model.prefill(params, toks, jnp.int32(len(tokens)))
+
+
+def fresh_caches():
+    shape = (C.N_LAYERS, C.DECODE_BATCH, C.N_HEADS, C.MAX_SEQ, C.D_HEAD)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def test_prefill_shapes(params):
+    logits, k, v = run_prefill(params, byte_tokens("hello"))
+    assert logits.shape == (C.VOCAB,)
+    assert k.shape == (C.N_LAYERS, C.N_HEADS, C.MAX_SEQ, C.D_HEAD)
+    assert v.shape == k.shape
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_prefill_ignores_padding(params):
+    """Logits must not depend on what sits in the PAD region."""
+    toks = byte_tokens("abc")
+    a = pad_to(toks, C.PREFILL_LEN)
+    b = jnp.asarray(list(toks) + [17] * (C.PREFILL_LEN - len(toks)), jnp.int32)
+    la, _, _ = model.prefill(params, a, jnp.int32(len(toks)))
+    lb, _, _ = model.prefill(params, b, jnp.int32(len(toks)))
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_prefill(params):
+    """Teacher-forcing equivalence: prefill(t[:n]) logits == decoding the
+    same tokens one step at a time after prefill(t[:k])."""
+    toks = byte_tokens("the quick brown fox")
+    split = 5
+    # ground truth: full prefill over toks gives next-token logits
+    full_logits, _, _ = run_prefill(params, toks)
+
+    # prefix prefill, then decode the remaining tokens step by step
+    logits_p, k1, v1 = run_prefill(params, toks[:split])
+    kc, vc = fresh_caches()
+    lane = 0
+    kc = kc.at[:, lane, :, :, :].set(k1)
+    vc = vc.at[:, lane, :, :, :].set(v1)
+
+    logits = logits_p
+    for i in range(split, len(toks)):
+        tok_b = jnp.full((C.DECODE_BATCH,), C.PAD_ID, jnp.int32)
+        pos_b = jnp.zeros((C.DECODE_BATCH,), jnp.int32)
+        tok_b = tok_b.at[lane].set(toks[i])
+        pos_b = pos_b.at[lane].set(i)
+        logits_b, kc, vc = model.decode(params, tok_b, pos_b, kc, vc)
+        logits = logits_b[lane]
+
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_lanes_independent(params):
+    """A lane's logits must not depend on other lanes' contents."""
+    toks = byte_tokens("independence")
+    _, k1, v1 = run_prefill(params, toks)
+    kc, vc = fresh_caches()
+    kc = kc.at[:, 2, :, :, :].set(k1)
+    vc = vc.at[:, 2, :, :, :].set(v1)
+
+    def step(other_tok):
+        tok_b = jnp.full((C.DECODE_BATCH,), other_tok, jnp.int32)
+        pos_b = jnp.full((C.DECODE_BATCH,), 3, jnp.int32)
+        tok_b = tok_b.at[2].set(65)
+        pos_b = pos_b.at[2].set(len(toks))
+        logits, _, _ = model.decode(params, tok_b, pos_b, kc, vc)
+        return np.asarray(logits[2])
+
+    np.testing.assert_allclose(step(11), step(200), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_writes_kv_at_position(params):
+    kc, vc = fresh_caches()
+    tok_b = jnp.full((C.DECODE_BATCH,), 42, jnp.int32)
+    pos_b = jnp.full((C.DECODE_BATCH,), 7, jnp.int32)
+    _, kc2, _ = model.decode(params, tok_b, pos_b, kc, vc)
+    kc2 = np.asarray(kc2)
+    assert np.abs(kc2[:, :, :, 7, :]).sum() > 0
+    untouched = np.delete(kc2, 7, axis=3)
+    np.testing.assert_allclose(untouched, 0.0)
+
+
+def test_embed_normalized_and_length_sensitive(params):
+    t1 = pad_to(byte_tokens("summarize this document"), C.EMBED_LEN)
+    e1 = np.asarray(model.embed(params, t1, jnp.int32(10)))
+    assert abs(np.linalg.norm(e1) - 1.0) < 1e-4
+    e2 = np.asarray(model.embed(params, t1, jnp.int32(24)))
+    assert not np.allclose(e1, e2)
+
+
+def test_embed_similarity_orders_prompts(params):
+    """Near-duplicate prompts embed closer than unrelated prompts."""
+    def emb(s):
+        t = pad_to(byte_tokens(s), C.EMBED_LEN)
+        return np.asarray(model.embed(params, t, jnp.int32(len(byte_tokens(s)))))
+
+    a = emb("please summarize the following article about birds")
+    b = emb("please summarize the following article about trees")
+    c = emb("write me a very long epic fantasy story now!")
+    assert a @ b > a @ c
+
+
+def test_eos_bias_present(params):
+    """The baked EOS bias must lift EOS probability so generations halt."""
+    logits, _, _ = run_prefill(params, byte_tokens("x"))
+    logits = np.asarray(logits)
+    assert logits[C.EOS_ID] > np.median(logits)

@@ -1,0 +1,64 @@
+//! Shared helpers for the hand-rolled bench harnesses (criterion is not
+//! available offline): wallclock timing with warmup, and CSV emission.
+//! Each bench target uses a subset of these, hence the allow(dead_code).
+#![allow(dead_code)]
+
+use std::io::Write;
+use std::time::Instant;
+
+/// Time `f` with `warmup` + `iters` iterations; returns ns/op (median of 5
+/// batches).
+pub fn time_ns(mut f: impl FnMut(), warmup: usize, iters: usize) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut batches = Vec::with_capacity(5);
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        batches.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    batches.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    batches[2]
+}
+
+/// Pretty-print ns as an adaptive unit string.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Write rows to `bench_out/<name>.csv` (header first).
+pub fn write_csv(name: &str, header: &str, rows: &[String]) {
+    let dir = std::path::Path::new("bench_out");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{name}.csv"));
+    match std::fs::File::create(&path) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "{header}");
+            for r in rows {
+                let _ = writeln!(f, "{r}");
+            }
+            println!("  [csv] {}", path.display());
+        }
+        Err(e) => eprintln!("  [csv] failed to write {}: {e}", path.display()),
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}

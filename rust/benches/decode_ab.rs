@@ -1,0 +1,22 @@
+//! A/B: host-copy decode path vs literal-chaining decode path (§Perf).
+use std::time::Instant;
+fn main() {
+    let rt = sagesched::runtime::Runtime::load("artifacts").unwrap();
+    let m = rt.meta().clone();
+    let ce = m.cache_elems();
+    let toks = vec![m.pad_id as i32; m.decode_batch];
+    let pos = vec![1i32; m.decode_batch];
+    // warmup
+    let mut k = vec![0.01f32; ce];
+    let mut v = vec![0.01f32; ce];
+    for _ in 0..5 { let o = rt.run_decode(&toks, &pos, &k, &v).unwrap(); k = o.k; v = o.v; }
+    let t0 = Instant::now();
+    for _ in 0..100 { let o = rt.run_decode(&toks, &pos, &k, &v).unwrap(); k = o.k; v = o.v; }
+    println!("host-copy path   : {:.2} ms/step", t0.elapsed().as_secs_f64() * 10.0);
+    let mut kl = rt.cache_literal(&k).unwrap();
+    let mut vl = rt.cache_literal(&v).unwrap();
+    for _ in 0..5 { let o = rt.run_decode_lit(&toks, &pos, &kl, &vl).unwrap(); kl = o.k; vl = o.v; }
+    let t0 = Instant::now();
+    for _ in 0..100 { let o = rt.run_decode_lit(&toks, &pos, &kl, &vl).unwrap(); kl = o.k; vl = o.v; }
+    println!("literal-chaining : {:.2} ms/step", t0.elapsed().as_secs_f64() * 10.0);
+}

@@ -1,0 +1,834 @@
+//! Regenerates every table and figure of the SageSched paper's evaluation
+//! (§2 motivation + §4 evaluation). One sub-command per figure:
+//!
+//! ```text
+//! cargo bench --bench figures            # everything
+//! cargo bench --bench figures -- fig7    # one figure
+//! cargo bench --bench figures -- fig7 --quick   # reduced sizes (CI)
+//! ```
+//!
+//! Each figure prints the paper-style rows/series and writes a CSV under
+//! `bench_out/`. Absolute numbers come from the calibrated simulator (see
+//! DESIGN.md §Substitutions); the claims under reproduction are the
+//! *shapes*: who wins, by roughly what factor, where crossovers fall.
+
+mod common;
+
+use common::{mean, write_csv};
+
+use sagesched::cluster::ClusterSim;
+use sagesched::config::{
+    CostModelKind, DatasetKind, EngineProfile, ExperimentConfig, PolicyKind,
+    PredictorKind, WorkloadConfig,
+};
+use sagesched::cost::{CostModel, OutputLenCost, ResourceBoundCost};
+use sagesched::distribution::LengthDist;
+use sagesched::engine::{Engine, LaneState, SimEngine};
+use sagesched::gittins::gittins_index;
+use sagesched::predictor::ProxyPredictor;
+use sagesched::serve::{prewarm_predictor, run_experiment};
+use sagesched::util::rng::Rng;
+use sagesched::workload::WorkloadGen;
+
+struct Ctx {
+    quick: bool,
+}
+
+impl Ctx {
+    fn n_requests(&self, full: usize) -> usize {
+        if self.quick { full / 4 } else { full }
+    }
+
+    fn seeds(&self, full: u64) -> Vec<u64> {
+        (0..if self.quick { 1 } else { full }).collect()
+    }
+}
+
+/// Run one experiment and return (mean TTLT, mean TTFT).
+fn run_point(cfg: &ExperimentConfig) -> (f64, f64) {
+    let r = run_experiment(cfg).expect("experiment failed");
+    (r.ttlt.mean, r.ttft.mean)
+}
+
+/// Default predictor pairing per policy, as each baseline's paper uses.
+fn natural_predictor(policy: PolicyKind) -> PredictorKind {
+    match policy {
+        PolicyKind::Ssjf => PredictorKind::Proxy,
+        _ => PredictorKind::History,
+    }
+}
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig::default()
+}
+
+// ===========================================================================
+// Fig 1(a): output-length variation of fixed prompts over repeated runs
+// ===========================================================================
+fn fig1a(ctx: &Ctx) {
+    println!("\n=== fig1a: output-length variation (10 prompts x 100 trials) ===");
+    let wl = WorkloadConfig::default();
+    let mut gen = WorkloadGen::new(wl, 7);
+    let trials = ctx.n_requests(100);
+    let mut rows = Vec::new();
+    println!("| prompt | dataset | min | p25 | median | p75 | max |");
+    println!("|---|---|---|---|---|---|---|");
+    let n_topics = gen.topics().len();
+    let mut rng = Rng::new(99);
+    for p in 0..10 {
+        let topic_idx = (rng.below(n_topics as u64)) as usize;
+        let mut lens: Vec<f64> = (0..trials)
+            .map(|i| gen.sample_from_topic(topic_idx, i as f64).true_output_len as f64)
+            .collect();
+        lens.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |f: f64| lens[((lens.len() - 1) as f64 * f) as usize];
+        let ds = gen.topics()[topic_idx].dataset.name();
+        println!(
+            "| {p} | {ds} | {:.0} | {:.0} | {:.0} | {:.0} | {:.0} |",
+            lens[0],
+            q(0.25),
+            q(0.5),
+            q(0.75),
+            lens[lens.len() - 1]
+        );
+        rows.push(format!(
+            "{p},{ds},{},{},{},{},{}",
+            lens[0],
+            q(0.25),
+            q(0.5),
+            q(0.75),
+            lens[lens.len() - 1]
+        ));
+    }
+    write_csv("fig1a", "prompt,dataset,min,p25,median,p75,max", &rows);
+    println!("  (same prompt, wide spread: demand uncertainty is intrinsic)");
+}
+
+// ===========================================================================
+// Fig 1(b): (execution time, peak memory) scatter per dataset
+// ===========================================================================
+fn fig1b(ctx: &Ctx) {
+    println!("\n=== fig1b: per-request (exec time, peak KV) by dataset ===");
+    let n = ctx.n_requests(200);
+    let mut rows = Vec::new();
+    println!("| dataset | mean exec (s) | mean peak KV (tokens) | corr(exec, mem) |");
+    println!("|---|---|---|---|");
+    for ds in DatasetKind::ALL {
+        let mut wl = WorkloadConfig::single(ds);
+        wl.n_requests = n;
+        let workload = WorkloadGen::new(wl, 11).generate();
+        let engine = SimEngine::new(EngineProfile::h800_qwen32b());
+        let mut execs = Vec::new();
+        let mut mems = Vec::new();
+        for r in &workload.requests {
+            // request profiled ALONE (as the paper does)
+            let i = r.input_len as f64;
+            let o = r.true_output_len as f64;
+            let mut t = engine.prefill_time(r.input_len);
+            for g in 1..r.true_output_len {
+                let (step, _, _) = engine.step_terms(1, (r.input_len + g) as usize);
+                t += step;
+            }
+            let peak = i + o;
+            execs.push(t);
+            mems.push(peak);
+            rows.push(format!("{},{t:.3},{peak}", ds.name()));
+        }
+        let (me, mm) = (mean(&execs), mean(&mems));
+        let cov: f64 = execs.iter().zip(&mems).map(|(a, b)| (a - me) * (b - mm)).sum();
+        let va: f64 = execs.iter().map(|a| (a - me) * (a - me)).sum();
+        let vb: f64 = mems.iter().map(|b| (b - mm) * (b - mm)).sum();
+        let corr = cov / (va.sqrt() * vb.sqrt()).max(1e-12);
+        println!("| {} | {:.2} | {:.0} | {:.2} |", ds.name(), me, mm, corr);
+    }
+    write_csv("fig1b", "dataset,exec_s,peak_kv_tokens", &rows);
+    println!("  (alpaca: high mem, low exec; write: high exec — hybridity)");
+}
+
+// ===========================================================================
+// Fig 2(a): single-value predictor bucket accuracy
+// ===========================================================================
+fn fig2a(ctx: &Ctx) {
+    println!("\n=== fig2a: point-prediction bucket accuracy (100-token buckets) ===");
+    let n = ctx.n_requests(2000);
+    let mut wl = WorkloadConfig::default();
+    wl.n_requests = n;
+    let workload = WorkloadGen::new(wl, 13).generate();
+    let mut proxy = ProxyPredictor::new(13);
+    let mut hits = 0usize;
+    let mut dist_hits = 0usize;
+    for r in &workload.requests {
+        let expected = r.true_dist.as_ref().unwrap().mean();
+        let point = proxy.noisy_point(expected.round() as u32);
+        let truth_bucket = (r.true_output_len / 100) as i64;
+        if (point / 100.0).floor() as i64 == truth_bucket {
+            hits += 1;
+        }
+        // the distribution prediction "covers" the truth if it puts >=5%
+        // mass on the true bucket
+        let d = r.true_dist.as_ref().unwrap();
+        let lo = (truth_bucket * 100) as f64;
+        let mass = d.cdf(lo + 100.0) - d.cdf(lo);
+        if mass >= 0.05 {
+            dist_hits += 1;
+        }
+    }
+    let acc = hits as f64 / n as f64;
+    let dacc = dist_hits as f64 / n as f64;
+    println!("| predictor | bucket accuracy |");
+    println!("|---|---|");
+    println!("| single-value (DistillBert-style proxy) | {:.1}% |", acc * 100.0);
+    println!("| distribution (>=5% mass on true bucket) | {:.1}% |", dacc * 100.0);
+    write_csv(
+        "fig2a",
+        "predictor,accuracy",
+        &[format!("point,{acc:.4}"), format!("distribution,{dacc:.4}")],
+    );
+    println!("  (paper: 34.1% for the single-value predictor)");
+}
+
+// ===========================================================================
+// Fig 2(b): shortest-output-first is suboptimal under memory pressure
+// ===========================================================================
+fn fig2b(_ctx: &Ctx) {
+    println!("\n=== fig2b: memory-bound counter-example (2 orders) ===");
+    // Request A: short output, huge input (heavy KV). B: longer output,
+    // tiny input. Under a memory-tight backend, output-length order runs A
+    // first; the resource-bound cost picks B first and wins on avg TTLT.
+    let mk = |id, input, output| sagesched::core::Request {
+        id,
+        prompt: String::new(),
+        input_len: input,
+        true_output_len: output,
+        arrival: 0.0,
+        dataset: DatasetKind::Alpaca,
+        topic: 0,
+        embedding: sagesched::embedding::Embedding::normalize(vec![1.0, 0.0]),
+        true_dist: Some(LengthDist::point(output as f64)),
+    };
+    // A: shortest output but a giant prompt — it monopolizes the KV pool.
+    // Seven chat requests (slightly longer outputs, tiny prompts) could run
+    // *concurrently* if A deferred.
+    let a = mk(1, 1800, 55);
+    let smalls: Vec<_> = (2..=8).map(|i| mk(i, 40, 60 + 5 * (i as u32 % 3))).collect();
+
+    let rb = ResourceBoundCost;
+    let ol = OutputLenCost;
+    println!("| request | I | O | C=O (output-len) | C=O²/2+IO (resource-bound) |");
+    println!("|---|---|---|---|---|");
+    for r in std::iter::once(&a).chain(smalls.iter().take(2)) {
+        println!(
+            "| {} | {} | {} | {:.0} | {:.0} |",
+            r.id,
+            r.input_len,
+            r.true_output_len,
+            ol.cost(r.input_len, r.true_output_len as f64),
+            rb.cost(r.input_len, r.true_output_len as f64)
+        );
+    }
+    let mut profile = EngineProfile::h800_qwen32b();
+    profile.kv_capacity = 2_000; // A cannot co-reside with the chat batch
+    let serve_with = |policy: PolicyKind| {
+        let mut cfg = base_cfg();
+        cfg.engine = profile.clone();
+        cfg.policy = policy;
+        cfg.predictor = PredictorKind::Oracle;
+        let mut coord = sagesched::serve::build_sim_coordinator(&cfg);
+        coord
+            .run_workload(
+                std::iter::once(a.clone()).chain(smalls.iter().cloned()).collect(),
+            )
+            .unwrap();
+        mean(&coord.outcomes().iter().map(|o| o.ttlt()).collect::<Vec<_>>())
+    };
+    // SSJF with an oracle point prediction == exact shortest-output-first
+    let short_first = serve_with(PolicyKind::Ssjf);
+    // oracle SRPT under the resource-bound cost defers the memory hog
+    let cheap_first = serve_with(PolicyKind::OracleSrpt);
+    println!("\n| order | avg TTLT (s) |");
+    println!("|---|---|");
+    println!("| shorter-output first (A, then chats) | {short_first:.3} |");
+    println!("| resource-bound first (chats co-run, A last) | {cheap_first:.3} |");
+    write_csv(
+        "fig2b",
+        "order,avg_ttlt",
+        &[
+            format!("shorter_output_first,{short_first:.4}"),
+            format!("resource_bound_first,{cheap_first:.4}"),
+        ],
+    );
+    assert!(cheap_first < short_first, "counter-example must hold");
+    println!("  (prioritizing by output length alone is suboptimal — hybridity)");
+}
+
+// ===========================================================================
+// Fig 4: prompt similarity <-> output-length-distribution similarity
+// ===========================================================================
+fn fig4(ctx: &Ctx) {
+    println!("\n=== fig4: similarity bands vs distribution distance ===");
+    let trials = ctx.n_requests(100);
+    let mut rows = Vec::new();
+    println!("| prompt | band | records | W1 to target dist |");
+    println!("|---|---|---|---|");
+    for (label, ds, topic_off) in [
+        ("prompt-1-alpaca", DatasetKind::Alpaca, 0usize),
+        ("prompt-2-write", DatasetKind::Write, 2),
+    ] {
+        let mut wl = WorkloadConfig::default();
+        wl.n_requests = 0;
+        let mut gen = WorkloadGen::new(wl, 17);
+        let topic_idx =
+            gen.topics().iter().position(|t| t.dataset == ds).unwrap() + topic_off;
+        let target_lens: Vec<f64> = (0..trials)
+            .map(|i| gen.sample_from_topic(topic_idx, i as f64).true_output_len as f64)
+            .collect();
+        let target = LengthDist::from_samples(&target_lens);
+        let probe = gen.sample_from_topic(topic_idx, 0.0);
+
+        let mut wl2 = WorkloadConfig::default();
+        wl2.n_requests = ctx.n_requests(4000);
+        let hist = WorkloadGen::new(wl2, 19).generate();
+        let mut bands: [(f32, f32, Vec<f64>); 3] = [
+            (0.8, 1.01, Vec::new()),
+            (0.4, 0.8, Vec::new()),
+            (-1.0, 0.4, Vec::new()),
+        ];
+        for r in &hist.requests {
+            let s = probe.embedding.cosine(&r.embedding);
+            for (lo, hi, v) in bands.iter_mut() {
+                if s >= *lo && s < *hi {
+                    v.push(r.true_output_len as f64);
+                }
+            }
+        }
+        for (lo, hi, lens) in &bands {
+            if lens.len() < 3 {
+                continue;
+            }
+            let d = LengthDist::from_samples(lens);
+            let w1 = d.w1_distance(&target);
+            println!("| {label} | [{lo:.1},{hi:.1}) | {} | {w1:.1} |", lens.len());
+            rows.push(format!("{label},{lo},{hi},{},{w1:.2}", lens.len()));
+        }
+    }
+    write_csv("fig4", "prompt,band_lo,band_hi,records,w1", &rows);
+    println!("  (higher similarity band -> closer to the target distribution)");
+}
+
+// ===========================================================================
+// Fig 5(a): GPU utilization vs KV occupation as batch grows
+// ===========================================================================
+fn fig5a(_ctx: &Ctx) {
+    println!("\n=== fig5a: util vs KV occupation, seq 50 vs 1000 ===");
+    let engine = SimEngine::new(EngineProfile::h800_qwen32b());
+    let cap = engine.profile().kv_capacity as f64;
+    let mut rows = Vec::new();
+    println!("| seq len | batch | GPU util | KV occupation |");
+    println!("|---|---|---|---|");
+    // "GPU util" = achieved/peak FLOPs: the per-sequence GEMM work (c1·B)
+    // amortizes the weight-streaming constant (c0), so utilization ramps
+    // with batch size — until the KV pool is full and the batch can't grow.
+    let c1 = engine.profile().decode_c1;
+    for seq in [50usize, 1000] {
+        for batch in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+            let resident = batch * seq;
+            if resident as f64 > cap {
+                break;
+            }
+            let (step, _, _) = engine.step_terms(batch, resident);
+            let util = (c1 * 2.0 * batch as f64 / step).min(1.0);
+            let occ = resident as f64 / cap;
+            println!("| {seq} | {batch} | {util:.2} | {occ:.2} |");
+            rows.push(format!("{seq},{batch},{util:.4},{occ:.4}"));
+        }
+    }
+    write_csv("fig5a", "seq,batch,util,kv_occupation", &rows);
+    println!("  (short seqs: util saturates before memory; long seqs: memory fills first)");
+}
+
+// ===========================================================================
+// Fig 5(b): per-step attention time vs decode progress
+// ===========================================================================
+fn fig5b(ctx: &Ctx) {
+    println!("\n=== fig5b: per-step time vs decode step (seq grows) ===");
+    let engine = SimEngine::new(EngineProfile::h800_qwen32b());
+    let mut rows = Vec::new();
+    println!("| decode step | sim step time (ms) |");
+    println!("|---|---|");
+    for step_idx in (0..=4000usize).step_by(500) {
+        let resident = 128 + step_idx;
+        let (t, _, _) = engine.step_terms(1, resident);
+        println!("| {step_idx} | {:.3} |", t * 1e3);
+        rows.push(format!("{step_idx},{:.6}", t * 1e3));
+    }
+    write_csv("fig5b", "decode_step,step_ms", &rows);
+
+    // real-engine measurement when artifacts exist: per-step wallclock of
+    // the compiled decode HLO (pallas flash-decode inside)
+    if sagesched::runtime::Runtime::artifacts_present("artifacts") && !ctx.quick {
+        use sagesched::engine::RealEngine;
+        let rt = sagesched::runtime::Runtime::load("artifacts").unwrap();
+        let mut eng = RealEngine::new(rt, 1);
+        let req = sagesched::core::Request {
+            id: 1,
+            prompt: "measure decode step scaling with sequence length".into(),
+            input_len: 10,
+            true_output_len: u32::MAX,
+            arrival: 0.0,
+            dataset: DatasetKind::Write,
+            topic: 0,
+            embedding: sagesched::embedding::Embedding::normalize(vec![1.0; 4]),
+            true_dist: None,
+        };
+        eng.max_output = 240;
+        let _ = eng.prefill(&req).unwrap();
+        let mut lanes = vec![LaneState::new(&req, 1)];
+        let mut real_rows = Vec::new();
+        let mut step = 0;
+        println!("\n| decode step (real HLO) | ms |");
+        println!("|---|---|");
+        while step < 200 {
+            let dt = eng.decode_step(&mut lanes, 0).unwrap();
+            if step % 25 == 0 {
+                println!("| {step} | {:.2} |", dt * 1e3);
+            }
+            real_rows.push(format!("{step},{:.4}", dt * 1e3));
+            lanes[0].finished = false; // keep generating for measurement
+            step += 1;
+        }
+        write_csv("fig5b_real", "decode_step,step_ms", &real_rows);
+    }
+}
+
+// ===========================================================================
+// Fig 6: Mean vs Gittins on the bimodal example
+// ===========================================================================
+fn fig6(_ctx: &Ctx) {
+    println!("\n=== fig6: mean-value vs Gittins prioritization ===");
+    let a = LengthDist::from_weighted(&[(80.0, 0.5), (120.0, 0.5)]);
+    let b = LengthDist::from_weighted(&[(10.0, 0.6), (400.0, 0.4)]);
+    println!("| request | mean cost | Gittins index |");
+    println!("|---|---|---|");
+    println!("| A (concentrated) | {:.0} | {:.1} |", a.mean(), gittins_index(&a));
+    println!("| B (bimodal) | {:.0} | {:.1} |", b.mean(), gittins_index(&b));
+    // Monte-Carlo expected average completion under three disciplines
+    let mut rng = Rng::new(5);
+    let trials = 20_000;
+    let (mut ab, mut ba, mut gittins_refresh) = (0.0, 0.0, 0.0);
+    for _ in 0..trials {
+        let xa = a.sample(&mut rng);
+        let xb = b.sample(&mut rng);
+        // A first (Mean's choice): T_A = xa, T_B = xa + xb
+        ab += (xa + (xa + xb)) / 2.0;
+        // B first: T_B = xb, T_A = xb + xa
+        ba += (xb + (xb + xa)) / 2.0;
+        // Gittins + refresh: serve B up to its short mode (10); if it
+        // missed, park B, serve A, then finish B
+        if xb <= 10.0 {
+            gittins_refresh += (xb + (xb + xa)) / 2.0;
+        } else {
+            let t_a = 10.0 + xa;
+            let t_b = t_a + (xb - 10.0);
+            gittins_refresh += (t_a + t_b) / 2.0;
+        }
+    }
+    let (ab, ba, gr) = (ab / trials as f64, ba / trials as f64, gittins_refresh / trials as f64);
+    println!("\n| discipline | expected avg completion |");
+    println!("|---|---|");
+    println!("| A first (Mean's choice) | {ab:.0} |");
+    println!("| B first (Gittins' choice) | {ba:.0} |");
+    println!("| Gittins + bucket refresh | {gr:.0} |");
+    write_csv(
+        "fig6",
+        "discipline,avg_completion",
+        &[
+            format!("mean_first_A,{ab:.2}"),
+            format!("gittins_first_B,{ba:.2}"),
+            format!("gittins_refresh,{gr:.2}"),
+        ],
+    );
+    assert!(gr < ab, "refreshing Gittins must beat mean ordering");
+}
+
+// ===========================================================================
+// Fig 7: end-to-end mixed-dataset comparison (the headline figure)
+// ===========================================================================
+fn fig7(ctx: &Ctx) {
+    println!("\n=== fig7: end-to-end TTLT/TTFT, mixed datasets ===");
+    let mut rows = Vec::new();
+    for engine in [EngineProfile::a40_llama8b(), EngineProfile::h800_qwen32b()] {
+        for rps in [4.0, 6.0, 8.0, 10.0, 12.0] {
+            println!("\n-- {} @ {rps} rps --", engine.name);
+            println!("| policy | TTLT mean | TTFT mean |");
+            println!("|---|---|---|");
+            let mut best_baseline = f64::INFINITY;
+            let mut sage = f64::INFINITY;
+            for policy in PolicyKind::PAPER_BASELINES {
+                let mut ttlts = Vec::new();
+                let mut ttfts = Vec::new();
+                for seed in ctx.seeds(2) {
+                    let mut cfg = base_cfg();
+                    cfg.engine = engine.clone();
+                    cfg.policy = policy;
+                    cfg.predictor = natural_predictor(policy);
+                    cfg.workload.rps = rps;
+                    cfg.workload.n_requests = ctx.n_requests(1200);
+                    cfg.seed = seed;
+                    let (ttlt, ttft) = run_point(&cfg);
+                    ttlts.push(ttlt);
+                    ttfts.push(ttft);
+                }
+                let (t, f) = (mean(&ttlts), mean(&ttfts));
+                println!("| {} | {t:.2} | {f:.2} |", policy.name());
+                rows.push(format!(
+                    "{},{rps},{},{t:.3},{f:.3}",
+                    engine.name,
+                    policy.name()
+                ));
+                if policy == PolicyKind::SageSched {
+                    sage = t;
+                } else if t < best_baseline {
+                    best_baseline = t;
+                }
+            }
+            let gain = (best_baseline - sage) / best_baseline * 100.0;
+            println!("  -> sagesched vs best baseline: {gain:+.1}%");
+        }
+    }
+    write_csv("fig7", "engine,rps,policy,ttlt_mean,ttft_mean", &rows);
+}
+
+// ===========================================================================
+// Fig 8: per-dataset end-to-end
+// ===========================================================================
+fn fig8(ctx: &Ctx) {
+    println!("\n=== fig8: end-to-end per dataset (h800 @ 8 rps) ===");
+    let mut rows = Vec::new();
+    for ds in DatasetKind::ALL {
+        println!("\n-- {} --", ds.name());
+        println!("| policy | TTLT mean | TTFT mean |");
+        println!("|---|---|---|");
+        for policy in PolicyKind::PAPER_BASELINES {
+            let mut ttlts = Vec::new();
+            let mut ttfts = Vec::new();
+            for seed in ctx.seeds(2) {
+                let mut cfg = base_cfg();
+                cfg.engine = EngineProfile::h800_qwen32b();
+                cfg.policy = policy;
+                cfg.predictor = natural_predictor(policy);
+                cfg.workload = WorkloadConfig::single(ds);
+                cfg.workload.rps = 8.0;
+                cfg.workload.n_requests = ctx.n_requests(1200);
+                cfg.seed = seed;
+                let (t, f) = run_point(&cfg);
+                ttlts.push(t);
+                ttfts.push(f);
+            }
+            println!(
+                "| {} | {:.2} | {:.2} |",
+                policy.name(),
+                mean(&ttlts),
+                mean(&ttfts)
+            );
+            rows.push(format!(
+                "{},{},{:.3},{:.3}",
+                ds.name(),
+                policy.name(),
+                mean(&ttlts),
+                mean(&ttfts)
+            ));
+        }
+    }
+    write_csv("fig8", "dataset,policy,ttlt_mean,ttft_mean", &rows);
+}
+
+// ===========================================================================
+// Fig 9: predictor ablation
+// ===========================================================================
+fn fig9(ctx: &Ctx) {
+    println!("\n=== fig9: predictor ablation (SageSched policy) ===");
+    println!("| predictor | TTLT mean | W1(pred, true) |");
+    println!("|---|---|---|");
+    let mut rows = Vec::new();
+    for pred in [
+        PredictorKind::History,
+        PredictorKind::LengthHistory,
+        PredictorKind::Proxy,
+        PredictorKind::Oracle,
+    ] {
+        let mut ttlts = Vec::new();
+        for seed in ctx.seeds(2) {
+            let mut cfg = base_cfg();
+            cfg.policy = PolicyKind::SageSched;
+            cfg.predictor = pred;
+            cfg.workload.rps = 8.0;
+            cfg.workload.n_requests = ctx.n_requests(1200);
+            cfg.seed = seed;
+            ttlts.push(run_point(&cfg).0);
+        }
+        // prediction quality probe
+        let cfg = base_cfg();
+        let mut p = sagesched::predictor::make_predictor(pred, 64, 10_000, 0.8, 3);
+        prewarm_predictor(p.as_mut(), &cfg);
+        let mut wl = cfg.workload.clone();
+        wl.n_requests = 300;
+        let probes = WorkloadGen::new(wl, 23).generate();
+        let w1: f64 = probes
+            .requests
+            .iter()
+            .map(|r| p.predict(r).w1_distance(r.true_dist.as_ref().unwrap()))
+            .sum::<f64>()
+            / probes.requests.len() as f64;
+        println!("| {} | {:.2} | {:.1} |", pred.name(), mean(&ttlts), w1);
+        rows.push(format!("{},{:.3},{w1:.2}", pred.name(), mean(&ttlts)));
+    }
+    write_csv("fig9", "predictor,ttlt_mean,w1", &rows);
+}
+
+// ===========================================================================
+// Fig 10: cost-model ablation
+// ===========================================================================
+fn fig10(ctx: &Ctx) {
+    println!("\n=== fig10: cost-model ablation (SageSched policy) ===");
+    println!("| cost model | TTLT mean |");
+    println!("|---|---|");
+    let mut rows = Vec::new();
+    for cm in [
+        CostModelKind::ResourceBound,
+        CostModelKind::OutputLen,
+        CostModelKind::OverallLen,
+    ] {
+        let mut ttlts = Vec::new();
+        for seed in ctx.seeds(3) {
+            let mut cfg = base_cfg();
+            cfg.policy = PolicyKind::SageSched;
+            cfg.cost_model = cm;
+            cfg.workload.rps = 8.0;
+            cfg.workload.n_requests = ctx.n_requests(1200);
+            cfg.seed = seed;
+            ttlts.push(run_point(&cfg).0);
+        }
+        println!("| {} | {:.2} |", cm.name(), mean(&ttlts));
+        rows.push(format!("{},{:.3}", cm.name(), mean(&ttlts)));
+    }
+    write_csv("fig10", "cost_model,ttlt_mean", &rows);
+}
+
+// ===========================================================================
+// Fig 11: scheduling ablation + noise robustness
+// ===========================================================================
+fn fig11(ctx: &Ctx) {
+    println!("\n=== fig11: Mean vs Gittins vs SageSched, +noise ===");
+    println!("| policy | TTLT (clean) | TTLT (noisy 1:4) | degradation |");
+    println!("|---|---|---|---|");
+    let mut rows = Vec::new();
+    for policy in [
+        PolicyKind::MeanCost,
+        PolicyKind::GittinsStatic,
+        PolicyKind::SageSched,
+    ] {
+        let mut clean = Vec::new();
+        let mut noisy = Vec::new();
+        for seed in ctx.seeds(3) {
+            for (noise, acc) in [(0.0, &mut clean), (0.2, &mut noisy)] {
+                let mut cfg = base_cfg();
+                cfg.policy = policy;
+                cfg.workload.rps = 8.0;
+                cfg.workload.n_requests = ctx.n_requests(1200);
+                cfg.noise_mix = noise;
+                cfg.seed = seed;
+                acc.push(run_point(&cfg).0);
+            }
+        }
+        let (c, n) = (mean(&clean), mean(&noisy));
+        println!(
+            "| {} | {c:.2} | {n:.2} | {:+.1}% |",
+            policy.name(),
+            (n - c) / c * 100.0
+        );
+        rows.push(format!("{},{c:.3},{n:.3}", policy.name()));
+    }
+    write_csv("fig11", "policy,ttlt_clean,ttlt_noisy", &rows);
+}
+
+// ===========================================================================
+// Fig 12: cluster-scale overhead
+// ===========================================================================
+fn fig12(ctx: &Ctx) {
+    println!("\n=== fig12: predict+schedule overhead vs cluster size ===");
+    let mut cfg = base_cfg();
+    if ctx.quick {
+        cfg.history_capacity = 2000;
+    }
+    let mut sim = ClusterSim::new(cfg);
+    if ctx.quick {
+        sim.samples = 30;
+        sim.queue_depth = 200;
+    }
+    println!("| nodes | aggregate rps | predict (ms) | sched (ms) | total (ms) |");
+    println!("|---|---|---|---|---|");
+    let mut rows = Vec::new();
+    for o in sim.sweep(&[1, 2, 4, 8, 16, 32, 64]) {
+        println!(
+            "| {} | {:.0} | {:.3} | {:.3} | {:.3} |",
+            o.nodes,
+            o.aggregate_rps,
+            o.predict_latency * 1e3,
+            o.sched_latency * 1e3,
+            o.total_latency * 1e3
+        );
+        rows.push(format!(
+            "{},{:.0},{:.5},{:.5},{:.5}",
+            o.nodes, o.aggregate_rps, o.predict_latency, o.sched_latency, o.total_latency
+        ));
+    }
+    write_csv("fig12", "nodes,rps,predict_s,sched_s,total_s", &rows);
+    println!("  (linear growth; negligible vs multi-second TTLTs)");
+}
+
+// ===========================================================================
+// Fig 13: sensitivity
+// ===========================================================================
+fn fig13a(ctx: &Ctx) {
+    println!("\n=== fig13a: similarity-threshold sensitivity ===");
+    println!("| threshold | TTLT mean |");
+    println!("|---|---|");
+    let mut rows = Vec::new();
+    for th in [0.6f32, 0.7, 0.8, 0.9, 0.95] {
+        let mut ttlts = Vec::new();
+        for seed in ctx.seeds(3) {
+            let mut cfg = base_cfg();
+            cfg.similarity_threshold = th;
+            cfg.workload.rps = 8.0;
+            cfg.workload.n_requests = ctx.n_requests(1200);
+            cfg.seed = seed;
+            ttlts.push(run_point(&cfg).0);
+        }
+        println!("| {th} | {:.2} |", mean(&ttlts));
+        rows.push(format!("{th},{:.3}", mean(&ttlts)));
+    }
+    write_csv("fig13a", "threshold,ttlt_mean", &rows);
+}
+
+fn fig13b(ctx: &Ctx) {
+    println!("\n=== fig13b: Gittins bucket-size sensitivity ===");
+    println!("| bucket (tokens) | TTLT mean |");
+    println!("|---|---|");
+    let mut rows = Vec::new();
+    for bucket in [25u32, 50, 100, 200, 400, 800] {
+        let mut ttlts = Vec::new();
+        for seed in ctx.seeds(3) {
+            let mut cfg = base_cfg();
+            cfg.bucket_tokens = bucket;
+            cfg.workload.rps = 8.0;
+            cfg.workload.n_requests = ctx.n_requests(1200);
+            cfg.seed = seed;
+            ttlts.push(run_point(&cfg).0);
+        }
+        println!("| {bucket} | {:.2} |", mean(&ttlts));
+        rows.push(format!("{bucket},{:.3}", mean(&ttlts)));
+    }
+    write_csv("fig13b", "bucket_tokens,ttlt_mean", &rows);
+}
+
+// ===========================================================================
+// Fig 1a on the real engine (optional extended check)
+// ===========================================================================
+fn fig1a_real(ctx: &Ctx) {
+    if !sagesched::runtime::Runtime::artifacts_present("artifacts") {
+        println!("\n=== fig1a_real: skipped (run `make artifacts` first) ===");
+        return;
+    }
+    println!("\n=== fig1a_real: stochastic lengths from the real tiny LM ===");
+    use sagesched::engine::RealEngine;
+    let rt = sagesched::runtime::Runtime::load("artifacts").unwrap();
+    let mut eng = RealEngine::new(rt, 3);
+    let prompts = [
+        "tell me about glaciers",
+        "write a story",
+        "summarize: the quick brown fox jumps over the lazy dog",
+    ];
+    let trials = if ctx.quick { 8 } else { 24 };
+    println!("| prompt | trials | min | median | max |");
+    println!("|---|---|---|---|---|");
+    let mut rows = Vec::new();
+    for (pi, prompt) in prompts.iter().enumerate() {
+        let mut lens = Vec::new();
+        for t in 0..trials {
+            let req = sagesched::core::Request {
+                id: (pi * 1000 + t) as u64,
+                prompt: prompt.to_string(),
+                input_len: prompt.len() as u32 + 1,
+                true_output_len: u32::MAX,
+                arrival: 0.0,
+                dataset: DatasetKind::ShareGpt,
+                topic: 0,
+                embedding: sagesched::embedding::Embedding::normalize(vec![1.0; 4]),
+                true_dist: None,
+            };
+            let pr = eng.prefill(&req).unwrap();
+            let mut generated = 1u32;
+            if !pr.finished {
+                let mut lanes = vec![LaneState::new(&req, 1)];
+                while !lanes[0].finished && lanes[0].generated < 180 {
+                    eng.decode_step(&mut lanes, 0).unwrap();
+                }
+                generated = lanes[0].generated;
+            }
+            eng.evict(req.id);
+            lens.push(generated as f64);
+        }
+        lens.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!(
+            "| {pi} | {trials} | {:.0} | {:.0} | {:.0} |",
+            lens[0],
+            lens[lens.len() / 2],
+            lens[lens.len() - 1]
+        );
+        rows.push(format!(
+            "{pi},{trials},{},{},{}",
+            lens[0],
+            lens[lens.len() / 2],
+            lens[lens.len() - 1]
+        ));
+    }
+    write_csv("fig1a_real", "prompt,trials,min,median,max", &rows);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick =
+        args.iter().any(|a| a == "--quick") || std::env::var("FIGURES_QUICK").is_ok();
+    let ctx = Ctx { quick };
+    let wanted: Vec<&str> = args
+        .iter()
+        .filter(|a| !a.starts_with("--") && a.as_str() != "--bench")
+        .map(String::as_str)
+        .collect();
+    let all: Vec<(&str, fn(&Ctx))> = vec![
+        ("fig1a", fig1a),
+        ("fig1a_real", fig1a_real),
+        ("fig1b", fig1b),
+        ("fig2a", fig2a),
+        ("fig2b", fig2b),
+        ("fig4", fig4),
+        ("fig5a", fig5a),
+        ("fig5b", fig5b),
+        ("fig6", fig6),
+        ("fig7", fig7),
+        ("fig8", fig8),
+        ("fig9", fig9),
+        ("fig10", fig10),
+        ("fig11", fig11),
+        ("fig12", fig12),
+        ("fig13a", fig13a),
+        ("fig13b", fig13b),
+    ];
+    let t0 = std::time::Instant::now();
+    for (name, f) in &all {
+        if wanted.is_empty() || wanted.iter().any(|w| w == name) {
+            f(&ctx);
+        }
+    }
+    println!("\nall figures done in {:.1}s", t0.elapsed().as_secs_f64());
+}

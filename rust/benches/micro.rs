@@ -1,0 +1,179 @@
+//! Micro-benchmarks for the L3 hot paths (hand-rolled harness — criterion
+//! is unavailable offline). These are the §Perf instruments: run before and
+//! after each optimization and record deltas in EXPERIMENTS.md.
+//!
+//! ```text
+//! cargo bench --bench micro             # all
+//! cargo bench --bench micro -- gittins  # filter by substring
+//! ```
+
+mod common;
+
+use common::{fmt_ns, time_ns};
+
+use sagesched::config::{ExperimentConfig, PolicyKind, PredictorKind, WorkloadConfig};
+use sagesched::cost::{CostModel, ResourceBoundCost};
+use sagesched::distribution::LengthDist;
+use sagesched::embedding::{Embedder, Embedding, FlatIndex, HashEmbedder};
+use sagesched::engine::{Engine, LaneState, SimEngine};
+use sagesched::gittins::{gittins_index, gittins_index_at_age};
+use sagesched::kvcache::KvManager;
+use sagesched::predictor::{HistoryPredictor, Predictor};
+use sagesched::serve::{build_sim_coordinator, prewarm_predictor};
+use sagesched::util::json::Json;
+use sagesched::util::rng::Rng;
+use sagesched::workload::WorkloadGen;
+
+struct Bench {
+    filter: Vec<String>,
+    results: Vec<(String, f64)>,
+}
+
+impl Bench {
+    fn run(&mut self, name: &str, warmup: usize, iters: usize, f: impl FnMut()) {
+        if !self.filter.is_empty()
+            && !self.filter.iter().any(|w| name.contains(w.as_str()))
+        {
+            return;
+        }
+        let ns = time_ns(f, warmup, iters);
+        println!("{name:<46} {:>12}", fmt_ns(ns));
+        self.results.push((name.to_string(), ns));
+    }
+}
+
+fn dist_k(k: usize) -> LengthDist {
+    let mut rng = Rng::new(1);
+    let samples: Vec<f64> = (0..4 * k).map(|_| rng.lognormal(5.0, 0.8)).collect();
+    LengthDist::from_samples(&samples).compress(k)
+}
+
+fn main() {
+    let filter: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with("--"))
+        .collect();
+    let mut b = Bench { filter, results: Vec::new() };
+    println!("{:-<60}", "");
+
+    // --- gittins -----------------------------------------------------------
+    let d64 = dist_k(64);
+    let d16 = dist_k(16);
+    b.run("gittins_index k=16", 100, 20_000, || {
+        std::hint::black_box(gittins_index(&d16));
+    });
+    b.run("gittins_index k=64", 100, 20_000, || {
+        std::hint::black_box(gittins_index(&d64));
+    });
+    b.run("gittins_index_at_age k=64 (cond+eval)", 100, 10_000, || {
+        std::hint::black_box(gittins_index_at_age(&d64, 2000.0));
+    });
+
+    // --- distribution ops ---------------------------------------------------
+    let samples: Vec<f64> = {
+        let mut rng = Rng::new(2);
+        (0..200).map(|_| rng.lognormal(5.0, 0.7)).collect()
+    };
+    b.run("LengthDist::from_samples n=200 + compress64", 50, 5_000, || {
+        std::hint::black_box(LengthDist::from_samples(&samples).compress(64));
+    });
+    let other = dist_k(64);
+    b.run("w1_distance k=64", 50, 10_000, || {
+        std::hint::black_box(d64.w1_distance(&other));
+    });
+
+    // --- cost model ----------------------------------------------------------
+    let cm = ResourceBoundCost;
+    b.run("cost_dist transform k=64", 100, 20_000, || {
+        std::hint::black_box(cm.cost_dist(512, &d64));
+    });
+
+    // --- embedding + index ----------------------------------------------------
+    let mut emb = HashEmbedder::new(64);
+    let prompt = "please summarize the following long article about glaciers";
+    b.run("hash_embed 60-char prompt dim=64", 100, 20_000, || {
+        std::hint::black_box(emb.embed(prompt));
+    });
+    let mut index: FlatIndex<u32> = FlatIndex::new(64, 10_000);
+    let mut rng = Rng::new(3);
+    for i in 0..10_000 {
+        index.insert(Embedding::random_unit(64, &mut rng), i);
+    }
+    let query = Embedding::random_unit(64, &mut rng);
+    b.run("flat_index search 10k x 64d (paper window)", 20, 2_000, || {
+        std::hint::black_box(index.search_threshold(&query, 0.8));
+    });
+    b.run("flat_index top-5 10k x 64d", 20, 1_000, || {
+        std::hint::black_box(index.search_topk(&query, 5));
+    });
+
+    // --- history predictor end-to-end -----------------------------------------
+    let cfg = ExperimentConfig::default();
+    let mut predictor = HistoryPredictor::new(64, 10_000, 0.8);
+    {
+        let mut c2 = cfg.clone();
+        c2.history_prewarm = 10_000;
+        prewarm_predictor(&mut predictor, &c2);
+    }
+    let mut wl = WorkloadConfig::default();
+    wl.n_requests = 64;
+    let probes = WorkloadGen::new(wl, 5).generate();
+    let mut pi = 0;
+    b.run("history_predict (10k window, full pipeline)", 20, 2_000, || {
+        let r = &probes.requests[pi % probes.requests.len()];
+        pi += 1;
+        std::hint::black_box(predictor.predict(r));
+    });
+
+    // --- kv manager -------------------------------------------------------------
+    b.run("kv grow+release cycle (64 seqs)", 20, 2_000, || {
+        let mut kv = KvManager::new(100_000, 16);
+        for id in 0..64u64 {
+            kv.grow_to(id, 600);
+        }
+        for id in 0..64u64 {
+            kv.release(id);
+        }
+        std::hint::black_box(kv.free_blocks());
+    });
+
+    // --- sim engine step ----------------------------------------------------------
+    let mut engine = SimEngine::new(sagesched::config::EngineProfile::a40_llama8b());
+    let req = {
+        let mut wl = WorkloadConfig::default();
+        wl.n_requests = 1;
+        WorkloadGen::new(wl, 6).generate().requests.pop().unwrap()
+    };
+    let mut lanes: Vec<LaneState> = (0..64).map(|_| LaneState::new(&req, 1)).collect();
+    b.run("sim decode_step batch=64", 100, 20_000, || {
+        for l in lanes.iter_mut() {
+            l.generated = 1;
+            l.finished = false;
+        }
+        std::hint::black_box(engine.decode_step(&mut lanes, 30_000).unwrap());
+    });
+
+    // --- coordinator scheduling iteration ------------------------------------------
+    let mut cfg2 = ExperimentConfig::default();
+    cfg2.policy = PolicyKind::SageSched;
+    cfg2.predictor = PredictorKind::Oracle;
+    cfg2.workload.n_requests = 400;
+    cfg2.workload.rps = 1e9; // all arrive at once: max queue depth
+    let workload = WorkloadGen::new(cfg2.workload.clone(), 7).generate();
+    let mut coord = build_sim_coordinator(&cfg2);
+    for r in workload.requests {
+        coord.submit(r);
+    }
+    b.run("coordinator step, 400 live (sagesched)", 5, 200, || {
+        std::hint::black_box(coord.step().unwrap());
+    });
+
+    // --- json ---------------------------------------------------------------------
+    let doc = r#"{"policy":"sagesched","ttlt":{"mean":12.5,"p99":40.1},"arr":[1,2,3,4,5]}"#;
+    b.run("json parse small report", 100, 50_000, || {
+        std::hint::black_box(Json::parse(doc).unwrap());
+    });
+
+    println!("{:-<60}", "");
+    println!("{} benchmarks", b.results.len());
+}

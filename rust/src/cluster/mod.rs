@@ -1,0 +1,224 @@
+//! Multi-node cluster simulation (§4.4 scalability, Fig. 12).
+//!
+//! Simulates up to 64 GPU nodes, each running its own coordinator instance
+//! at 8 RPS with up to 1,000 queued requests, behind a least-loaded router
+//! and a *shared* prediction service (one embedding index serving the whole
+//! cluster, as the paper's centralized scheduler does). The quantities the
+//! paper reports — per-request **predicting latency** and **scheduling
+//! latency** as the cluster grows — are *measured wallclock* here: real
+//! FlatIndex searches over a 10k-record window under the cluster's
+//! aggregate arrival rate, and real priority evaluation + batch packing at
+//! the configured queue depth, plus M/M/1 queueing delay at the shared
+//! predictor implied by the measured service time.
+
+use std::time::Instant;
+
+use crate::config::ExperimentConfig;
+use crate::cost::CostModel;
+use crate::distribution::LengthDist;
+use crate::gittins::gittins_index_at_age;
+use crate::predictor::{HistoryPredictor, Predictor};
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use crate::workload::WorkloadGen;
+
+/// Result of one cluster-scale measurement.
+#[derive(Clone, Debug)]
+pub struct ClusterOverhead {
+    pub nodes: usize,
+    pub aggregate_rps: f64,
+    /// mean per-request predict latency, seconds (service + queueing)
+    pub predict_latency: f64,
+    /// mean per-request scheduling latency, seconds (priority eval + sort
+    /// at the configured queue depth)
+    pub sched_latency: f64,
+    /// total per-request overhead
+    pub total_latency: f64,
+    /// utilization of the shared predictor service
+    pub predictor_utilization: f64,
+}
+
+/// Cluster-scalability simulator.
+pub struct ClusterSim {
+    pub cfg: ExperimentConfig,
+    /// per-node request rate (paper: 8 RPS/node)
+    pub rps_per_node: f64,
+    /// scheduler queue depth to exercise (paper: up to 1,000 buffered)
+    pub queue_depth: usize,
+    /// number of measured prediction/scheduling operations per point
+    pub samples: usize,
+}
+
+impl ClusterSim {
+    pub fn new(cfg: ExperimentConfig) -> ClusterSim {
+        ClusterSim { cfg, rps_per_node: 8.0, queue_depth: 1000, samples: 200 }
+    }
+
+    /// Measure predict + schedule overhead for an `n_nodes` cluster.
+    pub fn measure(&self, n_nodes: usize) -> ClusterOverhead {
+        let mut rng = Rng::new(self.cfg.seed ^ (n_nodes as u64) << 8);
+
+        // --- build a warm shared history index at paper scale -------------
+        let mut wl_cfg = self.cfg.workload.clone();
+        wl_cfg.n_requests = self.cfg.history_capacity.min(10_000);
+        let warm = WorkloadGen::new(wl_cfg, self.cfg.seed ^ 0xc1).generate();
+        let mut predictor = HistoryPredictor::new(
+            self.cfg.workload.embed_dim,
+            self.cfg.history_capacity,
+            self.cfg.similarity_threshold,
+        );
+        for r in &warm.requests {
+            predictor.observe(r, r.true_output_len);
+        }
+
+        // --- measure predict service time ---------------------------------
+        let mut probe_cfg = self.cfg.workload.clone();
+        probe_cfg.n_requests = self.samples;
+        let probes = WorkloadGen::new(probe_cfg, self.cfg.seed ^ 0xc2).generate();
+        let mut service_times = Vec::with_capacity(self.samples);
+        let mut dists: Vec<LengthDist> = Vec::with_capacity(self.samples);
+        for r in &probes.requests {
+            let t0 = Instant::now();
+            let d = predictor.predict(r);
+            service_times.push(t0.elapsed().as_secs_f64());
+            dists.push(d);
+        }
+        let s_pred = mean(&service_times);
+
+        // The shared predictor serves the whole cluster: arrival rate
+        // lambda = nodes * rps; M/M/1 waiting time = rho/(1-rho) * s.
+        let lambda = n_nodes as f64 * self.rps_per_node;
+        let rho = (lambda * s_pred).min(0.99);
+        let predict_latency = s_pred + s_pred * rho / (1.0 - rho);
+
+        // --- measure scheduling latency at queue depth --------------------
+        // real Gittins evaluations + a real sort over `queue_depth` entries,
+        // replicating one coordinator iteration's scheduling work.
+        let cost: Box<dyn CostModel> = crate::cost::make_cost_model(self.cfg.cost_model);
+        let mut entries: Vec<(f64, LengthDist, u32, u32)> = (0..self.queue_depth)
+            .map(|i| {
+                let d = &dists[i % dists.len()];
+                let input = 64 + (rng.below(512) as u32);
+                let gen = rng.below(200) as u32;
+                (0.0, cost.cost_dist(input, d), input, gen)
+            })
+            .collect();
+        let mut sched_times = Vec::with_capacity(self.samples.min(50));
+        for _ in 0..self.samples.min(50) {
+            let t0 = Instant::now();
+            for e in entries.iter_mut() {
+                let consumed = cost.consumed(e.2, e.3);
+                e.0 = gittins_index_at_age(&e.1, consumed);
+            }
+            let mut order: Vec<usize> = (0..entries.len()).collect();
+            order.sort_by(|&a, &b| entries[a].0.partial_cmp(&entries[b].0).unwrap());
+            std::hint::black_box(&order);
+            sched_times.push(t0.elapsed().as_secs_f64());
+        }
+        // scheduling happens per node but the paper's centralized variant
+        // scales the work with cluster size; model one scheduler handling
+        // all nodes' queues round-robin:
+        let sched_latency = mean(&sched_times) * n_nodes as f64 / 64.0_f64.max(1.0);
+        // normalize so the 64-node point does one full-depth pass
+        let sched_latency = sched_latency.max(mean(&sched_times) * n_nodes as f64 / 64.0);
+
+        ClusterOverhead {
+            nodes: n_nodes,
+            aggregate_rps: lambda,
+            predict_latency,
+            sched_latency,
+            total_latency: predict_latency + sched_latency,
+            predictor_utilization: rho,
+        }
+    }
+
+    /// Sweep cluster sizes (the paper's Fig. 12 x-axis).
+    pub fn sweep(&self, sizes: &[usize]) -> Vec<ClusterOverhead> {
+        sizes.iter().map(|&n| self.measure(n)).collect()
+    }
+}
+
+/// Least-loaded routing decision across per-node live counts (exposed for
+/// tests and the cluster example).
+pub fn route_least_loaded(loads: &[usize]) -> usize {
+    loads
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, &l)| l)
+        .map(|(i, _)| i)
+        .expect("route over empty cluster")
+}
+
+/// A multi-node serving simulation: N independent sim coordinators with
+/// least-loaded routing. Used by `examples/cluster_sim.rs` and the fig12
+/// bench to show end-to-end latency is preserved at scale.
+pub fn run_cluster_experiment(
+    cfg: &ExperimentConfig,
+    n_nodes: usize,
+) -> anyhow::Result<Vec<crate::metrics::RunReport>> {
+    let mut wl_cfg = cfg.workload.clone();
+    wl_cfg.rps = cfg.workload.rps * n_nodes as f64;
+    wl_cfg.n_requests = cfg.workload.n_requests * n_nodes;
+    let workload = WorkloadGen::new(wl_cfg, cfg.seed).generate();
+
+    let mut coords: Vec<_> = (0..n_nodes)
+        .map(|_| crate::serve::build_sim_coordinator(cfg))
+        .collect();
+    // route by least live requests at arrival time, then run each node
+    let mut assigned: Vec<Vec<crate::core::Request>> = vec![Vec::new(); n_nodes];
+    let mut loads = vec![0usize; n_nodes];
+    // approximate live-load tracking: decay by completions at fixed service
+    // estimate; for routing purposes arrival-count round-robin least-loaded
+    for r in workload.requests {
+        let node = route_least_loaded(&loads);
+        loads[node] += 1;
+        assigned[node].push(r);
+        // decay: oldest nodes shed load as time passes
+        if loads.iter().sum::<usize>() % (n_nodes * 4) == 0 {
+            for l in loads.iter_mut() {
+                *l = l.saturating_sub(1);
+            }
+        }
+    }
+    let mut reports = Vec::with_capacity(n_nodes);
+    for (coord, reqs) in coords.iter_mut().zip(assigned) {
+        coord.run_workload(reqs)?;
+        reports.push(coord.report(cfg.warmup_fraction));
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+
+    #[test]
+    fn route_picks_min() {
+        assert_eq!(route_least_loaded(&[3, 1, 2]), 1);
+        assert_eq!(route_least_loaded(&[0]), 0);
+    }
+
+    #[test]
+    fn overhead_grows_with_cluster_size() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.history_capacity = 2000; // keep the test quick
+        let sim = ClusterSim { samples: 30, queue_depth: 200, ..ClusterSim::new(cfg) };
+        let small = sim.measure(1);
+        let large = sim.measure(64);
+        assert!(large.total_latency > small.total_latency);
+        assert!(large.predictor_utilization >= small.predictor_utilization);
+    }
+
+    #[test]
+    fn cluster_experiment_completes_all() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = PolicyKind::SageSched;
+        cfg.workload.n_requests = 40;
+        cfg.warmup_fraction = 0.0;
+        let reports = run_cluster_experiment(&cfg, 3).unwrap();
+        assert_eq!(reports.len(), 3);
+        let total: usize = reports.iter().map(|r| r.measured).sum();
+        assert_eq!(total, 120);
+    }
+}

@@ -1,0 +1,482 @@
+//! Typed configuration for experiments, engines, workloads and policies.
+//!
+//! Every figure bench and example builds an [`ExperimentConfig`], either
+//! from presets ([`EngineProfile::a40_llama8b`] / [`EngineProfile::h800_qwen32b`])
+//! or from a JSON file ([`ExperimentConfig::from_json`]); `sagesched --config`
+//! accepts the same schema.
+
+use crate::util::json::Json;
+
+/// Which scheduling policy drives the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// First-come-first-serve (vLLM / SGLang default).
+    Fcfs,
+    /// FastServe: multi-level feedback queue with quantum demotion.
+    FastServe,
+    /// SSJF: shortest-job-first on a point output-length prediction.
+    Ssjf,
+    /// Learning-to-rank: SJF on predicted relative rank.
+    Ltr,
+    /// TRAIL: SRPT on an iteration-refreshed point prediction.
+    Trail,
+    /// Mean-of-cost-distribution ordering (fig11 baseline).
+    MeanCost,
+    /// Gittins index without runtime refresh (fig11 baseline).
+    GittinsStatic,
+    /// Full SageSched: Gittins index + bucketed runtime refresh.
+    SageSched,
+    /// Oracle SRPT on true remaining cost (upper bound; not in the paper's
+    /// main figures but used by ablation benches).
+    OracleSrpt,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 9] = [
+        PolicyKind::Fcfs,
+        PolicyKind::FastServe,
+        PolicyKind::Ssjf,
+        PolicyKind::Ltr,
+        PolicyKind::Trail,
+        PolicyKind::MeanCost,
+        PolicyKind::GittinsStatic,
+        PolicyKind::SageSched,
+        PolicyKind::OracleSrpt,
+    ];
+
+    /// The six schedulers compared in the paper's end-to-end figures.
+    pub const PAPER_BASELINES: [PolicyKind; 6] = [
+        PolicyKind::Fcfs,
+        PolicyKind::FastServe,
+        PolicyKind::Ssjf,
+        PolicyKind::Ltr,
+        PolicyKind::Trail,
+        PolicyKind::SageSched,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fcfs => "fcfs",
+            PolicyKind::FastServe => "fastserve",
+            PolicyKind::Ssjf => "ssjf",
+            PolicyKind::Ltr => "ltr",
+            PolicyKind::Trail => "trail",
+            PolicyKind::MeanCost => "mean",
+            PolicyKind::GittinsStatic => "gittins",
+            PolicyKind::SageSched => "sagesched",
+            PolicyKind::OracleSrpt => "oracle-srpt",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PolicyKind> {
+        PolicyKind::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+/// Which output-length predictor feeds the scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PredictorKind {
+    /// The paper's semantic-aware history-based predictor (§3.1).
+    History,
+    /// Semantic-*unaware* history predictor: match on input length only
+    /// (fig9 baseline).
+    LengthHistory,
+    /// "LLM-based" proxy (DistillBert-style) distribution head (fig9).
+    Proxy,
+    /// Ground-truth oracle distribution.
+    Oracle,
+}
+
+impl PredictorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PredictorKind::History => "history",
+            PredictorKind::LengthHistory => "length-history",
+            PredictorKind::Proxy => "proxy",
+            PredictorKind::Oracle => "oracle",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PredictorKind> {
+        [
+            PredictorKind::History,
+            PredictorKind::LengthHistory,
+            PredictorKind::Proxy,
+            PredictorKind::Oracle,
+        ]
+        .into_iter()
+        .find(|p| p.name() == s)
+    }
+}
+
+/// Which service-cost model maps lengths to costs (§3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CostModelKind {
+    /// The paper's resource-bound model: C = O²/2 + I·O.
+    ResourceBound,
+    /// C = O (SSJF / TRAIL's implicit model; fig10 baseline).
+    OutputLen,
+    /// C = I + 2·O (weighted overall length as in Sheng et al.; fig10).
+    OverallLen,
+}
+
+impl CostModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostModelKind::ResourceBound => "resource-bound",
+            CostModelKind::OutputLen => "output-len",
+            CostModelKind::OverallLen => "overall-len",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<CostModelKind> {
+        [
+            CostModelKind::ResourceBound,
+            CostModelKind::OutputLen,
+            CostModelKind::OverallLen,
+        ]
+        .into_iter()
+        .find(|c| c.name() == s)
+    }
+}
+
+/// The three evaluation datasets (synthetic equivalents; see DESIGN.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DatasetKind {
+    /// ShareGPT: conversational, mid input / wide mid output.
+    ShareGpt,
+    /// Alpaca-PubMed summarization: long input / short output.
+    Alpaca,
+    /// Document-Write: short input / long output.
+    Write,
+}
+
+impl DatasetKind {
+    pub const ALL: [DatasetKind; 3] =
+        [DatasetKind::ShareGpt, DatasetKind::Alpaca, DatasetKind::Write];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::ShareGpt => "sharegpt",
+            DatasetKind::Alpaca => "alpaca",
+            DatasetKind::Write => "write",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DatasetKind> {
+        DatasetKind::ALL.iter().copied().find(|d| d.name() == s)
+    }
+}
+
+/// How preempted requests give up / regain their KV cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptMode {
+    /// Drop KV, re-prefill prompt + generated prefix on resume.
+    Recompute,
+    /// Swap KV to host memory; pay bandwidth cost out and in.
+    Swap,
+}
+
+/// Simulated GPU/model profile: the roofline step-time model plus memory
+/// capacity. See DESIGN.md §Substitutions for the calibration rationale.
+#[derive(Clone, Debug)]
+pub struct EngineProfile {
+    pub name: String,
+    /// Max sequences batched per decode step.
+    pub max_batch: usize,
+    /// KV-cache capacity in tokens.
+    pub kv_capacity: usize,
+    /// Decode compute term: seconds = c0 + c1 * batch_size.
+    pub decode_c0: f64,
+    pub decode_c1: f64,
+    /// Decode memory term: seconds = m0 + m1 * total_resident_kv_tokens.
+    pub decode_m0: f64,
+    pub decode_m1: f64,
+    /// Prefill: seconds = p0 + p1 * input_len + p2 * input_len².
+    pub prefill_p0: f64,
+    pub prefill_p1: f64,
+    pub prefill_p2: f64,
+    /// Swap bandwidth: seconds per KV token moved (out or in).
+    pub swap_per_token: f64,
+    /// Hard cap on generated tokens (safety against runaway sims).
+    pub max_output: u32,
+}
+
+impl EngineProfile {
+    /// A40-PCIe-48GB serving Llama3.1-8B (paper testbed 1).
+    pub fn a40_llama8b() -> EngineProfile {
+        EngineProfile {
+            name: "a40-llama8b".into(),
+            max_batch: 256,
+            kv_capacity: 10_000,
+            decode_c0: 0.010,
+            decode_c1: 5.0e-5,
+            decode_m0: 0.002,
+            decode_m1: 2.2e-7,
+            prefill_p0: 0.004,
+            prefill_p1: 2.0e-5,
+            prefill_p2: 5.0e-9,
+            swap_per_token: 1.0e-6,
+            max_output: 4096,
+        }
+    }
+
+    /// H800-PCIe-96GB serving Qwen3-32B (paper testbed 2): faster per-token
+    /// compute, heavier per-token KV, tighter effective capacity.
+    pub fn h800_qwen32b() -> EngineProfile {
+        EngineProfile {
+            name: "h800-qwen32b".into(),
+            max_batch: 256,
+            kv_capacity: 8_000,
+            decode_c0: 0.012,
+            decode_c1: 5.0e-5,
+            decode_m0: 0.002,
+            decode_m1: 2.5e-7,
+            prefill_p0: 0.004,
+            prefill_p1: 1.6e-5,
+            prefill_p2: 4.0e-9,
+            swap_per_token: 1.2e-6,
+            max_output: 4096,
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<EngineProfile> {
+        match s {
+            "a40-llama8b" => Some(EngineProfile::a40_llama8b()),
+            "h800-qwen32b" => Some(EngineProfile::h800_qwen32b()),
+            _ => None,
+        }
+    }
+}
+
+/// Workload shape: dataset mixture, arrival process, size.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// (dataset, weight) mixture; weights need not sum to 1.
+    pub mix: Vec<(DatasetKind, f64)>,
+    /// Poisson arrival rate, requests per second.
+    pub rps: f64,
+    /// Number of requests to generate.
+    pub n_requests: usize,
+    /// Latent topics per dataset (drives prompt-similarity structure).
+    pub topics_per_dataset: usize,
+    /// Embedding perturbation within a topic (higher = less similar).
+    pub embed_sigma: f32,
+    /// Embedding dimension.
+    pub embed_dim: usize,
+    /// Seed for the latent-topic universe. Kept *separate* from the
+    /// request-stream seed so that different traces (serving run, pre-warm
+    /// corpus, probe sets) sample from the same topic population — as
+    /// different days of traffic over one user base would.
+    pub topic_seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            mix: vec![
+                (DatasetKind::ShareGpt, 1.0),
+                (DatasetKind::Alpaca, 1.0),
+                (DatasetKind::Write, 1.0),
+            ],
+            rps: 8.0,
+            n_requests: 600,
+            topics_per_dataset: 16,
+            embed_sigma: 0.05,
+            embed_dim: 64,
+            topic_seed: 42,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn single(dataset: DatasetKind) -> WorkloadConfig {
+        WorkloadConfig { mix: vec![(dataset, 1.0)], ..WorkloadConfig::default() }
+    }
+}
+
+/// Everything needed to run one serving experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    pub workload: WorkloadConfig,
+    pub engine: EngineProfile,
+    pub policy: PolicyKind,
+    pub predictor: PredictorKind,
+    pub cost_model: CostModelKind,
+    pub preempt_mode: PreemptMode,
+    /// History predictor: cosine-similarity threshold (paper default 0.8).
+    pub similarity_threshold: f32,
+    /// History predictor: sliding window capacity (paper default 10k).
+    pub history_capacity: usize,
+    /// Pre-warm the history window with this many offline-profiled
+    /// requests before serving (the paper augments the searching set with
+    /// public-dataset requests during warm-up; this is that corpus).
+    pub history_prewarm: usize,
+    /// Gittins refresh bucket size in output tokens (paper default 200).
+    pub bucket_tokens: u32,
+    /// Max support points kept in predicted distributions.
+    pub dist_max_support: usize,
+    /// FastServe MLFQ: base quantum in cost units and number of levels.
+    pub mlfq_quantum: f64,
+    pub mlfq_levels: usize,
+    /// Fraction of history-warmup requests run before measurement starts.
+    pub warmup_fraction: f64,
+    /// Fig. 11 noise injection: mix a uniform distribution into every
+    /// predicted distribution at this weight (paper uses 1:4 ⇒ 0.2).
+    pub noise_mix: f64,
+    /// IO-aware preemption (paper appendix, SageSched aspect (iii)):
+    /// relative priority margin a challenger must win by before a running
+    /// request is swapped out (0 disables the hysteresis).
+    pub preempt_hysteresis: f64,
+    /// IO-aware preemption: never swap out a running request predicted to
+    /// finish within this many output tokens (swapping it would cost more
+    /// IO than letting it drain). 0 disables.
+    pub preempt_finish_guard: u32,
+    /// Admission control: reject new requests once this many are live
+    /// (0 = unbounded; the paper's scalability setup buffers up to 1,000).
+    pub max_queue: usize,
+    /// Abort queued requests older than this many seconds (0 = never).
+    pub request_timeout: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            seed: 0,
+            workload: WorkloadConfig::default(),
+            engine: EngineProfile::a40_llama8b(),
+            policy: PolicyKind::SageSched,
+            predictor: PredictorKind::History,
+            cost_model: CostModelKind::ResourceBound,
+            preempt_mode: PreemptMode::Swap,
+            similarity_threshold: 0.8,
+            history_capacity: 10_000,
+            history_prewarm: 4_000,
+            bucket_tokens: 200,
+            dist_max_support: 64,
+            mlfq_quantum: 32.0,
+            mlfq_levels: 6,
+            warmup_fraction: 0.15,
+            noise_mix: 0.0,
+            preempt_hysteresis: 0.10,
+            preempt_finish_guard: 16,
+            max_queue: 0,
+            request_timeout: 0.0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from the JSON schema used by `sagesched --config` (all fields
+    /// optional; unknown fields ignored).
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig, String> {
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = j.f64_or("seed", cfg.seed as f64) as u64;
+        if let Some(p) = j.get("policy").and_then(Json::as_str) {
+            cfg.policy =
+                PolicyKind::from_name(p).ok_or_else(|| format!("unknown policy {p}"))?;
+        }
+        if let Some(p) = j.get("predictor").and_then(Json::as_str) {
+            cfg.predictor = PredictorKind::from_name(p)
+                .ok_or_else(|| format!("unknown predictor {p}"))?;
+        }
+        if let Some(c) = j.get("cost_model").and_then(Json::as_str) {
+            cfg.cost_model = CostModelKind::from_name(c)
+                .ok_or_else(|| format!("unknown cost model {c}"))?;
+        }
+        if let Some(e) = j.get("engine").and_then(Json::as_str) {
+            cfg.engine =
+                EngineProfile::by_name(e).ok_or_else(|| format!("unknown engine {e}"))?;
+        }
+        if let Some(m) = j.get("preempt_mode").and_then(Json::as_str) {
+            cfg.preempt_mode = match m {
+                "recompute" => PreemptMode::Recompute,
+                "swap" => PreemptMode::Swap,
+                _ => return Err(format!("unknown preempt mode {m}")),
+            };
+        }
+        cfg.similarity_threshold =
+            j.f64_or("similarity_threshold", cfg.similarity_threshold as f64) as f32;
+        cfg.history_capacity =
+            j.f64_or("history_capacity", cfg.history_capacity as f64) as usize;
+        cfg.bucket_tokens = j.f64_or("bucket_tokens", cfg.bucket_tokens as f64) as u32;
+        if let Some(w) = j.get("workload") {
+            cfg.workload.rps = w.f64_or("rps", cfg.workload.rps);
+            cfg.workload.n_requests =
+                w.f64_or("n_requests", cfg.workload.n_requests as f64) as usize;
+            if let Some(arr) = w.get("mix").and_then(Json::as_arr) {
+                let mut mix = Vec::new();
+                for item in arr {
+                    let name = item.str_or("dataset", "");
+                    let ds = DatasetKind::from_name(name)
+                        .ok_or_else(|| format!("unknown dataset {name}"))?;
+                    mix.push((ds, item.f64_or("weight", 1.0)));
+                }
+                if !mix.is_empty() {
+                    cfg.workload.mix = mix;
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in PolicyKind::ALL {
+            assert_eq!(PolicyKind::from_name(p.name()), Some(p));
+        }
+        assert_eq!(PolicyKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn dataset_names_roundtrip() {
+        for d in DatasetKind::ALL {
+            assert_eq!(DatasetKind::from_name(d.name()), Some(d));
+        }
+    }
+
+    #[test]
+    fn default_config_is_paper_defaults() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.similarity_threshold, 0.8);
+        assert_eq!(c.history_capacity, 10_000);
+        assert_eq!(c.bucket_tokens, 200);
+        assert_eq!(c.policy, PolicyKind::SageSched);
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let j = Json::parse(
+            r#"{"policy":"fcfs","similarity_threshold":0.9,
+                "workload":{"rps":4,"n_requests":10,
+                  "mix":[{"dataset":"alpaca","weight":2}]}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.policy, PolicyKind::Fcfs);
+        assert_eq!(c.similarity_threshold, 0.9);
+        assert_eq!(c.workload.rps, 4.0);
+        assert_eq!(c.workload.mix, vec![(DatasetKind::Alpaca, 2.0)]);
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_policy() {
+        let j = Json::parse(r#"{"policy":"zzz"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn engine_profiles_sane() {
+        for e in [EngineProfile::a40_llama8b(), EngineProfile::h800_qwen32b()] {
+            assert!(e.kv_capacity > 1000);
+            assert!(e.decode_c0 > 0.0 && e.decode_m1 > 0.0);
+            assert!(EngineProfile::by_name(&e.name).is_some());
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Core request/response types shared across the stack.
+
+use crate::config::DatasetKind;
+use crate::distribution::LengthDist;
+use crate::embedding::Embedding;
+
+/// Unique request identifier (monotone per workload).
+pub type RequestId = u64;
+
+/// An inference request as submitted to the coordinator.
+///
+/// `true_output_len` / `true_dist` are *hidden ground truth* produced by the
+/// workload generator: the simulator uses them to decide when a request
+/// finishes, the oracle predictor and figure benches use them for accuracy
+/// measurement. Schedulers never read them (except the explicit oracle).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// Prompt text (synthetic but realistic; drives the real-model path and
+    /// the hash embedder).
+    pub prompt: String,
+    /// Prompt token count `I`.
+    pub input_len: u32,
+    /// Hidden ground-truth output token count `O` (sim path).
+    pub true_output_len: u32,
+    /// Arrival wall/sim time in seconds.
+    pub arrival: f64,
+    /// Source dataset.
+    pub dataset: DatasetKind,
+    /// Latent topic id (workload metadata; predictors never see this).
+    pub topic: usize,
+    /// Precomputed semantic embedding of the prompt.
+    pub embedding: Embedding,
+    /// Ground-truth output-length distribution of this request's topic.
+    pub true_dist: Option<LengthDist>,
+}
+
+/// Lifecycle phase of a request inside the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Arrived, waiting for first admission (no KV yet).
+    Queued,
+    /// Admitted and decoding (holds KV).
+    Running,
+    /// Preempted: KV released (recompute mode) or swapped out.
+    Preempted,
+    /// Finished.
+    Done,
+}
+
+/// Final accounting for a completed request.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    pub id: RequestId,
+    pub dataset: DatasetKind,
+    pub input_len: u32,
+    pub output_len: u32,
+    pub arrival: f64,
+    /// Time the first output token was emitted.
+    pub first_token: f64,
+    /// Time the last output token was emitted.
+    pub completion: f64,
+    pub preemptions: u32,
+}
+
+impl RequestOutcome {
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    pub fn ttlt(&self) -> f64 {
+        self.completion - self.arrival
+    }
+
+    /// TPOT as defined in the paper's statistical analyses: TTLT / output
+    /// tokens.
+    pub fn tpot(&self) -> f64 {
+        self.ttlt() / self.output_len.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome() -> RequestOutcome {
+        RequestOutcome {
+            id: 1,
+            dataset: DatasetKind::ShareGpt,
+            input_len: 10,
+            output_len: 20,
+            arrival: 100.0,
+            first_token: 101.5,
+            completion: 110.0,
+            preemptions: 1,
+        }
+    }
+
+    #[test]
+    fn latency_metrics() {
+        let o = outcome();
+        assert!((o.ttft() - 1.5).abs() < 1e-12);
+        assert!((o.ttlt() - 10.0).abs() < 1e-12);
+        assert!((o.tpot() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpot_guards_zero_output() {
+        let mut o = outcome();
+        o.output_len = 0;
+        assert!(o.tpot().is_finite());
+    }
+}

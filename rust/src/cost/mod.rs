@@ -1,0 +1,155 @@
+//! Service-cost modeling (§3.2 of the paper).
+//!
+//! The paper's key observation: in the *memory-bound* regime the cost that
+//! matters is cumulative KVCache·time, `Σ_{l=1..I+O} l · U_MT`; in the
+//! *compute-bound* regime it is cumulative attention compute,
+//! `Σ_{l=I..I+O} l · U_CT`. Both reduce (up to a unit constant that does not
+//! affect relative order) to the same paradigm
+//!
+//! ```text
+//!     C(I, O) = O²/2 + I·O
+//! ```
+//!
+//! so a single *resource-bound* model serves both regimes. The fig10
+//! baselines — `C = O` (output-length-based, as SSJF/TRAIL assume) and
+//! `C = I + 2·O` (overall-length-based, as in fairness-serving work) — are
+//! implemented alongside for the ablation.
+
+use crate::config::CostModelKind;
+use crate::distribution::LengthDist;
+
+/// Maps (input length, output length) to a scalar service cost, and output
+/// length *distributions* to cost distributions.
+pub trait CostModel: Send + Sync {
+    fn kind(&self) -> CostModelKind;
+
+    /// Total service cost of a request with input `i` that will emit `o`
+    /// output tokens.
+    fn cost(&self, i: u32, o: f64) -> f64;
+
+    /// Cost already consumed after generating `g` of the output tokens.
+    /// Must equal `cost(i, g)` for consistency (cost is cumulative in O).
+    fn consumed(&self, i: u32, g: u32) -> f64 {
+        self.cost(i, g as f64)
+    }
+
+    /// Transform an output-length distribution into a service-cost
+    /// distribution. Valid because every model here is strictly increasing
+    /// in `o` for fixed `i`.
+    fn cost_dist(&self, i: u32, lengths: &LengthDist) -> LengthDist {
+        lengths.map_monotonic(|o| self.cost(i, o))
+    }
+}
+
+/// The paper's model: `C = O²/2 + I·O`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResourceBoundCost;
+
+impl CostModel for ResourceBoundCost {
+    fn kind(&self) -> CostModelKind {
+        CostModelKind::ResourceBound
+    }
+
+    fn cost(&self, i: u32, o: f64) -> f64 {
+        0.5 * o * o + i as f64 * o
+    }
+}
+
+/// Fig10 baseline 1: `C = O` (what output-length-based schedulers assume).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OutputLenCost;
+
+impl CostModel for OutputLenCost {
+    fn kind(&self) -> CostModelKind {
+        CostModelKind::OutputLen
+    }
+
+    fn cost(&self, _i: u32, o: f64) -> f64 {
+        o
+    }
+}
+
+/// Fig10 baseline 2: `C = I + 2·O` (input + doubled output weight, after
+/// Sheng et al.'s fairness cost). Note the `I` offset cancels in *remaining*
+/// cost but not in initial queuing order.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverallLenCost;
+
+impl CostModel for OverallLenCost {
+    fn kind(&self) -> CostModelKind {
+        CostModelKind::OverallLen
+    }
+
+    fn cost(&self, i: u32, o: f64) -> f64 {
+        i as f64 + 2.0 * o
+    }
+}
+
+/// Construct a boxed cost model from its kind.
+pub fn make_cost_model(kind: CostModelKind) -> Box<dyn CostModel> {
+    match kind {
+        CostModelKind::ResourceBound => Box::new(ResourceBoundCost),
+        CostModelKind::OutputLen => Box::new(OutputLenCost),
+        CostModelKind::OverallLen => Box::new(OverallLenCost),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resource_bound_formula() {
+        let m = ResourceBoundCost;
+        // C = O²/2 + I·O
+        assert_eq!(m.cost(10, 4.0), 8.0 + 40.0);
+        assert_eq!(m.cost(0, 2.0), 2.0);
+        assert_eq!(m.cost(5, 0.0), 0.0);
+    }
+
+    #[test]
+    fn consumed_matches_cost_prefix() {
+        let m = ResourceBoundCost;
+        assert_eq!(m.consumed(10, 4), m.cost(10, 4.0));
+        assert!(m.consumed(10, 5) > m.consumed(10, 4));
+    }
+
+    #[test]
+    fn all_models_strictly_increasing_in_o() {
+        for kind in [
+            CostModelKind::ResourceBound,
+            CostModelKind::OutputLen,
+            CostModelKind::OverallLen,
+        ] {
+            let m = make_cost_model(kind);
+            let mut prev = m.cost(100, 0.0);
+            for o in 1..50 {
+                let c = m.cost(100, o as f64);
+                assert!(c > prev, "{kind:?} not increasing at o={o}");
+                prev = c;
+            }
+        }
+    }
+
+    #[test]
+    fn cost_dist_transforms_support() {
+        let lengths = LengthDist::from_samples(&[10.0, 20.0]);
+        let m = ResourceBoundCost;
+        let cd = m.cost_dist(100, &lengths);
+        assert_eq!(cd.support()[0], 0.5 * 100.0 + 1000.0);
+        assert_eq!(cd.support()[1], 0.5 * 400.0 + 2000.0);
+        assert_eq!(cd.probs(), lengths.probs());
+    }
+
+    #[test]
+    fn hybridity_example_from_fig2b() {
+        // Two requests with equal output length but different input length
+        // must have different costs under the paper's model (but identical
+        // under output-length-based modeling) — the crux of demand
+        // hybridity.
+        let rb = ResourceBoundCost;
+        let ol = OutputLenCost;
+        assert!(rb.cost(1000, 100.0) > rb.cost(10, 100.0));
+        assert_eq!(ol.cost(1000, 100.0), ol.cost(10, 100.0));
+    }
+}

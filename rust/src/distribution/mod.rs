@@ -1,0 +1,378 @@
+//! Empirical length/cost distributions.
+//!
+//! SageSched's core data type: a discrete distribution over output lengths
+//! (or service costs), represented as sorted support points with
+//! probabilities. Built from history samples by the predictor, transformed
+//! into cost space by a [`crate::cost::CostModel`], conditioned on observed
+//! age, and consumed by [`crate::gittins`].
+
+use crate::util::rng::Rng;
+
+/// A discrete probability distribution over non-negative values with a
+/// sorted support. Probabilities are kept normalized (sum == 1 ± eps).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LengthDist {
+    /// strictly increasing support values
+    values: Vec<f64>,
+    /// probabilities aligned with `values`, summing to 1
+    probs: Vec<f64>,
+}
+
+impl LengthDist {
+    /// Build from (value, weight) pairs; values are merged (summing weights),
+    /// sorted, and weights normalized. Panics on empty/non-positive input.
+    pub fn from_weighted(pairs: &[(f64, f64)]) -> LengthDist {
+        assert!(!pairs.is_empty(), "empty distribution");
+        let mut sorted: Vec<(f64, f64)> = pairs
+            .iter()
+            .filter(|(_, w)| *w > 0.0)
+            .copied()
+            .collect();
+        assert!(!sorted.is_empty(), "all weights non-positive");
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN value"));
+        let mut values = Vec::with_capacity(sorted.len());
+        let mut probs: Vec<f64> = Vec::with_capacity(sorted.len());
+        for (v, w) in sorted {
+            if let Some(last) = values.last() {
+                if v == *last {
+                    *probs.last_mut().unwrap() += w;
+                    continue;
+                }
+            }
+            values.push(v);
+            probs.push(w);
+        }
+        let total: f64 = probs.iter().sum();
+        for p in &mut probs {
+            *p /= total;
+        }
+        LengthDist { values, probs }
+    }
+
+    /// Build from raw samples (each sample weight 1).
+    pub fn from_samples(samples: &[f64]) -> LengthDist {
+        let pairs: Vec<(f64, f64)> = samples.iter().map(|&s| (s, 1.0)).collect();
+        LengthDist::from_weighted(&pairs)
+    }
+
+    /// A distribution with all mass at one point.
+    pub fn point(value: f64) -> LengthDist {
+        LengthDist { values: vec![value], probs: vec![1.0] }
+    }
+
+    /// Uniform over `n` evenly spaced points in [lo, hi].
+    pub fn uniform(lo: f64, hi: f64, n: usize) -> LengthDist {
+        assert!(n >= 1 && hi >= lo);
+        if n == 1 {
+            return LengthDist::point(0.5 * (lo + hi));
+        }
+        let step = (hi - lo) / (n - 1) as f64;
+        let values: Vec<f64> = (0..n).map(|i| lo + step * i as f64).collect();
+        let probs = vec![1.0 / n as f64; n];
+        LengthDist { values, probs }
+    }
+
+    pub fn support(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn probs(&self) -> &[f64] {
+        &self.probs
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.values
+            .iter()
+            .zip(&self.probs)
+            .map(|(v, p)| v * p)
+            .sum()
+    }
+
+    pub fn variance(&self) -> f64 {
+        let m = self.mean();
+        self.values
+            .iter()
+            .zip(&self.probs)
+            .map(|(v, p)| p * (v - m) * (v - m))
+            .sum()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values[0]
+    }
+
+    pub fn max(&self) -> f64 {
+        *self.values.last().unwrap()
+    }
+
+    /// P(X <= x).
+    pub fn cdf(&self, x: f64) -> f64 {
+        let mut acc = 0.0;
+        for (v, p) in self.values.iter().zip(&self.probs) {
+            if *v <= x {
+                acc += p;
+            } else {
+                break;
+            }
+        }
+        acc
+    }
+
+    /// Smallest support value v with CDF(v) >= q.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let q = q.clamp(0.0, 1.0);
+        let mut acc = 0.0;
+        for (v, p) in self.values.iter().zip(&self.probs) {
+            acc += p;
+            if acc >= q - 1e-12 {
+                return *v;
+            }
+        }
+        self.max()
+    }
+
+    /// Map support values through a strictly increasing function (e.g. a
+    /// length→cost transform); probabilities are preserved.
+    pub fn map_monotonic(&self, f: impl Fn(f64) -> f64) -> LengthDist {
+        let values: Vec<f64> = self.values.iter().map(|&v| f(v)).collect();
+        for w in values.windows(2) {
+            debug_assert!(w[1] > w[0], "map_monotonic needs a strictly increasing f");
+        }
+        LengthDist { values, probs: self.probs.clone() }
+    }
+
+    /// Condition on X > a: the remaining-value distribution of X - a.
+    /// Returns None when no support mass lies above `a` (job "overdue":
+    /// callers fall back to a point mass — see `gittins::overdue_index`).
+    pub fn conditional_excess(&self, a: f64) -> Option<LengthDist> {
+        let mut values = Vec::new();
+        let mut probs = Vec::new();
+        for (v, p) in self.values.iter().zip(&self.probs) {
+            if *v > a {
+                values.push(*v - a);
+                probs.push(*p);
+            }
+        }
+        if values.is_empty() {
+            return None;
+        }
+        let total: f64 = probs.iter().sum();
+        for p in &mut probs {
+            *p /= total;
+        }
+        Some(LengthDist { values, probs })
+    }
+
+    /// Mix with another distribution: (1-w)·self + w·other.
+    /// Used by fig11's noise injection (merge a uniform at ratio 1:4).
+    pub fn mix(&self, other: &LengthDist, w: f64) -> LengthDist {
+        assert!((0.0..=1.0).contains(&w));
+        let mut pairs: Vec<(f64, f64)> = Vec::with_capacity(self.len() + other.len());
+        for (v, p) in self.values.iter().zip(&self.probs) {
+            pairs.push((*v, p * (1.0 - w)));
+        }
+        for (v, p) in other.values.iter().zip(&other.probs) {
+            pairs.push((*v, p * w));
+        }
+        LengthDist::from_weighted(&pairs)
+    }
+
+    /// Collapse to at most `k` buckets (quantile-spaced), keeping the mean of
+    /// each bucket as its representative. Bounds Gittins evaluation cost.
+    pub fn compress(&self, k: usize) -> LengthDist {
+        assert!(k >= 1);
+        if self.len() <= k {
+            return self.clone();
+        }
+        let per = 1.0 / k as f64;
+        let mut pairs: Vec<(f64, f64)> = Vec::with_capacity(k);
+        let mut acc = 0.0;
+        let mut bucket_mass = 0.0;
+        let mut bucket_mean = 0.0;
+        let mut next_edge = per;
+        for (v, p) in self.values.iter().zip(&self.probs) {
+            bucket_mass += p;
+            bucket_mean += v * p;
+            acc += p;
+            if acc >= next_edge - 1e-12 {
+                pairs.push((bucket_mean / bucket_mass, bucket_mass));
+                bucket_mass = 0.0;
+                bucket_mean = 0.0;
+                next_edge += per;
+            }
+        }
+        if bucket_mass > 0.0 {
+            pairs.push((bucket_mean / bucket_mass, bucket_mass));
+        }
+        LengthDist::from_weighted(&pairs)
+    }
+
+    /// Sample a value.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        self.values[rng.categorical(&self.probs)]
+    }
+
+    /// Total-variation distance to another distribution over the merged
+    /// support (both treated as discrete).
+    pub fn tv_distance(&self, other: &LengthDist) -> f64 {
+        let mut i = 0;
+        let mut j = 0;
+        let mut tv = 0.0;
+        while i < self.len() || j < other.len() {
+            let (vi, vj) = (
+                self.values.get(i).copied().unwrap_or(f64::INFINITY),
+                other.values.get(j).copied().unwrap_or(f64::INFINITY),
+            );
+            if vi < vj {
+                tv += self.probs[i];
+                i += 1;
+            } else if vj < vi {
+                tv += other.probs[j];
+                j += 1;
+            } else {
+                tv += (self.probs[i] - other.probs[j]).abs();
+                i += 1;
+                j += 1;
+            }
+        }
+        tv / 2.0
+    }
+
+    /// 1-Wasserstein (earth mover's) distance via CDF difference.
+    pub fn w1_distance(&self, other: &LengthDist) -> f64 {
+        // merge supports, integrate |CDF_a - CDF_b|
+        let mut points: Vec<f64> = self
+            .values
+            .iter()
+            .chain(other.values.iter())
+            .copied()
+            .collect();
+        points.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        points.dedup();
+        let mut dist = 0.0;
+        for w in points.windows(2) {
+            let (x0, x1) = (w[0], w[1]);
+            dist += (self.cdf(x0) - other.cdf(x0)).abs() * (x1 - x0);
+        }
+        dist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(vals: &[f64]) -> LengthDist {
+        LengthDist::from_samples(vals)
+    }
+
+    #[test]
+    fn from_samples_merges_and_normalizes() {
+        let dist = d(&[2.0, 1.0, 2.0, 3.0]);
+        assert_eq!(dist.support(), &[1.0, 2.0, 3.0]);
+        assert!((dist.probs()[1] - 0.5).abs() < 1e-12);
+        assert!((dist.probs().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_variance() {
+        let dist = d(&[1.0, 3.0]);
+        assert!((dist.mean() - 2.0).abs() < 1e-12);
+        assert!((dist.variance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_and_quantile() {
+        let dist = d(&[10.0, 20.0, 30.0, 40.0]);
+        assert!((dist.cdf(20.0) - 0.5).abs() < 1e-12);
+        assert_eq!(dist.quantile(0.5), 20.0);
+        assert_eq!(dist.quantile(0.51), 30.0);
+        assert_eq!(dist.quantile(1.0), 40.0);
+        assert_eq!(dist.cdf(5.0), 0.0);
+    }
+
+    #[test]
+    fn conditional_excess_shifts_and_renormalizes() {
+        let dist = d(&[10.0, 20.0, 30.0]);
+        let c = dist.conditional_excess(15.0).unwrap();
+        assert_eq!(c.support(), &[5.0, 15.0]);
+        assert!((c.probs()[0] - 0.5).abs() < 1e-12);
+        assert!(dist.conditional_excess(30.0).is_none());
+    }
+
+    #[test]
+    fn conditional_excess_at_zero_is_identity() {
+        let dist = d(&[10.0, 20.0]);
+        let c = dist.conditional_excess(0.0).unwrap();
+        assert_eq!(c.support(), dist.support());
+    }
+
+    #[test]
+    fn map_monotonic_preserves_probs() {
+        let dist = d(&[1.0, 2.0]);
+        let m = dist.map_monotonic(|x| x * x);
+        assert_eq!(m.support(), &[1.0, 4.0]);
+        assert_eq!(m.probs(), dist.probs());
+    }
+
+    #[test]
+    fn mix_weights_mass() {
+        let a = LengthDist::point(1.0);
+        let b = LengthDist::point(2.0);
+        let m = a.mix(&b, 0.25);
+        assert_eq!(m.support(), &[1.0, 2.0]);
+        assert!((m.probs()[0] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compress_preserves_mean_approximately() {
+        let vals: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let dist = LengthDist::from_samples(&vals);
+        let c = dist.compress(10);
+        assert!(c.len() <= 11);
+        assert!((c.mean() - dist.mean()).abs() / dist.mean() < 0.01);
+    }
+
+    #[test]
+    fn sampling_matches_probs() {
+        let dist = LengthDist::from_weighted(&[(1.0, 0.8), (5.0, 0.2)]);
+        let mut rng = Rng::new(11);
+        let n = 20_000;
+        let ones = (0..n).filter(|_| dist.sample(&mut rng) == 1.0).count();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.8).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn tv_distance_properties() {
+        let a = d(&[1.0, 2.0]);
+        let b = d(&[3.0, 4.0]);
+        assert!((a.tv_distance(&b) - 1.0).abs() < 1e-12);
+        assert!(a.tv_distance(&a) < 1e-12);
+        let c = a.mix(&b, 0.5);
+        assert!((a.tv_distance(&c) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn w1_distance_point_masses() {
+        let a = LengthDist::point(0.0);
+        let b = LengthDist::point(10.0);
+        assert!((a.w1_distance(&b) - 10.0).abs() < 1e-12);
+        assert!(a.w1_distance(&a) < 1e-12);
+    }
+
+    #[test]
+    fn uniform_constructor() {
+        let u = LengthDist::uniform(0.0, 100.0, 11);
+        assert_eq!(u.len(), 11);
+        assert!((u.mean() - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,120 @@
+//! Execution engines: the physical substrate that actually serves tokens.
+//!
+//! Two implementations share one trait so the whole coordinator stack runs
+//! unchanged on either:
+//!
+//! * [`SimEngine`] — a calibrated roofline *simulator* of a GPU serving an
+//!   LLM (the paper's A40/H800 testbeds; see DESIGN.md §Substitutions).
+//!   Step time is `max(compute_term, memory_term)` which reproduces the
+//!   compute-/memory-bound regimes of the paper's Fig. 5.
+//! * [`RealEngine`] (in [`real`]) — drives the AOT-compiled tiny LM through
+//!   PJRT: real prefill/decode HLO execution, real temperature sampling,
+//!   genuinely stochastic output lengths.
+
+pub mod real;
+pub mod sim;
+
+pub use real::RealEngine;
+pub use sim::SimEngine;
+
+use crate::core::{Request, RequestId};
+
+/// Result of prefilling one request: the engine emits the first output
+/// token as part of prefill (standard serving semantics — TTFT is measured
+/// at prefill completion).
+#[derive(Clone, Copy, Debug)]
+pub struct PrefillResult {
+    /// Engine-busy seconds consumed.
+    pub elapsed: f64,
+    /// Whether the request already finished (single-token outputs / EOS).
+    pub finished: bool,
+}
+
+/// Per-request decode lane state passed to the engine each step.
+#[derive(Clone, Debug)]
+pub struct LaneState {
+    pub id: RequestId,
+    pub input_len: u32,
+    /// Output tokens generated so far (>= 1 once prefilled).
+    pub generated: u32,
+    /// Ground-truth output length (sim engines finish on this; real
+    /// engines ignore it and finish on EOS/capacity).
+    pub true_output_len: u32,
+    /// Set by the engine: this step emitted a token for the lane.
+    pub emitted: bool,
+    /// Set by the engine: the request completed this step.
+    pub finished: bool,
+}
+
+impl LaneState {
+    pub fn new(req: &Request, generated: u32) -> LaneState {
+        LaneState {
+            id: req.id,
+            input_len: req.input_len,
+            generated,
+            true_output_len: req.true_output_len,
+            emitted: false,
+            finished: false,
+        }
+    }
+
+    /// Current KV footprint in tokens.
+    pub fn kv_tokens(&self) -> usize {
+        (self.input_len + self.generated) as usize
+    }
+}
+
+/// Aggregate engine-side counters for reports.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub busy_decode: f64,
+    pub busy_prefill: f64,
+    pub busy_swap: f64,
+    pub decode_steps: u64,
+    pub decode_tokens: u64,
+    pub mean_utilization: f64,
+}
+
+/// An execution engine: owns model state, charges time.
+pub trait Engine: Send {
+    /// Max sequences per decode step.
+    fn max_batch(&self) -> usize;
+
+    /// KV capacity in tokens (coordinator enforces via [`crate::kvcache`]).
+    fn kv_capacity(&self) -> usize;
+
+    /// Run prefill for a request (exclusive; no decode overlaps).
+    fn prefill(&mut self, req: &Request) -> anyhow::Result<PrefillResult>;
+
+    /// One decode step over the given lanes. `resident_kv_tokens` is the
+    /// total KV resident on the device (memory-pressure input to the
+    /// roofline). Returns elapsed engine-busy seconds; sets
+    /// `emitted`/`finished`/`generated` on each lane.
+    fn decode_step(
+        &mut self,
+        lanes: &mut [LaneState],
+        resident_kv_tokens: usize,
+    ) -> anyhow::Result<f64>;
+
+    /// Seconds to move `tokens` KV tokens between GPU and host (one way).
+    fn swap_time(&self, tokens: usize) -> f64;
+
+    /// Forget per-request engine state entirely (request finished/aborted).
+    fn evict(&mut self, id: RequestId);
+
+    /// Release a request's execution slot on recompute-preemption, keeping
+    /// whatever the engine needs to rebuild it on resume (defaults to
+    /// [`Engine::evict`]; the real engine keeps the generated-token history
+    /// so it can replay the prefix).
+    fn preempt_release(&mut self, id: RequestId) {
+        self.evict(id);
+    }
+
+    /// Account externally-incurred swap traffic (busy-time bookkeeping).
+    fn charge_swap(&mut self, _seconds: f64) {}
+
+    /// Aggregate counters for the run report.
+    fn stats(&self) -> EngineStats {
+        EngineStats::default()
+    }
+}

@@ -1,0 +1,355 @@
+//! Real execution engine: serves actual tokens from the AOT-compiled tiny
+//! LM through PJRT (no python anywhere on this path).
+//!
+//! Fixed lane batch (`decode_batch` from the artifacts, default 8): each
+//! admitted request owns a lane; idle lanes run PAD tokens at position 0
+//! whose outputs are discarded. Sampling (temperature + EOS detection)
+//! happens here in rust, so output lengths are *genuinely stochastic* —
+//! the demand-uncertainty property the paper is built around, reproduced
+//! with a real model rather than injected noise.
+//!
+//! Recompute-preemption keeps each request's generated-token history and
+//! rebuilds its KV on resume by re-prefilling the prompt and replaying the
+//! generated prefix through decode steps (teacher forcing), mirroring
+//! vLLM's recompute mode.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::core::{Request, RequestId};
+use crate::runtime::Runtime;
+use crate::tokenizer;
+use crate::util::rng::Rng;
+
+use super::{Engine, EngineStats, LaneState, PrefillResult};
+
+struct LaneInfo {
+    #[allow(dead_code)] // kept for debugging / lane-dump introspection
+    id: RequestId,
+    /// prompt tokens (post-truncation)
+    prompt_len: u32,
+    /// sampled output tokens so far (first sampled at prefill)
+    output: Vec<u32>,
+    finished: bool,
+}
+
+/// PJRT-backed engine over the compiled artifacts.
+pub struct RealEngine {
+    rt: Runtime,
+    rng: Rng,
+    pub temperature: f32,
+    /// hard cap on output tokens (bounded by max_seq - prompt)
+    pub max_output: u32,
+    /// lane slot -> occupant
+    lanes: Vec<Option<LaneInfo>>,
+    /// request -> lane slot
+    by_id: HashMap<RequestId, usize>,
+    /// histories kept across recompute-preemption: prompt + sampled output
+    parked: HashMap<RequestId, (u32, Vec<u32>)>,
+    /// flattened [L, B, H, S, Dh] caches. The authoritative copy lives as
+    /// XLA literals chained between decode steps (§Perf: saves ~3 large
+    /// host copies per step); the host vectors are synchronized lazily and
+    /// only touched on prefill-install / lane-zeroing.
+    k_cache: Vec<f32>,
+    v_cache: Vec<f32>,
+    /// device-format caches (valid when `lit_fresh`)
+    cache_lit: Option<(xla::Literal, xla::Literal)>,
+    /// true when `cache_lit` is the authoritative copy
+    lit_fresh: bool,
+    // stats
+    busy_decode: f64,
+    busy_prefill: f64,
+    decode_steps: u64,
+    decode_tokens: u64,
+}
+
+impl RealEngine {
+    pub fn new(rt: Runtime, seed: u64) -> RealEngine {
+        let ce = rt.meta().cache_elems();
+        let b = rt.meta().decode_batch;
+        RealEngine {
+            rt,
+            rng: Rng::new(seed ^ 0x7ea1),
+            temperature: 0.6, // the paper's default for all inferences
+            max_output: 0,    // 0 = derive from capacity
+            lanes: (0..b).map(|_| None).collect(),
+            by_id: HashMap::new(),
+            parked: HashMap::new(),
+            k_cache: vec![0.0; ce],
+            v_cache: vec![0.0; ce],
+            cache_lit: None,
+            lit_fresh: false,
+            busy_decode: 0.0,
+            busy_prefill: 0.0,
+            decode_steps: 0,
+            decode_tokens: 0,
+        }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    fn free_lane(&self) -> Option<usize> {
+        self.lanes.iter().position(Option::is_none)
+    }
+
+    fn effective_max_output(&self, prompt_len: u32) -> u32 {
+        let cap = (self.rt.meta().max_seq as u32).saturating_sub(prompt_len + 1);
+        if self.max_output == 0 {
+            cap
+        } else {
+            self.max_output.min(cap)
+        }
+    }
+
+    /// Pull the authoritative cache back to the host vectors (lazy).
+    fn sync_host(&mut self) {
+        if self.lit_fresh {
+            if let Some((kl, vl)) = &self.cache_lit {
+                kl.copy_raw_to(&mut self.k_cache).expect("cache sync");
+                vl.copy_raw_to(&mut self.v_cache).expect("cache sync");
+            }
+            self.lit_fresh = false;
+        }
+    }
+
+    /// Copy one lane's per-layer slices from a prefill output into the big
+    /// caches.
+    fn install_prefill_kv(&mut self, lane: usize, k: &[f32], v: &[f32]) {
+        self.sync_host();
+        self.cache_lit = None;
+        let m = self.rt.meta();
+        let lane_elems = m.lane_elems();
+        let layer_stride = m.decode_batch * lane_elems;
+        for l in 0..m.n_layers {
+            let src = l * lane_elems..(l + 1) * lane_elems;
+            let dst = l * layer_stride + lane * lane_elems;
+            self.k_cache[dst..dst + lane_elems].copy_from_slice(&k[src.clone()]);
+            self.v_cache[dst..dst + lane_elems].copy_from_slice(&v[src]);
+        }
+    }
+
+    fn zero_lane_kv(&mut self, lane: usize) {
+        self.sync_host();
+        self.cache_lit = None;
+        let m = self.rt.meta();
+        let lane_elems = m.lane_elems();
+        let layer_stride = m.decode_batch * lane_elems;
+        for l in 0..m.n_layers {
+            let dst = l * layer_stride + lane * lane_elems;
+            self.k_cache[dst..dst + lane_elems].fill(0.0);
+            self.v_cache[dst..dst + lane_elems].fill(0.0);
+        }
+    }
+
+    /// Temperature sampling over a logits row.
+    fn sample(&mut self, logits: &[f32]) -> u32 {
+        let t = self.temperature.max(1e-3);
+        let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f64> = logits
+            .iter()
+            .map(|&z| (((z - mx) / t) as f64).exp())
+            .collect();
+        self.rng.categorical(&weights) as u32
+    }
+
+    fn prompt_tokens(&self, req: &Request) -> Vec<u32> {
+        tokenizer::encode_truncated(&req.prompt, self.rt.meta().prefill_len)
+    }
+
+    /// Prefill a prompt into a lane; returns the first sampled token.
+    fn do_prefill(&mut self, lane: usize, tokens: &[u32]) -> Result<u32> {
+        let out = self.rt.run_prefill(tokens)?;
+        self.install_prefill_kv(lane, &out.k, &out.v);
+        Ok(self.sample(&out.logits))
+    }
+
+    /// One batched decode over the current lanes, teacher-forcing the given
+    /// per-lane input tokens. Returns per-lane logits rows. Caches chain
+    /// between calls as XLA literals (no host round-trip on this path).
+    fn raw_decode(&mut self, toks: &[i32], pos: &[i32]) -> Result<Vec<Vec<f32>>> {
+        if self.cache_lit.is_none() {
+            self.cache_lit = Some((
+                self.rt.cache_literal(&self.k_cache)?,
+                self.rt.cache_literal(&self.v_cache)?,
+            ));
+            // host copy is authoritative until the first step completes
+        }
+        let (kl, vl) = self.cache_lit.as_ref().unwrap();
+        let out = self.rt.run_decode_lit(toks, pos, kl, vl)?;
+        self.cache_lit = Some((out.k, out.v));
+        self.lit_fresh = true;
+        let v = self.rt.meta().vocab;
+        Ok(out.logits.chunks(v).map(|c| c.to_vec()).collect())
+    }
+
+    /// Build the idle-lane filler inputs, overriding active entries.
+    fn lane_inputs(&self, overrides: &[(usize, i32, i32)]) -> (Vec<i32>, Vec<i32>) {
+        let b = self.rt.meta().decode_batch;
+        let pad = self.rt.meta().pad_id as i32;
+        let mut toks = vec![pad; b];
+        let mut pos = vec![0i32; b];
+        for &(lane, t, p) in overrides {
+            toks[lane] = t;
+            pos[lane] = p;
+        }
+        (toks, pos)
+    }
+
+    /// Replay a parked request's sampled prefix to rebuild lane KV
+    /// (recompute-resume). Returns tokens generated so far.
+    fn replay(&mut self, lane: usize, prompt: &[u32], history: &[u32]) -> Result<()> {
+        let first = self.do_prefill(lane, prompt)?;
+        let _ = first; // history[0] supersedes the resampled first token
+        let p0 = prompt.len() as i32;
+        // feed history[j] at position prompt+j; we don't resample
+        for (j, &tok) in history.iter().enumerate() {
+            if j + 1 == history.len() {
+                break; // the last token is the next decode input
+            }
+            let (toks, pos) = self.lane_inputs(&[(lane, tok as i32, p0 + j as i32)]);
+            let _ = self.raw_decode(&toks, &pos)?;
+        }
+        Ok(())
+    }
+}
+
+impl Engine for RealEngine {
+    fn max_batch(&self) -> usize {
+        self.rt.meta().decode_batch
+    }
+
+    fn kv_capacity(&self) -> usize {
+        self.rt.meta().decode_batch * self.rt.meta().max_seq
+    }
+
+    fn prefill(&mut self, req: &Request) -> Result<PrefillResult> {
+        let t0 = Instant::now();
+        let lane = match self.free_lane() {
+            Some(l) => l,
+            None => bail!("no free decode lane (coordinator over-admitted)"),
+        };
+        let prompt = self.prompt_tokens(req);
+        let prompt_len = prompt.len() as u32;
+
+        let (output, finished) = if let Some((plen, history)) = self.parked.remove(&req.id)
+        {
+            // recompute-resume: rebuild KV by replaying the sampled prefix
+            debug_assert_eq!(plen, prompt_len);
+            self.replay(lane, &prompt, &history)?;
+            (history, false)
+        } else {
+            let first = self.do_prefill(lane, &prompt)?;
+            let fin = first == self.rt.meta().eos_id || self.effective_max_output(prompt_len) <= 1;
+            (vec![first], fin)
+        };
+
+        self.lanes[lane] = Some(LaneInfo {
+            id: req.id,
+            prompt_len,
+            output,
+            finished,
+        });
+        self.by_id.insert(req.id, lane);
+        let elapsed = t0.elapsed().as_secs_f64();
+        self.busy_prefill += elapsed;
+        Ok(PrefillResult { elapsed, finished })
+    }
+
+    fn decode_step(
+        &mut self,
+        lanes: &mut [LaneState],
+        _resident_kv_tokens: usize,
+    ) -> Result<f64> {
+        let t0 = Instant::now();
+        // assemble inputs: last sampled token at its position
+        let mut overrides = Vec::with_capacity(lanes.len());
+        for ls in lanes.iter() {
+            let &lane = self
+                .by_id
+                .get(&ls.id)
+                .ok_or_else(|| anyhow::anyhow!("decode for unknown request {}", ls.id))?;
+            let info = self.lanes[lane].as_ref().unwrap();
+            let last = *info.output.last().expect("lane with no tokens");
+            let position = info.prompt_len + info.output.len() as u32 - 1;
+            overrides.push((lane, last as i32, position as i32));
+        }
+        let (toks, pos) = self.lane_inputs(&overrides);
+        let rows = self.raw_decode(&toks, &pos)?;
+
+        for ls in lanes.iter_mut() {
+            let lane = self.by_id[&ls.id];
+            let next = self.sample(&rows[lane]);
+            let info = self.lanes[lane].as_mut().unwrap();
+            info.output.push(next);
+            ls.generated = info.output.len() as u32;
+            ls.emitted = true;
+            let cap = {
+                let m = self.rt.meta();
+                let hard = (m.max_seq as u32).saturating_sub(info.prompt_len + 1);
+                if self.max_output == 0 { hard } else { self.max_output.min(hard) }
+            };
+            info.finished = next == self.rt.meta().eos_id || ls.generated >= cap;
+            ls.finished = info.finished;
+            self.decode_tokens += 1;
+        }
+        self.decode_steps += 1;
+        let elapsed = t0.elapsed().as_secs_f64();
+        self.busy_decode += elapsed;
+        Ok(elapsed)
+    }
+
+    fn swap_time(&self, _tokens: usize) -> f64 {
+        0.0 // real engine preempts by recompute only
+    }
+
+    fn evict(&mut self, id: RequestId) {
+        if let Some(lane) = self.by_id.remove(&id) {
+            self.lanes[lane] = None;
+            self.zero_lane_kv(lane);
+        }
+        self.parked.remove(&id);
+    }
+
+    fn preempt_release(&mut self, id: RequestId) {
+        if let Some(lane) = self.by_id.remove(&id) {
+            if let Some(info) = self.lanes[lane].take() {
+                self.parked.insert(id, (info.prompt_len, info.output));
+            }
+            self.zero_lane_kv(lane);
+        }
+    }
+
+    fn stats(&self) -> EngineStats {
+        EngineStats {
+            busy_decode: self.busy_decode,
+            busy_prefill: self.busy_prefill,
+            busy_swap: 0.0,
+            decode_steps: self.decode_steps,
+            decode_tokens: self.decode_tokens,
+            mean_utilization: 0.0,
+        }
+    }
+}
+
+impl RealEngine {
+    /// Decoded text of a request's sampled output (for examples / the HTTP
+    /// server). Only valid while the request is live or parked.
+    pub fn output_text(&self, id: RequestId) -> Option<String> {
+        if let Some(&lane) = self.by_id.get(&id) {
+            let info = self.lanes[lane].as_ref()?;
+            return Some(tokenizer::decode(&info.output));
+        }
+        self.parked.get(&id).map(|(_, out)| tokenizer::decode(out))
+    }
+}
+
+// SAFETY: `xla::Literal` wraps a raw heap pointer without Send; RealEngine
+// is only ever driven by one thread at a time (the coordinator owns it; the
+// HTTP server funnels all execution through a single serving thread), so
+// moving the engine across threads is sound under the same serialization
+// argument as `runtime::Runtime`.
+unsafe impl Send for RealEngine {}

@@ -1,0 +1,271 @@
+//! Roofline GPU simulator (the paper's testbed substitute).
+//!
+//! Decode step time is `max(compute, memory)`:
+//!
+//! * compute term `c0 + c1·B` — per-step kernel launch + GEMM work growing
+//!   with batch size (FFN dominated; amortizes with batch, Fig. 5(a) short
+//!   sequences);
+//! * memory term `m0 + m1·ΣKV` — streaming every resident KV token once per
+//!   step (attention IO; dominates for long sequences, Fig. 5(a) long
+//!   sequences, and grows linearly per step exactly as Fig. 5(b) measures).
+//!
+//! Prefill is quadratic-in-`I` (`p0 + p1·I + p2·I²`) and runs exclusively,
+//! as in vLLM v0.8.2's default non-chunked prefill.
+
+use std::collections::BTreeMap;
+
+use crate::config::EngineProfile;
+use crate::core::{Request, RequestId};
+
+use super::{Engine, EngineStats, LaneState, PrefillResult};
+
+/// Simulated engine. Deterministic: all timing is derived from the profile;
+/// completion is derived from each request's hidden true output length.
+pub struct SimEngine {
+    profile: EngineProfile,
+    /// engine-busy seconds accumulated (observability)
+    pub busy_decode: f64,
+    pub busy_prefill: f64,
+    pub busy_swap: f64,
+    pub decode_steps: u64,
+    pub decode_tokens: u64,
+    /// time-weighted GPU "utilization" integral (compute_term / step_time)
+    util_weighted: f64,
+    /// per-request amount of prefill recomputation performed (tokens)
+    prefilled: BTreeMap<RequestId, u32>,
+    /// last step's terms, for the fig5 instrumentation
+    pub last_compute_term: f64,
+    pub last_memory_term: f64,
+}
+
+impl SimEngine {
+    pub fn new(profile: EngineProfile) -> SimEngine {
+        SimEngine {
+            profile,
+            busy_decode: 0.0,
+            busy_prefill: 0.0,
+            busy_swap: 0.0,
+            decode_steps: 0,
+            decode_tokens: 0,
+            util_weighted: 0.0,
+            prefilled: BTreeMap::new(),
+            last_compute_term: 0.0,
+            last_memory_term: 0.0,
+        }
+    }
+
+    pub fn profile(&self) -> &EngineProfile {
+        &self.profile
+    }
+
+    /// Seconds to prefill `tokens` prompt tokens.
+    pub fn prefill_time(&self, tokens: u32) -> f64 {
+        let t = tokens as f64;
+        self.profile.prefill_p0 + self.profile.prefill_p1 * t + self.profile.prefill_p2 * t * t
+    }
+
+    /// The roofline step time and its two terms for given batch/memory
+    /// pressure. Exposed for fig5a/fig5b instrumentation.
+    pub fn step_terms(&self, batch: usize, resident_kv: usize) -> (f64, f64, f64) {
+        let compute = self.profile.decode_c0 + self.profile.decode_c1 * batch as f64;
+        let memory = self.profile.decode_m0 + self.profile.decode_m1 * resident_kv as f64;
+        (compute.max(memory), compute, memory)
+    }
+
+    /// Mean achieved "GPU utilization" estimate over the run: per-sequence
+    /// GEMM work amortizing the weight-streaming constant (rises with
+    /// batch size — fig5a's y-axis).
+    pub fn mean_utilization(&self) -> f64 {
+        if self.busy_decode == 0.0 {
+            0.0
+        } else {
+            self.util_weighted / self.busy_decode
+        }
+    }
+
+    /// Record external swap traffic (coordinator calls this so busy-time
+    /// accounting stays inside the engine).
+    pub fn charge_swap(&mut self, seconds: f64) {
+        self.busy_swap += seconds;
+    }
+}
+
+impl Engine for SimEngine {
+    fn max_batch(&self) -> usize {
+        self.profile.max_batch
+    }
+
+    fn kv_capacity(&self) -> usize {
+        self.profile.kv_capacity
+    }
+
+    fn prefill(&mut self, req: &Request) -> anyhow::Result<PrefillResult> {
+        let elapsed = self.prefill_time(req.input_len);
+        self.busy_prefill += elapsed;
+        self.prefilled.insert(req.id, req.input_len);
+        // prefill emits the first output token
+        let finished = req.true_output_len <= 1;
+        Ok(PrefillResult { elapsed, finished })
+    }
+
+    fn decode_step(
+        &mut self,
+        lanes: &mut [LaneState],
+        resident_kv_tokens: usize,
+    ) -> anyhow::Result<f64> {
+        assert!(!lanes.is_empty(), "decode_step with empty batch");
+        assert!(lanes.len() <= self.max_batch());
+        let (step, compute, memory) = self.step_terms(lanes.len(), resident_kv_tokens);
+        self.last_compute_term = compute;
+        self.last_memory_term = memory;
+        self.busy_decode += step;
+        // achieved/peak FLOPs estimate: per-sequence GEMM work (c1·B)
+        // amortizing the weight-streaming constant (c0)
+        let util = (self.profile.decode_c1 * 2.0 * lanes.len() as f64 / step).min(1.0);
+        self.util_weighted += step * util;
+        self.decode_steps += 1;
+        for lane in lanes.iter_mut() {
+            lane.generated += 1;
+            lane.emitted = true;
+            lane.finished = lane.generated >= lane.true_output_len;
+            self.decode_tokens += 1;
+        }
+        Ok(step)
+    }
+
+    fn swap_time(&self, tokens: usize) -> f64 {
+        self.profile.swap_per_token * tokens as f64
+    }
+
+    fn evict(&mut self, id: RequestId) {
+        self.prefilled.remove(&id);
+    }
+
+    fn charge_swap(&mut self, seconds: f64) {
+        self.busy_swap += seconds;
+    }
+
+    fn stats(&self) -> EngineStats {
+        EngineStats {
+            busy_decode: self.busy_decode,
+            busy_prefill: self.busy_prefill,
+            busy_swap: self.busy_swap,
+            decode_steps: self.decode_steps,
+            decode_tokens: self.decode_tokens,
+            mean_utilization: self.mean_utilization(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, EngineProfile};
+    use crate::distribution::LengthDist;
+    use crate::embedding::Embedding;
+
+    fn req(id: u64, input: u32, output: u32) -> Request {
+        Request {
+            id,
+            prompt: String::new(),
+            input_len: input,
+            true_output_len: output,
+            arrival: 0.0,
+            dataset: DatasetKind::ShareGpt,
+            topic: 0,
+            embedding: Embedding::normalize(vec![1.0, 0.0]),
+            true_dist: Some(LengthDist::point(output as f64)),
+        }
+    }
+
+    fn eng() -> SimEngine {
+        SimEngine::new(EngineProfile::a40_llama8b())
+    }
+
+    #[test]
+    fn prefill_time_grows_superlinearly() {
+        let e = eng();
+        let t100 = e.prefill_time(100);
+        let t1000 = e.prefill_time(1000);
+        assert!(t1000 > 9.0 * t100 / 2.0, "t100={t100} t1000={t1000}");
+    }
+
+    #[test]
+    fn decode_step_advances_lanes_and_finishes() {
+        let mut e = eng();
+        let r = req(1, 10, 2);
+        let pr = e.prefill(&r).unwrap();
+        assert!(!pr.finished);
+        let mut lanes = vec![LaneState::new(&r, 1)];
+        let dt = e.decode_step(&mut lanes, 12).unwrap();
+        assert!(dt > 0.0);
+        assert_eq!(lanes[0].generated, 2);
+        assert!(lanes[0].finished);
+    }
+
+    #[test]
+    fn single_token_output_finishes_at_prefill() {
+        let mut e = eng();
+        let pr = e.prefill(&req(1, 10, 1)).unwrap();
+        assert!(pr.finished);
+    }
+
+    #[test]
+    fn roofline_compute_vs_memory_bound() {
+        // the A40/H800 presets are weight-streaming dominated (memory
+        // pressure binds through KV *capacity*); verify the roofline max
+        // itself with a profile whose KV-streaming term can dominate
+        let mut p = EngineProfile::a40_llama8b();
+        p.decode_m1 = 2.0e-6;
+        let e = SimEngine::new(p);
+        let (t1, c1, m1) = e.step_terms(4, 200);
+        assert_eq!(t1, c1.max(m1));
+        assert!(c1 > m1, "expected compute-bound: c={c1} m={m1}");
+        let (t2, c2, m2) = e.step_terms(4, 55_000);
+        assert!(m2 > c2, "expected memory-bound: c={c2} m={m2}");
+        assert_eq!(t2, m2);
+    }
+
+    #[test]
+    fn step_time_monotone_in_batch_and_kv() {
+        let e = eng();
+        let (a, _, _) = e.step_terms(1, 1000);
+        let (b, _, _) = e.step_terms(64, 1000);
+        let (c, _, _) = e.step_terms(64, 60_000);
+        assert!(b >= a);
+        assert!(c >= b);
+    }
+
+    #[test]
+    fn utilization_rises_with_batch() {
+        let r = req(1, 10, 1000);
+        let mut small = eng();
+        let mut lanes1 = vec![LaneState::new(&r, 1); 2];
+        let mut big = eng();
+        let mut lanes64 = vec![LaneState::new(&r, 1); 64];
+        for _ in 0..10 {
+            small.decode_step(&mut lanes1, 200).unwrap();
+            big.decode_step(&mut lanes64, 6400).unwrap();
+        }
+        assert!(big.mean_utilization() > 2.0 * small.mean_utilization());
+    }
+
+    #[test]
+    fn swap_time_linear() {
+        let e = eng();
+        assert!((e.swap_time(2000) - 2.0 * e.swap_time(1000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn busy_accounting_accumulates() {
+        let mut e = eng();
+        let r = req(1, 50, 10);
+        e.prefill(&r).unwrap();
+        let mut lanes = vec![LaneState::new(&r, 1)];
+        let dt = e.decode_step(&mut lanes, 60).unwrap();
+        assert!(e.busy_prefill > 0.0);
+        assert!((e.busy_decode - dt).abs() < 1e-15);
+        assert_eq!(e.decode_steps, 1);
+        assert_eq!(e.decode_tokens, 1);
+    }
+}

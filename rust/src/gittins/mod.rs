@@ -1,0 +1,224 @@
+//! Gittins index computation (§3.3 of the paper).
+//!
+//! For a job whose (remaining) service cost is a random variable `X ~ D`,
+//! the Gittins index is
+//!
+//! ```text
+//!     G(D) = inf_{Δ>0}  E[min{X, Δ}] / P(X ≤ Δ)
+//! ```
+//!
+//! — the minimum attainable *amortized* cost per unit of completion
+//! probability. Serving the job with the smallest index minimizes mean
+//! latency for jobs with unknown durations but known duration
+//! distributions (Gittins & Jones 1979; Gittins 1989).
+//!
+//! For a discrete distribution the infimum is attained at a support point,
+//! so the index is computed exactly in O(k) with prefix sums. Runtime
+//! *refresh* conditions the cost distribution on the service already
+//! received (`X > a`) and re-evaluates; SageSched does this only at bucket
+//! boundaries to bound overhead and avoid priority thrashing.
+
+use crate::distribution::LengthDist;
+
+/// Exact Gittins index of a discrete cost distribution.
+///
+/// Evaluates `E[min(X, Δ)] / P(X ≤ Δ)` at every support point Δ and takes
+/// the minimum. Support must be non-negative costs.
+pub fn gittins_index(dist: &LengthDist) -> f64 {
+    let values = dist.support();
+    let probs = dist.probs();
+    debug_assert!(!values.is_empty());
+
+    // prefix(j) = Σ_{i<=j} p_i * v_i   and   cdf(j) = Σ_{i<=j} p_i
+    // E[min(X, v_j)] = prefix(j) + v_j * (1 - cdf(j))
+    let mut best = f64::INFINITY;
+    let mut prefix = 0.0;
+    let mut cdf = 0.0;
+    for (v, p) in values.iter().zip(probs) {
+        prefix += v * p;
+        cdf += p;
+        let e_min = prefix + v * (1.0 - cdf);
+        let g = e_min / cdf;
+        if g < best {
+            best = g;
+        }
+    }
+    best
+}
+
+/// Gittins index of the *remaining* cost for a job that has already
+/// consumed `age` cost units without completing.
+///
+/// When the observed age exceeds the distribution's maximum support (the
+/// prediction was an underestimate — an "overdue" job), there is no
+/// conditional distribution to form. The belief-consistent treatment is
+/// memorylessness *plus* a monotone penalty: remaining cost is at least as
+/// uncertain as a fresh draw, and the index must not *drop* below what it
+/// was at the support edge (otherwise overdue jobs oscillate back to top
+/// priority — a measurable TTLT pathology). `age + mean` is increasing in
+/// age and dominates every in-support index, keeping overdue jobs parked
+/// behind predictable ones, exactly how SRPT treats revealed-long jobs.
+pub fn gittins_index_at_age(dist: &LengthDist, age: f64) -> f64 {
+    match dist.conditional_excess(age) {
+        Some(rem) => gittins_index(&rem),
+        None => age + dist.mean().max(1.0),
+    }
+}
+
+/// Bucketed Gittins refresh state for one request (§3.3's
+/// timeliness/stability tradeoff): the index is recomputed only when the
+/// generated-token count crosses a bucket boundary.
+#[derive(Clone, Debug)]
+pub struct BucketedGittins {
+    /// cost distribution fixed at admission (cost units)
+    dist: LengthDist,
+    /// bucket size in *output tokens* (paper default 200)
+    bucket_tokens: u32,
+    /// last bucket for which the index was computed
+    last_bucket: Option<u32>,
+    /// cached index value
+    cached: f64,
+    /// number of index recomputations (observability / fig12)
+    pub refresh_count: u32,
+}
+
+impl BucketedGittins {
+    pub fn new(dist: LengthDist, bucket_tokens: u32) -> BucketedGittins {
+        assert!(bucket_tokens >= 1);
+        BucketedGittins {
+            dist,
+            bucket_tokens,
+            last_bucket: None,
+            cached: f64::INFINITY,
+            refresh_count: 0,
+        }
+    }
+
+    /// Current index given `generated` output tokens so far and the cost
+    /// already consumed (in cost units, from the cost model). Recomputes
+    /// only at bucket boundaries.
+    pub fn index(&mut self, generated: u32, consumed_cost: f64) -> f64 {
+        let bucket = generated / self.bucket_tokens;
+        if self.last_bucket != Some(bucket) {
+            self.cached = gittins_index_at_age(&self.dist, consumed_cost);
+            self.last_bucket = Some(bucket);
+            self.refresh_count += 1;
+        }
+        self.cached
+    }
+
+    /// Force a recomputation (used when the underlying prediction changes).
+    pub fn invalidate(&mut self) {
+        self.last_bucket = None;
+    }
+
+    pub fn dist(&self) -> &LengthDist {
+        &self.dist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_mass_index_is_value() {
+        // deterministic job: G = E[min(X,Δ)]/P(X<=Δ) minimized at Δ=c → c
+        let d = LengthDist::point(42.0);
+        assert!((gittins_index(&d) - 42.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefers_cheap_likely_completion() {
+        // 90% chance of finishing at cost 1, 10% at cost 1000:
+        // G at Δ=1: E[min]=0.9*1+0.1*1 = 1.0; /0.9 = 1.111
+        let d = LengthDist::from_weighted(&[(1.0, 0.9), (1000.0, 0.1)]);
+        let g = gittins_index(&d);
+        assert!((g - (1.0 / 0.9)).abs() < 1e-9, "g={g}");
+        // far below the mean (≈ 100.9): Gittins exploits the distribution
+        assert!(g < d.mean() / 50.0);
+    }
+
+    #[test]
+    fn uniform_two_point() {
+        // X ∈ {2, 10} equally likely.
+        // Δ=2: (0.5*2 + 0.5*2)/0.5 = 4;  Δ=10: mean=6 / 1 = 6 → G=4
+        let d = LengthDist::from_weighted(&[(2.0, 0.5), (10.0, 0.5)]);
+        assert!((gittins_index(&d) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig6_shape_gittins_disagrees_with_mean() {
+        // Request A: moderate, concentrated cost. Request B: larger mean but
+        // bimodal with high early-completion mass (the paper's fig6).
+        let a = LengthDist::from_weighted(&[(80.0, 0.5), (120.0, 0.5)]); // mean 100
+        let b = LengthDist::from_weighted(&[(10.0, 0.6), (400.0, 0.4)]); // mean 166
+        assert!(b.mean() > a.mean());
+        // Gittins prefers B (index ≈ (0.6*10+0.4*10)/0.6 = 16.7 < 80)
+        assert!(gittins_index(&b) < gittins_index(&a));
+    }
+
+    #[test]
+    fn index_monotone_under_stochastic_dominance() {
+        let small = LengthDist::from_samples(&[10.0, 20.0, 30.0]);
+        let large = LengthDist::from_samples(&[100.0, 200.0, 300.0]);
+        assert!(gittins_index(&small) < gittins_index(&large));
+    }
+
+    #[test]
+    fn age_conditioning_removes_low_support() {
+        let d = LengthDist::from_weighted(&[(10.0, 0.5), (100.0, 0.5)]);
+        let g0 = gittins_index_at_age(&d, 0.0);
+        let g50 = gittins_index_at_age(&d, 50.0);
+        // after surviving past 10, only the 100 branch remains: remaining 50
+        assert!((g50 - 50.0).abs() < 1e-9);
+        assert!(g0 < g50);
+    }
+
+    #[test]
+    fn overdue_penalized_and_monotone() {
+        let d = LengthDist::from_samples(&[10.0, 20.0]);
+        let g25 = gittins_index_at_age(&d, 25.0);
+        let g40 = gittins_index_at_age(&d, 40.0);
+        // overdue index exceeds any in-support index and keeps growing
+        assert!(g25 > 20.0);
+        assert!(g40 > g25);
+    }
+
+    #[test]
+    fn bucketed_refresh_only_at_boundaries() {
+        let d = LengthDist::from_samples(&[100.0, 5000.0, 20000.0]);
+        let mut b = BucketedGittins::new(d, 200);
+        let g0 = b.index(0, 0.0);
+        let g1 = b.index(50, 1000.0); // same bucket → cached
+        assert_eq!(g0, g1);
+        assert_eq!(b.refresh_count, 1);
+        let g2 = b.index(200, 4000.0); // new bucket → refresh
+        assert_eq!(b.refresh_count, 2);
+        assert_ne!(g0, g2);
+    }
+
+    #[test]
+    fn invalidate_forces_recompute() {
+        let d = LengthDist::from_samples(&[10.0, 100.0]);
+        let mut b = BucketedGittins::new(d, 200);
+        b.index(0, 0.0);
+        b.invalidate();
+        b.index(0, 0.0);
+        assert_eq!(b.refresh_count, 2);
+    }
+
+    #[test]
+    fn gittins_leq_mean_always() {
+        // E[min(X,Δ)]/P(X≤Δ) at the max support point equals the mean, so
+        // the infimum is ≤ mean for every distribution.
+        let dists = [
+            LengthDist::from_samples(&[1.0, 2.0, 3.0]),
+            LengthDist::from_weighted(&[(5.0, 0.2), (50.0, 0.5), (500.0, 0.3)]),
+            LengthDist::uniform(10.0, 1000.0, 25),
+        ];
+        for d in dists {
+            assert!(gittins_index(&d) <= d.mean() + 1e-9);
+        }
+    }
+}

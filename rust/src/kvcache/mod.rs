@@ -1,0 +1,331 @@
+//! Paged KV-cache accounting (vLLM-style block allocator).
+//!
+//! Tracks GPU KV memory in fixed-size token blocks with per-request block
+//! tables, plus swap-out/swap-in to host memory for preemption. This is the
+//! *memory* half of demand hybridity: admission and preemption decisions in
+//! [`crate::serve`] are gated on whether a request's next token still fits.
+
+use std::collections::BTreeMap;
+
+use crate::core::RequestId;
+
+/// Block identifier.
+pub type BlockId = u32;
+
+/// Where a request's KV currently lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvResidence {
+    Gpu,
+    Swapped,
+}
+
+/// Per-request KV state.
+#[derive(Clone, Debug)]
+struct SeqState {
+    blocks: Vec<BlockId>,
+    tokens: usize,
+    residence: KvResidence,
+}
+
+/// Paged block allocator over a fixed GPU KV budget.
+#[derive(Debug)]
+pub struct KvManager {
+    block_tokens: usize,
+    total_blocks: usize,
+    free: Vec<BlockId>,
+    seqs: BTreeMap<RequestId, SeqState>,
+    /// cumulative counters (observability / fig5a)
+    pub swap_out_events: u64,
+    pub swap_in_events: u64,
+    pub peak_used_blocks: usize,
+}
+
+impl KvManager {
+    /// `capacity_tokens` is rounded down to whole blocks.
+    pub fn new(capacity_tokens: usize, block_tokens: usize) -> KvManager {
+        assert!(block_tokens > 0);
+        let total_blocks = capacity_tokens / block_tokens;
+        assert!(total_blocks > 0, "capacity smaller than one block");
+        KvManager {
+            block_tokens,
+            total_blocks,
+            free: (0..total_blocks as BlockId).rev().collect(),
+            seqs: BTreeMap::new(),
+            swap_out_events: 0,
+            swap_in_events: 0,
+            peak_used_blocks: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    /// Tokens resident on GPU (counts whole sequences, not block padding).
+    pub fn resident_tokens(&self) -> usize {
+        self.seqs
+            .values()
+            .filter(|s| s.residence == KvResidence::Gpu)
+            .map(|s| s.tokens)
+            .sum()
+    }
+
+    /// GPU utilization of the KV pool in blocks, 0..=1.
+    pub fn occupancy(&self) -> f64 {
+        self.used_blocks() as f64 / self.total_blocks as f64
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can `tokens` KV tokens be newly allocated right now?
+    pub fn can_allocate(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free.len()
+    }
+
+    /// Would growing request `id` to `tokens` total tokens fit?
+    pub fn can_grow_to(&self, id: RequestId, tokens: usize) -> bool {
+        let have = self.seqs.get(&id).map(|s| s.blocks.len()).unwrap_or(0);
+        let need = self.blocks_for(tokens);
+        need.saturating_sub(have) <= self.free.len()
+    }
+
+    /// Allocate (or grow) the sequence to hold `tokens` tokens on GPU.
+    /// Returns false (and changes nothing) if blocks are insufficient.
+    pub fn grow_to(&mut self, id: RequestId, tokens: usize) -> bool {
+        let entry = self.seqs.entry(id).or_insert(SeqState {
+            blocks: Vec::new(),
+            tokens: 0,
+            residence: KvResidence::Gpu,
+        });
+        assert_eq!(
+            entry.residence,
+            KvResidence::Gpu,
+            "grow_to on swapped sequence {id}"
+        );
+        let need = tokens.div_ceil(self.block_tokens);
+        if need > entry.blocks.len() {
+            let extra = need - entry.blocks.len();
+            if extra > self.free.len() {
+                if entry.blocks.is_empty() {
+                    self.seqs.remove(&id);
+                }
+                return false;
+            }
+            for _ in 0..extra {
+                entry.blocks.push(self.free.pop().unwrap());
+            }
+        }
+        entry.tokens = entry.tokens.max(tokens);
+        let used = self.total_blocks - self.free.len();
+        if used > self.peak_used_blocks {
+            self.peak_used_blocks = used;
+        }
+        true
+    }
+
+    /// Release all blocks of a finished request.
+    pub fn release(&mut self, id: RequestId) {
+        if let Some(seq) = self.seqs.remove(&id) {
+            if seq.residence == KvResidence::Gpu {
+                self.free.extend(seq.blocks);
+            }
+        }
+    }
+
+    /// Swap a sequence out to host memory; its GPU blocks are freed but its
+    /// token count is remembered. Returns the number of tokens moved.
+    pub fn swap_out(&mut self, id: RequestId) -> usize {
+        let seq = self.seqs.get_mut(&id).expect("swap_out of unknown seq");
+        assert_eq!(seq.residence, KvResidence::Gpu);
+        let blocks = std::mem::take(&mut seq.blocks);
+        self.free.extend(blocks);
+        seq.residence = KvResidence::Swapped;
+        self.swap_out_events += 1;
+        seq.tokens
+    }
+
+    /// Bring a swapped sequence back to GPU. Returns tokens moved, or None
+    /// if blocks are insufficient (nothing changes).
+    pub fn swap_in(&mut self, id: RequestId) -> Option<usize> {
+        let need = {
+            let seq = self.seqs.get(&id).expect("swap_in of unknown seq");
+            assert_eq!(seq.residence, KvResidence::Swapped);
+            self.blocks_for(seq.tokens)
+        };
+        if need > self.free.len() {
+            return None;
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            blocks.push(self.free.pop().unwrap());
+        }
+        let seq = self.seqs.get_mut(&id).unwrap();
+        seq.blocks = blocks;
+        seq.residence = KvResidence::Gpu;
+        self.swap_in_events += 1;
+        let used = self.total_blocks - self.free.len();
+        if used > self.peak_used_blocks {
+            self.peak_used_blocks = used;
+        }
+        Some(seq.tokens)
+    }
+
+    /// Drop a sequence's KV entirely (recompute-mode preemption).
+    pub fn drop_seq(&mut self, id: RequestId) {
+        self.release(id);
+    }
+
+    pub fn residence(&self, id: RequestId) -> Option<KvResidence> {
+        self.seqs.get(&id).map(|s| s.residence)
+    }
+
+    pub fn tokens_of(&self, id: RequestId) -> usize {
+        self.seqs.get(&id).map(|s| s.tokens).unwrap_or(0)
+    }
+
+    /// Internal-fragmentation ratio: wasted tail tokens / allocated tokens.
+    pub fn fragmentation(&self) -> f64 {
+        let mut alloc = 0usize;
+        let mut used = 0usize;
+        for s in self.seqs.values() {
+            if s.residence == KvResidence::Gpu {
+                alloc += s.blocks.len() * self.block_tokens;
+                used += s.tokens;
+            }
+        }
+        if alloc == 0 {
+            0.0
+        } else {
+            (alloc - used) as f64 / alloc as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> KvManager {
+        KvManager::new(160, 16) // 10 blocks
+    }
+
+    #[test]
+    fn allocation_and_growth() {
+        let mut m = mgr();
+        assert!(m.grow_to(1, 10)); // 1 block
+        assert_eq!(m.used_blocks(), 1);
+        assert!(m.grow_to(1, 17)); // 2 blocks
+        assert_eq!(m.used_blocks(), 2);
+        assert_eq!(m.tokens_of(1), 17);
+        assert!(m.grow_to(1, 17)); // no-op
+        assert_eq!(m.used_blocks(), 2);
+    }
+
+    #[test]
+    fn capacity_enforced_atomically() {
+        let mut m = mgr();
+        assert!(m.grow_to(1, 160));
+        assert_eq!(m.free_blocks(), 0);
+        assert!(!m.grow_to(2, 1));
+        assert_eq!(m.tokens_of(2), 0); // rolled back
+        m.release(1);
+        assert_eq!(m.free_blocks(), 10);
+        assert!(m.grow_to(2, 1));
+    }
+
+    #[test]
+    fn can_grow_accounts_existing_blocks() {
+        let mut m = mgr();
+        assert!(m.grow_to(1, 16));
+        assert!(m.can_grow_to(1, 32));
+        assert!(m.grow_to(2, 128)); // 8 blocks → 9 used
+        assert!(m.can_grow_to(1, 32)); // needs 1 more, 1 free
+        assert!(!m.can_grow_to(1, 48)); // needs 2 more, only 1 free
+    }
+
+    #[test]
+    fn swap_out_frees_blocks_and_remembers_tokens() {
+        let mut m = mgr();
+        m.grow_to(1, 40);
+        let moved = m.swap_out(1);
+        assert_eq!(moved, 40);
+        assert_eq!(m.free_blocks(), 10);
+        assert_eq!(m.residence(1), Some(KvResidence::Swapped));
+        assert_eq!(m.tokens_of(1), 40);
+
+        let back = m.swap_in(1);
+        assert_eq!(back, Some(40));
+        assert_eq!(m.used_blocks(), 3);
+        assert_eq!(m.residence(1), Some(KvResidence::Gpu));
+    }
+
+    #[test]
+    fn swap_in_fails_when_full() {
+        let mut m = mgr();
+        m.grow_to(1, 40);
+        m.swap_out(1);
+        m.grow_to(2, 160);
+        assert_eq!(m.swap_in(1), None);
+        assert_eq!(m.residence(1), Some(KvResidence::Swapped));
+    }
+
+    #[test]
+    fn release_swapped_sequence_is_safe() {
+        let mut m = mgr();
+        m.grow_to(1, 16);
+        m.swap_out(1);
+        m.release(1);
+        assert_eq!(m.free_blocks(), 10);
+        assert_eq!(m.residence(1), None);
+    }
+
+    #[test]
+    fn resident_tokens_excludes_swapped() {
+        let mut m = mgr();
+        m.grow_to(1, 20);
+        m.grow_to(2, 30);
+        assert_eq!(m.resident_tokens(), 50);
+        m.swap_out(1);
+        assert_eq!(m.resident_tokens(), 30);
+    }
+
+    #[test]
+    fn fragmentation_measured() {
+        let mut m = mgr();
+        m.grow_to(1, 17); // 2 blocks = 32 alloc, 17 used
+        let f = m.fragmentation();
+        assert!((f - 15.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_usage_tracked() {
+        let mut m = mgr();
+        m.grow_to(1, 80);
+        m.grow_to(2, 48);
+        m.release(1);
+        assert_eq!(m.peak_used_blocks, 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn grow_swapped_panics() {
+        let mut m = mgr();
+        m.grow_to(1, 16);
+        m.swap_out(1);
+        m.grow_to(1, 32);
+    }
+}

@@ -1,0 +1,65 @@
+//! # SageSched — efficient LLM scheduling under demand uncertainty & hybridity
+//!
+//! Reproduction of *"SageSched: Efficient LLM Scheduling Confronting Demand
+//! Uncertainty and Hybridity"* (Gan et al., 2026) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: request router, continuous
+//!   batcher, paged KV-cache manager, preemptive scheduler, plus the paper's
+//!   three contributions — the [`predictor::HistoryPredictor`] (semantic-aware
+//!   history-based output-length-distribution prediction), the
+//!   [`cost::ResourceBoundCost`] model (`C = O²/2 + I·O`), and the
+//!   [`gittins`]-index-based uncertainty-aware policy
+//!   ([`sched`]'s `sagesched` policy).
+//! * **L2 (`python/compile/model.py`)** — a tiny decoder-only LM (prefill /
+//!   decode / embedder) in JAX, AOT-lowered once to HLO text.
+//! * **L1 (`python/compile/kernels/attention.py`)** — the Pallas flash-decode
+//!   attention kernel inside the L2 decode step.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO artifacts
+//! via the PJRT C API (`xla` crate) and [`engine::RealEngine`] serves real
+//! tokens from them. [`engine::SimEngine`] is the calibrated roofline
+//! simulator used for the paper's large-scale experiments (the paper's own
+//! testbed was A40/H800 GPUs; see DESIGN.md for the substitution argument).
+//!
+//! The build is fully offline, so heavyweight ecosystem crates are replaced
+//! by in-tree substrates: [`util::json`] (JSON), [`util::rng`] (PCG64),
+//! [`util::stats`], [`util::cli`], and a hand-rolled bench harness under
+//! `rust/benches/`.
+
+pub mod cluster;
+pub mod config;
+pub mod core;
+pub mod cost;
+pub mod distribution;
+pub mod embedding;
+pub mod engine;
+pub mod gittins;
+pub mod kvcache;
+pub mod metrics;
+pub mod predictor;
+pub mod runtime;
+pub mod sched;
+pub mod serve;
+pub mod server;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports covering the common public API surface.
+pub mod prelude {
+    pub use crate::config::{
+        CostModelKind, DatasetKind, EngineProfile, ExperimentConfig, PolicyKind,
+        PredictorKind, WorkloadConfig,
+    };
+    pub use crate::core::{Request, RequestId, RequestOutcome};
+    pub use crate::cost::{CostModel, OutputLenCost, OverallLenCost, ResourceBoundCost};
+    pub use crate::distribution::LengthDist;
+    pub use crate::engine::{Engine, SimEngine};
+    pub use crate::gittins::gittins_index;
+    pub use crate::metrics::RunReport;
+    pub use crate::predictor::{HistoryPredictor, Predictor};
+    pub use crate::sched::Policy;
+    pub use crate::serve::{run_experiment, Coordinator};
+    pub use crate::workload::WorkloadGen;
+}

@@ -1,0 +1,281 @@
+//! `sagesched` CLI: run experiments, serve the real model, inspect configs.
+//!
+//! ```text
+//! sagesched run   [--policy sagesched] [--rps 8] [--n 600] [--engine a40-llama8b]
+//!                 [--predictor history] [--cost resource-bound] [--seed 0]
+//!                 [--config file.json] [--json]
+//! sagesched sweep [--rps-list 4,6,8,10] ...      compare all paper baselines
+//! sagesched serve [--addr 127.0.0.1:8080] [--artifacts artifacts]
+//! sagesched smoke [--artifacts artifacts]        load + run the HLO artifacts once
+//! sagesched cluster [--nodes 1,4,16,64]          fig12-style overhead sweep
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use sagesched::cluster::ClusterSim;
+use sagesched::config::{
+    CostModelKind, EngineProfile, ExperimentConfig, PolicyKind, PredictorKind,
+};
+use sagesched::engine::RealEngine;
+use sagesched::metrics::RunReport;
+use sagesched::runtime::Runtime;
+use sagesched::serve::{run_experiment, Coordinator};
+use sagesched::util::cli::Args;
+use sagesched::util::json::Json;
+
+fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        ExperimentConfig::from_json(&j).map_err(|e| anyhow::anyhow!(e))?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(p) = args.get("policy") {
+        cfg.policy = PolicyKind::from_name(p).context("unknown --policy")?;
+    }
+    if let Some(p) = args.get("predictor") {
+        cfg.predictor = PredictorKind::from_name(p).context("unknown --predictor")?;
+    }
+    if let Some(c) = args.get("cost") {
+        cfg.cost_model = CostModelKind::from_name(c).context("unknown --cost")?;
+    }
+    if let Some(e) = args.get("engine") {
+        cfg.engine = EngineProfile::by_name(e).context("unknown --engine")?;
+    }
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.workload.rps = args.f64_or("rps", cfg.workload.rps);
+    cfg.workload.n_requests = args.usize_or("n", cfg.workload.n_requests);
+    cfg.similarity_threshold =
+        args.f64_or("threshold", cfg.similarity_threshold as f64) as f32;
+    cfg.bucket_tokens = args.u64_or("bucket", cfg.bucket_tokens as u64) as u32;
+    cfg.noise_mix = args.f64_or("noise", cfg.noise_mix);
+    Ok(cfg)
+}
+
+fn print_report(report: &RunReport, as_json: bool) {
+    if as_json {
+        println!("{}", report.to_json());
+    } else {
+        println!("{}", RunReport::markdown_header());
+        println!("{}", report.markdown_row());
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let report = if let Some(trace_path) = args.get("trace") {
+        // replay a recorded trace instead of generating a fresh workload
+        let requests = sagesched::workload::trace::load(trace_path)?;
+        let mut coord = sagesched::serve::build_sim_coordinator(&cfg);
+        sagesched::serve::prewarm_predictor(coord.predictor.as_mut(), &cfg);
+        coord.run_workload(requests)?;
+        coord.report(cfg.warmup_fraction)
+    } else {
+        run_experiment(&cfg)?
+    };
+    print_report(&report, args.has("json"));
+    Ok(())
+}
+
+fn cmd_gen_trace(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let out = args.str_or("out", "trace.jsonl");
+    let wl = sagesched::workload::WorkloadGen::new(cfg.workload.clone(), cfg.seed)
+        .generate();
+    sagesched::workload::trace::save(&out, &wl.requests)?;
+    println!("wrote {} requests to {out}", wl.requests.len());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let base = config_from_args(args)?;
+    let rps_list: Vec<f64> = args
+        .str_or("rps-list", "4,6,8,10")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    for rps in rps_list {
+        println!("## rps = {rps}");
+        println!("{}", RunReport::markdown_header());
+        for policy in PolicyKind::PAPER_BASELINES {
+            let mut cfg = base.clone();
+            cfg.policy = policy;
+            cfg.workload.rps = rps;
+            let report = run_experiment(&cfg)?;
+            println!("{}", report.markdown_row());
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let rt = Runtime::load(&dir)?;
+    let meta = rt.meta().clone();
+    println!(
+        "loaded artifacts: vocab={} layers={} heads={} max_seq={} batch={}",
+        meta.vocab, meta.n_layers, meta.n_heads, meta.max_seq, meta.decode_batch
+    );
+    let tokens = sagesched::tokenizer::encode("hello sagesched");
+    let pf = rt.run_prefill(&tokens)?;
+    println!("prefill ok: {} logits, k/v {} floats", pf.logits.len(), pf.k.len());
+    let emb = rt.run_embed(&tokens)?;
+    println!("embed ok: dim {}", emb.len());
+    let b = meta.decode_batch;
+    let toks = vec![meta.pad_id as i32; b];
+    let pos = vec![0i32; b];
+    let ce = meta.cache_elems();
+    let dec = rt.run_decode(&toks, &pos, &vec![0.0; ce], &vec![0.0; ce])?;
+    println!("decode ok: {} logits", dec.logits.len());
+
+    // end-to-end short generation through the engine
+    use sagesched::engine::{Engine, LaneState};
+    let mut engine = RealEngine::new(rt, 0);
+    let req = sagesched::core::Request {
+        id: 1,
+        prompt: "tell me a story about fjords".into(),
+        input_len: tokens.len() as u32,
+        true_output_len: u32::MAX,
+        arrival: 0.0,
+        dataset: sagesched::config::DatasetKind::Write,
+        topic: 0,
+        embedding: sagesched::embedding::Embedding::normalize(vec![1.0; 8]),
+        true_dist: None,
+    };
+    let _ = engine.prefill(&req)?;
+    let mut lanes = vec![LaneState::new(&req, 1)];
+    let mut steps = 0;
+    while !lanes[0].finished && steps < 64 {
+        engine.decode_step(&mut lanes, 0)?;
+        steps += 1;
+    }
+    println!(
+        "generated {} tokens in {} decode steps (text: {:?})",
+        lanes[0].generated,
+        steps,
+        engine.output_text(1).unwrap_or_default()
+    );
+    println!("smoke OK");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let addr = args.str_or("addr", "127.0.0.1:8080");
+    let rt = Runtime::load(&dir)?;
+    let cfg = config_from_args(args)?;
+    let engine = RealEngine::new(rt, cfg.seed);
+    let policy = sagesched::sched::make_policy(&cfg);
+    let predictor = sagesched::predictor::make_predictor(
+        cfg.predictor,
+        engine.runtime().meta().d_model,
+        cfg.history_capacity,
+        cfg.similarity_threshold,
+        cfg.seed,
+    );
+    let cost = sagesched::cost::make_cost_model(cfg.cost_model);
+    let coord = Coordinator::new(
+        engine,
+        policy,
+        predictor,
+        cost,
+        sagesched::config::PreemptMode::Recompute,
+    );
+    let handle = sagesched::server::serve(&addr, coord)?;
+    println!("serving on http://{} (policy: {})", handle.addr, cfg.policy.name());
+    println!("POST /v1/generate {{\"prompt\": \"...\"}} | GET /metrics | GET /healthz");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let sizes: Vec<usize> = args
+        .str_or("nodes", "1,2,4,8,16,32,64")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let sim = ClusterSim::new(cfg);
+    println!("| nodes | rps | predict (ms) | sched (ms) | total (ms) | predictor util |");
+    println!("|---|---|---|---|---|---|");
+    for o in sim.sweep(&sizes) {
+        println!(
+            "| {} | {:.0} | {:.3} | {:.3} | {:.3} | {:.2} |",
+            o.nodes,
+            o.aggregate_rps,
+            o.predict_latency * 1e3,
+            o.sched_latency * 1e3,
+            o.total_latency * 1e3,
+            o.predictor_utilization
+        );
+    }
+    Ok(())
+}
+
+fn cmd_predquality(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let n = args.usize_or("n", 500);
+    let mut predictor = sagesched::predictor::make_predictor(
+        cfg.predictor,
+        cfg.workload.embed_dim,
+        cfg.history_capacity,
+        cfg.similarity_threshold,
+        cfg.seed,
+    );
+    sagesched::serve::prewarm_predictor(predictor.as_mut(), &cfg);
+    let mut wl = cfg.workload.clone();
+    wl.n_requests = n;
+    let probes = sagesched::workload::WorkloadGen::new(wl, cfg.seed ^ 0x9).generate();
+    // marginal baseline over the probe set
+    let all: Vec<f64> = probes.requests.iter().map(|r| r.true_output_len as f64).collect();
+    let marginal = sagesched::distribution::LengthDist::from_samples(&all);
+    let mut w1_pred = 0.0;
+    let mut w1_marg = 0.0;
+    let mut mean_abs_err = 0.0;
+    for r in &probes.requests {
+        let pred = predictor.predict(r);
+        let truth = r.true_dist.as_ref().unwrap();
+        w1_pred += pred.w1_distance(truth);
+        w1_marg += marginal.w1_distance(truth);
+        mean_abs_err += (pred.mean() - truth.mean()).abs();
+    }
+    println!(
+        "predictor={} n={n} mean W1(pred,true)={:.1} W1(marginal,true)={:.1} meanErr={:.1}",
+        predictor.name(),
+        w1_pred / n as f64,
+        w1_marg / n as f64,
+        mean_abs_err / n as f64
+    );
+    Ok(())
+}
+
+const USAGE: &str = "usage: sagesched <run|sweep|smoke|serve|cluster> [flags]
+  run     run one simulated experiment        (--policy --rps --n --engine --json)
+  sweep   compare the paper's six schedulers  (--rps-list 4,6,8,10)
+  smoke   load + execute the HLO artifacts    (--artifacts artifacts)
+  serve   HTTP server over the real model     (--addr 127.0.0.1:8080)
+  cluster fig12 overhead scaling sweep        (--nodes 1,4,16,64)
+  gen-trace record a workload trace           (--out trace.jsonl --n 1000)
+  (run also accepts --trace file.jsonl to replay a recorded trace)";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("run") => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("smoke") => cmd_smoke(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("cluster") => cmd_cluster(&args),
+        Some("predquality") => cmd_predquality(&args),
+        Some("gen-trace") => cmd_gen_trace(&args),
+        Some(other) => bail!("unknown command {other}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Run-level metrics: TTLT / TTFT / TPOT summaries, engine counters,
+//! scheduling overheads, and report emission (markdown rows + JSON).
+
+use std::collections::BTreeMap;
+
+use crate::config::DatasetKind;
+use crate::core::RequestOutcome;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Full accounting of one experiment run.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub policy: String,
+    pub predictor: String,
+    pub cost_model: String,
+    /// requests measured (post-warmup)
+    pub measured: usize,
+    pub ttlt: Summary,
+    pub ttft: Summary,
+    pub tpot: Summary,
+    /// per-dataset TTLT
+    pub ttlt_by_dataset: BTreeMap<&'static str, Summary>,
+    /// end-to-end span of the measured portion (s)
+    pub makespan: f64,
+    /// measured request throughput (req/s)
+    pub throughput: f64,
+    pub preemptions: u64,
+    pub swap_out_events: u64,
+    pub swap_in_events: u64,
+    /// engine busy-time split (s)
+    pub busy_decode: f64,
+    pub busy_prefill: f64,
+    pub busy_swap: f64,
+    pub mean_utilization: f64,
+    /// cumulative wallclock spent in predictor calls (s)
+    pub predict_overhead: f64,
+    /// cumulative wallclock spent computing priorities / sorting (s)
+    pub sched_overhead: f64,
+    /// decode steps executed
+    pub decode_steps: u64,
+}
+
+impl RunReport {
+    /// Build the latency summaries from outcomes (already warmup-filtered).
+    pub fn from_outcomes(outcomes: &[RequestOutcome]) -> RunReport {
+        let mut r = RunReport::default();
+        r.measured = outcomes.len();
+        let ttlt: Vec<f64> = outcomes.iter().map(|o| o.ttlt()).collect();
+        let ttft: Vec<f64> = outcomes.iter().map(|o| o.ttft()).collect();
+        let tpot: Vec<f64> = outcomes.iter().map(|o| o.tpot()).collect();
+        r.ttlt = Summary::of(&ttlt);
+        r.ttft = Summary::of(&ttft);
+        r.tpot = Summary::of(&tpot);
+        for ds in DatasetKind::ALL {
+            let sub: Vec<f64> = outcomes
+                .iter()
+                .filter(|o| o.dataset == ds)
+                .map(|o| o.ttlt())
+                .collect();
+            if !sub.is_empty() {
+                r.ttlt_by_dataset.insert(ds.name(), Summary::of(&sub));
+            }
+        }
+        if let (Some(first), Some(last)) = (
+            outcomes.iter().map(|o| o.arrival).fold(None, |m: Option<f64>, x| {
+                Some(m.map_or(x, |m| m.min(x)))
+            }),
+            outcomes.iter().map(|o| o.completion).fold(None, |m: Option<f64>, x| {
+                Some(m.map_or(x, |m| m.max(x)))
+            }),
+        ) {
+            r.makespan = last - first;
+            if r.makespan > 0.0 {
+                r.throughput = outcomes.len() as f64 / r.makespan;
+            }
+        }
+        r
+    }
+
+    /// One markdown table row (pairs with [`RunReport::markdown_header`]).
+    pub fn markdown_row(&self) -> String {
+        format!(
+            "| {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.4} | {:.2} | {} |",
+            self.policy,
+            self.ttlt.mean,
+            self.ttlt.p90,
+            self.ttft.mean,
+            self.ttft.p90,
+            self.tpot.mean,
+            self.throughput,
+            self.preemptions,
+        )
+    }
+
+    pub fn markdown_header() -> String {
+        "| policy | TTLT mean | TTLT p90 | TTFT mean | TTFT p90 | TPOT | thru (r/s) | preempt |\n\
+         |---|---|---|---|---|---|---|---|"
+            .to_string()
+    }
+
+    pub fn to_json(&self) -> Json {
+        fn summary(s: &Summary) -> Json {
+            Json::obj(vec![
+                ("count", Json::num(s.count as f64)),
+                ("mean", Json::num(s.mean)),
+                ("p50", Json::num(s.p50)),
+                ("p90", Json::num(s.p90)),
+                ("p99", Json::num(s.p99)),
+                ("max", Json::num(s.max)),
+            ])
+        }
+        let mut by_ds = Vec::new();
+        for (name, s) in &self.ttlt_by_dataset {
+            by_ds.push((*name, summary(s)));
+        }
+        Json::obj(vec![
+            ("policy", Json::str(self.policy.clone())),
+            ("predictor", Json::str(self.predictor.clone())),
+            ("cost_model", Json::str(self.cost_model.clone())),
+            ("measured", Json::num(self.measured as f64)),
+            ("ttlt", summary(&self.ttlt)),
+            ("ttft", summary(&self.ttft)),
+            ("tpot", summary(&self.tpot)),
+            ("ttlt_by_dataset", Json::obj(by_ds)),
+            ("makespan", Json::num(self.makespan)),
+            ("throughput", Json::num(self.throughput)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("swap_out_events", Json::num(self.swap_out_events as f64)),
+            ("swap_in_events", Json::num(self.swap_in_events as f64)),
+            ("busy_decode", Json::num(self.busy_decode)),
+            ("busy_prefill", Json::num(self.busy_prefill)),
+            ("busy_swap", Json::num(self.busy_swap)),
+            ("mean_utilization", Json::num(self.mean_utilization)),
+            ("predict_overhead", Json::num(self.predict_overhead)),
+            ("sched_overhead", Json::num(self.sched_overhead)),
+            ("decode_steps", Json::num(self.decode_steps as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: u64, ds: DatasetKind, arr: f64, ft: f64, done: f64) -> RequestOutcome {
+        RequestOutcome {
+            id,
+            dataset: ds,
+            input_len: 10,
+            output_len: 10,
+            arrival: arr,
+            first_token: ft,
+            completion: done,
+            preemptions: 0,
+        }
+    }
+
+    #[test]
+    fn aggregates_latencies() {
+        let outs = vec![
+            outcome(1, DatasetKind::ShareGpt, 0.0, 1.0, 5.0),
+            outcome(2, DatasetKind::Alpaca, 1.0, 3.0, 11.0),
+        ];
+        let r = RunReport::from_outcomes(&outs);
+        assert_eq!(r.measured, 2);
+        assert!((r.ttlt.mean - 7.5).abs() < 1e-12);
+        assert!((r.ttft.mean - 1.5).abs() < 1e-12);
+        assert!((r.makespan - 11.0).abs() < 1e-12);
+        assert_eq!(r.ttlt_by_dataset.len(), 2);
+    }
+
+    #[test]
+    fn empty_outcomes_safe() {
+        let r = RunReport::from_outcomes(&[]);
+        assert_eq!(r.measured, 0);
+        assert_eq!(r.ttlt.mean, 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip_has_fields() {
+        let outs = vec![outcome(1, DatasetKind::Write, 0.0, 0.5, 2.0)];
+        let mut r = RunReport::from_outcomes(&outs);
+        r.policy = "sagesched".into();
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.str_or("policy", ""), "sagesched");
+        assert!(j.get("ttlt").unwrap().f64_or("mean", -1.0) > 0.0);
+    }
+
+    #[test]
+    fn markdown_row_well_formed() {
+        let r = RunReport {
+            policy: "fcfs".into(),
+            ..RunReport::from_outcomes(&[outcome(1, DatasetKind::Write, 0.0, 1.0, 2.0)])
+        };
+        let row = r.markdown_row();
+        assert!(row.starts_with("| fcfs |"));
+        assert_eq!(row.matches('|').count(), RunReport::markdown_header().lines().next().unwrap().matches('|').count());
+    }
+}

@@ -1,0 +1,460 @@
+//! Output-length prediction (§3.1 of the paper).
+//!
+//! The paper's contribution is the **semantic-aware history-based
+//! predictor** ([`HistoryPredictor`]): embed the prompt, retrieve recently
+//! served requests whose prompt cosine-similarity exceeds a threshold
+//! (default 0.8, FIFO 10k window), and use *their* observed output lengths
+//! as the predicted distribution — training-free, model-agnostic,
+//! distribution-valued.
+//!
+//! The ablation baselines of Fig. 9 live here too:
+//! [`LengthHistoryPredictor`] (semantic-*unaware*: match on input length
+//! instead of prompt content) and [`ProxyPredictor`] (the "fine-tuned
+//! DistillBert" style model — emulated as a calibrated noisy observer of
+//! the true distribution, since the baseline is characterized by *what it
+//! predicts and how accurately*, not by its weights; accuracy is set to
+//! match the paper's reported 34.1% bucket accuracy). [`OraclePredictor`]
+//! supplies ground truth for upper-bound ablations.
+
+use crate::core::Request;
+use crate::distribution::LengthDist;
+use crate::embedding::{Embedding, FlatIndex};
+use crate::util::rng::Rng;
+
+/// A predictor maps an incoming request to an output-length distribution
+/// and learns from completed requests.
+pub trait Predictor: Send {
+    fn name(&self) -> &'static str;
+
+    /// Predict the output-length distribution for a request.
+    fn predict(&mut self, req: &Request) -> LengthDist;
+
+    /// Record a completed request's observed output length.
+    fn observe(&mut self, req: &Request, output_len: u32);
+
+    /// Point prediction (for SJF-style policies): distribution mean.
+    fn predict_point(&mut self, req: &Request) -> f64 {
+        self.predict(req).mean()
+    }
+}
+
+/// Fallback prior used before any history exists: wide uniform.
+/// (The paper augments the warm-up window with public-dataset requests; a
+/// wide prior plays that role here and washes out after a few hundred
+/// observations.)
+fn cold_start_prior() -> LengthDist {
+    LengthDist::uniform(8.0, 1024.0, 32)
+}
+
+// ---------------------------------------------------------------------------
+// Semantic-aware history-based predictor (the paper's, §3.1)
+// ---------------------------------------------------------------------------
+
+/// History record payload: observed output length.
+#[derive(Clone, Debug)]
+struct HistoryRecord {
+    output_len: u32,
+}
+
+/// The paper's semantic-aware history-based predictor.
+pub struct HistoryPredictor {
+    index: FlatIndex<HistoryRecord>,
+    /// cosine-similarity threshold (paper default 0.8)
+    pub threshold: f32,
+    /// minimum matches before trusting the retrieved distribution
+    pub min_matches: usize,
+    /// cap on distribution support (compression)
+    pub max_support: usize,
+    /// count of predictions served from history vs prior (observability)
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl HistoryPredictor {
+    pub fn new(embed_dim: usize, capacity: usize, threshold: f32) -> HistoryPredictor {
+        HistoryPredictor {
+            index: FlatIndex::new(embed_dim, capacity),
+            threshold,
+            min_matches: 5,
+            max_support: 64,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Core retrieval: matches above threshold; when too few, relax to
+    /// top-k so the sampled distribution is never degenerate.
+    fn retrieve(&self, emb: &Embedding) -> Vec<u32> {
+        let hits = self.index.search_threshold(emb, self.threshold);
+        if hits.len() >= self.min_matches {
+            return hits.into_iter().map(|(_, r)| r.output_len).collect();
+        }
+        // augment with nearest neighbours (paper: public-dataset fallback)
+        self.index
+            .search_topk(emb, self.min_matches)
+            .into_iter()
+            .map(|(_, r)| r.output_len)
+            .collect()
+    }
+}
+
+impl Predictor for HistoryPredictor {
+    fn name(&self) -> &'static str {
+        "history"
+    }
+
+    fn predict(&mut self, req: &Request) -> LengthDist {
+        let lens = self.retrieve(&req.embedding);
+        if lens.len() < self.min_matches {
+            self.misses += 1;
+            return cold_start_prior();
+        }
+        self.hits += 1;
+        let samples: Vec<f64> = lens.iter().map(|&l| l as f64).collect();
+        LengthDist::from_samples(&samples).compress(self.max_support)
+    }
+
+    fn observe(&mut self, req: &Request, output_len: u32) {
+        self.index
+            .insert(req.embedding.clone(), HistoryRecord { output_len });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Semantic-unaware history-based predictor (fig9 baseline 1)
+// ---------------------------------------------------------------------------
+
+/// History predictor that matches on *input length* instead of prompt
+/// semantics: retrieves past requests whose input length is within a
+/// relative band. Same windowing/filtering as [`HistoryPredictor`].
+pub struct LengthHistoryPredictor {
+    window: std::collections::VecDeque<(u32, u32)>, // (input_len, output_len)
+    capacity: usize,
+    /// relative half-width of the input-length band, e.g. 0.2 → ±20%
+    pub band: f64,
+    pub min_matches: usize,
+    pub max_support: usize,
+}
+
+impl LengthHistoryPredictor {
+    pub fn new(capacity: usize) -> LengthHistoryPredictor {
+        LengthHistoryPredictor {
+            window: Default::default(),
+            capacity,
+            band: 0.2,
+            min_matches: 5,
+            max_support: 64,
+        }
+    }
+}
+
+impl Predictor for LengthHistoryPredictor {
+    fn name(&self) -> &'static str {
+        "length-history"
+    }
+
+    fn predict(&mut self, req: &Request) -> LengthDist {
+        let i = req.input_len as f64;
+        let lo = i * (1.0 - self.band);
+        let hi = i * (1.0 + self.band);
+        let mut lens: Vec<f64> = self
+            .window
+            .iter()
+            .filter(|(il, _)| (*il as f64) >= lo && (*il as f64) <= hi)
+            .map(|(_, ol)| *ol as f64)
+            .collect();
+        if lens.len() < self.min_matches {
+            // relax: nearest input lengths
+            let mut all: Vec<(f64, f64)> = self
+                .window
+                .iter()
+                .map(|(il, ol)| ((*il as f64 - i).abs(), *ol as f64))
+                .collect();
+            all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            lens = all.into_iter().take(self.min_matches).map(|(_, o)| o).collect();
+        }
+        if lens.len() < self.min_matches {
+            return cold_start_prior();
+        }
+        LengthDist::from_samples(&lens).compress(self.max_support)
+    }
+
+    fn observe(&mut self, req: &Request, output_len: u32) {
+        if self.window.len() == self.capacity {
+            self.window.pop_front();
+        }
+        self.window.push_back((req.input_len, output_len));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// "LLM-based" proxy predictor (SSJF/fig9 baseline 2)
+// ---------------------------------------------------------------------------
+
+/// Emulates a fine-tuned proxy model (DistillBert in SSJF, OPT-125M in LTR).
+///
+/// Characterization (matching the paper's measurements, not the weights):
+/// the proxy observes the request's true distribution but reports a
+/// *blurred* version — its point estimate hits the true 100-token bucket
+/// with probability `bucket_accuracy` (34.1% in the paper's Fig. 2(a));
+/// otherwise it lands in a nearby bucket with geometric spread. The
+/// distribution variant (Fig. 9's "semantic-aware LLM-based" predictor with
+/// the argmax layer removed) returns a widened version of the true
+/// distribution.
+pub struct ProxyPredictor {
+    rng: Rng,
+    /// base probability of quantizing into the true bucket; the *effective*
+    /// bucket accuracy (base + lucky regression errors) calibrates to the
+    /// paper's measured 34.1% (Fig. 2(a))
+    pub bucket_accuracy: f64,
+    /// bucket width in tokens (paper: 100)
+    pub bucket_tokens: f64,
+    /// widening factor for distribution prediction (1 = exact)
+    pub blur: f64,
+    /// emulated per-prediction latency (seconds) — the paper measures
+    /// ~3.6 ms; figure 12's overhead model consumes this
+    pub latency_s: f64,
+}
+
+impl ProxyPredictor {
+    pub fn new(seed: u64) -> ProxyPredictor {
+        ProxyPredictor {
+            rng: Rng::new(seed ^ 0x9c0f_fee5),
+            bucket_accuracy: 0.30,
+            bucket_tokens: 100.0,
+            blur: 0.35,
+            latency_s: 0.0036,
+        }
+    }
+
+    /// The noisy point estimate (used by SSJF-style policies).
+    ///
+    /// Real prompt-level length regressors compress their predictions
+    /// toward the corpus mean (that is precisely why they land in the
+    /// right 100-token bucket only ~34% of the time, paper Fig. 2(a)):
+    /// the estimate shrinks `truth` toward a global prior in log space
+    /// before the lognormal regression error and bucket quantization.
+    pub fn noisy_point(&mut self, true_output: u32) -> f64 {
+        let truth = (true_output as f64).max(1.0);
+        let prior = 180.0f64; // corpus-scale mean output length
+        let shrunk = (truth.ln() * 0.5 + prior.ln() * 0.5).exp();
+        if self.rng.f64() < self.bucket_accuracy {
+            let b = (shrunk / self.bucket_tokens).floor();
+            (b + 0.5) * self.bucket_tokens
+        } else {
+            let factor = self.rng.lognormal(0.0, self.blur * 1.6);
+            (shrunk * factor).max(1.0)
+        }
+    }
+}
+
+impl Predictor for ProxyPredictor {
+    fn name(&self) -> &'static str {
+        "proxy"
+    }
+
+    fn predict(&mut self, req: &Request) -> LengthDist {
+        let base = req
+            .true_dist
+            .clone()
+            .unwrap_or_else(|| LengthDist::point(req.true_output_len.max(1) as f64));
+        // widen: scale support spread around the (noisily shifted) mean
+        let mean = base.mean();
+        let shift = self.rng.lognormal(0.0, self.blur * 0.5);
+        let target_mean = mean * shift;
+        let widened = base.map_monotonic(|v| {
+            let centered = v - mean;
+            (target_mean + centered * (1.0 + self.blur)).max(0.1) + v * 1e-9
+        });
+        widened
+    }
+
+    fn observe(&mut self, _req: &Request, _output_len: u32) {}
+
+    fn predict_point(&mut self, req: &Request) -> f64 {
+        self.noisy_point(req.true_output_len)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Oracle
+// ---------------------------------------------------------------------------
+
+/// Ground-truth oracle: returns the request's true topic distribution (or a
+/// point mass on the true output length when asked for a point).
+pub struct OraclePredictor;
+
+impl Predictor for OraclePredictor {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn predict(&mut self, req: &Request) -> LengthDist {
+        req.true_dist
+            .clone()
+            .unwrap_or_else(|| LengthDist::point(req.true_output_len.max(1) as f64))
+    }
+
+    fn observe(&mut self, _req: &Request, _output_len: u32) {}
+
+    fn predict_point(&mut self, req: &Request) -> f64 {
+        req.true_output_len.max(1) as f64
+    }
+}
+
+/// Build a predictor from config.
+pub fn make_predictor(
+    kind: crate::config::PredictorKind,
+    embed_dim: usize,
+    history_capacity: usize,
+    threshold: f32,
+    seed: u64,
+) -> Box<dyn Predictor> {
+    use crate::config::PredictorKind as K;
+    match kind {
+        K::History => Box::new(HistoryPredictor::new(embed_dim, history_capacity, threshold)),
+        K::LengthHistory => Box::new(LengthHistoryPredictor::new(history_capacity)),
+        K::Proxy => Box::new(ProxyPredictor::new(seed)),
+        K::Oracle => Box::new(OraclePredictor),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, WorkloadConfig};
+    use crate::workload::WorkloadGen;
+
+    fn make_requests(n: usize, seed: u64) -> Vec<Request> {
+        let mut cfg = WorkloadConfig::single(DatasetKind::ShareGpt);
+        cfg.n_requests = n;
+        WorkloadGen::new(cfg, seed).generate().requests
+    }
+
+    #[test]
+    fn history_cold_start_returns_prior() {
+        let reqs = make_requests(1, 1);
+        let mut p = HistoryPredictor::new(64, 100, 0.8);
+        let d = p.predict(&reqs[0]);
+        assert!(d.len() > 10); // wide prior
+        assert_eq!(p.misses, 1);
+    }
+
+    #[test]
+    fn history_learns_topic_distributions() {
+        let reqs = make_requests(800, 2);
+        let mut p = HistoryPredictor::new(64, 10_000, 0.8);
+        // warm up on the first 600
+        for r in &reqs[..600] {
+            p.observe(r, r.true_output_len);
+        }
+        // predictions for the rest should be closer (W1) to the true topic
+        // distribution than the marginal over all requests
+        let all_lens: Vec<f64> =
+            reqs[..600].iter().map(|r| r.true_output_len as f64).collect();
+        let marginal = LengthDist::from_samples(&all_lens);
+        let mut better = 0;
+        let mut total = 0;
+        for r in &reqs[600..] {
+            let pred = p.predict(r);
+            let truth = r.true_dist.as_ref().unwrap();
+            if pred.w1_distance(truth) < marginal.w1_distance(truth) {
+                better += 1;
+            }
+            total += 1;
+        }
+        assert!(
+            better as f64 / total as f64 > 0.7,
+            "only {better}/{total} better than marginal"
+        );
+    }
+
+    #[test]
+    fn history_fifo_eviction_caps_memory() {
+        let reqs = make_requests(50, 3);
+        let mut p = HistoryPredictor::new(64, 16, 0.8);
+        for r in &reqs {
+            p.observe(r, r.true_output_len);
+        }
+        assert_eq!(p.len(), 16);
+    }
+
+    #[test]
+    fn length_history_groups_by_input_len() {
+        let mut p = LengthHistoryPredictor::new(1000);
+        let reqs = make_requests(400, 4);
+        for r in &reqs[..300] {
+            p.observe(r, r.true_output_len);
+        }
+        let d = p.predict(&reqs[350]);
+        assert!(d.mean() > 0.0);
+        // must only use neighbours in input length when abundant
+        let i = reqs[350].input_len as f64;
+        let within: Vec<f64> = reqs[..300]
+            .iter()
+            .filter(|r| (r.input_len as f64) >= i * 0.8 && (r.input_len as f64) <= i * 1.2)
+            .map(|r| r.true_output_len as f64)
+            .collect();
+        if within.len() >= 5 {
+            let expect = LengthDist::from_samples(&within);
+            assert!(d.w1_distance(&expect) < 1.0 + expect.mean() * 0.35);
+        }
+    }
+
+    #[test]
+    fn proxy_bucket_accuracy_calibrated() {
+        // system-level calibration: predicted-vs-*realized* bucket accuracy
+        // over a real workload must land near the paper's 34.1% (fig2a)
+        let reqs = make_requests(4000, 5);
+        let mut p = ProxyPredictor::new(5);
+        let mut hits = 0;
+        for r in &reqs {
+            let expected = r.true_dist.as_ref().unwrap().mean();
+            let est = p.noisy_point(expected.round() as u32);
+            if (est / 100.0).floor() == (r.true_output_len / 100) as f64 {
+                hits += 1;
+            }
+        }
+        let acc = hits as f64 / reqs.len() as f64;
+        assert!(
+            (acc - 0.341).abs() < 0.12,
+            "bucket accuracy {acc} not ≈ 0.341"
+        );
+    }
+
+    #[test]
+    fn proxy_distribution_wider_than_truth() {
+        let reqs = make_requests(10, 6);
+        let mut p = ProxyPredictor::new(6);
+        let r = &reqs[0];
+        let pred = p.predict(r);
+        let truth = r.true_dist.as_ref().unwrap();
+        assert!(pred.variance() > truth.variance() * 0.9);
+    }
+
+    #[test]
+    fn oracle_returns_truth() {
+        let reqs = make_requests(5, 7);
+        let mut p = OraclePredictor;
+        let r = &reqs[0];
+        assert_eq!(p.predict(r), r.true_dist.clone().unwrap());
+        assert_eq!(p.predict_point(r), r.true_output_len as f64);
+    }
+
+    #[test]
+    fn make_predictor_constructs_all() {
+        use crate::config::PredictorKind as K;
+        for k in [K::History, K::LengthHistory, K::Proxy, K::Oracle] {
+            let p = make_predictor(k, 64, 100, 0.8, 1);
+            assert!(!p.name().is_empty());
+        }
+    }
+}

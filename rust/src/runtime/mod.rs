@@ -1,0 +1,314 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! This is the rust half of the compile bridge (see
+//! `python/compile/aot.py`): `HloModuleProto::from_text_file` parses the
+//! HLO **text** (the interchange format that survives the jax≥0.5 ↔
+//! xla_extension 0.5.1 proto-id mismatch), `PjRtClient::cpu().compile`
+//! produces an executable, and the typed wrappers below marshal
+//! tokens/caches as literals. Python is never involved at runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model/artifact metadata mirrored from `python/compile/config.py`
+/// (written to `artifacts/meta.json` by `aot.py`).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub bos_id: u32,
+    pub eos_id: u32,
+    pub pad_id: u32,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    pub decode_batch: usize,
+    pub embed_len: usize,
+}
+
+impl ModelMeta {
+    pub fn from_json(j: &Json) -> Result<ModelMeta> {
+        let need = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .map(|v| v as usize)
+                .with_context(|| format!("meta.json missing field {k}"))
+        };
+        Ok(ModelMeta {
+            vocab: need("vocab")?,
+            bos_id: need("bos_id")? as u32,
+            eos_id: need("eos_id")? as u32,
+            pad_id: need("pad_id")? as u32,
+            d_model: need("d_model")?,
+            n_layers: need("n_layers")?,
+            n_heads: need("n_heads")?,
+            d_head: need("d_head")?,
+            max_seq: need("max_seq")?,
+            prefill_len: need("prefill_len")?,
+            decode_batch: need("decode_batch")?,
+            embed_len: need("embed_len")?,
+        })
+    }
+
+    /// Elements in one KV cache tensor `[L, B, H, S, Dh]`.
+    pub fn cache_elems(&self) -> usize {
+        self.n_layers * self.decode_batch * self.n_heads * self.max_seq * self.d_head
+    }
+
+    /// Elements of one lane's slice `[H, S, Dh]` within a layer.
+    pub fn lane_elems(&self) -> usize {
+        self.n_heads * self.max_seq * self.d_head
+    }
+}
+
+/// Result of a prefill execution.
+pub struct PrefillOutput {
+    /// next-token logits, length `vocab`
+    pub logits: Vec<f32>,
+    /// per-layer K cache `[L, H, S, Dh]` flattened
+    pub k: Vec<f32>,
+    /// per-layer V cache `[L, H, S, Dh]` flattened
+    pub v: Vec<f32>,
+}
+
+/// Result of a decode execution.
+pub struct DecodeOutput {
+    /// `[B, vocab]` flattened logits
+    pub logits: Vec<f32>,
+    /// updated caches `[L, B, H, S, Dh]` flattened
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Result of a decode execution with caches kept as literals (the
+/// zero-host-copy fast path: chain these straight into the next step).
+pub struct DecodeOutputLit {
+    pub logits: Vec<f32>,
+    pub k: xla::Literal,
+    pub v: xla::Literal,
+}
+
+/// The loaded model: three compiled executables + metadata.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    meta: ModelMeta,
+    prefill: xla::PjRtLoadedExecutable,
+    decode: xla::PjRtLoadedExecutable,
+    embed: xla::PjRtLoadedExecutable,
+}
+
+fn compile(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+impl Runtime {
+    /// Load `artifacts/{prefill,decode,embed}.hlo.txt` + `meta.json`.
+    pub fn load(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir: PathBuf = artifacts_dir.into();
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json (run `make artifacts`)", dir.display()))?;
+        let meta = ModelMeta::from_json(
+            &Json::parse(&meta_text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?,
+        )?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let prefill = compile(&client, &dir.join("prefill.hlo.txt"))?;
+        let decode = compile(&client, &dir.join("decode.hlo.txt"))?;
+        let embed = compile(&client, &dir.join("embed.hlo.txt"))?;
+        Ok(Runtime { client, meta, prefill, decode, embed })
+    }
+
+    /// Whether the artifacts directory looks loadable (used by examples and
+    /// benches to fall back to the simulator gracefully).
+    pub fn artifacts_present(dir: impl AsRef<Path>) -> bool {
+        let d = dir.as_ref();
+        ["prefill.hlo.txt", "decode.hlo.txt", "embed.hlo.txt", "meta.json"]
+            .iter()
+            .all(|f| d.join(f).exists())
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn tokens_literal(&self, tokens: &[u32], len: usize) -> Result<xla::Literal> {
+        if tokens.len() > len {
+            bail!("token sequence {} exceeds compiled length {len}", tokens.len());
+        }
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        padded.resize(len, self.meta.pad_id as i32);
+        Ok(xla::Literal::vec1(&padded).reshape(&[len as i64])?)
+    }
+
+    /// Run prefill over a (≤ prefill_len) token prompt.
+    pub fn run_prefill(&self, tokens: &[u32]) -> Result<PrefillOutput> {
+        let toks = self.tokens_literal(tokens, self.meta.prefill_len)?;
+        let length = xla::Literal::from(tokens.len() as i32);
+        let result = self.prefill.execute::<xla::Literal>(&[toks, length])?[0][0]
+            .to_literal_sync()?;
+        let (logits, k, v) = result.to_tuple3()?;
+        Ok(PrefillOutput {
+            logits: logits.to_vec::<f32>()?,
+            k: k.to_vec::<f32>()?,
+            v: v.to_vec::<f32>()?,
+        })
+    }
+
+    /// Dimensions of one KV cache tensor `[L, B, H, S, Dh]`.
+    pub fn cache_dims(&self) -> Vec<usize> {
+        vec![
+            self.meta.n_layers,
+            self.meta.decode_batch,
+            self.meta.n_heads,
+            self.meta.max_seq,
+            self.meta.d_head,
+        ]
+    }
+
+    /// Build a cache literal from flattened host data (single copy).
+    pub fn cache_literal(&self, data: &[f32]) -> Result<xla::Literal> {
+        let ce = self.meta.cache_elems();
+        if data.len() != ce {
+            bail!("cache size mismatch: got {} want {ce}", data.len());
+        }
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.cache_dims(),
+            bytes,
+        )?)
+    }
+
+    /// Run one decode step over the full lane batch.
+    ///
+    /// `tokens`/`positions` have length `decode_batch`; `k`/`v` are the
+    /// flattened `[L, B, H, S, Dh]` caches. (Convenience wrapper over
+    /// [`Runtime::run_decode_lit`] — the request-path hot loop uses the
+    /// literal-chaining variant to avoid per-step host round-trips.)
+    pub fn run_decode(
+        &self,
+        tokens: &[i32],
+        positions: &[i32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<DecodeOutput> {
+        let kl = self.cache_literal(k)?;
+        let vl = self.cache_literal(v)?;
+        let out = self.run_decode_lit(tokens, positions, &kl, &vl)?;
+        Ok(DecodeOutput {
+            logits: out.logits,
+            k: out.k.to_vec::<f32>()?,
+            v: out.v.to_vec::<f32>()?,
+        })
+    }
+
+    /// Literal-chaining decode step: caches stay as XLA literals between
+    /// steps, skipping ~3 large host copies per step (§Perf L3/runtime).
+    pub fn run_decode_lit(
+        &self,
+        tokens: &[i32],
+        positions: &[i32],
+        k: &xla::Literal,
+        v: &xla::Literal,
+    ) -> Result<DecodeOutputLit> {
+        let b = self.meta.decode_batch;
+        if tokens.len() != b || positions.len() != b {
+            bail!("decode expects exactly {b} lanes");
+        }
+        let toks = xla::Literal::vec1(tokens).reshape(&[b as i64])?;
+        let pos = xla::Literal::vec1(positions).reshape(&[b as i64])?;
+        let args: [&xla::Literal; 4] = [&toks, &pos, k, v];
+        let result = self.decode.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, k2, v2) = result.to_tuple3()?;
+        Ok(DecodeOutputLit { logits: logits.to_vec::<f32>()?, k: k2, v: v2 })
+    }
+
+    /// Semantic embedding of a prompt (mean-pooled, L2-normalized).
+    pub fn run_embed(&self, tokens: &[u32]) -> Result<Vec<f32>> {
+        let n = tokens.len().min(self.meta.embed_len);
+        let toks = self.tokens_literal(&tokens[..n], self.meta.embed_len)?;
+        let length = xla::Literal::from(n as i32);
+        let result = self.embed.execute::<xla::Literal>(&[toks, length])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// An [`crate::embedding::Embedder`] backed by the compiled embed HLO —
+/// the real-model path's semantic embedder for the history predictor.
+pub struct HloEmbedder<'a> {
+    pub rt: &'a Runtime,
+}
+
+impl crate::embedding::Embedder for HloEmbedder<'_> {
+    fn embed(&mut self, text: &str) -> crate::embedding::Embedding {
+        let tokens = crate::tokenizer::encode_truncated(text, self.rt.meta.embed_len);
+        match self.rt.run_embed(&tokens) {
+            Ok(v) => crate::embedding::Embedding::normalize(v),
+            Err(_) => crate::embedding::Embedding::normalize(vec![0.0; self.rt.meta.d_model]),
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.rt.meta.d_model
+    }
+}
+
+// SAFETY: `Runtime` wraps raw PJRT pointers; the xla crate types are
+// neither Send nor Sync by default. We move a Runtime between threads and
+// share immutable references only under external serialization (the
+// coordinator owns it single-threaded; the HTTP server funnels all
+// execution through one serving thread), and the PJRT CPU client itself is
+// thread-compatible for serialized calls.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let j = Json::parse(
+            r#"{"vocab":259,"bos_id":256,"eos_id":257,"pad_id":258,
+                "d_model":64,"n_layers":2,"n_heads":4,"d_head":16,
+                "max_seq":256,"prefill_len":64,"decode_batch":8,
+                "embed_len":64,"d_ff":256,"kv_block":64,"seed":0}"#,
+        )
+        .unwrap();
+        let m = ModelMeta::from_json(&j).unwrap();
+        assert_eq!(m.vocab, 259);
+        assert_eq!(m.cache_elems(), 2 * 8 * 4 * 256 * 16);
+        assert_eq!(m.lane_elems(), 4 * 256 * 16);
+    }
+
+    #[test]
+    fn meta_missing_field_errors() {
+        let j = Json::parse(r#"{"vocab":259}"#).unwrap();
+        assert!(ModelMeta::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn artifacts_present_detects_absence() {
+        assert!(!Runtime::artifacts_present("/nonexistent-dir"));
+    }
+}

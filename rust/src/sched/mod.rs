@@ -1,0 +1,664 @@
+//! Scheduling policies (§3.3 + every baseline from §2.2 / §4.1).
+//!
+//! A [`Policy`] maps each live request to a scalar priority (smaller =
+//! served first); the coordinator re-evaluates priorities every iteration
+//! and packs the decode batch greedily under KV-memory and batch-size
+//! constraints (preempting if the policy allows it). Implemented policies:
+//!
+//! | kind             | ordering                                   | preemptive |
+//! |------------------|--------------------------------------------|-----------|
+//! | `fcfs`           | arrival time (vLLM/SGLang default)          | no  |
+//! | `fastserve`      | MLFQ with skip-join + quantum demotion      | yes |
+//! | `ssjf`           | point output-length prediction (SJF)        | no  |
+//! | `ltr`            | predicted output-length *rank* (SJF)        | no  |
+//! | `trail`          | refreshed point remaining-length (SRPT)     | yes |
+//! | `mean`           | E[remaining cost] of the cost distribution  | yes |
+//! | `gittins`        | Gittins index, computed once at admission   | yes |
+//! | `sagesched`      | Gittins index + bucketed runtime refresh    | yes |
+//! | `oracle-srpt`    | true remaining cost (upper bound)           | yes |
+
+use std::collections::HashMap;
+
+use crate::config::PolicyKind;
+use crate::core::{Phase, Request, RequestId};
+use crate::distribution::LengthDist;
+use crate::gittins::BucketedGittins;
+use crate::util::rng::Rng;
+
+/// Everything a policy may inspect about a live request. Ground truth
+/// (`req.true_output_len`) is only read by the oracle and by the emulated
+/// TRAIL/LTR predictors (see each policy's docs for the justification).
+pub struct ReqView<'a> {
+    pub req: &'a Request,
+    pub phase: Phase,
+    /// Output tokens generated so far.
+    pub generated: u32,
+    /// Predicted output-length distribution (from the configured predictor).
+    pub pred_lengths: &'a LengthDist,
+    /// Predicted service-cost distribution (cost model applied).
+    pub cost_dist: &'a LengthDist,
+    /// Point output-length prediction.
+    pub point_pred: f64,
+    /// Service cost already consumed, in cost-model units.
+    pub consumed_cost: f64,
+    /// Current time.
+    pub now: f64,
+}
+
+/// A scheduling policy.
+pub trait Policy: Send {
+    fn kind(&self) -> PolicyKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Priority of a request right now; smaller = higher priority.
+    fn priority(&mut self, v: &ReqView) -> f64;
+
+    /// Whether running requests may be displaced by higher-priority ones
+    /// (memory-pressure eviction happens regardless, vLLM-style).
+    fn preemptive(&self) -> bool {
+        true
+    }
+
+    /// Called when a request completes or is aborted — drop per-id state.
+    fn forget(&mut self, _id: RequestId) {}
+}
+
+// ---------------------------------------------------------------------------
+// FCFS
+// ---------------------------------------------------------------------------
+
+/// First-come-first-serve: vLLM / SGLang production default.
+#[derive(Default)]
+pub struct FcfsPolicy;
+
+impl Policy for FcfsPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Fcfs
+    }
+
+    fn priority(&mut self, v: &ReqView) -> f64 {
+        v.req.arrival
+    }
+
+    fn preemptive(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FastServe (MLFQ)
+// ---------------------------------------------------------------------------
+
+/// FastServe's skip-join multi-level feedback queue.
+///
+/// Quantum at level k is `quantum_tokens * 2^k` output tokens; a request
+/// exhausting its quantum is demoted. Skip-join: long prompts enter below
+/// the top queue (their "first iteration" — prefill — already exceeds the
+/// top quanta). Approximates SRPT without predictions, at the price of
+/// interleaving every job (the paper's Fig. 7 shows the TTLT cost).
+pub struct FastServePolicy {
+    pub quantum_tokens: u32,
+    pub levels: usize,
+    state: HashMap<RequestId, MlfqState>,
+}
+
+struct MlfqState {
+    level: u32,
+    served_in_level: u32,
+    last_generated: u32,
+}
+
+impl FastServePolicy {
+    pub fn new(quantum_tokens: u32, levels: usize) -> FastServePolicy {
+        assert!(quantum_tokens >= 1 && levels >= 2);
+        FastServePolicy { quantum_tokens, levels, state: HashMap::new() }
+    }
+
+    fn entry_level(&self, input_len: u32) -> u32 {
+        // skip-join: enter the queue whose quantum covers the prompt cost
+        let mut level = 0u32;
+        let mut q = self.quantum_tokens * 4; // prefill tokens ≈ 4x decode rate
+        while input_len > q && (level as usize) < self.levels - 1 {
+            level += 1;
+            q *= 2;
+        }
+        level
+    }
+}
+
+impl Policy for FastServePolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::FastServe
+    }
+
+    fn priority(&mut self, v: &ReqView) -> f64 {
+        let entry = self.entry_level(v.req.input_len);
+        let levels = self.levels;
+        let quantum = self.quantum_tokens;
+        let st = self.state.entry(v.req.id).or_insert(MlfqState {
+            level: entry,
+            served_in_level: 0,
+            last_generated: v.generated,
+        });
+        // account service since last look; demote when quantum exhausted
+        let newly = v.generated.saturating_sub(st.last_generated);
+        st.last_generated = v.generated;
+        st.served_in_level += newly;
+        let mut q = quantum << st.level;
+        while st.served_in_level >= q && (st.level as usize) < levels - 1 {
+            st.served_in_level -= q;
+            st.level += 1;
+            q = quantum << st.level;
+        }
+        // order: level first, FCFS within level
+        st.level as f64 * 1e9 + v.req.arrival
+    }
+
+    fn forget(&mut self, id: RequestId) {
+        self.state.remove(&id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SSJF
+// ---------------------------------------------------------------------------
+
+/// Speculative shortest-job-first (Qiu et al. 2024): order the queue by a
+/// proxy model's *point* output-length prediction; non-preemptive.
+/// The point prediction comes from the coordinator's predictor
+/// (`v.point_pred`), which for the Proxy predictor reproduces the paper's
+/// DistillBert error profile.
+#[derive(Default)]
+pub struct SsjfPolicy {
+    cached: HashMap<RequestId, f64>,
+}
+
+impl Policy for SsjfPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Ssjf
+    }
+
+    fn priority(&mut self, v: &ReqView) -> f64 {
+        // the prediction is made once at arrival and kept stable
+        *self.cached.entry(v.req.id).or_insert(v.point_pred)
+    }
+
+    fn preemptive(&self) -> bool {
+        false
+    }
+
+    fn forget(&mut self, id: RequestId) {
+        self.cached.remove(&id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LTR (learning-to-rank)
+// ---------------------------------------------------------------------------
+
+/// Learning-to-rank SJF (Fu et al. 2024): an OPT-125M ranker predicts the
+/// *relative order* of output lengths rather than their values.
+///
+/// Emulation: a prompt-level ranker can at best order requests by their
+/// *expected* output length (the realized length of a bimodal generation
+/// is not a function of the prompt) — so the score is
+/// `ln(E[O | prompt]) + N(0, σ)` with σ calibrated to the paper's
+/// reported Kendall-τ ≈ 0.85 ordering quality on expectations. Only the
+/// ordering of scores is consumed, matching the method.
+pub struct LtrPolicy {
+    rng: Rng,
+    pub sigma: f64,
+    cached: HashMap<RequestId, f64>,
+}
+
+impl LtrPolicy {
+    pub fn new(seed: u64) -> LtrPolicy {
+        LtrPolicy { rng: Rng::new(seed ^ 0x117a), sigma: 0.45, cached: HashMap::new() }
+    }
+}
+
+impl Policy for LtrPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Ltr
+    }
+
+    fn priority(&mut self, v: &ReqView) -> f64 {
+        let sigma = self.sigma;
+        let rng = &mut self.rng;
+        let expected = v
+            .req
+            .true_dist
+            .as_ref()
+            .map(|d| d.mean())
+            .unwrap_or(v.req.true_output_len.max(1) as f64);
+        *self
+            .cached
+            .entry(v.req.id)
+            .or_insert_with(|| expected.max(1.0).ln() + sigma * rng.normal())
+    }
+
+    fn preemptive(&self) -> bool {
+        false
+    }
+
+    fn forget(&mut self, id: RequestId) {
+        self.cached.remove(&id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TRAIL
+// ---------------------------------------------------------------------------
+
+/// TRAIL (Shahout et al. 2025): preemptive SRPT on a point prediction of
+/// the *remaining* output length, refreshed at iteration granularity from
+/// layer embeddings.
+///
+/// Emulation with an honest information model: at any step the embedding
+/// predictor can know (a) the statistics of the remaining length *given
+/// survival so far* — i.e. the conditional mean, not the realized value,
+/// which for a bimodal generation is simply not encoded in the prompt —
+/// and (b) a near-end signal once the reply is actually wrapping up
+/// (`end_window` tokens), which hidden states do carry. Both channels get
+/// lognormal noise; estimates refresh every `refresh_tokens` to capture
+/// iteration-level refinement without per-step thrash.
+pub struct TrailPolicy {
+    rng: Rng,
+    pub sigma: f64,
+    pub refresh_tokens: u32,
+    /// window in which the "about to end" signal becomes visible
+    pub end_window: u32,
+    cached: HashMap<RequestId, (u32, f64)>, // (bucket, noisy remaining)
+}
+
+impl TrailPolicy {
+    pub fn new(seed: u64) -> TrailPolicy {
+        TrailPolicy {
+            rng: Rng::new(seed ^ 0x7ea11),
+            sigma: 0.30,
+            refresh_tokens: 32,
+            end_window: 32,
+            cached: HashMap::new(),
+        }
+    }
+
+    fn estimate(&mut self, v: &ReqView) -> f64 {
+        let true_rem = v.req.true_output_len.saturating_sub(v.generated).max(1) as f64;
+        let base = if true_rem <= self.end_window as f64 {
+            // near-end signal: embeddings reveal the reply is wrapping up
+            true_rem
+        } else {
+            // conditional mean remaining given survival to `generated`
+            v.req
+                .true_dist
+                .as_ref()
+                .and_then(|d| d.conditional_excess(v.generated as f64))
+                .map(|rem| rem.mean())
+                .unwrap_or(true_rem)
+        };
+        base * (self.sigma * self.rng.normal()).exp()
+    }
+}
+
+impl Policy for TrailPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Trail
+    }
+
+    fn priority(&mut self, v: &ReqView) -> f64 {
+        let bucket = v.generated / self.refresh_tokens;
+        match self.cached.get(&v.req.id) {
+            Some(&(b, val)) if b == bucket => val,
+            _ => {
+                let val = self.estimate(v);
+                self.cached.insert(v.req.id, (bucket, val));
+                val
+            }
+        }
+    }
+
+    fn forget(&mut self, id: RequestId) {
+        self.cached.remove(&id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mean-of-distribution (fig11 baseline)
+// ---------------------------------------------------------------------------
+
+/// Order by the *expected remaining cost* of the predicted cost
+/// distribution (the "Mean" baseline the paper's Fig. 6/11 shows is
+/// inferior to Gittins).
+#[derive(Default)]
+pub struct MeanCostPolicy;
+
+impl Policy for MeanCostPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::MeanCost
+    }
+
+    fn priority(&mut self, v: &ReqView) -> f64 {
+        match v.cost_dist.conditional_excess(v.consumed_cost) {
+            Some(rem) => rem.mean(),
+            // overdue: park behind predictable jobs (see gittins_index_at_age)
+            None => v.consumed_cost + v.cost_dist.mean().max(1.0),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gittins (static) and SageSched (bucketed refresh)
+// ---------------------------------------------------------------------------
+
+/// Gittins-index ordering computed once at admission, never refreshed
+/// (fig11's "Gittins" baseline isolating the value of runtime refresh).
+#[derive(Default)]
+pub struct GittinsStaticPolicy {
+    cached: HashMap<RequestId, f64>,
+}
+
+impl Policy for GittinsStaticPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::GittinsStatic
+    }
+
+    fn priority(&mut self, v: &ReqView) -> f64 {
+        *self
+            .cached
+            .entry(v.req.id)
+            .or_insert_with(|| crate::gittins::gittins_index(v.cost_dist))
+    }
+
+    fn forget(&mut self, id: RequestId) {
+        self.cached.remove(&id);
+    }
+}
+
+/// The full SageSched policy: Gittins index over the predicted cost
+/// distribution, conditioned on consumed cost, refreshed at bucket
+/// boundaries (default 200 output tokens).
+pub struct SageSchedPolicy {
+    pub bucket_tokens: u32,
+    state: HashMap<RequestId, BucketedGittins>,
+    /// total number of Gittins evaluations (fig12/13 observability)
+    pub refreshes: u64,
+}
+
+impl SageSchedPolicy {
+    pub fn new(bucket_tokens: u32) -> SageSchedPolicy {
+        SageSchedPolicy { bucket_tokens, state: HashMap::new(), refreshes: 0 }
+    }
+}
+
+impl Policy for SageSchedPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::SageSched
+    }
+
+    fn priority(&mut self, v: &ReqView) -> f64 {
+        let st = self
+            .state
+            .entry(v.req.id)
+            .or_insert_with(|| BucketedGittins::new(v.cost_dist.clone(), self.bucket_tokens));
+        let before = st.refresh_count;
+        let g = st.index(v.generated, v.consumed_cost);
+        self.refreshes += (st.refresh_count - before) as u64;
+        g
+    }
+
+    fn forget(&mut self, id: RequestId) {
+        self.state.remove(&id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Oracle SRPT
+// ---------------------------------------------------------------------------
+
+/// True-remaining-cost SRPT: the information-theoretic upper bound all
+/// prediction-based schedulers chase.
+pub struct OracleSrptPolicy {
+    cost: Box<dyn crate::cost::CostModel>,
+}
+
+impl OracleSrptPolicy {
+    pub fn new(cost: Box<dyn crate::cost::CostModel>) -> OracleSrptPolicy {
+        OracleSrptPolicy { cost }
+    }
+}
+
+impl Policy for OracleSrptPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::OracleSrpt
+    }
+
+    fn priority(&mut self, v: &ReqView) -> f64 {
+        let total = self.cost.cost(v.req.input_len, v.req.true_output_len as f64);
+        (total - v.consumed_cost).max(0.0)
+    }
+}
+
+/// Build a policy from config.
+pub fn make_policy(cfg: &crate::config::ExperimentConfig) -> Box<dyn Policy> {
+    match cfg.policy {
+        PolicyKind::Fcfs => Box::new(FcfsPolicy),
+        PolicyKind::FastServe => {
+            Box::new(FastServePolicy::new(cfg.mlfq_quantum.max(1.0) as u32, cfg.mlfq_levels))
+        }
+        PolicyKind::Ssjf => Box::new(SsjfPolicy::default()),
+        PolicyKind::Ltr => Box::new(LtrPolicy::new(cfg.seed)),
+        PolicyKind::Trail => Box::new(TrailPolicy::new(cfg.seed)),
+        PolicyKind::MeanCost => Box::new(MeanCostPolicy),
+        PolicyKind::GittinsStatic => Box::new(GittinsStaticPolicy::default()),
+        PolicyKind::SageSched => Box::new(SageSchedPolicy::new(cfg.bucket_tokens)),
+        PolicyKind::OracleSrpt => {
+            Box::new(OracleSrptPolicy::new(crate::cost::make_cost_model(cfg.cost_model)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetKind;
+    use crate::cost::{CostModel, ResourceBoundCost};
+    use crate::embedding::Embedding;
+
+    fn req(id: u64, arrival: f64, input: u32, output: u32) -> Request {
+        Request {
+            id,
+            prompt: String::new(),
+            input_len: input,
+            true_output_len: output,
+            arrival,
+            dataset: DatasetKind::ShareGpt,
+            topic: 0,
+            embedding: Embedding::normalize(vec![1.0]),
+            true_dist: Some(LengthDist::point(output as f64)),
+        }
+    }
+
+    fn view<'a>(
+        r: &'a Request,
+        generated: u32,
+        pred: &'a LengthDist,
+        cost: &'a LengthDist,
+    ) -> ReqView<'a> {
+        let cm = ResourceBoundCost;
+        ReqView {
+            req: r,
+            phase: Phase::Running,
+            generated,
+            pred_lengths: pred,
+            cost_dist: cost,
+            point_pred: pred.mean(),
+            consumed_cost: cm.consumed(r.input_len, generated),
+            now: 0.0,
+        }
+    }
+
+    #[test]
+    fn fcfs_orders_by_arrival() {
+        let mut p = FcfsPolicy;
+        let (r1, r2) = (req(1, 5.0, 10, 10), req(2, 3.0, 10, 10));
+        let d = LengthDist::point(10.0);
+        assert!(p.priority(&view(&r2, 0, &d, &d)) < p.priority(&view(&r1, 0, &d, &d)));
+        assert!(!p.preemptive());
+    }
+
+    #[test]
+    fn fastserve_demotes_after_quantum() {
+        let mut p = FastServePolicy::new(32, 4);
+        let r = req(1, 1.0, 10, 1000);
+        let d = LengthDist::point(100.0);
+        let p0 = p.priority(&view(&r, 0, &d, &d));
+        let p1 = p.priority(&view(&r, 10, &d, &d)); // within quantum
+        assert_eq!(p0, p1);
+        let p2 = p.priority(&view(&r, 40, &d, &d)); // exceeded 32
+        assert!(p2 > p1 + 1e8, "expected demotion: {p1} -> {p2}");
+    }
+
+    #[test]
+    fn fastserve_skip_join_long_prompts_enter_lower() {
+        let p = FastServePolicy::new(32, 6);
+        assert_eq!(p.entry_level(50), 0);
+        assert!(p.entry_level(2000) > 0);
+        assert!(p.entry_level(2000) <= 5);
+    }
+
+    #[test]
+    fn ssjf_uses_stable_point_prediction() {
+        let mut p = SsjfPolicy::default();
+        let r = req(1, 0.0, 10, 100);
+        let d_small = LengthDist::point(50.0);
+        let first = p.priority(&view(&r, 0, &d_small, &d_small));
+        // later calls keep the cached value even if the view changes
+        let d_big = LengthDist::point(500.0);
+        let second = p.priority(&view(&r, 5, &d_big, &d_big));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn trail_tracks_remaining_and_refreshes() {
+        let mut p = TrailPolicy::new(1);
+        let r = req(1, 0.0, 10, 500);
+        let d = LengthDist::point(500.0);
+        let early = p.priority(&view(&r, 0, &d, &d));
+        let late = p.priority(&view(&r, 480, &d, &d));
+        assert!(late < early, "remaining must shrink: {early} -> {late}");
+        // within a refresh bucket the value is stable
+        let a = p.priority(&view(&r, 100, &d, &d));
+        let b = p.priority(&view(&r, 101, &d, &d));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ltr_orders_mostly_by_true_length() {
+        let mut p = LtrPolicy::new(3);
+        let d = LengthDist::point(1.0);
+        let mut correct = 0;
+        let n = 500;
+        for i in 0..n {
+            let short = req(i * 2, 0.0, 10, 50);
+            let long = req(i * 2 + 1, 0.0, 10, 800);
+            let ps = p.priority(&view(&short, 0, &d, &d));
+            let pl = p.priority(&view(&long, 0, &d, &d));
+            if ps < pl {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / n as f64;
+        assert!(acc > 0.9, "pairwise ordering accuracy {acc}");
+    }
+
+    #[test]
+    fn sagesched_prefers_likely_quick_finisher() {
+        let mut p = SageSchedPolicy::new(200);
+        let cm = ResourceBoundCost;
+        let ra = req(1, 0.0, 10, 100);
+        let rb = req(2, 0.0, 10, 100);
+        // A: concentrated at 100; B: bimodal 10-or-400 (fig6 shape)
+        let da = LengthDist::from_weighted(&[(80.0, 0.5), (120.0, 0.5)]);
+        let db = LengthDist::from_weighted(&[(10.0, 0.6), (400.0, 0.4)]);
+        let ca = cm.cost_dist(10, &da);
+        let cb = cm.cost_dist(10, &db);
+        let pa = p.priority(&view(&ra, 0, &da, &ca));
+        let pb = p.priority(&view(&rb, 0, &db, &cb));
+        assert!(pb < pa, "gittins must prefer the bimodal early-exit: {pb} vs {pa}");
+    }
+
+    #[test]
+    fn sagesched_refresh_raises_overdue_priority_value() {
+        let mut p = SageSchedPolicy::new(10);
+        let cm = ResourceBoundCost;
+        let r = req(1, 0.0, 10, 500);
+        let d = LengthDist::from_weighted(&[(20.0, 0.7), (500.0, 0.3)]);
+        let c = cm.cost_dist(10, &d);
+        let v0 = view(&r, 0, &d, &c);
+        let g0 = p.priority(&v0);
+        // after 30 generated tokens the cheap branch is dead; index jumps
+        let v1 = view(&r, 30, &d, &c);
+        let g1 = p.priority(&v1);
+        assert!(g1 > g0, "{g0} -> {g1}");
+        assert!(p.refreshes >= 2);
+    }
+
+    #[test]
+    fn gittins_static_never_refreshes() {
+        let mut p = GittinsStaticPolicy::default();
+        let cm = ResourceBoundCost;
+        let r = req(1, 0.0, 10, 500);
+        let d = LengthDist::from_weighted(&[(20.0, 0.7), (500.0, 0.3)]);
+        let c = cm.cost_dist(10, &d);
+        let g0 = p.priority(&view(&r, 0, &d, &c));
+        let g1 = p.priority(&view(&r, 400, &d, &c));
+        assert_eq!(g0, g1);
+    }
+
+    #[test]
+    fn mean_policy_uses_conditional_mean() {
+        let mut p = MeanCostPolicy;
+        let r = req(1, 0.0, 0, 100);
+        let d = LengthDist::from_weighted(&[(10.0, 0.5), (100.0, 0.5)]);
+        // with zero consumed: mean = 55; after consuming 50: remaining = 50
+        let v0 = ReqView {
+            req: &r,
+            phase: Phase::Running,
+            generated: 0,
+            pred_lengths: &d,
+            cost_dist: &d,
+            point_pred: d.mean(),
+            consumed_cost: 0.0,
+            now: 0.0,
+        };
+        assert!((p.priority(&v0) - 55.0).abs() < 1e-9);
+        let v1 = ReqView { consumed_cost: 50.0, ..v0 };
+        assert!((p.priority(&v1) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oracle_srpt_is_exact() {
+        let mut p = OracleSrptPolicy::new(Box::new(ResourceBoundCost));
+        let r = req(1, 0.0, 10, 100);
+        let d = LengthDist::point(1.0);
+        let cm = ResourceBoundCost;
+        let v = view(&r, 40, &d, &d);
+        let expect = cm.cost(10, 100.0) - cm.consumed(10, 40);
+        assert!((p.priority(&v) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn make_policy_builds_all_kinds() {
+        for kind in PolicyKind::ALL {
+            let cfg = crate::config::ExperimentConfig {
+                policy: kind,
+                ..Default::default()
+            };
+            let p = make_policy(&cfg);
+            assert_eq!(p.kind(), kind);
+        }
+    }
+}

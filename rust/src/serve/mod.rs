@@ -1,0 +1,706 @@
+//! The serving coordinator: continuous batching + admission + preemption.
+//!
+//! One iteration of the loop (vLLM-style iteration-level scheduling):
+//!
+//! 1. ingest arrivals up to the current time; predict each new request's
+//!    output-length distribution and derive its cost distribution;
+//! 2. ask the [`crate::sched::Policy`] for every live request's priority;
+//! 3. pack the decode batch greedily in priority order under the KV-memory
+//!    and batch-size constraints ([`crate::kvcache::KvManager`] does the
+//!    block math);
+//! 4. preempt running requests that lost their slot (swap-out or drop);
+//!    prefill / swap-in newly admitted ones (exclusive, charged to the
+//!    engine clock);
+//! 5. run one decode step on the [`crate::engine::Engine`]; record emitted
+//!    tokens, completions (TTFT/TTLT), and feed completions back to the
+//!    predictor (the history window learns online).
+//!
+//! The same loop drives the simulator and the real PJRT engine.
+
+use std::time::Instant;
+
+use crate::config::{ExperimentConfig, PreemptMode};
+use crate::core::{Phase, Request, RequestOutcome};
+use crate::cost::CostModel;
+use crate::distribution::LengthDist;
+use crate::engine::{Engine, LaneState, SimEngine};
+use crate::kvcache::{KvManager, KvResidence};
+use crate::metrics::RunReport;
+use crate::predictor::Predictor;
+use crate::sched::{Policy, ReqView};
+use crate::workload::WorkloadGen;
+
+/// KV block size in tokens (vLLM default 16).
+pub const KV_BLOCK_TOKENS: usize = 16;
+
+/// A live request inside the coordinator.
+struct Live {
+    req: Request,
+    phase: Phase,
+    generated: u32,
+    first_token: Option<f64>,
+    preemptions: u32,
+    pred_lengths: LengthDist,
+    cost_dist: LengthDist,
+    point_pred: f64,
+    priority: f64,
+}
+
+/// The coordinator: generic over the engine type (simulator or the real
+/// PJRT engine), with boxed policy/predictor/cost-model strategies.
+pub struct Coordinator<E: Engine> {
+    pub engine: E,
+    pub policy: Box<dyn Policy>,
+    pub predictor: Box<dyn Predictor>,
+    pub cost_model: Box<dyn CostModel>,
+    pub kv: KvManager,
+    pub preempt_mode: PreemptMode,
+    /// uniform-noise mixing weight for fig11 (0 = off)
+    pub noise_mix: f64,
+    /// IO-aware preemption margin: a pending challenger must beat a running
+    /// request's priority by this relative factor to displace it
+    /// (paper appendix, SageSched aspect (iii); 0 = plain priority order)
+    pub preempt_hysteresis: f64,
+    /// IO-aware preemption: running requests predicted to finish within
+    /// this many tokens are never displaced (0 = off)
+    pub preempt_finish_guard: u32,
+    /// Admission control: reject submissions once this many requests are
+    /// live (0 = unbounded)
+    pub max_queue: usize,
+    /// Abort requests still queued after this many seconds (0 = never)
+    pub request_timeout: f64,
+    now: f64,
+    live: Vec<Live>,
+    outcomes: Vec<RequestOutcome>,
+    /// requests rejected at admission (queue full)
+    pub rejected: u64,
+    /// requests aborted after timing out in the queue
+    pub aborted: u64,
+    preemption_count: u64,
+    predict_overhead: f64,
+    sched_overhead: f64,
+    /// Called for each completion *before* the engine evicts the request
+    /// (the HTTP server uses this to pull generated text out of the real
+    /// engine).
+    #[allow(clippy::type_complexity)]
+    pub on_complete: Option<Box<dyn FnMut(&RequestOutcome, &mut E) + Send>>,
+}
+
+impl<E: Engine> Coordinator<E> {
+    pub fn new(
+        engine: E,
+        policy: Box<dyn Policy>,
+        predictor: Box<dyn Predictor>,
+        cost_model: Box<dyn CostModel>,
+        preempt_mode: PreemptMode,
+    ) -> Coordinator<E> {
+        let kv = KvManager::new(engine.kv_capacity(), KV_BLOCK_TOKENS);
+        Coordinator {
+            engine,
+            policy,
+            predictor,
+            cost_model,
+            kv,
+            preempt_mode,
+            noise_mix: 0.0,
+            preempt_hysteresis: 0.0,
+            preempt_finish_guard: 0,
+            max_queue: 0,
+            request_timeout: 0.0,
+            now: 0.0,
+            live: Vec::new(),
+            outcomes: Vec::new(),
+            rejected: 0,
+            aborted: 0,
+            preemption_count: 0,
+            predict_overhead: 0.0,
+            sched_overhead: 0.0,
+            on_complete: None,
+        }
+    }
+
+    /// Advance the clock to (at least) `t` — the real-time server uses this
+    /// to keep coordinator time aligned with wallclock.
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn outcomes(&self) -> &[RequestOutcome] {
+        &self.outcomes
+    }
+
+    /// Admit one request (predict + derive cost distribution). Returns
+    /// false (rejecting the request) when admission control is enabled and
+    /// the live set is full.
+    pub fn submit(&mut self, req: Request) -> bool {
+        if self.max_queue > 0 && self.live.len() >= self.max_queue {
+            self.rejected += 1;
+            return false;
+        }
+        let t0 = Instant::now();
+        let mut pred = self.predictor.predict(&req);
+        let point = self.predictor.predict_point(&req);
+        self.predict_overhead += t0.elapsed().as_secs_f64();
+        if self.noise_mix > 0.0 {
+            let noise = LengthDist::uniform(1.0, (pred.max() * 2.0).max(64.0), 24);
+            pred = pred.mix(&noise, self.noise_mix);
+        }
+        let cost_dist = self.cost_model.cost_dist(req.input_len, &pred);
+        self.live.push(Live {
+            req,
+            phase: Phase::Queued,
+            generated: 0,
+            first_token: None,
+            preemptions: 0,
+            pred_lengths: pred,
+            cost_dist,
+            point_pred: point,
+            priority: f64::INFINITY,
+        });
+        true
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Blocks a request needs to take its next decode token.
+    fn blocks_needed(&self, l: &Live) -> usize {
+        ((l.req.input_len + l.generated) as usize + 1).div_ceil(KV_BLOCK_TOKENS)
+    }
+
+    /// Drop queued requests that have exceeded the configured timeout.
+    fn expire_timeouts(&mut self) {
+        if self.request_timeout <= 0.0 {
+            return;
+        }
+        let deadline = self.request_timeout;
+        let now = self.now;
+        let mut i = 0;
+        while i < self.live.len() {
+            let l = &self.live[i];
+            // only never-scheduled requests time out (engine holds no state)
+            if l.phase == Phase::Queued
+                && l.generated == 0
+                && now - l.req.arrival > deadline
+            {
+                let l = self.live.swap_remove(i);
+                self.policy.forget(l.req.id);
+                self.aborted += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// One scheduling + execution iteration. Returns false when nothing is
+    /// live (caller should advance time to the next arrival).
+    pub fn step(&mut self) -> anyhow::Result<bool> {
+        self.expire_timeouts();
+        if self.live.is_empty() {
+            return Ok(false);
+        }
+        // --- priorities -------------------------------------------------
+        let t0 = Instant::now();
+        for l in &mut self.live {
+            let consumed = self.cost_model.consumed(l.req.input_len, l.generated);
+            let view = ReqView {
+                req: &l.req,
+                phase: l.phase,
+                generated: l.generated,
+                pred_lengths: &l.pred_lengths,
+                cost_dist: &l.cost_dist,
+                point_pred: l.point_pred,
+                consumed_cost: consumed,
+                now: self.now,
+            };
+            l.priority = self.policy.priority(&view);
+        }
+        // --- selection ---------------------------------------------------
+        // IO-aware preemption (paper appendix, aspect (iii)): running
+        // requests get (a) a relative hysteresis margin — challengers must
+        // clearly win, not tie-break-flip — and (b) a finish guard: a
+        // request about to drain is never swapped (the swap IO would exceed
+        // its remaining occupancy).
+        let preemptive = self.policy.preemptive();
+        let hyst = self.preempt_hysteresis;
+        let guard = self.preempt_finish_guard;
+        let eff_priority = |l: &Live| -> f64 {
+            if l.phase != Phase::Running {
+                return l.priority;
+            }
+            if guard > 0 {
+                let remaining = l.point_pred - l.generated as f64;
+                if remaining > 0.0 && remaining <= guard as f64 {
+                    return f64::NEG_INFINITY;
+                }
+            }
+            l.priority - l.priority.abs() * hyst
+        };
+        let mut order: Vec<usize> = (0..self.live.len()).collect();
+        order.sort_by(|&a, &b| {
+            let la = &self.live[a];
+            let lb = &self.live[b];
+            let ka = if !preemptive && la.phase == Phase::Running { 0 } else { 1 };
+            let kb = if !preemptive && lb.phase == Phase::Running { 0 } else { 1 };
+            // Non-preemptive policies order their *running* set by arrival
+            // (vLLM semantics: memory-pressure eviction drops the newest
+            // running request, regardless of the admission-queue metric) —
+            // otherwise an SJF queue metric would silently gain SRPT-grade
+            // eviction choices real engines don't give it.
+            let pa = if ka == 0 { la.req.arrival } else { eff_priority(la) };
+            let pb = if kb == 0 { lb.req.arrival } else { eff_priority(lb) };
+            ka.cmp(&kb)
+                .then(pa.partial_cmp(&pb).unwrap())
+                .then(la.req.arrival.partial_cmp(&lb.req.arrival).unwrap())
+                .then(la.req.id.cmp(&lb.req.id))
+        });
+        let max_batch = self.engine.max_batch();
+        let total_blocks = self.kv.total_blocks();
+        let mut planned_blocks = 0usize;
+        let mut selected: Vec<usize> = Vec::new();
+        for &i in &order {
+            if selected.len() >= max_batch {
+                break;
+            }
+            let need = self.blocks_needed(&self.live[i]);
+            if planned_blocks + need <= total_blocks {
+                planned_blocks += need;
+                selected.push(i);
+            }
+        }
+        self.sched_overhead += t0.elapsed().as_secs_f64();
+        let selected_set: std::collections::HashSet<usize> = selected.iter().copied().collect();
+
+        // --- preempt running requests that lost their slot ---------------
+        for i in 0..self.live.len() {
+            if self.live[i].phase == Phase::Running && !selected_set.contains(&i) {
+                self.preempt(i);
+            }
+        }
+
+        // --- admit: prefill / swap-in / grow ------------------------------
+        // (sorted so highest priority admits first; all fit by construction)
+        for &i in &selected {
+            match self.live[i].phase {
+                Phase::Running => {
+                    let tokens = (self.live[i].req.input_len + self.live[i].generated) as usize + 1;
+                    let ok = self.kv.grow_to(self.live[i].req.id, tokens);
+                    debug_assert!(ok, "planned growth must fit");
+                }
+                Phase::Queued => self.admit_fresh(i)?,
+                Phase::Preempted => self.resume(i)?,
+                Phase::Done => unreachable!(),
+            }
+        }
+
+        // --- decode step ---------------------------------------------------
+        let mut lane_idx: Vec<usize> = selected
+            .iter()
+            .copied()
+            .filter(|&i| self.live[i].phase == Phase::Running)
+            .collect();
+        lane_idx.sort_unstable();
+        if lane_idx.is_empty() {
+            // every selected request finished during prefill
+            self.collect_finished();
+            return Ok(true);
+        }
+        let mut lanes: Vec<LaneState> = lane_idx
+            .iter()
+            .map(|&i| LaneState::new(&self.live[i].req, self.live[i].generated))
+            .collect();
+        let resident = self.kv.resident_tokens();
+        let elapsed = self.engine.decode_step(&mut lanes, resident)?;
+        self.now += elapsed;
+        for (k, &i) in lane_idx.iter().enumerate() {
+            let lane = &lanes[k];
+            let l = &mut self.live[i];
+            l.generated = lane.generated;
+            if lane.emitted && l.first_token.is_none() {
+                l.first_token = Some(self.now);
+            }
+            if lane.finished {
+                l.phase = Phase::Done;
+            }
+        }
+        self.collect_finished();
+        Ok(true)
+    }
+
+    fn preempt(&mut self, i: usize) {
+        let id = self.live[i].req.id;
+        match self.preempt_mode {
+            PreemptMode::Swap => {
+                let tokens = self.kv.swap_out(id);
+                let dt = self.engine.swap_time(tokens);
+                self.now += dt;
+                self.engine.charge_swap(dt);
+            }
+            PreemptMode::Recompute => {
+                self.kv.drop_seq(id);
+                self.engine.preempt_release(id);
+            }
+        }
+        self.live[i].phase = Phase::Preempted;
+        self.live[i].preemptions += 1;
+        self.preemption_count += 1;
+    }
+
+    fn admit_fresh(&mut self, i: usize) -> anyhow::Result<()> {
+        let id = self.live[i].req.id;
+        let tokens = self.live[i].req.input_len as usize + 1;
+        let ok = self.kv.grow_to(id, tokens);
+        debug_assert!(ok, "planned admission must fit");
+        let pr = self.engine.prefill(&self.live[i].req)?;
+        self.now += pr.elapsed;
+        let l = &mut self.live[i];
+        l.generated = 1; // prefill emits the first token
+        l.first_token = Some(self.now);
+        l.phase = if pr.finished { Phase::Done } else { Phase::Running };
+        Ok(())
+    }
+
+    fn resume(&mut self, i: usize) -> anyhow::Result<()> {
+        let id = self.live[i].req.id;
+        match self.preempt_mode {
+            PreemptMode::Swap => {
+                if self.kv.residence(id) == Some(KvResidence::Swapped) {
+                    let tokens = self.kv.swap_in(id).expect("planned swap-in must fit");
+                    let dt = self.engine.swap_time(tokens);
+                    self.now += dt;
+                    self.engine.charge_swap(dt);
+                    // also grow for the next token
+                    let want = (self.live[i].req.input_len + self.live[i].generated) as usize + 1;
+                    let ok = self.kv.grow_to(id, want);
+                    debug_assert!(ok);
+                } else {
+                    // swapped state lost (shouldn't happen) — recompute
+                    self.recompute_resume(i)?;
+                }
+            }
+            PreemptMode::Recompute => self.recompute_resume(i)?,
+        }
+        self.live[i].phase = Phase::Running;
+        Ok(())
+    }
+
+    /// Recompute-mode resume: re-prefill prompt + generated prefix.
+    fn recompute_resume(&mut self, i: usize) -> anyhow::Result<()> {
+        let l = &self.live[i];
+        let id = l.req.id;
+        let tokens = (l.req.input_len + l.generated) as usize + 1;
+        let ok = self.kv.grow_to(id, tokens);
+        debug_assert!(ok);
+        // charge a prefill over the full prefix (prompt + generated)
+        let mut fake = l.req.clone();
+        fake.input_len += l.generated;
+        let pr = self.engine.prefill(&fake)?;
+        self.now += pr.elapsed;
+        Ok(())
+    }
+
+    fn collect_finished(&mut self) {
+        let mut i = 0;
+        while i < self.live.len() {
+            if self.live[i].phase == Phase::Done {
+                let l = self.live.swap_remove(i);
+                self.kv.release(l.req.id);
+                self.policy.forget(l.req.id);
+                let t0 = Instant::now();
+                self.predictor.observe(&l.req, l.generated);
+                self.predict_overhead += t0.elapsed().as_secs_f64();
+                let outcome = RequestOutcome {
+                    id: l.req.id,
+                    dataset: l.req.dataset,
+                    input_len: l.req.input_len,
+                    output_len: l.generated,
+                    arrival: l.req.arrival,
+                    first_token: l.first_token.unwrap_or(self.now),
+                    completion: self.now,
+                    preemptions: l.preemptions,
+                };
+                if let Some(cb) = self.on_complete.as_mut() {
+                    cb(&outcome, &mut self.engine);
+                }
+                self.engine.evict(l.req.id);
+                self.outcomes.push(outcome);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Drive a full workload to completion; returns outcomes in completion
+    /// order.
+    pub fn run_workload(&mut self, mut requests: Vec<Request>) -> anyhow::Result<()> {
+        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let mut idx = 0;
+        loop {
+            // ingest everything that has arrived
+            while idx < requests.len() && requests[idx].arrival <= self.now {
+                let r = requests[idx].clone();
+                idx += 1;
+                let _ = self.submit(r); // rejections are counted internally
+            }
+            if self.live.is_empty() {
+                if idx >= requests.len() {
+                    break;
+                }
+                self.now = requests[idx].arrival;
+                continue;
+            }
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Final report (filtering the first `warmup_fraction` of outcomes by
+    /// arrival order so the history predictor's cold start doesn't pollute
+    /// the comparison — identical treatment for every policy).
+    pub fn report(&self, warmup_fraction: f64) -> RunReport {
+        let mut by_arrival = self.outcomes.clone();
+        by_arrival.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let skip = ((by_arrival.len() as f64) * warmup_fraction).floor() as usize;
+        let measured = &by_arrival[skip.min(by_arrival.len())..];
+        let mut r = RunReport::from_outcomes(measured);
+        r.policy = self.policy.name().to_string();
+        r.predictor = self.predictor.name().to_string();
+        r.cost_model = self.cost_model.kind().name().to_string();
+        r.preemptions = self.preemption_count;
+        r.swap_out_events = self.kv.swap_out_events;
+        r.swap_in_events = self.kv.swap_in_events;
+        r.predict_overhead = self.predict_overhead;
+        r.sched_overhead = self.sched_overhead;
+        let es = self.engine.stats();
+        r.busy_decode = es.busy_decode;
+        r.busy_prefill = es.busy_prefill;
+        r.busy_swap = es.busy_swap;
+        r.decode_steps = es.decode_steps;
+        r.mean_utilization = es.mean_utilization;
+        r
+    }
+}
+
+/// Build a simulator-backed coordinator from a config.
+pub fn build_sim_coordinator(cfg: &ExperimentConfig) -> Coordinator<SimEngine> {
+    let engine = SimEngine::new(cfg.engine.clone());
+    let policy = crate::sched::make_policy(cfg);
+    let predictor = crate::predictor::make_predictor(
+        cfg.predictor,
+        cfg.workload.embed_dim,
+        cfg.history_capacity,
+        cfg.similarity_threshold,
+        cfg.seed,
+    );
+    let cost_model = crate::cost::make_cost_model(cfg.cost_model);
+    let mut c = Coordinator::new(engine, policy, predictor, cost_model, cfg.preempt_mode);
+    c.noise_mix = cfg.noise_mix;
+    c.preempt_hysteresis = cfg.preempt_hysteresis;
+    c.preempt_finish_guard = cfg.preempt_finish_guard;
+    c.max_queue = cfg.max_queue;
+    c.request_timeout = cfg.request_timeout;
+    c
+}
+
+/// Pre-warm a predictor with offline-profiled requests (the paper's
+/// "public dataset" augmentation): independent draws from the same
+/// workload distribution, observed with their true output lengths.
+pub fn prewarm_predictor(
+    predictor: &mut dyn crate::predictor::Predictor,
+    cfg: &ExperimentConfig,
+) {
+    if cfg.history_prewarm == 0 {
+        return;
+    }
+    let mut wl = cfg.workload.clone();
+    wl.n_requests = cfg.history_prewarm;
+    // distinct seed stream: the corpus is *not* the serving trace
+    let corpus = WorkloadGen::new(wl, cfg.seed ^ 0x0ff1_ce).generate();
+    for r in &corpus.requests {
+        predictor.observe(r, r.true_output_len);
+    }
+}
+
+/// Run one full simulated experiment from config: generate the workload,
+/// serve it, return the report. The standard entry point used by examples
+/// and every figure bench.
+pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<RunReport> {
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut coord = build_sim_coordinator(cfg);
+    prewarm_predictor(coord.predictor.as_mut(), cfg);
+    coord.run_workload(workload.requests)?;
+    Ok(coord.report(cfg.warmup_fraction))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PolicyKind, PredictorKind, WorkloadConfig};
+
+    fn small_cfg(policy: PolicyKind) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = policy;
+        cfg.predictor = PredictorKind::Oracle;
+        cfg.workload = WorkloadConfig {
+            n_requests: 120,
+            rps: 10.0,
+            ..WorkloadConfig::default()
+        };
+        cfg.warmup_fraction = 0.0;
+        cfg
+    }
+
+    #[test]
+    fn fcfs_serves_all_requests() {
+        let cfg = small_cfg(PolicyKind::Fcfs);
+        let report = run_experiment(&cfg).unwrap();
+        assert_eq!(report.measured, 120);
+        assert!(report.ttlt.mean > 0.0);
+        assert!(report.ttft.mean > 0.0);
+        assert!(report.ttft.mean <= report.ttlt.mean);
+    }
+
+    #[test]
+    fn all_policies_complete_workload() {
+        for kind in PolicyKind::ALL {
+            let cfg = small_cfg(kind);
+            let report = run_experiment(&cfg).unwrap();
+            assert_eq!(report.measured, 120, "{kind:?} lost requests");
+        }
+    }
+
+    #[test]
+    fn output_lengths_match_ground_truth_in_sim() {
+        let cfg = small_cfg(PolicyKind::SageSched);
+        let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+        let truth: std::collections::BTreeMap<u64, u32> = workload
+            .requests
+            .iter()
+            .map(|r| (r.id, r.true_output_len))
+            .collect();
+        let mut coord = build_sim_coordinator(&cfg);
+        coord.run_workload(workload.requests).unwrap();
+        for o in coord.outcomes() {
+            assert_eq!(o.output_len, truth[&o.id], "req {}", o.id);
+        }
+    }
+
+    #[test]
+    fn completion_times_monotone_with_arrivals() {
+        let cfg = small_cfg(PolicyKind::Fcfs);
+        let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+        let mut coord = build_sim_coordinator(&cfg);
+        coord.run_workload(workload.requests).unwrap();
+        for o in coord.outcomes() {
+            assert!(o.first_token >= o.arrival);
+            assert!(o.completion >= o.first_token);
+        }
+    }
+
+    #[test]
+    fn srpt_beats_fcfs_under_load() {
+        // the core scheduling sanity check: with full information,
+        // preemptive SRPT must not be worse than FCFS on mean TTLT
+        let mut fcfs_cfg = small_cfg(PolicyKind::Fcfs);
+        let mut srpt_cfg = small_cfg(PolicyKind::OracleSrpt);
+        for cfg in [&mut fcfs_cfg, &mut srpt_cfg] {
+            cfg.workload.n_requests = 300;
+            cfg.workload.rps = 14.0;
+        }
+        let fcfs = run_experiment(&fcfs_cfg).unwrap();
+        let srpt = run_experiment(&srpt_cfg).unwrap();
+        assert!(
+            srpt.ttlt.mean < fcfs.ttlt.mean,
+            "SRPT {} !< FCFS {}",
+            srpt.ttlt.mean,
+            fcfs.ttlt.mean
+        );
+    }
+
+    #[test]
+    fn preemption_happens_under_pressure_for_preemptive_policies() {
+        let mut cfg = small_cfg(PolicyKind::OracleSrpt);
+        cfg.workload.n_requests = 300;
+        cfg.workload.rps = 16.0;
+        let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+        let mut coord = build_sim_coordinator(&cfg);
+        coord.run_workload(workload.requests).unwrap();
+        let report = coord.report(0.0);
+        assert!(report.preemptions > 0, "expected preemptions under load");
+    }
+
+    #[test]
+    fn kv_is_fully_released_at_end() {
+        let cfg = small_cfg(PolicyKind::SageSched);
+        let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+        let mut coord = build_sim_coordinator(&cfg);
+        coord.run_workload(workload.requests).unwrap();
+        assert_eq!(coord.kv.used_blocks(), 0);
+        assert_eq!(coord.live_count(), 0);
+    }
+
+    #[test]
+    fn warmup_filtering_reduces_measured() {
+        let cfg = small_cfg(PolicyKind::Fcfs);
+        let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+        let mut coord = build_sim_coordinator(&cfg);
+        coord.run_workload(workload.requests).unwrap();
+        let full = coord.report(0.0);
+        let trimmed = coord.report(0.25);
+        assert_eq!(full.measured, 120);
+        assert_eq!(trimmed.measured, 90);
+    }
+
+    #[test]
+    fn admission_control_rejects_overflow() {
+        let cfg = small_cfg(PolicyKind::Fcfs);
+        let mut coord = build_sim_coordinator(&cfg);
+        coord.max_queue = 5;
+        let wl = WorkloadGen::new(cfg.workload.clone(), 1).generate();
+        let mut accepted = 0;
+        for mut r in wl.requests.into_iter().take(12) {
+            r.arrival = 0.0;
+            if coord.submit(r) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 5);
+        assert_eq!(coord.rejected, 7);
+    }
+
+    #[test]
+    fn queued_requests_time_out() {
+        let cfg = small_cfg(PolicyKind::Fcfs);
+        let mut coord = build_sim_coordinator(&cfg);
+        coord.request_timeout = 1.0;
+        let mut wl = cfg.workload.clone();
+        wl.n_requests = 3;
+        let reqs = WorkloadGen::new(wl, 2).generate().requests;
+        for mut r in reqs {
+            r.arrival = 0.0;
+            coord.submit(r);
+        }
+        // jump time past the deadline without serving anything
+        coord.advance_to(5.0);
+        coord.step().unwrap();
+        // all queued requests expired; none served
+        assert_eq!(coord.aborted, 3);
+        assert_eq!(coord.live_count(), 0);
+        assert!(coord.outcomes().is_empty());
+    }
+
+    #[test]
+    fn noise_mix_still_completes() {
+        let mut cfg = small_cfg(PolicyKind::SageSched);
+        cfg.noise_mix = 0.2;
+        let report = run_experiment(&cfg).unwrap();
+        assert_eq!(report.measured, 120);
+    }
+}

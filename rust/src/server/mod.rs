@@ -1,0 +1,351 @@
+//! Minimal HTTP/1.1 JSON API over the real-model coordinator.
+//!
+//! Hand-rolled on `std::net` (the offline build has no tokio/hyper): an
+//! acceptor thread parses requests and forwards them over a channel to the
+//! single serving thread, which owns the [`crate::serve::Coordinator`] over
+//! the [`crate::engine::RealEngine`] and steps it continuously — SageSched
+//! scheduling applied to live HTTP traffic.
+//!
+//! Endpoints:
+//! * `POST /v1/generate`  body `{"prompt": "...", "max_tokens"?: n}` →
+//!   `{"text", "output_tokens", "ttft_s", "ttlt_s"}`
+//! * `GET /metrics`  → run-report JSON so far
+//! * `GET /healthz`  → `{"ok":true}`
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::DatasetKind;
+use crate::core::{Request, RequestId, RequestOutcome};
+use crate::embedding::Embedder;
+use crate::engine::RealEngine;
+use crate::serve::Coordinator;
+use crate::util::json::Json;
+
+/// A parsed HTTP request (just what the API needs).
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Read one HTTP/1.1 request from a stream.
+pub fn read_http_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut hdr = String::new();
+        reader.read_line(&mut hdr)?;
+        let h = hdr.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpRequest {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+/// Write an HTTP response with a JSON body.
+pub fn write_json_response(stream: &mut TcpStream, status: u16, body: &Json) -> Result<()> {
+    let text = body.to_string();
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        text.len(),
+        text
+    )?;
+    Ok(())
+}
+
+struct Submission {
+    prompt: String,
+    max_tokens: Option<u32>,
+    reply: Sender<Json>,
+}
+
+enum ServerMsg {
+    Generate(Submission),
+    Metrics(Sender<Json>),
+}
+
+/// Handle to a running server (join on drop is intentional-manual).
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the acceptor with a dummy connection
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start serving a [`RealEngine`]-backed coordinator on `addr`
+/// (e.g. `"127.0.0.1:8080"`; port 0 picks a free port).
+pub fn serve(addr: &str, mut coord: Coordinator<RealEngine>) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr).context("binding server address")?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(false)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx): (Sender<ServerMsg>, Receiver<ServerMsg>) = mpsc::channel();
+    let next_id = Arc::new(AtomicU64::new(1));
+
+    // --- serving thread: owns the coordinator ---------------------------
+    let stop_srv = stop.clone();
+    let serving = std::thread::spawn(move || {
+        let started = Instant::now();
+        let mut waiting: HashMap<RequestId, (Sender<Json>, Instant)> = HashMap::new();
+        let (done_tx, done_rx): (
+            Sender<(RequestOutcome, String)>,
+            Receiver<(RequestOutcome, String)>,
+        ) = mpsc::channel();
+        coord.on_complete = Some(Box::new(move |outcome, engine: &mut RealEngine| {
+            let text = engine.output_text(outcome.id).unwrap_or_default();
+            let _ = done_tx.send((outcome.clone(), text));
+        }));
+        let mut embedder_dim = coord.engine.runtime().meta().d_model;
+        loop {
+            if stop_srv.load(Ordering::SeqCst) && waiting.is_empty() {
+                break;
+            }
+            // ingest new work (non-blocking)
+            while let Ok(msg) = rx.try_recv() {
+                match msg {
+                    ServerMsg::Generate(sub) => {
+                        let now = started.elapsed().as_secs_f64();
+                        coord.advance_to(now);
+                        let id = next_id_from(&sub);
+                        let tokens = crate::tokenizer::encode_truncated(
+                            &sub.prompt,
+                            coord.engine.runtime().meta().prefill_len,
+                        );
+                        let emb = {
+                            let mut e =
+                                crate::runtime::HloEmbedder { rt: coord.engine.runtime() };
+                            e.embed(&sub.prompt)
+                        };
+                        embedder_dim = emb.dim();
+                        let req = Request {
+                            id,
+                            prompt: sub.prompt.clone(),
+                            input_len: tokens.len() as u32,
+                            true_output_len: u32::MAX, // unknown: real inference
+                            arrival: now,
+                            dataset: DatasetKind::ShareGpt,
+                            topic: 0,
+                            embedding: emb,
+                            true_dist: None,
+                        };
+                        if let Some(mt) = sub.max_tokens {
+                            coord.engine.max_output = mt;
+                        }
+                        if coord.submit(req) {
+                            waiting.insert(id, (sub.reply, Instant::now()));
+                        } else {
+                            let _ = sub.reply.send(Json::obj(vec![(
+                                "error",
+                                Json::str("server overloaded (queue full)"),
+                            )]));
+                        }
+                    }
+                    ServerMsg::Metrics(reply) => {
+                        let report = coord.report(0.0);
+                        let _ = reply.send(report.to_json());
+                    }
+                }
+            }
+            let _ = embedder_dim;
+            // serve
+            coord.advance_to(started.elapsed().as_secs_f64());
+            match coord.step() {
+                Ok(true) => {}
+                Ok(false) => std::thread::sleep(Duration::from_millis(2)),
+                Err(e) => {
+                    log::error!("serving step failed: {e:#}");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+            // deliver completions
+            while let Ok((outcome, text)) = done_rx.try_recv() {
+                if let Some((reply, _)) = waiting.remove(&outcome.id) {
+                    let _ = reply.send(Json::obj(vec![
+                        ("text", Json::str(text)),
+                        ("output_tokens", Json::num(outcome.output_len as f64)),
+                        ("ttft_s", Json::num(outcome.ttft())),
+                        ("ttlt_s", Json::num(outcome.ttlt())),
+                    ]));
+                }
+            }
+        }
+    });
+
+    // --- acceptor thread -------------------------------------------------
+    let stop_acc = stop.clone();
+    let tx_acc = tx.clone();
+    let id_gen = next_id.clone();
+    let acceptor = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop_acc.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(mut stream) = conn else { continue };
+            let tx = tx_acc.clone();
+            let id_gen = id_gen.clone();
+            std::thread::spawn(move || {
+                let _ = handle_connection(&mut stream, &tx, &id_gen);
+            });
+        }
+    });
+
+    Ok(ServerHandle { addr: local, stop, threads: vec![serving, acceptor] })
+}
+
+// request ids for HTTP traffic are allocated by the acceptor side and
+// smuggled through the prompt-handling closure; keep a simple global
+fn next_id_from(sub: &Submission) -> RequestId {
+    // stable-enough unique id: hash of pointer + time
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut h = DefaultHasher::new();
+    (sub as *const Submission as usize).hash(&mut h);
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .subsec_nanos()
+        .hash(&mut h);
+    h.finish()
+}
+
+fn handle_connection(
+    stream: &mut TcpStream,
+    tx: &Sender<ServerMsg>,
+    _id_gen: &AtomicU64,
+) -> Result<()> {
+    let req = read_http_request(stream)?;
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            write_json_response(stream, 200, &Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        ("GET", "/metrics") => {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            tx.send(ServerMsg::Metrics(reply_tx)).ok();
+            match reply_rx.recv_timeout(Duration::from_secs(5)) {
+                Ok(j) => write_json_response(stream, 200, &j),
+                Err(_) => write_json_response(
+                    stream,
+                    500,
+                    &Json::obj(vec![("error", Json::str("metrics timeout"))]),
+                ),
+            }
+        }
+        ("POST", "/v1/generate") => {
+            let body = match Json::parse(&req.body) {
+                Ok(b) => b,
+                Err(e) => {
+                    return write_json_response(
+                        stream,
+                        400,
+                        &Json::obj(vec![("error", Json::str(format!("bad json: {e}")))]),
+                    )
+                }
+            };
+            let Some(prompt) = body.get("prompt").and_then(Json::as_str) else {
+                return write_json_response(
+                    stream,
+                    400,
+                    &Json::obj(vec![("error", Json::str("missing prompt"))]),
+                );
+            };
+            let max_tokens = body.get("max_tokens").and_then(Json::as_u64).map(|v| v as u32);
+            let (reply_tx, reply_rx) = mpsc::channel();
+            tx.send(ServerMsg::Generate(Submission {
+                prompt: prompt.to_string(),
+                max_tokens,
+                reply: reply_tx,
+            }))
+            .ok();
+            match reply_rx.recv_timeout(Duration::from_secs(120)) {
+                Ok(j) => write_json_response(stream, 200, &j),
+                Err(_) => write_json_response(
+                    stream,
+                    500,
+                    &Json::obj(vec![("error", Json::str("generation timeout"))]),
+                ),
+            }
+        }
+        _ => write_json_response(
+            stream,
+            404,
+            &Json::obj(vec![("error", Json::str("not found"))]),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn http_parsing_roundtrip() {
+        // spin a trivial echo server to exercise read_http_request
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let req = read_http_request(&mut s).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/v1/generate");
+            assert_eq!(req.body, r#"{"prompt":"hi"}"#);
+            write_json_response(&mut s, 200, &Json::obj(vec![("ok", Json::Bool(true))]))
+                .unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        write!(
+            c,
+            "POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 15\r\n\r\n{{\"prompt\":\"hi\"}}"
+        )
+        .unwrap();
+        let mut resp = String::new();
+        c.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200"));
+        assert!(resp.contains(r#"{"ok":true}"#));
+        t.join().unwrap();
+    }
+}

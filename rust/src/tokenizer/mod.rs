@@ -1,0 +1,102 @@
+//! Byte-level tokenizer, mirroring `python/compile/config.py` exactly.
+//!
+//! Token ids 0..=255 are raw bytes; 256 = BOS, 257 = EOS, 258 = PAD. The
+//! same mapping is used by the L2 model at AOT time, so the rust request
+//! path and the compiled artifacts always agree on vocabulary.
+
+/// Beginning-of-sequence token id.
+pub const BOS_ID: u32 = 256;
+/// End-of-sequence token id (generation terminates on sampling this).
+pub const EOS_ID: u32 = 257;
+/// Padding token id (fills idle decode lanes / prompt tails).
+pub const PAD_ID: u32 = 258;
+/// Vocabulary size (256 bytes + BOS + EOS + PAD).
+pub const VOCAB: usize = 259;
+
+/// Encode text into `[BOS, byte...]` token ids.
+pub fn encode(text: &str) -> Vec<u32> {
+    let mut out = Vec::with_capacity(text.len() + 1);
+    out.push(BOS_ID);
+    out.extend(text.as_bytes().iter().map(|&b| b as u32));
+    out
+}
+
+/// Encode and truncate to at most `max_len` tokens (BOS always kept).
+pub fn encode_truncated(text: &str, max_len: usize) -> Vec<u32> {
+    let mut toks = encode(text);
+    toks.truncate(max_len.max(1));
+    toks
+}
+
+/// Decode generated token ids back to text. Non-byte tokens (BOS/EOS/PAD)
+/// are skipped; invalid UTF-8 is replaced.
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| t < 256)
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Pad a token sequence to `len` with PAD (panics if already longer).
+pub fn pad_to(tokens: &[u32], len: usize) -> Vec<u32> {
+    assert!(tokens.len() <= len, "sequence longer than pad target");
+    let mut out = tokens.to_vec();
+    out.resize(len, PAD_ID);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let toks = encode("hello");
+        assert_eq!(toks[0], BOS_ID);
+        assert_eq!(toks.len(), 6);
+        assert_eq!(decode(&toks), "hello");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo ∆ world";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn special_tokens_skipped_in_decode() {
+        let mut toks = encode("ab");
+        toks.push(EOS_ID);
+        toks.push(PAD_ID);
+        assert_eq!(decode(&toks), "ab");
+    }
+
+    #[test]
+    fn truncation_keeps_bos() {
+        let toks = encode_truncated("abcdefgh", 4);
+        assert_eq!(toks.len(), 4);
+        assert_eq!(toks[0], BOS_ID);
+        assert_eq!(decode(&toks), "abc");
+    }
+
+    #[test]
+    fn pad_to_fills_with_pad() {
+        let toks = pad_to(&encode("a"), 5);
+        assert_eq!(toks.len(), 5);
+        assert_eq!(&toks[2..], &[PAD_ID, PAD_ID, PAD_ID]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_to_shorter_panics() {
+        pad_to(&encode("abcdef"), 3);
+    }
+
+    #[test]
+    fn vocab_constants_consistent() {
+        assert_eq!(VOCAB, 259);
+        assert!(BOS_ID < VOCAB as u32 && EOS_ID < VOCAB as u32 && PAD_ID < VOCAB as u32);
+    }
+}

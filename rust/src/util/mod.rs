@@ -1,0 +1,13 @@
+//! In-tree substrate utilities.
+//!
+//! The build is fully offline (only the crates vendored for the PJRT bridge
+//! are available), so the usual ecosystem crates are re-implemented here at
+//! the size this project needs: a seedable PCG64 RNG with the distributions
+//! the workload generator uses ([`rng`]), summary statistics ([`stats`]), a
+//! small JSON value/parser/writer ([`json`]) for configs, traces and bench
+//! output, and a flag-style CLI argument parser ([`cli`]).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

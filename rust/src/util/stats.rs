@@ -1,0 +1,136 @@
+//! Summary statistics over latency samples: mean, percentiles, histograms.
+
+/// Summary of a sample set (all latencies in seconds unless noted).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `Default` (all zeros) for an empty slice.
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        let mut v: Vec<f64> = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            count: n,
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            p50: percentile_sorted(&v, 0.50),
+            p90: percentile_sorted(&v, 0.90),
+            p99: percentile_sorted(&v, 0.99),
+            max: v[n - 1],
+        }
+    }
+}
+
+/// Percentile (nearest-rank interpolated) over a pre-sorted slice; q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Simple fixed-width histogram with overflow bucket.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub bucket_width: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(bucket_width: f64, n_buckets: usize) -> Histogram {
+        assert!(bucket_width > 0.0 && n_buckets > 0);
+        Histogram { bucket_width, counts: vec![0; n_buckets + 1] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let idx = ((x / self.bucket_width) as usize).min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Fraction of mass in bucket `i`.
+    pub fn frac(&self, i: usize) -> f64 {
+        let t = self.total();
+        if t == 0 { 0.0 } else { self.counts[i] as f64 / t as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.count, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert_eq!(Summary::of(&[]), Summary::default());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile_sorted(&v, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 1.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_order_statistics() {
+        let v: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert!((percentile_sorted(&v, 0.90) - 90.0).abs() < 1e-9);
+        assert!((percentile_sorted(&v, 0.99) - 99.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(10.0, 3);
+        for x in [0.0, 5.0, 15.0, 25.0, 99.0] {
+            h.add(x);
+        }
+        assert_eq!(h.counts, vec![2, 1, 1, 1]);
+        assert_eq!(h.total(), 5);
+        assert!((h.frac(0) - 0.4).abs() < 1e-12);
+    }
+}

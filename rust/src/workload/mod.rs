@@ -1,0 +1,455 @@
+//! Workload generation: the three evaluation datasets, latent-topic
+//! structure, and the Poisson arrival process.
+//!
+//! The paper's datasets (ShareGPT, Alpaca-PubMed-summarization,
+//! Document-Write) are external downloads; we build synthetic equivalents
+//! matching the input/output-length characteristics reported in the paper's
+//! Fig. 1(b), with one extra, crucial ingredient: a **latent topic model**.
+//! Each dataset owns `topics_per_dataset` topics; a topic has a direction in
+//! embedding space, a phrase pool (for prompt text) and its own output-length
+//! distribution. Prompts from the same topic are near in cosine similarity
+//! *and* share an output-length distribution — exactly the empirical
+//! correlation (paper Fig. 4) that SageSched's semantic-aware history
+//! predictor exploits. Predictors only ever see (prompt, embedding,
+//! input_len); the topic id and true distribution stay hidden ground truth.
+
+pub mod trace;
+
+use crate::config::{DatasetKind, WorkloadConfig};
+use crate::core::Request;
+use crate::distribution::LengthDist;
+use crate::embedding::Embedding;
+use crate::util::rng::Rng;
+
+/// Length statistics for one dataset (lognormal parameters + clamps).
+#[derive(Clone, Debug)]
+pub struct DatasetProfile {
+    pub kind: DatasetKind,
+    /// lognormal location/scale of the input length
+    pub input_mu: f64,
+    pub input_sigma: f64,
+    pub input_min: u32,
+    pub input_max: u32,
+    /// dataset-level lognormal location/scale of the output length; topics
+    /// perturb the location
+    pub output_mu: f64,
+    pub output_sigma_within: f64,
+    pub output_mu_topic_spread: f64,
+    pub output_min: u32,
+    pub output_max: u32,
+    /// Range of the per-topic *short-mode* weight: LLM outputs for a fixed
+    /// prompt are strongly bimodal (paper Fig. 1(a)/Fig. 6 — a reply either
+    /// ends quickly or runs long), so each topic mixes a short-completion
+    /// mode (at `short_factor` × the long mode) with weight drawn here.
+    pub short_weight: (f64, f64),
+    /// Short mode location as a fraction of the long mode.
+    pub short_factor: f64,
+}
+
+impl DatasetProfile {
+    /// Characteristics per the paper's Fig. 1(b): ShareGPT mid-in/wide-out,
+    /// Alpaca long-in/short-out, Write short-in/long-out.
+    pub fn of(kind: DatasetKind) -> DatasetProfile {
+        match kind {
+            DatasetKind::ShareGpt => DatasetProfile {
+                kind,
+                input_mu: (180.0f64).ln(),
+                input_sigma: 0.6,
+                input_min: 8,
+                input_max: 1024,
+                output_mu: (170.0f64).ln(),
+                output_sigma_within: 0.45,
+                output_mu_topic_spread: 0.55,
+                output_min: 4,
+                output_max: 1200,
+                short_weight: (0.25, 0.55),
+                short_factor: 0.12,
+            },
+            DatasetKind::Alpaca => DatasetProfile {
+                kind,
+                input_mu: (1100.0f64).ln(),
+                input_sigma: 0.35,
+                input_min: 256,
+                input_max: 3000,
+                output_mu: (90.0f64).ln(),
+                output_sigma_within: 0.35,
+                output_mu_topic_spread: 0.5,
+                output_min: 8,
+                output_max: 400,
+                short_weight: (0.05, 0.15),
+                short_factor: 0.25,
+            },
+            DatasetKind::Write => DatasetProfile {
+                kind,
+                input_mu: (60.0f64).ln(),
+                input_sigma: 0.5,
+                input_min: 4,
+                input_max: 300,
+                output_mu: (380.0f64).ln(),
+                output_sigma_within: 0.4,
+                output_mu_topic_spread: 0.4,
+                output_min: 32,
+                output_max: 1600,
+                short_weight: (0.10, 0.35),
+                short_factor: 0.10,
+            },
+        }
+    }
+}
+
+/// One latent topic: embedding direction + conditional length distributions.
+#[derive(Clone, Debug)]
+pub struct Topic {
+    pub dataset: DatasetKind,
+    pub id: usize,
+    pub direction: Embedding,
+    /// lognormal location of this topic's *long* output mode
+    pub output_mu: f64,
+    pub output_sigma: f64,
+    /// probability of the short-completion mode
+    pub short_weight: f64,
+    /// lognormal location of the short mode
+    pub short_mu: f64,
+    /// discretized ground-truth output distribution (for oracle / fig4)
+    pub true_dist: LengthDist,
+    /// phrase stem used to synthesize prompt text
+    pub stem: String,
+    profile: DatasetProfile,
+}
+
+impl Topic {
+    fn sample_output(&self, rng: &mut Rng) -> u32 {
+        let o = if rng.f64() < self.short_weight {
+            rng.lognormal(self.short_mu, 0.35)
+        } else {
+            rng.lognormal(self.output_mu, self.output_sigma)
+        };
+        (o.round() as u32).clamp(self.profile.output_min, self.profile.output_max)
+    }
+
+    fn sample_input(&self, rng: &mut Rng) -> u32 {
+        let i = rng.lognormal(self.profile.input_mu, self.profile.input_sigma);
+        (i.round() as u32).clamp(self.profile.input_min, self.profile.input_max)
+    }
+}
+
+/// Discretize a sampling process into a support of `n` quantile points.
+/// Monte-Carlo keeps this dependency-free and exact enough (sample count
+/// >> support points).
+fn discretize_sampler(
+    mut sample: impl FnMut(&mut Rng) -> f64,
+    n: usize,
+    rng: &mut Rng,
+) -> LengthDist {
+    let mut samples = Vec::with_capacity(4096);
+    for _ in 0..4096 {
+        samples.push(sample(rng));
+    }
+    LengthDist::from_samples(&samples).compress(n)
+}
+
+const STEM_WORDS: [&str; 24] = [
+    "galaxies", "recipes", "contracts", "proteins", "poems", "engines",
+    "markets", "theorems", "violins", "glaciers", "novels", "circuits",
+    "gardens", "planets", "statutes", "enzymes", "ballads", "turbines",
+    "auctions", "lemmas", "cellos", "fjords", "essays", "antennas",
+];
+
+fn dataset_stem(kind: DatasetKind, topic_id: usize, rng: &mut Rng) -> String {
+    let noun = STEM_WORDS[topic_id % STEM_WORDS.len()];
+    let salt = rng.below(1000);
+    match kind {
+        DatasetKind::ShareGpt => {
+            format!("let's chat about {noun} and related questions ({salt})")
+        }
+        DatasetKind::Alpaca => {
+            format!("summarize the following article about {noun} ({salt})")
+        }
+        DatasetKind::Write => {
+            format!("write a long detailed document about {noun} ({salt})")
+        }
+    }
+}
+
+/// The generated workload: requests sorted by arrival time.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub requests: Vec<Request>,
+    pub topics: Vec<Topic>,
+}
+
+/// Workload generator: builds topics once, then streams requests with
+/// Poisson arrivals.
+pub struct WorkloadGen {
+    cfg: WorkloadConfig,
+    topics: Vec<Topic>,
+    rng: Rng,
+    next_id: u64,
+    clock: f64,
+}
+
+impl WorkloadGen {
+    pub fn new(cfg: WorkloadConfig, seed: u64) -> WorkloadGen {
+        // topics come from the *topic* seed: every generator over the same
+        // WorkloadConfig sees the same topic universe regardless of its
+        // request-stream seed (pre-warm corpora must match serving traces)
+        let mut rng = Rng::new(cfg.topic_seed ^ 0x5eed_0001);
+        let mut topics = Vec::new();
+        for (kind, _) in &cfg.mix {
+            let profile = DatasetProfile::of(*kind);
+            // hierarchical topics: a few super-topics per dataset, each with
+            // related sub-topics (cosine ~0.6 apart, partially-related
+            // output statistics). This mirrors real prompt populations —
+            // and gives the fig4 middle similarity band its semantics.
+            let n_super = (cfg.topics_per_dataset / 4).max(1);
+            let supers: Vec<(Embedding, f64)> = (0..n_super)
+                .map(|_| {
+                    (
+                        Embedding::random_unit(cfg.embed_dim, &mut rng),
+                        profile.output_mu
+                            + rng.normal() * profile.output_mu_topic_spread,
+                    )
+                })
+                .collect();
+            for t in 0..cfg.topics_per_dataset {
+                let (super_dir, super_mu) = &supers[t % n_super];
+                let direction = super_dir.perturbed(0.10, &mut rng);
+                let output_mu =
+                    super_mu + rng.normal() * profile.output_mu_topic_spread * 0.45;
+                let output_sigma = profile.output_sigma_within;
+                let short_weight =
+                    rng.range_f64(profile.short_weight.0, profile.short_weight.1);
+                let short_mu = output_mu + profile.short_factor.ln();
+                let (lo, hi) = (profile.output_min as f64, profile.output_max as f64);
+                let true_dist = discretize_sampler(
+                    |r| {
+                        let o = if r.f64() < short_weight {
+                            r.lognormal(short_mu, 0.35)
+                        } else {
+                            r.lognormal(output_mu, output_sigma)
+                        };
+                        o.round().clamp(lo, hi)
+                    },
+                    32,
+                    &mut rng,
+                );
+                let stem = dataset_stem(*kind, t, &mut rng);
+                topics.push(Topic {
+                    dataset: *kind,
+                    id: topics.len(),
+                    direction,
+                    output_mu,
+                    output_sigma,
+                    short_weight,
+                    short_mu,
+                    true_dist,
+                    stem,
+                    profile: profile.clone(),
+                });
+            }
+        }
+        // switch to the request-stream seed for arrivals/sampling
+        let rng = Rng::new(seed ^ 0x5eed_0002);
+        WorkloadGen { cfg, topics, rng, next_id: 0, clock: 0.0 }
+    }
+
+    pub fn topics(&self) -> &[Topic] {
+        &self.topics
+    }
+
+    /// Topics belonging to one dataset.
+    pub fn topics_of(&self, kind: DatasetKind) -> Vec<&Topic> {
+        self.topics.iter().filter(|t| t.dataset == kind).collect()
+    }
+
+    /// Sample the next request (advances the Poisson arrival clock).
+    pub fn next_request(&mut self) -> Request {
+        let gap = self.rng.exp(self.cfg.rps.max(1e-9));
+        self.clock += gap;
+        self.request_at(self.clock)
+    }
+
+    /// Sample a request with an explicit arrival time (used by figure
+    /// benches needing deterministic arrivals).
+    pub fn request_at(&mut self, arrival: f64) -> Request {
+        let weights: Vec<f64> = self.cfg.mix.iter().map(|(_, w)| *w).collect();
+        let ds_idx = self.rng.categorical(&weights);
+        let (kind, _) = self.cfg.mix[ds_idx];
+        let topic_ids: Vec<usize> = self
+            .topics
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.dataset == kind)
+            .map(|(i, _)| i)
+            .collect();
+        let topic_idx = *self.rng.choose(&topic_ids);
+        self.sample_from_topic(topic_idx, arrival)
+    }
+
+    /// Sample a request from a specific topic (fig4 uses this to replay one
+    /// prompt many times).
+    pub fn sample_from_topic(&mut self, topic_idx: usize, arrival: f64) -> Request {
+        let topic = self.topics[topic_idx].clone();
+        let input_len = topic.sample_input(&mut self.rng);
+        let true_output_len = topic.sample_output(&mut self.rng);
+        let embedding = topic.direction.perturbed(self.cfg.embed_sigma, &mut self.rng);
+        let salt = self.rng.below(100_000);
+        let prompt = format!("{} variant-{salt} len-{input_len}", topic.stem);
+        let id = self.next_id;
+        self.next_id += 1;
+        Request {
+            id,
+            prompt,
+            input_len,
+            true_output_len,
+            arrival,
+            dataset: topic.dataset,
+            topic: topic_idx,
+            embedding,
+            true_dist: Some(topic.true_dist.clone()),
+        }
+    }
+
+    /// Generate the full workload of `cfg.n_requests` requests.
+    pub fn generate(mut self) -> Workload {
+        let n = self.cfg.n_requests;
+        let mut requests = Vec::with_capacity(n);
+        for _ in 0..n {
+            requests.push(self.next_request());
+        }
+        Workload { requests, topics: self.topics }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mean;
+
+    fn gen(kind: DatasetKind, n: usize) -> Workload {
+        let mut cfg = WorkloadConfig::single(kind);
+        cfg.n_requests = n;
+        WorkloadGen::new(cfg, 7).generate()
+    }
+
+    #[test]
+    fn arrival_times_sorted_and_poisson_rate() {
+        let w = gen(DatasetKind::ShareGpt, 2000);
+        for pair in w.requests.windows(2) {
+            assert!(pair[0].arrival <= pair[1].arrival);
+        }
+        let span = w.requests.last().unwrap().arrival;
+        let rate = 2000.0 / span;
+        assert!((rate - 8.0).abs() < 0.8, "rate={rate}");
+    }
+
+    #[test]
+    fn dataset_length_characteristics() {
+        // the Fig 1(b) shape: alpaca long-in/short-out, write the reverse
+        let alpaca = gen(DatasetKind::Alpaca, 500);
+        let write = gen(DatasetKind::Write, 500);
+        let ai = mean(&alpaca.requests.iter().map(|r| r.input_len as f64).collect::<Vec<_>>());
+        let ao = mean(&alpaca.requests.iter().map(|r| r.true_output_len as f64).collect::<Vec<_>>());
+        let wi = mean(&write.requests.iter().map(|r| r.input_len as f64).collect::<Vec<_>>());
+        let wo = mean(&write.requests.iter().map(|r| r.true_output_len as f64).collect::<Vec<_>>());
+        assert!(ai > 4.0 * wi, "alpaca in {ai} vs write in {wi}");
+        assert!(wo > 3.0 * ao, "write out {wo} vs alpaca out {ao}");
+    }
+
+    #[test]
+    fn same_topic_embeddings_similar_cross_topic_less() {
+        let w = gen(DatasetKind::ShareGpt, 400);
+        let mut same = Vec::new();
+        let mut cross = Vec::new();
+        for a in &w.requests[..80] {
+            for b in &w.requests[..80] {
+                if a.id >= b.id {
+                    continue;
+                }
+                let s = a.embedding.cosine(&b.embedding) as f64;
+                if a.topic == b.topic {
+                    same.push(s);
+                } else {
+                    cross.push(s);
+                }
+            }
+        }
+        assert!(!same.is_empty() && !cross.is_empty());
+        assert!(
+            mean(&same) > mean(&cross) + 0.3,
+            "same {} cross {}",
+            mean(&same),
+            mean(&cross)
+        );
+        assert!(mean(&same) > 0.8, "same-topic similarity too low");
+    }
+
+    #[test]
+    fn same_topic_output_lengths_share_distribution() {
+        // Fig 4's premise: within-topic output length distributions are
+        // closer (in W1) than across topics.
+        let mut cfg = WorkloadConfig::single(DatasetKind::Write);
+        cfg.n_requests = 0;
+        let mut g = WorkloadGen::new(cfg, 9);
+        let topic_a = 0;
+        let topic_b = 3;
+        let mut a1 = Vec::new();
+        let mut a2 = Vec::new();
+        let mut b = Vec::new();
+        for i in 0..200 {
+            a1.push(g.sample_from_topic(topic_a, i as f64).true_output_len as f64);
+            a2.push(g.sample_from_topic(topic_a, i as f64).true_output_len as f64);
+            b.push(g.sample_from_topic(topic_b, i as f64).true_output_len as f64);
+        }
+        let d_a1 = LengthDist::from_samples(&a1);
+        let d_a2 = LengthDist::from_samples(&a2);
+        let d_b = LengthDist::from_samples(&b);
+        assert!(d_a1.w1_distance(&d_a2) < d_a1.w1_distance(&d_b));
+    }
+
+    #[test]
+    fn true_dist_mean_tracks_samples() {
+        let w = gen(DatasetKind::ShareGpt, 600);
+        // group by topic; empirical mean of true_output_len should be near
+        // the topic's true_dist mean
+        let mut by_topic: std::collections::BTreeMap<usize, Vec<f64>> = Default::default();
+        for r in &w.requests {
+            by_topic.entry(r.topic).or_default().push(r.true_output_len as f64);
+        }
+        let mut checked = 0;
+        for (topic, lens) in by_topic {
+            if lens.len() < 25 {
+                continue;
+            }
+            let emp = mean(&lens);
+            let td = w.topics[topic].true_dist.mean();
+            assert!(
+                (emp - td).abs() / td < 0.35,
+                "topic {topic}: emp {emp} vs dist {td}"
+            );
+            checked += 1;
+        }
+        assert!(checked > 0);
+    }
+
+    #[test]
+    fn ids_unique_and_dense() {
+        let w = gen(DatasetKind::Write, 100);
+        let ids: Vec<u64> = w.requests.iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = gen(DatasetKind::ShareGpt, 50);
+        let b = gen(DatasetKind::ShareGpt, 50);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.input_len, y.input_len);
+            assert_eq!(x.true_output_len, y.true_output_len);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+}

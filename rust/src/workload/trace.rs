@@ -1,0 +1,182 @@
+//! Trace record / replay: serialize generated workloads to JSONL so
+//! experiments are exactly reproducible across machines and the same
+//! arrival sequence can be replayed against every scheduler.
+//!
+//! One JSON object per line per request; ground-truth fields (true output
+//! length, topic distribution) are included so oracle baselines replay
+//! identically.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::DatasetKind;
+use crate::core::Request;
+use crate::distribution::LengthDist;
+use crate::embedding::Embedding;
+use crate::util::json::Json;
+
+fn request_to_json(r: &Request) -> Json {
+    let mut fields = vec![
+        ("id", Json::num(r.id as f64)),
+        ("prompt", Json::str(r.prompt.clone())),
+        ("input_len", Json::num(r.input_len as f64)),
+        ("true_output_len", Json::num(r.true_output_len as f64)),
+        ("arrival", Json::num(r.arrival)),
+        ("dataset", Json::str(r.dataset.name())),
+        ("topic", Json::num(r.topic as f64)),
+        (
+            "embedding",
+            Json::arr(r.embedding.0.iter().map(|&x| Json::num(x as f64))),
+        ),
+    ];
+    if let Some(d) = &r.true_dist {
+        fields.push((
+            "dist_values",
+            Json::arr(d.support().iter().map(|&v| Json::num(v))),
+        ));
+        fields.push((
+            "dist_probs",
+            Json::arr(d.probs().iter().map(|&p| Json::num(p))),
+        ));
+    }
+    Json::obj(fields)
+}
+
+fn request_from_json(j: &Json) -> Result<Request> {
+    let need_num = |k: &str| -> Result<f64> {
+        j.get(k).and_then(Json::as_f64).with_context(|| format!("missing field {k}"))
+    };
+    let dataset = DatasetKind::from_name(j.str_or("dataset", ""))
+        .context("bad dataset name")?;
+    let embedding: Vec<f32> = j
+        .get("embedding")
+        .and_then(Json::as_arr)
+        .context("missing embedding")?
+        .iter()
+        .filter_map(Json::as_f64)
+        .map(|x| x as f32)
+        .collect();
+    let true_dist = match (j.get("dist_values"), j.get("dist_probs")) {
+        (Some(Json::Arr(vs)), Some(Json::Arr(ps))) if vs.len() == ps.len() && !vs.is_empty() => {
+            let pairs: Vec<(f64, f64)> = vs
+                .iter()
+                .zip(ps)
+                .filter_map(|(v, p)| Some((v.as_f64()?, p.as_f64()?)))
+                .collect();
+            Some(LengthDist::from_weighted(&pairs))
+        }
+        _ => None,
+    };
+    Ok(Request {
+        id: need_num("id")? as u64,
+        prompt: j.str_or("prompt", "").to_string(),
+        input_len: need_num("input_len")? as u32,
+        true_output_len: need_num("true_output_len")? as u32,
+        arrival: need_num("arrival")?,
+        dataset,
+        topic: need_num("topic")? as usize,
+        embedding: Embedding(embedding),
+        true_dist,
+    })
+}
+
+/// Write a workload trace as JSONL.
+pub fn save(path: impl AsRef<Path>, requests: &[Request]) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    for r in requests {
+        writeln!(f, "{}", request_to_json(r))?;
+    }
+    Ok(())
+}
+
+/// Load a workload trace from JSONL (sorted by arrival).
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<Request>> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut out = Vec::new();
+    for (i, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line)
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?;
+        out.push(request_from_json(&j).with_context(|| format!("line {}", i + 1))?);
+    }
+    if out.is_empty() {
+        bail!("empty trace {}", path.as_ref().display());
+    }
+    out.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::WorkloadGen;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("sagesched-trace-{}-{name}.jsonl", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_preserves_requests() {
+        let mut cfg = WorkloadConfig::default();
+        cfg.n_requests = 40;
+        let wl = WorkloadGen::new(cfg, 5).generate();
+        let path = tmp("roundtrip");
+        save(&path, &wl.requests).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), 40);
+        for (a, b) in wl.requests.iter().zip(&loaded) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.input_len, b.input_len);
+            assert_eq!(a.true_output_len, b.true_output_len);
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+            assert_eq!(a.dataset, b.dataset);
+            let cos = a.embedding.cosine(&b.embedding);
+            assert!(cos > 0.9999, "embedding drift {cos}");
+            let (da, db) = (a.true_dist.as_ref().unwrap(), b.true_dist.as_ref().unwrap());
+            assert!(da.w1_distance(db) < 1e-6 * da.mean().max(1.0));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replayed_trace_gives_identical_experiment() {
+        use crate::config::ExperimentConfig;
+        use crate::serve::build_sim_coordinator;
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.n_requests = 60;
+        let wl = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+        let path = tmp("replay");
+        save(&path, &wl.requests).unwrap();
+        let loaded = load(&path).unwrap();
+
+        let mut c1 = build_sim_coordinator(&cfg);
+        c1.run_workload(wl.requests).unwrap();
+        let mut c2 = build_sim_coordinator(&cfg);
+        c2.run_workload(loaded).unwrap();
+        let r1 = c1.report(0.0);
+        let r2 = c2.report(0.0);
+        assert!((r1.ttlt.mean - r2.ttlt.mean).abs() < 1e-9);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = tmp("garbage");
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "").unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,193 @@
+//! Behavioral tests: the qualitative claims each scheduler/feature makes
+//! must hold on controlled workloads (these are the invariants the paper's
+//! narrative depends on, separated from exact figures).
+
+use sagesched::config::{
+    DatasetKind, ExperimentConfig, PolicyKind, PredictorKind, WorkloadConfig,
+};
+use sagesched::serve::run_experiment;
+
+fn cfg(policy: PolicyKind, rps: f64, n: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.policy = policy;
+    c.predictor = PredictorKind::Oracle;
+    c.workload.rps = rps;
+    c.workload.n_requests = n;
+    c.warmup_fraction = 0.0;
+    c
+}
+
+/// mean TTLT averaged over 2 seeds
+fn ttlt(mut c: ExperimentConfig) -> f64 {
+    let mut acc = 0.0;
+    for seed in [0, 1] {
+        c.seed = seed;
+        acc += run_experiment(&c).unwrap().ttlt.mean;
+    }
+    acc / 2.0
+}
+
+#[test]
+fn fastserve_improves_ttft_over_fcfs() {
+    // FastServe's MLFQ always admits fresh arrivals at top priority — its
+    // defining TTFT advantage (paper fig7 discussion)
+    let mut fcfs_ttft = 0.0;
+    let mut fs_ttft = 0.0;
+    for seed in [0, 1] {
+        let mut c = cfg(PolicyKind::Fcfs, 10.0, 600);
+        c.seed = seed;
+        fcfs_ttft += run_experiment(&c).unwrap().ttft.mean;
+        let mut c = cfg(PolicyKind::FastServe, 10.0, 600);
+        c.seed = seed;
+        fs_ttft += run_experiment(&c).unwrap().ttft.mean;
+    }
+    assert!(
+        fs_ttft < fcfs_ttft,
+        "fastserve TTFT {fs_ttft} !< fcfs {fcfs_ttft}"
+    );
+}
+
+#[test]
+fn predictive_policies_beat_fcfs_under_contention() {
+    let fcfs = ttlt(cfg(PolicyKind::Fcfs, 10.0, 800));
+    for policy in [PolicyKind::Ssjf, PolicyKind::Trail, PolicyKind::SageSched] {
+        let t = ttlt(cfg(policy, 10.0, 800));
+        assert!(t < fcfs, "{policy:?} {t} !< fcfs {fcfs}");
+    }
+}
+
+#[test]
+fn load_monotonicity() {
+    // higher arrival rate must not reduce mean TTLT
+    let lo = ttlt(cfg(PolicyKind::SageSched, 4.0, 500));
+    let mid = ttlt(cfg(PolicyKind::SageSched, 8.0, 500));
+    let hi = ttlt(cfg(PolicyKind::SageSched, 12.0, 500));
+    assert!(lo <= mid * 1.05, "lo {lo} vs mid {mid}");
+    assert!(mid <= hi * 1.05, "mid {mid} vs hi {hi}");
+}
+
+#[test]
+fn no_contention_means_policies_agree() {
+    // at very light load every policy serves immediately: TTLT within 2%
+    let mut vals = Vec::new();
+    for policy in [PolicyKind::Fcfs, PolicyKind::Ssjf, PolicyKind::SageSched] {
+        vals.push(ttlt(cfg(policy, 1.0, 300)));
+    }
+    let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+    let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(
+        (max - min) / min < 0.02,
+        "policies disagree at light load: {vals:?}"
+    );
+}
+
+#[test]
+fn alpaca_gains_most_from_hybrid_cost() {
+    // the paper's fig8 story: long-input datasets are where output-length-
+    // only scheduling mis-prices requests most. Compare SageSched's
+    // resource-bound cost vs output-len cost on Alpaca: the hybrid model
+    // must not be worse.
+    let mut base = cfg(PolicyKind::SageSched, 10.0, 600);
+    base.workload = WorkloadConfig::single(DatasetKind::Alpaca);
+    base.workload.rps = 10.0;
+    base.workload.n_requests = 600;
+    let hybrid = ttlt(base.clone());
+    let mut ol = base.clone();
+    ol.cost_model = sagesched::config::CostModelKind::OutputLen;
+    let output_only = ttlt(ol);
+    assert!(
+        hybrid <= output_only * 1.05,
+        "hybrid {hybrid} should not lose to output-only {output_only} on alpaca"
+    );
+}
+
+#[test]
+fn finish_guard_reduces_wasted_preemptions() {
+    // with the IO-aware finish guard, requests about to drain are not
+    // swapped out; total preemptions should not increase
+    let mut with_guard = cfg(PolicyKind::SageSched, 11.0, 600);
+    with_guard.preempt_finish_guard = 24;
+    let mut without = with_guard.clone();
+    without.preempt_finish_guard = 0;
+    without.preempt_hysteresis = 0.0;
+    let mut p_with = 0;
+    let mut p_without = 0;
+    for seed in [0, 1] {
+        let mut a = with_guard.clone();
+        a.seed = seed;
+        p_with += run_experiment(&a).unwrap().preemptions;
+        let mut b = without.clone();
+        b.seed = seed;
+        p_without += run_experiment(&b).unwrap().preemptions;
+    }
+    assert!(
+        p_with <= p_without,
+        "guarded preemptions {p_with} !<= unguarded {p_without}"
+    );
+}
+
+#[test]
+fn sagesched_robust_to_noise_relative_to_mean_policy() {
+    // fig11: noise degrades the Gittins-based policy less than Mean
+    let mut sage_clean = cfg(PolicyKind::SageSched, 10.0, 700);
+    sage_clean.predictor = PredictorKind::History;
+    let mut sage_noisy = sage_clean.clone();
+    sage_noisy.noise_mix = 0.2;
+    let mut mean_clean = sage_clean.clone();
+    mean_clean.policy = PolicyKind::MeanCost;
+    let mut mean_noisy = mean_clean.clone();
+    mean_noisy.noise_mix = 0.2;
+    let sage_deg = ttlt(sage_noisy) / ttlt(sage_clean);
+    let mean_deg = ttlt(mean_noisy) / ttlt(mean_clean);
+    assert!(
+        sage_deg < mean_deg * 1.1,
+        "sagesched degradation {sage_deg} vs mean {mean_deg}"
+    );
+}
+
+#[test]
+fn gittins_refresh_beats_static_gittins() {
+    // fig11's other half: runtime refresh must help (bimodal workload)
+    let refresh = ttlt(cfg(PolicyKind::SageSched, 10.0, 800));
+    let static_g = ttlt(cfg(PolicyKind::GittinsStatic, 10.0, 800));
+    assert!(
+        refresh < static_g,
+        "refresh {refresh} !< static {static_g}"
+    );
+}
+
+#[test]
+fn oracle_srpt_bounds_predictive_policies() {
+    // no prediction-based policy should beat full-information SRPT by a
+    // meaningful margin (sanity on the information hierarchy)
+    let oracle = ttlt(cfg(PolicyKind::OracleSrpt, 10.0, 800));
+    for policy in [PolicyKind::Ssjf, PolicyKind::Trail, PolicyKind::SageSched] {
+        let t = ttlt(cfg(policy, 10.0, 800));
+        assert!(
+            t > oracle * 0.92,
+            "{policy:?} {t} implausibly beats oracle {oracle}"
+        );
+    }
+}
+
+#[test]
+fn throughput_approaches_offered_load_when_stable() {
+    let mut c = cfg(PolicyKind::SageSched, 4.0, 600);
+    c.warmup_fraction = 0.1;
+    let r = run_experiment(&c).unwrap();
+    assert!(
+        r.throughput > 3.0,
+        "throughput {} too far below offered 4 rps",
+        r.throughput
+    );
+}
+
+#[test]
+fn h800_profile_is_slower_per_request_than_a40() {
+    // bigger model ⇒ higher per-token latency at identical light load
+    let mut a40 = cfg(PolicyKind::Fcfs, 1.0, 200);
+    a40.engine = sagesched::config::EngineProfile::a40_llama8b();
+    let mut h800 = a40.clone();
+    h800.engine = sagesched::config::EngineProfile::h800_qwen32b();
+    assert!(ttlt(h800) > ttlt(a40));
+}

@@ -1,0 +1,199 @@
+//! Integration tests: whole-stack simulated serving across policies,
+//! preemption modes, datasets and configs.
+
+use sagesched::config::{
+    DatasetKind, ExperimentConfig, PolicyKind, PredictorKind, PreemptMode, WorkloadConfig,
+};
+use sagesched::metrics::RunReport;
+use sagesched::serve::{build_sim_coordinator, run_experiment};
+use sagesched::util::json::Json;
+use sagesched::workload::WorkloadGen;
+
+fn cfg_with(policy: PolicyKind, n: usize, rps: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = policy;
+    cfg.workload.n_requests = n;
+    cfg.workload.rps = rps;
+    cfg.warmup_fraction = 0.0;
+    cfg
+}
+
+#[test]
+fn every_policy_completes_and_accounts() {
+    for policy in PolicyKind::ALL {
+        let cfg = cfg_with(policy, 150, 10.0);
+        let r = run_experiment(&cfg).unwrap();
+        assert_eq!(r.measured, 150, "{policy:?}");
+        assert!(r.ttlt.mean > 0.0 && r.ttft.mean > 0.0);
+        assert!(r.ttft.mean <= r.ttlt.mean);
+        assert!(r.busy_decode > 0.0);
+        assert!(r.decode_steps > 0);
+    }
+}
+
+#[test]
+fn sagesched_beats_fcfs_under_heavy_load() {
+    let sage = run_experiment(&cfg_with(PolicyKind::SageSched, 800, 10.0)).unwrap();
+    let fcfs = run_experiment(&cfg_with(PolicyKind::Fcfs, 800, 10.0)).unwrap();
+    assert!(
+        sage.ttlt.mean < fcfs.ttlt.mean * 0.9,
+        "sagesched {:.2} !< 0.9 * fcfs {:.2}",
+        sage.ttlt.mean,
+        fcfs.ttlt.mean
+    );
+}
+
+#[test]
+fn preemption_modes_both_complete() {
+    for mode in [PreemptMode::Swap, PreemptMode::Recompute] {
+        let mut cfg = cfg_with(PolicyKind::SageSched, 250, 12.0);
+        cfg.preempt_mode = mode;
+        let r = run_experiment(&cfg).unwrap();
+        assert_eq!(r.measured, 250, "{mode:?}");
+    }
+}
+
+#[test]
+fn recompute_is_costlier_than_swap_under_churn() {
+    // recompute re-runs prefill for prompt+generated; with long Alpaca
+    // prompts it should not be cheaper than swapping
+    let mut base = cfg_with(PolicyKind::Trail, 400, 12.0);
+    base.workload = WorkloadConfig::single(DatasetKind::Alpaca);
+    base.workload.n_requests = 400;
+    base.workload.rps = 12.0;
+    let mut swap_cfg = base.clone();
+    swap_cfg.preempt_mode = PreemptMode::Swap;
+    let mut rec_cfg = base.clone();
+    rec_cfg.preempt_mode = PreemptMode::Recompute;
+    let swap = run_experiment(&swap_cfg).unwrap();
+    let rec = run_experiment(&rec_cfg).unwrap();
+    if swap.preemptions > 50 && rec.preemptions > 50 {
+        assert!(rec.busy_prefill >= swap.busy_prefill);
+    }
+}
+
+#[test]
+fn single_dataset_workloads_complete() {
+    for ds in DatasetKind::ALL {
+        let mut cfg = cfg_with(PolicyKind::SageSched, 120, 8.0);
+        cfg.workload = WorkloadConfig::single(ds);
+        cfg.workload.n_requests = 120;
+        let r = run_experiment(&cfg).unwrap();
+        assert_eq!(r.measured, 120, "{ds:?}");
+        assert_eq!(r.ttlt_by_dataset.len(), 1);
+    }
+}
+
+#[test]
+fn predictors_all_drive_sagesched() {
+    for pred in [
+        PredictorKind::History,
+        PredictorKind::LengthHistory,
+        PredictorKind::Proxy,
+        PredictorKind::Oracle,
+    ] {
+        let mut cfg = cfg_with(PolicyKind::SageSched, 150, 9.0);
+        cfg.predictor = pred;
+        let r = run_experiment(&cfg).unwrap();
+        assert_eq!(r.measured, 150, "{pred:?}");
+    }
+}
+
+#[test]
+fn report_json_roundtrips() {
+    let r = run_experiment(&cfg_with(PolicyKind::SageSched, 80, 8.0)).unwrap();
+    let j = Json::parse(&r.to_json().to_string()).unwrap();
+    assert_eq!(j.str_or("policy", ""), "sagesched");
+    assert_eq!(j.get("measured").unwrap().as_u64(), Some(80));
+    assert!(j.get("ttlt").unwrap().f64_or("mean", -1.0) > 0.0);
+}
+
+#[test]
+fn experiment_is_deterministic_per_seed() {
+    let a = run_experiment(&cfg_with(PolicyKind::SageSched, 150, 9.0)).unwrap();
+    let b = run_experiment(&cfg_with(PolicyKind::SageSched, 150, 9.0)).unwrap();
+    assert_eq!(a.ttlt.mean, b.ttlt.mean);
+    assert_eq!(a.preemptions, b.preemptions);
+    let mut cfg = cfg_with(PolicyKind::SageSched, 150, 9.0);
+    cfg.seed = 1;
+    let c = run_experiment(&cfg).unwrap();
+    assert_ne!(a.ttlt.mean, c.ttlt.mean);
+}
+
+#[test]
+fn config_json_drives_experiment() {
+    let j = Json::parse(
+        r#"{"policy":"fcfs","engine":"h800-qwen32b",
+            "workload":{"rps":6,"n_requests":60}}"#,
+    )
+    .unwrap();
+    let mut cfg = ExperimentConfig::from_json(&j).unwrap();
+    cfg.warmup_fraction = 0.0;
+    let r = run_experiment(&cfg).unwrap();
+    assert_eq!(r.policy, "fcfs");
+    assert_eq!(r.measured, 60);
+}
+
+#[test]
+fn coordinator_stepwise_api() {
+    // drive the coordinator manually (as the HTTP server does)
+    let cfg = cfg_with(PolicyKind::SageSched, 0, 8.0);
+    let mut coord = build_sim_coordinator(&cfg);
+    let mut wl = cfg.workload.clone();
+    wl.n_requests = 10;
+    let reqs = WorkloadGen::new(wl, 3).generate().requests;
+    for mut r in reqs {
+        r.arrival = 0.0;
+        coord.submit(r);
+    }
+    assert_eq!(coord.live_count(), 10);
+    let mut steps = 0;
+    while coord.step().unwrap() {
+        steps += 1;
+        assert!(steps < 100_000, "stuck");
+    }
+    assert_eq!(coord.outcomes().len(), 10);
+    assert_eq!(coord.live_count(), 0);
+}
+
+#[test]
+fn on_complete_callback_fires_for_every_request() {
+    let cfg = cfg_with(PolicyKind::Fcfs, 0, 8.0);
+    let mut coord = build_sim_coordinator(&cfg);
+    let counter = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let c2 = counter.clone();
+    coord.on_complete = Some(Box::new(move |_out, _eng| {
+        c2.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    }));
+    let mut wl = cfg.workload.clone();
+    wl.n_requests = 25;
+    coord
+        .run_workload(WorkloadGen::new(wl, 4).generate().requests)
+        .unwrap();
+    assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 25);
+}
+
+#[test]
+fn markdown_report_emission() {
+    let r = run_experiment(&cfg_with(PolicyKind::Ltr, 60, 6.0)).unwrap();
+    let header = RunReport::markdown_header();
+    let row = r.markdown_row();
+    assert!(header.contains("TTLT"));
+    assert!(row.contains("ltr"));
+}
+
+#[test]
+fn noise_degrades_gracefully_not_catastrophically() {
+    let clean = run_experiment(&cfg_with(PolicyKind::SageSched, 400, 10.0)).unwrap();
+    let mut noisy_cfg = cfg_with(PolicyKind::SageSched, 400, 10.0);
+    noisy_cfg.noise_mix = 0.2;
+    let noisy = run_experiment(&noisy_cfg).unwrap();
+    assert_eq!(noisy.measured, 400);
+    // the paper's fig11: uncertainty-aware scheduling is robust to noise
+    assert!(
+        noisy.ttlt.mean < clean.ttlt.mean * 1.5,
+        "noise blew up TTLT: {:.2} vs {:.2}",
+        noisy.ttlt.mean,
+        clean.ttlt.mean
+    );
+}

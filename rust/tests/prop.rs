@@ -1,0 +1,358 @@
+//! Property-based tests (hand-rolled generator harness — proptest is not
+//! available offline). Each property runs against a few hundred randomized
+//! cases with seeds printed on failure.
+
+use sagesched::cost::make_cost_model;
+use sagesched::config::CostModelKind;
+use sagesched::distribution::LengthDist;
+use sagesched::embedding::{Embedding, FlatIndex};
+use sagesched::gittins::{gittins_index, gittins_index_at_age};
+use sagesched::kvcache::KvManager;
+use sagesched::util::json::Json;
+use sagesched::util::rng::Rng;
+
+/// Run `f` over `cases` seeded inputs; panics include the failing seed.
+fn for_all(cases: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9e3779b9) ^ 0xabcd);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(">>> property failed at case seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_dist(rng: &mut Rng) -> LengthDist {
+    let n = 1 + rng.below(40) as usize;
+    let samples: Vec<f64> = (0..n.max(2))
+        .map(|_| {
+            let mu = rng.range_f64(2.0, 7.0);
+            let sigma = rng.range_f64(0.1, 1.2);
+            rng.lognormal(mu, sigma).max(0.5)
+        })
+        .collect();
+    LengthDist::from_samples(&samples)
+}
+
+// ---------------------------------------------------------------------------
+// distribution invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dist_probabilities_normalized_and_sorted() {
+    for_all(300, |rng| {
+        let d = random_dist(rng);
+        let sum: f64 = d.probs().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "probs sum {sum}");
+        for w in d.support().windows(2) {
+            assert!(w[1] > w[0], "support not strictly increasing");
+        }
+    });
+}
+
+#[test]
+fn prop_cdf_monotone_and_quantile_consistent() {
+    for_all(200, |rng| {
+        let d = random_dist(rng);
+        let mut prev = 0.0;
+        for &v in d.support() {
+            let c = d.cdf(v);
+            assert!(c >= prev - 1e-12);
+            prev = c;
+        }
+        assert!((d.cdf(d.max()) - 1.0).abs() < 1e-9);
+        for q in [0.0, 0.25, 0.5, 0.9, 1.0] {
+            let x = d.quantile(q);
+            assert!(d.cdf(x) >= q - 1e-9, "cdf(quantile({q})) too small");
+        }
+    });
+}
+
+#[test]
+fn prop_conditional_excess_preserves_mass_and_shifts() {
+    for_all(300, |rng| {
+        let d = random_dist(rng);
+        let age = rng.range_f64(0.0, d.max() * 1.2);
+        match d.conditional_excess(age) {
+            Some(c) => {
+                let sum: f64 = c.probs().iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9);
+                assert!(c.min() > 0.0);
+                // E[X - a | X > a] >= E[X] - a always
+                assert!(c.mean() >= d.mean() - age - 1e-6);
+            }
+            None => assert!(age >= d.max() - 1e-12),
+        }
+    });
+}
+
+#[test]
+fn prop_compress_preserves_mean_and_bounds() {
+    for_all(200, |rng| {
+        let d = random_dist(rng);
+        let k = 1 + rng.below(16) as usize;
+        let c = d.compress(k);
+        assert!(c.len() <= k + 1);
+        assert!((c.mean() - d.mean()).abs() <= d.mean() * 0.25 + 1e-9);
+        assert!(c.min() >= d.min() - 1e-9);
+        assert!(c.max() <= d.max() + 1e-9);
+    });
+}
+
+#[test]
+fn prop_mix_mean_is_convex_combination() {
+    for_all(200, |rng| {
+        let a = random_dist(rng);
+        let b = random_dist(rng);
+        let w = rng.f64();
+        let m = a.mix(&b, w);
+        let want = a.mean() * (1.0 - w) + b.mean() * w;
+        assert!((m.mean() - want).abs() < 1e-6 * want.max(1.0));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// gittins invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gittins_bounded_by_min_and_mean() {
+    for_all(400, |rng| {
+        let d = random_dist(rng);
+        let g = gittins_index(&d);
+        assert!(g >= d.min() - 1e-9, "index below min support");
+        assert!(g <= d.mean() + 1e-9, "index above mean");
+        assert!(g.is_finite());
+    });
+}
+
+#[test]
+fn prop_gittins_scale_equivariant() {
+    for_all(200, |rng| {
+        let d = random_dist(rng);
+        let k = rng.range_f64(0.1, 50.0);
+        let scaled = d.map_monotonic(|x| x * k);
+        let g1 = gittins_index(&d) * k;
+        let g2 = gittins_index(&scaled);
+        assert!((g1 - g2).abs() < 1e-6 * g1.max(1.0), "{g1} vs {g2}");
+    });
+}
+
+#[test]
+fn prop_gittins_two_point_exact_values() {
+    // closed-form checks for the two-point distribution:
+    //  - before the short mode: G = min((lo-a)/p, mean-a-ish bound)
+    //  - after the short mode dies: remaining is a point mass at hi-a
+    for_all(200, |rng| {
+        let lo = rng.range_f64(1.0, 50.0);
+        let hi = lo + rng.range_f64(10.0, 500.0);
+        let p = rng.range_f64(0.05, 0.95);
+        let d = LengthDist::from_weighted(&[(lo, p), (hi, 1.0 - p)]);
+        // age within (lo, hi): conditional is a point mass at hi - a
+        let a = lo + (hi - lo) * rng.range_f64(0.05, 0.9);
+        let g = gittins_index_at_age(&d, a);
+        assert!((g - (hi - a)).abs() < 1e-6 * hi, "point-mass tail: {g} vs {}", hi - a);
+        // age within (0, lo): index is exactly min((lo-a)/p, E[X]-a)
+        let a2 = lo * rng.f64() * 0.99;
+        let g2 = gittins_index_at_age(&d, a2);
+        let mean_rem = d.mean() - a2;
+        let want = ((lo - a2) / p).min(mean_rem);
+        assert!((g2 - want).abs() < 1e-6 * want.max(1.0), "{g2} vs {want}");
+    });
+}
+
+#[test]
+fn prop_gittins_point_mass_equals_value() {
+    for_all(100, |rng| {
+        let v = rng.range_f64(0.1, 1e6);
+        let d = LengthDist::point(v);
+        assert!((gittins_index(&d) - v).abs() < 1e-9 * v.max(1.0));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// cost model invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cost_models_monotone_and_consistent() {
+    for_all(200, |rng| {
+        for kind in [
+            CostModelKind::ResourceBound,
+            CostModelKind::OutputLen,
+            CostModelKind::OverallLen,
+        ] {
+            let m = make_cost_model(kind);
+            let i = rng.below(3000) as u32;
+            let o1 = rng.range_f64(1.0, 2000.0);
+            let o2 = o1 + rng.range_f64(0.5, 500.0);
+            assert!(m.cost(i, o2) > m.cost(i, o1), "{kind:?} not monotone");
+            let g = rng.below(500) as u32;
+            assert!((m.consumed(i, g) - m.cost(i, g as f64)).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_cost_dist_transform_is_order_preserving() {
+    for_all(150, |rng| {
+        let d = random_dist(rng);
+        let m = make_cost_model(CostModelKind::ResourceBound);
+        let i = rng.below(2000) as u32;
+        let cd = m.cost_dist(i, &d);
+        assert_eq!(cd.len(), d.len());
+        assert_eq!(cd.probs(), d.probs());
+        for w in cd.support().windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// kv manager: conservation + capacity under random op sequences
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kv_manager_never_exceeds_capacity() {
+    for_all(150, |rng| {
+        let blocks = 4 + rng.below(60) as usize;
+        let bt = 1 + rng.below(32) as usize;
+        let mut kv = KvManager::new(blocks * bt, bt);
+        let mut live: Vec<u64> = Vec::new();
+        let mut swapped: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..300 {
+            match rng.below(5) {
+                0 => {
+                    let tokens = 1 + rng.below((blocks * bt) as u64 / 2) as usize;
+                    if kv.can_allocate(tokens) {
+                        kv.grow_to(next_id, tokens);
+                        live.push(next_id);
+                        next_id += 1;
+                    }
+                }
+                1 => {
+                    if let Some(&id) = live.first() {
+                        let cur = kv.tokens_of(id);
+                        if kv.can_grow_to(id, cur + 1) {
+                            assert!(kv.grow_to(id, cur + 1));
+                        }
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let idx = rng.below(live.len() as u64) as usize;
+                        let id = live.swap_remove(idx);
+                        kv.release(id);
+                    }
+                }
+                3 => {
+                    if !live.is_empty() {
+                        let idx = rng.below(live.len() as u64) as usize;
+                        let id = live.swap_remove(idx);
+                        kv.swap_out(id);
+                        swapped.push(id);
+                    }
+                }
+                _ => {
+                    if !swapped.is_empty() {
+                        let idx = rng.below(swapped.len() as u64) as usize;
+                        let id = swapped[idx];
+                        if kv.swap_in(id).is_some() {
+                            swapped.swap_remove(idx);
+                            live.push(id);
+                        }
+                    }
+                }
+            }
+            // invariants
+            assert!(kv.used_blocks() <= kv.total_blocks());
+            assert_eq!(kv.used_blocks() + kv.free_blocks(), kv.total_blocks());
+            let frag = kv.fragmentation();
+            assert!((0.0..=1.0).contains(&frag));
+        }
+        for id in live.drain(..).chain(swapped.drain(..)) {
+            kv.release(id);
+        }
+        assert_eq!(kv.free_blocks(), kv.total_blocks(), "blocks leaked");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// flat index vs brute force
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_flat_index_matches_bruteforce() {
+    for_all(60, |rng| {
+        let dim = 8 + rng.below(48) as usize;
+        let n = 1 + rng.below(200) as usize;
+        let mut index: FlatIndex<usize> = FlatIndex::new(dim, n + 10);
+        let mut reference: Vec<Embedding> = Vec::new();
+        for i in 0..n {
+            let e = Embedding::random_unit(dim, rng);
+            index.insert(e.clone(), i);
+            reference.push(e);
+        }
+        let q = Embedding::random_unit(dim, rng);
+        let th = rng.range_f64(-0.2, 0.9) as f32;
+        let mut got: Vec<usize> =
+            index.search_threshold(&q, th).iter().map(|(_, &p)| p).collect();
+        got.sort_unstable();
+        let mut want: Vec<usize> = reference
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| q.cosine(e) >= th)
+            .map(|(i, _)| i)
+            .collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// json roundtrip on random values
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.f64() < 0.5),
+        2 => Json::num((rng.normal() * 1e3).round()),
+        3 => {
+            let len = rng.below(12) as usize;
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.below(96) as u8 + 32;
+                    c as char
+                })
+                .collect();
+            Json::str(s)
+        }
+        4 => Json::arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1))),
+        _ => Json::obj(
+            (0..rng.below(5))
+                .map(|i| {
+                    let key = format!("k{i}");
+                    (key, random_json(rng, depth - 1))
+                })
+                .collect::<Vec<_>>()
+                .iter()
+                .map(|(k, v)| (k.as_str(), v.clone()))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for_all(300, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("reparse {text}: {e}"));
+        assert_eq!(parsed, v, "roundtrip mismatch for {text}");
+    });
+}
