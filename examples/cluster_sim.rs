@@ -1,41 +1,66 @@
-//! Cluster-scale serving: N simulated GPU nodes behind a least-loaded
-//! router, plus the fig12 shared-predictor overhead measurement.
+//! Cluster-scale serving: an event-driven N-replica simulation comparing
+//! the pluggable routers on one seeded workload, plus the fig12
+//! shared-predictor overhead measurement.
 //!
 //! ```text
-//! cargo run --release --example cluster_sim -- --nodes 8 --rps 8
+//! cargo run --release --example cluster_sim -- --replicas 8 --rps 24 --n 800
+//! cargo run --release --example cluster_sim -- --replicas 4 --speeds 1.0,0.5
 //! ```
 
-use sagesched::cluster::{run_cluster_experiment, ClusterSim};
+use sagesched::cluster::{run_router_experiment, ClusterSim};
 use sagesched::prelude::*;
 use sagesched::util::cli::Args;
-use sagesched::util::stats::mean;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let nodes = args.usize_or("nodes", 8);
     let mut cfg = ExperimentConfig::default();
-    cfg.workload.rps = args.f64_or("rps", 8.0);
-    cfg.workload.n_requests = args.usize_or("n-per-node", 400);
+    cfg.cluster.replicas = args.usize_or("replicas", 8);
+    cfg.workload.rps = args.f64_or("rps", 24.0);
+    cfg.workload.n_requests = args.usize_or("n", 800);
+    if let Some(s) = args.get("speeds") {
+        let speeds: Result<Vec<f64>, _> =
+            s.split(',').map(|x| x.trim().parse::<f64>()).collect();
+        let speeds = speeds.map_err(|_| anyhow::anyhow!("--speeds: bad entry in {s:?}"))?;
+        if speeds.iter().any(|&v| v <= 0.0) {
+            return Err(anyhow::anyhow!("--speeds entries must be positive, got {s}"));
+        }
+        cfg.cluster.speeds = speeds;
+    }
 
-    println!("# {nodes}-node cluster, {} rps/node\n", cfg.workload.rps);
-    let reports = run_cluster_experiment(&cfg, nodes)?;
-    println!("| node | requests | mean TTLT | p99 TTLT | mean TTFT |");
+    println!(
+        "# {}-replica cluster, {} requests @ {} rps cluster-wide\n",
+        cfg.cluster.replicas, cfg.workload.n_requests, cfg.workload.rps
+    );
+    println!("{}", ClusterReport::markdown_header());
+    let mut best: Option<ClusterReport> = None;
+    for router in RouterKind::ALL {
+        let report = run_router_experiment(&cfg, router)?;
+        println!("{}", report.markdown_row());
+        if best
+            .as_ref()
+            .map(|b| report.aggregate.ttlt.mean < b.aggregate.ttlt.mean)
+            .unwrap_or(true)
+        {
+            best = Some(report);
+        }
+    }
+    let best = best.expect("at least one router ran");
+    println!(
+        "\nbest router: {} (mean TTLT {:.2}s, imbalance {:.2})",
+        best.router, best.aggregate.ttlt.mean, best.imbalance
+    );
+    println!("\n## {} per-replica", best.router);
+    println!("| replica | routed | completed | mean TTLT | p99 TTLT |");
     println!("|---|---|---|---|---|");
-    for (i, r) in reports.iter().enumerate() {
+    for (i, r) in best.per_replica.iter().enumerate() {
         println!(
-            "| {i} | {} | {:.2} | {:.2} | {:.3} |",
-            r.measured, r.ttlt.mean, r.ttlt.p99, r.ttft.mean
+            "| {i} | {} | {} | {:.2} | {:.2} |",
+            best.routed[i], r.measured, r.ttlt.mean, r.ttlt.p99
         );
     }
-    let ttlts: Vec<f64> = reports.iter().map(|r| r.ttlt.mean).collect();
-    println!(
-        "\ncluster mean TTLT {:.2}s (node spread {:.2}..{:.2})",
-        mean(&ttlts),
-        ttlts.iter().cloned().fold(f64::INFINITY, f64::min),
-        ttlts.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
-    );
 
     // shared predictor/scheduler overhead at this scale (fig12)
+    let nodes = cfg.cluster.replicas;
     let sim = ClusterSim::new(cfg);
     let o = sim.measure(nodes);
     println!(

@@ -687,6 +687,40 @@ fn fig12(ctx: &Ctx) {
 }
 
 // ===========================================================================
+// Fig 12b: event-driven cluster — router A/B on one seeded workload
+// ===========================================================================
+fn fig12b(ctx: &Ctx) {
+    println!("\n=== fig12b: router comparison (event-driven 4-replica cluster) ===");
+    let mut cfg = base_cfg();
+    cfg.cluster.replicas = 4;
+    // heterogeneous fleet: two fast replicas, two at half speed
+    cfg.cluster.speeds = vec![1.0, 1.0, 0.5, 0.5];
+    cfg.workload.rps = 20.0;
+    cfg.workload.n_requests = ctx.n_requests(1200);
+    println!("{}", sagesched::metrics::ClusterReport::markdown_header());
+    let mut rows = Vec::new();
+    for router in sagesched::config::RouterKind::ALL {
+        let r = sagesched::cluster::run_router_experiment(&cfg, router)
+            .expect("cluster experiment failed");
+        println!("{}", r.markdown_row());
+        rows.push(format!(
+            "{},{:.4},{:.4},{:.4},{:.4},{:.3}",
+            r.router,
+            r.aggregate.ttlt.mean,
+            r.aggregate.ttlt.p90,
+            r.aggregate.ttft.mean,
+            r.aggregate.throughput,
+            r.imbalance
+        ));
+    }
+    write_csv(
+        "fig12b",
+        "router,ttlt_mean,ttlt_p90,ttft_mean,throughput,imbalance",
+        &rows,
+    );
+}
+
+// ===========================================================================
 // Fig 13: sensitivity
 // ===========================================================================
 fn fig13a(ctx: &Ctx) {
@@ -821,6 +855,7 @@ fn main() {
         ("fig10", fig10),
         ("fig11", fig11),
         ("fig12", fig12),
+        ("fig12b", fig12b),
         ("fig13a", fig13a),
         ("fig13b", fig13b),
     ];

@@ -1,28 +1,518 @@
-//! Multi-node cluster simulation (§4.4 scalability, Fig. 12).
+//! Multi-replica cluster serving (§4.4 scalability).
 //!
-//! Simulates up to 64 GPU nodes, each running its own coordinator instance
-//! at 8 RPS with up to 1,000 queued requests, behind a least-loaded router
-//! and a *shared* prediction service (one embedding index serving the whole
-//! cluster, as the paper's centralized scheduler does). The quantities the
-//! paper reports — per-request **predicting latency** and **scheduling
-//! latency** as the cluster grows — are *measured wallclock* here: real
-//! FlatIndex searches over a 10k-record window under the cluster's
-//! aggregate arrival rate, and real priority evaluation + batch packing at
-//! the configured queue depth, plus M/M/1 queueing delay at the shared
-//! predictor implied by the measured service time.
+//! Two modes live here:
+//!
+//! **Event-driven cluster simulation** (the primary mode): N replicas, each
+//! a full [`Coordinator`]`<`[`SimEngine`]`>` — real continuous batching,
+//! KV-block accounting, preemption — driven on a shared *virtual* clock
+//! behind a pluggable [`Router`]. The event loop interleaves replica
+//! scheduling iterations and request arrivals in global-time order: while
+//! any busy replica's clock trails the next arrival it steps that replica
+//! (each step advances that replica's clock by its engine-charged seconds);
+//! once every busy replica has caught up, the arrival is routed using the
+//! replicas' *current* state and submitted. Replicas may be heterogeneous
+//! (per-replica speed / batch-size / KV-capacity from
+//! [`ClusterConfig`](crate::config::ClusterConfig)), and a *shared*
+//! prediction service (one history index fronting the whole cluster, as the
+//! paper's centralized scheduler has) prices each arrival for the
+//! cost-aware router and learns online from every replica's completions.
+//!
+//! Routers: `round-robin`, `least-loaded` (live-request count), `least-kv`
+//! (KV-block occupancy), and `cost-aware` (predicted outstanding cost from
+//! the shared predictor's [`LengthDist`], normalized by replica speed).
+//!
+//! **Overhead measurement** (the legacy fig12 mode, [`ClusterSim`]):
+//! wallclock-measured per-request predicting/scheduling latency of the
+//! shared services as the cluster grows, with M/M/1 queueing at the shared
+//! predictor. Kept as a secondary mode behind `sagesched cluster
+//! --overhead`.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, RouterKind};
+use crate::core::{Request, RequestId};
 use crate::cost::CostModel;
 use crate::distribution::LengthDist;
+use crate::engine::{Engine, SimEngine};
 use crate::gittins::gittins_index_at_age;
+use crate::metrics::{ClusterReport, RunReport};
 use crate::predictor::{HistoryPredictor, Predictor};
+use crate::serve::Coordinator;
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
 use crate::workload::WorkloadGen;
 
-/// Result of one cluster-scale measurement.
+// ===========================================================================
+// Routers
+// ===========================================================================
+
+/// Snapshot of one replica's state at routing time.
+#[derive(Clone, Debug)]
+pub struct ReplicaView {
+    /// Replica index.
+    pub id: usize,
+    /// Live requests (queued + running + preempted).
+    pub live: usize,
+    /// Allocated KV blocks.
+    pub kv_used_blocks: usize,
+    /// Total KV blocks.
+    pub kv_total_blocks: usize,
+    /// Replica-local virtual clock (seconds).
+    pub now: f64,
+    /// Speed multiplier of this replica (1.0 = base profile).
+    pub speed: f64,
+    /// Max decode batch of this replica.
+    pub max_batch: usize,
+    /// Sum of predicted E[total cost] of requests routed here that have not
+    /// completed yet (maintained by the cluster from the shared predictor).
+    pub predicted_backlog: f64,
+}
+
+impl ReplicaView {
+    /// KV occupancy fraction in [0, 1].
+    pub fn kv_occupancy(&self) -> f64 {
+        if self.kv_total_blocks == 0 {
+            0.0
+        } else {
+            self.kv_used_blocks as f64 / self.kv_total_blocks as f64
+        }
+    }
+}
+
+/// A cluster front-door routing policy. Implementations must be
+/// deterministic given the same request/view sequence so cluster runs are
+/// exactly reproducible.
+pub trait Router: Send {
+    fn kind(&self) -> RouterKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Pick a replica index for `req`. `predicted_cost` is the shared
+    /// predictor's E[total service cost] for this request (cost-model
+    /// units); `replicas` is never empty.
+    fn route(&mut self, req: &Request, predicted_cost: f64, replicas: &[ReplicaView]) -> usize;
+}
+
+/// Cycle through replicas in submission order.
+#[derive(Default)]
+pub struct RoundRobinRouter {
+    next: usize,
+}
+
+impl Router for RoundRobinRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::RoundRobin
+    }
+
+    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
+        let i = self.next % replicas.len();
+        self.next = self.next.wrapping_add(1);
+        i
+    }
+}
+
+/// Fewest live requests; ties break to the lowest replica index.
+#[derive(Default)]
+pub struct LeastLoadedRouter;
+
+impl Router for LeastLoadedRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::LeastLoaded
+    }
+
+    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
+        let loads: Vec<usize> = replicas.iter().map(|r| r.live).collect();
+        route_least_loaded(&loads)
+    }
+}
+
+/// Lowest KV-block occupancy fraction; ties break to the lowest index.
+#[derive(Default)]
+pub struct LeastKvRouter;
+
+impl Router for LeastKvRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::LeastKv
+    }
+
+    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
+        let mut best = 0usize;
+        let mut best_occ = f64::INFINITY;
+        for r in replicas {
+            let occ = r.kv_occupancy();
+            if occ < best_occ {
+                best_occ = occ;
+                best = r.id;
+            }
+        }
+        best
+    }
+}
+
+/// Smallest predicted outstanding cost normalized by replica speed — the
+/// uncertainty-aware router: it routes by E[remaining work], not by request
+/// *count*, so a replica stuck with a few predicted-long generations stops
+/// attracting traffic even while its live count is low.
+#[derive(Default)]
+pub struct CostAwareRouter;
+
+impl Router for CostAwareRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::CostAware
+    }
+
+    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
+        let mut best = 0usize;
+        let mut best_load = f64::INFINITY;
+        for r in replicas {
+            let load = r.predicted_backlog / r.speed.max(1e-9);
+            if load < best_load {
+                best_load = load;
+                best = r.id;
+            }
+        }
+        best
+    }
+}
+
+/// Build a router from its kind.
+pub fn make_router(kind: RouterKind) -> Box<dyn Router> {
+    match kind {
+        RouterKind::RoundRobin => Box::new(RoundRobinRouter::default()),
+        RouterKind::LeastLoaded => Box::new(LeastLoadedRouter),
+        RouterKind::LeastKv => Box::new(LeastKvRouter),
+        RouterKind::CostAware => Box::new(CostAwareRouter),
+    }
+}
+
+/// Least-loaded routing decision across per-node live counts (exposed for
+/// tests and the cluster example).
+pub fn route_least_loaded(loads: &[usize]) -> usize {
+    loads
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, &l)| l)
+        .map(|(i, _)| i)
+        .expect("route over empty cluster")
+}
+
+// ===========================================================================
+// Event-driven cluster
+// ===========================================================================
+
+/// One serving replica inside the event-driven cluster.
+pub struct ClusterReplica {
+    pub coord: Coordinator<SimEngine>,
+    /// Speed multiplier this replica was built with.
+    pub speed: f64,
+    /// Outcomes already drained into cluster-level bookkeeping.
+    seen_outcomes: usize,
+    /// Timeout-aborts already reconciled into cluster-level bookkeeping.
+    seen_aborted: u64,
+}
+
+/// The event-driven multi-replica cluster: N coordinators on a shared
+/// virtual clock behind a [`Router`], with a shared prediction service.
+pub struct EventCluster {
+    pub cfg: ExperimentConfig,
+    pub replicas: Vec<ClusterReplica>,
+    pub router: Box<dyn Router>,
+    /// Shared prediction service (prices arrivals; learns from completions).
+    pub predictor: Box<dyn Predictor>,
+    cost: Box<dyn CostModel>,
+    /// id -> (replica, predicted E[total cost], original request).
+    in_flight: HashMap<RequestId, (usize, f64, Request)>,
+    /// Per-replica sum of predicted cost of in-flight requests.
+    backlog: Vec<f64>,
+    /// Per-replica routed-request counts.
+    pub routed: Vec<u64>,
+    /// Requests refused at admission (coordinator queue full).
+    pub rejected: u64,
+}
+
+impl EventCluster {
+    /// Build a cluster from `cfg` (replica count / router / heterogeneity
+    /// from `cfg.cluster`), overriding the router with `router`.
+    pub fn with_router(cfg: &ExperimentConfig, router: RouterKind) -> EventCluster {
+        let n = cfg.cluster.replicas.max(1);
+        let replicas: Vec<ClusterReplica> = (0..n)
+            .map(|i| {
+                let profile = cfg.cluster.replica_profile(&cfg.engine, i);
+                let seed = cfg.seed ^ ((i as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+                ClusterReplica {
+                    coord: crate::serve::build_sim_coordinator_with(cfg, profile, seed),
+                    speed: cfg.cluster.speed_of(i),
+                    seen_outcomes: 0,
+                    seen_aborted: 0,
+                }
+            })
+            .collect();
+        let predictor = crate::predictor::make_predictor(
+            cfg.predictor,
+            cfg.workload.embed_dim,
+            cfg.history_capacity,
+            cfg.similarity_threshold,
+            cfg.seed ^ 0xc175_7e12,
+        );
+        EventCluster {
+            cfg: cfg.clone(),
+            backlog: vec![0.0; n],
+            routed: vec![0; n],
+            rejected: 0,
+            replicas,
+            router: make_router(router),
+            predictor,
+            cost: crate::cost::make_cost_model(cfg.cost_model),
+            in_flight: HashMap::new(),
+        }
+    }
+
+    /// Build with the router configured in `cfg.cluster.router`.
+    pub fn new(cfg: &ExperimentConfig) -> EventCluster {
+        EventCluster::with_router(cfg, cfg.cluster.router)
+    }
+
+    /// Pre-warm the shared predictor and every replica's local predictor
+    /// with the offline corpus (`cfg.history_prewarm`).
+    pub fn prewarm(&mut self) {
+        crate::serve::prewarm_predictor(self.predictor.as_mut(), &self.cfg);
+        for r in &mut self.replicas {
+            crate::serve::prewarm_predictor(r.coord.predictor.as_mut(), &self.cfg);
+        }
+    }
+
+    fn views(&self) -> Vec<ReplicaView> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ReplicaView {
+                id: i,
+                live: r.coord.live_count(),
+                kv_used_blocks: r.coord.kv.used_blocks(),
+                kv_total_blocks: r.coord.kv.total_blocks(),
+                now: r.coord.now(),
+                speed: r.speed,
+                max_batch: r.coord.engine.max_batch(),
+                predicted_backlog: self.backlog[i],
+            })
+            .collect()
+    }
+
+    /// Index and clock of the busy replica with the smallest virtual time,
+    /// if any replica has live work.
+    fn earliest_busy(&self) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            if r.coord.is_idle() {
+                continue;
+            }
+            let t = r.coord.now();
+            if best.map_or(true, |(_, bt)| t < bt) {
+                best = Some((i, t));
+            }
+        }
+        best
+    }
+
+    /// Route and submit one arrival at its arrival time.
+    fn dispatch(&mut self, req: Request) {
+        let pred = self.predictor.predict(&req);
+        let pcost = self.cost.cost_dist(req.input_len, &pred).mean();
+        let views = self.views();
+        let i = self.router.route(&req, pcost, &views).min(views.len() - 1);
+        let id = req.id;
+        self.replicas[i].coord.advance_to(req.arrival);
+        if self.replicas[i].coord.submit(req.clone()) {
+            self.in_flight.insert(id, (i, pcost, req));
+            self.backlog[i] += pcost;
+            self.routed[i] += 1;
+        } else {
+            self.rejected += 1;
+        }
+    }
+
+    /// Run one scheduling iteration on replica `i` and drain its new
+    /// completions into cluster bookkeeping (backlog release + shared
+    /// predictor learning). Returns false when the step made no observable
+    /// progress (clock, completions, aborts, and live set all unchanged) —
+    /// with live work that means the replica is wedged (e.g. a request that
+    /// can never fit its KV capacity) and the caller must not keep spinning.
+    fn step_replica(&mut self, i: usize) -> anyhow::Result<bool> {
+        let (now0, live0) = {
+            let c = &self.replicas[i].coord;
+            (c.now(), c.live_count())
+        };
+        self.replicas[i].coord.step()?;
+        let new: Vec<(RequestId, u32)> = {
+            let r = &self.replicas[i];
+            r.coord.outcomes()[r.seen_outcomes..]
+                .iter()
+                .map(|o| (o.id, o.output_len))
+                .collect()
+        };
+        self.replicas[i].seen_outcomes += new.len();
+        let progressed = !new.is_empty()
+            || self.replicas[i].coord.now() > now0
+            || self.replicas[i].coord.live_count() != live0;
+        for (id, output_len) in new {
+            if let Some((rep, pcost, req)) = self.in_flight.remove(&id) {
+                self.backlog[rep] = (self.backlog[rep] - pcost).max(0.0);
+                self.predictor.observe(&req, output_len);
+            }
+        }
+        // Reconcile timeout-aborts: they leave the live set without an
+        // outcome, so their backlog contribution must be released here or
+        // the cost-aware router would shun this replica forever.
+        if self.replicas[i].coord.aborted > self.replicas[i].seen_aborted {
+            self.replicas[i].seen_aborted = self.replicas[i].coord.aborted;
+            let coord = &self.replicas[i].coord;
+            let gone: Vec<RequestId> = self
+                .in_flight
+                .iter()
+                .filter(|(id, entry)| entry.0 == i && !coord.is_live(**id))
+                .map(|(id, _)| *id)
+                .collect();
+            for id in gone {
+                if let Some((rep, pcost, _)) = self.in_flight.remove(&id) {
+                    self.backlog[rep] = (self.backlog[rep] - pcost).max(0.0);
+                }
+            }
+        }
+        Ok(progressed)
+    }
+
+    /// Drive the full arrival stream to completion: global-time-ordered
+    /// interleaving of replica iterations and routed arrivals, then drain.
+    pub fn run(&mut self, mut requests: Vec<Request>) -> anyhow::Result<()> {
+        requests.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let mut idx = 0;
+        loop {
+            let next_arrival = requests.get(idx).map(|r| r.arrival);
+            match (self.earliest_busy(), next_arrival) {
+                // a busy replica trails the next arrival: advance it first
+                (Some((i, t)), Some(ta)) if t < ta => self.check_progress(i)?,
+                // all busy replicas have caught up: route the arrival
+                (_, Some(_)) => {
+                    let r = requests[idx].clone();
+                    idx += 1;
+                    self.dispatch(r);
+                }
+                // arrivals exhausted: drain remaining work
+                (Some((i, _)), None) => self.check_progress(i)?,
+                (None, None) => break,
+            }
+        }
+        Ok(())
+    }
+
+    /// Step replica `i` and fail loudly if it is wedged instead of spinning
+    /// forever. A no-progress step with live work means some request can
+    /// never be scheduled (e.g. its prompt needs more KV blocks than the
+    /// replica owns), which is a configuration error, not a transient.
+    fn check_progress(&mut self, i: usize) -> anyhow::Result<()> {
+        if !self.step_replica(i)? {
+            anyhow::bail!(
+                "replica {i} is wedged: {} live request(s) but a scheduling \
+                 iteration made no progress — its capacity (kv_capacity {} \
+                 tokens, max_batch {}) cannot serve the routed workload",
+                self.replicas[i].coord.live_count(),
+                self.replicas[i].coord.kv.total_blocks()
+                    * self.replicas[i].coord.kv.block_tokens(),
+                self.replicas[i].coord.engine.max_batch(),
+            );
+        }
+        Ok(())
+    }
+
+    /// Total completions across replicas.
+    pub fn completed(&self) -> usize {
+        self.replicas.iter().map(|r| r.coord.outcomes().len()).sum()
+    }
+
+    /// Merged outcome stream (unsorted).
+    pub fn merged_outcomes(&self) -> Vec<crate::core::RequestOutcome> {
+        let mut out = Vec::with_capacity(self.completed());
+        for r in &self.replicas {
+            out.extend_from_slice(r.coord.outcomes());
+        }
+        out
+    }
+
+    /// Cluster-level report (aggregate + per-replica).
+    pub fn report(&self, warmup_fraction: f64) -> ClusterReport {
+        let per_replica: Vec<RunReport> = self
+            .replicas
+            .iter()
+            .map(|r| r.coord.report(warmup_fraction))
+            .collect();
+        ClusterReport::new(
+            self.router.name().to_string(),
+            per_replica,
+            self.routed.clone(),
+            &self.merged_outcomes(),
+            warmup_fraction,
+        )
+    }
+}
+
+/// Run one event-driven cluster experiment with an explicit router over the
+/// config's seeded workload. Callers comparing routers call this repeatedly
+/// with the same `cfg`: the workload (same seed) is bit-identical across
+/// calls, so reports are directly comparable.
+pub fn run_router_experiment(
+    cfg: &ExperimentConfig,
+    router: RouterKind,
+) -> anyhow::Result<ClusterReport> {
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(cfg, router);
+    cluster.prewarm();
+    cluster.run(workload.requests)?;
+    Ok(cluster.report(cfg.warmup_fraction))
+}
+
+/// Run the event-driven cluster with the router configured in
+/// `cfg.cluster.router`.
+pub fn run_event_cluster(cfg: &ExperimentConfig) -> anyhow::Result<ClusterReport> {
+    run_router_experiment(cfg, cfg.cluster.router)
+}
+
+/// A multi-node serving simulation returning per-node reports: the cluster
+/// serves `n_nodes`× the configured per-node load behind a least-loaded
+/// router. Useful when sweeping cluster *size* at fixed per-node load
+/// (the event-driven cluster does the work; [`run_router_experiment`] is
+/// the entry point for fixed-load router comparisons).
+pub fn run_cluster_experiment(
+    cfg: &ExperimentConfig,
+    n_nodes: usize,
+) -> anyhow::Result<Vec<RunReport>> {
+    let mut scaled = cfg.clone();
+    scaled.workload.rps = cfg.workload.rps * n_nodes as f64;
+    scaled.workload.n_requests = cfg.workload.n_requests * n_nodes;
+    scaled.cluster.replicas = n_nodes;
+    let workload = WorkloadGen::new(scaled.workload.clone(), scaled.seed).generate();
+    let mut cluster = EventCluster::with_router(&scaled, RouterKind::LeastLoaded);
+    cluster.prewarm();
+    cluster.run(workload.requests)?;
+    Ok(cluster
+        .replicas
+        .iter()
+        .map(|r| r.coord.report(cfg.warmup_fraction))
+        .collect())
+}
+
+// ===========================================================================
+// Overhead measurement (legacy fig12 mode)
+// ===========================================================================
+
+/// Result of one cluster-scale overhead measurement.
 #[derive(Clone, Debug)]
 pub struct ClusterOverhead {
     pub nodes: usize,
@@ -38,7 +528,8 @@ pub struct ClusterOverhead {
     pub predictor_utilization: f64,
 }
 
-/// Cluster-scalability simulator.
+/// Cluster-scalability overhead simulator (wallclock-measured shared
+/// predictor + scheduler service times, M/M/1 queueing at the predictor).
 pub struct ClusterSim {
     pub cfg: ExperimentConfig,
     /// per-node request rate (paper: 8 RPS/node)
@@ -138,56 +629,6 @@ impl ClusterSim {
     }
 }
 
-/// Least-loaded routing decision across per-node live counts (exposed for
-/// tests and the cluster example).
-pub fn route_least_loaded(loads: &[usize]) -> usize {
-    loads
-        .iter()
-        .enumerate()
-        .min_by_key(|(_, &l)| l)
-        .map(|(i, _)| i)
-        .expect("route over empty cluster")
-}
-
-/// A multi-node serving simulation: N independent sim coordinators with
-/// least-loaded routing. Used by `examples/cluster_sim.rs` and the fig12
-/// bench to show end-to-end latency is preserved at scale.
-pub fn run_cluster_experiment(
-    cfg: &ExperimentConfig,
-    n_nodes: usize,
-) -> anyhow::Result<Vec<crate::metrics::RunReport>> {
-    let mut wl_cfg = cfg.workload.clone();
-    wl_cfg.rps = cfg.workload.rps * n_nodes as f64;
-    wl_cfg.n_requests = cfg.workload.n_requests * n_nodes;
-    let workload = WorkloadGen::new(wl_cfg, cfg.seed).generate();
-
-    let mut coords: Vec<_> = (0..n_nodes)
-        .map(|_| crate::serve::build_sim_coordinator(cfg))
-        .collect();
-    // route by least live requests at arrival time, then run each node
-    let mut assigned: Vec<Vec<crate::core::Request>> = vec![Vec::new(); n_nodes];
-    let mut loads = vec![0usize; n_nodes];
-    // approximate live-load tracking: decay by completions at fixed service
-    // estimate; for routing purposes arrival-count round-robin least-loaded
-    for r in workload.requests {
-        let node = route_least_loaded(&loads);
-        loads[node] += 1;
-        assigned[node].push(r);
-        // decay: oldest nodes shed load as time passes
-        if loads.iter().sum::<usize>() % (n_nodes * 4) == 0 {
-            for l in loads.iter_mut() {
-                *l = l.saturating_sub(1);
-            }
-        }
-    }
-    let mut reports = Vec::with_capacity(n_nodes);
-    for (coord, reqs) in coords.iter_mut().zip(assigned) {
-        coord.run_workload(reqs)?;
-        reports.push(coord.report(cfg.warmup_fraction));
-    }
-    Ok(reports)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +638,70 @@ mod tests {
     fn route_picks_min() {
         assert_eq!(route_least_loaded(&[3, 1, 2]), 1);
         assert_eq!(route_least_loaded(&[0]), 0);
+    }
+
+    fn view(id: usize, live: usize, used: usize, backlog: f64, speed: f64) -> ReplicaView {
+        ReplicaView {
+            id,
+            live,
+            kv_used_blocks: used,
+            kv_total_blocks: 100,
+            now: 0.0,
+            speed,
+            max_batch: 8,
+            predicted_backlog: backlog,
+        }
+    }
+
+    fn any_req() -> Request {
+        let mut cfg = crate::config::WorkloadConfig::default();
+        cfg.n_requests = 1;
+        WorkloadGen::new(cfg, 1).generate().requests.pop().unwrap()
+    }
+
+    #[test]
+    fn routers_pick_expected_replicas() {
+        let views = vec![
+            view(0, 4, 80, 500.0, 1.0),
+            view(1, 2, 90, 100.0, 1.0),
+            view(2, 3, 10, 400.0, 0.1),
+        ];
+        let r = any_req();
+        assert_eq!(LeastLoadedRouter.route(&r, 1.0, &views), 1);
+        assert_eq!(LeastKvRouter.route(&r, 1.0, &views), 2);
+        // cost-aware: 500/1, 100/1, 400/0.1=4000 -> replica 1
+        assert_eq!(CostAwareRouter.route(&r, 1.0, &views), 1);
+        let mut rr = RoundRobinRouter::default();
+        assert_eq!(rr.route(&r, 1.0, &views), 0);
+        assert_eq!(rr.route(&r, 1.0, &views), 1);
+        assert_eq!(rr.route(&r, 1.0, &views), 2);
+        assert_eq!(rr.route(&r, 1.0, &views), 0);
+    }
+
+    #[test]
+    fn make_router_builds_all_kinds() {
+        for kind in RouterKind::ALL {
+            assert_eq!(make_router(kind).kind(), kind);
+        }
+    }
+
+    #[test]
+    fn event_cluster_conserves_requests() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = PolicyKind::SageSched;
+        cfg.workload.n_requests = 60;
+        cfg.workload.rps = 20.0;
+        cfg.warmup_fraction = 0.0;
+        cfg.history_prewarm = 0;
+        cfg.cluster.replicas = 4;
+        let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+        let mut cluster = EventCluster::with_router(&cfg, RouterKind::CostAware);
+        cluster.run(workload.requests).unwrap();
+        assert_eq!(cluster.completed(), 60);
+        assert_eq!(cluster.rejected, 0);
+        let report = cluster.report(0.0);
+        assert_eq!(report.aggregate.measured, 60);
+        assert_eq!(report.per_replica.len(), 4);
     }
 
     #[test]

@@ -168,6 +168,103 @@ impl DatasetKind {
     }
 }
 
+/// Which request router fronts the multi-replica cluster
+/// (see [`crate::cluster`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RouterKind {
+    /// Cycle through replicas in submission order.
+    RoundRobin,
+    /// Fewest live (queued + running + preempted) requests.
+    LeastLoaded,
+    /// Lowest KV-block occupancy fraction.
+    LeastKv,
+    /// Smallest predicted outstanding cost, using the shared predictor's
+    /// length distribution and the configured cost model, normalized by
+    /// replica speed.
+    CostAware,
+}
+
+impl RouterKind {
+    pub const ALL: [RouterKind; 4] = [
+        RouterKind::RoundRobin,
+        RouterKind::LeastLoaded,
+        RouterKind::LeastKv,
+        RouterKind::CostAware,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::LeastLoaded => "least-loaded",
+            RouterKind::LeastKv => "least-kv",
+            RouterKind::CostAware => "cost-aware",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<RouterKind> {
+        RouterKind::ALL.iter().copied().find(|r| r.name() == s)
+    }
+}
+
+/// Multi-replica cluster shape for the event-driven cluster simulation.
+///
+/// The heterogeneity vectors are *cycled* over replica indices (replica `i`
+/// uses entry `i % len`), so `speeds: [1.0, 0.5]` over 4 replicas models a
+/// fleet of two fast and two slow GPUs. Empty vectors mean "use the base
+/// [`EngineProfile`] unchanged".
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of serving replicas (each a full coordinator + sim engine).
+    pub replicas: usize,
+    /// Routing policy at the cluster front door.
+    pub router: RouterKind,
+    /// Per-replica speed multipliers (2.0 = twice as fast; cycled).
+    pub speeds: Vec<f64>,
+    /// Per-replica max decode batch overrides (cycled).
+    pub batch_sizes: Vec<usize>,
+    /// Per-replica KV-capacity (tokens) overrides (cycled).
+    pub kv_capacities: Vec<usize>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 4,
+            router: RouterKind::LeastLoaded,
+            speeds: Vec::new(),
+            batch_sizes: Vec::new(),
+            kv_capacities: Vec::new(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    fn cycled<T: Copy>(v: &[T], i: usize) -> Option<T> {
+        if v.is_empty() {
+            None
+        } else {
+            Some(v[i % v.len()])
+        }
+    }
+
+    /// Speed multiplier of replica `i`.
+    pub fn speed_of(&self, i: usize) -> f64 {
+        Self::cycled(&self.speeds, i).unwrap_or(1.0)
+    }
+
+    /// Concrete engine profile for replica `i`, derived from `base`.
+    pub fn replica_profile(&self, base: &EngineProfile, i: usize) -> EngineProfile {
+        let mut p = base.scaled(self.speed_of(i));
+        if let Some(b) = Self::cycled(&self.batch_sizes, i) {
+            p.max_batch = b;
+        }
+        if let Some(kv) = Self::cycled(&self.kv_capacities, i) {
+            p.kv_capacity = kv;
+        }
+        p
+    }
+}
+
 /// How preempted requests give up / regain their KV cache.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PreemptMode {
@@ -238,6 +335,23 @@ impl EngineProfile {
             swap_per_token: 1.2e-6,
             max_output: 4096,
         }
+    }
+
+    /// Derive a profile running at `speed`× this one (all time constants
+    /// divided by the multiplier; capacities unchanged). Used for
+    /// heterogeneous cluster replicas.
+    pub fn scaled(&self, speed: f64) -> EngineProfile {
+        assert!(speed > 0.0, "speed multiplier must be positive");
+        let mut p = self.clone();
+        p.decode_c0 /= speed;
+        p.decode_c1 /= speed;
+        p.decode_m0 /= speed;
+        p.decode_m1 /= speed;
+        p.prefill_p0 /= speed;
+        p.prefill_p1 /= speed;
+        p.prefill_p2 /= speed;
+        p.swap_per_token /= speed;
+        p
     }
 
     pub fn by_name(s: &str) -> Option<EngineProfile> {
@@ -338,6 +452,9 @@ pub struct ExperimentConfig {
     pub max_queue: usize,
     /// Abort queued requests older than this many seconds (0 = never).
     pub request_timeout: f64,
+    /// Multi-replica cluster shape (used by `sagesched cluster` and
+    /// [`crate::cluster`]'s event-driven simulation).
+    pub cluster: ClusterConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -363,6 +480,7 @@ impl Default for ExperimentConfig {
             preempt_finish_guard: 16,
             max_queue: 0,
             request_timeout: 0.0,
+            cluster: ClusterConfig::default(),
         }
     }
 }
@@ -418,6 +536,50 @@ impl ExperimentConfig {
                 }
             }
         }
+        if let Some(c) = j.get("cluster") {
+            cfg.cluster.replicas =
+                c.f64_or("replicas", cfg.cluster.replicas as f64) as usize;
+            if let Some(r) = c.get("router").and_then(Json::as_str) {
+                cfg.cluster.router = RouterKind::from_name(r)
+                    .ok_or_else(|| format!("unknown router {r}"))?;
+            }
+            let f64_list = |key: &str| -> Result<Vec<f64>, String> {
+                match c.get(key).and_then(Json::as_arr) {
+                    None => Ok(Vec::new()),
+                    Some(arr) => arr
+                        .iter()
+                        .map(|v| {
+                            v.as_f64()
+                                .ok_or_else(|| format!("cluster.{key}: non-numeric entry"))
+                        })
+                        .collect(),
+                }
+            };
+            let speeds = f64_list("speeds")?;
+            if speeds.iter().any(|&v| v <= 0.0) {
+                return Err("cluster.speeds entries must be positive".to_string());
+            }
+            if !speeds.is_empty() {
+                cfg.cluster.speeds = speeds;
+            }
+            let batches = f64_list("batch_sizes")?;
+            if batches.iter().any(|&b| b < 1.0) {
+                return Err("cluster.batch_sizes entries must be >= 1".to_string());
+            }
+            if !batches.is_empty() {
+                cfg.cluster.batch_sizes = batches.iter().map(|&b| b as usize).collect();
+            }
+            let kvs = f64_list("kv_capacities")?;
+            if kvs.iter().any(|&k| k < crate::serve::KV_BLOCK_TOKENS as f64) {
+                return Err(format!(
+                    "cluster.kv_capacities entries must be >= {} tokens (one KV block)",
+                    crate::serve::KV_BLOCK_TOKENS
+                ));
+            }
+            if !kvs.is_empty() {
+                cfg.cluster.kv_capacities = kvs.iter().map(|&k| k as usize).collect();
+            }
+        }
         Ok(cfg)
     }
 }
@@ -469,6 +631,59 @@ mod tests {
     fn from_json_rejects_unknown_policy() {
         let j = Json::parse(r#"{"policy":"zzz"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn router_names_roundtrip() {
+        for r in RouterKind::ALL {
+            assert_eq!(RouterKind::from_name(r.name()), Some(r));
+        }
+        assert_eq!(RouterKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn scaled_profile_divides_time_constants() {
+        let base = EngineProfile::a40_llama8b();
+        let fast = base.scaled(2.0);
+        assert!((fast.decode_c0 - base.decode_c0 / 2.0).abs() < 1e-15);
+        assert!((fast.prefill_p1 - base.prefill_p1 / 2.0).abs() < 1e-15);
+        assert_eq!(fast.max_batch, base.max_batch);
+        assert_eq!(fast.kv_capacity, base.kv_capacity);
+    }
+
+    #[test]
+    fn cluster_config_cycles_heterogeneity() {
+        let base = EngineProfile::a40_llama8b();
+        let cc = ClusterConfig {
+            replicas: 4,
+            speeds: vec![1.0, 0.5],
+            batch_sizes: vec![64],
+            kv_capacities: vec![8000, 4000],
+            ..ClusterConfig::default()
+        };
+        assert_eq!(cc.speed_of(0), 1.0);
+        assert_eq!(cc.speed_of(1), 0.5);
+        assert_eq!(cc.speed_of(2), 1.0);
+        let p1 = cc.replica_profile(&base, 1);
+        assert_eq!(p1.max_batch, 64);
+        assert_eq!(p1.kv_capacity, 4000);
+        assert!((p1.decode_c0 - base.decode_c0 * 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_json_parses_cluster_block() {
+        let j = Json::parse(
+            r#"{"cluster":{"replicas":6,"router":"cost-aware",
+                "speeds":[1.0,0.5],"kv_capacities":[9000]}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.cluster.replicas, 6);
+        assert_eq!(c.cluster.router, RouterKind::CostAware);
+        assert_eq!(c.cluster.speeds, vec![1.0, 0.5]);
+        assert_eq!(c.cluster.kv_capacities, vec![9000]);
+        let bad = Json::parse(r#"{"cluster":{"router":"zzz"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
     }
 
     #[test]

@@ -48,16 +48,17 @@ pub mod workload;
 
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
+    pub use crate::cluster::{run_router_experiment, EventCluster, Router};
     pub use crate::config::{
-        CostModelKind, DatasetKind, EngineProfile, ExperimentConfig, PolicyKind,
-        PredictorKind, WorkloadConfig,
+        ClusterConfig, CostModelKind, DatasetKind, EngineProfile, ExperimentConfig,
+        PolicyKind, PredictorKind, RouterKind, WorkloadConfig,
     };
     pub use crate::core::{Request, RequestId, RequestOutcome};
     pub use crate::cost::{CostModel, OutputLenCost, OverallLenCost, ResourceBoundCost};
     pub use crate::distribution::LengthDist;
     pub use crate::engine::{Engine, SimEngine};
     pub use crate::gittins::gittins_index;
-    pub use crate::metrics::RunReport;
+    pub use crate::metrics::{ClusterReport, RunReport};
     pub use crate::predictor::{HistoryPredictor, Predictor};
     pub use crate::sched::Policy;
     pub use crate::serve::{run_experiment, Coordinator};

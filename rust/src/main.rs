@@ -7,15 +7,18 @@
 //! sagesched sweep [--rps-list 4,6,8,10] ...      compare all paper baselines
 //! sagesched serve [--addr 127.0.0.1:8080] [--artifacts artifacts]
 //! sagesched smoke [--artifacts artifacts]        load + run the HLO artifacts once
-//! sagesched cluster [--nodes 1,4,16,64]          fig12-style overhead sweep
+//! sagesched cluster [--replicas 4] [--routers all] [--speeds 1.0,0.5]
+//!                   event-driven multi-replica sim, one row per router
+//! sagesched cluster --overhead [--nodes 1,4,16,64]   fig12 overhead sweep
 //! ```
 
 use anyhow::{bail, Context, Result};
 
-use sagesched::cluster::ClusterSim;
+use sagesched::cluster::{run_router_experiment, ClusterSim};
 use sagesched::config::{
-    CostModelKind, EngineProfile, ExperimentConfig, PolicyKind, PredictorKind,
+    CostModelKind, EngineProfile, ExperimentConfig, PolicyKind, PredictorKind, RouterKind,
 };
+use sagesched::metrics::ClusterReport;
 use sagesched::engine::RealEngine;
 use sagesched::metrics::RunReport;
 use sagesched::runtime::Runtime;
@@ -51,7 +54,44 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
         args.f64_or("threshold", cfg.similarity_threshold as f64) as f32;
     cfg.bucket_tokens = args.u64_or("bucket", cfg.bucket_tokens as u64) as u32;
     cfg.noise_mix = args.f64_or("noise", cfg.noise_mix);
+    cfg.cluster.replicas = args.usize_or("replicas", cfg.cluster.replicas);
+    if let Some(r) = args.get("router") {
+        cfg.cluster.router = RouterKind::from_name(r).context("unknown --router")?;
+    }
+    if let Some(s) = args.get("speeds") {
+        cfg.cluster.speeds = parse_f64_list("speeds", s)?;
+        if cfg.cluster.speeds.iter().any(|&v| v <= 0.0) {
+            bail!("--speeds entries must be positive, got {s}");
+        }
+    }
+    if let Some(b) = args.get("batch-sizes") {
+        let batches = parse_f64_list("batch-sizes", b)?;
+        if batches.iter().any(|&v| v < 1.0) {
+            bail!("--batch-sizes entries must be >= 1, got {b}");
+        }
+        cfg.cluster.batch_sizes = batches.into_iter().map(|v| v as usize).collect();
+    }
+    if let Some(k) = args.get("kv-capacities") {
+        let kvs = parse_f64_list("kv-capacities", k)?;
+        let min_kv = sagesched::serve::KV_BLOCK_TOKENS as f64;
+        if kvs.iter().any(|&v| v < min_kv) {
+            bail!("--kv-capacities entries must be >= {min_kv} tokens (one KV block), got {k}");
+        }
+        cfg.cluster.kv_capacities = kvs.into_iter().map(|v| v as usize).collect();
+    }
     Ok(cfg)
+}
+
+/// Parse a comma-separated numeric list, rejecting (not skipping) bad
+/// entries so a typo can't silently reshape the cluster.
+fn parse_f64_list(flag: &str, s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(|x| {
+            x.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{flag}: bad numeric entry {x:?} in {s:?}"))
+        })
+        .collect()
 }
 
 fn print_report(report: &RunReport, as_json: bool) {
@@ -194,24 +234,77 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_cluster(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let sizes: Vec<usize> = args
-        .str_or("nodes", "1,2,4,8,16,32,64")
-        .split(',')
-        .filter_map(|s| s.trim().parse().ok())
-        .collect();
-    let sim = ClusterSim::new(cfg);
-    println!("| nodes | rps | predict (ms) | sched (ms) | total (ms) | predictor util |");
-    println!("|---|---|---|---|---|---|");
-    for o in sim.sweep(&sizes) {
-        println!(
-            "| {} | {:.0} | {:.3} | {:.3} | {:.3} | {:.2} |",
-            o.nodes,
-            o.aggregate_rps,
-            o.predict_latency * 1e3,
-            o.sched_latency * 1e3,
-            o.total_latency * 1e3,
-            o.predictor_utilization
-        );
+
+    // secondary mode: the legacy fig12 shared-service overhead sweep
+    if args.has("overhead") {
+        let sizes: Vec<usize> = args
+            .str_or("nodes", "1,2,4,8,16,32,64")
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect();
+        let sim = ClusterSim::new(cfg);
+        println!("| nodes | rps | predict (ms) | sched (ms) | total (ms) | predictor util |");
+        println!("|---|---|---|---|---|---|");
+        for o in sim.sweep(&sizes) {
+            println!(
+                "| {} | {:.0} | {:.3} | {:.3} | {:.3} | {:.2} |",
+                o.nodes,
+                o.aggregate_rps,
+                o.predict_latency * 1e3,
+                o.sched_latency * 1e3,
+                o.total_latency * 1e3,
+                o.predictor_utilization
+            );
+        }
+        return Ok(());
+    }
+
+    // primary mode: event-driven multi-replica simulation, one row per
+    // router, same seeded workload for every router
+    let routers: Vec<RouterKind> = match args.str_or("routers", "all").as_str() {
+        "all" => RouterKind::ALL.to_vec(),
+        list => list
+            .split(',')
+            .map(|s| {
+                RouterKind::from_name(s.trim())
+                    .with_context(|| format!("unknown router {s}"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    if routers.is_empty() {
+        bail!("--routers produced an empty list");
+    }
+    println!(
+        "# {} replicas · {} requests @ {} rps · policy {} · seed {}",
+        cfg.cluster.replicas,
+        cfg.workload.n_requests,
+        cfg.workload.rps,
+        cfg.policy.name(),
+        cfg.seed
+    );
+    if !cfg.cluster.speeds.is_empty() {
+        println!("# replica speeds (cycled): {:?}", cfg.cluster.speeds);
+    }
+    println!("{}", ClusterReport::markdown_header());
+    let mut reports = Vec::new();
+    for router in routers {
+        let report = run_router_experiment(&cfg, router)?;
+        println!("{}", report.markdown_row());
+        reports.push(report);
+    }
+    if args.has("json") {
+        for r in &reports {
+            println!("{}", r.to_json());
+        }
+    }
+    if args.has("per-replica") {
+        for r in &reports {
+            println!("\n## {} per-replica", r.router);
+            println!("{}", sagesched::metrics::RunReport::markdown_header());
+            for pr in &r.per_replica {
+                println!("{}", pr.markdown_row());
+            }
+        }
     }
     Ok(())
 }
@@ -258,7 +351,11 @@ const USAGE: &str = "usage: sagesched <run|sweep|smoke|serve|cluster> [flags]
   sweep   compare the paper's six schedulers  (--rps-list 4,6,8,10)
   smoke   load + execute the HLO artifacts    (--artifacts artifacts)
   serve   HTTP server over the real model     (--addr 127.0.0.1:8080)
-  cluster fig12 overhead scaling sweep        (--nodes 1,4,16,64)
+  cluster event-driven multi-replica sim, one row per router
+          (--replicas 4 --routers all|round-robin,least-loaded,least-kv,cost-aware
+           --speeds 1.0,0.5 --batch-sizes 256,128 --kv-capacities 10000,6000
+           --per-replica --json)
+  cluster --overhead   fig12 shared-service overhead sweep (--nodes 1,4,16,64)
   gen-trace record a workload trace           (--out trace.jsonl --n 1000)
   (run also accepts --trace file.jsonl to replay a recorded trace)";
 

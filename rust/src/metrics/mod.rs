@@ -1,5 +1,7 @@
 //! Run-level metrics: TTLT / TTFT / TPOT summaries, engine counters,
-//! scheduling overheads, and report emission (markdown rows + JSON).
+//! scheduling overheads, and report emission (markdown rows + JSON) —
+//! plus cluster-level aggregation ([`ClusterReport`]) for the event-driven
+//! multi-replica simulation in [`crate::cluster`].
 
 use std::collections::BTreeMap;
 
@@ -139,6 +141,120 @@ impl RunReport {
     }
 }
 
+/// Aggregate accounting of one multi-replica cluster run: the cluster-wide
+/// report over the merged completion stream, per-replica reports, and a
+/// load-imbalance indicator.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterReport {
+    /// Router that produced this run (e.g. "least-loaded").
+    pub router: String,
+    pub replicas: usize,
+    /// Cluster-wide report over all replicas' merged outcomes.
+    pub aggregate: RunReport,
+    /// Per-replica reports (index = replica id).
+    pub per_replica: Vec<RunReport>,
+    /// Requests routed to each replica.
+    pub routed: Vec<u64>,
+    /// Completion imbalance: max replica completions / mean replica
+    /// completions (1.0 = perfectly balanced; 0.0 when nothing completed).
+    pub imbalance: f64,
+}
+
+impl ClusterReport {
+    /// Assemble from per-replica reports and the merged outcome stream.
+    /// `warmup_fraction` trims the earliest-arriving fraction of merged
+    /// outcomes from the aggregate, matching single-node report semantics.
+    pub fn new(
+        router: String,
+        per_replica: Vec<RunReport>,
+        routed: Vec<u64>,
+        merged: &[RequestOutcome],
+        warmup_fraction: f64,
+    ) -> ClusterReport {
+        let mut by_arrival = merged.to_vec();
+        by_arrival.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let skip = ((by_arrival.len() as f64) * warmup_fraction).floor() as usize;
+        let measured = &by_arrival[skip.min(by_arrival.len())..];
+        let mut aggregate = RunReport::from_outcomes(measured);
+        // cluster-wide engine/scheduler counters are the per-replica sums;
+        // the policy/predictor labels are shared by construction
+        if let Some(first) = per_replica.first() {
+            aggregate.policy = first.policy.clone();
+            aggregate.predictor = first.predictor.clone();
+            aggregate.cost_model = first.cost_model.clone();
+        }
+        for r in &per_replica {
+            aggregate.preemptions += r.preemptions;
+            aggregate.swap_out_events += r.swap_out_events;
+            aggregate.swap_in_events += r.swap_in_events;
+            aggregate.busy_decode += r.busy_decode;
+            aggregate.busy_prefill += r.busy_prefill;
+            aggregate.busy_swap += r.busy_swap;
+            aggregate.decode_steps += r.decode_steps;
+            aggregate.predict_overhead += r.predict_overhead;
+            aggregate.sched_overhead += r.sched_overhead;
+        }
+        let counts: Vec<f64> = per_replica.iter().map(|r| r.measured as f64).collect();
+        let total: f64 = counts.iter().sum();
+        let imbalance = if total > 0.0 && !counts.is_empty() {
+            let mean = total / counts.len() as f64;
+            counts.iter().cloned().fold(0.0, f64::max) / mean
+        } else {
+            0.0
+        };
+        ClusterReport {
+            router,
+            replicas: per_replica.len(),
+            aggregate,
+            per_replica,
+            routed,
+            imbalance,
+        }
+    }
+
+    pub fn markdown_header() -> String {
+        "| router | replicas | TTLT mean | TTLT p90 | TTFT mean | TTFT p90 | thru (r/s) | imbalance |\n\
+         |---|---|---|---|---|---|---|---|"
+            .to_string()
+    }
+
+    pub fn markdown_row(&self) -> String {
+        format!(
+            "| {} | {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.2} | {:.2} |",
+            self.router,
+            self.replicas,
+            self.aggregate.ttlt.mean,
+            self.aggregate.ttlt.p90,
+            self.aggregate.ttft.mean,
+            self.aggregate.ttft.p90,
+            self.aggregate.throughput,
+            self.imbalance,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("router", Json::str(self.router.clone())),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("aggregate", self.aggregate.to_json()),
+            (
+                "per_replica",
+                Json::arr(self.per_replica.iter().map(RunReport::to_json)),
+            ),
+            (
+                "routed",
+                Json::arr(self.routed.iter().map(|&n| Json::num(n as f64))),
+            ),
+            ("imbalance", Json::num(self.imbalance)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +301,36 @@ mod tests {
         let j = Json::parse(&r.to_json().to_string()).unwrap();
         assert_eq!(j.str_or("policy", ""), "sagesched");
         assert!(j.get("ttlt").unwrap().f64_or("mean", -1.0) > 0.0);
+    }
+
+    #[test]
+    fn cluster_report_aggregates_and_measures_imbalance() {
+        let r0 = RunReport::from_outcomes(&[
+            outcome(1, DatasetKind::ShareGpt, 0.0, 1.0, 2.0),
+            outcome(2, DatasetKind::ShareGpt, 1.0, 2.0, 3.0),
+            outcome(3, DatasetKind::ShareGpt, 2.0, 3.0, 4.0),
+        ]);
+        let r1 = RunReport::from_outcomes(&[outcome(4, DatasetKind::Write, 0.5, 1.5, 2.5)]);
+        let merged: Vec<RequestOutcome> = vec![
+            outcome(1, DatasetKind::ShareGpt, 0.0, 1.0, 2.0),
+            outcome(2, DatasetKind::ShareGpt, 1.0, 2.0, 3.0),
+            outcome(3, DatasetKind::ShareGpt, 2.0, 3.0, 4.0),
+            outcome(4, DatasetKind::Write, 0.5, 1.5, 2.5),
+        ];
+        let c = ClusterReport::new(
+            "least-loaded".into(),
+            vec![r0, r1],
+            vec![3, 1],
+            &merged,
+            0.0,
+        );
+        assert_eq!(c.replicas, 2);
+        assert_eq!(c.aggregate.measured, 4);
+        // counts 3 and 1: mean 2, max 3 -> imbalance 1.5
+        assert!((c.imbalance - 1.5).abs() < 1e-12);
+        assert!(c.markdown_row().starts_with("| least-loaded | 2 |"));
+        let j = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(j.str_or("router", ""), "least-loaded");
     }
 
     #[test]

@@ -443,14 +443,24 @@ impl Policy for OracleSrptPolicy {
 
 /// Build a policy from config.
 pub fn make_policy(cfg: &crate::config::ExperimentConfig) -> Box<dyn Policy> {
+    make_policy_seeded(cfg, cfg.seed)
+}
+
+/// Build a policy from config with an explicit RNG seed. Multi-replica
+/// clusters use this so each replica's stochastic policies (LTR / TRAIL
+/// noise streams) are independent rather than lock-stepped copies.
+pub fn make_policy_seeded(
+    cfg: &crate::config::ExperimentConfig,
+    seed: u64,
+) -> Box<dyn Policy> {
     match cfg.policy {
         PolicyKind::Fcfs => Box::new(FcfsPolicy),
         PolicyKind::FastServe => {
             Box::new(FastServePolicy::new(cfg.mlfq_quantum.max(1.0) as u32, cfg.mlfq_levels))
         }
         PolicyKind::Ssjf => Box::new(SsjfPolicy::default()),
-        PolicyKind::Ltr => Box::new(LtrPolicy::new(cfg.seed)),
-        PolicyKind::Trail => Box::new(TrailPolicy::new(cfg.seed)),
+        PolicyKind::Ltr => Box::new(LtrPolicy::new(seed)),
+        PolicyKind::Trail => Box::new(TrailPolicy::new(seed)),
         PolicyKind::MeanCost => Box::new(MeanCostPolicy),
         PolicyKind::GittinsStatic => Box::new(GittinsStaticPolicy::default()),
         PolicyKind::SageSched => Box::new(SageSchedPolicy::new(cfg.bucket_tokens)),

@@ -131,6 +131,22 @@ impl<E: Engine> Coordinator<E> {
         self.now
     }
 
+    /// Whether the coordinator has no live (queued/running/preempted)
+    /// requests. External drivers — the HTTP server and the event-driven
+    /// cluster — use this to decide whether [`Coordinator::step`] can make
+    /// progress or the clock should jump to the next arrival.
+    pub fn is_idle(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    /// Whether a request id is still live inside the coordinator (queued,
+    /// running, or preempted). The cluster layer uses this to reconcile
+    /// its routing bookkeeping with timeout-aborted requests, which leave
+    /// the live set without ever producing an outcome.
+    pub fn is_live(&self, id: crate::core::RequestId) -> bool {
+        self.live.iter().any(|l| l.req.id == id)
+    }
+
     pub fn outcomes(&self) -> &[RequestOutcome] {
         &self.outcomes
     }
@@ -490,14 +506,25 @@ impl<E: Engine> Coordinator<E> {
 
 /// Build a simulator-backed coordinator from a config.
 pub fn build_sim_coordinator(cfg: &ExperimentConfig) -> Coordinator<SimEngine> {
-    let engine = SimEngine::new(cfg.engine.clone());
-    let policy = crate::sched::make_policy(cfg);
+    build_sim_coordinator_with(cfg, cfg.engine.clone(), cfg.seed)
+}
+
+/// Build a simulator-backed coordinator with an explicit engine profile and
+/// RNG seed — the cluster layer uses this to stand up heterogeneous replicas
+/// (per-replica speed / batch / KV capacity) with independent policy seeds.
+pub fn build_sim_coordinator_with(
+    cfg: &ExperimentConfig,
+    profile: crate::config::EngineProfile,
+    seed: u64,
+) -> Coordinator<SimEngine> {
+    let engine = SimEngine::new(profile);
+    let policy = crate::sched::make_policy_seeded(cfg, seed);
     let predictor = crate::predictor::make_predictor(
         cfg.predictor,
         cfg.workload.embed_dim,
         cfg.history_capacity,
         cfg.similarity_threshold,
-        cfg.seed,
+        seed,
     );
     let cost_model = crate::cost::make_cost_model(cfg.cost_model);
     let mut c = Coordinator::new(engine, policy, predictor, cost_model, cfg.preempt_mode);

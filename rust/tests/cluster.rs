@@ -1,0 +1,137 @@
+//! Event-driven cluster integration tests: request conservation (no loss,
+//! no duplication across replicas), per-seed determinism of aggregate
+//! reports, and heterogeneous-capacity behavior.
+
+use std::collections::BTreeSet;
+
+use sagesched::cluster::{run_router_experiment, EventCluster};
+use sagesched::config::{ExperimentConfig, PolicyKind, RouterKind};
+use sagesched::workload::WorkloadGen;
+
+fn cluster_cfg(replicas: usize, n: usize, rps: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = PolicyKind::SageSched;
+    cfg.workload.n_requests = n;
+    cfg.workload.rps = rps;
+    cfg.warmup_fraction = 0.0;
+    cfg.history_prewarm = 0; // keep the tests fast
+    cfg.cluster.replicas = replicas;
+    cfg
+}
+
+#[test]
+fn every_router_conserves_requests() {
+    // every submitted request completes exactly once, on exactly one
+    // replica — no loss, no duplication — for every router
+    let cfg = cluster_cfg(4, 160, 24.0);
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let submitted: BTreeSet<u64> = workload.requests.iter().map(|r| r.id).collect();
+    assert_eq!(submitted.len(), 160);
+    for router in RouterKind::ALL {
+        let mut cluster = EventCluster::with_router(&cfg, router);
+        cluster.run(workload.requests.clone()).unwrap();
+        assert_eq!(cluster.rejected, 0, "{router:?} rejected requests");
+        let outcomes = cluster.merged_outcomes();
+        assert_eq!(outcomes.len(), 160, "{router:?} lost or duplicated work");
+        let completed: BTreeSet<u64> = outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(
+            completed, submitted,
+            "{router:?} completion set != submission set"
+        );
+        // routed counts must account for every request
+        let routed: u64 = cluster.routed.iter().sum();
+        assert_eq!(routed, 160);
+    }
+}
+
+#[test]
+fn identical_seed_and_router_give_bit_identical_reports() {
+    let cfg = cluster_cfg(4, 120, 20.0);
+    for router in [RouterKind::LeastLoaded, RouterKind::CostAware] {
+        let a = run_router_experiment(&cfg, router).unwrap();
+        let b = run_router_experiment(&cfg, router).unwrap();
+        assert_eq!(a.aggregate.measured, b.aggregate.measured);
+        assert_eq!(a.aggregate.ttlt.mean, b.aggregate.ttlt.mean, "{router:?}");
+        assert_eq!(a.aggregate.ttlt.p99, b.aggregate.ttlt.p99);
+        assert_eq!(a.aggregate.ttft.mean, b.aggregate.ttft.mean);
+        assert_eq!(a.aggregate.makespan, b.aggregate.makespan);
+        assert_eq!(a.aggregate.preemptions, b.aggregate.preemptions);
+        assert_eq!(a.routed, b.routed);
+        assert_eq!(a.imbalance, b.imbalance);
+        let am: Vec<usize> = a.per_replica.iter().map(|r| r.measured).collect();
+        let bm: Vec<usize> = b.per_replica.iter().map(|r| r.measured).collect();
+        assert_eq!(am, bm);
+    }
+}
+
+#[test]
+fn different_seeds_differ() {
+    let cfg = cluster_cfg(4, 120, 20.0);
+    let mut cfg2 = cfg.clone();
+    cfg2.seed = 17;
+    let a = run_router_experiment(&cfg, RouterKind::LeastLoaded).unwrap();
+    let b = run_router_experiment(&cfg2, RouterKind::LeastLoaded).unwrap();
+    assert_ne!(a.aggregate.ttlt.mean, b.aggregate.ttlt.mean);
+}
+
+#[test]
+fn heterogeneous_replicas_complete_everything() {
+    // two full-speed and two quarter-speed replicas, smaller KV on the
+    // slow ones: all requests still complete exactly once
+    let mut cfg = cluster_cfg(4, 160, 16.0);
+    cfg.cluster.speeds = vec![1.0, 1.0, 0.25, 0.25];
+    cfg.cluster.kv_capacities = vec![10_000, 10_000, 6_000, 6_000];
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
+    cluster.run(workload.requests).unwrap();
+    assert_eq!(cluster.completed(), 160);
+    let report = cluster.report(0.0);
+    assert_eq!(report.aggregate.measured, 160);
+    // least-loaded routing sheds load away from the slow replicas: the
+    // fast pair must complete at least as much as the slow pair
+    let fast: usize = report.per_replica[..2].iter().map(|r| r.measured).sum();
+    let slow: usize = report.per_replica[2..].iter().map(|r| r.measured).sum();
+    assert!(
+        fast >= slow,
+        "fast pair completed {fast} < slow pair {slow}"
+    );
+}
+
+#[test]
+fn undersized_replica_errors_instead_of_hanging() {
+    // a replica whose KV pool cannot hold a typical prompt must surface a
+    // descriptive error, not spin the event loop forever
+    let mut cfg = cluster_cfg(2, 10, 8.0);
+    cfg.cluster.kv_capacities = vec![10_000, 64]; // replica 1: 4 blocks
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::RoundRobin);
+    let err = cluster.run(workload.requests).unwrap_err();
+    assert!(
+        err.to_string().contains("wedged"),
+        "expected wedge diagnostic, got: {err}"
+    );
+}
+
+#[test]
+fn per_replica_reports_sum_to_aggregate() {
+    let cfg = cluster_cfg(5, 150, 25.0);
+    let report = run_router_experiment(&cfg, RouterKind::RoundRobin).unwrap();
+    assert_eq!(report.replicas, 5);
+    let sum: usize = report.per_replica.iter().map(|r| r.measured).sum();
+    assert_eq!(sum, report.aggregate.measured);
+    // round-robin spreads routing evenly: 150 over 5 replicas
+    assert!(report.routed.iter().all(|&n| n == 30));
+    assert!(report.imbalance >= 1.0);
+}
+
+#[test]
+fn warmup_fraction_trims_cluster_aggregate() {
+    let cfg = cluster_cfg(4, 120, 20.0);
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
+    cluster.run(workload.requests).unwrap();
+    let full = cluster.report(0.0);
+    let trimmed = cluster.report(0.25);
+    assert_eq!(full.aggregate.measured, 120);
+    assert_eq!(trimmed.aggregate.measured, 90);
+}

@@ -281,6 +281,129 @@ fn prop_kv_manager_never_exceeds_capacity() {
     });
 }
 
+#[test]
+fn prop_kv_swap_roundtrip_preserves_token_counts() {
+    // swap_out reports the tokens moved; swap_in must move exactly the same
+    // number back, and the sequence's token count must survive the trip
+    for_all(200, |rng| {
+        let bt = 1 + rng.below(32) as usize;
+        let blocks = 8 + rng.below(50) as usize;
+        let mut kv = KvManager::new(blocks * bt, bt);
+        let tokens = 1 + rng.below((blocks * bt) as u64) as usize;
+        assert!(kv.grow_to(7, tokens));
+        assert_eq!(kv.tokens_of(7), tokens);
+        let used_before = kv.used_blocks();
+
+        let moved_out = kv.swap_out(7);
+        assert_eq!(moved_out, tokens, "swap_out token count");
+        assert_eq!(kv.used_blocks(), 0, "swap-out must free all GPU blocks");
+        assert_eq!(kv.tokens_of(7), tokens, "token count remembered");
+
+        let moved_in = kv.swap_in(7).expect("blocks are free");
+        assert_eq!(moved_in, tokens, "swap_in token count");
+        assert_eq!(kv.used_blocks(), used_before, "block footprint restored");
+        assert_eq!(kv.tokens_of(7), tokens);
+        assert_eq!(kv.swap_out_events, 1);
+        assert_eq!(kv.swap_in_events, 1);
+    });
+}
+
+#[test]
+fn prop_kv_release_and_drop_return_all_blocks() {
+    // whatever mix of GPU-resident and swapped sequences exists,
+    // release/drop_seq over all of them must return the pool to full
+    for_all(200, |rng| {
+        let bt = 1 + rng.below(16) as usize;
+        let blocks = 16 + rng.below(64) as usize;
+        let mut kv = KvManager::new(blocks * bt, bt);
+        let mut ids: Vec<u64> = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..40 {
+            let tokens = 1 + rng.below((blocks * bt / 4).max(1) as u64) as usize;
+            if kv.can_allocate(tokens) {
+                assert!(kv.grow_to(next, tokens));
+                // a third of sequences get swapped out
+                if rng.below(3) == 0 {
+                    kv.swap_out(next);
+                }
+                ids.push(next);
+                next += 1;
+            }
+        }
+        for (i, id) in ids.drain(..).enumerate() {
+            if i % 2 == 0 {
+                kv.release(id);
+            } else {
+                kv.drop_seq(id);
+            }
+        }
+        assert_eq!(kv.free_blocks(), kv.total_blocks(), "blocks leaked");
+        assert_eq!(kv.used_blocks(), 0);
+        assert_eq!(kv.resident_tokens(), 0);
+    });
+}
+
+#[test]
+fn prop_kv_fragmentation_bounded_and_exact_when_aligned() {
+    for_all(200, |rng| {
+        let bt = 2 + rng.below(31) as usize;
+        let mut kv = KvManager::new(64 * bt, bt);
+        // block-aligned allocations have zero internal fragmentation
+        assert!(kv.grow_to(1, bt));
+        assert!(kv.grow_to(2, 3 * bt));
+        assert_eq!(kv.fragmentation(), 0.0);
+        // misaligned growth keeps fragmentation within (0, 1)
+        let extra = 1 + rng.below((bt - 1) as u64) as usize;
+        assert!(kv.grow_to(3, bt + extra));
+        let frag = kv.fragmentation();
+        assert!(frag > 0.0 && frag < 1.0, "fragmentation {frag} out of range");
+        // swapped sequences leave the fragmentation accounting
+        kv.swap_out(3);
+        assert_eq!(kv.fragmentation(), 0.0);
+        // empty pool reports zero, never NaN
+        kv.release(1);
+        kv.release(2);
+        kv.release(3);
+        assert_eq!(kv.fragmentation(), 0.0);
+    });
+}
+
+#[test]
+fn prop_kv_capacity_never_exceeded_under_growth_pressure() {
+    // grow a shifting population one token at a time forever: used blocks
+    // must never pass total, and failed growth must change nothing
+    for_all(100, |rng| {
+        let bt = 1 + rng.below(8) as usize;
+        let blocks = 4 + rng.below(12) as usize;
+        let mut kv = KvManager::new(blocks * bt, bt);
+        let mut ids: Vec<u64> = (0..4).collect();
+        for id in &ids {
+            kv.grow_to(*id, 1);
+        }
+        for step in 0..500 {
+            let id = ids[rng.below(ids.len() as u64) as usize];
+            let want = kv.tokens_of(id) + 1 + rng.below(3) as usize;
+            let before_used = kv.used_blocks();
+            let before_tokens = kv.tokens_of(id);
+            let fits = kv.can_grow_to(id, want);
+            let ok = kv.grow_to(id, want);
+            assert_eq!(ok, fits, "grow_to must agree with can_grow_to");
+            if !ok {
+                assert_eq!(kv.used_blocks(), before_used, "failed grow mutated state");
+                assert_eq!(kv.tokens_of(id), before_tokens);
+                // make room and retire the oldest sequence
+                let victim = ids.remove(0);
+                kv.release(victim);
+                let fresh = 100 + step as u64;
+                kv.grow_to(fresh, 1);
+                ids.push(fresh);
+            }
+            assert!(kv.used_blocks() <= kv.total_blocks());
+            assert_eq!(kv.used_blocks() + kv.free_blocks(), kv.total_blocks());
+        }
+    });
+}
+
 // ---------------------------------------------------------------------------
 // flat index vs brute force
 // ---------------------------------------------------------------------------

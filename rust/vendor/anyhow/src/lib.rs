@@ -1,0 +1,225 @@
+//! Offline shim of the `anyhow` crate: the subset of its API this workspace
+//! uses (`Error`, `Result`, `Context`, `anyhow!`, `bail!`), implemented on a
+//! plain message chain so the build needs no registry access. Semantics match
+//! upstream for these entry points: `?` converts any `std::error::Error`,
+//! `.context(..)` / `.with_context(..)` wrap `Result` and `Option`, and the
+//! `Debug` impl prints the cause chain (what `fn main() -> Result<()>` shows).
+
+use std::fmt;
+
+/// A dynamically-typed error with a human-readable cause chain.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// Iterate the cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.cause.as_deref();
+            Some(cur)
+        })
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &Error {
+        self.chain().last().expect("chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.cause.as_deref();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(c) = cause {
+            write!(f, "\n    {}", c.msg)?;
+            cause = c.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`; that is
+// what allows the blanket `From` below without overlapping `From<T> for T`
+// (same design as upstream anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain: Vec<String> = Vec::new();
+        chain.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            err = Some(Error { msg, cause: err.map(Box::new) });
+        }
+        err.expect("chain has at least one entry")
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Sealed conversion into [`crate::Error`]; implemented for every
+    /// `std::error::Error` *and* for `crate::Error` itself so `.context()`
+    /// also works on already-wrapped `anyhow::Result` values (mirroring
+    /// upstream anyhow's `ext::StdError` design).
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to the error variant of a `Result` or to a `None`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: private::IntoError,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_and_debug_chain() {
+        let e: Error = Error::from(io_err()).context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("missing thing"));
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("while reading").unwrap_err();
+        assert_eq!(e.to_string(), "while reading");
+        assert_eq!(e.root_cause().to_string(), "missing thing");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+
+    #[test]
+    fn context_on_already_wrapped_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.root_cause().to_string(), "inner");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 3;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(e.to_string(), "value 3 bad");
+        let s = String::from("plain");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "plain");
+        fn bails() -> Result<()> {
+            bail!("nope {}", 7)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope 7");
+    }
+}
