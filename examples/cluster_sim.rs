@@ -1,13 +1,16 @@
 //! Cluster-scale serving: an event-driven N-replica simulation comparing
-//! the pluggable routers on one seeded workload, plus the fig12
+//! the pluggable routers on one seeded workload — optionally under bursty
+//! (MMPP) or diurnal arrivals and mid-run replica outages — plus the fig12
 //! shared-predictor overhead measurement.
 //!
 //! ```text
 //! cargo run --release --example cluster_sim -- --replicas 8 --rps 24 --n 800
 //! cargo run --release --example cluster_sim -- --replicas 4 --speeds 1.0,0.5
+//! cargo run --release --example cluster_sim -- --arrival mmpp --fail 0@8+6
 //! ```
 
 use sagesched::cluster::{run_router_experiment, ClusterSim};
+use sagesched::config::{ArrivalKind, FailureEvent};
 use sagesched::prelude::*;
 use sagesched::util::cli::Args;
 
@@ -26,10 +29,23 @@ fn main() -> anyhow::Result<()> {
         }
         cfg.cluster.speeds = speeds;
     }
+    if let Some(a) = args.get("arrival") {
+        cfg.workload.arrival.kind = ArrivalKind::from_name(a)
+            .ok_or_else(|| anyhow::anyhow!("unknown --arrival {a}"))?;
+    }
+    if let Some(f) = args.get("fail") {
+        // replica@start+duration, comma-separated (same grammar as the CLI)
+        cfg.cluster.failures =
+            FailureEvent::parse_list(f).map_err(|e| anyhow::anyhow!("--fail: {e}"))?;
+    }
 
     println!(
-        "# {}-replica cluster, {} requests @ {} rps cluster-wide\n",
-        cfg.cluster.replicas, cfg.workload.n_requests, cfg.workload.rps
+        "# {}-replica cluster, {} requests @ {} rps cluster-wide ({} arrivals, {} outages)\n",
+        cfg.cluster.replicas,
+        cfg.workload.n_requests,
+        cfg.workload.rps,
+        cfg.workload.arrival.kind.name(),
+        cfg.cluster.failures.len()
     );
     println!("{}", ClusterReport::markdown_header());
     let mut best: Option<ClusterReport> = None;
@@ -46,16 +62,22 @@ fn main() -> anyhow::Result<()> {
     }
     let best = best.expect("at least one router ran");
     println!(
-        "\nbest router: {} (mean TTLT {:.2}s, imbalance {:.2})",
-        best.router, best.aggregate.ttlt.mean, best.imbalance
+        "\nbest router: {} (mean TTLT {:.2}s, imbalance {:.2}, goodput {:.1}%, \
+         {} re-routed, {} stolen)",
+        best.router,
+        best.aggregate.ttlt.mean,
+        best.imbalance,
+        best.aggregate.goodput() * 100.0,
+        best.re_routed,
+        best.stolen
     );
     println!("\n## {} per-replica", best.router);
-    println!("| replica | routed | completed | mean TTLT | p99 TTLT |");
-    println!("|---|---|---|---|---|");
+    println!("| replica | routed | completed | mean TTLT | p99 TTLT | downtime (s) |");
+    println!("|---|---|---|---|---|---|");
     for (i, r) in best.per_replica.iter().enumerate() {
         println!(
-            "| {i} | {} | {} | {:.2} | {:.2} |",
-            best.routed[i], r.measured, r.ttlt.mean, r.ttlt.p99
+            "| {i} | {} | {} | {:.2} | {:.2} | {:.1} |",
+            best.routed[i], r.measured, r.ttlt.mean, r.ttlt.p99, best.downtime[i]
         );
     }
 

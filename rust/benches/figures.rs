@@ -718,6 +718,54 @@ fn fig12b(ctx: &Ctx) {
         "router,ttlt_mean,ttlt_p90,ttft_mean,throughput,imbalance",
         &rows,
     );
+
+    // --- burst + failure scenario -----------------------------------------
+    // the same fleet under MMPP on/off bursts with one mid-run outage on
+    // (fast) replica 0: routers must carry the re-dispatched load on the
+    // survivors, and idle replicas may steal queued work during the bursts.
+    // Every router must still conserve requests exactly.
+    println!("\n--- burst (MMPP) + replica-0 outage ---");
+    let mut bcfg = cfg.clone();
+    bcfg.workload.arrival.kind = sagesched::config::ArrivalKind::Mmpp;
+    bcfg.workload.arrival.burst_factor = 5.0;
+    bcfg.workload.arrival.burst_on_mean = 4.0;
+    bcfg.workload.arrival.burst_off_mean = 12.0;
+    let span = bcfg.workload.n_requests as f64 / bcfg.workload.rps;
+    bcfg.cluster.failures = vec![sagesched::config::FailureEvent {
+        replica: 0,
+        at: span / 3.0,
+        duration: span / 6.0,
+    }];
+    println!("{}", sagesched::metrics::ClusterReport::markdown_header());
+    let mut rows = Vec::new();
+    for router in sagesched::config::RouterKind::ALL {
+        let r = sagesched::cluster::run_router_experiment(&bcfg, router)
+            .expect("burst+failure cluster experiment failed");
+        let n = bcfg.workload.n_requests as u64;
+        let accounted = r.aggregate.completed + r.aggregate.rejected + r.aggregate.aborted;
+        assert_eq!(accounted, n, "{}: {accounted} accounted of {n}", r.router);
+        println!("{}", r.markdown_row());
+        rows.push(format!(
+            "{},{:.4},{:.4},{:.4},{:.3},{},{},{},{},{:.4}",
+            r.router,
+            r.aggregate.ttlt.mean,
+            r.aggregate.ttlt.p90,
+            r.aggregate.throughput,
+            r.imbalance,
+            r.re_routed,
+            r.stolen,
+            r.aggregate.rejected,
+            r.aggregate.aborted,
+            r.aggregate.goodput(),
+        ));
+    }
+    write_csv(
+        "fig12b_burst_failure",
+        "router,ttlt_mean,ttlt_p90,throughput,imbalance,re_routed,stolen,rejected,aborted,goodput",
+        &rows,
+    );
+    println!("  (outage: replica 0 down {:.0}s..{:.0}s of a ~{span:.0}s trace)",
+        span / 3.0, span / 3.0 + span / 6.0);
 }
 
 // ===========================================================================

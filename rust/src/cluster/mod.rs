@@ -20,6 +20,24 @@
 //! Routers: `round-robin`, `least-loaded` (live-request count), `least-kv`
 //! (KV-block occupancy), and `cost-aware` (predicted outstanding cost from
 //! the shared predictor's [`LengthDist`], normalized by replica speed).
+//! Routers see only the *surviving* replica set and return positions into
+//! it; the dispatcher maps positions back to replica ids.
+//!
+//! **Replica lifecycle**: [`ClusterConfig`](crate::config::ClusterConfig)
+//! may schedule [`FailureEvent`](crate::config::FailureEvent)s. At failure
+//! time the replica's live requests are drained (crash semantics — queued,
+//! running, and preempted state is lost), cluster bookkeeping for them is
+//! reconciled, and each is re-dispatched through the router over the
+//! survivors (`re_routed` in [`ClusterReport`]). The replica rejoins the
+//! routable set, empty, at recovery time; its downtime is reported
+//! per-replica. Between events, **work stealing** lets an idle replica take
+//! up to half of the most-backlogged replica's never-scheduled (queued)
+//! requests — those hold no KV/engine state, so migration is free
+//! (`stolen` in the report).
+//!
+//! Arrival pacing — including the bursty MMPP and diurnal processes under
+//! which failure/re-routing is most interesting — lives in
+//! [`crate::workload::arrivals`] and is configured per workload.
 //!
 //! **Overhead measurement** (the legacy fig12 mode, [`ClusterSim`]):
 //! wallclock-measured per-request predicting/scheduling latency of the
@@ -90,9 +108,14 @@ pub trait Router: Send {
         self.kind().name()
     }
 
-    /// Pick a replica index for `req`. `predicted_cost` is the shared
-    /// predictor's E[total service cost] for this request (cost-model
-    /// units); `replicas` is never empty.
+    /// Pick a *position in the `replicas` slice* for `req` (the caller maps
+    /// it back to a replica through [`ReplicaView::id`]). The slice holds
+    /// only routable — alive — replicas, so positions and replica ids
+    /// diverge once any replica has failed; returning `ReplicaView::id`
+    /// here is a misroute. `predicted_cost` is the shared predictor's
+    /// E[total service cost] for this request (cost-model units);
+    /// `replicas` is never empty. Out-of-range returns are a hard dispatch
+    /// error, never clamped.
     fn route(&mut self, req: &Request, predicted_cost: f64, replicas: &[ReplicaView]) -> usize;
 }
 
@@ -141,11 +164,11 @@ impl Router for LeastKvRouter {
     fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
         let mut best = 0usize;
         let mut best_occ = f64::INFINITY;
-        for r in replicas {
+        for (slot, r) in replicas.iter().enumerate() {
             let occ = r.kv_occupancy();
             if occ < best_occ {
                 best_occ = occ;
-                best = r.id;
+                best = slot;
             }
         }
         best
@@ -167,11 +190,11 @@ impl Router for CostAwareRouter {
     fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
         let mut best = 0usize;
         let mut best_load = f64::INFINITY;
-        for r in replicas {
+        for (slot, r) in replicas.iter().enumerate() {
             let load = r.predicted_backlog / r.speed.max(1e-9);
             if load < best_load {
                 best_load = load;
-                best = r.id;
+                best = slot;
             }
         }
         best
@@ -208,14 +231,32 @@ pub struct ClusterReplica {
     pub coord: Coordinator<SimEngine>,
     /// Speed multiplier this replica was built with.
     pub speed: f64,
+    /// Whether the replica is alive (routable). Failed replicas are
+    /// excluded from every router's view until their recovery event.
+    pub up: bool,
+    /// Virtual time the current outage began (meaningful while `!up`).
+    down_since: f64,
+    /// Accumulated downtime over completed outages (seconds).
+    pub downtime: f64,
     /// Outcomes already drained into cluster-level bookkeeping.
     seen_outcomes: usize,
     /// Timeout-aborts already reconciled into cluster-level bookkeeping.
     seen_aborted: u64,
 }
 
+/// One replica lifecycle transition derived from
+/// [`FailureEvent`](crate::config::FailureEvent)s: at `at`, replica
+/// `replica` goes down (`up == false`) or rejoins (`up == true`).
+#[derive(Clone, Copy, Debug)]
+struct LifecycleEvent {
+    at: f64,
+    replica: usize,
+    up: bool,
+}
+
 /// The event-driven multi-replica cluster: N coordinators on a shared
-/// virtual clock behind a [`Router`], with a shared prediction service.
+/// virtual clock behind a [`Router`], with a shared prediction service,
+/// replica failure/recovery, and idle-replica work stealing.
 pub struct EventCluster {
     pub cfg: ExperimentConfig,
     pub replicas: Vec<ClusterReplica>,
@@ -229,8 +270,10 @@ pub struct EventCluster {
     backlog: Vec<f64>,
     /// Per-replica routed-request counts.
     pub routed: Vec<u64>,
-    /// Requests refused at admission (coordinator queue full).
-    pub rejected: u64,
+    /// Requests re-dispatched through the router after a replica failure.
+    pub re_routed: u64,
+    /// Queued requests migrated to an idle replica by work stealing.
+    pub stolen: u64,
 }
 
 impl EventCluster {
@@ -245,6 +288,9 @@ impl EventCluster {
                 ClusterReplica {
                     coord: crate::serve::build_sim_coordinator_with(cfg, profile, seed),
                     speed: cfg.cluster.speed_of(i),
+                    up: true,
+                    down_since: 0.0,
+                    downtime: 0.0,
                     seen_outcomes: 0,
                     seen_aborted: 0,
                 }
@@ -261,13 +307,37 @@ impl EventCluster {
             cfg: cfg.clone(),
             backlog: vec![0.0; n],
             routed: vec![0; n],
-            rejected: 0,
+            re_routed: 0,
+            stolen: 0,
             replicas,
             router: make_router(router),
             predictor,
             cost: crate::cost::make_cost_model(cfg.cost_model),
             in_flight: HashMap::new(),
         }
+    }
+
+    /// Requests refused at admission, cluster-wide. Each coordinator owns
+    /// its own count (it is the sole place a refusal happens), so summing
+    /// here counts every rejection exactly once.
+    pub fn rejected(&self) -> u64 {
+        self.replicas.iter().map(|r| r.coord.rejected).sum()
+    }
+
+    /// Requests aborted by queue timeout, cluster-wide.
+    pub fn aborted(&self) -> u64 {
+        self.replicas.iter().map(|r| r.coord.aborted).sum()
+    }
+
+    /// Requests the cluster still tracks as in flight (0 after a completed
+    /// run — anything else means bookkeeping leaked).
+    pub fn in_flight_count(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Sum of per-replica predicted-cost backlogs (≈0 after a drained run).
+    pub fn total_backlog(&self) -> f64 {
+        self.backlog.iter().sum()
     }
 
     /// Build with the router configured in `cfg.cluster.router`.
@@ -284,10 +354,15 @@ impl EventCluster {
         }
     }
 
+    /// Routable snapshot: one view per *surviving* replica. `ReplicaView::id`
+    /// carries the true replica index, which no longer matches the position
+    /// in the returned slice once any replica is down — routers return
+    /// positions, the dispatcher maps them back through `id`.
     fn views(&self) -> Vec<ReplicaView> {
         self.replicas
             .iter()
             .enumerate()
+            .filter(|(_, r)| r.up)
             .map(|(i, r)| ReplicaView {
                 id: i,
                 live: r.coord.live_count(),
@@ -302,11 +377,12 @@ impl EventCluster {
     }
 
     /// Index and clock of the busy replica with the smallest virtual time,
-    /// if any replica has live work.
+    /// if any replica has live work. Down replicas hold no live work (their
+    /// requests are drained at failure time) so they never get stepped.
     fn earliest_busy(&self) -> Option<(usize, f64)> {
         let mut best: Option<(usize, f64)> = None;
         for (i, r) in self.replicas.iter().enumerate() {
-            if r.coord.is_idle() {
+            if !r.up || r.coord.is_idle() {
                 continue;
             }
             let t = r.coord.now();
@@ -317,21 +393,45 @@ impl EventCluster {
         best
     }
 
-    /// Route and submit one arrival at its arrival time.
-    fn dispatch(&mut self, req: Request) {
+    /// Route and submit one request. `not_before` is the earliest virtual
+    /// time the target may start it: the arrival time for fresh requests,
+    /// the failure instant for re-dispatched ones (an idle survivor with a
+    /// lagging clock must not serve work "before" the crash that freed it).
+    /// Fails hard when no replica is alive or the router returns an
+    /// out-of-range position — both are configuration/implementation errors
+    /// that must not be silently patched (the old `.min(len-1)` clamp
+    /// turned router misroutes into quiet load skew).
+    fn dispatch(&mut self, req: Request, not_before: f64) -> anyhow::Result<()> {
         let pred = self.predictor.predict(&req);
         let pcost = self.cost.cost_dist(req.input_len, &pred).mean();
         let views = self.views();
-        let i = self.router.route(&req, pcost, &views).min(views.len() - 1);
+        if views.is_empty() {
+            anyhow::bail!(
+                "cannot route request {}: all {} replicas are down",
+                req.id,
+                self.replicas.len()
+            );
+        }
+        let slot = self.router.route(&req, pcost, &views);
+        if slot >= views.len() {
+            anyhow::bail!(
+                "router {} returned position {slot} but only {} replicas are \
+                 routable",
+                self.router.name(),
+                views.len()
+            );
+        }
+        let i = views[slot].id;
         let id = req.id;
-        self.replicas[i].coord.advance_to(req.arrival);
+        self.replicas[i].coord.advance_to(req.arrival.max(not_before));
         if self.replicas[i].coord.submit(req.clone()) {
             self.in_flight.insert(id, (i, pcost, req));
             self.backlog[i] += pcost;
             self.routed[i] += 1;
-        } else {
-            self.rejected += 1;
         }
+        // refusals are counted by the coordinator itself (sole owner of the
+        // rejected counter; see EventCluster::rejected)
+        Ok(())
     }
 
     /// Run one scheduling iteration on replica `i` and drain its new
@@ -385,7 +485,9 @@ impl EventCluster {
     }
 
     /// Drive the full arrival stream to completion: global-time-ordered
-    /// interleaving of replica iterations and routed arrivals, then drain.
+    /// interleaving of replica iterations, routed arrivals, and replica
+    /// failure/recovery events, then drain. Idle replicas steal queued work
+    /// from backlogged peers between events.
     pub fn run(&mut self, mut requests: Vec<Request>) -> anyhow::Result<()> {
         requests.sort_by(|a, b| {
             a.arrival
@@ -393,24 +495,202 @@ impl EventCluster {
                 .unwrap()
                 .then(a.id.cmp(&b.id))
         });
+        let lifecycle = self.lifecycle_events()?;
         let mut idx = 0;
+        let mut eidx = 0;
         loop {
+            self.steal_work();
             let next_arrival = requests.get(idx).map(|r| r.arrival);
-            match (self.earliest_busy(), next_arrival) {
-                // a busy replica trails the next arrival: advance it first
-                (Some((i, t)), Some(ta)) if t < ta => self.check_progress(i)?,
-                // all busy replicas have caught up: route the arrival
+            let next_life = lifecycle.get(eidx).map(|e| e.at);
+            // next externally-scheduled event (arrival or lifecycle
+            // transition); lifecycle wins ties so same-instant arrivals
+            // already route over the post-transition replica set
+            let life_first = match (next_life, next_arrival) {
+                (Some(tl), Some(ta)) => tl <= ta,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            let next_event = match (next_life, next_arrival) {
+                (Some(tl), Some(ta)) => Some(tl.min(ta)),
+                (a, b) => a.or(b),
+            };
+            match (self.earliest_busy(), next_event) {
+                // a busy replica trails the next event: advance it first
+                (Some((i, t)), Some(te)) if t < te => self.check_progress(i)?,
+                // all busy replicas have caught up: apply the event
                 (_, Some(_)) => {
-                    let r = requests[idx].clone();
-                    idx += 1;
-                    self.dispatch(r);
+                    if life_first {
+                        let ev = lifecycle[eidx];
+                        eidx += 1;
+                        self.apply_lifecycle(ev)?;
+                    } else {
+                        let r = requests[idx].clone();
+                        idx += 1;
+                        let at = r.arrival;
+                        self.dispatch(r, at)?;
+                    }
                 }
-                // arrivals exhausted: drain remaining work
+                // events exhausted: drain remaining work
                 (Some((i, _)), None) => self.check_progress(i)?,
                 (None, None) => break,
             }
         }
         Ok(())
+    }
+
+    /// Expand the configured [`crate::config::FailureEvent`]s into a
+    /// time-sorted down/up event stream. Overlapping or touching outage
+    /// windows on one replica are merged into their union first — otherwise
+    /// the earliest recovery of a nested outage would resurrect the replica
+    /// while a longer outage is still running, undercounting downtime.
+    fn lifecycle_events(&self) -> anyhow::Result<Vec<LifecycleEvent>> {
+        let n = self.replicas.len();
+        let mut by_replica: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n];
+        for f in &self.cfg.cluster.failures {
+            if f.replica >= n {
+                anyhow::bail!(
+                    "failure event references replica {} but the cluster has \
+                     {n} replicas",
+                    f.replica
+                );
+            }
+            if let Err(e) = f.validate() {
+                anyhow::bail!("{e}");
+            }
+            by_replica[f.replica].push((f.at, f.at + f.duration));
+        }
+        let mut events = Vec::with_capacity(self.cfg.cluster.failures.len() * 2);
+        for (replica, mut windows) in by_replica.into_iter().enumerate() {
+            windows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut merged: Vec<(f64, f64)> = Vec::new();
+            for (start, end) in windows {
+                match merged.last_mut() {
+                    Some(last) if start <= last.1 => last.1 = last.1.max(end),
+                    _ => merged.push((start, end)),
+                }
+            }
+            for (start, end) in merged {
+                events.push(LifecycleEvent { at: start, replica, up: false });
+                events.push(LifecycleEvent { at: end, replica, up: true });
+            }
+        }
+        // recoveries before failures at equal times: a recovery on one
+        // replica coinciding with a failure on another applies first, so
+        // re-dispatch routes over the freshest surviving set
+        events.sort_by(|a, b| {
+            a.at.partial_cmp(&b.at)
+                .unwrap()
+                .then(b.up.cmp(&a.up))
+                .then(a.replica.cmp(&b.replica))
+        });
+        Ok(events)
+    }
+
+    /// Apply one replica lifecycle transition. A failure drains everything
+    /// the replica held — queued, running, and preempted requests lose their
+    /// state, exactly as a crash would — releases the cluster-side
+    /// backlog/in-flight bookkeeping for them, and re-dispatches each one
+    /// through the router over the surviving replicas. A recovery returns
+    /// the (empty) replica to the routable set and charges its downtime.
+    fn apply_lifecycle(&mut self, ev: LifecycleEvent) -> anyhow::Result<()> {
+        let i = ev.replica;
+        if ev.up {
+            if !self.replicas[i].up {
+                self.replicas[i].up = true;
+                self.replicas[i].downtime += ev.at - self.replicas[i].down_since;
+                self.replicas[i].coord.advance_to(ev.at);
+            }
+            return Ok(());
+        }
+        if !self.replicas[i].up {
+            return Ok(()); // overlapping outage: already down
+        }
+        self.replicas[i].up = false;
+        self.replicas[i].down_since = ev.at;
+        self.replicas[i].coord.advance_to(ev.at);
+        let mut lost = self.replicas[i].coord.drain_live();
+        for req in &lost {
+            if let Some((rep, pcost, _)) = self.in_flight.remove(&req.id) {
+                debug_assert_eq!(rep, i, "in-flight map out of sync at failure");
+                self.backlog[rep] = (self.backlog[rep] - pcost).max(0.0);
+            }
+        }
+        lost.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        self.re_routed += lost.len() as u64;
+        for req in lost {
+            self.dispatch(req, ev.at)?;
+        }
+        Ok(())
+    }
+
+    /// Idle-replica work stealing: while some alive replica sits idle and
+    /// another has more than one live request including never-scheduled
+    /// (queued) ones, migrate up to half of the victim's queued requests to
+    /// the idle replica. Queued requests hold no KV or engine state, so the
+    /// migration is free; the thief's clock is advanced to the victim's so
+    /// no request runs before the moment it was provably stealable.
+    fn steal_work(&mut self) {
+        loop {
+            let thief = match self
+                .replicas
+                .iter()
+                .position(|r| r.up && r.coord.is_idle())
+            {
+                Some(t) => t,
+                None => return,
+            };
+            // one queued_count() scan per replica (it walks the live vec);
+            // ascending iteration with a strict `>` keeps ties on the
+            // lowest index for determinism
+            let mut best: Option<(usize, usize)> = None; // (replica, queued)
+            for (j, r) in self.replicas.iter().enumerate() {
+                if j == thief || !r.up || r.coord.live_count() < 2 {
+                    continue;
+                }
+                let queued = r.coord.queued_count();
+                if queued > 0 && best.map_or(true, |(_, bq)| queued > bq) {
+                    best = Some((j, queued));
+                }
+            }
+            let (v, v_queued) = match best {
+                Some(b) => b,
+                None => return,
+            };
+            // cap at the thief's admission window (it is idle, so its live
+            // set is empty): stolen submissions must never be refused, or a
+            // request that was safely queued would count as rejected
+            let capacity = match self.replicas[thief].coord.max_queue {
+                0 => usize::MAX,
+                cap => cap,
+            };
+            let take = v_queued.div_ceil(2).min(capacity);
+            let victim_now = self.replicas[v].coord.now();
+            let moved = self.replicas[v].coord.drain_queued(take);
+            if moved.is_empty() {
+                return;
+            }
+            self.replicas[thief].coord.advance_to(victim_now);
+            for req in moved {
+                let id = req.id;
+                let accepted = self.replicas[thief].coord.submit(req);
+                debug_assert!(accepted, "idle thief must accept within its window");
+                if !accepted {
+                    continue;
+                }
+                self.stolen += 1;
+                if let Some(entry) = self.in_flight.get_mut(&id) {
+                    let pcost = entry.1;
+                    self.backlog[entry.0] = (self.backlog[entry.0] - pcost).max(0.0);
+                    self.backlog[thief] += pcost;
+                    entry.0 = thief;
+                }
+            }
+        }
     }
 
     /// Step replica `i` and fail loudly if it is wedged instead of spinning
@@ -446,17 +726,34 @@ impl EventCluster {
         out
     }
 
-    /// Cluster-level report (aggregate + per-replica).
+    /// Cluster-level report (aggregate + per-replica + lifecycle counters).
     pub fn report(&self, warmup_fraction: f64) -> ClusterReport {
         let per_replica: Vec<RunReport> = self
             .replicas
             .iter()
             .map(|r| r.coord.report(warmup_fraction))
             .collect();
+        // an outage still open at report time is charged up to the
+        // cluster-wide clock horizon
+        let horizon = self
+            .replicas
+            .iter()
+            .map(|r| r.coord.now())
+            .fold(0.0, f64::max);
+        let downtime: Vec<f64> = self
+            .replicas
+            .iter()
+            .map(|r| r.downtime + if r.up { 0.0 } else { (horizon - r.down_since).max(0.0) })
+            .collect();
         ClusterReport::new(
             self.router.name().to_string(),
             per_replica,
-            self.routed.clone(),
+            crate::metrics::ClusterCounters {
+                routed: self.routed.clone(),
+                re_routed: self.re_routed,
+                stolen: self.stolen,
+                downtime,
+            },
             &self.merged_outcomes(),
             warmup_fraction,
         )
@@ -608,10 +905,9 @@ impl ClusterSim {
         }
         // scheduling happens per node but the paper's centralized variant
         // scales the work with cluster size; model one scheduler handling
-        // all nodes' queues round-robin:
-        let sched_latency = mean(&sched_times) * n_nodes as f64 / 64.0_f64.max(1.0);
-        // normalize so the 64-node point does one full-depth pass
-        let sched_latency = sched_latency.max(mean(&sched_times) * n_nodes as f64 / 64.0);
+        // all nodes' queues round-robin. Up to 64 nodes one full-depth pass
+        // covers everyone; past that the pass count grows linearly.
+        let sched_latency = mean(&sched_times) * sched_scale(n_nodes);
 
         ClusterOverhead {
             nodes: n_nodes,
@@ -627,6 +923,16 @@ impl ClusterSim {
     pub fn sweep(&self, sizes: &[usize]) -> Vec<ClusterOverhead> {
         sizes.iter().map(|&n| self.measure(n)).collect()
     }
+}
+
+/// Centralized-scheduler work multiplier: `(n/64).max(1)` full-depth
+/// scheduling passes. Monotone non-decreasing in `n` — a small cluster pays
+/// one full pass, never a fraction of one. (The previous expression,
+/// `n / 64.0_f64.max(1.0)`, divided *every* cluster size by a constant 64
+/// due to operator precedence, so 1-node clusters reported 64× too little
+/// scheduling overhead.)
+pub fn sched_scale(n_nodes: usize) -> f64 {
+    (n_nodes as f64 / 64.0).max(1.0)
 }
 
 #[cfg(test)]
@@ -679,6 +985,26 @@ mod tests {
     }
 
     #[test]
+    fn routers_return_positions_not_ids_over_sparse_views() {
+        // the surviving view set after failures: ids 3/7/9, positions 0/1/2.
+        // returning `ReplicaView::id` here (the old bug) would be out of
+        // range or a misroute.
+        let views = vec![
+            view(3, 4, 80, 500.0, 1.0),
+            view(7, 2, 90, 100.0, 1.0),
+            view(9, 3, 10, 400.0, 1.0),
+        ];
+        let r = any_req();
+        assert_eq!(LeastLoadedRouter.route(&r, 1.0, &views), 1);
+        assert_eq!(LeastKvRouter.route(&r, 1.0, &views), 2);
+        assert_eq!(CostAwareRouter.route(&r, 1.0, &views), 1);
+        let mut rr = RoundRobinRouter::default();
+        for expect in [0usize, 1, 2, 0] {
+            assert_eq!(rr.route(&r, 1.0, &views), expect);
+        }
+    }
+
+    #[test]
     fn make_router_builds_all_kinds() {
         for kind in RouterKind::ALL {
             assert_eq!(make_router(kind).kind(), kind);
@@ -698,10 +1024,14 @@ mod tests {
         let mut cluster = EventCluster::with_router(&cfg, RouterKind::CostAware);
         cluster.run(workload.requests).unwrap();
         assert_eq!(cluster.completed(), 60);
-        assert_eq!(cluster.rejected, 0);
+        assert_eq!(cluster.rejected(), 0);
+        assert_eq!(cluster.in_flight_count(), 0);
         let report = cluster.report(0.0);
         assert_eq!(report.aggregate.measured, 60);
         assert_eq!(report.per_replica.len(), 4);
+        assert_eq!(report.aggregate.completed, 60);
+        assert_eq!(report.aggregate.rejected, 0);
+        assert!((report.aggregate.goodput() - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -713,6 +1043,99 @@ mod tests {
         let large = sim.measure(64);
         assert!(large.total_latency > small.total_latency);
         assert!(large.predictor_utilization >= small.predictor_utilization);
+    }
+
+    #[test]
+    fn sched_scale_never_discounts_small_clusters() {
+        // regression for the precedence bug `n / 64.0_f64.max(1.0)`: small
+        // clusters must pay one full scheduling pass, not 1/64th of one
+        assert_eq!(sched_scale(1), 1.0);
+        assert_eq!(sched_scale(16), 1.0);
+        assert_eq!(sched_scale(64), 1.0);
+        assert_eq!(sched_scale(128), 2.0);
+        let mut prev = 0.0;
+        for n in [1usize, 2, 8, 32, 64, 96, 128, 512] {
+            let s = sched_scale(n);
+            assert!(s >= prev, "sched_scale not monotone at {n}");
+            assert!(s >= 1.0);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn measured_sched_latency_comparable_across_sizes() {
+        // wallclock-level regression: under the old bug a 1-node cluster
+        // reported ~1/64th of the 64-node scheduling latency; fixed, both
+        // pay one full-depth pass and differ only by measurement noise
+        let mut cfg = ExperimentConfig::default();
+        cfg.history_capacity = 1000;
+        let sim = ClusterSim { samples: 20, queue_depth: 200, ..ClusterSim::new(cfg) };
+        let one = sim.measure(1);
+        let big = sim.measure(64);
+        assert!(
+            one.sched_latency > 0.1 * big.sched_latency,
+            "1-node sched latency {} implausibly below 64-node {}",
+            one.sched_latency,
+            big.sched_latency
+        );
+    }
+
+    #[test]
+    fn invalid_failure_events_are_hard_errors() {
+        use crate::config::FailureEvent;
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.n_requests = 5;
+        cfg.cluster.replicas = 2;
+        cfg.cluster.failures = vec![FailureEvent { replica: 9, at: 1.0, duration: 1.0 }];
+        let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+        let mut cluster = EventCluster::with_router(&cfg, RouterKind::RoundRobin);
+        let err = cluster.run(workload.requests).unwrap_err();
+        assert!(err.to_string().contains("replica 9"), "got: {err}");
+    }
+
+    #[test]
+    fn overlapping_outages_merge_to_their_union() {
+        // regression: a short outage nested inside a long one must not
+        // resurrect the replica at the short outage's recovery point
+        use crate::config::FailureEvent;
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = PolicyKind::SageSched;
+        cfg.workload.n_requests = 200;
+        cfg.workload.rps = 20.0;
+        cfg.warmup_fraction = 0.0;
+        cfg.history_prewarm = 0;
+        cfg.cluster.replicas = 4;
+        cfg.cluster.failures = vec![
+            FailureEvent { replica: 0, at: 1.0, duration: 6.0 },
+            FailureEvent { replica: 0, at: 2.0, duration: 1.0 },
+        ];
+        let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+        let mut cluster = EventCluster::with_router(&cfg, RouterKind::RoundRobin);
+        cluster.run(workload.requests).unwrap();
+        assert_eq!(cluster.completed(), 200);
+        let report = cluster.report(0.0);
+        assert!(
+            (report.downtime[0] - 6.0).abs() < 1e-9,
+            "union outage is [1,7): downtime {} != 6.0",
+            report.downtime[0]
+        );
+    }
+
+    #[test]
+    fn all_replicas_down_is_a_hard_error_not_a_silent_drop() {
+        use crate::config::FailureEvent;
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.n_requests = 20;
+        cfg.workload.rps = 10.0;
+        cfg.cluster.replicas = 2;
+        cfg.cluster.failures = vec![
+            FailureEvent { replica: 0, at: 0.0, duration: 1e6 },
+            FailureEvent { replica: 1, at: 0.0, duration: 1e6 },
+        ];
+        let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+        let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
+        let err = cluster.run(workload.requests).unwrap_err();
+        assert!(err.to_string().contains("all"), "got: {err}");
     }
 
     #[test]

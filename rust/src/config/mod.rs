@@ -168,6 +168,88 @@ impl DatasetKind {
     }
 }
 
+/// Which arrival process paces the workload's request stream
+/// (see [`crate::workload::arrivals`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArrivalKind {
+    /// Homogeneous Poisson at the configured `rps` (the default).
+    Poisson,
+    /// Markov-modulated Poisson: an on/off burst process whose ON-state
+    /// rate is `burst_factor`× the OFF-state rate, normalized so the
+    /// long-run mean rate stays at the configured `rps`.
+    Mmpp,
+    /// Diurnal: inhomogeneous Poisson whose rate swings sinusoidally
+    /// around `rps` with the configured period and relative amplitude.
+    Diurnal,
+}
+
+impl ArrivalKind {
+    pub const ALL: [ArrivalKind; 3] =
+        [ArrivalKind::Poisson, ArrivalKind::Mmpp, ArrivalKind::Diurnal];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Mmpp => "mmpp",
+            ArrivalKind::Diurnal => "diurnal",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ArrivalKind> {
+        ArrivalKind::ALL.iter().copied().find(|a| a.name() == s)
+    }
+}
+
+/// Arrival-process shape. The `rps` in [`WorkloadConfig`] is always the
+/// *long-run mean* rate, so traces generated under different kinds are
+/// load-comparable; the kind only redistributes the arrivals in time.
+#[derive(Clone, Debug)]
+pub struct ArrivalConfig {
+    pub kind: ArrivalKind,
+    /// MMPP: ON-state rate as a multiple of the OFF-state rate (>= 1).
+    pub burst_factor: f64,
+    /// MMPP: mean duration of the bursty ON state (seconds).
+    pub burst_on_mean: f64,
+    /// MMPP: mean duration of the quiet OFF state (seconds).
+    pub burst_off_mean: f64,
+    /// Diurnal: period of one rate cycle (seconds).
+    pub diurnal_period: f64,
+    /// Diurnal: relative rate amplitude in [0, 1) — rate swings between
+    /// `rps*(1-a)` and `rps*(1+a)`.
+    pub diurnal_amplitude: f64,
+}
+
+impl Default for ArrivalConfig {
+    fn default() -> Self {
+        ArrivalConfig {
+            kind: ArrivalKind::Poisson,
+            burst_factor: 6.0,
+            burst_on_mean: 10.0,
+            burst_off_mean: 40.0,
+            diurnal_period: 120.0,
+            diurnal_amplitude: 0.8,
+        }
+    }
+}
+
+impl ArrivalConfig {
+    /// Parameter bounds shared by every config surface (JSON and CLI): one
+    /// validator so accepted ranges cannot drift between entry points.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.burst_factor < 1.0
+            || self.burst_on_mean <= 0.0
+            || self.burst_off_mean <= 0.0
+            || self.diurnal_period <= 0.0
+            || !(0.0..1.0).contains(&self.diurnal_amplitude)
+        {
+            return Err("arrival: burst_factor >= 1, state durations and \
+                        period > 0, amplitude in [0,1) required"
+                .to_string());
+        }
+        Ok(())
+    }
+}
+
 /// Which request router fronts the multi-replica cluster
 /// (see [`crate::cluster`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -206,6 +288,66 @@ impl RouterKind {
     }
 }
 
+/// One scheduled replica outage for the event-driven cluster simulation:
+/// replica `replica` goes down at virtual time `at` (its in-flight requests
+/// are re-dispatched through the router over the surviving replicas) and
+/// recovers, empty, at `at + duration`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureEvent {
+    /// Replica index to fail.
+    pub replica: usize,
+    /// Virtual time of the failure (seconds).
+    pub at: f64,
+    /// Downtime before the replica rejoins the routable set (seconds).
+    pub duration: f64,
+}
+
+impl FailureEvent {
+    /// Time bounds shared by every surface that accepts outages (grammar
+    /// parser, JSON config, and the cluster's event expansion).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.at < 0.0 || self.duration <= 0.0 {
+            return Err(format!(
+                "failure event for replica {}: need at >= 0 and duration > 0",
+                self.replica
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse a comma-separated `replica@start+duration` list — the CLI's
+    /// `--fail` grammar, e.g. `1@30+10,0@60+5` (replica 1 down from t=30
+    /// for 10 s, replica 0 down from t=60 for 5 s). Shared by the
+    /// `sagesched` binary and the examples so the grammar cannot diverge.
+    pub fn parse_list(s: &str) -> Result<Vec<FailureEvent>, String> {
+        s.split(',')
+            .map(|item| {
+                let item = item.trim();
+                let shape =
+                    || format!("failure {item:?}: expected replica@start+duration");
+                let (rep, rest) = item.split_once('@').ok_or_else(shape)?;
+                let (at, dur) = rest.split_once('+').ok_or_else(shape)?;
+                let ev = FailureEvent {
+                    replica: rep
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("failure {item:?}: bad replica index"))?,
+                    at: at
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("failure {item:?}: bad start time"))?,
+                    duration: dur
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("failure {item:?}: bad duration"))?,
+                };
+                ev.validate().map_err(|e| format!("{e} (in {item:?})"))?;
+                Ok(ev)
+            })
+            .collect()
+    }
+}
+
 /// Multi-replica cluster shape for the event-driven cluster simulation.
 ///
 /// The heterogeneity vectors are *cycled* over replica indices (replica `i`
@@ -224,6 +366,8 @@ pub struct ClusterConfig {
     pub batch_sizes: Vec<usize>,
     /// Per-replica KV-capacity (tokens) overrides (cycled).
     pub kv_capacities: Vec<usize>,
+    /// Scheduled replica outages (failure + recovery; may be empty).
+    pub failures: Vec<FailureEvent>,
 }
 
 impl Default for ClusterConfig {
@@ -234,6 +378,7 @@ impl Default for ClusterConfig {
             speeds: Vec::new(),
             batch_sizes: Vec::new(),
             kv_capacities: Vec::new(),
+            failures: Vec::new(),
         }
     }
 }
@@ -368,8 +513,10 @@ impl EngineProfile {
 pub struct WorkloadConfig {
     /// (dataset, weight) mixture; weights need not sum to 1.
     pub mix: Vec<(DatasetKind, f64)>,
-    /// Poisson arrival rate, requests per second.
+    /// Long-run mean arrival rate, requests per second.
     pub rps: f64,
+    /// Arrival-process shape pacing the stream at that mean rate.
+    pub arrival: ArrivalConfig,
     /// Number of requests to generate.
     pub n_requests: usize,
     /// Latent topics per dataset (drives prompt-similarity structure).
@@ -394,6 +541,7 @@ impl Default for WorkloadConfig {
                 (DatasetKind::Write, 1.0),
             ],
             rps: 8.0,
+            arrival: ArrivalConfig::default(),
             n_requests: 600,
             topics_per_dataset: 16,
             embed_sigma: 0.05,
@@ -523,6 +671,20 @@ impl ExperimentConfig {
             cfg.workload.rps = w.f64_or("rps", cfg.workload.rps);
             cfg.workload.n_requests =
                 w.f64_or("n_requests", cfg.workload.n_requests as f64) as usize;
+            if let Some(a) = w.get("arrival") {
+                let arr = &mut cfg.workload.arrival;
+                if let Some(kind) = a.get("kind").and_then(Json::as_str) {
+                    arr.kind = ArrivalKind::from_name(kind)
+                        .ok_or_else(|| format!("unknown arrival kind {kind}"))?;
+                }
+                arr.burst_factor = a.f64_or("burst_factor", arr.burst_factor);
+                arr.burst_on_mean = a.f64_or("burst_on_mean", arr.burst_on_mean);
+                arr.burst_off_mean = a.f64_or("burst_off_mean", arr.burst_off_mean);
+                arr.diurnal_period = a.f64_or("diurnal_period", arr.diurnal_period);
+                arr.diurnal_amplitude =
+                    a.f64_or("diurnal_amplitude", arr.diurnal_amplitude);
+                arr.validate().map_err(|e| format!("workload.{e}"))?;
+            }
             if let Some(arr) = w.get("mix").and_then(Json::as_arr) {
                 let mut mix = Vec::new();
                 for item in arr {
@@ -578,6 +740,23 @@ impl ExperimentConfig {
             }
             if !kvs.is_empty() {
                 cfg.cluster.kv_capacities = kvs.iter().map(|&k| k as usize).collect();
+            }
+            if let Some(fails) = c.get("failures").and_then(Json::as_arr) {
+                let mut failures = Vec::new();
+                for f in fails {
+                    let replica = f
+                        .get("replica")
+                        .and_then(Json::as_u64)
+                        .ok_or_else(|| {
+                            "cluster.failures: missing replica index".to_string()
+                        })? as usize;
+                    let at = f.f64_or("at", -1.0);
+                    let duration = f.f64_or("duration", 0.0);
+                    let ev = FailureEvent { replica, at, duration };
+                    ev.validate().map_err(|e| format!("cluster.failures: {e}"))?;
+                    failures.push(ev);
+                }
+                cfg.cluster.failures = failures;
             }
         }
         Ok(cfg)
@@ -683,6 +862,67 @@ mod tests {
         assert_eq!(c.cluster.speeds, vec![1.0, 0.5]);
         assert_eq!(c.cluster.kv_capacities, vec![9000]);
         let bad = Json::parse(r#"{"cluster":{"router":"zzz"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn arrival_names_roundtrip() {
+        for a in ArrivalKind::ALL {
+            assert_eq!(ArrivalKind::from_name(a.name()), Some(a));
+        }
+        assert_eq!(ArrivalKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn from_json_parses_arrival_block() {
+        let j = Json::parse(
+            r#"{"workload":{"arrival":{"kind":"mmpp","burst_factor":4,
+                "burst_on_mean":5,"burst_off_mean":20}}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.workload.arrival.kind, ArrivalKind::Mmpp);
+        assert_eq!(c.workload.arrival.burst_factor, 4.0);
+        assert_eq!(c.workload.arrival.burst_on_mean, 5.0);
+        let bad = Json::parse(r#"{"workload":{"arrival":{"kind":"zzz"}}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+        let bad =
+            Json::parse(r#"{"workload":{"arrival":{"burst_factor":0.5}}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn failure_list_grammar_roundtrips_and_rejects_garbage() {
+        let evs = FailureEvent::parse_list("1@30+10, 0@60+5").unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                FailureEvent { replica: 1, at: 30.0, duration: 10.0 },
+                FailureEvent { replica: 0, at: 60.0, duration: 5.0 },
+            ]
+        );
+        for bad in ["1@30", "x@1+1", "1@x+1", "1@1+x", "1@-1+5", "1@5+0"] {
+            assert!(FailureEvent::parse_list(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn from_json_parses_failures() {
+        let j = Json::parse(
+            r#"{"cluster":{"failures":[{"replica":1,"at":30,"duration":10}]}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(
+            c.cluster.failures,
+            vec![FailureEvent { replica: 1, at: 30.0, duration: 10.0 }]
+        );
+        let bad = Json::parse(
+            r#"{"cluster":{"failures":[{"replica":1,"at":30,"duration":0}]}}"#,
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"cluster":{"failures":[{"at":30}]}}"#).unwrap();
         assert!(ExperimentConfig::from_json(&bad).is_err());
     }
 

@@ -50,9 +50,11 @@ pub mod workload;
 pub mod prelude {
     pub use crate::cluster::{run_router_experiment, EventCluster, Router};
     pub use crate::config::{
-        ClusterConfig, CostModelKind, DatasetKind, EngineProfile, ExperimentConfig,
-        PolicyKind, PredictorKind, RouterKind, WorkloadConfig,
+        ArrivalConfig, ArrivalKind, ClusterConfig, CostModelKind, DatasetKind,
+        EngineProfile, ExperimentConfig, FailureEvent, PolicyKind, PredictorKind,
+        RouterKind, WorkloadConfig,
     };
+    pub use crate::workload::arrivals::ArrivalProcess;
     pub use crate::core::{Request, RequestId, RequestOutcome};
     pub use crate::cost::{CostModel, OutputLenCost, OverallLenCost, ResourceBoundCost};
     pub use crate::distribution::LengthDist;

@@ -16,7 +16,8 @@ use anyhow::{bail, Context, Result};
 
 use sagesched::cluster::{run_router_experiment, ClusterSim};
 use sagesched::config::{
-    CostModelKind, EngineProfile, ExperimentConfig, PolicyKind, PredictorKind, RouterKind,
+    ArrivalKind, CostModelKind, EngineProfile, ExperimentConfig, FailureEvent,
+    PolicyKind, PredictorKind, RouterKind,
 };
 use sagesched::metrics::ClusterReport;
 use sagesched::engine::RealEngine;
@@ -50,6 +51,23 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.seed = args.u64_or("seed", cfg.seed);
     cfg.workload.rps = args.f64_or("rps", cfg.workload.rps);
     cfg.workload.n_requests = args.usize_or("n", cfg.workload.n_requests);
+    if let Some(a) = args.get("arrival") {
+        cfg.workload.arrival.kind =
+            ArrivalKind::from_name(a).context("unknown --arrival")?;
+    }
+    let arr = &mut cfg.workload.arrival;
+    arr.burst_factor = args.f64_or("burst-factor", arr.burst_factor);
+    arr.burst_on_mean = args.f64_or("burst-on", arr.burst_on_mean);
+    arr.burst_off_mean = args.f64_or("burst-off", arr.burst_off_mean);
+    arr.diurnal_period = args.f64_or("diurnal-period", arr.diurnal_period);
+    arr.diurnal_amplitude = args.f64_or("diurnal-amplitude", arr.diurnal_amplitude);
+    if let Err(e) = arr.validate() {
+        bail!("{e} (--burst-factor/--burst-on/--burst-off/--diurnal-period/--diurnal-amplitude)");
+    }
+    if let Some(f) = args.get("fail") {
+        cfg.cluster.failures =
+            FailureEvent::parse_list(f).map_err(|e| anyhow::anyhow!("--fail: {e}"))?;
+    }
     cfg.similarity_threshold =
         args.f64_or("threshold", cfg.similarity_threshold as f64) as f32;
     cfg.bucket_tokens = args.u64_or("bucket", cfg.bucket_tokens as u64) as u32;
@@ -100,6 +118,13 @@ fn print_report(report: &RunReport, as_json: bool) {
     } else {
         println!("{}", RunReport::markdown_header());
         println!("{}", report.markdown_row());
+        println!(
+            "goodput: {:.1}% ({} completed, {} rejected, {} timed out)",
+            report.goodput() * 100.0,
+            report.completed,
+            report.rejected,
+            report.aborted
+        );
     }
 }
 
@@ -275,15 +300,26 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         bail!("--routers produced an empty list");
     }
     println!(
-        "# {} replicas · {} requests @ {} rps · policy {} · seed {}",
+        "# {} replicas · {} requests @ {} rps ({} arrivals) · policy {} · seed {}",
         cfg.cluster.replicas,
         cfg.workload.n_requests,
         cfg.workload.rps,
+        cfg.workload.arrival.kind.name(),
         cfg.policy.name(),
         cfg.seed
     );
     if !cfg.cluster.speeds.is_empty() {
         println!("# replica speeds (cycled): {:?}", cfg.cluster.speeds);
+    }
+    if !cfg.cluster.failures.is_empty() {
+        for f in &cfg.cluster.failures {
+            println!(
+                "# outage: replica {} down {:.1}s..{:.1}s",
+                f.replica,
+                f.at,
+                f.at + f.duration
+            );
+        }
     }
     println!("{}", ClusterReport::markdown_header());
     let mut reports = Vec::new();
@@ -291,6 +327,19 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         let report = run_router_experiment(&cfg, router)?;
         println!("{}", report.markdown_row());
         reports.push(report);
+    }
+    for r in &reports {
+        println!(
+            "# {}: goodput {:.1}% ({} completed, {} rejected, {} timed out, \
+             {} re-routed, {} stolen)",
+            r.router,
+            r.aggregate.goodput() * 100.0,
+            r.aggregate.completed,
+            r.aggregate.rejected,
+            r.aggregate.aborted,
+            r.re_routed,
+            r.stolen
+        );
     }
     if args.has("json") {
         for r in &reports {
@@ -354,9 +403,14 @@ const USAGE: &str = "usage: sagesched <run|sweep|smoke|serve|cluster> [flags]
   cluster event-driven multi-replica sim, one row per router
           (--replicas 4 --routers all|round-robin,least-loaded,least-kv,cost-aware
            --speeds 1.0,0.5 --batch-sizes 256,128 --kv-capacities 10000,6000
+           --fail 1@30+10,0@60+5   replica outages (replica@start+duration)
            --per-replica --json)
   cluster --overhead   fig12 shared-service overhead sweep (--nodes 1,4,16,64)
   gen-trace record a workload trace           (--out trace.jsonl --n 1000)
+  arrival-process flags (run / sweep / cluster / gen-trace):
+          --arrival poisson|mmpp|diurnal
+          --burst-factor 6 --burst-on 10 --burst-off 40       (mmpp)
+          --diurnal-period 120 --diurnal-amplitude 0.8        (diurnal)
   (run also accepts --trace file.jsonl to replay a recorded trace)";
 
 fn main() -> Result<()> {

@@ -27,6 +27,12 @@ pub struct RunReport {
     pub makespan: f64,
     /// measured request throughput (req/s)
     pub throughput: f64,
+    /// total completions over the whole run (not warmup-filtered)
+    pub completed: u64,
+    /// requests refused at admission (queue full)
+    pub rejected: u64,
+    /// requests aborted after timing out in the queue
+    pub aborted: u64,
     pub preemptions: u64,
     pub swap_out_events: u64,
     pub swap_in_events: u64,
@@ -80,6 +86,18 @@ impl RunReport {
         r
     }
 
+    /// Fraction of submitted requests that completed (1.0 when lossless).
+    /// Lossy runs — admission rejections, queue timeouts — look identical
+    /// to lossless ones on latency alone; goodput is the honesty metric.
+    pub fn goodput(&self) -> f64 {
+        let total = self.completed + self.rejected + self.aborted;
+        if total == 0 {
+            1.0
+        } else {
+            self.completed as f64 / total as f64
+        }
+    }
+
     /// One markdown table row (pairs with [`RunReport::markdown_header`]).
     pub fn markdown_row(&self) -> String {
         format!(
@@ -127,6 +145,10 @@ impl RunReport {
             ("ttlt_by_dataset", Json::obj(by_ds)),
             ("makespan", Json::num(self.makespan)),
             ("throughput", Json::num(self.throughput)),
+            ("completed", Json::num(self.completed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("aborted", Json::num(self.aborted as f64)),
+            ("goodput", Json::num(self.goodput())),
             ("preemptions", Json::num(self.preemptions as f64)),
             ("swap_out_events", Json::num(self.swap_out_events as f64)),
             ("swap_in_events", Json::num(self.swap_in_events as f64)),
@@ -155,9 +177,29 @@ pub struct ClusterReport {
     pub per_replica: Vec<RunReport>,
     /// Requests routed to each replica.
     pub routed: Vec<u64>,
+    /// Requests re-dispatched through the router after a replica failure.
+    pub re_routed: u64,
+    /// Queued requests migrated to an idle replica by work stealing.
+    pub stolen: u64,
+    /// Per-replica accumulated downtime (seconds; index = replica id).
+    pub downtime: Vec<f64>,
     /// Completion imbalance: max replica completions / mean replica
     /// completions (1.0 = perfectly balanced; 0.0 when nothing completed).
     pub imbalance: f64,
+}
+
+/// Cluster lifecycle counters feeding a [`ClusterReport`] (kept separate so
+/// `ClusterReport::new` stays readable as the cluster grows more telemetry).
+#[derive(Clone, Debug, Default)]
+pub struct ClusterCounters {
+    /// Requests routed to each replica.
+    pub routed: Vec<u64>,
+    /// Requests re-dispatched after replica failures.
+    pub re_routed: u64,
+    /// Requests migrated by idle-replica work stealing.
+    pub stolen: u64,
+    /// Per-replica accumulated downtime (seconds).
+    pub downtime: Vec<f64>,
 }
 
 impl ClusterReport {
@@ -167,7 +209,7 @@ impl ClusterReport {
     pub fn new(
         router: String,
         per_replica: Vec<RunReport>,
-        routed: Vec<u64>,
+        counters: ClusterCounters,
         merged: &[RequestOutcome],
         warmup_fraction: f64,
     ) -> ClusterReport {
@@ -189,6 +231,9 @@ impl ClusterReport {
             aggregate.cost_model = first.cost_model.clone();
         }
         for r in &per_replica {
+            aggregate.completed += r.completed;
+            aggregate.rejected += r.rejected;
+            aggregate.aborted += r.aborted;
             aggregate.preemptions += r.preemptions;
             aggregate.swap_out_events += r.swap_out_events;
             aggregate.swap_in_events += r.swap_in_events;
@@ -212,20 +257,23 @@ impl ClusterReport {
             replicas: per_replica.len(),
             aggregate,
             per_replica,
-            routed,
+            routed: counters.routed,
+            re_routed: counters.re_routed,
+            stolen: counters.stolen,
+            downtime: counters.downtime,
             imbalance,
         }
     }
 
     pub fn markdown_header() -> String {
-        "| router | replicas | TTLT mean | TTLT p90 | TTFT mean | TTFT p90 | thru (r/s) | imbalance |\n\
-         |---|---|---|---|---|---|---|---|"
+        "| router | replicas | TTLT mean | TTLT p90 | TTFT mean | TTFT p90 | thru (r/s) | imbalance | re-routed | stolen | rejected | aborted | goodput |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|---|"
             .to_string()
     }
 
     pub fn markdown_row(&self) -> String {
         format!(
-            "| {} | {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.2} | {:.2} |",
+            "| {} | {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.2} | {:.2} | {} | {} | {} | {} | {:.3} |",
             self.router,
             self.replicas,
             self.aggregate.ttlt.mean,
@@ -234,6 +282,11 @@ impl ClusterReport {
             self.aggregate.ttft.p90,
             self.aggregate.throughput,
             self.imbalance,
+            self.re_routed,
+            self.stolen,
+            self.aggregate.rejected,
+            self.aggregate.aborted,
+            self.aggregate.goodput(),
         )
     }
 
@@ -249,6 +302,12 @@ impl ClusterReport {
             (
                 "routed",
                 Json::arr(self.routed.iter().map(|&n| Json::num(n as f64))),
+            ),
+            ("re_routed", Json::num(self.re_routed as f64)),
+            ("stolen", Json::num(self.stolen as f64)),
+            (
+                "downtime",
+                Json::arr(self.downtime.iter().map(|&d| Json::num(d))),
             ),
             ("imbalance", Json::num(self.imbalance)),
         ])
@@ -317,20 +376,49 @@ mod tests {
             outcome(3, DatasetKind::ShareGpt, 2.0, 3.0, 4.0),
             outcome(4, DatasetKind::Write, 0.5, 1.5, 2.5),
         ];
-        let c = ClusterReport::new(
-            "least-loaded".into(),
-            vec![r0, r1],
-            vec![3, 1],
-            &merged,
-            0.0,
-        );
+        let mut r0 = r0;
+        r0.completed = 3;
+        r0.rejected = 2;
+        let mut r1 = r1;
+        r1.completed = 1;
+        r1.aborted = 1;
+        let counters = ClusterCounters {
+            routed: vec![3, 1],
+            re_routed: 2,
+            stolen: 1,
+            downtime: vec![0.0, 4.5],
+        };
+        let c = ClusterReport::new("least-loaded".into(), vec![r0, r1], counters, &merged, 0.0);
         assert_eq!(c.replicas, 2);
         assert_eq!(c.aggregate.measured, 4);
         // counts 3 and 1: mean 2, max 3 -> imbalance 1.5
         assert!((c.imbalance - 1.5).abs() < 1e-12);
+        // loss accounting aggregates exactly once across replicas
+        assert_eq!(c.aggregate.completed, 4);
+        assert_eq!(c.aggregate.rejected, 2);
+        assert_eq!(c.aggregate.aborted, 1);
+        assert!((c.aggregate.goodput() - 4.0 / 7.0).abs() < 1e-12);
+        assert_eq!(c.re_routed, 2);
+        assert_eq!(c.stolen, 1);
         assert!(c.markdown_row().starts_with("| least-loaded | 2 |"));
+        assert_eq!(
+            c.markdown_row().matches('|').count(),
+            ClusterReport::markdown_header()
+                .lines()
+                .next()
+                .unwrap()
+                .matches('|')
+                .count()
+        );
         let j = Json::parse(&c.to_json().to_string()).unwrap();
         assert_eq!(j.str_or("router", ""), "least-loaded");
+        assert_eq!(j.f64_or("re_routed", -1.0), 2.0);
+        assert_eq!(j.f64_or("stolen", -1.0), 1.0);
+        assert_eq!(
+            j.get("aggregate").unwrap().f64_or("rejected", -1.0),
+            2.0
+        );
+        assert!(j.get("aggregate").unwrap().f64_or("goodput", -1.0) > 0.0);
     }
 
     #[test]

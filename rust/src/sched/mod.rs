@@ -111,19 +111,35 @@ struct MlfqState {
     last_generated: u32,
 }
 
+/// MLFQ quantum at `level` on a `base`-token ladder: `base * 2^level`,
+/// saturating at `u32::MAX` for deep levels instead of shifting bits out —
+/// a wrapped quantum of 0 would cascade-demote every request straight to
+/// the bottom queue (the old `quantum << level` did exactly that past
+/// level 31, and overflowed in debug builds well before).
+fn ladder_quantum(base: u32, level: u32) -> u32 {
+    ((base as u64) << level.min(32)).min(u32::MAX as u64) as u32
+}
+
 impl FastServePolicy {
     pub fn new(quantum_tokens: u32, levels: usize) -> FastServePolicy {
         assert!(quantum_tokens >= 1 && levels >= 2);
         FastServePolicy { quantum_tokens, levels, state: HashMap::new() }
     }
 
+    /// Quantum at `level` (see [`ladder_quantum`]): the single ladder both
+    /// entry (skip-join) and demotion walk, so they can never diverge.
+    fn quantum_at(&self, level: u32) -> u32 {
+        ladder_quantum(self.quantum_tokens, level)
+    }
+
     fn entry_level(&self, input_len: u32) -> u32 {
         // skip-join: enter the queue whose quantum covers the prompt cost
+        // (prefill tokens ≈ 4x decode rate, hence the 4x headroom)
         let mut level = 0u32;
-        let mut q = self.quantum_tokens * 4; // prefill tokens ≈ 4x decode rate
-        while input_len > q && (level as usize) < self.levels - 1 {
+        while (level as usize) < self.levels - 1
+            && input_len > self.quantum_at(level).saturating_mul(4)
+        {
             level += 1;
-            q *= 2;
         }
         level
     }
@@ -146,12 +162,12 @@ impl Policy for FastServePolicy {
         // account service since last look; demote when quantum exhausted
         let newly = v.generated.saturating_sub(st.last_generated);
         st.last_generated = v.generated;
-        st.served_in_level += newly;
-        let mut q = quantum << st.level;
+        st.served_in_level = st.served_in_level.saturating_add(newly);
+        let mut q = ladder_quantum(quantum, st.level);
         while st.served_in_level >= q && (st.level as usize) < levels - 1 {
             st.served_in_level -= q;
             st.level += 1;
-            q = quantum << st.level;
+            q = ladder_quantum(quantum, st.level);
         }
         // order: level first, FCFS within level
         st.level as f64 * 1e9 + v.req.arrival
@@ -537,6 +553,53 @@ mod tests {
         assert_eq!(p.entry_level(50), 0);
         assert!(p.entry_level(2000) > 0);
         assert!(p.entry_level(2000) <= 5);
+    }
+
+    #[test]
+    fn fastserve_entry_and_demotion_walk_one_ladder() {
+        let p = FastServePolicy::new(32, 6);
+        for level in 0..6u32 {
+            assert_eq!(p.quantum_at(level), 32u32 << level);
+        }
+        // entry level = first level whose (4x-prefill-scaled) quantum
+        // covers the prompt — defined via the same quantum_at ladder
+        assert_eq!(p.entry_level(32 * 4), 0);
+        assert_eq!(p.entry_level(32 * 4 + 1), 1);
+        assert_eq!(p.entry_level(32 * 8 + 1), 2);
+    }
+
+    #[test]
+    fn fastserve_deep_ladder_saturates_instead_of_wrapping() {
+        // base quantum near the u32 ceiling: level >= 1 used to wrap the
+        // shifted quantum (to 0 past level 31, panicking in debug at entry)
+        let mut p = FastServePolicy::new(1u32 << 31, 4);
+        assert_eq!(p.quantum_at(0), 1u32 << 31);
+        assert_eq!(p.quantum_at(1), u32::MAX);
+        assert_eq!(p.quantum_at(40), u32::MAX);
+        assert_eq!(p.entry_level(u32::MAX), 0, "saturated quantum covers any prompt");
+        let r = req(1, 10, 2_000_000);
+        let d = LengthDist::point(100.0);
+        let p0 = p.priority(&view(&r, 0, &d, &d));
+        // far below the saturated quantum: must NOT be demoted
+        let p1 = p.priority(&view(&r, 1_000_000, &d, &d));
+        assert_eq!(p0, p1, "spurious demotion on deep ladder");
+        assert!(p1 < 1e9, "request must still sit in the top queue");
+    }
+
+    #[test]
+    fn fastserve_demotes_through_deep_levels_without_overflow() {
+        // tiny quantum + absurd level count: a long generation walks far
+        // down the ladder; saturating arithmetic must keep quanta monotone
+        let mut p = FastServePolicy::new(1, 64);
+        let r = req(1, 1, 4_000);
+        let d = LengthDist::point(4000.0);
+        let mut last = f64::NEG_INFINITY;
+        for gen in [0u32, 10, 100, 1000, 4000] {
+            let pr = p.priority(&view(&r, gen, &d, &d));
+            assert!(pr >= last, "priority must not improve with service");
+            assert!(pr.is_finite());
+            last = pr;
+        }
     }
 
     #[test]

@@ -186,6 +186,64 @@ impl<E: Engine> Coordinator<E> {
         self.live.len()
     }
 
+    /// Live requests still waiting for their first admission (queued phase,
+    /// zero tokens generated). These hold no KV or engine state, which makes
+    /// them safe to migrate to another replica.
+    pub fn queued_count(&self) -> usize {
+        self.live
+            .iter()
+            .filter(|l| l.phase == Phase::Queued && l.generated == 0)
+            .count()
+    }
+
+    /// Remove and return up to `max` never-scheduled requests (queued phase,
+    /// zero tokens generated), newest arrivals first so the head of the line
+    /// keeps its place. The cluster's work stealing uses this: such requests
+    /// hold no KV or engine state, so handing them to another replica needs
+    /// no state transfer.
+    pub fn drain_queued(&mut self, max: usize) -> Vec<Request> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut idx: Vec<usize> = (0..self.live.len())
+            .filter(|&i| self.live[i].phase == Phase::Queued && self.live[i].generated == 0)
+            .collect();
+        idx.sort_by(|&a, &b| {
+            let (la, lb) = (&self.live[a], &self.live[b]);
+            lb.req
+                .arrival
+                .partial_cmp(&la.req.arrival)
+                .unwrap()
+                .then(lb.req.id.cmp(&la.req.id))
+        });
+        idx.truncate(max);
+        // remove back-to-front so earlier indices stay valid under swap_remove
+        idx.sort_unstable_by(|a, b| b.cmp(a));
+        let mut out = Vec::with_capacity(idx.len());
+        for i in idx {
+            let l = self.live.swap_remove(i);
+            self.policy.forget(l.req.id);
+            out.push(l.req);
+        }
+        out
+    }
+
+    /// Remove and return *all* live requests, releasing their KV, engine and
+    /// policy state. Models a replica crash: generated prefixes are lost and
+    /// the requests must be re-dispatched from scratch elsewhere (their
+    /// original arrival times are preserved so latency accounting still
+    /// charges the full wait).
+    pub fn drain_live(&mut self) -> Vec<Request> {
+        let mut out = Vec::with_capacity(self.live.len());
+        for l in std::mem::take(&mut self.live) {
+            self.kv.release(l.req.id);
+            self.policy.forget(l.req.id);
+            self.engine.evict(l.req.id);
+            out.push(l.req);
+        }
+        out
+    }
+
     /// Blocks a request needs to take its next decode token.
     fn blocks_needed(&self, l: &Live) -> usize {
         ((l.req.input_len + l.generated) as usize + 1).div_ceil(KV_BLOCK_TOKENS)
@@ -490,6 +548,9 @@ impl<E: Engine> Coordinator<E> {
         r.predictor = self.predictor.name().to_string();
         r.cost_model = self.cost_model.kind().name().to_string();
         r.preemptions = self.preemption_count;
+        r.completed = self.outcomes.len() as u64;
+        r.rejected = self.rejected;
+        r.aborted = self.aborted;
         r.swap_out_events = self.kv.swap_out_events;
         r.swap_in_events = self.kv.swap_in_events;
         r.predict_overhead = self.predict_overhead;
@@ -721,6 +782,75 @@ mod tests {
         assert_eq!(coord.aborted, 3);
         assert_eq!(coord.live_count(), 0);
         assert!(coord.outcomes().is_empty());
+    }
+
+    #[test]
+    fn drain_queued_takes_newest_and_only_unscheduled() {
+        let cfg = small_cfg(PolicyKind::Fcfs);
+        let mut coord = build_sim_coordinator(&cfg);
+        let mut wl = cfg.workload.clone();
+        wl.n_requests = 6;
+        let reqs = WorkloadGen::new(wl, 3).generate().requests;
+        for (k, mut r) in reqs.into_iter().enumerate() {
+            r.arrival = k as f64;
+            coord.submit(r);
+        }
+        assert_eq!(coord.queued_count(), 6);
+        let stolen = coord.drain_queued(2);
+        // newest arrivals leave first; older requests keep their position
+        let ids: Vec<f64> = stolen.iter().map(|r| r.arrival).collect();
+        assert_eq!(ids, vec![5.0, 4.0]);
+        assert_eq!(coord.live_count(), 4);
+        assert!(coord.drain_queued(0).is_empty());
+        // drained requests are fully forgotten: the rest still completes
+        coord.run_workload(Vec::new()).unwrap();
+        assert_eq!(coord.outcomes().len(), 4);
+    }
+
+    #[test]
+    fn drain_live_releases_everything() {
+        let cfg = small_cfg(PolicyKind::SageSched);
+        let mut coord = build_sim_coordinator(&cfg);
+        let mut wl = cfg.workload.clone();
+        wl.n_requests = 8;
+        let reqs = WorkloadGen::new(wl, 4).generate().requests;
+        let n = reqs.len();
+        for mut r in reqs {
+            r.arrival = 0.0;
+            coord.submit(r);
+        }
+        // run a few iterations so some requests hold KV / engine state
+        for _ in 0..3 {
+            coord.step().unwrap();
+        }
+        let done = coord.outcomes().len();
+        let lost = coord.drain_live();
+        assert_eq!(lost.len(), n - done);
+        assert_eq!(coord.live_count(), 0);
+        assert_eq!(coord.kv.used_blocks(), 0, "drain must free all KV");
+        assert!(coord.is_idle());
+    }
+
+    #[test]
+    fn report_surfaces_rejected_and_aborted() {
+        let cfg = small_cfg(PolicyKind::Fcfs);
+        let mut coord = build_sim_coordinator(&cfg);
+        coord.max_queue = 2;
+        coord.request_timeout = 1.0;
+        let mut wl = cfg.workload.clone();
+        wl.n_requests = 5;
+        let reqs = WorkloadGen::new(wl, 6).generate().requests;
+        for mut r in reqs {
+            r.arrival = 0.0;
+            coord.submit(r);
+        }
+        coord.advance_to(10.0);
+        coord.step().unwrap();
+        let r = coord.report(0.0);
+        assert_eq!(r.rejected, 3);
+        assert_eq!(r.aborted, 2);
+        assert_eq!(r.completed, 0);
+        assert!(r.goodput() < 1e-9);
     }
 
     #[test]

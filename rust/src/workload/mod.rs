@@ -1,5 +1,6 @@
 //! Workload generation: the three evaluation datasets, latent-topic
-//! structure, and the Poisson arrival process.
+//! structure, and pluggable arrival processes (Poisson / bursty MMPP /
+//! diurnal — see [`arrivals`]).
 //!
 //! The paper's datasets (ShareGPT, Alpaca-PubMed-summarization,
 //! Document-Write) are external downloads; we build synthetic equivalents
@@ -13,6 +14,7 @@
 //! predictor exploits. Predictors only ever see (prompt, embedding,
 //! input_len); the topic id and true distribution stay hidden ground truth.
 
+pub mod arrivals;
 pub mod trace;
 
 use crate::config::{DatasetKind, WorkloadConfig};
@@ -178,11 +180,12 @@ pub struct Workload {
     pub topics: Vec<Topic>,
 }
 
-/// Workload generator: builds topics once, then streams requests with
-/// Poisson arrivals.
+/// Workload generator: builds topics once, then streams requests paced by
+/// the configured [`arrivals::ArrivalProcess`].
 pub struct WorkloadGen {
     cfg: WorkloadConfig,
     topics: Vec<Topic>,
+    arrivals: Box<dyn arrivals::ArrivalProcess>,
     rng: Rng,
     next_id: u64,
     clock: f64,
@@ -250,7 +253,8 @@ impl WorkloadGen {
         }
         // switch to the request-stream seed for arrivals/sampling
         let rng = Rng::new(seed ^ 0x5eed_0002);
-        WorkloadGen { cfg, topics, rng, next_id: 0, clock: 0.0 }
+        let arrivals = arrivals::make_arrival_process(&cfg);
+        WorkloadGen { cfg, topics, arrivals, rng, next_id: 0, clock: 0.0 }
     }
 
     pub fn topics(&self) -> &[Topic] {
@@ -262,9 +266,9 @@ impl WorkloadGen {
         self.topics.iter().filter(|t| t.dataset == kind).collect()
     }
 
-    /// Sample the next request (advances the Poisson arrival clock).
+    /// Sample the next request (advances the arrival-process clock).
     pub fn next_request(&mut self) -> Request {
-        let gap = self.rng.exp(self.cfg.rps.max(1e-9));
+        let gap = self.arrivals.next_gap(self.clock, &mut self.rng);
         self.clock += gap;
         self.request_at(self.clock)
     }
@@ -451,5 +455,40 @@ mod tests {
             assert_eq!(x.true_output_len, y.true_output_len);
             assert_eq!(x.arrival, y.arrival);
         }
+    }
+
+    #[test]
+    fn nonstationary_arrivals_deterministic_and_sorted() {
+        use crate::config::ArrivalKind;
+        for kind in ArrivalKind::ALL {
+            let mut cfg = WorkloadConfig::single(DatasetKind::ShareGpt);
+            cfg.n_requests = 400;
+            cfg.arrival.kind = kind;
+            let a = WorkloadGen::new(cfg.clone(), 5).generate();
+            let b = WorkloadGen::new(cfg, 5).generate();
+            for (x, y) in a.requests.iter().zip(&b.requests) {
+                assert_eq!(x.arrival, y.arrival, "{kind:?} arrivals not reproducible");
+                assert_eq!(x.true_output_len, y.true_output_len);
+            }
+            for pair in a.requests.windows(2) {
+                assert!(pair[0].arrival < pair[1].arrival, "{kind:?} not increasing");
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_kinds_produce_distinct_traces() {
+        let mut base = WorkloadConfig::single(DatasetKind::ShareGpt);
+        base.n_requests = 200;
+        let poisson = WorkloadGen::new(base.clone(), 5).generate();
+        let mut bursty_cfg = base.clone();
+        bursty_cfg.arrival.kind = crate::config::ArrivalKind::Mmpp;
+        let bursty = WorkloadGen::new(bursty_cfg, 5).generate();
+        let differs = poisson
+            .requests
+            .iter()
+            .zip(&bursty.requests)
+            .any(|(a, b)| a.arrival != b.arrival);
+        assert!(differs, "mmpp trace identical to poisson");
     }
 }

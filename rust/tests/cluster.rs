@@ -1,11 +1,14 @@
 //! Event-driven cluster integration tests: request conservation (no loss,
 //! no duplication across replicas), per-seed determinism of aggregate
-//! reports, and heterogeneous-capacity behavior.
+//! reports, heterogeneous-capacity behavior, replica failure/re-routing,
+//! and non-stationary (MMPP / diurnal) arrival streams.
 
 use std::collections::BTreeSet;
 
 use sagesched::cluster::{run_router_experiment, EventCluster};
-use sagesched::config::{ExperimentConfig, PolicyKind, RouterKind};
+use sagesched::config::{
+    ArrivalKind, ExperimentConfig, FailureEvent, PolicyKind, RouterKind,
+};
 use sagesched::workload::WorkloadGen;
 
 fn cluster_cfg(replicas: usize, n: usize, rps: f64) -> ExperimentConfig {
@@ -30,7 +33,7 @@ fn every_router_conserves_requests() {
     for router in RouterKind::ALL {
         let mut cluster = EventCluster::with_router(&cfg, router);
         cluster.run(workload.requests.clone()).unwrap();
-        assert_eq!(cluster.rejected, 0, "{router:?} rejected requests");
+        assert_eq!(cluster.rejected(), 0, "{router:?} rejected requests");
         let outcomes = cluster.merged_outcomes();
         assert_eq!(outcomes.len(), 160, "{router:?} lost or duplicated work");
         let completed: BTreeSet<u64> = outcomes.iter().map(|o| o.id).collect();
@@ -122,6 +125,126 @@ fn per_replica_reports_sum_to_aggregate() {
     // round-robin spreads routing evenly: 150 over 5 replicas
     assert!(report.routed.iter().all(|&n| n == 30));
     assert!(report.imbalance >= 1.0);
+}
+
+#[test]
+fn failure_rerouting_conserves_requests_for_every_router() {
+    // bursty arrivals + a mid-run outage on replica 0: every router must
+    // re-dispatch the lost work over the survivors and still complete each
+    // request exactly once, with all cluster bookkeeping drained
+    let mut cfg = cluster_cfg(4, 160, 24.0);
+    cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+    cfg.workload.arrival.burst_factor = 5.0;
+    cfg.workload.arrival.burst_on_mean = 1.0;
+    cfg.workload.arrival.burst_off_mean = 3.0;
+    cfg.cluster.failures = vec![FailureEvent { replica: 0, at: 1.5, duration: 3.0 }];
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let submitted: BTreeSet<u64> = workload.requests.iter().map(|r| r.id).collect();
+    for router in RouterKind::ALL {
+        let mut cluster = EventCluster::with_router(&cfg, router);
+        cluster.run(workload.requests.clone()).unwrap();
+        let outcomes = cluster.merged_outcomes();
+        let completed: BTreeSet<u64> = outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(
+            completed.len(),
+            outcomes.len(),
+            "{router:?} duplicated completions under failure"
+        );
+        // conservation: completed + rejected + aborted == submitted
+        let accounted =
+            outcomes.len() as u64 + cluster.rejected() + cluster.aborted();
+        assert_eq!(accounted, 160, "{router:?} lost requests under failure");
+        assert_eq!(cluster.rejected(), 0, "{router:?} rejected under failure");
+        assert_eq!(completed, submitted, "{router:?} completion set mismatch");
+        // no leaked bookkeeping: nothing in flight, backlog drained
+        assert_eq!(cluster.in_flight_count(), 0, "{router:?} leaked in-flight");
+        assert!(
+            cluster.total_backlog() < 1e-6,
+            "{router:?} leaked predicted backlog: {}",
+            cluster.total_backlog()
+        );
+    }
+}
+
+#[test]
+fn failure_triggers_rerouting_and_records_downtime() {
+    let mut cfg = cluster_cfg(4, 160, 24.0);
+    cfg.cluster.failures = vec![FailureEvent { replica: 0, at: 1.5, duration: 3.0 }];
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::RoundRobin);
+    cluster.run(workload.requests).unwrap();
+    assert!(
+        cluster.re_routed > 0,
+        "replica 0 must have held live work at the failure instant"
+    );
+    let report = cluster.report(0.0);
+    assert_eq!(report.aggregate.measured, 160);
+    assert!(
+        (report.downtime[0] - 3.0).abs() < 1e-9,
+        "downtime[0] = {}",
+        report.downtime[0]
+    );
+    for i in 1..4 {
+        assert_eq!(report.downtime[i], 0.0);
+    }
+    assert_eq!(report.re_routed, cluster.re_routed);
+}
+
+#[test]
+fn failed_replica_recovers_and_serves_again() {
+    // long tail of arrivals after the recovery point: the recovered
+    // replica must rejoin the routable set (round-robin cycles over all
+    // survivors, so post-recovery arrivals reach it again)
+    let mut cfg = cluster_cfg(2, 120, 12.0);
+    cfg.cluster.failures = vec![FailureEvent { replica: 1, at: 1.0, duration: 2.0 }];
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::RoundRobin);
+    cluster.run(workload.requests).unwrap();
+    assert_eq!(cluster.completed(), 120);
+    let report = cluster.report(0.0);
+    // replica 1 completed work even though it crashed mid-run
+    assert!(
+        report.per_replica[1].completed > 0,
+        "recovered replica never served again"
+    );
+    assert!((report.downtime[1] - 2.0).abs() < 1e-9);
+}
+
+#[test]
+fn work_stealing_rebalances_a_cold_replica() {
+    // an extreme speed skew: replica 1 is 20x slower, so least-loaded
+    // routing still queues work on it during bursts while replica 0 goes
+    // idle — stealing must move queued requests to the idle fast replica
+    let mut cfg = cluster_cfg(2, 120, 24.0);
+    cfg.cluster.speeds = vec![1.0, 0.05];
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::RoundRobin);
+    cluster.run(workload.requests).unwrap();
+    assert_eq!(cluster.completed(), 120);
+    assert!(
+        cluster.stolen > 0,
+        "idle fast replica never stole from the backlogged slow one"
+    );
+    let report = cluster.report(0.0);
+    // the fast replica ends up completing more than its routed share
+    assert!(report.per_replica[0].completed > report.per_replica[1].completed);
+}
+
+#[test]
+fn bursty_and_diurnal_cluster_runs_are_deterministic() {
+    for kind in [ArrivalKind::Mmpp, ArrivalKind::Diurnal] {
+        let mut cfg = cluster_cfg(4, 120, 20.0);
+        cfg.workload.arrival.kind = kind;
+        cfg.cluster.failures = vec![FailureEvent { replica: 2, at: 2.0, duration: 2.0 }];
+        let a = run_router_experiment(&cfg, RouterKind::CostAware).unwrap();
+        let b = run_router_experiment(&cfg, RouterKind::CostAware).unwrap();
+        assert_eq!(a.aggregate.measured, 120, "{kind:?}");
+        assert_eq!(a.aggregate.ttlt.mean, b.aggregate.ttlt.mean, "{kind:?}");
+        assert_eq!(a.routed, b.routed, "{kind:?}");
+        assert_eq!(a.re_routed, b.re_routed, "{kind:?}");
+        assert_eq!(a.stolen, b.stolen, "{kind:?}");
+        assert_eq!(a.downtime, b.downtime, "{kind:?}");
+    }
 }
 
 #[test]
