@@ -1,12 +1,14 @@
 //! Cluster-scale serving: an event-driven N-replica simulation comparing
 //! the pluggable routers on one seeded workload — optionally under bursty
-//! (MMPP) or diurnal arrivals and mid-run replica outages — plus the fig12
-//! shared-predictor overhead measurement.
+//! (MMPP) or diurnal arrivals, mid-run replica outages, and elastic
+//! autoscaling — plus the fig12 shared-predictor overhead measurement.
 //!
 //! ```text
 //! cargo run --release --example cluster_sim -- --replicas 8 --rps 24 --n 800
 //! cargo run --release --example cluster_sim -- --replicas 4 --speeds 1.0,0.5
 //! cargo run --release --example cluster_sim -- --arrival mmpp --fail 0@8+6
+//! cargo run --release --example cluster_sim -- --autoscale uncertainty
+//! cargo run --release --example cluster_sim -- --autoscale step --scale-steps 5@8,20@2
 //! ```
 
 use sagesched::cluster::{run_router_experiment, ClusterSim};
@@ -38,14 +40,28 @@ fn main() -> anyhow::Result<()> {
         cfg.cluster.failures =
             FailureEvent::parse_list(f).map_err(|e| anyhow::anyhow!("--fail: {e}"))?;
     }
+    if let Some(a) = args.get("autoscale") {
+        cfg.cluster.autoscale.kind = AutoscaleKind::from_name(a)
+            .ok_or_else(|| anyhow::anyhow!("unknown --autoscale {a}"))?;
+    }
+    if let Some(s) = args.get("scale-steps") {
+        // time@target, comma-separated (same grammar as the CLI)
+        cfg.cluster.autoscale.steps = ScaleStep::parse_list(s)
+            .map_err(|e| anyhow::anyhow!("--scale-steps: {e}"))?;
+    }
+    cfg.cluster
+        .autoscale
+        .validate()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     println!(
-        "# {}-replica cluster, {} requests @ {} rps cluster-wide ({} arrivals, {} outages)\n",
+        "# {}-replica cluster, {} requests @ {} rps cluster-wide ({} arrivals, {} outages, autoscale {})\n",
         cfg.cluster.replicas,
         cfg.workload.n_requests,
         cfg.workload.rps,
         cfg.workload.arrival.kind.name(),
-        cfg.cluster.failures.len()
+        cfg.cluster.failures.len(),
+        cfg.cluster.autoscale.kind.name()
     );
     println!("{}", ClusterReport::markdown_header());
     let mut best: Option<ClusterReport> = None;
@@ -63,22 +79,40 @@ fn main() -> anyhow::Result<()> {
     let best = best.expect("at least one router ran");
     println!(
         "\nbest router: {} (mean TTLT {:.2}s, imbalance {:.2}, goodput {:.1}%, \
-         {} re-routed, {} stolen)",
+         {} re-routed, {} drained, {} stolen, {} steals skipped, \
+         {:.0} replica-s, {:.3} goodput/replica-s)",
         best.router,
         best.aggregate.ttlt.mean,
         best.imbalance,
         best.aggregate.goodput() * 100.0,
         best.re_routed,
-        best.stolen
+        best.drained,
+        best.stolen,
+        best.steals_skipped,
+        best.total_replica_seconds(),
+        best.goodput_per_replica_second
     );
     println!("\n## {} per-replica", best.router);
-    println!("| replica | routed | completed | mean TTLT | p99 TTLT | downtime (s) |");
-    println!("|---|---|---|---|---|---|");
+    println!("| replica | routed | completed | mean TTLT | p99 TTLT | downtime (s) | replica-s |");
+    println!("|---|---|---|---|---|---|---|");
     for (i, r) in best.per_replica.iter().enumerate() {
         println!(
-            "| {i} | {} | {} | {:.2} | {:.2} | {:.1} |",
-            best.routed[i], r.measured, r.ttlt.mean, r.ttlt.p99, best.downtime[i]
+            "| {i} | {} | {} | {:.2} | {:.2} | {:.1} | {:.1} |",
+            best.routed[i],
+            r.measured,
+            r.ttlt.mean,
+            r.ttlt.p99,
+            best.downtime[i],
+            best.replica_seconds[i]
         );
+    }
+    if !best.scaling_events.is_empty() {
+        println!("\n## scaling timeline ({})", best.router);
+        println!("| t (s) | replica | event |");
+        println!("|---|---|---|");
+        for e in &best.scaling_events {
+            println!("| {:.2} | {} | {} |", e.at, e.replica, e.action.name());
+        }
     }
 
     // shared predictor/scheduler overhead at this scale (fig12)

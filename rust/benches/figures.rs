@@ -769,6 +769,87 @@ fn fig12b(ctx: &Ctx) {
 }
 
 // ===========================================================================
+// Fig 12c: elastic autoscaling — static vs reactive vs uncertainty-aware
+// ===========================================================================
+fn fig12c(ctx: &Ctx) {
+    use sagesched::config::{ArrivalKind, AutoscaleKind};
+    println!("\n=== fig12c: autoscaling under bursty / diurnal demand ===");
+    // one fleet shape for every row: 6 replicas at peak. The static row
+    // keeps all 6 for the whole run; the elastic rows may shrink to 2 and
+    // grow back to the same peak cap, so goodput per replica-second is the
+    // apples-to-apples provisioning-efficiency comparison.
+    let peak = 6usize;
+    let mut base = base_cfg();
+    base.cluster.replicas = peak;
+    base.workload.rps = 12.0;
+    base.workload.n_requests = ctx.n_requests(1200);
+    base.workload.arrival.burst_factor = 6.0;
+    base.workload.arrival.burst_on_mean = 4.0;
+    base.workload.arrival.burst_off_mean = 12.0;
+    base.workload.arrival.diurnal_period = 40.0;
+    base.workload.arrival.diurnal_amplitude = 0.8;
+    let mut rows = Vec::new();
+    for (scenario, kind) in [("mmpp", ArrivalKind::Mmpp), ("diurnal", ArrivalKind::Diurnal)] {
+        println!("\n-- {scenario} arrivals --");
+        println!(
+            "| provisioning | completed | goodput | TTLT mean | TTLT p90 | replica-s | gp/rep-s | scale events |"
+        );
+        println!("|---|---|---|---|---|---|---|---|");
+        for policy in [
+            AutoscaleKind::Off,
+            AutoscaleKind::Reactive,
+            AutoscaleKind::UncertaintyAware,
+        ] {
+            let mut cfg = base.clone();
+            cfg.workload.arrival.kind = kind;
+            cfg.cluster.autoscale.kind = policy;
+            cfg.cluster.autoscale.min_replicas = 2;
+            cfg.cluster.autoscale.max_replicas = peak;
+            cfg.cluster.autoscale.provision_delay = 2.0;
+            cfg.cluster.autoscale.cooldown = 3.0;
+            cfg.cluster.autoscale.interval = 1.0;
+            cfg.cluster.autoscale.work_per_replica = 1.0e6;
+            let label = match policy {
+                AutoscaleKind::Off => "static-6",
+                k => k.name(),
+            };
+            let r = sagesched::cluster::run_router_experiment(&cfg, cfg.cluster.router)
+                .expect("autoscale experiment failed");
+            let n = cfg.workload.n_requests as u64;
+            let accounted =
+                r.aggregate.completed + r.aggregate.rejected + r.aggregate.aborted;
+            assert_eq!(accounted, n, "{label}: {accounted} accounted of {n}");
+            println!(
+                "| {label} | {} | {:.3} | {:.2} | {:.2} | {:.0} | {:.3} | {} |",
+                r.aggregate.completed,
+                r.aggregate.goodput(),
+                r.aggregate.ttlt.mean,
+                r.aggregate.ttlt.p90,
+                r.total_replica_seconds(),
+                r.goodput_per_replica_second,
+                r.scaling_events.len()
+            );
+            rows.push(format!(
+                "{scenario},{label},{},{:.4},{:.4},{:.4},{:.1},{:.5},{}",
+                r.aggregate.completed,
+                r.aggregate.goodput(),
+                r.aggregate.ttlt.mean,
+                r.aggregate.ttlt.p90,
+                r.total_replica_seconds(),
+                r.goodput_per_replica_second,
+                r.scaling_events.len()
+            ));
+        }
+    }
+    write_csv(
+        "fig12c",
+        "scenario,provisioning,completed,goodput,ttlt_mean,ttlt_p90,replica_seconds,goodput_per_replica_second,scale_events",
+        &rows,
+    );
+    println!("  (elastic rows shed trough capacity: same goodput, far fewer replica-seconds)");
+}
+
+// ===========================================================================
 // Fig 13: sensitivity
 // ===========================================================================
 fn fig13a(ctx: &Ctx) {
@@ -904,6 +985,7 @@ fn main() {
         ("fig11", fig11),
         ("fig12", fig12),
         ("fig12b", fig12b),
+        ("fig12c", fig12c),
         ("fig13a", fig13a),
         ("fig13b", fig13b),
     ];

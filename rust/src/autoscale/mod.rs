@@ -1,0 +1,463 @@
+//! Elastic autoscaling: predictor-driven replica scale-out/in for the
+//! event-driven cluster ([`crate::cluster::EventCluster`]).
+//!
+//! SageSched's thesis is that demand uncertainty should be *modeled*, not
+//! averaged away. A fixed replica count does exactly that averaging at the
+//! provisioning layer: under the bursty (MMPP) and diurnal arrival
+//! processes of [`crate::workload::arrivals`] it either over-provisions the
+//! troughs or melts down in the peaks. This module closes the loop by
+//! letting a policy adjust the replica count mid-run, with a realistic
+//! lifecycle — scale-out pays a provisioning delay before the cold replica
+//! joins the routable set; scale-in stops routing to a victim, re-routes
+//! its queued work, and retires it only once its live requests finish (no
+//! request is ever stranded).
+//!
+//! Three policies, one per provisioning philosophy:
+//!
+//! * [`StepSchedule`] — scripted `time@target` steps. No feedback at all;
+//!   its purpose is determinism: tests anchor conservation and lifecycle
+//!   invariants on exactly-known scaling instants.
+//! * [`ReactiveThreshold`] — classic watermark autoscaling (live requests
+//!   per replica and KV occupancy, with a hysteresis band and a cooldown).
+//!   This is the industry-default baseline: it reacts to load *after* it
+//!   materializes, so bursty demand whipsaws it — exactly the behavior
+//!   *Adaptively Robust LLM Inference Optimization under Prediction
+//!   Uncertainty* argues provisioning must hedge against.
+//! * [`UncertaintyAware`] — the paper-aligned policy: the cluster sums
+//!   every in-flight request's predicted *cost distribution* (the shared
+//!   predictor's [`crate::distribution::LengthDist`] pushed through the
+//!   [`crate::cost::CostModel`]) and the policy provisions for a
+//!   configurable quantile (default p90) of that forecast-work
+//!   distribution, `W_q ≈ μ + z_q·σ` by the normal approximation for sums
+//!   of independent per-request costs. Provisioning for a tail quantile
+//!   rather than the mean is the capacity-planning analogue of scheduling
+//!   on the Gittins index rather than the mean cost; tying the target to
+//!   *work* rather than request count keeps it goodput-oriented in the
+//!   sense of *SLO-Aware Scheduling for Large Language Model Inferences*
+//!   (a replica-second spent on a doomed long tail is not a replica-second
+//!   of goodput).
+//!
+//! Every policy emits a desired replica *target*; the cluster owns the
+//! mechanism (spawn / drain / retire) and records a [`ScalingEvent`]
+//! timeline surfaced in [`crate::metrics::ClusterReport`] together with
+//! `replica_seconds` and goodput per replica-second — the metric a static
+//! fleet is compared on.
+
+use crate::config::{AutoscaleConfig, AutoscaleKind, ScaleStep};
+use crate::util::stats::normal_quantile_clamped;
+
+/// Cluster snapshot handed to an [`AutoscalePolicy`] at each decision
+/// point. All counts are replica states at the decision instant; the
+/// backlog moments aggregate every in-flight request's predicted cost
+/// distribution (mean and variance sum over independent requests).
+#[derive(Clone, Debug)]
+pub struct AutoscaleView {
+    /// Decision instant (cluster virtual time, seconds).
+    pub now: f64,
+    /// Routable replicas.
+    pub active: usize,
+    /// Replicas spawned but still inside their provisioning delay.
+    pub provisioning: usize,
+    /// Failed replicas that will recover (capacity that is coming back).
+    pub down: usize,
+    /// Scale-in victims still finishing live work (capacity on its way out).
+    pub draining: usize,
+    /// Live (queued + running + preempted) requests on active replicas.
+    pub total_live: usize,
+    /// Never-scheduled queued requests on active replicas.
+    pub total_queued: usize,
+    /// Mean KV occupancy fraction over active replicas.
+    pub mean_kv_occupancy: f64,
+    /// Σ E[cost] over all in-flight requests (cost-model units).
+    pub backlog_mean: f64,
+    /// Σ Var[cost] over all in-flight requests.
+    pub backlog_var: f64,
+}
+
+impl AutoscaleView {
+    /// Capacity that is present or committed: active + provisioning + down
+    /// (down replicas hold no work but will rejoin). Draining replicas are
+    /// already on their way out and never count.
+    pub fn present(&self) -> usize {
+        self.active + self.provisioning + self.down
+    }
+
+    /// Smallest target the cluster can execute right now: scale-in can
+    /// cancel every provisioning replica and drain all but one active
+    /// replica, but down replicas cannot be retired. Feedback policies
+    /// clamp their desired target to this floor so an unexecutable
+    /// scale-in reads as a hold — and does not burn the cooldown that a
+    /// later, executable decision (or a needed scale-out) would then have
+    /// to wait behind.
+    pub fn executable_floor(&self) -> usize {
+        let retirable = self.active.saturating_sub(1) + self.provisioning;
+        self.present().saturating_sub(retirable)
+    }
+}
+
+/// An elastic provisioning policy: given the cluster snapshot, name the
+/// desired replica count. Implementations must be deterministic given the
+/// same view sequence so cluster runs stay exactly reproducible.
+pub trait AutoscalePolicy: Send {
+    fn kind(&self) -> AutoscaleKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Decision instants this policy needs *beyond* the periodic grid
+    /// (scripted steps must fire exactly at their configured times).
+    fn scheduled_times(&self) -> Vec<f64> {
+        Vec::new()
+    }
+
+    /// Desired replica count, or `None` to hold. Returning
+    /// `view.present()` is equivalent to holding; policies enforce their
+    /// own cooldown (the scripted schedule has none).
+    fn target(&mut self, view: &AutoscaleView) -> Option<usize>;
+}
+
+/// Scripted scale steps at fixed times — the deterministic test anchor.
+/// The latest step with `at <= now` is in force; before the first step the
+/// policy holds.
+pub struct StepSchedule {
+    steps: Vec<ScaleStep>,
+}
+
+impl StepSchedule {
+    /// Build from (unsorted) steps; they are applied in time order. A NaN
+    /// step time sorts arbitrarily here instead of panicking — it is
+    /// rejected with a proper error by [`ScaleStep::validate`] before the
+    /// cluster runs, but construction happens earlier and must not crash
+    /// first.
+    pub fn new(mut steps: Vec<ScaleStep>) -> StepSchedule {
+        steps.sort_by(|a, b| {
+            a.at.partial_cmp(&b.at).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        StepSchedule { steps }
+    }
+}
+
+impl AutoscalePolicy for StepSchedule {
+    fn kind(&self) -> AutoscaleKind {
+        AutoscaleKind::Step
+    }
+
+    fn scheduled_times(&self) -> Vec<f64> {
+        self.steps.iter().map(|s| s.at).collect()
+    }
+
+    fn target(&mut self, view: &AutoscaleView) -> Option<usize> {
+        self.steps
+            .iter()
+            .rev()
+            .find(|s| s.at <= view.now)
+            .map(|s| s.target.max(1))
+    }
+}
+
+/// Watermark autoscaling with hysteresis + cooldown: one replica out when
+/// live-per-replica or KV occupancy crosses the high watermark, one replica
+/// in when both are comfortably below the low watermarks.
+pub struct ReactiveThreshold {
+    cfg: AutoscaleConfig,
+    /// Time of the last non-hold decision (cooldown anchor).
+    last_action: f64,
+}
+
+impl ReactiveThreshold {
+    pub fn new(cfg: AutoscaleConfig) -> ReactiveThreshold {
+        ReactiveThreshold { cfg, last_action: f64::NEG_INFINITY }
+    }
+}
+
+impl AutoscalePolicy for ReactiveThreshold {
+    fn kind(&self) -> AutoscaleKind {
+        AutoscaleKind::Reactive
+    }
+
+    fn target(&mut self, view: &AutoscaleView) -> Option<usize> {
+        if view.now - self.last_action < self.cfg.cooldown {
+            return None;
+        }
+        let present = view.present();
+        let per_replica = view.total_live as f64 / view.active.max(1) as f64;
+        let desired = if per_replica > self.cfg.high_watermark
+            || view.mean_kv_occupancy > self.cfg.kv_high_watermark
+        {
+            present + 1
+        } else if per_replica < self.cfg.low_watermark
+            && view.mean_kv_occupancy < self.cfg.kv_low_watermark
+        {
+            present.saturating_sub(1)
+        } else {
+            present
+        };
+        let desired = desired
+            .clamp(self.cfg.min_replicas, self.cfg.max_replicas)
+            .max(view.executable_floor());
+        if desired == present {
+            return None;
+        }
+        self.last_action = view.now;
+        Some(desired)
+    }
+}
+
+/// Quantile provisioning over the forecast outstanding-work distribution:
+/// `target = ceil((μ + z_q·σ) / work_per_replica)` clamped to
+/// `[min_replicas, max_replicas]`, where μ/σ² sum the in-flight requests'
+/// predicted cost distributions (normal approximation for the sum of
+/// independent costs). High-variance backlogs — exactly the heavy-tailed
+/// demand the predictor flags — provision extra headroom that a mean-based
+/// rule would not.
+pub struct UncertaintyAware {
+    cfg: AutoscaleConfig,
+    /// Precomputed z-score of the configured quantile.
+    z: f64,
+    /// Time of the last non-hold decision (cooldown anchor).
+    last_action: f64,
+}
+
+impl UncertaintyAware {
+    pub fn new(cfg: AutoscaleConfig) -> UncertaintyAware {
+        let z = normal_quantile_clamped(cfg.quantile);
+        UncertaintyAware { cfg, z, last_action: f64::NEG_INFINITY }
+    }
+
+    /// The provisioned-for quantile of forecast outstanding work.
+    pub fn forecast_work(&self, view: &AutoscaleView) -> f64 {
+        (view.backlog_mean + self.z * view.backlog_var.max(0.0).sqrt()).max(0.0)
+    }
+}
+
+impl AutoscalePolicy for UncertaintyAware {
+    fn kind(&self) -> AutoscaleKind {
+        AutoscaleKind::UncertaintyAware
+    }
+
+    fn target(&mut self, view: &AutoscaleView) -> Option<usize> {
+        if view.now - self.last_action < self.cfg.cooldown {
+            return None;
+        }
+        let work = self.forecast_work(view);
+        let desired = (work / self.cfg.work_per_replica).ceil() as usize;
+        let desired = desired
+            .clamp(self.cfg.min_replicas, self.cfg.max_replicas)
+            .max(view.executable_floor());
+        if desired == view.present() {
+            return None;
+        }
+        self.last_action = view.now;
+        Some(desired)
+    }
+}
+
+/// Build the configured policy; `None` when autoscaling is off.
+pub fn make_autoscaler(cfg: &AutoscaleConfig) -> Option<Box<dyn AutoscalePolicy>> {
+    match cfg.kind {
+        AutoscaleKind::Off => None,
+        AutoscaleKind::Step => Some(Box::new(StepSchedule::new(cfg.steps.clone()))),
+        AutoscaleKind::Reactive => Some(Box::new(ReactiveThreshold::new(cfg.clone()))),
+        AutoscaleKind::UncertaintyAware => Some(Box::new(UncertaintyAware::new(cfg.clone()))),
+    }
+}
+
+/// What happened to a replica in the scaling-event timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// A scale-out decision spawned this replica (provisioning begins).
+    Provision,
+    /// The provisioning delay elapsed; the replica joined the routable set.
+    Up,
+    /// A scale-in decision picked this replica: routing stops, its queued
+    /// work is re-routed, live requests drain in place.
+    Drain,
+    /// The drained replica finished its live work and left the cluster.
+    Retire,
+    /// A scheduled outage took the replica down.
+    Fail,
+    /// The outage ended; the replica rejoined, empty.
+    Recover,
+}
+
+impl ScaleAction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScaleAction::Provision => "provision",
+            ScaleAction::Up => "up",
+            ScaleAction::Drain => "drain",
+            ScaleAction::Retire => "retire",
+            ScaleAction::Fail => "fail",
+            ScaleAction::Recover => "recover",
+        }
+    }
+}
+
+/// One entry of the cluster's scaling-event timeline (reported in
+/// [`crate::metrics::ClusterReport`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScalingEvent {
+    /// Virtual time of the transition (seconds).
+    pub at: f64,
+    /// Replica index the transition applies to.
+    pub replica: usize,
+    pub action: ScaleAction,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(now: f64, active: usize, live: usize, mu: f64, var: f64) -> AutoscaleView {
+        AutoscaleView {
+            now,
+            active,
+            provisioning: 0,
+            down: 0,
+            draining: 0,
+            total_live: live,
+            total_queued: live / 2,
+            mean_kv_occupancy: 0.2,
+            backlog_mean: mu,
+            backlog_var: var,
+        }
+    }
+
+    #[test]
+    fn step_schedule_applies_latest_step() {
+        let mut p = StepSchedule::new(vec![
+            ScaleStep { at: 40.0, target: 2 },
+            ScaleStep { at: 10.0, target: 6 },
+        ]);
+        assert_eq!(p.target(&view(5.0, 4, 0, 0.0, 0.0)), None);
+        assert_eq!(p.target(&view(10.0, 4, 0, 0.0, 0.0)), Some(6));
+        assert_eq!(p.target(&view(39.0, 6, 0, 0.0, 0.0)), Some(6));
+        assert_eq!(p.target(&view(40.0, 6, 0, 0.0, 0.0)), Some(2));
+        assert_eq!(p.scheduled_times(), vec![10.0, 40.0]);
+    }
+
+    #[test]
+    fn reactive_scales_on_watermarks_with_cooldown() {
+        let cfg = AutoscaleConfig {
+            kind: AutoscaleKind::Reactive,
+            min_replicas: 2,
+            max_replicas: 8,
+            cooldown: 5.0,
+            high_watermark: 8.0,
+            low_watermark: 2.0,
+            ..AutoscaleConfig::default()
+        };
+        let mut p = ReactiveThreshold::new(cfg);
+        // 4 active, 40 live -> 10 per replica > 8: scale out by one
+        assert_eq!(p.target(&view(0.0, 4, 40, 0.0, 0.0)), Some(5));
+        // within cooldown: hold even under pressure
+        assert_eq!(p.target(&view(3.0, 4, 60, 0.0, 0.0)), None);
+        // after cooldown, idle fleet: scale in by one
+        assert_eq!(p.target(&view(6.0, 4, 2, 0.0, 0.0)), Some(3));
+        // hysteresis band between watermarks: hold (and no cooldown burn)
+        assert_eq!(p.target(&view(12.0, 4, 16, 0.0, 0.0)), None);
+        assert_eq!(p.target(&view(12.5, 4, 40, 0.0, 0.0)), Some(5));
+        // clamps: never below min
+        let mut p2 = ReactiveThreshold::new(AutoscaleConfig {
+            kind: AutoscaleKind::Reactive,
+            min_replicas: 2,
+            max_replicas: 8,
+            cooldown: 0.0,
+            ..AutoscaleConfig::default()
+        });
+        assert_eq!(p2.target(&view(0.0, 2, 0, 0.0, 0.0)), None);
+    }
+
+    #[test]
+    fn uncertainty_provisions_for_the_quantile() {
+        let cfg = AutoscaleConfig {
+            kind: AutoscaleKind::UncertaintyAware,
+            min_replicas: 1,
+            max_replicas: 16,
+            cooldown: 0.0,
+            quantile: 0.9,
+            work_per_replica: 100.0,
+            ..AutoscaleConfig::default()
+        };
+        let mut p = UncertaintyAware::new(cfg);
+        // mean 300, sd 100: W_0.9 = 300 + 1.2816*100 ~= 428 -> 5 replicas
+        let v = view(0.0, 4, 10, 300.0, 10_000.0);
+        assert!((p.forecast_work(&v) - 428.155).abs() < 0.1);
+        assert_eq!(p.target(&v), Some(5));
+        // zero variance degrades to mean provisioning: 300/100 -> 3
+        assert_eq!(p.target(&view(1.0, 4, 10, 300.0, 0.0)), Some(3));
+        // empty cluster clamps to the floor
+        assert_eq!(p.target(&view(2.0, 4, 0, 0.0, 0.0)), Some(1));
+        // same target as present -> hold
+        assert_eq!(p.target(&view(3.0, 3, 10, 300.0, 0.0)), None);
+    }
+
+    #[test]
+    fn unexecutable_scale_in_holds_without_burning_cooldown() {
+        // 1 active + 2 down: nothing is drainable, so a desired shrink must
+        // read as a hold — and must not start the cooldown clock, or the
+        // next real decision would be suppressed
+        let cfg = AutoscaleConfig {
+            kind: AutoscaleKind::UncertaintyAware,
+            min_replicas: 1,
+            max_replicas: 16,
+            cooldown: 100.0,
+            work_per_replica: 100.0,
+            ..AutoscaleConfig::default()
+        };
+        let mut p = UncertaintyAware::new(cfg);
+        let mut v = view(0.0, 1, 0, 0.0, 0.0);
+        v.down = 2; // present 3, executable floor 3
+        assert_eq!(p.target(&v), None);
+        // a later executable decision still fires despite the huge cooldown
+        let v2 = view(1.0, 3, 10, 1000.0, 0.0);
+        assert_eq!(p.target(&v2), Some(10));
+    }
+
+    #[test]
+    fn uncertainty_decisions_widen_with_variance() {
+        let cfg = AutoscaleConfig {
+            cooldown: 0.0,
+            work_per_replica: 100.0,
+            ..AutoscaleConfig::default()
+        };
+        let p = UncertaintyAware::new(cfg);
+        let narrow = p.forecast_work(&view(0.0, 4, 10, 300.0, 100.0));
+        let wide = p.forecast_work(&view(0.0, 4, 10, 300.0, 40_000.0));
+        assert!(wide > narrow, "heavier tail must provision more headroom");
+    }
+
+    #[test]
+    fn make_autoscaler_matches_kinds() {
+        let mut cfg = AutoscaleConfig::default();
+        assert!(make_autoscaler(&cfg).is_none());
+        cfg.kind = AutoscaleKind::Step;
+        cfg.steps = vec![ScaleStep { at: 1.0, target: 2 }];
+        assert_eq!(make_autoscaler(&cfg).unwrap().kind(), AutoscaleKind::Step);
+        cfg.kind = AutoscaleKind::Reactive;
+        assert_eq!(
+            make_autoscaler(&cfg).unwrap().kind(),
+            AutoscaleKind::Reactive
+        );
+        cfg.kind = AutoscaleKind::UncertaintyAware;
+        assert_eq!(
+            make_autoscaler(&cfg).unwrap().kind(),
+            AutoscaleKind::UncertaintyAware
+        );
+    }
+
+    #[test]
+    fn scale_action_names_are_stable() {
+        for (a, n) in [
+            (ScaleAction::Provision, "provision"),
+            (ScaleAction::Up, "up"),
+            (ScaleAction::Drain, "drain"),
+            (ScaleAction::Retire, "retire"),
+            (ScaleAction::Fail, "fail"),
+            (ScaleAction::Recover, "recover"),
+        ] {
+            assert_eq!(a.name(), n);
+        }
+    }
+}

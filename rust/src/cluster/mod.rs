@@ -18,22 +18,39 @@
 //! cost-aware router and learns online from every replica's completions.
 //!
 //! Routers: `round-robin`, `least-loaded` (live-request count), `least-kv`
-//! (KV-block occupancy), and `cost-aware` (predicted outstanding cost from
-//! the shared predictor's [`LengthDist`], normalized by replica speed).
-//! Routers see only the *surviving* replica set and return positions into
+//! (KV-block occupancy), `cost-aware` (predicted outstanding cost from
+//! the shared predictor's [`LengthDist`], normalized by replica speed), and
+//! `quantile-cost` (the distribution-aware variant: a configurable quantile
+//! of each replica's outstanding-cost distribution instead of its mean).
+//! Routers see only the *routable* replica set and return positions into
 //! it; the dispatcher maps positions back to replica ids.
 //!
-//! **Replica lifecycle**: [`ClusterConfig`](crate::config::ClusterConfig)
+//! **Replica lifecycle**: replicas move through
+//! [`ReplicaState`]s. [`ClusterConfig`](crate::config::ClusterConfig)
 //! may schedule [`FailureEvent`](crate::config::FailureEvent)s. At failure
 //! time the replica's live requests are drained (crash semantics — queued,
 //! running, and preempted state is lost), cluster bookkeeping for them is
 //! reconciled, and each is re-dispatched through the router over the
 //! survivors (`re_routed` in [`ClusterReport`]). The replica rejoins the
 //! routable set, empty, at recovery time; its downtime is reported
-//! per-replica. Between events, **work stealing** lets an idle replica take
-//! up to half of the most-backlogged replica's never-scheduled (queued)
-//! requests — those hold no KV/engine state, so migration is free
-//! (`stolen` in the report).
+//! per-replica. An [`AutoscalePolicy`](crate::autoscale::AutoscalePolicy)
+//! (see [`crate::autoscale`]) may additionally *add* replicas mid-run
+//! (spawned cold behind a provisioning delay, then routable) and *retire*
+//! them (scale-in: the victim stops receiving traffic, its queued work is
+//! re-routed — `drained` in the report — and it leaves once its live
+//! requests finish, so no request is ever stranded). Every transition is
+//! recorded on the [`ScalingEvent`] timeline, and the report charges each
+//! replica only for its provisioned lifetime (`replica_seconds`), yielding
+//! goodput per replica-second — the efficiency metric elastic and static
+//! fleets are compared on.
+//!
+//! Between events, **work stealing** lets an idle replica take up to half
+//! of the most-backlogged replica's never-scheduled (queued) requests —
+//! those hold no KV/engine state, so migration costs only the prompt
+//! transfer. Each steal is gated on a benefit check (speed-normalized
+//! backlog wait saved vs a per-request transfer penalty proportional to
+//! prompt length); candidates that fail the gate are counted in
+//! `steals_skipped`.
 //!
 //! Arrival pacing — including the bursty MMPP and diurnal processes under
 //! which failure/re-routing is most interesting — lives in
@@ -45,9 +62,10 @@
 //! predictor. Kept as a secondary mode behind `sagesched cluster
 //! --overhead`.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
+use crate::autoscale::{AutoscalePolicy, ScaleAction, ScalingEvent};
 use crate::config::{ExperimentConfig, RouterKind};
 use crate::core::{Request, RequestId};
 use crate::cost::CostModel;
@@ -58,7 +76,7 @@ use crate::metrics::{ClusterReport, RunReport};
 use crate::predictor::{HistoryPredictor, Predictor};
 use crate::serve::Coordinator;
 use crate::util::rng::Rng;
-use crate::util::stats::mean;
+use crate::util::stats::{mean, normal_quantile_clamped};
 use crate::workload::WorkloadGen;
 
 // ===========================================================================
@@ -85,6 +103,10 @@ pub struct ReplicaView {
     /// Sum of predicted E[total cost] of requests routed here that have not
     /// completed yet (maintained by the cluster from the shared predictor).
     pub predicted_backlog: f64,
+    /// Sum of predicted Var[total cost] of the same requests — the second
+    /// moment the distribution-aware router and autoscaler consume (sums of
+    /// independent request costs: means and variances both add).
+    pub predicted_backlog_var: f64,
 }
 
 impl ReplicaView {
@@ -201,13 +223,57 @@ impl Router for CostAwareRouter {
     }
 }
 
-/// Build a router from its kind.
-pub fn make_router(kind: RouterKind) -> Box<dyn Router> {
+/// The distribution-aware router: smallest *quantile* of the predicted
+/// outstanding-cost distribution, normalized by replica speed. Per replica
+/// the outstanding cost is a sum of independent per-request cost
+/// distributions, so its quantile is taken under the normal approximation
+/// `Q_q ≈ μ + z_q·σ` over the tracked (mean, variance) sums. Against
+/// [`CostAwareRouter`] this penalizes replicas whose backlog is
+/// heavy-tailed: equal means, unequal tails — the quantile router spreads
+/// the tail risk, the mean router cannot see it.
+pub struct QuantileCostRouter {
+    /// z-score of the configured quantile.
+    z: f64,
+}
+
+impl QuantileCostRouter {
+    pub fn new(quantile: f64) -> QuantileCostRouter {
+        QuantileCostRouter { z: normal_quantile_clamped(quantile) }
+    }
+}
+
+impl Router for QuantileCostRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::QuantileCost
+    }
+
+    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
+        let mut best = 0usize;
+        let mut best_load = f64::INFINITY;
+        for (slot, r) in replicas.iter().enumerate() {
+            let q = r.predicted_backlog + self.z * r.predicted_backlog_var.max(0.0).sqrt();
+            // negative q (possible at sub-median quantiles) still orders
+            // replicas correctly — clamping it would collapse the ordering
+            // and skew all ties to slot 0
+            let load = q / r.speed.max(1e-9);
+            if load < best_load {
+                best_load = load;
+                best = slot;
+            }
+        }
+        best
+    }
+}
+
+/// Build a router from its kind; `quantile` parameterizes
+/// [`RouterKind::QuantileCost`] (ignored by the others).
+pub fn make_router(kind: RouterKind, quantile: f64) -> Box<dyn Router> {
     match kind {
         RouterKind::RoundRobin => Box::new(RoundRobinRouter::default()),
         RouterKind::LeastLoaded => Box::new(LeastLoadedRouter),
         RouterKind::LeastKv => Box::new(LeastKvRouter),
         RouterKind::CostAware => Box::new(CostAwareRouter),
+        RouterKind::QuantileCost => Box::new(QuantileCostRouter::new(quantile)),
     }
 }
 
@@ -226,59 +292,167 @@ pub fn route_least_loaded(loads: &[usize]) -> usize {
 // Event-driven cluster
 // ===========================================================================
 
+/// Lifecycle state of one replica inside the event-driven cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Spawned by a scale-out decision, still inside its provisioning
+    /// delay: not routable, holds no work.
+    Provisioning,
+    /// Routable and serving.
+    Active,
+    /// Failed: not routable, holds no work (drained at failure time), will
+    /// rejoin at its recovery event.
+    Down,
+    /// Scale-in victim: not routable, queued work already re-routed,
+    /// finishing its running/preempted requests in place.
+    Draining,
+    /// Retired for good (scale-in complete, or failed while draining).
+    Retired,
+}
+
 /// One serving replica inside the event-driven cluster.
 pub struct ClusterReplica {
     pub coord: Coordinator<SimEngine>,
     /// Speed multiplier this replica was built with.
     pub speed: f64,
-    /// Whether the replica is alive (routable). Failed replicas are
-    /// excluded from every router's view until their recovery event.
-    pub up: bool,
-    /// Virtual time the current outage began (meaningful while `!up`).
+    /// Lifecycle state; only [`ReplicaState::Active`] replicas are
+    /// routable, only Active/Draining ones can hold live work.
+    pub state: ReplicaState,
+    /// Virtual time the current outage began (meaningful while Down).
     down_since: f64,
     /// Accumulated downtime over completed outages (seconds).
     pub downtime: f64,
+    /// Virtual time this replica was provisioned (0 for the initial fleet).
+    pub spawned_at: f64,
+    /// Virtual time the replica retired, if it did.
+    pub retired_at: Option<f64>,
     /// Outcomes already drained into cluster-level bookkeeping.
     seen_outcomes: usize,
     /// Timeout-aborts already reconciled into cluster-level bookkeeping.
     seen_aborted: u64,
 }
 
-/// One replica lifecycle transition derived from
-/// [`FailureEvent`](crate::config::FailureEvent)s: at `at`, replica
-/// `replica` goes down (`up == false`) or rejoins (`up == true`).
+impl ClusterReplica {
+    /// Whether routers may send new work here.
+    pub fn routable(&self) -> bool {
+        self.state == ReplicaState::Active
+    }
+
+    /// Provisioned lifetime up to `horizon`, excluding downtime — the
+    /// replica-seconds this replica is charged for. A replica added or
+    /// retired mid-run is charged only for its [spawned_at, retired_at)
+    /// span; an outage still open at `horizon` is charged to `horizon`.
+    pub fn replica_seconds(&self, horizon: f64) -> f64 {
+        let end = self.retired_at.unwrap_or(horizon);
+        let open_outage = if self.state == ReplicaState::Down {
+            (end - self.down_since).max(0.0)
+        } else {
+            0.0
+        };
+        (end - self.spawned_at - self.downtime - open_outage).max(0.0)
+    }
+}
+
+/// What a scheduled cluster event does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ClusterEventKind {
+    /// A provisioning delay elapsed: the replica becomes routable.
+    SpawnReady,
+    /// A configured outage ends.
+    Recover,
+    /// A configured outage begins.
+    Fail,
+    /// An autoscaler decision point.
+    Decision,
+}
+
+impl ClusterEventKind {
+    /// Tie-break rank at equal times: capacity arrives (spawn-ready,
+    /// recover) before capacity leaves (fail), and autoscaler decisions
+    /// observe the post-transition state.
+    fn rank(&self) -> u8 {
+        match self {
+            ClusterEventKind::SpawnReady => 0,
+            ClusterEventKind::Recover => 1,
+            ClusterEventKind::Fail => 2,
+            ClusterEventKind::Decision => 3,
+        }
+    }
+}
+
+/// One scheduled cluster event (failure/recovery from config, autoscaler
+/// decision points, dynamic spawn-ready events).
 #[derive(Clone, Copy, Debug)]
-struct LifecycleEvent {
+struct ClusterEvent {
     at: f64,
+    kind: ClusterEventKind,
+    /// Target replica (unused for `Decision`).
     replica: usize,
-    up: bool,
+}
+
+impl ClusterEvent {
+    fn sort_key(&self) -> (f64, u8, usize) {
+        (self.at, self.kind.rank(), self.replica)
+    }
+}
+
+/// Cluster-side bookkeeping for one in-flight request: where it was routed
+/// and the first two moments of its predicted cost distribution.
+struct InFlight {
+    replica: usize,
+    /// Predicted E[total cost] (cost-model units).
+    cost: f64,
+    /// Predicted Var[total cost].
+    var: f64,
+    /// Original request (kept for re-dispatch and predictor learning).
+    req: Request,
 }
 
 /// The event-driven multi-replica cluster: N coordinators on a shared
 /// virtual clock behind a [`Router`], with a shared prediction service,
-/// replica failure/recovery, and idle-replica work stealing.
+/// replica failure/recovery, elastic autoscaling, and idle-replica work
+/// stealing.
 pub struct EventCluster {
     pub cfg: ExperimentConfig,
     pub replicas: Vec<ClusterReplica>,
     pub router: Box<dyn Router>,
     /// Shared prediction service (prices arrivals; learns from completions).
     pub predictor: Box<dyn Predictor>,
+    /// Elastic provisioning policy (None = fixed fleet).
+    autoscaler: Option<Box<dyn AutoscalePolicy>>,
     cost: Box<dyn CostModel>,
-    /// id -> (replica, predicted E[total cost], original request).
-    in_flight: HashMap<RequestId, (usize, f64, Request)>,
+    /// id -> routing + predicted-cost bookkeeping.
+    in_flight: HashMap<RequestId, InFlight>,
     /// Per-replica sum of predicted cost of in-flight requests.
     backlog: Vec<f64>,
+    /// Per-replica sum of predicted cost *variance* of in-flight requests.
+    backlog_var: Vec<f64>,
     /// Per-replica routed-request counts.
     pub routed: Vec<u64>,
     /// Requests re-dispatched through the router after a replica failure.
     pub re_routed: u64,
+    /// Queued requests re-routed off a scale-in victim at drain time.
+    pub drained: u64,
     /// Queued requests migrated to an idle replica by work stealing.
     pub stolen: u64,
+    /// Steal candidates rejected by the transfer-cost benefit gate at
+    /// least once.
+    steal_rejected: HashSet<RequestId>,
+    /// Whether anything that could change a steal verdict (queue contents,
+    /// backlogs, replica states) has happened since the last fruitless
+    /// stealing pass. The benefit gate makes "idle thief, nothing
+    /// profitable" a *persistent* state; without this flag every event-loop
+    /// iteration would rescan and re-sort the queues just to reach the same
+    /// verdict.
+    steal_dirty: bool,
+    /// Replica lifecycle timeline (provision/up/drain/retire/fail/recover).
+    pub scaling_events: Vec<ScalingEvent>,
 }
 
 impl EventCluster {
-    /// Build a cluster from `cfg` (replica count / router / heterogeneity
-    /// from `cfg.cluster`), overriding the router with `router`.
+    /// Build a cluster from `cfg` (replica count / router / heterogeneity /
+    /// autoscale policy from `cfg.cluster`), overriding the router with
+    /// `router`.
     pub fn with_router(cfg: &ExperimentConfig, router: RouterKind) -> EventCluster {
         let n = cfg.cluster.replicas.max(1);
         let replicas: Vec<ClusterReplica> = (0..n)
@@ -288,9 +462,11 @@ impl EventCluster {
                 ClusterReplica {
                     coord: crate::serve::build_sim_coordinator_with(cfg, profile, seed),
                     speed: cfg.cluster.speed_of(i),
-                    up: true,
+                    state: ReplicaState::Active,
                     down_since: 0.0,
                     downtime: 0.0,
+                    spawned_at: 0.0,
+                    retired_at: None,
                     seen_outcomes: 0,
                     seen_aborted: 0,
                 }
@@ -306,12 +482,18 @@ impl EventCluster {
         EventCluster {
             cfg: cfg.clone(),
             backlog: vec![0.0; n],
+            backlog_var: vec![0.0; n],
             routed: vec![0; n],
             re_routed: 0,
+            drained: 0,
             stolen: 0,
+            steal_rejected: HashSet::new(),
+            steal_dirty: true,
+            scaling_events: Vec::new(),
             replicas,
-            router: make_router(router),
+            router: make_router(router, cfg.cluster.router_quantile),
             predictor,
+            autoscaler: crate::autoscale::make_autoscaler(&cfg.cluster.autoscale),
             cost: crate::cost::make_cost_model(cfg.cost_model),
             in_flight: HashMap::new(),
         }
@@ -340,6 +522,12 @@ impl EventCluster {
         self.backlog.iter().sum()
     }
 
+    /// Steal candidates the transfer-cost benefit gate rejected (distinct
+    /// requests; one later stolen after backlog shifts still counts here).
+    pub fn steals_skipped(&self) -> u64 {
+        self.steal_rejected.len() as u64
+    }
+
     /// Build with the router configured in `cfg.cluster.router`.
     pub fn new(cfg: &ExperimentConfig) -> EventCluster {
         EventCluster::with_router(cfg, cfg.cluster.router)
@@ -354,15 +542,16 @@ impl EventCluster {
         }
     }
 
-    /// Routable snapshot: one view per *surviving* replica. `ReplicaView::id`
-    /// carries the true replica index, which no longer matches the position
-    /// in the returned slice once any replica is down — routers return
-    /// positions, the dispatcher maps them back through `id`.
+    /// Routable snapshot: one view per *routable* (Active) replica.
+    /// `ReplicaView::id` carries the true replica index, which no longer
+    /// matches the position in the returned slice once any replica is down,
+    /// provisioning, or draining — routers return positions, the dispatcher
+    /// maps them back through `id`.
     fn views(&self) -> Vec<ReplicaView> {
         self.replicas
             .iter()
             .enumerate()
-            .filter(|(_, r)| r.up)
+            .filter(|(_, r)| r.routable())
             .map(|(i, r)| ReplicaView {
                 id: i,
                 live: r.coord.live_count(),
@@ -372,17 +561,22 @@ impl EventCluster {
                 speed: r.speed,
                 max_batch: r.coord.engine.max_batch(),
                 predicted_backlog: self.backlog[i],
+                predicted_backlog_var: self.backlog_var[i],
             })
             .collect()
     }
 
     /// Index and clock of the busy replica with the smallest virtual time,
-    /// if any replica has live work. Down replicas hold no live work (their
-    /// requests are drained at failure time) so they never get stepped.
+    /// if any replica has live work. Only Active and Draining replicas can
+    /// hold live work (Down replicas are drained at failure time,
+    /// Provisioning/Retired ones never held any), so only those are
+    /// stepped — a Draining replica keeps running until its last live
+    /// request finishes.
     fn earliest_busy(&self) -> Option<(usize, f64)> {
         let mut best: Option<(usize, f64)> = None;
         for (i, r) in self.replicas.iter().enumerate() {
-            if !r.up || r.coord.is_idle() {
+            let steppable = matches!(r.state, ReplicaState::Active | ReplicaState::Draining);
+            if !steppable || r.coord.is_idle() {
                 continue;
             }
             let t = r.coord.now();
@@ -400,38 +594,80 @@ impl EventCluster {
     /// Fails hard when no replica is alive or the router returns an
     /// out-of-range position — both are configuration/implementation errors
     /// that must not be silently patched (the old `.min(len-1)` clamp
-    /// turned router misroutes into quiet load skew).
+    /// turned router misroutes into quiet load skew). A refused submission
+    /// counts as a rejection (crash re-dispatch and fresh arrivals share
+    /// admission semantics).
     fn dispatch(&mut self, req: Request, not_before: f64) -> anyhow::Result<()> {
+        self.place(req, not_before, None)?;
+        Ok(())
+    }
+
+    /// Routing core shared by [`EventCluster::dispatch`] and the scale-in
+    /// drain path. With `keep_on: Some(victim)` a routed target without
+    /// admission headroom — or an empty routable set — falls back to
+    /// re-admitting on the (draining) `victim`, which always fits: the
+    /// request occupied one of the victim's admission slots moments ago and
+    /// nothing was admitted there since. A *voluntary* scale-in must never
+    /// convert an already-admitted request into a rejection. Returns true
+    /// when the request landed somewhere other than the fallback.
+    fn place(
+        &mut self,
+        req: Request,
+        not_before: f64,
+        keep_on: Option<usize>,
+    ) -> anyhow::Result<bool> {
         let pred = self.predictor.predict(&req);
-        let pcost = self.cost.cost_dist(req.input_len, &pred).mean();
+        let cost_dist = self.cost.cost_dist(req.input_len, &pred);
+        let pcost = cost_dist.mean();
+        let pvar = cost_dist.variance();
         let views = self.views();
+        let mut target = None;
         if views.is_empty() {
-            anyhow::bail!(
-                "cannot route request {}: all {} replicas are down",
-                req.id,
-                self.replicas.len()
-            );
+            if keep_on.is_none() {
+                anyhow::bail!(
+                    "cannot route request {}: none of the {} replicas is routable",
+                    req.id,
+                    self.replicas.len()
+                );
+            }
+        } else {
+            let slot = self.router.route(&req, pcost, &views);
+            if slot >= views.len() {
+                anyhow::bail!(
+                    "router {} returned position {slot} but only {} replicas are \
+                     routable",
+                    self.router.name(),
+                    views.len()
+                );
+            }
+            let i = views[slot].id;
+            let has_room = {
+                let c = &self.replicas[i].coord;
+                c.max_queue == 0 || c.live_count() < c.max_queue
+            };
+            if has_room || keep_on.is_none() {
+                target = Some(i);
+            }
         }
-        let slot = self.router.route(&req, pcost, &views);
-        if slot >= views.len() {
-            anyhow::bail!(
-                "router {} returned position {slot} but only {} replicas are \
-                 routable",
-                self.router.name(),
-                views.len()
-            );
-        }
-        let i = views[slot].id;
+        let moved = target.is_some();
+        let i = target
+            .or(keep_on)
+            .expect("place: empty routable set without fallback already bailed");
         let id = req.id;
         self.replicas[i].coord.advance_to(req.arrival.max(not_before));
-        if self.replicas[i].coord.submit(req.clone()) {
-            self.in_flight.insert(id, (i, pcost, req));
+        let accepted = self.replicas[i].coord.submit(req.clone());
+        debug_assert!(accepted || keep_on.is_none(), "drain re-admission must fit");
+        if accepted {
+            self.in_flight
+                .insert(id, InFlight { replica: i, cost: pcost, var: pvar, req });
             self.backlog[i] += pcost;
+            self.backlog_var[i] += pvar;
             self.routed[i] += 1;
+            self.steal_dirty = true; // fresh queued work: steal verdicts change
         }
         // refusals are counted by the coordinator itself (sole owner of the
         // rejected counter; see EventCluster::rejected)
-        Ok(())
+        Ok(moved && accepted)
     }
 
     /// Run one scheduling iteration on replica `i` and drain its new
@@ -454,13 +690,18 @@ impl EventCluster {
                 .collect()
         };
         self.replicas[i].seen_outcomes += new.len();
-        let progressed = !new.is_empty()
-            || self.replicas[i].coord.now() > now0
-            || self.replicas[i].coord.live_count() != live0;
+        let live_now = self.replicas[i].coord.live_count();
+        let progressed =
+            !new.is_empty() || self.replicas[i].coord.now() > now0 || live_now != live0;
+        // completions / live-set changes move backlogs and can idle a
+        // replica — both alter steal verdicts; a bare clock advance cannot
+        if !new.is_empty() || live_now != live0 {
+            self.steal_dirty = true;
+        }
         for (id, output_len) in new {
-            if let Some((rep, pcost, req)) = self.in_flight.remove(&id) {
-                self.backlog[rep] = (self.backlog[rep] - pcost).max(0.0);
-                self.predictor.observe(&req, output_len);
+            if let Some(f) = self.in_flight.remove(&id) {
+                self.release_backlog(f.replica, f.cost, f.var);
+                self.predictor.observe(&f.req, output_len);
             }
         }
         // Reconcile timeout-aborts: they leave the live set without an
@@ -472,57 +713,69 @@ impl EventCluster {
             let gone: Vec<RequestId> = self
                 .in_flight
                 .iter()
-                .filter(|(id, entry)| entry.0 == i && !coord.is_live(**id))
+                .filter(|(id, entry)| entry.replica == i && !coord.is_live(**id))
                 .map(|(id, _)| *id)
                 .collect();
             for id in gone {
-                if let Some((rep, pcost, _)) = self.in_flight.remove(&id) {
-                    self.backlog[rep] = (self.backlog[rep] - pcost).max(0.0);
+                if let Some(f) = self.in_flight.remove(&id) {
+                    self.release_backlog(f.replica, f.cost, f.var);
                 }
             }
         }
         Ok(progressed)
     }
 
+    /// Release one request's contribution to a replica's predicted-cost
+    /// moments (floored at 0 against accumulated float error).
+    fn release_backlog(&mut self, replica: usize, cost: f64, var: f64) {
+        self.backlog[replica] = (self.backlog[replica] - cost).max(0.0);
+        self.backlog_var[replica] = (self.backlog_var[replica] - var).max(0.0);
+    }
+
     /// Drive the full arrival stream to completion: global-time-ordered
-    /// interleaving of replica iterations, routed arrivals, and replica
-    /// failure/recovery events, then drain. Idle replicas steal queued work
-    /// from backlogged peers between events.
+    /// interleaving of replica iterations, routed arrivals, replica
+    /// failure/recovery events, and autoscaler decisions (whose scale-outs
+    /// schedule spawn-ready events after the provisioning delay), then
+    /// drain. Idle replicas steal queued work from backlogged peers between
+    /// events.
     pub fn run(&mut self, mut requests: Vec<Request>) -> anyhow::Result<()> {
+        if let Err(e) = self.cfg.cluster.autoscale.validate() {
+            anyhow::bail!("{e}");
+        }
         requests.sort_by(|a, b| {
             a.arrival
                 .partial_cmp(&b.arrival)
                 .unwrap()
                 .then(a.id.cmp(&b.id))
         });
-        let lifecycle = self.lifecycle_events()?;
+        let mut events = self.initial_events()?;
         let mut idx = 0;
         let mut eidx = 0;
         loop {
             self.steal_work();
             let next_arrival = requests.get(idx).map(|r| r.arrival);
-            let next_life = lifecycle.get(eidx).map(|e| e.at);
-            // next externally-scheduled event (arrival or lifecycle
-            // transition); lifecycle wins ties so same-instant arrivals
-            // already route over the post-transition replica set
-            let life_first = match (next_life, next_arrival) {
-                (Some(tl), Some(ta)) => tl <= ta,
+            let next_event = events.get(eidx).map(|e| e.at);
+            // scheduled events win ties so same-instant arrivals already
+            // route over the post-transition replica set
+            let event_first = match (next_event, next_arrival) {
+                (Some(te), Some(ta)) => te <= ta,
                 (Some(_), None) => true,
                 _ => false,
             };
-            let next_event = match (next_life, next_arrival) {
-                (Some(tl), Some(ta)) => Some(tl.min(ta)),
+            let next_t = match (next_event, next_arrival) {
+                (Some(te), Some(ta)) => Some(te.min(ta)),
                 (a, b) => a.or(b),
             };
-            match (self.earliest_busy(), next_event) {
+            match (self.earliest_busy(), next_t) {
                 // a busy replica trails the next event: advance it first
                 (Some((i, t)), Some(te)) if t < te => self.check_progress(i)?,
                 // all busy replicas have caught up: apply the event
                 (_, Some(_)) => {
-                    if life_first {
-                        let ev = lifecycle[eidx];
+                    if event_first {
+                        let ev = events[eidx];
                         eidx += 1;
-                        self.apply_lifecycle(ev)?;
+                        let arrivals_pending = idx < requests.len();
+                        self.apply_event(ev, &mut events, eidx, arrivals_pending)?;
                     } else {
                         let r = requests[idx].clone();
                         idx += 1;
@@ -538,12 +791,16 @@ impl EventCluster {
         Ok(())
     }
 
-    /// Expand the configured [`crate::config::FailureEvent`]s into a
-    /// time-sorted down/up event stream. Overlapping or touching outage
-    /// windows on one replica are merged into their union first — otherwise
-    /// the earliest recovery of a nested outage would resurrect the replica
-    /// while a longer outage is still running, undercounting downtime.
-    fn lifecycle_events(&self) -> anyhow::Result<Vec<LifecycleEvent>> {
+    /// Assemble the time-sorted scheduled-event stream: failure/recovery
+    /// transitions from the config, the autoscaler's first periodic
+    /// decision point (each fired decision schedules its successor while
+    /// arrivals remain or work is live, so the chain covers the drain tail
+    /// too), and the policy's own scripted times. Overlapping or touching
+    /// outage windows on one replica are merged into their union first —
+    /// otherwise the earliest recovery of a nested outage would resurrect
+    /// the replica while a longer outage is still running, undercounting
+    /// downtime.
+    fn initial_events(&self) -> anyhow::Result<Vec<ClusterEvent>> {
         let n = self.replicas.len();
         let mut by_replica: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n];
         for f in &self.cfg.cluster.failures {
@@ -570,49 +827,139 @@ impl EventCluster {
                 }
             }
             for (start, end) in merged {
-                events.push(LifecycleEvent { at: start, replica, up: false });
-                events.push(LifecycleEvent { at: end, replica, up: true });
+                events.push(ClusterEvent {
+                    at: start,
+                    kind: ClusterEventKind::Fail,
+                    replica,
+                });
+                events.push(ClusterEvent {
+                    at: end,
+                    kind: ClusterEventKind::Recover,
+                    replica,
+                });
             }
         }
-        // recoveries before failures at equal times: a recovery on one
-        // replica coinciding with a failure on another applies first, so
-        // re-dispatch routes over the freshest surviving set
+        if let Some(pol) = self.autoscaler.as_ref() {
+            // seed the periodic chain; Decision handling extends it
+            events.push(ClusterEvent {
+                at: self.cfg.cluster.autoscale.interval,
+                kind: ClusterEventKind::Decision,
+                replica: 0,
+            });
+            // scripted steps fire exactly at their configured times, even
+            // past the last arrival (a late scale-in still frees capacity
+            // during the drain tail)
+            for at in pol.scheduled_times() {
+                events.push(ClusterEvent {
+                    at,
+                    kind: ClusterEventKind::Decision,
+                    replica: 0,
+                });
+            }
+        }
         events.sort_by(|a, b| {
-            a.at.partial_cmp(&b.at)
-                .unwrap()
-                .then(b.up.cmp(&a.up))
-                .then(a.replica.cmp(&b.replica))
+            a.sort_key()
+                .partial_cmp(&b.sort_key())
+                .expect("NaN event time")
+        });
+        // collapse duplicate decision instants (a scripted step landing on
+        // the periodic grid must fire once, not twice)
+        events.dedup_by(|a, b| {
+            a.kind == ClusterEventKind::Decision
+                && b.kind == ClusterEventKind::Decision
+                && a.at == b.at
         });
         Ok(events)
     }
 
-    /// Apply one replica lifecycle transition. A failure drains everything
-    /// the replica held — queued, running, and preempted requests lose their
-    /// state, exactly as a crash would — releases the cluster-side
-    /// backlog/in-flight bookkeeping for them, and re-dispatches each one
-    /// through the router over the surviving replicas. A recovery returns
-    /// the (empty) replica to the routable set and charges its downtime.
-    fn apply_lifecycle(&mut self, ev: LifecycleEvent) -> anyhow::Result<()> {
-        let i = ev.replica;
-        if ev.up {
-            if !self.replicas[i].up {
-                self.replicas[i].up = true;
-                self.replicas[i].downtime += ev.at - self.replicas[i].down_since;
-                self.replicas[i].coord.advance_to(ev.at);
+    /// Apply one scheduled event; autoscaler decisions may append
+    /// spawn-ready events and their own successor decision point (inserted
+    /// in time order at/after `eidx`).
+    fn apply_event(
+        &mut self,
+        ev: ClusterEvent,
+        events: &mut Vec<ClusterEvent>,
+        eidx: usize,
+        arrivals_pending: bool,
+    ) -> anyhow::Result<()> {
+        match ev.kind {
+            ClusterEventKind::Fail => self.apply_failure(ev.replica, ev.at),
+            ClusterEventKind::Recover => {
+                self.apply_recovery(ev.replica, ev.at);
+                Ok(())
             }
-            return Ok(());
+            ClusterEventKind::SpawnReady => {
+                self.apply_spawn_ready(ev.replica, ev.at);
+                Ok(())
+            }
+            ClusterEventKind::Decision => {
+                let mut new_events = self.apply_decision(ev.at)?;
+                // keep the periodic chain alive while there is anything
+                // left to decide about: feedback policies must be able to
+                // scale in during the drain tail after the last arrival.
+                // Once arrivals are exhausted and the cluster is idle the
+                // chain ends, which bounds the event stream.
+                let chain_pending = events[eidx..]
+                    .iter()
+                    .any(|e| e.kind == ClusterEventKind::Decision);
+                if self.autoscaler.is_some()
+                    && !chain_pending
+                    && (arrivals_pending || self.has_live_work())
+                {
+                    new_events.push(ClusterEvent {
+                        at: ev.at + self.cfg.cluster.autoscale.interval,
+                        kind: ClusterEventKind::Decision,
+                        replica: 0,
+                    });
+                }
+                for new_ev in new_events {
+                    let pos = events[eidx..]
+                        .iter()
+                        .position(|e| e.sort_key() > new_ev.sort_key())
+                        .map(|p| eidx + p)
+                        .unwrap_or(events.len());
+                    events.insert(pos, new_ev);
+                }
+                Ok(())
+            }
         }
-        if !self.replicas[i].up {
-            return Ok(()); // overlapping outage: already down
+    }
+
+    /// Whether any replica still holds live (queued/running/preempted)
+    /// work.
+    fn has_live_work(&self) -> bool {
+        self.replicas.iter().any(|r| !r.coord.is_idle())
+    }
+
+    /// A scheduled outage begins: drain everything the replica held —
+    /// queued, running, and preempted requests lose their state, exactly as
+    /// a crash would — release the cluster-side backlog/in-flight
+    /// bookkeeping for them, and re-dispatch each one through the router
+    /// over the routable replicas. A replica that was already draining for
+    /// scale-in retires on the spot (it was leaving anyway; the crash just
+    /// lost the work it was finishing, which is re-routed like any other
+    /// failure). Failures on provisioning, retired, or already-down
+    /// replicas are no-ops.
+    fn apply_failure(&mut self, i: usize, at: f64) -> anyhow::Result<()> {
+        let was_draining = match self.replicas[i].state {
+            ReplicaState::Active => false,
+            ReplicaState::Draining => true,
+            _ => return Ok(()),
+        };
+        self.replicas[i].coord.advance_to(at);
+        self.record(at, i, ScaleAction::Fail);
+        self.steal_dirty = true;
+        if was_draining {
+            self.retire(i, at);
+        } else {
+            self.replicas[i].state = ReplicaState::Down;
+            self.replicas[i].down_since = at;
         }
-        self.replicas[i].up = false;
-        self.replicas[i].down_since = ev.at;
-        self.replicas[i].coord.advance_to(ev.at);
         let mut lost = self.replicas[i].coord.drain_live();
         for req in &lost {
-            if let Some((rep, pcost, _)) = self.in_flight.remove(&req.id) {
-                debug_assert_eq!(rep, i, "in-flight map out of sync at failure");
-                self.backlog[rep] = (self.backlog[rep] - pcost).max(0.0);
+            if let Some(f) = self.in_flight.remove(&req.id) {
+                debug_assert_eq!(f.replica, i, "in-flight map out of sync at failure");
+                self.release_backlog(f.replica, f.cost, f.var);
             }
         }
         lost.sort_by(|a, b| {
@@ -623,44 +970,278 @@ impl EventCluster {
         });
         self.re_routed += lost.len() as u64;
         for req in lost {
-            self.dispatch(req, ev.at)?;
+            self.dispatch(req, at)?;
         }
         Ok(())
     }
 
-    /// Idle-replica work stealing: while some alive replica sits idle and
-    /// another has more than one live request including never-scheduled
+    /// A scheduled outage ends: the (empty) replica rejoins the routable
+    /// set and its downtime is charged. Replicas that retired while down
+    /// stay retired.
+    fn apply_recovery(&mut self, i: usize, at: f64) {
+        if self.replicas[i].state != ReplicaState::Down {
+            return;
+        }
+        self.replicas[i].state = ReplicaState::Active;
+        self.replicas[i].downtime += at - self.replicas[i].down_since;
+        self.replicas[i].coord.advance_to(at);
+        self.record(at, i, ScaleAction::Recover);
+        self.steal_dirty = true; // a fresh idle thief just appeared
+    }
+
+    /// A provisioning delay elapsed: the cold replica joins the routable
+    /// set.
+    fn apply_spawn_ready(&mut self, i: usize, at: f64) {
+        if self.replicas[i].state != ReplicaState::Provisioning {
+            return;
+        }
+        self.replicas[i].state = ReplicaState::Active;
+        self.replicas[i].coord.advance_to(at);
+        self.record(at, i, ScaleAction::Up);
+        self.steal_dirty = true; // a fresh idle thief just appeared
+    }
+
+    /// Run the autoscaler at a decision point. Scale-out spawns fresh
+    /// replicas (returned as future spawn-ready events); scale-in begins
+    /// draining victims immediately. The desired target counts capacity
+    /// that is present or committed (active + provisioning + down).
+    fn apply_decision(&mut self, now: f64) -> anyhow::Result<Vec<ClusterEvent>> {
+        let view = self.autoscale_view(now);
+        let target = match self.autoscaler.as_mut() {
+            None => return Ok(Vec::new()),
+            Some(p) => p.target(&view),
+        };
+        let Some(target) = target else {
+            return Ok(Vec::new());
+        };
+        let target = target.max(1);
+        let present = view.present();
+        if target > present {
+            let delay = self.cfg.cluster.autoscale.provision_delay;
+            let mut spawns = Vec::with_capacity(target - present);
+            for _ in 0..(target - present) {
+                let i = self.spawn_replica(now);
+                self.record(now, i, ScaleAction::Provision);
+                spawns.push(ClusterEvent {
+                    at: now + delay,
+                    kind: ClusterEventKind::SpawnReady,
+                    replica: i,
+                });
+            }
+            return Ok(spawns);
+        }
+        let mut shrink = present - target;
+        while shrink > 0 {
+            // cancel not-yet-ready replicas first (newest first): they hold
+            // no work, so retiring them is free — a scale-out/scale-in
+            // whipsaw must not destroy warm serving capacity while a cold
+            // replica is still on its way up. Its pending spawn-ready event
+            // becomes a no-op (the state is no longer Provisioning).
+            if let Some(p) = self
+                .replicas
+                .iter()
+                .rposition(|r| r.state == ReplicaState::Provisioning)
+            {
+                self.retire(p, now);
+                shrink -= 1;
+                continue;
+            }
+            let active: Vec<usize> = self
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.state == ReplicaState::Active)
+                .map(|(i, _)| i)
+                .collect();
+            // never drain the last routable replica: the cluster must stay
+            // able to place re-routed and future work
+            if active.len() <= 1 {
+                break;
+            }
+            // cheapest victim to drain: fewest live requests, ties to the
+            // highest index (retire the newest replica first)
+            let victim = *active
+                .iter()
+                .min_by_key(|&&i| (self.replicas[i].coord.live_count(), usize::MAX - i))
+                .expect("non-empty active set");
+            self.begin_drain(victim, now)?;
+            shrink -= 1;
+        }
+        Ok(Vec::new())
+    }
+
+    /// Snapshot the cluster for the autoscaler.
+    fn autoscale_view(&self, now: f64) -> crate::autoscale::AutoscaleView {
+        let mut active = 0;
+        let mut provisioning = 0;
+        let mut down = 0;
+        let mut draining = 0;
+        let mut total_live = 0;
+        let mut total_queued = 0;
+        let mut occ_sum = 0.0;
+        for r in &self.replicas {
+            match r.state {
+                ReplicaState::Active => {
+                    active += 1;
+                    total_live += r.coord.live_count();
+                    total_queued += r.coord.queued_count();
+                    let total = r.coord.kv.total_blocks();
+                    if total > 0 {
+                        occ_sum += r.coord.kv.used_blocks() as f64 / total as f64;
+                    }
+                }
+                ReplicaState::Provisioning => provisioning += 1,
+                ReplicaState::Down => down += 1,
+                ReplicaState::Draining => draining += 1,
+                ReplicaState::Retired => {}
+            }
+        }
+        let mean_kv_occupancy = if active > 0 {
+            occ_sum / active as f64
+        } else {
+            0.0
+        };
+        crate::autoscale::AutoscaleView {
+            now,
+            active,
+            provisioning,
+            down,
+            draining,
+            total_live,
+            total_queued,
+            mean_kv_occupancy,
+            backlog_mean: self.backlog.iter().sum(),
+            backlog_var: self.backlog_var.iter().sum(),
+        }
+    }
+
+    /// Append a fresh cold replica in the Provisioning state. Heterogeneity
+    /// vectors keep cycling at the new index, and the replica gets its own
+    /// deterministic seed, so elastic runs stay exactly reproducible.
+    fn spawn_replica(&mut self, now: f64) -> usize {
+        let i = self.replicas.len();
+        let profile = self.cfg.cluster.replica_profile(&self.cfg.engine, i);
+        let seed = self.cfg.seed ^ ((i as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let mut coord = crate::serve::build_sim_coordinator_with(&self.cfg, profile, seed);
+        if self.cfg.cluster.autoscale.prewarm {
+            crate::serve::prewarm_predictor(coord.predictor.as_mut(), &self.cfg);
+        }
+        coord.advance_to(now);
+        self.replicas.push(ClusterReplica {
+            coord,
+            speed: self.cfg.cluster.speed_of(i),
+            state: ReplicaState::Provisioning,
+            down_since: 0.0,
+            downtime: 0.0,
+            spawned_at: now,
+            retired_at: None,
+            seen_outcomes: 0,
+            seen_aborted: 0,
+        });
+        self.backlog.push(0.0);
+        self.backlog_var.push(0.0);
+        self.routed.push(0);
+        i
+    }
+
+    /// Begin scale-in on `victim`: stop routing to it, re-route its
+    /// never-scheduled queued work through the router (those requests hold
+    /// no KV or engine state, so the migration is exact), and leave its
+    /// running/preempted requests to finish in place. Unlike crash
+    /// re-dispatch, a *voluntary* scale-in must be lossless: a queued
+    /// request whose re-route target has no admission headroom (or when no
+    /// replica is routable at all) stays on the victim, which keeps serving
+    /// until its live set drains. Retires immediately when nothing is left
+    /// live.
+    fn begin_drain(&mut self, victim: usize, now: f64) -> anyhow::Result<()> {
+        self.replicas[victim].state = ReplicaState::Draining;
+        self.replicas[victim].coord.advance_to(now);
+        self.record(now, victim, ScaleAction::Drain);
+        let mut moved = self.replicas[victim].coord.drain_queued(usize::MAX);
+        for req in &moved {
+            if let Some(f) = self.in_flight.remove(&req.id) {
+                debug_assert_eq!(f.replica, victim, "in-flight map out of sync at drain");
+                self.release_backlog(f.replica, f.cost, f.var);
+            }
+        }
+        moved.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        for req in moved {
+            if self.place(req, now, Some(victim))? {
+                self.drained += 1;
+            }
+        }
+        self.steal_dirty = true;
+        if self.replicas[victim].coord.is_idle() {
+            self.retire(victim, now);
+        }
+        Ok(())
+    }
+
+    /// Finalize a drained replica's exit.
+    fn retire(&mut self, i: usize, at: f64) {
+        let at = at.max(self.replicas[i].coord.now());
+        self.replicas[i].state = ReplicaState::Retired;
+        self.replicas[i].retired_at = Some(at);
+        self.record(at, i, ScaleAction::Retire);
+    }
+
+    fn record(&mut self, at: f64, replica: usize, action: ScaleAction) {
+        self.scaling_events.push(ScalingEvent { at, replica, action });
+    }
+
+    /// Idle-replica work stealing: while some routable replica sits idle
+    /// and another has more than one live request including never-scheduled
     /// (queued) ones, migrate up to half of the victim's queued requests to
     /// the idle replica. Queued requests hold no KV or engine state, so the
-    /// migration is free; the thief's clock is advanced to the victim's so
-    /// no request runs before the moment it was provably stealable.
+    /// only migration cost is shipping the prompt — each candidate is gated
+    /// on a benefit check: the speed-normalized predicted backlog it stops
+    /// waiting behind must exceed a transfer penalty proportional to its
+    /// prompt length (`ClusterConfig::steal_transfer_per_token`; 0 restores
+    /// unconditional stealing). Rejected candidates are counted in
+    /// [`EventCluster::steals_skipped`]. The thief's clock is advanced to
+    /// the victim's so no request runs before the moment it was provably
+    /// stealable.
     fn steal_work(&mut self) {
-        loop {
+        if !self.steal_dirty {
+            return; // nothing changed since the last fruitless pass
+        }
+        // the pass below runs to quiescence (it loops until no profitable
+        // steal remains), so afterwards only a state change can make a new
+        // pass worthwhile — the mutators set the flag again
+        self.steal_dirty = false;
+        let transfer = self.cfg.cluster.steal_transfer_per_token;
+        'pass: loop {
             let thief = match self
                 .replicas
                 .iter()
-                .position(|r| r.up && r.coord.is_idle())
+                .position(|r| r.routable() && r.coord.is_idle())
             {
                 Some(t) => t,
                 None => return,
             };
-            // one queued_count() scan per replica (it walks the live vec);
-            // ascending iteration with a strict `>` keeps ties on the
-            // lowest index for determinism
-            let mut best: Option<(usize, usize)> = None; // (replica, queued)
-            for (j, r) in self.replicas.iter().enumerate() {
-                if j == thief || !r.up || r.coord.live_count() < 2 {
-                    continue;
-                }
-                let queued = r.coord.queued_count();
-                if queued > 0 && best.map_or(true, |(_, bq)| queued > bq) {
-                    best = Some((j, queued));
-                }
+            // candidate victims, most-queued first (ties to the lowest
+            // index for determinism); later victims are tried when the
+            // most-backlogged one has no gate-passing candidate, so a small
+            // cheap queue cannot shadow a profitable one
+            let mut victims: Vec<(usize, usize)> = self
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(j, r)| {
+                    *j != thief && r.routable() && r.coord.live_count() >= 2
+                })
+                .map(|(j, r)| (j, r.coord.queued_count()))
+                .filter(|&(_, queued)| queued > 0)
+                .collect();
+            victims.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            if victims.is_empty() {
+                return;
             }
-            let (v, v_queued) = match best {
-                Some(b) => b,
-                None => return,
-            };
             // cap at the thief's admission window (it is idle, so its live
             // set is empty): stolen submissions must never be refused, or a
             // request that was safely queued would count as rejected
@@ -668,28 +1249,66 @@ impl EventCluster {
                 0 => usize::MAX,
                 cap => cap,
             };
-            let take = v_queued.div_ceil(2).min(capacity);
-            let victim_now = self.replicas[v].coord.now();
-            let moved = self.replicas[v].coord.drain_queued(take);
-            if moved.is_empty() {
-                return;
-            }
-            self.replicas[thief].coord.advance_to(victim_now);
-            for req in moved {
-                let id = req.id;
-                let accepted = self.replicas[thief].coord.submit(req);
-                debug_assert!(accepted, "idle thief must accept within its window");
-                if !accepted {
-                    continue;
+            for (v, v_queued) in victims {
+                let take = v_queued.div_ceil(2).min(capacity);
+                let speed_v = self.replicas[v].speed.max(1e-9);
+                let speed_t = self.replicas[thief].speed.max(1e-9);
+                // running tallies so each candidate is judged against the
+                // backlog as it would stand after the moves chosen so far.
+                // The benefit is the completion-time delta: the queue *and
+                // own service* it would pay on the victim, minus the queue
+                // it joins plus its own (speed-adjusted) service on the
+                // thief — so shipping work to a much slower replica is
+                // charged for the slower execution, not just the transfer.
+                let mut backlog_v = self.backlog[v];
+                let mut backlog_t = self.backlog[thief];
+                let meta = self.replicas[v].coord.queued_meta();
+                let mut chosen: Vec<RequestId> = Vec::with_capacity(take);
+                for &(id, input_len, _) in meta.iter().take(take) {
+                    let own = self.in_flight.get(&id).map(|f| f.cost).unwrap_or(0.0);
+                    let benefit = backlog_v / speed_v - (backlog_t + own) / speed_t;
+                    if transfer > 0.0 && benefit <= transfer * input_len as f64 {
+                        self.steal_rejected.insert(id);
+                        continue;
+                    }
+                    chosen.push(id);
+                    backlog_v = (backlog_v - own).max(0.0);
+                    backlog_t += own;
                 }
-                self.stolen += 1;
-                if let Some(entry) = self.in_flight.get_mut(&id) {
-                    let pcost = entry.1;
-                    self.backlog[entry.0] = (self.backlog[entry.0] - pcost).max(0.0);
-                    self.backlog[thief] += pcost;
-                    entry.0 = thief;
+                if chosen.is_empty() {
+                    continue; // nothing profitable here: try the next victim
                 }
+                let victim_now = self.replicas[v].coord.now();
+                let moved = self.replicas[v].coord.drain_ids(&chosen);
+                if moved.is_empty() {
+                    return;
+                }
+                self.replicas[thief].coord.advance_to(victim_now);
+                for req in moved {
+                    let id = req.id;
+                    let accepted = self.replicas[thief].coord.submit(req);
+                    debug_assert!(accepted, "idle thief must accept within its window");
+                    if !accepted {
+                        continue;
+                    }
+                    self.stolen += 1;
+                    if let Some(entry) = self.in_flight.get_mut(&id) {
+                        let (pcost, pvar) = (entry.cost, entry.var);
+                        let from = entry.replica;
+                        entry.replica = thief;
+                        self.backlog[from] = (self.backlog[from] - pcost).max(0.0);
+                        self.backlog_var[from] = (self.backlog_var[from] - pvar).max(0.0);
+                        self.backlog[thief] += pcost;
+                        self.backlog_var[thief] += pvar;
+                    }
+                }
+                // the thief is busy now; look for another idle replica
+                continue 'pass;
             }
+            // no victim offered a profitable steal. An idle thief's own
+            // backlog is ~0, so the verdict would be the same for every
+            // other idle replica of any speed: stop the pass.
+            return;
         }
     }
 
@@ -697,6 +1316,8 @@ impl EventCluster {
     /// forever. A no-progress step with live work means some request can
     /// never be scheduled (e.g. its prompt needs more KV blocks than the
     /// replica owns), which is a configuration error, not a transient.
+    /// A draining replica whose last live request just finished retires
+    /// here.
     fn check_progress(&mut self, i: usize) -> anyhow::Result<()> {
         if !self.step_replica(i)? {
             anyhow::bail!(
@@ -708,6 +1329,12 @@ impl EventCluster {
                     * self.replicas[i].coord.kv.block_tokens(),
                 self.replicas[i].coord.engine.max_batch(),
             );
+        }
+        if self.replicas[i].state == ReplicaState::Draining
+            && self.replicas[i].coord.is_idle()
+        {
+            let at = self.replicas[i].coord.now();
+            self.retire(i, at);
         }
         Ok(())
     }
@@ -726,7 +1353,8 @@ impl EventCluster {
         out
     }
 
-    /// Cluster-level report (aggregate + per-replica + lifecycle counters).
+    /// Cluster-level report (aggregate + per-replica + lifecycle counters +
+    /// scaling timeline).
     pub fn report(&self, warmup_fraction: f64) -> ClusterReport {
         let per_replica: Vec<RunReport> = self
             .replicas
@@ -734,7 +1362,9 @@ impl EventCluster {
             .map(|r| r.coord.report(warmup_fraction))
             .collect();
         // an outage still open at report time is charged up to the
-        // cluster-wide clock horizon
+        // cluster-wide clock horizon; a *retired* replica is simply gone —
+        // it must not count as "down" for the remainder of the run, and a
+        // replica added mid-run is charged only from its provisioning time
         let horizon = self
             .replicas
             .iter()
@@ -743,7 +1373,19 @@ impl EventCluster {
         let downtime: Vec<f64> = self
             .replicas
             .iter()
-            .map(|r| r.downtime + if r.up { 0.0 } else { (horizon - r.down_since).max(0.0) })
+            .map(|r| {
+                r.downtime
+                    + if r.state == ReplicaState::Down {
+                        (horizon - r.down_since).max(0.0)
+                    } else {
+                        0.0
+                    }
+            })
+            .collect();
+        let replica_seconds: Vec<f64> = self
+            .replicas
+            .iter()
+            .map(|r| r.replica_seconds(horizon))
             .collect();
         ClusterReport::new(
             self.router.name().to_string(),
@@ -751,8 +1393,12 @@ impl EventCluster {
             crate::metrics::ClusterCounters {
                 routed: self.routed.clone(),
                 re_routed: self.re_routed,
+                drained: self.drained,
                 stolen: self.stolen,
+                steals_skipped: self.steals_skipped(),
                 downtime,
+                replica_seconds,
+                scaling_events: self.scaling_events.clone(),
             },
             &self.merged_outcomes(),
             warmup_fraction,
@@ -956,6 +1602,7 @@ mod tests {
             speed,
             max_batch: 8,
             predicted_backlog: backlog,
+            predicted_backlog_var: 0.0,
         }
     }
 
@@ -1007,8 +1654,25 @@ mod tests {
     #[test]
     fn make_router_builds_all_kinds() {
         for kind in RouterKind::ALL {
-            assert_eq!(make_router(kind).kind(), kind);
+            assert_eq!(make_router(kind, 0.9).kind(), kind);
         }
+    }
+
+    #[test]
+    fn quantile_router_avoids_heavy_tailed_backlogs() {
+        // equal mean backlogs, very different tails: the mean-based router
+        // ties to the lowest index, the quantile router steers to the
+        // narrow one
+        let mut views = vec![view(0, 3, 50, 400.0, 1.0), view(1, 3, 50, 400.0, 1.0)];
+        views[0].predicted_backlog_var = 250_000.0; // sd 500
+        views[1].predicted_backlog_var = 100.0; // sd 10
+        let r = any_req();
+        assert_eq!(CostAwareRouter.route(&r, 1.0, &views), 0);
+        let mut q = QuantileCostRouter::new(0.9);
+        assert_eq!(q.route(&r, 1.0, &views), 1);
+        // at q=0.5 (z=0) it degrades to exactly the mean router's choice
+        let mut q50 = QuantileCostRouter::new(0.5);
+        assert_eq!(q50.route(&r, 1.0, &views), 0);
     }
 
     #[test]
@@ -1135,7 +1799,7 @@ mod tests {
         let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
         let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
         let err = cluster.run(workload.requests).unwrap_err();
-        assert!(err.to_string().contains("all"), "got: {err}");
+        assert!(err.to_string().contains("routable"), "got: {err}");
     }
 
     #[test]

@@ -260,18 +260,25 @@ pub enum RouterKind {
     LeastLoaded,
     /// Lowest KV-block occupancy fraction.
     LeastKv,
-    /// Smallest predicted outstanding cost, using the shared predictor's
-    /// length distribution and the configured cost model, normalized by
-    /// replica speed.
+    /// Smallest predicted outstanding cost, using the *mean* of the shared
+    /// predictor's length distribution under the configured cost model,
+    /// normalized by replica speed.
     CostAware,
+    /// Like `CostAware` but on a configurable *quantile*
+    /// ([`ClusterConfig::router_quantile`]) of each replica's outstanding
+    /// predicted-cost distribution instead of its mean — the
+    /// distribution-aware router: replicas holding heavy-tailed work repel
+    /// traffic even when their mean backlog looks ordinary.
+    QuantileCost,
 }
 
 impl RouterKind {
-    pub const ALL: [RouterKind; 4] = [
+    pub const ALL: [RouterKind; 5] = [
         RouterKind::RoundRobin,
         RouterKind::LeastLoaded,
         RouterKind::LeastKv,
         RouterKind::CostAware,
+        RouterKind::QuantileCost,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -280,6 +287,7 @@ impl RouterKind {
             RouterKind::LeastLoaded => "least-loaded",
             RouterKind::LeastKv => "least-kv",
             RouterKind::CostAware => "cost-aware",
+            RouterKind::QuantileCost => "quantile-cost",
         }
     }
 
@@ -304,9 +312,12 @@ pub struct FailureEvent {
 
 impl FailureEvent {
     /// Time bounds shared by every surface that accepts outages (grammar
-    /// parser, JSON config, and the cluster's event expansion).
+    /// parser, JSON config, and the cluster's event expansion). NaN is
+    /// rejected explicitly — it slips through ordered comparisons and would
+    /// panic later inside the event-stream sort.
     pub fn validate(&self) -> Result<(), String> {
-        if self.at < 0.0 || self.duration <= 0.0 {
+        let bad_time = self.at.is_nan() || self.duration.is_nan();
+        if bad_time || self.at < 0.0 || self.duration <= 0.0 {
             return Err(format!(
                 "failure event for replica {}: need at >= 0 and duration > 0",
                 self.replica
@@ -348,18 +359,231 @@ impl FailureEvent {
     }
 }
 
+/// Which autoscaling policy drives elastic replica scale-out/in
+/// (see [`crate::autoscale`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AutoscaleKind {
+    /// No autoscaling: the replica count is fixed at t=0 (the default).
+    Off,
+    /// Scripted add/remove at fixed times (the deterministic test anchor).
+    Step,
+    /// Scale on backlog / KV-occupancy watermarks with cooldown +
+    /// hysteresis.
+    Reactive,
+    /// Provision for a configurable quantile of the forecast outstanding
+    /// service-cost distribution (summed per-request predictor
+    /// distributions through the cost model).
+    UncertaintyAware,
+}
+
+impl AutoscaleKind {
+    pub const ALL: [AutoscaleKind; 4] = [
+        AutoscaleKind::Off,
+        AutoscaleKind::Step,
+        AutoscaleKind::Reactive,
+        AutoscaleKind::UncertaintyAware,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AutoscaleKind::Off => "off",
+            AutoscaleKind::Step => "step",
+            AutoscaleKind::Reactive => "reactive",
+            AutoscaleKind::UncertaintyAware => "uncertainty",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<AutoscaleKind> {
+        AutoscaleKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// One scripted autoscaling step: at virtual time `at`, set the desired
+/// replica count to `target` (the cluster adds or drains replicas to meet
+/// it, subject to the provisioning delay).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleStep {
+    /// Virtual time of the step (seconds).
+    pub at: f64,
+    /// Desired replica count from this time on.
+    pub target: usize,
+}
+
+impl ScaleStep {
+    /// NaN is rejected explicitly — it slips through ordered comparisons
+    /// and would panic later inside the step-schedule sort.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.at.is_nan() || self.at < 0.0 || self.target == 0 {
+            return Err(format!(
+                "scale step at {}: need at >= 0 and target >= 1",
+                self.at
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse a comma-separated `time@target` list — the CLI's
+    /// `--scale-steps` grammar, e.g. `10@6,40@2` (at t=10 s grow the fleet
+    /// to 6 replicas, at t=40 s shrink it to 2). Shared by the `sagesched`
+    /// binary and the examples so the grammar cannot diverge.
+    pub fn parse_list(s: &str) -> Result<Vec<ScaleStep>, String> {
+        s.split(',')
+            .map(|item| {
+                let item = item.trim();
+                let shape = || format!("scale step {item:?}: expected time@target");
+                let (at, target) = item.split_once('@').ok_or_else(shape)?;
+                let ev = ScaleStep {
+                    at: at
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("scale step {item:?}: bad time"))?,
+                    target: target
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("scale step {item:?}: bad target"))?,
+                };
+                ev.validate().map_err(|e| format!("{e} (in {item:?})"))?;
+                Ok(ev)
+            })
+            .collect()
+    }
+}
+
+/// Elastic autoscaling shape for the event-driven cluster (see
+/// [`crate::autoscale`] for the policy semantics).
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    /// Which policy decides the desired replica count.
+    pub kind: AutoscaleKind,
+    /// Scripted steps (required non-empty for [`AutoscaleKind::Step`]).
+    pub steps: Vec<ScaleStep>,
+    /// Floor on the desired replica count (reactive / uncertainty).
+    pub min_replicas: usize,
+    /// Cap on the desired replica count (reactive / uncertainty) — the
+    /// "peak provisioning" a static fleet would be compared at.
+    pub max_replicas: usize,
+    /// Seconds between a scale-out decision and the new replica joining
+    /// the routable set (cold-start / provisioning time).
+    pub provision_delay: f64,
+    /// Minimum seconds between two scaling actions (reactive /
+    /// uncertainty; scripted steps ignore it).
+    pub cooldown: f64,
+    /// Seconds between autoscaler decision points.
+    pub interval: f64,
+    /// Reactive: scale out when live requests per active replica exceed
+    /// this watermark.
+    pub high_watermark: f64,
+    /// Reactive: scale in when live requests per active replica fall below
+    /// this watermark (must be < `high_watermark`: the gap is the
+    /// hysteresis band).
+    pub low_watermark: f64,
+    /// Reactive: scale out when mean KV occupancy exceeds this fraction.
+    pub kv_high_watermark: f64,
+    /// Reactive: scale in only while mean KV occupancy is below this.
+    pub kv_low_watermark: f64,
+    /// Uncertainty-aware: provision for this quantile of the forecast
+    /// outstanding service-cost distribution (e.g. 0.9 = p90).
+    pub quantile: f64,
+    /// Uncertainty-aware: outstanding service cost (cost-model units) one
+    /// replica is provisioned to carry.
+    pub work_per_replica: f64,
+    /// Pre-warm a freshly provisioned replica's local predictor with the
+    /// offline corpus (`history_prewarm`); false models a fully cold start.
+    pub prewarm: bool,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            kind: AutoscaleKind::Off,
+            steps: Vec::new(),
+            min_replicas: 1,
+            max_replicas: 16,
+            provision_delay: 2.0,
+            cooldown: 5.0,
+            interval: 1.0,
+            high_watermark: 8.0,
+            low_watermark: 2.0,
+            kv_high_watermark: 0.85,
+            kv_low_watermark: 0.30,
+            quantile: 0.9,
+            work_per_replica: 1.0e6,
+            prewarm: false,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Parameter bounds shared by every config surface (JSON and CLI).
+    pub fn validate(&self) -> Result<(), String> {
+        let numeric = [
+            self.provision_delay,
+            self.cooldown,
+            self.interval,
+            self.high_watermark,
+            self.low_watermark,
+            self.kv_high_watermark,
+            self.kv_low_watermark,
+            self.quantile,
+            self.work_per_replica,
+        ];
+        if numeric.iter().any(|v| v.is_nan()) {
+            return Err("autoscale: NaN parameter".to_string());
+        }
+        if self.kind == AutoscaleKind::Step && self.steps.is_empty() {
+            return Err("autoscale: step schedule needs at least one \
+                        time@target step"
+                .to_string());
+        }
+        for s in &self.steps {
+            s.validate().map_err(|e| format!("autoscale: {e}"))?;
+        }
+        if self.min_replicas == 0 || self.max_replicas < self.min_replicas {
+            return Err("autoscale: need 1 <= min_replicas <= max_replicas"
+                .to_string());
+        }
+        if self.provision_delay < 0.0 || self.cooldown < 0.0 || self.interval <= 0.0 {
+            return Err("autoscale: provision_delay/cooldown >= 0 and \
+                        interval > 0 required"
+                .to_string());
+        }
+        if self.low_watermark < 0.0 || self.high_watermark <= self.low_watermark {
+            return Err("autoscale: need 0 <= low_watermark < high_watermark"
+                .to_string());
+        }
+        if !(0.0..=1.0).contains(&self.kv_low_watermark)
+            || !(0.0..=1.0).contains(&self.kv_high_watermark)
+            || self.kv_high_watermark <= self.kv_low_watermark
+        {
+            return Err("autoscale: KV watermarks must satisfy \
+                        0 <= low < high <= 1"
+                .to_string());
+        }
+        if !(0.0 < self.quantile && self.quantile < 1.0) || self.work_per_replica <= 0.0 {
+            return Err("autoscale: quantile in (0,1) and work_per_replica > 0 \
+                        required"
+                .to_string());
+        }
+        Ok(())
+    }
+}
+
 /// Multi-replica cluster shape for the event-driven cluster simulation.
 ///
 /// The heterogeneity vectors are *cycled* over replica indices (replica `i`
 /// uses entry `i % len`), so `speeds: [1.0, 0.5]` over 4 replicas models a
 /// fleet of two fast and two slow GPUs. Empty vectors mean "use the base
-/// [`EngineProfile`] unchanged".
+/// [`EngineProfile`] unchanged". Replicas added by autoscaling continue the
+/// cycle at their (new) index.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
-    /// Number of serving replicas (each a full coordinator + sim engine).
+    /// Number of serving replicas at t=0 (each a full coordinator + sim
+    /// engine; autoscaling may add or retire replicas mid-run).
     pub replicas: usize,
     /// Routing policy at the cluster front door.
     pub router: RouterKind,
+    /// Quantile the `quantile-cost` router provisions against (e.g. 0.9).
+    pub router_quantile: f64,
     /// Per-replica speed multipliers (2.0 = twice as fast; cycled).
     pub speeds: Vec<f64>,
     /// Per-replica max decode batch overrides (cycled).
@@ -368,6 +592,13 @@ pub struct ClusterConfig {
     pub kv_capacities: Vec<usize>,
     /// Scheduled replica outages (failure + recovery; may be empty).
     pub failures: Vec<FailureEvent>,
+    /// Elastic autoscaling policy (off by default).
+    pub autoscale: AutoscaleConfig,
+    /// Work stealing: cost-model units of transfer penalty per prompt
+    /// token. Each steal must save more speed-normalized backlog wait than
+    /// it costs to ship the prompt; 0 disables the gate (free migration,
+    /// the pre-autoscale behavior).
+    pub steal_transfer_per_token: f64,
 }
 
 impl Default for ClusterConfig {
@@ -375,10 +606,13 @@ impl Default for ClusterConfig {
         ClusterConfig {
             replicas: 4,
             router: RouterKind::LeastLoaded,
+            router_quantile: 0.9,
             speeds: Vec::new(),
             batch_sizes: Vec::new(),
             kv_capacities: Vec::new(),
             failures: Vec::new(),
+            autoscale: AutoscaleConfig::default(),
+            steal_transfer_per_token: 2.0,
         }
     }
 }
@@ -705,6 +939,17 @@ impl ExperimentConfig {
                 cfg.cluster.router = RouterKind::from_name(r)
                     .ok_or_else(|| format!("unknown router {r}"))?;
             }
+            cfg.cluster.router_quantile =
+                c.f64_or("router_quantile", cfg.cluster.router_quantile);
+            if !(0.0 < cfg.cluster.router_quantile && cfg.cluster.router_quantile < 1.0) {
+                return Err("cluster.router_quantile must be in (0,1)".to_string());
+            }
+            let default_steal = cfg.cluster.steal_transfer_per_token;
+            cfg.cluster.steal_transfer_per_token =
+                c.f64_or("steal_transfer_per_token", default_steal);
+            if cfg.cluster.steal_transfer_per_token < 0.0 {
+                return Err("cluster.steal_transfer_per_token must be >= 0".to_string());
+            }
             let f64_list = |key: &str| -> Result<Vec<f64>, String> {
                 match c.get(key).and_then(Json::as_arr) {
                     None => Ok(Vec::new()),
@@ -757,6 +1002,42 @@ impl ExperimentConfig {
                     failures.push(ev);
                 }
                 cfg.cluster.failures = failures;
+            }
+            if let Some(a) = c.get("autoscale") {
+                let asc = &mut cfg.cluster.autoscale;
+                if let Some(kind) = a.get("kind").and_then(Json::as_str) {
+                    asc.kind = AutoscaleKind::from_name(kind)
+                        .ok_or_else(|| format!("unknown autoscale kind {kind}"))?;
+                }
+                if let Some(steps) = a.get("steps").and_then(Json::as_arr) {
+                    let mut parsed = Vec::new();
+                    for s in steps {
+                        let at = s.f64_or("at", -1.0);
+                        let target = s
+                            .get("target")
+                            .and_then(Json::as_u64)
+                            .ok_or_else(|| {
+                                "cluster.autoscale.steps: missing target".to_string()
+                            })? as usize;
+                        parsed.push(ScaleStep { at, target });
+                    }
+                    asc.steps = parsed;
+                }
+                asc.min_replicas = a.f64_or("min_replicas", asc.min_replicas as f64) as usize;
+                asc.max_replicas = a.f64_or("max_replicas", asc.max_replicas as f64) as usize;
+                asc.provision_delay = a.f64_or("provision_delay", asc.provision_delay);
+                asc.cooldown = a.f64_or("cooldown", asc.cooldown);
+                asc.interval = a.f64_or("interval", asc.interval);
+                asc.high_watermark = a.f64_or("high_watermark", asc.high_watermark);
+                asc.low_watermark = a.f64_or("low_watermark", asc.low_watermark);
+                asc.kv_high_watermark = a.f64_or("kv_high_watermark", asc.kv_high_watermark);
+                asc.kv_low_watermark = a.f64_or("kv_low_watermark", asc.kv_low_watermark);
+                asc.quantile = a.f64_or("quantile", asc.quantile);
+                asc.work_per_replica = a.f64_or("work_per_replica", asc.work_per_replica);
+                if let Some(p) = a.get("prewarm").and_then(Json::as_bool) {
+                    asc.prewarm = p;
+                }
+                asc.validate().map_err(|e| format!("cluster.{e}"))?;
             }
         }
         Ok(cfg)
@@ -901,7 +1182,7 @@ mod tests {
                 FailureEvent { replica: 0, at: 60.0, duration: 5.0 },
             ]
         );
-        for bad in ["1@30", "x@1+1", "1@x+1", "1@1+x", "1@-1+5", "1@5+0"] {
+        for bad in ["1@30", "x@1+1", "1@x+1", "1@1+x", "1@-1+5", "1@5+0", "1@NaN+5"] {
             assert!(FailureEvent::parse_list(bad).is_err(), "accepted {bad:?}");
         }
     }
@@ -924,6 +1205,95 @@ mod tests {
         assert!(ExperimentConfig::from_json(&bad).is_err());
         let bad = Json::parse(r#"{"cluster":{"failures":[{"at":30}]}}"#).unwrap();
         assert!(ExperimentConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn autoscale_names_roundtrip() {
+        for k in AutoscaleKind::ALL {
+            assert_eq!(AutoscaleKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(AutoscaleKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn scale_step_grammar_roundtrips_and_rejects_garbage() {
+        let steps = ScaleStep::parse_list("10@6, 40@2").unwrap();
+        assert_eq!(
+            steps,
+            vec![
+                ScaleStep { at: 10.0, target: 6 },
+                ScaleStep { at: 40.0, target: 2 },
+            ]
+        );
+        for bad in ["10", "x@2", "10@x", "-1@2", "10@0", "NaN@3"] {
+            assert!(ScaleStep::parse_list(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn autoscale_config_validation() {
+        let mut a = AutoscaleConfig::default();
+        assert!(a.validate().is_ok());
+        a.kind = AutoscaleKind::Step;
+        assert!(a.validate().is_err(), "step schedule without steps");
+        a.steps = vec![ScaleStep { at: 5.0, target: 3 }];
+        assert!(a.validate().is_ok());
+        a.min_replicas = 8;
+        a.max_replicas = 4;
+        assert!(a.validate().is_err(), "min > max");
+        a = AutoscaleConfig::default();
+        a.quantile = 1.5;
+        assert!(a.validate().is_err(), "quantile out of range");
+        a = AutoscaleConfig::default();
+        a.low_watermark = 9.0;
+        assert!(a.validate().is_err(), "low watermark above high");
+    }
+
+    #[test]
+    fn from_json_parses_autoscale_block() {
+        let j = Json::parse(
+            r#"{"cluster":{"autoscale":{"kind":"uncertainty","min_replicas":2,
+                "max_replicas":6,"quantile":0.95,"work_per_replica":500000,
+                "provision_delay":1.5,"prewarm":true},
+                "router":"quantile-cost","router_quantile":0.8,
+                "steal_transfer_per_token":5}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.cluster.autoscale.kind, AutoscaleKind::UncertaintyAware);
+        assert_eq!(c.cluster.autoscale.min_replicas, 2);
+        assert_eq!(c.cluster.autoscale.max_replicas, 6);
+        assert_eq!(c.cluster.autoscale.quantile, 0.95);
+        assert_eq!(c.cluster.autoscale.work_per_replica, 500_000.0);
+        assert_eq!(c.cluster.autoscale.provision_delay, 1.5);
+        assert!(c.cluster.autoscale.prewarm);
+        assert_eq!(c.cluster.router, RouterKind::QuantileCost);
+        assert_eq!(c.cluster.router_quantile, 0.8);
+        assert_eq!(c.cluster.steal_transfer_per_token, 5.0);
+        let j = Json::parse(
+            r#"{"cluster":{"autoscale":{"kind":"step",
+                "steps":[{"at":10,"target":6},{"at":40,"target":2}]}}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.cluster.autoscale.kind, AutoscaleKind::Step);
+        assert_eq!(
+            c.cluster.autoscale.steps,
+            vec![
+                ScaleStep { at: 10.0, target: 6 },
+                ScaleStep { at: 40.0, target: 2 },
+            ]
+        );
+        for bad in [
+            r#"{"cluster":{"autoscale":{"kind":"zzz"}}}"#,
+            r#"{"cluster":{"autoscale":{"kind":"step"}}}"#,
+            r#"{"cluster":{"autoscale":{"quantile":2.0}}}"#,
+            r#"{"cluster":{"router_quantile":1.5}}"#,
+            r#"{"cluster":{"steal_transfer_per_token":-1}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

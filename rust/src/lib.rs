@@ -27,6 +27,7 @@
 //! [`util::stats`], [`util::cli`], and a hand-rolled bench harness under
 //! `rust/benches/`.
 
+pub mod autoscale;
 pub mod cluster;
 pub mod config;
 pub mod core;
@@ -48,11 +49,12 @@ pub mod workload;
 
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
+    pub use crate::autoscale::{AutoscalePolicy, ScaleAction, ScalingEvent};
     pub use crate::cluster::{run_router_experiment, EventCluster, Router};
     pub use crate::config::{
-        ArrivalConfig, ArrivalKind, ClusterConfig, CostModelKind, DatasetKind,
-        EngineProfile, ExperimentConfig, FailureEvent, PolicyKind, PredictorKind,
-        RouterKind, WorkloadConfig,
+        ArrivalConfig, ArrivalKind, AutoscaleConfig, AutoscaleKind, ClusterConfig,
+        CostModelKind, DatasetKind, EngineProfile, ExperimentConfig, FailureEvent,
+        PolicyKind, PredictorKind, RouterKind, ScaleStep, WorkloadConfig,
     };
     pub use crate::workload::arrivals::ArrivalProcess;
     pub use crate::core::{Request, RequestId, RequestOutcome};

@@ -16,8 +16,8 @@ use anyhow::{bail, Context, Result};
 
 use sagesched::cluster::{run_router_experiment, ClusterSim};
 use sagesched::config::{
-    ArrivalKind, CostModelKind, EngineProfile, ExperimentConfig, FailureEvent,
-    PolicyKind, PredictorKind, RouterKind,
+    ArrivalKind, AutoscaleKind, CostModelKind, EngineProfile, ExperimentConfig,
+    FailureEvent, PolicyKind, PredictorKind, RouterKind, ScaleStep,
 };
 use sagesched::metrics::ClusterReport;
 use sagesched::engine::RealEngine;
@@ -75,6 +75,43 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.cluster.replicas = args.usize_or("replicas", cfg.cluster.replicas);
     if let Some(r) = args.get("router") {
         cfg.cluster.router = RouterKind::from_name(r).context("unknown --router")?;
+    }
+    cfg.cluster.router_quantile = args.f64_or("router-quantile", cfg.cluster.router_quantile);
+    if !(0.0 < cfg.cluster.router_quantile && cfg.cluster.router_quantile < 1.0) {
+        bail!("--router-quantile must be in (0,1)");
+    }
+    cfg.cluster.steal_transfer_per_token =
+        args.f64_or("steal-transfer", cfg.cluster.steal_transfer_per_token);
+    if cfg.cluster.steal_transfer_per_token < 0.0 {
+        bail!("--steal-transfer must be >= 0");
+    }
+    if let Some(a) = args.get("autoscale") {
+        cfg.cluster.autoscale.kind =
+            AutoscaleKind::from_name(a).context("unknown --autoscale")?;
+    }
+    if let Some(s) = args.get("scale-steps") {
+        cfg.cluster.autoscale.steps =
+            ScaleStep::parse_list(s).map_err(|e| anyhow::anyhow!("--scale-steps: {e}"))?;
+    }
+    {
+        let asc = &mut cfg.cluster.autoscale;
+        asc.min_replicas = args.usize_or("scale-min", asc.min_replicas);
+        asc.max_replicas = args.usize_or("scale-max", asc.max_replicas);
+        asc.provision_delay = args.f64_or("scale-delay", asc.provision_delay);
+        asc.cooldown = args.f64_or("scale-cooldown", asc.cooldown);
+        asc.interval = args.f64_or("scale-interval", asc.interval);
+        asc.high_watermark = args.f64_or("scale-high", asc.high_watermark);
+        asc.low_watermark = args.f64_or("scale-low", asc.low_watermark);
+        asc.kv_high_watermark = args.f64_or("scale-kv-high", asc.kv_high_watermark);
+        asc.kv_low_watermark = args.f64_or("scale-kv-low", asc.kv_low_watermark);
+        asc.quantile = args.f64_or("scale-quantile", asc.quantile);
+        asc.work_per_replica = args.f64_or("scale-work", asc.work_per_replica);
+        if args.has("scale-prewarm") {
+            asc.prewarm = true;
+        }
+        if let Err(e) = asc.validate() {
+            bail!("{e} (--autoscale/--scale-* flags)");
+        }
     }
     if let Some(s) = args.get("speeds") {
         cfg.cluster.speeds = parse_f64_list("speeds", s)?;
@@ -311,6 +348,20 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if !cfg.cluster.speeds.is_empty() {
         println!("# replica speeds (cycled): {:?}", cfg.cluster.speeds);
     }
+    if cfg.cluster.autoscale.kind != AutoscaleKind::Off {
+        let asc = &cfg.cluster.autoscale;
+        println!(
+            "# autoscale: {} (min {} / max {}, provision {:.1}s, interval {:.1}s)",
+            asc.kind.name(),
+            asc.min_replicas,
+            asc.max_replicas,
+            asc.provision_delay,
+            asc.interval
+        );
+        for s in &asc.steps {
+            println!("# scale step: t={:.1}s -> {} replicas", s.at, s.target);
+        }
+    }
     if !cfg.cluster.failures.is_empty() {
         for f in &cfg.cluster.failures {
             println!(
@@ -331,15 +382,28 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     for r in &reports {
         println!(
             "# {}: goodput {:.1}% ({} completed, {} rejected, {} timed out, \
-             {} re-routed, {} stolen)",
+             {} re-routed, {} drained, {} stolen, {} steals skipped) — \
+             {:.0} replica-s, {:.3} goodput/replica-s",
             r.router,
             r.aggregate.goodput() * 100.0,
             r.aggregate.completed,
             r.aggregate.rejected,
             r.aggregate.aborted,
             r.re_routed,
-            r.stolen
+            r.drained,
+            r.stolen,
+            r.steals_skipped,
+            r.total_replica_seconds(),
+            r.goodput_per_replica_second
         );
+    }
+    if let Some(r) = reports.iter().find(|r| !r.scaling_events.is_empty()) {
+        println!("\n## scaling timeline ({})", r.router);
+        println!("| t (s) | replica | event |");
+        println!("|---|---|---|");
+        for e in &r.scaling_events {
+            println!("| {:.2} | {} | {} |", e.at, e.replica, e.action.name());
+        }
     }
     if args.has("json") {
         for r in &reports {
@@ -401,10 +465,21 @@ const USAGE: &str = "usage: sagesched <run|sweep|smoke|serve|cluster> [flags]
   smoke   load + execute the HLO artifacts    (--artifacts artifacts)
   serve   HTTP server over the real model     (--addr 127.0.0.1:8080)
   cluster event-driven multi-replica sim, one row per router
-          (--replicas 4 --routers all|round-robin,least-loaded,least-kv,cost-aware
+          (--replicas 4 --routers all|round-robin,least-loaded,least-kv,
+             cost-aware,quantile-cost   --router-quantile 0.9
            --speeds 1.0,0.5 --batch-sizes 256,128 --kv-capacities 10000,6000
            --fail 1@30+10,0@60+5   replica outages (replica@start+duration)
+           --steal-transfer 2      work-steal transfer penalty (cost/token)
            --per-replica --json)
+          autoscaling (elastic replica scale-out/in mid-run):
+          --autoscale off|step|reactive|uncertainty
+          --scale-steps 10@6,40@2       scripted time@target steps
+          --scale-min 1 --scale-max 16  target clamp
+          --scale-delay 2 --scale-cooldown 5 --scale-interval 1
+          --scale-high 8 --scale-low 2  reactive live/replica watermarks
+          --scale-kv-high 0.85 --scale-kv-low 0.3 reactive KV watermarks
+          --scale-quantile 0.9 --scale-work 1e6   uncertainty-aware
+          --scale-prewarm               prewarm new replicas' predictors
   cluster --overhead   fig12 shared-service overhead sweep (--nodes 1,4,16,64)
   gen-trace record a workload trace           (--out trace.jsonl --n 1000)
   arrival-process flags (run / sweep / cluster / gen-trace):

@@ -5,6 +5,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::autoscale::ScalingEvent;
 use crate::config::DatasetKind;
 use crate::core::RequestOutcome;
 use crate::util::json::Json;
@@ -179,10 +180,24 @@ pub struct ClusterReport {
     pub routed: Vec<u64>,
     /// Requests re-dispatched through the router after a replica failure.
     pub re_routed: u64,
+    /// Queued requests re-routed off scale-in victims at drain time.
+    pub drained: u64,
     /// Queued requests migrated to an idle replica by work stealing.
     pub stolen: u64,
+    /// Steal candidates rejected by the transfer-cost benefit gate.
+    pub steals_skipped: u64,
     /// Per-replica accumulated downtime (seconds; index = replica id).
     pub downtime: Vec<f64>,
+    /// Per-replica provisioned lifetime minus downtime (seconds) — what
+    /// each replica is "billed" for: replicas added or retired mid-run by
+    /// the autoscaler are charged only for their own span.
+    pub replica_seconds: Vec<f64>,
+    /// Replica lifecycle timeline (provision/up/drain/retire/fail/recover).
+    pub scaling_events: Vec<ScalingEvent>,
+    /// Successfully completed requests per total replica-second — the
+    /// provisioning-efficiency headline: a static fleet pays replica-seconds
+    /// through every trough, an elastic one only for capacity it asked for.
+    pub goodput_per_replica_second: f64,
     /// Completion imbalance: max replica completions / mean replica
     /// completions (1.0 = perfectly balanced; 0.0 when nothing completed).
     pub imbalance: f64,
@@ -196,10 +211,18 @@ pub struct ClusterCounters {
     pub routed: Vec<u64>,
     /// Requests re-dispatched after replica failures.
     pub re_routed: u64,
+    /// Requests re-routed off scale-in victims at drain time.
+    pub drained: u64,
     /// Requests migrated by idle-replica work stealing.
     pub stolen: u64,
+    /// Steal candidates rejected by the transfer-cost benefit gate.
+    pub steals_skipped: u64,
     /// Per-replica accumulated downtime (seconds).
     pub downtime: Vec<f64>,
+    /// Per-replica provisioned lifetime minus downtime (seconds).
+    pub replica_seconds: Vec<f64>,
+    /// Replica lifecycle timeline.
+    pub scaling_events: Vec<ScalingEvent>,
 }
 
 impl ClusterReport {
@@ -252,6 +275,12 @@ impl ClusterReport {
         } else {
             0.0
         };
+        let total_replica_seconds: f64 = counters.replica_seconds.iter().sum();
+        let goodput_per_replica_second = if total_replica_seconds > 0.0 {
+            aggregate.completed as f64 / total_replica_seconds
+        } else {
+            0.0
+        };
         ClusterReport {
             router,
             replicas: per_replica.len(),
@@ -259,21 +288,31 @@ impl ClusterReport {
             per_replica,
             routed: counters.routed,
             re_routed: counters.re_routed,
+            drained: counters.drained,
             stolen: counters.stolen,
+            steals_skipped: counters.steals_skipped,
             downtime: counters.downtime,
+            replica_seconds: counters.replica_seconds,
+            scaling_events: counters.scaling_events,
+            goodput_per_replica_second,
             imbalance,
         }
     }
 
+    /// Sum of per-replica billed seconds.
+    pub fn total_replica_seconds(&self) -> f64 {
+        self.replica_seconds.iter().sum()
+    }
+
     pub fn markdown_header() -> String {
-        "| router | replicas | TTLT mean | TTLT p90 | TTFT mean | TTFT p90 | thru (r/s) | imbalance | re-routed | stolen | rejected | aborted | goodput |\n\
-         |---|---|---|---|---|---|---|---|---|---|---|---|---|"
+        "| router | replicas | TTLT mean | TTLT p90 | TTFT mean | TTFT p90 | thru (r/s) | imbalance | re-routed | stolen | rejected | aborted | goodput | rep-s | gp/rep-s |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"
             .to_string()
     }
 
     pub fn markdown_row(&self) -> String {
         format!(
-            "| {} | {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.2} | {:.2} | {} | {} | {} | {} | {:.3} |",
+            "| {} | {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.2} | {:.2} | {} | {} | {} | {} | {:.3} | {:.0} | {:.3} |",
             self.router,
             self.replicas,
             self.aggregate.ttlt.mean,
@@ -287,6 +326,8 @@ impl ClusterReport {
             self.aggregate.rejected,
             self.aggregate.aborted,
             self.aggregate.goodput(),
+            self.total_replica_seconds(),
+            self.goodput_per_replica_second,
         )
     }
 
@@ -304,10 +345,30 @@ impl ClusterReport {
                 Json::arr(self.routed.iter().map(|&n| Json::num(n as f64))),
             ),
             ("re_routed", Json::num(self.re_routed as f64)),
+            ("drained", Json::num(self.drained as f64)),
             ("stolen", Json::num(self.stolen as f64)),
+            ("steals_skipped", Json::num(self.steals_skipped as f64)),
             (
                 "downtime",
                 Json::arr(self.downtime.iter().map(|&d| Json::num(d))),
+            ),
+            (
+                "replica_seconds",
+                Json::arr(self.replica_seconds.iter().map(|&s| Json::num(s))),
+            ),
+            (
+                "scaling_events",
+                Json::arr(self.scaling_events.iter().map(|e| {
+                    Json::obj(vec![
+                        ("at", Json::num(e.at)),
+                        ("replica", Json::num(e.replica as f64)),
+                        ("action", Json::str(e.action.name())),
+                    ])
+                })),
+            ),
+            (
+                "goodput_per_replica_second",
+                Json::num(self.goodput_per_replica_second),
             ),
             ("imbalance", Json::num(self.imbalance)),
         ])
@@ -385,8 +446,16 @@ mod tests {
         let counters = ClusterCounters {
             routed: vec![3, 1],
             re_routed: 2,
+            drained: 3,
             stolen: 1,
+            steals_skipped: 2,
             downtime: vec![0.0, 4.5],
+            replica_seconds: vec![10.0, 6.0],
+            scaling_events: vec![ScalingEvent {
+                at: 2.0,
+                replica: 1,
+                action: crate::autoscale::ScaleAction::Drain,
+            }],
         };
         let c = ClusterReport::new("least-loaded".into(), vec![r0, r1], counters, &merged, 0.0);
         assert_eq!(c.replicas, 2);
@@ -399,7 +468,12 @@ mod tests {
         assert_eq!(c.aggregate.aborted, 1);
         assert!((c.aggregate.goodput() - 4.0 / 7.0).abs() < 1e-12);
         assert_eq!(c.re_routed, 2);
+        assert_eq!(c.drained, 3);
         assert_eq!(c.stolen, 1);
+        assert_eq!(c.steals_skipped, 2);
+        // 4 completions over 16 billed replica-seconds
+        assert!((c.total_replica_seconds() - 16.0).abs() < 1e-12);
+        assert!((c.goodput_per_replica_second - 0.25).abs() < 1e-12);
         assert!(c.markdown_row().starts_with("| least-loaded | 2 |"));
         assert_eq!(
             c.markdown_row().matches('|').count(),
@@ -414,6 +488,13 @@ mod tests {
         assert_eq!(j.str_or("router", ""), "least-loaded");
         assert_eq!(j.f64_or("re_routed", -1.0), 2.0);
         assert_eq!(j.f64_or("stolen", -1.0), 1.0);
+        assert_eq!(j.f64_or("drained", -1.0), 3.0);
+        assert_eq!(j.f64_or("steals_skipped", -1.0), 2.0);
+        assert_eq!(j.f64_or("goodput_per_replica_second", -1.0), 0.25);
+        let evs = j.get("scaling_events").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].str_or("action", ""), "drain");
+        assert_eq!(evs[0].f64_or("replica", -1.0), 1.0);
         assert_eq!(
             j.get("aggregate").unwrap().f64_or("rejected", -1.0),
             2.0

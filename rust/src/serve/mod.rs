@@ -228,6 +228,49 @@ impl<E: Engine> Coordinator<E> {
         out
     }
 
+    /// (id, input_len, arrival) of every never-scheduled queued request,
+    /// newest arrivals first — the same order [`Coordinator::drain_queued`]
+    /// removes them. The cluster's transfer-cost-gated work stealing uses
+    /// this to evaluate each candidate's migration penalty *before*
+    /// draining anything.
+    pub fn queued_meta(&self) -> Vec<(crate::core::RequestId, u32, f64)> {
+        let mut v: Vec<&Live> = self
+            .live
+            .iter()
+            .filter(|l| l.phase == Phase::Queued && l.generated == 0)
+            .collect();
+        v.sort_by(|a, b| {
+            b.req
+                .arrival
+                .partial_cmp(&a.req.arrival)
+                .unwrap()
+                .then(b.req.id.cmp(&a.req.id))
+        });
+        v.into_iter()
+            .map(|l| (l.req.id, l.req.input_len, l.req.arrival))
+            .collect()
+    }
+
+    /// Remove and return the never-scheduled queued requests with these ids
+    /// (in the order given); ids that are unknown or already scheduled are
+    /// skipped. Like [`Coordinator::drain_queued`], the removed requests
+    /// hold no KV or engine state, so handing them to another replica needs
+    /// no state transfer.
+    pub fn drain_ids(&mut self, ids: &[crate::core::RequestId]) -> Vec<Request> {
+        let mut out = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let found = self.live.iter().position(|l| {
+                l.req.id == id && l.phase == Phase::Queued && l.generated == 0
+            });
+            if let Some(i) = found {
+                let l = self.live.swap_remove(i);
+                self.policy.forget(l.req.id);
+                out.push(l.req);
+            }
+        }
+        out
+    }
+
     /// Remove and return *all* live requests, releasing their KV, engine and
     /// policy state. Models a replica crash: generated prefixes are lost and
     /// the requests must be re-dispatched from scratch elsewhere (their
@@ -805,6 +848,34 @@ mod tests {
         // drained requests are fully forgotten: the rest still completes
         coord.run_workload(Vec::new()).unwrap();
         assert_eq!(coord.outcomes().len(), 4);
+    }
+
+    #[test]
+    fn queued_meta_and_drain_ids_agree_with_drain_queued_order() {
+        let cfg = small_cfg(PolicyKind::Fcfs);
+        let mut coord = build_sim_coordinator(&cfg);
+        let mut wl = cfg.workload.clone();
+        wl.n_requests = 5;
+        let reqs = WorkloadGen::new(wl, 9).generate().requests;
+        for (k, mut r) in reqs.into_iter().enumerate() {
+            r.arrival = k as f64;
+            coord.submit(r);
+        }
+        let meta = coord.queued_meta();
+        assert_eq!(meta.len(), 5);
+        // newest first, matching drain_queued's removal order
+        let arrivals: Vec<f64> = meta.iter().map(|m| m.2).collect();
+        assert_eq!(arrivals, vec![4.0, 3.0, 2.0, 1.0, 0.0]);
+        // drain two specific ids; unknown ids are skipped silently
+        let pick = [meta[1].0, meta[3].0, 999_999];
+        let moved = coord.drain_ids(&pick);
+        assert_eq!(moved.len(), 2);
+        assert_eq!(moved[0].id, pick[0]);
+        assert_eq!(moved[1].id, pick[1]);
+        assert_eq!(coord.live_count(), 3);
+        // the rest still completes (policy state fully forgotten)
+        coord.run_workload(Vec::new()).unwrap();
+        assert_eq!(coord.outcomes().len(), 3);
     }
 
     #[test]

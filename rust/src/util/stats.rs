@@ -51,6 +51,67 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Standard-normal quantile function Φ⁻¹(p) (Acklam's rational
+/// approximation, |relative error| < 1.15e-9). Used to turn "provision for
+/// the p-th quantile" into a z-score for normal-approximated sums of
+/// independent cost distributions. Panics outside (0, 1).
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "normal_quantile needs p in (0,1), got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+/// [`normal_quantile`] with the argument clamped into (0.001, 0.999).
+/// For constructors whose quantile is already validated by every config
+/// surface: a programmatically out-of-range value degrades to a
+/// near-extreme quantile instead of panicking mid-construction, before the
+/// graceful validation error could be produced.
+pub fn normal_quantile_clamped(p: f64) -> f64 {
+    normal_quantile(p.clamp(0.001, 0.999))
+}
+
 /// Arithmetic mean; 0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -121,6 +182,27 @@ mod tests {
         let v: Vec<f64> = (0..101).map(|i| i as f64).collect();
         assert!((percentile_sorted(&v, 0.90) - 90.0).abs() < 1e-9);
         assert!((percentile_sorted(&v, 0.99) - 99.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn normal_quantile_known_values() {
+        assert!(normal_quantile(0.5).abs() < 1e-9);
+        assert!((normal_quantile(0.9) - 1.2815515655).abs() < 1e-6);
+        assert!((normal_quantile(0.975) - 1.9599639845).abs() < 1e-6);
+        // symmetry and the tail branches
+        for p in [0.001, 0.01, 0.1, 0.3] {
+            let lo = normal_quantile(p);
+            let hi = normal_quantile(1.0 - p);
+            assert!((lo + hi).abs() < 1e-6, "asymmetric at p={p}");
+            assert!(lo < 0.0 && hi > 0.0);
+        }
+        // monotone
+        let mut prev = f64::NEG_INFINITY;
+        for i in 1..100 {
+            let z = normal_quantile(i as f64 / 100.0);
+            assert!(z > prev);
+            prev = z;
+        }
     }
 
     #[test]

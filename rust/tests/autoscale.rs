@@ -1,0 +1,360 @@
+//! Elastic-autoscaling integration tests: conservation across scale-out and
+//! scale-in for every router, determinism of uncertainty-aware decisions,
+//! the scale-in-never-strands-a-live-request regression, retired-replica
+//! accounting, the transfer-cost steal gate, the quantile-cost router A/B,
+//! and the headline comparison — uncertainty-aware provisioning beats a
+//! static fleet on goodput per replica-second at the same peak cap.
+
+use std::collections::BTreeSet;
+
+use sagesched::autoscale::ScaleAction;
+use sagesched::cluster::{run_router_experiment, EventCluster, ReplicaState};
+use sagesched::config::{
+    ArrivalKind, AutoscaleKind, ExperimentConfig, FailureEvent, PolicyKind,
+    RouterKind, ScaleStep,
+};
+use sagesched::workload::WorkloadGen;
+
+fn cluster_cfg(replicas: usize, n: usize, rps: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = PolicyKind::SageSched;
+    cfg.workload.n_requests = n;
+    cfg.workload.rps = rps;
+    cfg.warmup_fraction = 0.0;
+    cfg.history_prewarm = 0; // keep the tests fast
+    cfg.cluster.replicas = replicas;
+    cfg
+}
+
+fn event_count(cluster: &EventCluster, action: ScaleAction) -> usize {
+    cluster
+        .scaling_events
+        .iter()
+        .filter(|e| e.action == action)
+        .count()
+}
+
+#[test]
+fn step_scaling_conserves_requests_for_every_router() {
+    // scripted scale-out (2 -> 4) and scale-in (4 -> 2) mid-run: every
+    // router must complete each request exactly once with all cluster
+    // bookkeeping drained, and the lifecycle must fire exactly once per
+    // transition
+    let mut cfg = cluster_cfg(2, 160, 24.0);
+    cfg.cluster.autoscale.kind = AutoscaleKind::Step;
+    cfg.cluster.autoscale.steps = vec![
+        ScaleStep { at: 1.5, target: 4 },
+        ScaleStep { at: 4.5, target: 2 },
+    ];
+    cfg.cluster.autoscale.provision_delay = 0.5;
+    cfg.cluster.autoscale.interval = 1.0;
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let submitted: BTreeSet<u64> = workload.requests.iter().map(|r| r.id).collect();
+    for router in RouterKind::ALL {
+        let mut cluster = EventCluster::with_router(&cfg, router);
+        cluster.run(workload.requests.clone()).unwrap();
+        // conservation: completed + rejected + aborted == submitted
+        let outcomes = cluster.merged_outcomes();
+        let accounted =
+            outcomes.len() as u64 + cluster.rejected() + cluster.aborted();
+        assert_eq!(accounted, 160, "{router:?} lost requests under scaling");
+        assert_eq!(cluster.rejected(), 0, "{router:?} rejected under scaling");
+        let completed: BTreeSet<u64> = outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(
+            completed.len(),
+            outcomes.len(),
+            "{router:?} duplicated completions under scaling"
+        );
+        assert_eq!(completed, submitted, "{router:?} completion set mismatch");
+        // no leaked bookkeeping
+        assert_eq!(cluster.in_flight_count(), 0, "{router:?} leaked in-flight");
+        assert!(
+            cluster.total_backlog() < 1e-6,
+            "{router:?} leaked predicted backlog"
+        );
+        // lifecycle fired exactly once per scripted transition
+        assert_eq!(cluster.replicas.len(), 4, "{router:?} replica roster");
+        assert_eq!(event_count(&cluster, ScaleAction::Provision), 2, "{router:?}");
+        assert_eq!(event_count(&cluster, ScaleAction::Up), 2, "{router:?}");
+        assert_eq!(event_count(&cluster, ScaleAction::Drain), 2, "{router:?}");
+        assert_eq!(event_count(&cluster, ScaleAction::Retire), 2, "{router:?}");
+        let retired = cluster
+            .replicas
+            .iter()
+            .filter(|r| r.state == ReplicaState::Retired)
+            .count();
+        assert_eq!(retired, 2, "{router:?} retired-replica count");
+    }
+}
+
+#[test]
+fn scale_in_never_strands_a_live_request() {
+    // a hard scale-in while the cluster is saturated: the victim holds
+    // running/preempted work at drain time, which must finish in place —
+    // and its queued work must be re-routed, never dropped
+    let mut cfg = cluster_cfg(2, 120, 60.0);
+    cfg.cluster.autoscale.kind = AutoscaleKind::Step;
+    cfg.cluster.autoscale.steps = vec![ScaleStep { at: 1.0, target: 1 }];
+    cfg.cluster.autoscale.interval = 1.0;
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let submitted: BTreeSet<u64> = workload.requests.iter().map(|r| r.id).collect();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
+    cluster.run(workload.requests).unwrap();
+    let outcomes = cluster.merged_outcomes();
+    assert_eq!(outcomes.len(), 120, "scale-in lost requests");
+    let completed: BTreeSet<u64> = outcomes.iter().map(|o| o.id).collect();
+    assert_eq!(completed, submitted, "completion set mismatch");
+    assert_eq!(cluster.in_flight_count(), 0);
+    assert_eq!(event_count(&cluster, ScaleAction::Drain), 1);
+    assert_eq!(event_count(&cluster, ScaleAction::Retire), 1);
+    // the victim really is gone and empty
+    let retire = cluster
+        .scaling_events
+        .iter()
+        .find(|e| e.action == ScaleAction::Retire)
+        .expect("retire event");
+    let victim = &cluster.replicas[retire.replica];
+    assert_eq!(victim.state, ReplicaState::Retired);
+    assert!(victim.coord.is_idle(), "retired replica still holds work");
+    assert!(victim.retired_at.is_some());
+    // at rps 60 on 2 replicas the victim was mid-flight at t=1: it must
+    // have served something before retiring, and the retire must come
+    // after the drain began
+    assert!(retire.at >= 1.0, "retired before the scale-in decision");
+}
+
+#[test]
+fn uncertainty_aware_decisions_are_deterministic() {
+    let mut cfg = cluster_cfg(4, 160, 24.0);
+    cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+    cfg.cluster.autoscale.kind = AutoscaleKind::UncertaintyAware;
+    cfg.cluster.autoscale.min_replicas = 2;
+    cfg.cluster.autoscale.max_replicas = 8;
+    cfg.cluster.autoscale.work_per_replica = 5.0e5;
+    cfg.cluster.autoscale.cooldown = 2.0;
+    cfg.cluster.autoscale.interval = 1.0;
+    cfg.cluster.autoscale.provision_delay = 1.0;
+    let a = run_router_experiment(&cfg, RouterKind::CostAware).unwrap();
+    let b = run_router_experiment(&cfg, RouterKind::CostAware).unwrap();
+    assert_eq!(a.scaling_events, b.scaling_events, "scaling timeline differs");
+    assert_eq!(a.routed, b.routed);
+    assert_eq!(a.replica_seconds, b.replica_seconds);
+    assert_eq!(a.aggregate.ttlt.mean, b.aggregate.ttlt.mean);
+    assert_eq!(a.aggregate.measured, 160);
+    // conservation under elastic scaling
+    let n = a.aggregate.completed + a.aggregate.rejected + a.aggregate.aborted;
+    assert_eq!(n, 160);
+}
+
+#[test]
+fn autoscaling_composes_with_replica_failures() {
+    // an outage on replica 0 while the uncertainty-aware policy is also
+    // scaling: both lifecycles re-route work; conservation must still be
+    // exact for every router
+    let mut cfg = cluster_cfg(4, 160, 24.0);
+    cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+    cfg.cluster.failures = vec![FailureEvent { replica: 0, at: 1.5, duration: 2.0 }];
+    cfg.cluster.autoscale.kind = AutoscaleKind::UncertaintyAware;
+    // min == initial fleet: only scale-*out* can fire, so replica 0 is
+    // guaranteed to still be active when its scheduled outage hits
+    cfg.cluster.autoscale.min_replicas = 4;
+    cfg.cluster.autoscale.max_replicas = 6;
+    cfg.cluster.autoscale.work_per_replica = 5.0e5;
+    cfg.cluster.autoscale.cooldown = 2.0;
+    cfg.cluster.autoscale.provision_delay = 1.0;
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let submitted: BTreeSet<u64> = workload.requests.iter().map(|r| r.id).collect();
+    for router in RouterKind::ALL {
+        let mut cluster = EventCluster::with_router(&cfg, router);
+        cluster.run(workload.requests.clone()).unwrap();
+        let outcomes = cluster.merged_outcomes();
+        let accounted =
+            outcomes.len() as u64 + cluster.rejected() + cluster.aborted();
+        assert_eq!(accounted, 160, "{router:?} lost requests");
+        let completed: BTreeSet<u64> = outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(completed, submitted, "{router:?} completion set mismatch");
+        assert_eq!(cluster.in_flight_count(), 0, "{router:?} leaked in-flight");
+        assert!(event_count(&cluster, ScaleAction::Fail) >= 1, "{router:?}");
+    }
+}
+
+#[test]
+fn retired_replicas_stop_accruing_downtime_and_replica_seconds() {
+    // the accounting regression: a replica retired mid-run must not count
+    // as "down" for the remainder, and is billed only to its retirement
+    let mut cfg = cluster_cfg(2, 120, 20.0);
+    cfg.cluster.autoscale.kind = AutoscaleKind::Step;
+    cfg.cluster.autoscale.steps = vec![ScaleStep { at: 2.0, target: 1 }];
+    cfg.cluster.autoscale.interval = 1.0;
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::RoundRobin);
+    cluster.run(workload.requests).unwrap();
+    assert_eq!(cluster.completed(), 120);
+    let report = cluster.report(0.0);
+    let retire = report
+        .scaling_events
+        .iter()
+        .find(|e| e.action == ScaleAction::Retire)
+        .expect("retire event");
+    let victim = retire.replica;
+    let survivor = 1 - victim;
+    // never down: a retired replica is gone, not "failed for the rest of
+    // the run"
+    assert_eq!(report.downtime[victim], 0.0);
+    assert_eq!(report.downtime[survivor], 0.0);
+    // billed exactly to its retirement instant (spawned at 0, no outages)
+    assert!(
+        (report.replica_seconds[victim] - retire.at).abs() < 1e-9,
+        "victim billed {} but retired at {}",
+        report.replica_seconds[victim],
+        retire.at
+    );
+    assert!(
+        report.replica_seconds[victim] < report.replica_seconds[survivor],
+        "victim billed {} >= survivor {}",
+        report.replica_seconds[victim],
+        report.replica_seconds[survivor]
+    );
+    // the survivor is billed to the cluster horizon, which covers the
+    // whole drain tail
+    assert!(report.replica_seconds[survivor] > retire.at);
+}
+
+#[test]
+fn steal_gate_blocks_unprofitable_transfers_and_reports_them() {
+    // the PR 2 stealing scenario (one fast, one 20x-slower replica): with
+    // the gate effectively off stealing rebalances as before; with an
+    // enormous per-token transfer penalty every candidate is rejected,
+    // reported, and the run still completes losslessly
+    let mut base = cluster_cfg(2, 120, 24.0);
+    base.cluster.speeds = vec![1.0, 0.05];
+    let workload = WorkloadGen::new(base.workload.clone(), base.seed).generate();
+
+    let mut free = base.clone();
+    free.cluster.steal_transfer_per_token = 0.0;
+    let mut cluster = EventCluster::with_router(&free, RouterKind::RoundRobin);
+    cluster.run(workload.requests.clone()).unwrap();
+    assert_eq!(cluster.completed(), 120);
+    assert!(cluster.stolen > 0, "free transfer must steal");
+    assert_eq!(cluster.steals_skipped(), 0);
+
+    let mut gated = base.clone();
+    gated.cluster.steal_transfer_per_token = 1.0e12;
+    let mut cluster = EventCluster::with_router(&gated, RouterKind::RoundRobin);
+    cluster.run(workload.requests).unwrap();
+    assert_eq!(cluster.completed(), 120, "gated run lost requests");
+    assert_eq!(cluster.stolen, 0, "absurd transfer cost must block stealing");
+    assert!(
+        cluster.steals_skipped() > 0,
+        "rejected candidates must be reported"
+    );
+    let report = cluster.report(0.0);
+    assert_eq!(report.stolen, 0);
+    assert!(report.steals_skipped > 0);
+}
+
+#[test]
+fn quantile_cost_router_ab_against_cost_aware_under_heavy_tails() {
+    // same seeded bursty heavy-tailed workload (the default mix includes
+    // the long-output write dataset), heterogeneous fleet: the
+    // distribution-aware router must (a) conserve requests, (b) be exactly
+    // reproducible, and (c) actually route differently from the mean-based
+    // router — variance changes decisions, not just labels
+    let mut cfg = cluster_cfg(4, 240, 24.0);
+    cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+    cfg.cluster.speeds = vec![1.0, 1.0, 0.5, 0.5];
+    let mean_based = run_router_experiment(&cfg, RouterKind::CostAware).unwrap();
+    let q1 = run_router_experiment(&cfg, RouterKind::QuantileCost).unwrap();
+    let q2 = run_router_experiment(&cfg, RouterKind::QuantileCost).unwrap();
+    for r in [&mean_based, &q1] {
+        let accounted =
+            r.aggregate.completed + r.aggregate.rejected + r.aggregate.aborted;
+        assert_eq!(accounted, 240, "{} lost requests", r.router);
+        assert_eq!(r.aggregate.rejected, 0);
+    }
+    // determinism of the A/B itself
+    assert_eq!(q1.routed, q2.routed);
+    assert_eq!(q1.aggregate.ttlt.mean, q2.aggregate.ttlt.mean);
+    // the quantile changes routing decisions on heavy-tailed backlogs
+    assert_ne!(
+        q1.routed, mean_based.routed,
+        "quantile-cost routed identically to cost-aware"
+    );
+}
+
+#[test]
+fn uncertainty_aware_beats_static_on_goodput_per_replica_second() {
+    // the fig12c acceptance scenario: bursty (MMPP) and diurnal demand at
+    // the same long-run rate, static 6-replica fleet vs uncertainty-aware
+    // provisioning capped at the same 6-replica peak. Both must serve every
+    // request; the elastic fleet must do it on meaningfully fewer
+    // replica-seconds, i.e. higher goodput per replica-second.
+    for kind in [ArrivalKind::Mmpp, ArrivalKind::Diurnal] {
+        let mut base = cluster_cfg(6, 240, 6.0);
+        base.workload.arrival.kind = kind;
+        base.workload.arrival.burst_factor = 6.0;
+        base.workload.arrival.burst_on_mean = 2.0;
+        base.workload.arrival.burst_off_mean = 6.0;
+        base.workload.arrival.diurnal_period = 30.0;
+        base.workload.arrival.diurnal_amplitude = 0.8;
+
+        let static_run = run_router_experiment(&base, RouterKind::CostAware).unwrap();
+
+        let mut elastic = base.clone();
+        elastic.cluster.autoscale.kind = AutoscaleKind::UncertaintyAware;
+        elastic.cluster.autoscale.min_replicas = 2;
+        elastic.cluster.autoscale.max_replicas = 6; // same peak cap
+        elastic.cluster.autoscale.quantile = 0.9;
+        elastic.cluster.autoscale.work_per_replica = 1.0e6;
+        elastic.cluster.autoscale.interval = 1.0;
+        elastic.cluster.autoscale.cooldown = 2.0;
+        elastic.cluster.autoscale.provision_delay = 1.0;
+        let elastic_run = run_router_experiment(&elastic, RouterKind::CostAware).unwrap();
+
+        // both fleets are lossless at this load
+        assert_eq!(static_run.aggregate.completed, 240, "{kind:?} static lossy");
+        assert_eq!(elastic_run.aggregate.completed, 240, "{kind:?} elastic lossy");
+        // the elastic fleet actually scaled (timeline is non-trivial)
+        assert!(
+            !elastic_run.scaling_events.is_empty(),
+            "{kind:?}: uncertainty-aware never made a scaling decision"
+        );
+        assert!(
+            elastic_run.total_replica_seconds() < static_run.total_replica_seconds(),
+            "{kind:?}: elastic used {} replica-s >= static {}",
+            elastic_run.total_replica_seconds(),
+            static_run.total_replica_seconds()
+        );
+        assert!(
+            elastic_run.goodput_per_replica_second
+                > static_run.goodput_per_replica_second,
+            "{kind:?}: elastic gp/rep-s {} <= static {}",
+            elastic_run.goodput_per_replica_second,
+            static_run.goodput_per_replica_second
+        );
+    }
+}
+
+#[test]
+fn reactive_scaling_responds_to_load_and_conserves() {
+    // watermark policy sanity: under sustained pressure on a small fleet it
+    // scales out (provisions at least one replica) and still conserves
+    let mut cfg = cluster_cfg(2, 200, 30.0);
+    cfg.cluster.autoscale.kind = AutoscaleKind::Reactive;
+    cfg.cluster.autoscale.min_replicas = 2;
+    cfg.cluster.autoscale.max_replicas = 8;
+    cfg.cluster.autoscale.high_watermark = 6.0;
+    cfg.cluster.autoscale.low_watermark = 1.0;
+    cfg.cluster.autoscale.cooldown = 1.0;
+    cfg.cluster.autoscale.interval = 0.5;
+    cfg.cluster.autoscale.provision_delay = 0.5;
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
+    cluster.run(workload.requests).unwrap();
+    assert_eq!(cluster.completed(), 200);
+    assert!(
+        event_count(&cluster, ScaleAction::Provision) >= 1,
+        "reactive never scaled out under 15 rps/replica pressure"
+    );
+    assert_eq!(cluster.in_flight_count(), 0);
+}
