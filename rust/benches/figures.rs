@@ -205,6 +205,7 @@ fn fig2b(_ctx: &Ctx) {
         topic: 0,
         embedding: sagesched::embedding::Embedding::normalize(vec![1.0, 0.0]),
         true_dist: Some(LengthDist::point(output as f64)),
+        slo: sagesched::slo::SloClass::Standard,
     };
     // A: shortest output but a giant prompt — it monopolizes the KV pool.
     // Seven chat requests (slightly longer outputs, tiny prompts) could run
@@ -379,6 +380,7 @@ fn fig5b(ctx: &Ctx) {
             topic: 0,
             embedding: sagesched::embedding::Embedding::normalize(vec![1.0; 4]),
             true_dist: None,
+            slo: sagesched::slo::SloClass::Standard,
         };
         eng.max_output = 240;
         let _ = eng.prefill(&req).unwrap();
@@ -895,6 +897,90 @@ fn fig13b(ctx: &Ctx) {
 }
 
 // ===========================================================================
+// Fig 13c: SLO classes — class-blind vs class-aware serving under bursts
+// ===========================================================================
+fn fig13c(ctx: &Ctx) {
+    use sagesched::config::{ArrivalKind, FailureEvent, RouterKind};
+    println!("\n=== fig13c: class-blind vs class-aware serving (MMPP + outage) ===");
+    // an overloaded 4-replica cluster under MMPP bursts with a mid-run
+    // outage on replica 0 and a finite admission window: exactly the
+    // regime where serving every request identically wastes capacity on
+    // work nobody is waiting for. Same seeded workload for both rows; the
+    // only difference is the class-aware switch.
+    let mut base = base_cfg();
+    base.cluster.replicas = 4;
+    base.workload.rps = 30.0;
+    base.workload.n_requests = ctx.n_requests(1200);
+    base.workload.arrival.kind = ArrivalKind::Mmpp;
+    base.workload.arrival.burst_factor = 5.0;
+    base.workload.arrival.burst_on_mean = 4.0;
+    base.workload.arrival.burst_off_mean = 12.0;
+    base.max_queue = 48;
+    let span = base.workload.n_requests as f64 / base.workload.rps;
+    base.cluster.failures =
+        vec![FailureEvent { replica: 0, at: span / 3.0, duration: span / 6.0 }];
+    println!(
+        "| serving | goodput | slo-weighted gp | interactive att | standard att \
+         | batch att | int TTLT p90 | gp/rep-s | slo-w gp/rep-s |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|");
+    let mut rows = Vec::new();
+    for (label, aware) in [("class-blind", false), ("class-aware", true)] {
+        let mut cfg = base.clone();
+        cfg.slo.class_aware = aware;
+        let r = sagesched::cluster::run_router_experiment(&cfg, RouterKind::QuantileCost)
+            .expect("slo cluster experiment failed");
+        let n = cfg.workload.n_requests as u64;
+        let accounted =
+            r.aggregate.completed + r.aggregate.rejected + r.aggregate.aborted;
+        assert_eq!(accounted, n, "{label}: {accounted} accounted of {n}");
+        let att = |class: &str| {
+            r.aggregate
+                .slo
+                .get(class)
+                .map(|s| s.attainment())
+                .unwrap_or(0.0)
+        };
+        let int_p90 = r
+            .aggregate
+            .slo
+            .get("interactive")
+            .map(|s| s.ttlt.p90)
+            .unwrap_or(0.0);
+        println!(
+            "| {label} | {:.3} | {:.3} | {:.3} | {:.3} | {:.3} | {:.2} | {:.3} | {:.3} |",
+            r.aggregate.goodput(),
+            r.aggregate.slo_weighted_goodput(),
+            att("interactive"),
+            att("standard"),
+            att("batch"),
+            int_p90,
+            r.goodput_per_replica_second,
+            r.slo_weighted_goodput_per_replica_second,
+        );
+        rows.push(format!(
+            "{label},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.5},{:.5}",
+            r.aggregate.goodput(),
+            r.aggregate.slo_weighted_goodput(),
+            att("interactive"),
+            att("standard"),
+            att("batch"),
+            int_p90,
+            r.goodput_per_replica_second,
+            r.slo_weighted_goodput_per_replica_second,
+        ));
+    }
+    write_csv(
+        "fig13c",
+        "serving,goodput,slo_weighted_goodput,interactive_attainment,\
+         standard_attainment,batch_attainment,interactive_ttlt_p90,\
+         goodput_per_replica_second,slo_weighted_goodput_per_replica_second",
+        &rows,
+    );
+    println!("  (class-aware: interactive attainment up, total goodput held)");
+}
+
+// ===========================================================================
 // Fig 1a on the real engine (optional extended check)
 // ===========================================================================
 fn fig1a_real(ctx: &Ctx) {
@@ -928,6 +1014,7 @@ fn fig1a_real(ctx: &Ctx) {
                 topic: 0,
                 embedding: sagesched::embedding::Embedding::normalize(vec![1.0; 4]),
                 true_dist: None,
+                slo: sagesched::slo::SloClass::Standard,
             };
             let pr = eng.prefill(&req).unwrap();
             let mut generated = 1u32;
@@ -988,6 +1075,7 @@ fn main() {
         ("fig12c", fig12c),
         ("fig13a", fig13a),
         ("fig13b", fig13b),
+        ("fig13c", fig13c),
     ];
     let t0 = std::time::Instant::now();
     for (name, f) in &all {

@@ -72,6 +72,15 @@ pub struct AutoscaleView {
     pub backlog_mean: f64,
     /// Σ Var[cost] over all in-flight requests.
     pub backlog_var: f64,
+    /// Σ w·E[cost] over all in-flight requests, where w is the request's
+    /// SLO-class weight (1 under class-blind serving, so this equals
+    /// `backlog_mean` there). The uncertainty-aware policy provisions for
+    /// this *weighted* forecast: backlog owed to high-value tiers buys
+    /// proportionally more headroom.
+    pub backlog_weighted_mean: f64,
+    /// Σ w²·Var[cost] over all in-flight requests (the variance of the
+    /// weighted sum of independent request costs).
+    pub backlog_weighted_var: f64,
 }
 
 impl AutoscaleView {
@@ -225,9 +234,15 @@ impl UncertaintyAware {
         UncertaintyAware { cfg, z, last_action: f64::NEG_INFINITY }
     }
 
-    /// The provisioned-for quantile of forecast outstanding work.
+    /// The provisioned-for quantile of the forecast outstanding work —
+    /// the SLO-*weighted* moments, so under class-aware serving a backlog
+    /// dominated by high-value tiers provisions proportionally more
+    /// capacity (the two coincide under class-blind serving, where every
+    /// weight is 1).
     pub fn forecast_work(&self, view: &AutoscaleView) -> f64 {
-        (view.backlog_mean + self.z * view.backlog_var.max(0.0).sqrt()).max(0.0)
+        (view.backlog_weighted_mean
+            + self.z * view.backlog_weighted_var.max(0.0).sqrt())
+        .max(0.0)
     }
 }
 
@@ -321,6 +336,9 @@ mod tests {
             mean_kv_occupancy: 0.2,
             backlog_mean: mu,
             backlog_var: var,
+            // class-blind default: weighted moments equal the raw ones
+            backlog_weighted_mean: mu,
+            backlog_weighted_var: var,
         }
     }
 
@@ -426,6 +444,28 @@ mod tests {
         let narrow = p.forecast_work(&view(0.0, 4, 10, 300.0, 100.0));
         let wide = p.forecast_work(&view(0.0, 4, 10, 300.0, 40_000.0));
         assert!(wide > narrow, "heavier tail must provision more headroom");
+    }
+
+    #[test]
+    fn uncertainty_provisions_for_the_weighted_forecast() {
+        // same raw backlog, but the weighted moments say the work belongs
+        // to high-value tiers: the policy must provision for the weighted
+        // quantile, not the raw one
+        let cfg = AutoscaleConfig {
+            kind: AutoscaleKind::UncertaintyAware,
+            min_replicas: 1,
+            max_replicas: 32,
+            cooldown: 0.0,
+            quantile: 0.9,
+            work_per_replica: 100.0,
+            ..AutoscaleConfig::default()
+        };
+        let mut p = UncertaintyAware::new(cfg);
+        let mut v = view(0.0, 4, 10, 300.0, 0.0);
+        v.backlog_weighted_mean = 1200.0; // interactive-heavy backlog, w=4
+        v.backlog_weighted_var = 0.0;
+        assert!((p.forecast_work(&v) - 1200.0).abs() < 1e-9);
+        assert_eq!(p.target(&v), Some(12));
     }
 
     #[test]

@@ -75,6 +75,7 @@ use crate::gittins::gittins_index_at_age;
 use crate::metrics::{ClusterReport, RunReport};
 use crate::predictor::{HistoryPredictor, Predictor};
 use crate::serve::Coordinator;
+use crate::slo::SloClass;
 use crate::util::rng::Rng;
 use crate::util::stats::{mean, normal_quantile_clamped};
 use crate::workload::WorkloadGen;
@@ -277,6 +278,72 @@ pub fn make_router(kind: RouterKind, quantile: f64) -> Box<dyn Router> {
     }
 }
 
+/// SLO-class-aware routing wrapper: tight tiers get headroom, loose tiers
+/// keep the configured base router.
+///
+/// * `Interactive` requests are routed over the subset of replicas with KV
+///   headroom (occupancy at most `kv_headroom`; the full set when none
+///   qualifies), picked by the smallest *high quantile* of the outstanding
+///   predicted-cost distribution normalized by speed — the
+///   tail-risk-averse placement a tight TTFT budget wants. The per-tier
+///   quantile is how the distribution-aware router "provisions headroom"
+///   for the tier that cannot absorb a burst.
+/// * `Standard` and `Batch` requests are delegated to the wrapped router
+///   unchanged.
+///
+/// Composes with every [`RouterKind`]; it reports the inner router's kind
+/// and name so A/B labels stay comparable.
+pub struct ClassAwareRouter {
+    inner: Box<dyn Router>,
+    /// z-score of the Interactive placement quantile.
+    z_tight: f64,
+    /// KV-occupancy ceiling for Interactive-eligible replicas.
+    kv_headroom: f64,
+}
+
+impl ClassAwareRouter {
+    pub fn new(inner: Box<dyn Router>) -> ClassAwareRouter {
+        ClassAwareRouter {
+            inner,
+            z_tight: normal_quantile_clamped(0.95),
+            kv_headroom: 0.85,
+        }
+    }
+}
+
+impl Router for ClassAwareRouter {
+    fn kind(&self) -> RouterKind {
+        self.inner.kind()
+    }
+
+    fn route(&mut self, req: &Request, predicted_cost: f64, replicas: &[ReplicaView]) -> usize {
+        if req.slo != SloClass::Interactive {
+            return self.inner.route(req, predicted_cost, replicas);
+        }
+        let eligible: Vec<usize> = (0..replicas.len())
+            .filter(|&slot| replicas[slot].kv_occupancy() <= self.kv_headroom)
+            .collect();
+        let pool: Vec<usize> = if eligible.is_empty() {
+            (0..replicas.len()).collect()
+        } else {
+            eligible
+        };
+        let mut best = pool[0];
+        let mut best_load = f64::INFINITY;
+        for &slot in &pool {
+            let r = &replicas[slot];
+            let q = r.predicted_backlog
+                + self.z_tight * r.predicted_backlog_var.max(0.0).sqrt();
+            let load = q / r.speed.max(1e-9);
+            if load < best_load {
+                best_load = load;
+                best = slot;
+            }
+        }
+        best
+    }
+}
+
 /// Least-loaded routing decision across per-node live counts (exposed for
 /// tests and the cluster example).
 pub fn route_least_loaded(loads: &[usize]) -> usize {
@@ -324,6 +391,10 @@ pub struct ClusterReplica {
     pub downtime: f64,
     /// Virtual time this replica was provisioned (0 for the initial fleet).
     pub spawned_at: f64,
+    /// Virtual time this replica's provisioning delay elapses (0 for the
+    /// initial fleet, which starts Active). A recovery before this instant
+    /// resumes provisioning rather than activating the replica early.
+    ready_at: f64,
     /// Virtual time the replica retired, if it did.
     pub retired_at: Option<f64>,
     /// Outcomes already drained into cluster-level bookkeeping.
@@ -404,6 +475,10 @@ struct InFlight {
     cost: f64,
     /// Predicted Var[total cost].
     var: f64,
+    /// SLO weight of this request's class (1.0 under class-blind serving);
+    /// scales its contribution to the weighted forecast backlog the
+    /// uncertainty-aware autoscaler provisions for.
+    weight: f64,
     /// Original request (kept for re-dispatch and predictor learning).
     req: Request,
 }
@@ -427,6 +502,14 @@ pub struct EventCluster {
     backlog: Vec<f64>,
     /// Per-replica sum of predicted cost *variance* of in-flight requests.
     backlog_var: Vec<f64>,
+    /// Cluster-wide SLO-weighted backlog moments: Σ w·E[cost] and
+    /// Σ w²·Var[cost] over in-flight requests (w = 1 under class-blind
+    /// serving, so these equal the unweighted sums). Maintained
+    /// incrementally — never by iterating the in-flight map, whose order
+    /// is not deterministic — and consumed by the uncertainty-aware
+    /// autoscaler's weighted forecast.
+    backlog_weighted: f64,
+    backlog_weighted_var: f64,
     /// Per-replica routed-request counts.
     pub routed: Vec<u64>,
     /// Requests re-dispatched through the router after a replica failure.
@@ -466,6 +549,7 @@ impl EventCluster {
                     down_since: 0.0,
                     downtime: 0.0,
                     spawned_at: 0.0,
+                    ready_at: 0.0,
                     retired_at: None,
                     seen_outcomes: 0,
                     seen_aborted: 0,
@@ -479,10 +563,16 @@ impl EventCluster {
             cfg.similarity_threshold,
             cfg.seed ^ 0xc175_7e12,
         );
+        let mut boxed = make_router(router, cfg.cluster.router_quantile);
+        if cfg.slo.class_aware {
+            boxed = Box::new(ClassAwareRouter::new(boxed));
+        }
         EventCluster {
             cfg: cfg.clone(),
             backlog: vec![0.0; n],
             backlog_var: vec![0.0; n],
+            backlog_weighted: 0.0,
+            backlog_weighted_var: 0.0,
             routed: vec![0; n],
             re_routed: 0,
             drained: 0,
@@ -491,7 +581,7 @@ impl EventCluster {
             steal_dirty: true,
             scaling_events: Vec::new(),
             replicas,
-            router: make_router(router, cfg.cluster.router_quantile),
+            router: boxed,
             predictor,
             autoscaler: crate::autoscale::make_autoscaler(&cfg.cluster.autoscale),
             cost: crate::cost::make_cost_model(cfg.cost_model),
@@ -511,6 +601,30 @@ impl EventCluster {
         self.replicas.iter().map(|r| r.coord.aborted).sum()
     }
 
+    /// Per-SLO-class admission rejections, cluster-wide (indexed by
+    /// [`SloClass::index`]).
+    pub fn rejected_by_class(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for r in &self.replicas {
+            for (k, &n) in r.coord.rejected_by_class.iter().enumerate() {
+                out[k] += n;
+            }
+        }
+        out
+    }
+
+    /// Per-SLO-class queue-timeout aborts, cluster-wide (indexed by
+    /// [`SloClass::index`]).
+    pub fn aborted_by_class(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for r in &self.replicas {
+            for (k, &n) in r.coord.aborted_by_class.iter().enumerate() {
+                out[k] += n;
+            }
+        }
+        out
+    }
+
     /// Requests the cluster still tracks as in flight (0 after a completed
     /// run — anything else means bookkeeping leaked).
     pub fn in_flight_count(&self) -> usize {
@@ -520,6 +634,13 @@ impl EventCluster {
     /// Sum of per-replica predicted-cost backlogs (≈0 after a drained run).
     pub fn total_backlog(&self) -> f64 {
         self.backlog.iter().sum()
+    }
+
+    /// Cluster-wide SLO-weighted backlog mean (≈0 after a drained run;
+    /// equals [`EventCluster::total_backlog`] under class-blind serving up
+    /// to float accumulation order).
+    pub fn weighted_backlog(&self) -> f64 {
+        self.backlog_weighted
     }
 
     /// Steal candidates the transfer-cost benefit gate rejected (distinct
@@ -620,6 +741,11 @@ impl EventCluster {
         let cost_dist = self.cost.cost_dist(req.input_len, &pred);
         let pcost = cost_dist.mean();
         let pvar = cost_dist.variance();
+        let weight = if self.cfg.slo.class_aware {
+            self.cfg.slo.specs.spec(req.slo).weight
+        } else {
+            1.0
+        };
         let views = self.views();
         let mut target = None;
         if views.is_empty() {
@@ -641,10 +767,9 @@ impl EventCluster {
                 );
             }
             let i = views[slot].id;
-            let has_room = {
-                let c = &self.replicas[i].coord;
-                c.max_queue == 0 || c.live_count() < c.max_queue
-            };
+            // the coordinator's own (possibly class-aware) admission verdict,
+            // so the has-room view can never disagree with submit()
+            let has_room = self.replicas[i].coord.admits(req.slo);
             if has_room || keep_on.is_none() {
                 target = Some(i);
             }
@@ -655,13 +780,23 @@ impl EventCluster {
             .expect("place: empty routable set without fallback already bailed");
         let id = req.id;
         self.replicas[i].coord.advance_to(req.arrival.max(not_before));
-        let accepted = self.replicas[i].coord.submit(req.clone());
+        // the drain fallback is a *migration*: the request already passed
+        // admission on the victim, so re-admitting it there is exempt
+        let accepted = if moved {
+            self.replicas[i].coord.submit(req.clone())
+        } else {
+            self.replicas[i].coord.submit_exempt(req.clone())
+        };
         debug_assert!(accepted || keep_on.is_none(), "drain re-admission must fit");
         if accepted {
-            self.in_flight
-                .insert(id, InFlight { replica: i, cost: pcost, var: pvar, req });
+            self.in_flight.insert(
+                id,
+                InFlight { replica: i, cost: pcost, var: pvar, weight, req },
+            );
             self.backlog[i] += pcost;
             self.backlog_var[i] += pvar;
+            self.backlog_weighted += weight * pcost;
+            self.backlog_weighted_var += weight * weight * pvar;
             self.routed[i] += 1;
             self.steal_dirty = true; // fresh queued work: steal verdicts change
         }
@@ -700,7 +835,7 @@ impl EventCluster {
         }
         for (id, output_len) in new {
             if let Some(f) = self.in_flight.remove(&id) {
-                self.release_backlog(f.replica, f.cost, f.var);
+                self.release_backlog(f.replica, f.cost, f.var, f.weight);
                 self.predictor.observe(&f.req, output_len);
             }
         }
@@ -710,15 +845,20 @@ impl EventCluster {
         if self.replicas[i].coord.aborted > self.replicas[i].seen_aborted {
             self.replicas[i].seen_aborted = self.replicas[i].coord.aborted;
             let coord = &self.replicas[i].coord;
-            let gone: Vec<RequestId> = self
+            let mut gone: Vec<RequestId> = self
                 .in_flight
                 .iter()
                 .filter(|(id, entry)| entry.replica == i && !coord.is_live(**id))
                 .map(|(id, _)| *id)
                 .collect();
+            // the map's iteration order is not deterministic; releasing in
+            // id order keeps the float bookkeeping — and therefore every
+            // downstream routing/scaling decision and the report JSON —
+            // byte-identical across runs of the same seed
+            gone.sort_unstable();
             for id in gone {
                 if let Some(f) = self.in_flight.remove(&id) {
-                    self.release_backlog(f.replica, f.cost, f.var);
+                    self.release_backlog(f.replica, f.cost, f.var, f.weight);
                 }
             }
         }
@@ -726,10 +866,14 @@ impl EventCluster {
     }
 
     /// Release one request's contribution to a replica's predicted-cost
-    /// moments (floored at 0 against accumulated float error).
-    fn release_backlog(&mut self, replica: usize, cost: f64, var: f64) {
+    /// moments and the cluster-wide weighted moments (floored at 0 against
+    /// accumulated float error).
+    fn release_backlog(&mut self, replica: usize, cost: f64, var: f64, weight: f64) {
         self.backlog[replica] = (self.backlog[replica] - cost).max(0.0);
         self.backlog_var[replica] = (self.backlog_var[replica] - var).max(0.0);
+        self.backlog_weighted = (self.backlog_weighted - weight * cost).max(0.0);
+        self.backlog_weighted_var =
+            (self.backlog_weighted_var - weight * weight * var).max(0.0);
     }
 
     /// Drive the full arrival stream to completion: global-time-ordered
@@ -802,9 +946,13 @@ impl EventCluster {
     /// downtime.
     fn initial_events(&self) -> anyhow::Result<Vec<ClusterEvent>> {
         let n = self.replicas.len();
-        let mut by_replica: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n];
+        // with autoscaling on, an outage may target a replica the scaler
+        // will have spawned by then (indices are deterministic); the check
+        // that it actually exists moves to the instant the event fires
+        let elastic = self.autoscaler.is_some();
+        let mut max_idx = n;
         for f in &self.cfg.cluster.failures {
-            if f.replica >= n {
+            if f.replica >= n && !elastic {
                 anyhow::bail!(
                     "failure event references replica {} but the cluster has \
                      {n} replicas",
@@ -814,6 +962,10 @@ impl EventCluster {
             if let Err(e) = f.validate() {
                 anyhow::bail!("{e}");
             }
+            max_idx = max_idx.max(f.replica + 1);
+        }
+        let mut by_replica: Vec<Vec<(f64, f64)>> = vec![Vec::new(); max_idx];
+        for f in &self.cfg.cluster.failures {
             by_replica[f.replica].push((f.at, f.at + f.duration));
         }
         let mut events = Vec::with_capacity(self.cfg.cluster.failures.len() * 2);
@@ -938,12 +1090,33 @@ impl EventCluster {
     /// over the routable replicas. A replica that was already draining for
     /// scale-in retires on the spot (it was leaving anyway; the crash just
     /// lost the work it was finishing, which is re-routed like any other
-    /// failure). Failures on provisioning, retired, or already-down
-    /// replicas are no-ops.
+    /// failure). A replica still *provisioning* goes down holding no work:
+    /// if the outage ends before the provisioning delay would have, the
+    /// recovery resumes provisioning and the pending spawn-ready event
+    /// still activates it exactly on schedule; if the outage outlasts the
+    /// delay, the spawn-ready no-ops while down and the recovery activates
+    /// it (provisioning completed during the outage). Either way an outage
+    /// can only delay, never advance, the instant capacity arrives.
+    /// Failures on retired or already-down replicas are no-ops; one naming
+    /// a replica that was never provisioned is a hard configuration error.
     fn apply_failure(&mut self, i: usize, at: f64) -> anyhow::Result<()> {
+        if i >= self.replicas.len() {
+            anyhow::bail!(
+                "failure event at t={at} references replica {i}, but only \
+                 {} replicas have been provisioned by then",
+                self.replicas.len()
+            );
+        }
         let was_draining = match self.replicas[i].state {
             ReplicaState::Active => false,
             ReplicaState::Draining => true,
+            ReplicaState::Provisioning => {
+                self.replicas[i].coord.advance_to(at);
+                self.record(at, i, ScaleAction::Fail);
+                self.replicas[i].state = ReplicaState::Down;
+                self.replicas[i].down_since = at;
+                return Ok(());
+            }
             _ => return Ok(()),
         };
         self.replicas[i].coord.advance_to(at);
@@ -959,7 +1132,7 @@ impl EventCluster {
         for req in &lost {
             if let Some(f) = self.in_flight.remove(&req.id) {
                 debug_assert_eq!(f.replica, i, "in-flight map out of sync at failure");
-                self.release_backlog(f.replica, f.cost, f.var);
+                self.release_backlog(f.replica, f.cost, f.var, f.weight);
             }
         }
         lost.sort_by(|a, b| {
@@ -976,16 +1149,24 @@ impl EventCluster {
     }
 
     /// A scheduled outage ends: the (empty) replica rejoins the routable
-    /// set and its downtime is charged. Replicas that retired while down
-    /// stay retired.
+    /// set and its downtime is charged. A replica whose provisioning was
+    /// interrupted by the outage — recovery lands before its `ready_at` —
+    /// *resumes* provisioning instead: the still-pending spawn-ready event
+    /// brings it up at the originally scheduled instant, so an outage can
+    /// never hand the cluster capacity earlier than the provisioning delay
+    /// allows. Replicas that retired while down stay retired.
     fn apply_recovery(&mut self, i: usize, at: f64) {
         if self.replicas[i].state != ReplicaState::Down {
             return;
         }
-        self.replicas[i].state = ReplicaState::Active;
         self.replicas[i].downtime += at - self.replicas[i].down_since;
         self.replicas[i].coord.advance_to(at);
         self.record(at, i, ScaleAction::Recover);
+        if at < self.replicas[i].ready_at {
+            self.replicas[i].state = ReplicaState::Provisioning;
+            return;
+        }
+        self.replicas[i].state = ReplicaState::Active;
         self.steal_dirty = true; // a fresh idle thief just appeared
     }
 
@@ -1112,6 +1293,8 @@ impl EventCluster {
             mean_kv_occupancy,
             backlog_mean: self.backlog.iter().sum(),
             backlog_var: self.backlog_var.iter().sum(),
+            backlog_weighted_mean: self.backlog_weighted,
+            backlog_weighted_var: self.backlog_weighted_var,
         }
     }
 
@@ -1134,6 +1317,7 @@ impl EventCluster {
             down_since: 0.0,
             downtime: 0.0,
             spawned_at: now,
+            ready_at: now + self.cfg.cluster.autoscale.provision_delay,
             retired_at: None,
             seen_outcomes: 0,
             seen_aborted: 0,
@@ -1161,7 +1345,7 @@ impl EventCluster {
         for req in &moved {
             if let Some(f) = self.in_flight.remove(&req.id) {
                 debug_assert_eq!(f.replica, victim, "in-flight map out of sync at drain");
-                self.release_backlog(f.replica, f.cost, f.var);
+                self.release_backlog(f.replica, f.cost, f.var, f.weight);
             }
         }
         moved.sort_by(|a, b| {
@@ -1286,7 +1470,10 @@ impl EventCluster {
                 self.replicas[thief].coord.advance_to(victim_now);
                 for req in moved {
                     let id = req.id;
-                    let accepted = self.replicas[thief].coord.submit(req);
+                    // stealing is a migration: the request already passed
+                    // admission on the victim, so the thief must not
+                    // re-apply (class-aware) admission and refuse it
+                    let accepted = self.replicas[thief].coord.submit_exempt(req);
                     debug_assert!(accepted, "idle thief must accept within its window");
                     if !accepted {
                         continue;
@@ -1402,6 +1589,7 @@ impl EventCluster {
             },
             &self.merged_outcomes(),
             warmup_fraction,
+            &self.cfg.slo.specs,
         )
     }
 }
@@ -1673,6 +1861,32 @@ mod tests {
         // at q=0.5 (z=0) it degrades to exactly the mean router's choice
         let mut q50 = QuantileCostRouter::new(0.5);
         assert_eq!(q50.route(&r, 1.0, &views), 0);
+    }
+
+    #[test]
+    fn class_aware_router_gives_interactive_headroom() {
+        let mut r = ClassAwareRouter::new(Box::new(RoundRobinRouter::default()));
+        // replica 0: 95% KV occupancy (no headroom), small backlog;
+        // replica 1: plenty of headroom, larger backlog
+        let mut views = vec![view(0, 3, 95, 100.0, 1.0), view(1, 3, 10, 400.0, 1.0)];
+        let mut req = any_req();
+        req.slo = SloClass::Interactive;
+        // interactive avoids the KV-saturated replica even though its
+        // backlog is smaller
+        assert_eq!(r.route(&req, 1.0, &views), 1);
+        // batch delegates to the inner round-robin (first call -> slot 0)
+        req.slo = SloClass::Batch;
+        assert_eq!(r.route(&req, 1.0, &views), 0);
+        // no replica has KV headroom: fall back to the full set, picked on
+        // the p95 quantile of outstanding cost (tail-averse placement)
+        views[1].kv_used_blocks = 96;
+        views[0].predicted_backlog_var = 250_000.0; // sd 500
+        views[1].predicted_backlog_var = 0.0;
+        req.slo = SloClass::Interactive;
+        // q0 = 100 + 1.645*500 ~= 922 > q1 = 400
+        assert_eq!(r.route(&req, 1.0, &views), 1);
+        // wrapper is label-transparent for A/B reporting
+        assert_eq!(r.kind(), RouterKind::RoundRobin);
     }
 
     #[test]

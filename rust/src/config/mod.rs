@@ -5,6 +5,7 @@
 //! or from a JSON file ([`ExperimentConfig::from_json`]); `sagesched --config`
 //! accepts the same schema.
 
+use crate::slo::{SloClass, SloConfig};
 use crate::util::json::Json;
 
 /// Which scheduling policy drives the coordinator.
@@ -747,6 +748,11 @@ impl EngineProfile {
 pub struct WorkloadConfig {
     /// (dataset, weight) mixture; weights need not sum to 1.
     pub mix: Vec<(DatasetKind, f64)>,
+    /// (SLO class, weight) mixture the generator stamps requests with;
+    /// weights need not sum to 1. Stamping draws from a *dedicated* RNG
+    /// stream, so changing the mix never perturbs the arrival/sampling
+    /// streams of an existing seeded trace.
+    pub slo_mix: Vec<(SloClass, f64)>,
     /// Long-run mean arrival rate, requests per second.
     pub rps: f64,
     /// Arrival-process shape pacing the stream at that mean rate.
@@ -773,6 +779,11 @@ impl Default for WorkloadConfig {
                 (DatasetKind::ShareGpt, 1.0),
                 (DatasetKind::Alpaca, 1.0),
                 (DatasetKind::Write, 1.0),
+            ],
+            slo_mix: vec![
+                (SloClass::Interactive, 0.25),
+                (SloClass::Standard, 0.5),
+                (SloClass::Batch, 0.25),
             ],
             rps: 8.0,
             arrival: ArrivalConfig::default(),
@@ -837,6 +848,9 @@ pub struct ExperimentConfig {
     /// Multi-replica cluster shape (used by `sagesched cluster` and
     /// [`crate::cluster`]'s event-driven simulation).
     pub cluster: ClusterConfig,
+    /// Per-request SLO classes: tier targets/weights and the class-aware
+    /// scheduling/admission/routing switch (see [`crate::slo`]).
+    pub slo: SloConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -863,6 +877,7 @@ impl Default for ExperimentConfig {
             max_queue: 0,
             request_timeout: 0.0,
             cluster: ClusterConfig::default(),
+            slo: SloConfig::default(),
         }
     }
 }
@@ -931,6 +946,42 @@ impl ExperimentConfig {
                     cfg.workload.mix = mix;
                 }
             }
+            if let Some(arr) = w.get("slo_mix").and_then(Json::as_arr) {
+                let mut mix = Vec::new();
+                for item in arr {
+                    let name = item.str_or("class", "");
+                    let class = SloClass::from_name(name)
+                        .ok_or_else(|| format!("unknown slo class {name}"))?;
+                    mix.push((class, item.f64_or("weight", 1.0)));
+                }
+                if !mix.is_empty() {
+                    crate::slo::validate_mix(&mix)
+                        .map_err(|e| format!("workload.{e}"))?;
+                    cfg.workload.slo_mix = mix;
+                }
+            }
+        }
+        if let Some(s) = j.get("slo") {
+            let slo = &mut cfg.slo;
+            if let Some(aware) = s.get("class_aware").and_then(Json::as_bool) {
+                slo.class_aware = aware;
+            }
+            slo.sched_quantile = s.f64_or("sched_quantile", slo.sched_quantile);
+            slo.cost_time_scale = s.f64_or("cost_time_scale", slo.cost_time_scale);
+            if let Some(classes) = s.get("classes").and_then(Json::as_arr) {
+                for item in classes {
+                    let name = item.str_or("class", "");
+                    let class = SloClass::from_name(name)
+                        .ok_or_else(|| format!("unknown slo class {name}"))?;
+                    let spec = slo.specs.spec_mut(class);
+                    spec.ttft_target = item.f64_or("ttft", spec.ttft_target);
+                    spec.ttlt_target = item.f64_or("ttlt", spec.ttlt_target);
+                    spec.weight = item.f64_or("weight", spec.weight);
+                    spec.admit_fraction =
+                        item.f64_or("admit_fraction", spec.admit_fraction);
+                }
+            }
+            slo.validate()?;
         }
         if let Some(c) = j.get("cluster") {
             cfg.cluster.replicas =
@@ -1290,6 +1341,43 @@ mod tests {
             r#"{"cluster":{"autoscale":{"quantile":2.0}}}"#,
             r#"{"cluster":{"router_quantile":1.5}}"#,
             r#"{"cluster":{"steal_transfer_per_token":-1}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn from_json_parses_slo_blocks() {
+        let j = Json::parse(
+            r#"{"slo":{"class_aware":true,"sched_quantile":0.95,
+                "classes":[{"class":"interactive","ttft":1.5,"ttlt":15,
+                            "weight":8,"admit_fraction":1.0},
+                           {"class":"batch","admit_fraction":0.5}]},
+                "workload":{"slo_mix":[{"class":"interactive","weight":0.6},
+                                       {"class":"batch","weight":0.4}]}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert!(c.slo.class_aware);
+        assert_eq!(c.slo.sched_quantile, 0.95);
+        let spec = c.slo.specs.spec(SloClass::Interactive);
+        assert_eq!(spec.ttft_target, 1.5);
+        assert_eq!(spec.ttlt_target, 15.0);
+        assert_eq!(spec.weight, 8.0);
+        assert_eq!(c.slo.specs.spec(SloClass::Batch).admit_fraction, 0.5);
+        // untouched class keeps its default
+        assert_eq!(c.slo.specs.spec(SloClass::Standard).weight, 1.0);
+        assert_eq!(
+            c.workload.slo_mix,
+            vec![(SloClass::Interactive, 0.6), (SloClass::Batch, 0.4)]
+        );
+        for bad in [
+            r#"{"slo":{"classes":[{"class":"zzz"}]}}"#,
+            r#"{"slo":{"sched_quantile":2.0}}"#,
+            r#"{"slo":{"classes":[{"class":"batch","weight":-1}]}}"#,
+            r#"{"workload":{"slo_mix":[{"class":"zzz","weight":1}]}}"#,
+            r#"{"workload":{"slo_mix":[{"class":"batch","weight":0}]}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(ExperimentConfig::from_json(&j).is_err(), "accepted {bad}");

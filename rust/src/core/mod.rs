@@ -3,6 +3,7 @@
 use crate::config::DatasetKind;
 use crate::distribution::LengthDist;
 use crate::embedding::Embedding;
+use crate::slo::SloClass;
 
 /// Unique request identifier (monotone per workload).
 pub type RequestId = u64;
@@ -33,6 +34,9 @@ pub struct Request {
     pub embedding: Embedding,
     /// Ground-truth output-length distribution of this request's topic.
     pub true_dist: Option<LengthDist>,
+    /// Latency tier this request was submitted under (stamped by the
+    /// workload generator; see [`crate::slo`]).
+    pub slo: SloClass,
 }
 
 /// Lifecycle phase of a request inside the coordinator.
@@ -53,6 +57,8 @@ pub enum Phase {
 pub struct RequestOutcome {
     pub id: RequestId,
     pub dataset: DatasetKind,
+    /// Latency tier the request was served under.
+    pub slo: SloClass,
     pub input_len: u32,
     pub output_len: u32,
     pub arrival: f64,
@@ -87,6 +93,7 @@ mod tests {
         RequestOutcome {
             id: 1,
             dataset: DatasetKind::ShareGpt,
+            slo: SloClass::Standard,
             input_len: 10,
             output_len: 20,
             arrival: 100.0,

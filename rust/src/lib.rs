@@ -43,6 +43,7 @@ pub mod runtime;
 pub mod sched;
 pub mod serve;
 pub mod server;
+pub mod slo;
 pub mod tokenizer;
 pub mod util;
 pub mod workload;
@@ -66,5 +67,6 @@ pub mod prelude {
     pub use crate::predictor::{HistoryPredictor, Predictor};
     pub use crate::sched::Policy;
     pub use crate::serve::{run_experiment, Coordinator};
+    pub use crate::slo::{ClassAwarePolicy, SloClass, SloClassSpec, SloConfig, SloSpecs};
     pub use crate::workload::WorkloadGen;
 }

@@ -113,6 +113,17 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
             bail!("{e} (--autoscale/--scale-* flags)");
         }
     }
+    if args.has("slo-aware") {
+        cfg.slo.class_aware = true;
+    }
+    if let Some(m) = args.get("slo-mix") {
+        cfg.workload.slo_mix =
+            sagesched::slo::parse_mix(m).map_err(|e| anyhow::anyhow!("--slo-mix: {e}"))?;
+    }
+    cfg.slo.sched_quantile = args.f64_or("slo-quantile", cfg.slo.sched_quantile);
+    if let Err(e) = cfg.slo.validate() {
+        bail!("{e} (--slo-aware/--slo-mix/--slo-quantile flags)");
+    }
     if let Some(s) = args.get("speeds") {
         cfg.cluster.speeds = parse_f64_list("speeds", s)?;
         if cfg.cluster.speeds.iter().any(|&v| v <= 0.0) {
@@ -162,7 +173,36 @@ fn print_report(report: &RunReport, as_json: bool) {
             report.rejected,
             report.aborted
         );
+        print_slo_summary(report);
     }
+}
+
+/// Per-SLO-class attainment lines shared by `run` and `cluster` summaries.
+fn print_slo_summary(report: &RunReport) {
+    if report.slo.is_empty() {
+        return;
+    }
+    for (name, s) in &report.slo {
+        if s.submitted() == 0 {
+            continue;
+        }
+        println!(
+            "  slo {name}: attainment {:.1}% ({} of {} within ttft<={:.1}s \
+             ttlt<={:.1}s; {} rejected, {} timed out; TTLT p90 {:.2}s)",
+            s.attainment() * 100.0,
+            s.attained,
+            s.submitted(),
+            s.ttft_target,
+            s.ttlt_target,
+            s.rejected,
+            s.aborted,
+            s.ttlt.p90,
+        );
+    }
+    println!(
+        "  slo-weighted goodput: {:.3}",
+        report.slo_weighted_goodput()
+    );
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -246,6 +286,7 @@ fn cmd_smoke(args: &Args) -> Result<()> {
         topic: 0,
         embedding: sagesched::embedding::Embedding::normalize(vec![1.0; 8]),
         true_dist: None,
+        slo: sagesched::slo::SloClass::Standard,
     };
     let _ = engine.prefill(&req)?;
     let mut lanes = vec![LaneState::new(&req, 1)];
@@ -270,7 +311,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rt = Runtime::load(&dir)?;
     let cfg = config_from_args(args)?;
     let engine = RealEngine::new(rt, cfg.seed);
-    let policy = sagesched::sched::make_policy(&cfg);
+    let mut policy = sagesched::sched::make_policy(&cfg);
+    if cfg.slo.class_aware {
+        policy = Box::new(sagesched::slo::ClassAwarePolicy::new(
+            policy,
+            cfg.slo.clone(),
+        ));
+    }
     let predictor = sagesched::predictor::make_predictor(
         cfg.predictor,
         engine.runtime().meta().d_model,
@@ -279,13 +326,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.seed,
     );
     let cost = sagesched::cost::make_cost_model(cfg.cost_model);
-    let coord = Coordinator::new(
+    let mut coord = Coordinator::new(
         engine,
         policy,
         predictor,
         cost,
         sagesched::config::PreemptMode::Recompute,
     );
+    coord.slo = cfg.slo.clone();
     let handle = sagesched::server::serve(&addr, coord)?;
     println!("serving on http://{} (policy: {})", handle.addr, cfg.policy.name());
     println!("POST /v1/generate {{\"prompt\": \"...\"}} | GET /metrics | GET /healthz");
@@ -372,6 +420,15 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             );
         }
     }
+    if cfg.slo.class_aware {
+        let mix: Vec<String> = cfg
+            .workload
+            .slo_mix
+            .iter()
+            .map(|(c, w)| format!("{}:{w}", c.name()))
+            .collect();
+        println!("# slo: class-aware serving (mix {})", mix.join(","));
+    }
     println!("{}", ClusterReport::markdown_header());
     let mut reports = Vec::new();
     for router in routers {
@@ -383,7 +440,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         println!(
             "# {}: goodput {:.1}% ({} completed, {} rejected, {} timed out, \
              {} re-routed, {} drained, {} stolen, {} steals skipped) — \
-             {:.0} replica-s, {:.3} goodput/replica-s",
+             {:.0} replica-s, {:.3} goodput/replica-s, \
+             {:.3} slo-weighted gp/replica-s",
             r.router,
             r.aggregate.goodput() * 100.0,
             r.aggregate.completed,
@@ -394,8 +452,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             r.stolen,
             r.steals_skipped,
             r.total_replica_seconds(),
-            r.goodput_per_replica_second
+            r.goodput_per_replica_second,
+            r.slo_weighted_goodput_per_replica_second
         );
+        print_slo_summary(&r.aggregate);
     }
     if let Some(r) = reports.iter().find(|r| !r.scaling_events.is_empty()) {
         println!("\n## scaling timeline ({})", r.router);
@@ -482,6 +542,11 @@ const USAGE: &str = "usage: sagesched <run|sweep|smoke|serve|cluster> [flags]
           --scale-prewarm               prewarm new replicas' predictors
   cluster --overhead   fig12 shared-service overhead sweep (--nodes 1,4,16,64)
   gen-trace record a workload trace           (--out trace.jsonl --n 1000)
+  SLO classes (run / sweep / cluster / gen-trace):
+          --slo-aware                  class-aware scheduling/admission/routing
+          --slo-mix interactive:0.25,standard:0.5,batch:0.25  stamping mix
+          --slo-quantile 0.9           deadline-slack cost quantile
+          (tier targets/weights via the JSON config's "slo" block)
   arrival-process flags (run / sweep / cluster / gen-trace):
           --arrival poisson|mmpp|diurnal
           --burst-factor 6 --burst-on 10 --burst-off 40       (mmpp)

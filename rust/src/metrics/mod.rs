@@ -8,8 +8,87 @@ use std::collections::BTreeMap;
 use crate::autoscale::ScalingEvent;
 use crate::config::DatasetKind;
 use crate::core::RequestOutcome;
+use crate::slo::{SloClass, SloSpecs};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+
+/// Per-SLO-class accounting of one run: loss counters over the full run,
+/// latency summaries over the measured (post-warmup) portion, and the
+/// attainment rate against the class targets.
+#[derive(Clone, Debug, Default)]
+pub struct SloClassStats {
+    /// Goodput weight of this class (from the tier spec).
+    pub weight: f64,
+    pub ttft_target: f64,
+    pub ttlt_target: f64,
+    /// Full-run completions of this class.
+    pub completed: u64,
+    /// Full-run admission rejections of this class.
+    pub rejected: u64,
+    /// Full-run queue-timeout aborts of this class.
+    pub aborted: u64,
+    /// Full-run completions that met both the TTFT and TTLT targets.
+    pub attained: u64,
+    /// Post-warmup outcomes the summaries below cover.
+    pub measured: usize,
+    pub ttft: Summary,
+    pub ttlt: Summary,
+}
+
+impl SloClassStats {
+    /// Requests of this class the system accepted responsibility for.
+    pub fn submitted(&self) -> u64 {
+        self.completed + self.rejected + self.aborted
+    }
+
+    /// Fraction of *submitted* requests that completed within their SLO
+    /// (a rejection or timeout is an SLO miss, not a statistical no-show).
+    pub fn attainment(&self) -> f64 {
+        let n = self.submitted();
+        if n == 0 {
+            0.0
+        } else {
+            self.attained as f64 / n as f64
+        }
+    }
+}
+
+/// Assemble the per-class stats map: loss counters indexed by
+/// [`SloClass::index`], attainment judged over `all` (full-run) outcomes,
+/// latency summaries over the `measured` (post-warmup) subset.
+pub fn slo_class_stats(
+    specs: &SloSpecs,
+    measured: &[RequestOutcome],
+    all: &[RequestOutcome],
+    rejected_by_class: &[u64; 3],
+    aborted_by_class: &[u64; 3],
+) -> BTreeMap<&'static str, SloClassStats> {
+    let mut map = BTreeMap::new();
+    for class in SloClass::ALL {
+        let spec = specs.spec(class);
+        let mut s = SloClassStats {
+            weight: spec.weight,
+            ttft_target: spec.ttft_target,
+            ttlt_target: spec.ttlt_target,
+            rejected: rejected_by_class[class.index()],
+            aborted: aborted_by_class[class.index()],
+            ..SloClassStats::default()
+        };
+        for o in all.iter().filter(|o| o.slo == class) {
+            s.completed += 1;
+            if spec.attained(o.ttft(), o.ttlt()) {
+                s.attained += 1;
+            }
+        }
+        let sub: Vec<&RequestOutcome> =
+            measured.iter().filter(|o| o.slo == class).collect();
+        s.measured = sub.len();
+        s.ttft = Summary::of(&sub.iter().map(|o| o.ttft()).collect::<Vec<_>>());
+        s.ttlt = Summary::of(&sub.iter().map(|o| o.ttlt()).collect::<Vec<_>>());
+        map.insert(class.name(), s);
+    }
+    map
+}
 
 /// Full accounting of one experiment run.
 #[derive(Clone, Debug, Default)]
@@ -24,6 +103,10 @@ pub struct RunReport {
     pub tpot: Summary,
     /// per-dataset TTLT
     pub ttlt_by_dataset: BTreeMap<&'static str, Summary>,
+    /// Per-SLO-class latency/attainment/loss accounting (see
+    /// [`slo_class_stats`]; filled by the coordinator/cluster report
+    /// builders, empty when built via [`RunReport::from_outcomes`] alone).
+    pub slo: BTreeMap<&'static str, SloClassStats>,
     /// end-to-end span of the measured portion (s)
     pub makespan: f64,
     /// measured request throughput (req/s)
@@ -99,6 +182,25 @@ impl RunReport {
         }
     }
 
+    /// SLO-weighted goodput: Σ_c weight_c · attained_c over
+    /// Σ_c weight_c · submitted_c — the production "overall efficiency"
+    /// where a completion only counts if it met its class targets, scaled
+    /// by what that class is worth. 1.0 when every submitted request
+    /// attained its SLO; 1.0 (vacuously) when the per-class map is empty.
+    pub fn slo_weighted_goodput(&self) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for s in self.slo.values() {
+            num += s.weight * s.attained as f64;
+            den += s.weight * s.submitted() as f64;
+        }
+        if den == 0.0 {
+            1.0
+        } else {
+            num / den
+        }
+    }
+
     /// One markdown table row (pairs with [`RunReport::markdown_header`]).
     pub fn markdown_row(&self) -> String {
         format!(
@@ -135,6 +237,25 @@ impl RunReport {
         for (name, s) in &self.ttlt_by_dataset {
             by_ds.push((*name, summary(s)));
         }
+        let mut by_slo = Vec::new();
+        for (name, s) in &self.slo {
+            by_slo.push((
+                *name,
+                Json::obj(vec![
+                    ("weight", Json::num(s.weight)),
+                    ("ttft_target", Json::num(s.ttft_target)),
+                    ("ttlt_target", Json::num(s.ttlt_target)),
+                    ("completed", Json::num(s.completed as f64)),
+                    ("rejected", Json::num(s.rejected as f64)),
+                    ("aborted", Json::num(s.aborted as f64)),
+                    ("attained", Json::num(s.attained as f64)),
+                    ("attainment", Json::num(s.attainment())),
+                    ("measured", Json::num(s.measured as f64)),
+                    ("ttft", summary(&s.ttft)),
+                    ("ttlt", summary(&s.ttlt)),
+                ]),
+            ));
+        }
         Json::obj(vec![
             ("policy", Json::str(self.policy.clone())),
             ("predictor", Json::str(self.predictor.clone())),
@@ -144,6 +265,8 @@ impl RunReport {
             ("ttft", summary(&self.ttft)),
             ("tpot", summary(&self.tpot)),
             ("ttlt_by_dataset", Json::obj(by_ds)),
+            ("slo", Json::obj(by_slo)),
+            ("slo_weighted_goodput", Json::num(self.slo_weighted_goodput())),
             ("makespan", Json::num(self.makespan)),
             ("throughput", Json::num(self.throughput)),
             ("completed", Json::num(self.completed as f64)),
@@ -198,6 +321,10 @@ pub struct ClusterReport {
     /// provisioning-efficiency headline: a static fleet pays replica-seconds
     /// through every trough, an elastic one only for capacity it asked for.
     pub goodput_per_replica_second: f64,
+    /// SLO-weighted attained requests per total replica-second: the same
+    /// efficiency headline, but a completion only counts if it met its
+    /// class targets, scaled by the class weight.
+    pub slo_weighted_goodput_per_replica_second: f64,
     /// Completion imbalance: max replica completions / mean replica
     /// completions (1.0 = perfectly balanced; 0.0 when nothing completed).
     pub imbalance: f64,
@@ -235,6 +362,7 @@ impl ClusterReport {
         counters: ClusterCounters,
         merged: &[RequestOutcome],
         warmup_fraction: f64,
+        slo_specs: &SloSpecs,
     ) -> ClusterReport {
         let mut by_arrival = merged.to_vec();
         by_arrival.sort_by(|a, b| {
@@ -267,6 +395,26 @@ impl ClusterReport {
             aggregate.predict_overhead += r.predict_overhead;
             aggregate.sched_overhead += r.sched_overhead;
         }
+        // per-class loss counters live on the replicas' reports (each
+        // coordinator owns its rejection/abort counts); attainment and
+        // latency summaries come from the merged outcome stream
+        let mut rejected_by_class = [0u64; 3];
+        let mut aborted_by_class = [0u64; 3];
+        for r in &per_replica {
+            for class in SloClass::ALL {
+                if let Some(s) = r.slo.get(class.name()) {
+                    rejected_by_class[class.index()] += s.rejected;
+                    aborted_by_class[class.index()] += s.aborted;
+                }
+            }
+        }
+        aggregate.slo = slo_class_stats(
+            slo_specs,
+            measured,
+            &by_arrival,
+            &rejected_by_class,
+            &aborted_by_class,
+        );
         let counts: Vec<f64> = per_replica.iter().map(|r| r.measured as f64).collect();
         let total: f64 = counts.iter().sum();
         let imbalance = if total > 0.0 && !counts.is_empty() {
@@ -278,6 +426,16 @@ impl ClusterReport {
         let total_replica_seconds: f64 = counters.replica_seconds.iter().sum();
         let goodput_per_replica_second = if total_replica_seconds > 0.0 {
             aggregate.completed as f64 / total_replica_seconds
+        } else {
+            0.0
+        };
+        let weighted_attained: f64 = aggregate
+            .slo
+            .values()
+            .map(|s| s.weight * s.attained as f64)
+            .sum();
+        let slo_weighted_goodput_per_replica_second = if total_replica_seconds > 0.0 {
+            weighted_attained / total_replica_seconds
         } else {
             0.0
         };
@@ -295,6 +453,7 @@ impl ClusterReport {
             replica_seconds: counters.replica_seconds,
             scaling_events: counters.scaling_events,
             goodput_per_replica_second,
+            slo_weighted_goodput_per_replica_second,
             imbalance,
         }
     }
@@ -370,6 +529,10 @@ impl ClusterReport {
                 "goodput_per_replica_second",
                 Json::num(self.goodput_per_replica_second),
             ),
+            (
+                "slo_weighted_goodput_per_replica_second",
+                Json::num(self.slo_weighted_goodput_per_replica_second),
+            ),
             ("imbalance", Json::num(self.imbalance)),
         ])
     }
@@ -383,6 +546,7 @@ mod tests {
         RequestOutcome {
             id,
             dataset: ds,
+            slo: SloClass::Standard,
             input_len: 10,
             output_len: 10,
             arrival: arr,
@@ -457,7 +621,14 @@ mod tests {
                 action: crate::autoscale::ScaleAction::Drain,
             }],
         };
-        let c = ClusterReport::new("least-loaded".into(), vec![r0, r1], counters, &merged, 0.0);
+        let c = ClusterReport::new(
+            "least-loaded".into(),
+            vec![r0, r1],
+            counters,
+            &merged,
+            0.0,
+            &SloSpecs::default(),
+        );
         assert_eq!(c.replicas, 2);
         assert_eq!(c.aggregate.measured, 4);
         // counts 3 and 1: mean 2, max 3 -> imbalance 1.5
@@ -500,6 +671,50 @@ mod tests {
             2.0
         );
         assert!(j.get("aggregate").unwrap().f64_or("goodput", -1.0) > 0.0);
+    }
+
+    #[test]
+    fn slo_stats_count_attainment_and_weight_goodput() {
+        let specs = SloSpecs::default();
+        // interactive targets: ttft 2, ttlt 20
+        let mut fast = outcome(1, DatasetKind::ShareGpt, 0.0, 1.0, 5.0);
+        fast.slo = SloClass::Interactive;
+        let mut slow = outcome(2, DatasetKind::ShareGpt, 0.0, 1.0, 30.0); // misses ttlt
+        slow.slo = SloClass::Interactive;
+        let mut batch = outcome(3, DatasetKind::Write, 0.0, 1.0, 100.0); // batch ok
+        batch.slo = SloClass::Batch;
+        let all = vec![fast, slow, batch];
+        let rejected = [0u64, 2, 1]; // 2 standard rejections, 1 batch
+        let aborted = [0u64; 3];
+        let map = slo_class_stats(&specs, &all, &all, &rejected, &aborted);
+        let i = &map["interactive"];
+        assert_eq!(i.completed, 2);
+        assert_eq!(i.attained, 1);
+        assert!((i.attainment() - 0.5).abs() < 1e-12);
+        let b = &map["batch"];
+        assert_eq!(b.completed, 1);
+        assert_eq!(b.attained, 1);
+        assert_eq!(b.submitted(), 2);
+        assert!((b.attainment() - 0.5).abs() < 1e-12);
+        let s = &map["standard"];
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.submitted(), 2);
+        assert_eq!(s.attainment(), 0.0);
+        let mut r = RunReport::from_outcomes(&all);
+        r.slo = map;
+        // weighted: attained 4*1 + 0.25*1 = 4.25;
+        // submitted 4*2 + 1*2 + 0.25*2 = 10.5
+        assert!((r.slo_weighted_goodput() - 4.25 / 10.5).abs() < 1e-12);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let js = j.get("slo").unwrap().get("interactive").unwrap();
+        assert_eq!(js.f64_or("attained", -1.0), 1.0);
+        assert!(j.f64_or("slo_weighted_goodput", -1.0) > 0.0);
+    }
+
+    #[test]
+    fn empty_slo_map_is_vacuously_perfect() {
+        let r = RunReport::from_outcomes(&[]);
+        assert_eq!(r.slo_weighted_goodput(), 1.0);
     }
 
     #[test]

@@ -504,6 +504,7 @@ mod tests {
             topic: 0,
             embedding: Embedding::normalize(vec![1.0]),
             true_dist: Some(LengthDist::point(output as f64)),
+            slo: crate::slo::SloClass::Standard,
         }
     }
 

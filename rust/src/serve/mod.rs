@@ -28,6 +28,7 @@ use crate::kvcache::{KvManager, KvResidence};
 use crate::metrics::RunReport;
 use crate::predictor::Predictor;
 use crate::sched::{Policy, ReqView};
+use crate::slo::{ClassAwarePolicy, SloClass, SloConfig};
 use crate::workload::WorkloadGen;
 
 /// KV block size in tokens (vLLM default 16).
@@ -69,6 +70,11 @@ pub struct Coordinator<E: Engine> {
     pub max_queue: usize,
     /// Abort requests still queued after this many seconds (0 = never)
     pub request_timeout: f64,
+    /// SLO tier table + class-aware switch: with `class_aware` on, each
+    /// class only admits while the live set is below its `admit_fraction`
+    /// of `max_queue` (Batch yields headroom to Interactive under
+    /// overload); off, admission is class-blind exactly as before.
+    pub slo: SloConfig,
     now: f64,
     live: Vec<Live>,
     outcomes: Vec<RequestOutcome>,
@@ -76,6 +82,10 @@ pub struct Coordinator<E: Engine> {
     pub rejected: u64,
     /// requests aborted after timing out in the queue
     pub aborted: u64,
+    /// per-SLO-class rejections (indexed by [`SloClass::index`])
+    pub rejected_by_class: [u64; 3],
+    /// per-SLO-class timeout aborts (indexed by [`SloClass::index`])
+    pub aborted_by_class: [u64; 3],
     preemption_count: u64,
     predict_overhead: f64,
     sched_overhead: f64,
@@ -107,11 +117,14 @@ impl<E: Engine> Coordinator<E> {
             preempt_finish_guard: 0,
             max_queue: 0,
             request_timeout: 0.0,
+            slo: SloConfig::default(),
             now: 0.0,
             live: Vec::new(),
             outcomes: Vec::new(),
             rejected: 0,
             aborted: 0,
+            rejected_by_class: [0; 3],
+            aborted_by_class: [0; 3],
             preemption_count: 0,
             predict_overhead: 0.0,
             sched_overhead: 0.0,
@@ -151,12 +164,46 @@ impl<E: Engine> Coordinator<E> {
         &self.outcomes
     }
 
+    /// Whether a request of `class` would be admitted right now. With
+    /// class-aware SLO serving each class fills only its `admit_fraction`
+    /// of the queue bound (so under overload Batch is refused while
+    /// headroom remains for Interactive); class-blind, this is the plain
+    /// `live < max_queue` check. The cluster's dispatcher consults this
+    /// before routing so its has-room view can never disagree with the
+    /// admission verdict.
+    pub fn admits(&self, class: SloClass) -> bool {
+        if self.max_queue == 0 {
+            return true;
+        }
+        let cap = if self.slo.class_aware {
+            let f = self.slo.specs.spec(class).admit_fraction;
+            ((self.max_queue as f64 * f).ceil() as usize).clamp(1, self.max_queue)
+        } else {
+            self.max_queue
+        };
+        self.live.len() < cap
+    }
+
     /// Admit one request (predict + derive cost distribution). Returns
     /// false (rejecting the request) when admission control is enabled and
-    /// the live set is full.
+    /// the live set is full for the request's class (see
+    /// [`Coordinator::admits`]).
     pub fn submit(&mut self, req: Request) -> bool {
-        if self.max_queue > 0 && self.live.len() >= self.max_queue {
+        self.submit_with(req, false)
+    }
+
+    /// Admission-exempt submission for *migrations* (work stealing,
+    /// scale-in drain fallback): the request already passed admission on
+    /// another replica, so moving it must never convert it into a
+    /// rejection.
+    pub fn submit_exempt(&mut self, req: Request) -> bool {
+        self.submit_with(req, true)
+    }
+
+    fn submit_with(&mut self, req: Request, exempt: bool) -> bool {
+        if !exempt && !self.admits(req.slo) {
             self.rejected += 1;
+            self.rejected_by_class[req.slo.index()] += 1;
             return false;
         }
         let t0 = Instant::now();
@@ -310,6 +357,7 @@ impl<E: Engine> Coordinator<E> {
                 let l = self.live.swap_remove(i);
                 self.policy.forget(l.req.id);
                 self.aborted += 1;
+                self.aborted_by_class[l.req.slo.index()] += 1;
             } else {
                 i += 1;
             }
@@ -536,6 +584,7 @@ impl<E: Engine> Coordinator<E> {
                 let outcome = RequestOutcome {
                     id: l.req.id,
                     dataset: l.req.dataset,
+                    slo: l.req.slo,
                     input_len: l.req.input_len,
                     output_len: l.generated,
                     arrival: l.req.arrival,
@@ -587,6 +636,13 @@ impl<E: Engine> Coordinator<E> {
         let skip = ((by_arrival.len() as f64) * warmup_fraction).floor() as usize;
         let measured = &by_arrival[skip.min(by_arrival.len())..];
         let mut r = RunReport::from_outcomes(measured);
+        r.slo = crate::metrics::slo_class_stats(
+            &self.slo.specs,
+            measured,
+            &by_arrival,
+            &self.rejected_by_class,
+            &self.aborted_by_class,
+        );
         r.policy = self.policy.name().to_string();
         r.predictor = self.predictor.name().to_string();
         r.cost_model = self.cost_model.kind().name().to_string();
@@ -622,7 +678,10 @@ pub fn build_sim_coordinator_with(
     seed: u64,
 ) -> Coordinator<SimEngine> {
     let engine = SimEngine::new(profile);
-    let policy = crate::sched::make_policy_seeded(cfg, seed);
+    let mut policy = crate::sched::make_policy_seeded(cfg, seed);
+    if cfg.slo.class_aware {
+        policy = Box::new(ClassAwarePolicy::new(policy, cfg.slo.clone()));
+    }
     let predictor = crate::predictor::make_predictor(
         cfg.predictor,
         cfg.workload.embed_dim,
@@ -637,6 +696,7 @@ pub fn build_sim_coordinator_with(
     c.preempt_finish_guard = cfg.preempt_finish_guard;
     c.max_queue = cfg.max_queue;
     c.request_timeout = cfg.request_timeout;
+    c.slo = cfg.slo.clone();
     c
 }
 
@@ -922,6 +982,71 @@ mod tests {
         assert_eq!(r.aborted, 2);
         assert_eq!(r.completed, 0);
         assert!(r.goodput() < 1e-9);
+    }
+
+    #[test]
+    fn class_aware_admission_degrades_batch_before_interactive() {
+        let mut cfg = small_cfg(PolicyKind::Fcfs);
+        cfg.slo.class_aware = true;
+        cfg.max_queue = 10;
+        let mut coord = build_sim_coordinator(&cfg);
+        let mut wl = cfg.workload.clone();
+        wl.n_requests = 14;
+        let reqs = WorkloadGen::new(wl, 8).generate().requests;
+        let mut batch_accepted = 0;
+        let mut interactive_accepted = 0;
+        for (k, mut r) in reqs.into_iter().enumerate() {
+            r.arrival = 0.0;
+            r.slo = if k < 10 { SloClass::Batch } else { SloClass::Interactive };
+            let ok = coord.submit(r);
+            if ok && k < 10 {
+                batch_accepted += 1;
+            } else if ok {
+                interactive_accepted += 1;
+            }
+        }
+        // batch fills only ceil(10 * 0.7) = 7 slots; interactive may use
+        // the reserved headroom up to the full bound of 10
+        assert_eq!(batch_accepted, 7);
+        assert_eq!(interactive_accepted, 3);
+        assert_eq!(coord.rejected, 4);
+        assert_eq!(coord.rejected_by_class, [1, 0, 3]);
+        // migrations bypass admission: an exempt submission still lands
+        let mut wl = cfg.workload.clone();
+        wl.n_requests = 1;
+        let mut extra = WorkloadGen::new(wl, 9).generate().requests.pop().unwrap();
+        extra.arrival = 0.0;
+        extra.slo = SloClass::Batch;
+        assert!(!coord.admits(SloClass::Batch));
+        assert!(coord.submit_exempt(extra));
+        // class-blind: identical requests fill the whole window
+        let mut blind = build_sim_coordinator(&small_cfg(PolicyKind::Fcfs));
+        blind.max_queue = 10;
+        let mut wl = cfg.workload.clone();
+        wl.n_requests = 14;
+        let reqs = WorkloadGen::new(wl, 8).generate().requests;
+        let accepted = reqs
+            .into_iter()
+            .map(|mut r| {
+                r.arrival = 0.0;
+                r.slo = SloClass::Batch;
+                blind.submit(r)
+            })
+            .filter(|&ok| ok)
+            .count();
+        assert_eq!(accepted, 10, "class-blind admission must ignore the class");
+    }
+
+    #[test]
+    fn class_aware_serving_still_completes_everything() {
+        let mut cfg = small_cfg(PolicyKind::SageSched);
+        cfg.slo.class_aware = true;
+        let report = run_experiment(&cfg).unwrap();
+        assert_eq!(report.measured, 120);
+        assert!((report.goodput() - 1.0).abs() < 1e-12);
+        // per-class accounting covers every request exactly once
+        let total: u64 = report.slo.values().map(|s| s.completed).sum();
+        assert_eq!(total, 120);
     }
 
     #[test]

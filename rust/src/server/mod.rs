@@ -172,6 +172,9 @@ pub fn serve(addr: &str, mut coord: Coordinator<RealEngine>) -> Result<ServerHan
                             topic: 0,
                             embedding: emb,
                             true_dist: None,
+                            // HTTP traffic defaults to the Standard tier
+                            // (tiered serving is a simulator-side study)
+                            slo: crate::slo::SloClass::Standard,
                         };
                         if let Some(mt) = sub.max_tokens {
                             coord.engine.max_output = mt;

@@ -1,0 +1,590 @@
+//! Per-request SLO classes: latency tiers with class-aware admission,
+//! scheduling, and routing.
+//!
+//! Production "overall efficiency" is efficiency *weighted by what each
+//! request is worth*: an interactive chat turn that misses its
+//! time-to-first-token budget is worth nothing to the user even if it
+//! eventually completes, while a batch summarization job is indifferent to
+//! minutes of queueing. This module makes that explicit with a small set of
+//! latency tiers ([`SloClass`]): each tier carries a TTFT target, a
+//! completion-deadline (TTLT) target, a goodput *weight*, and an admission
+//! headroom rule ([`SloClassSpec`]). The tier is stamped on every request by
+//! the workload generator (configurable mix via
+//! [`WorkloadConfig::slo_mix`](crate::config::WorkloadConfig)) and threads
+//! through the whole stack:
+//!
+//! * **Scheduling** — [`ClassAwarePolicy`] wraps any base
+//!   [`Policy`](crate::sched::Policy) (SageSched's Gittins refresh, the
+//!   baselines, the oracle) with a tier ladder: requests whose
+//!   *deadline slack* has run out are served first (most overdue first),
+//!   then Interactive, Standard, and Batch bands, each ordered by the inner
+//!   policy. Slack is judged against a configurable **quantile** of the
+//!   predicted *remaining* service-cost distribution, not its mean — the
+//!   robust-to-prediction-error stance of *Adaptively Robust LLM Inference
+//!   Optimization under Prediction Uncertainty*: a request whose cost tail
+//!   is heavy goes urgent sooner than its mean alone would suggest. The
+//!   urgent band doubles as the starvation guard: a Batch request ages into
+//!   it as its (loose but finite) deadline approaches, so sustained
+//!   Interactive load cannot starve Batch forever.
+//! * **Admission** — each tier admits only while the live set is below its
+//!   `admit_fraction` of the queue bound, so under overload Batch is
+//!   refused while headroom is still reserved for Interactive
+//!   (see [`Coordinator::submit`](crate::serve::Coordinator::submit)).
+//! * **Routing** — the cluster's class-aware router wrapper
+//!   ([`crate::cluster::ClassAwareRouter`]) sends tight tiers to replicas
+//!   with KV headroom, picked on a high quantile of the outstanding-cost
+//!   distribution; loose tiers keep the configured base router.
+//! * **Autoscaling** — the cluster reports a *weight*-scaled forecast
+//!   backlog so [`crate::autoscale::UncertaintyAware`] provisions for the
+//!   SLO-weighted work distribution rather than the raw one.
+//! * **Metrics** — [`crate::metrics::RunReport`] / `ClusterReport` carry
+//!   per-class latency percentiles, SLO-attainment rates, and SLO-weighted
+//!   goodput (including per replica-second), surfaced in CLI summaries,
+//!   JSON, and the `fig13c` bench (class-blind vs class-aware serving under
+//!   MMPP bursts plus a replica failure).
+//!
+//! With [`SloConfig::class_aware`] off (the default) every component
+//! behaves exactly as before: classes are still stamped and reported, but
+//! no decision reads them.
+
+use crate::sched::{Policy, ReqView};
+use crate::util::rng::Rng;
+
+/// A request's latency tier. Order matters: earlier tiers are tighter and
+/// are served/admitted preferentially by the class-aware components.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SloClass {
+    /// Chat-style traffic: tight TTFT and completion targets, top weight.
+    Interactive,
+    /// Default API traffic: moderate targets.
+    Standard,
+    /// Offline/bulk traffic: loose (but finite) targets, lowest weight.
+    Batch,
+}
+
+impl SloClass {
+    pub const ALL: [SloClass; 3] =
+        [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+
+    /// Dense index (0 = Interactive, 1 = Standard, 2 = Batch) for per-class
+    /// counter arrays.
+    pub fn index(&self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SloClass> {
+        SloClass::ALL.iter().copied().find(|c| c.name() == s)
+    }
+}
+
+/// Targets, weight, and admission rule of one latency tier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloClassSpec {
+    pub class: SloClass,
+    /// Time-to-first-token target (seconds).
+    pub ttft_target: f64,
+    /// Completion-deadline target measured from arrival (seconds). Also the
+    /// deadline the class-aware scheduler computes slack against.
+    pub ttlt_target: f64,
+    /// Goodput weight of one attained request of this class.
+    pub weight: f64,
+    /// Fraction of the admission window (`max_queue`) this class may fill:
+    /// with a bound of Q, a class-c request is admitted only while fewer
+    /// than `ceil(Q * admit_fraction)` requests are live. 1.0 = full
+    /// window; lower fractions make the class yield headroom to tighter
+    /// tiers under overload.
+    pub admit_fraction: f64,
+}
+
+impl SloClassSpec {
+    /// Whether a completed request with these latencies met the tier's SLO.
+    pub fn attained(&self, ttft: f64, ttlt: f64) -> bool {
+        ttft <= self.ttft_target && ttlt <= self.ttlt_target
+    }
+}
+
+/// The full tier table (one spec per [`SloClass`], in `SloClass::ALL`
+/// order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloSpecs {
+    specs: [SloClassSpec; 3],
+}
+
+impl Default for SloSpecs {
+    fn default() -> Self {
+        SloSpecs {
+            specs: [
+                SloClassSpec {
+                    class: SloClass::Interactive,
+                    ttft_target: 2.0,
+                    ttlt_target: 20.0,
+                    weight: 4.0,
+                    admit_fraction: 1.0,
+                },
+                SloClassSpec {
+                    class: SloClass::Standard,
+                    ttft_target: 8.0,
+                    ttlt_target: 60.0,
+                    weight: 1.0,
+                    admit_fraction: 0.9,
+                },
+                SloClassSpec {
+                    class: SloClass::Batch,
+                    ttft_target: 60.0,
+                    ttlt_target: 240.0,
+                    weight: 0.25,
+                    admit_fraction: 0.7,
+                },
+            ],
+        }
+    }
+}
+
+impl SloSpecs {
+    pub fn spec(&self, class: SloClass) -> &SloClassSpec {
+        &self.specs[class.index()]
+    }
+
+    pub fn spec_mut(&mut self, class: SloClass) -> &mut SloClassSpec {
+        &mut self.specs[class.index()]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &SloClassSpec> {
+        self.specs.iter()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for s in &self.specs {
+            let bad_num = s.ttft_target.is_nan()
+                || s.ttlt_target.is_nan()
+                || s.weight.is_nan()
+                || s.admit_fraction.is_nan();
+            if bad_num
+                || s.ttft_target <= 0.0
+                || s.ttlt_target < s.ttft_target
+                || s.weight <= 0.0
+                || !(0.0 < s.admit_fraction && s.admit_fraction <= 1.0)
+            {
+                return Err(format!(
+                    "slo class {}: need ttft > 0, ttlt >= ttft, weight > 0, \
+                     admit_fraction in (0,1]",
+                    s.class.name()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// SLO subsystem configuration (part of
+/// [`ExperimentConfig`](crate::config::ExperimentConfig)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloConfig {
+    /// Master switch: when false (the default) classes are stamped and
+    /// reported but no scheduling/admission/routing/autoscaling decision
+    /// reads them — bit-identical to pre-SLO behavior.
+    pub class_aware: bool,
+    /// Per-class targets, weights, and admission rules.
+    pub specs: SloSpecs,
+    /// Quantile of the predicted *remaining* cost distribution used for
+    /// deadline-slack estimation (robust tiering: 0.5 = mean-like, higher
+    /// values go urgent sooner on heavy-tailed work).
+    pub sched_quantile: f64,
+    /// Seconds of service per cost-model unit, converting the remaining
+    /// cost quantile into a time estimate for slack. Only the urgency
+    /// *threshold* depends on it, so rough calibration suffices; the
+    /// default matches the resource-bound cost of a typical request
+    /// (~1e5 units) taking a few seconds on the calibrated sim profiles.
+    pub cost_time_scale: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            class_aware: false,
+            specs: SloSpecs::default(),
+            sched_quantile: 0.9,
+            cost_time_scale: 3.0e-5,
+        }
+    }
+}
+
+impl SloConfig {
+    /// Parameter bounds shared by every config surface (JSON and CLI).
+    pub fn validate(&self) -> Result<(), String> {
+        self.specs.validate()?;
+        if !(0.0 < self.sched_quantile && self.sched_quantile < 1.0) {
+            return Err("slo: sched_quantile must be in (0,1)".to_string());
+        }
+        if self.cost_time_scale.is_nan() || self.cost_time_scale < 0.0 {
+            return Err("slo: cost_time_scale must be >= 0".to_string());
+        }
+        Ok(())
+    }
+}
+
+/// Semantic validation every (class, weight) mix must pass, whatever
+/// surface it arrived through (CLI grammar, JSON config): weights finite
+/// and non-negative, at least one positive. One function so the rules
+/// cannot drift between entry points.
+pub fn validate_mix(mix: &[(SloClass, f64)]) -> Result<(), String> {
+    for &(class, w) in mix {
+        if w.is_nan() || w < 0.0 {
+            return Err(format!(
+                "slo mix: weight for {} must be >= 0",
+                class.name()
+            ));
+        }
+    }
+    if mix.iter().all(|&(_, w)| w <= 0.0) {
+        return Err("slo mix: at least one class weight must be positive".to_string());
+    }
+    Ok(())
+}
+
+/// Parse a `class:weight` mix list — the CLI's `--slo-mix` grammar, e.g.
+/// `interactive:0.3,standard:0.5,batch:0.2`. Shared by the `sagesched`
+/// binary and the examples so the grammar cannot diverge; semantics are
+/// checked by [`validate_mix`].
+pub fn parse_mix(s: &str) -> Result<Vec<(SloClass, f64)>, String> {
+    let mut mix = Vec::new();
+    for item in s.split(',') {
+        let item = item.trim();
+        let (name, w) = item
+            .split_once(':')
+            .ok_or_else(|| format!("slo mix {item:?}: expected class:weight"))?;
+        let class = SloClass::from_name(name.trim())
+            .ok_or_else(|| format!("slo mix {item:?}: unknown class {name:?}"))?;
+        let weight: f64 = w
+            .trim()
+            .parse()
+            .map_err(|_| format!("slo mix {item:?}: bad weight"))?;
+        mix.push((class, weight));
+    }
+    validate_mix(&mix)?;
+    Ok(mix)
+}
+
+/// Deterministic class assigner: its own PCG stream, derived from the
+/// workload seed but independent of the arrival/sampling streams, so
+/// stamping classes never perturbs an existing seeded trace.
+pub struct ClassAssigner {
+    rng: Rng,
+    weights: Vec<f64>,
+    classes: Vec<SloClass>,
+}
+
+impl ClassAssigner {
+    pub fn new(mix: &[(SloClass, f64)], seed: u64) -> ClassAssigner {
+        let (classes, weights): (Vec<SloClass>, Vec<f64>) = mix.iter().copied().unzip();
+        ClassAssigner { rng: Rng::new(seed ^ 0x510_c1a5), weights, classes }
+    }
+
+    /// Draw the next request's class (one RNG draw per request).
+    pub fn next_class(&mut self) -> SloClass {
+        if self.classes.is_empty() {
+            return SloClass::Standard;
+        }
+        let i = self.rng.categorical(&self.weights);
+        self.classes[i]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Class-aware scheduling wrapper
+// ---------------------------------------------------------------------------
+
+/// Band width of the tier ladder; bands must not overlap after the
+/// coordinator's preemption hysteresis shaves a relative margin off running
+/// requests, hence the gap between band centers exceeds the squash range.
+const BAND: f64 = 4.0;
+/// Center of the urgent band, far below every class band.
+const URGENT_BASE: f64 = -12.0;
+
+/// Order-preserving squash of an unbounded priority into (-1, 1), so inner
+/// priorities of any scale fit inside one ladder band.
+fn squash(x: f64) -> f64 {
+    x / (1.0 + x.abs())
+}
+
+/// Class-aware wrapper around any base [`Policy`]: a deadline/tier ladder
+/// on top of the inner ordering.
+///
+/// Priority bands (smaller = served first):
+///
+/// 1. **Urgent** — requests whose deadline slack is exhausted. Slack is
+///    `arrival + ttlt_target − now − t̂`, where `t̂` converts the
+///    [`SloConfig::sched_quantile`] of the predicted *remaining* cost
+///    distribution to seconds via [`SloConfig::cost_time_scale`]. Ordered
+///    most-overdue first; this is also the aging path that keeps Batch from
+///    starving (its loose deadline eventually runs out too).
+/// 2. **Interactive**, 3. **Standard**, 4. **Batch** — each band ordered by
+///    the (squashed) inner policy priority.
+pub struct ClassAwarePolicy {
+    inner: Box<dyn Policy>,
+    cfg: SloConfig,
+}
+
+impl ClassAwarePolicy {
+    pub fn new(inner: Box<dyn Policy>, cfg: SloConfig) -> ClassAwarePolicy {
+        ClassAwarePolicy { inner, cfg }
+    }
+
+    /// Seconds of deadline slack left for `v`, robust to cost-tail error:
+    /// negative once the request must run *now* to have any chance of
+    /// meeting its completion target.
+    pub fn slack(&self, v: &ReqView) -> f64 {
+        let spec = self.cfg.specs.spec(v.req.slo);
+        let remaining_cost = v
+            .cost_dist
+            .conditional_excess(v.consumed_cost)
+            .map(|d| d.quantile(self.cfg.sched_quantile))
+            .unwrap_or(0.0);
+        let est_service = remaining_cost * self.cfg.cost_time_scale;
+        (v.req.arrival + spec.ttlt_target) - v.now - est_service
+    }
+}
+
+impl Policy for ClassAwarePolicy {
+    fn kind(&self) -> crate::config::PolicyKind {
+        self.inner.kind()
+    }
+
+    fn priority(&mut self, v: &ReqView) -> f64 {
+        let inner_p = self.inner.priority(v);
+        let slack = self.slack(v);
+        if slack <= 0.0 {
+            // most overdue first; inner ordering as an epsilon tie-break
+            URGENT_BASE + squash(slack) + 1e-6 * squash(inner_p)
+        } else {
+            let rank = v.req.slo.index() as f64;
+            rank * BAND + squash(inner_p)
+        }
+    }
+
+    fn preemptive(&self) -> bool {
+        self.inner.preemptive()
+    }
+
+    fn forget(&mut self, id: crate::core::RequestId) {
+        self.inner.forget(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetKind;
+    use crate::core::{Phase, Request};
+    use crate::cost::{CostModel, ResourceBoundCost};
+    use crate::distribution::LengthDist;
+    use crate::embedding::Embedding;
+    use crate::sched::FcfsPolicy;
+
+    fn req(id: u64, arrival: f64, slo: SloClass) -> Request {
+        Request {
+            id,
+            prompt: String::new(),
+            input_len: 10,
+            true_output_len: 50,
+            arrival,
+            dataset: DatasetKind::ShareGpt,
+            topic: 0,
+            embedding: Embedding::normalize(vec![1.0]),
+            true_dist: Some(LengthDist::point(50.0)),
+            slo,
+        }
+    }
+
+    fn view<'a>(
+        r: &'a Request,
+        now: f64,
+        pred: &'a LengthDist,
+        cost: &'a LengthDist,
+    ) -> ReqView<'a> {
+        ReqView {
+            req: r,
+            phase: Phase::Queued,
+            generated: 0,
+            pred_lengths: pred,
+            cost_dist: cost,
+            point_pred: pred.mean(),
+            consumed_cost: 0.0,
+            now,
+        }
+    }
+
+    #[test]
+    fn class_names_roundtrip() {
+        for c in SloClass::ALL {
+            assert_eq!(SloClass::from_name(c.name()), Some(c));
+        }
+        assert_eq!(SloClass::from_name("nope"), None);
+        assert_eq!(SloClass::Interactive.index(), 0);
+        assert_eq!(SloClass::Batch.index(), 2);
+    }
+
+    #[test]
+    fn default_specs_validate_and_order_tiers() {
+        let cfg = SloConfig::default();
+        assert!(cfg.validate().is_ok());
+        let s = &cfg.specs;
+        assert!(
+            s.spec(SloClass::Interactive).ttlt_target
+                < s.spec(SloClass::Standard).ttlt_target
+        );
+        assert!(
+            s.spec(SloClass::Standard).ttlt_target < s.spec(SloClass::Batch).ttlt_target
+        );
+        assert!(
+            s.spec(SloClass::Interactive).weight > s.spec(SloClass::Batch).weight
+        );
+        assert!(
+            s.spec(SloClass::Interactive).admit_fraction
+                > s.spec(SloClass::Batch).admit_fraction
+        );
+    }
+
+    #[test]
+    fn spec_validation_rejects_garbage() {
+        let mut cfg = SloConfig::default();
+        cfg.specs.spec_mut(SloClass::Batch).weight = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = SloConfig::default();
+        cfg.specs.spec_mut(SloClass::Standard).admit_fraction = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = SloConfig::default();
+        cfg.specs.spec_mut(SloClass::Interactive).ttlt_target = 0.5; // < ttft
+        assert!(cfg.validate().is_err());
+        let mut cfg = SloConfig::default();
+        cfg.sched_quantile = 1.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn mix_grammar_roundtrips_and_rejects_garbage() {
+        let mix = parse_mix("interactive:0.3, standard:0.5, batch:0.2").unwrap();
+        assert_eq!(
+            mix,
+            vec![
+                (SloClass::Interactive, 0.3),
+                (SloClass::Standard, 0.5),
+                (SloClass::Batch, 0.2),
+            ]
+        );
+        for bad in [
+            "interactive",
+            "zzz:0.5",
+            "interactive:x",
+            "interactive:-1",
+            "interactive:0,batch:0",
+        ] {
+            assert!(parse_mix(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn assigner_is_seeded_and_respects_degenerate_mix() {
+        let mix = vec![(SloClass::Interactive, 1.0)];
+        let mut a = ClassAssigner::new(&mix, 7);
+        for _ in 0..50 {
+            assert_eq!(a.next_class(), SloClass::Interactive);
+        }
+        let mix =
+            vec![(SloClass::Interactive, 1.0), (SloClass::Batch, 1.0)];
+        let seq = |seed| -> Vec<SloClass> {
+            let mut a = ClassAssigner::new(&mix, seed);
+            (0..100).map(|_| a.next_class()).collect()
+        };
+        assert_eq!(seq(42), seq(42), "same seed must stamp identically");
+        assert_ne!(seq(42), seq(43), "different seeds must differ");
+    }
+
+    #[test]
+    fn squash_is_monotone_and_bounded() {
+        let mut prev = -1.0;
+        for x in [-1e12, -100.0, -1.0, 0.0, 0.5, 3.0, 1e9] {
+            let s = squash(x);
+            assert!(s > prev, "squash not monotone at {x}");
+            assert!((-1.0..1.0).contains(&s));
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn tiers_order_fresh_requests_by_class() {
+        let mut p = ClassAwarePolicy::new(Box::new(FcfsPolicy), SloConfig::default());
+        let d = LengthDist::point(50.0);
+        let c = ResourceBoundCost.cost_dist(10, &d);
+        let (ri, rs, rb) = (
+            req(1, 0.0, SloClass::Interactive),
+            req(2, 0.0, SloClass::Standard),
+            req(3, 0.0, SloClass::Batch),
+        );
+        let pi = p.priority(&view(&ri, 0.0, &d, &c));
+        let ps = p.priority(&view(&rs, 0.0, &d, &c));
+        let pb = p.priority(&view(&rb, 0.0, &d, &c));
+        assert!(pi < ps && ps < pb, "tier ladder broken: {pi} {ps} {pb}");
+    }
+
+    #[test]
+    fn overdue_batch_outranks_fresh_interactive() {
+        // the starvation guard: a Batch request at its deadline ages into
+        // the urgent band, ahead of brand-new Interactive traffic
+        let cfg = SloConfig::default();
+        let batch_deadline = cfg.specs.spec(SloClass::Batch).ttlt_target;
+        let mut p = ClassAwarePolicy::new(Box::new(FcfsPolicy), cfg);
+        let d = LengthDist::point(50.0);
+        let c = ResourceBoundCost.cost_dist(10, &d);
+        let now = batch_deadline + 1.0;
+        let old_batch = req(1, 0.0, SloClass::Batch);
+        let fresh_int = req(2, now, SloClass::Interactive);
+        let pb = p.priority(&view(&old_batch, now, &d, &c));
+        let pi = p.priority(&view(&fresh_int, now, &d, &c));
+        assert!(
+            pb < pi,
+            "overdue batch ({pb}) must outrank fresh interactive ({pi})"
+        );
+    }
+
+    #[test]
+    fn heavier_cost_tail_goes_urgent_sooner() {
+        // equal means, different tails: the quantile-based slack must mark
+        // the heavy-tailed request urgent at a time when the narrow one
+        // still has slack
+        let mut cfg = SloConfig::default();
+        cfg.sched_quantile = 0.9;
+        cfg.cost_time_scale = 1.0e-3;
+        let p = ClassAwarePolicy::new(Box::new(FcfsPolicy), cfg.clone());
+        let narrow = LengthDist::point(10_000.0);
+        let wide = LengthDist::from_weighted(&[(1_000.0, 0.5), (19_000.0, 0.5)]);
+        assert!((narrow.mean() - wide.mean()).abs() < 1e-6);
+        let r = req(1, 0.0, SloClass::Interactive);
+        // at this instant: slack = 20 - now - q90_cost * 1e-3
+        // narrow: q90 = 10k -> est 10 s; wide: q90 = 19k -> est 19 s
+        let now = 5.0;
+        let s_narrow = p.slack(&view(&r, now, &narrow, &narrow));
+        let s_wide = p.slack(&view(&r, now, &wide, &wide));
+        assert!(s_narrow > 0.0, "narrow tail must still have slack: {s_narrow}");
+        assert!(s_wide < 0.0, "heavy tail must be urgent already: {s_wide}");
+    }
+
+    #[test]
+    fn wrapper_forwards_inner_semantics() {
+        let p = ClassAwarePolicy::new(Box::new(FcfsPolicy), SloConfig::default());
+        assert!(!p.preemptive(), "must forward inner preemptive()");
+        assert_eq!(p.kind(), crate::config::PolicyKind::Fcfs);
+    }
+}

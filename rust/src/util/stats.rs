@@ -103,13 +103,38 @@ pub fn normal_quantile(p: f64) -> f64 {
     }
 }
 
+/// Error function via the Abramowitz–Stegun 7.1.26 rational approximation
+/// (|absolute error| < 1.5e-7), odd-extended to negative arguments.
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    const A1: f64 = 0.254829592;
+    const A2: f64 = -0.284496736;
+    const A3: f64 = 1.421413741;
+    const A4: f64 = -1.453152027;
+    const A5: f64 = 1.061405429;
+    const P: f64 = 0.3275911;
+    let t = 1.0 / (1.0 + P * x);
+    let y = 1.0 - (((((A5 * t + A4) * t) + A3) * t + A2) * t + A1) * t * (-x * x).exp();
+    sign * y
+}
+
+/// Standard-normal CDF Φ(x). The forward companion of [`normal_quantile`]:
+/// property tests pin the two to be mutual inverses, so a regression in
+/// either approximation is caught against the other.
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
 /// [`normal_quantile`] with the argument clamped into (0.001, 0.999).
 /// For constructors whose quantile is already validated by every config
 /// surface: a programmatically out-of-range value degrades to a
-/// near-extreme quantile instead of panicking mid-construction, before the
-/// graceful validation error could be produced.
+/// near-extreme quantile — and NaN to the median — instead of panicking
+/// mid-construction, before the graceful validation error could be
+/// produced. (`f64::clamp` propagates NaN, so it needs its own arm.)
 pub fn normal_quantile_clamped(p: f64) -> f64 {
-    normal_quantile(p.clamp(0.001, 0.999))
+    let p = if p.is_nan() { 0.5 } else { p.clamp(0.001, 0.999) };
+    normal_quantile(p)
 }
 
 /// Arithmetic mean; 0 for an empty slice.
@@ -203,6 +228,15 @@ mod tests {
             assert!(z > prev);
             prev = z;
         }
+    }
+
+    #[test]
+    fn normal_cdf_known_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.2815515655) - 0.9).abs() < 1e-4);
+        assert!((normal_cdf(-1.9599639845) - 0.025).abs() < 1e-4);
+        assert!(normal_cdf(-8.0) < 1e-9);
+        assert!(normal_cdf(8.0) > 1.0 - 1e-9);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::config::{DatasetKind, WorkloadConfig};
 use crate::core::Request;
 use crate::distribution::LengthDist;
 use crate::embedding::Embedding;
+use crate::slo::ClassAssigner;
 use crate::util::rng::Rng;
 
 /// Length statistics for one dataset (lognormal parameters + clamps).
@@ -187,6 +188,9 @@ pub struct WorkloadGen {
     topics: Vec<Topic>,
     arrivals: Box<dyn arrivals::ArrivalProcess>,
     rng: Rng,
+    /// SLO-class stamping stream — its own RNG so the class mix never
+    /// perturbs the arrival/sampling streams of a seeded trace.
+    slo: ClassAssigner,
     next_id: u64,
     clock: f64,
 }
@@ -254,7 +258,8 @@ impl WorkloadGen {
         // switch to the request-stream seed for arrivals/sampling
         let rng = Rng::new(seed ^ 0x5eed_0002);
         let arrivals = arrivals::make_arrival_process(&cfg);
-        WorkloadGen { cfg, topics, arrivals, rng, next_id: 0, clock: 0.0 }
+        let slo = ClassAssigner::new(&cfg.slo_mix, seed);
+        WorkloadGen { cfg, topics, arrivals, rng, slo, next_id: 0, clock: 0.0 }
     }
 
     pub fn topics(&self) -> &[Topic] {
@@ -311,6 +316,7 @@ impl WorkloadGen {
             topic: topic_idx,
             embedding,
             true_dist: Some(topic.true_dist.clone()),
+            slo: self.slo.next_class(),
         }
     }
 

@@ -15,6 +15,7 @@ use crate::config::DatasetKind;
 use crate::core::Request;
 use crate::distribution::LengthDist;
 use crate::embedding::Embedding;
+use crate::slo::SloClass;
 use crate::util::json::Json;
 
 fn request_to_json(r: &Request) -> Json {
@@ -25,6 +26,7 @@ fn request_to_json(r: &Request) -> Json {
         ("true_output_len", Json::num(r.true_output_len as f64)),
         ("arrival", Json::num(r.arrival)),
         ("dataset", Json::str(r.dataset.name())),
+        ("slo", Json::str(r.slo.name())),
         ("topic", Json::num(r.topic as f64)),
         (
             "embedding",
@@ -50,6 +52,12 @@ fn request_from_json(j: &Json) -> Result<Request> {
     };
     let dataset = DatasetKind::from_name(j.str_or("dataset", ""))
         .context("bad dataset name")?;
+    // older traces predate SLO classes: default them to Standard
+    let slo = match j.get("slo") {
+        None => SloClass::Standard,
+        Some(v) => SloClass::from_name(v.as_str().unwrap_or(""))
+            .context("bad slo class name")?,
+    };
     let embedding: Vec<f32> = j
         .get("embedding")
         .and_then(Json::as_arr)
@@ -79,6 +87,7 @@ fn request_from_json(j: &Json) -> Result<Request> {
         topic: need_num("topic")? as usize,
         embedding: Embedding(embedding),
         true_dist,
+        slo,
     })
 }
 
@@ -141,6 +150,7 @@ mod tests {
             assert_eq!(a.true_output_len, b.true_output_len);
             assert!((a.arrival - b.arrival).abs() < 1e-9);
             assert_eq!(a.dataset, b.dataset);
+            assert_eq!(a.slo, b.slo);
             let cos = a.embedding.cosine(&b.embedding);
             assert!(cos > 0.9999, "embedding drift {cos}");
             let (da, db) = (a.true_dist.as_ref().unwrap(), b.true_dist.as_ref().unwrap());

@@ -223,6 +223,7 @@ fn sagesched_priorities_finite_and_refresh_across_buckets() {
         topic: 0,
         embedding: sagesched::embedding::Embedding::normalize(vec![1.0]),
         true_dist: None,
+        slo: sagesched::slo::SloClass::Standard,
     };
     let lengths = LengthDist::from_weighted(&[(20.0, 0.7), (500.0, 0.3)]);
     let cost_dist = cm.cost_dist(req.input_len, &lengths);

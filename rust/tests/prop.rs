@@ -10,6 +10,7 @@ use sagesched::gittins::{gittins_index, gittins_index_at_age};
 use sagesched::kvcache::KvManager;
 use sagesched::util::json::Json;
 use sagesched::util::rng::Rng;
+use sagesched::util::stats::{normal_cdf, normal_quantile, normal_quantile_clamped};
 
 /// Run `f` over `cases` seeded inputs; panics include the failing seed.
 fn for_all(cases: u64, f: impl Fn(&mut Rng)) {
@@ -478,4 +479,93 @@ fn prop_json_roundtrip() {
         let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("reparse {text}: {e}"));
         assert_eq!(parsed, v, "roundtrip mismatch for {text}");
     });
+}
+
+// ---------------------------------------------------------------------------
+// normal_quantile — it now gates routing (quantile-cost router), autoscaling
+// (uncertainty-aware provisioning), and SLO deadline slack, so its shape is
+// pinned by properties, not just spot values
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_normal_quantile_strictly_monotone_in_p() {
+    for_all(200, |rng| {
+        let p1 = rng.range_f64(1e-6, 1.0 - 2e-6);
+        let p2 = rng.range_f64(1e-6, 1.0 - 2e-6);
+        let (lo, hi) = if p1 < p2 { (p1, p2) } else { (p2, p1) };
+        if hi - lo < 1e-12 {
+            return;
+        }
+        let (zlo, zhi) = (normal_quantile(lo), normal_quantile(hi));
+        assert!(
+            zlo < zhi,
+            "not strictly monotone: Phi^-1({lo})={zlo} !< Phi^-1({hi})={zhi}"
+        );
+        assert!(zlo.is_finite() && zhi.is_finite());
+    });
+}
+
+#[test]
+fn prop_normal_quantile_symmetric_around_the_median() {
+    // Phi^-1(p) = -Phi^-1(1-p); the approximation uses different rational
+    // branches for the tails and the center, so symmetry across the branch
+    // boundary (p = 0.02425) is a real property, not an identity
+    for_all(300, |rng| {
+        let p = rng.range_f64(1e-6, 0.5);
+        let lo = normal_quantile(p);
+        let hi = normal_quantile(1.0 - p);
+        assert!(
+            (lo + hi).abs() < 2e-6,
+            "asymmetric at p={p}: {lo} vs {hi}"
+        );
+        assert!(lo <= 0.0, "sub-median quantile must be non-positive at p={p}");
+    });
+    assert!(normal_quantile(0.5).abs() < 1e-9);
+}
+
+#[test]
+fn prop_normal_quantile_inverse_consistent_with_cdf() {
+    // Phi(Phi^-1(p)) = p on a dense grid spanning both tail branches and
+    // the central branch (tolerance covers the CDF approximation's 1.5e-7
+    // absolute error, far below any decision threshold built on these)
+    for i in 1..1000 {
+        let p = i as f64 / 1000.0;
+        let z = normal_quantile(p);
+        let back = normal_cdf(z);
+        assert!(
+            (back - p).abs() < 1e-5,
+            "Phi(Phi^-1({p})) = {back}, off by {}",
+            (back - p).abs()
+        );
+    }
+    // and the reverse composition on a z grid
+    for i in -40..=40 {
+        let z = i as f64 / 10.0;
+        let p = normal_cdf(z);
+        if p > 1e-4 && p < 1.0 - 1e-4 {
+            let back = normal_quantile(p);
+            assert!(
+                (back - z).abs() < 1e-3,
+                "Phi^-1(Phi({z})) = {back}, off by {}",
+                (back - z).abs()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_normal_quantile_clamped_is_total_and_agrees_inside_range() {
+    // the clamped variant must never panic, even on garbage, and must be
+    // exactly the raw function on the interior it passes through
+    for p in [-1.0, 0.0, 1.0, 2.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        let z = normal_quantile_clamped(p);
+        assert!(z.is_finite(), "clamped must be finite at p={p}, got {z}");
+    }
+    for_all(200, |rng| {
+        let p = rng.range_f64(0.001, 0.999);
+        assert_eq!(normal_quantile_clamped(p), normal_quantile(p));
+    });
+    // out-of-range inputs saturate at the clamp boundaries
+    assert_eq!(normal_quantile_clamped(1.0), normal_quantile(0.999));
+    assert_eq!(normal_quantile_clamped(0.0), normal_quantile(0.001));
 }

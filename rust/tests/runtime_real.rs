@@ -35,6 +35,7 @@ fn req(id: u64, prompt: &str) -> Request {
         topic: 0,
         embedding: Embedding::normalize(vec![1.0; 64]),
         true_dist: None,
+        slo: sagesched::slo::SloClass::Standard,
     }
 }
 

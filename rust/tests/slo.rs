@@ -1,0 +1,329 @@
+//! SLO-class integration tests: per-class conservation across every router
+//! with autoscaling and a failure in play, seeded determinism of class
+//! assignment, the acceptance assert that class-aware serving improves
+//! Interactive SLO attainment under overload without giving up total
+//! goodput, a starvation guard (Batch still completes — and not merely in
+//! the drain tail — under sustained Interactive pressure), the
+//! failure-during-provisioning lifecycle regression, and the golden
+//! byte-identical-ClusterReport-JSON determinism check.
+
+use std::collections::BTreeSet;
+
+use sagesched::autoscale::ScaleAction;
+use sagesched::cluster::{run_router_experiment, EventCluster, ReplicaState};
+use sagesched::config::{
+    ArrivalKind, AutoscaleKind, ExperimentConfig, FailureEvent, PolicyKind,
+    RouterKind, ScaleStep,
+};
+use sagesched::metrics::ClusterReport;
+use sagesched::slo::SloClass;
+use sagesched::workload::WorkloadGen;
+
+fn cluster_cfg(replicas: usize, n: usize, rps: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = PolicyKind::SageSched;
+    cfg.workload.n_requests = n;
+    cfg.workload.rps = rps;
+    cfg.warmup_fraction = 0.0;
+    cfg.history_prewarm = 0; // keep the tests fast
+    cfg.cluster.replicas = replicas;
+    cfg
+}
+
+fn by_class(ids: impl Iterator<Item = SloClass>) -> [u64; 3] {
+    let mut out = [0u64; 3];
+    for c in ids {
+        out[c.index()] += 1;
+    }
+    out
+}
+
+#[test]
+fn class_assignment_is_seeded_and_respects_the_mix() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.n_requests = 600;
+    let a = WorkloadGen::new(cfg.workload.clone(), 5).generate();
+    let b = WorkloadGen::new(cfg.workload.clone(), 5).generate();
+    for (x, y) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(x.slo, y.slo, "same seed must stamp identical classes");
+        assert_eq!(x.arrival, y.arrival);
+        assert_eq!(x.input_len, y.input_len);
+    }
+    let c = WorkloadGen::new(cfg.workload.clone(), 6).generate();
+    let differs = a.requests.iter().zip(&c.requests).any(|(x, y)| x.slo != y.slo);
+    assert!(differs, "different seeds must stamp differently");
+    // the default 0.25/0.5/0.25 mix shows up within loose bounds
+    let counts = by_class(a.requests.iter().map(|r| r.slo));
+    let frac = |k: usize| counts[k] as f64 / 600.0;
+    assert!((frac(0) - 0.25).abs() < 0.10, "interactive frac {}", frac(0));
+    assert!((frac(1) - 0.50).abs() < 0.10, "standard frac {}", frac(1));
+    assert!((frac(2) - 0.25).abs() < 0.10, "batch frac {}", frac(2));
+    // a degenerate mix stamps exactly one class
+    cfg.workload.slo_mix = vec![(SloClass::Batch, 1.0)];
+    let d = WorkloadGen::new(cfg.workload.clone(), 5).generate();
+    assert!(d.requests.iter().all(|r| r.slo == SloClass::Batch));
+    // and never perturbs the arrival/sampling streams
+    for (x, y) in a.requests.iter().zip(&d.requests) {
+        assert_eq!(x.arrival, y.arrival, "slo mix must not shift arrivals");
+        assert_eq!(x.input_len, y.input_len);
+        assert_eq!(x.true_output_len, y.true_output_len);
+    }
+}
+
+#[test]
+fn per_class_conservation_across_routers_autoscaling_and_failure() {
+    // class-aware serving with admission pressure, a scripted scale-out/in,
+    // and a mid-run outage: for every router, every class's submissions
+    // must be accounted for exactly — completed, rejected, or timed out —
+    // with no cluster bookkeeping left behind
+    let mut cfg = cluster_cfg(2, 200, 30.0);
+    cfg.slo.class_aware = true;
+    cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+    cfg.max_queue = 32;
+    cfg.cluster.autoscale.kind = AutoscaleKind::Step;
+    cfg.cluster.autoscale.steps = vec![
+        ScaleStep { at: 1.5, target: 4 },
+        ScaleStep { at: 4.5, target: 2 },
+    ];
+    cfg.cluster.autoscale.provision_delay = 0.5;
+    cfg.cluster.autoscale.interval = 1.0;
+    cfg.cluster.failures = vec![FailureEvent { replica: 1, at: 2.5, duration: 1.5 }];
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let submitted = by_class(workload.requests.iter().map(|r| r.slo));
+    assert!(submitted.iter().all(|&n| n > 0), "mix must cover all classes");
+    for router in RouterKind::ALL {
+        let mut cluster = EventCluster::with_router(&cfg, router);
+        cluster.run(workload.requests.clone()).unwrap();
+        let outcomes = cluster.merged_outcomes();
+        let completed = by_class(outcomes.iter().map(|o| o.slo));
+        let rejected = cluster.rejected_by_class();
+        let aborted = cluster.aborted_by_class();
+        for class in SloClass::ALL {
+            let k = class.index();
+            assert_eq!(
+                completed[k] + rejected[k] + aborted[k],
+                submitted[k],
+                "{router:?} lost {} requests",
+                class.name()
+            );
+        }
+        // the per-class split sums to the totals exactly once
+        assert_eq!(rejected.iter().sum::<u64>(), cluster.rejected());
+        assert_eq!(aborted.iter().sum::<u64>(), cluster.aborted());
+        let ids: BTreeSet<u64> = outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(ids.len(), outcomes.len(), "{router:?} duplicated completions");
+        assert_eq!(cluster.in_flight_count(), 0, "{router:?} leaked in-flight");
+        assert!(cluster.total_backlog() < 1e-6, "{router:?} leaked backlog");
+        assert!(
+            cluster.weighted_backlog() < 1e-6,
+            "{router:?} leaked weighted backlog"
+        );
+        // the report's per-class view agrees with the raw counters
+        let report = cluster.report(0.0);
+        for class in SloClass::ALL {
+            let s = &report.aggregate.slo[class.name()];
+            assert_eq!(s.completed, completed[class.index()], "{router:?}");
+            assert_eq!(s.rejected, rejected[class.index()], "{router:?}");
+            assert_eq!(s.aborted, aborted[class.index()], "{router:?}");
+            assert_eq!(s.submitted(), submitted[class.index()], "{router:?}");
+        }
+        let wg = report.aggregate.slo_weighted_goodput();
+        assert!((0.0..=1.0).contains(&wg), "{router:?} weighted goodput {wg}");
+    }
+}
+
+#[test]
+fn class_aware_serving_improves_interactive_attainment_under_overload() {
+    // the acceptance scenario: a 2-replica cluster under ~3x sustained
+    // overload, same seeded workload, class-blind vs class-aware. The
+    // class-aware run must improve Interactive attainment (strictly, and
+    // by a real margin) without giving up total goodput.
+    let blind = cluster_cfg(2, 400, 24.0);
+    let mut aware = blind.clone();
+    aware.slo.class_aware = true;
+    let b = run_router_experiment(&blind, RouterKind::QuantileCost).unwrap();
+    let a = run_router_experiment(&aware, RouterKind::QuantileCost).unwrap();
+    // both runs are lossless here (no admission bound, no timeout), so the
+    // goodput guard is exact; the attainment gap is the point
+    assert_eq!(b.aggregate.completed, 400, "blind run lossy");
+    assert_eq!(a.aggregate.completed, 400, "aware run lossy");
+    assert!(
+        a.aggregate.goodput() >= b.aggregate.goodput() - 0.02,
+        "class-aware gave up goodput: {} vs {}",
+        a.aggregate.goodput(),
+        b.aggregate.goodput()
+    );
+    let b_int = &b.aggregate.slo["interactive"];
+    let a_int = &a.aggregate.slo["interactive"];
+    assert!(b_int.submitted() > 0 && a_int.submitted() > 0);
+    assert!(
+        a_int.attainment() > b_int.attainment() + 0.05,
+        "interactive attainment: aware {} !>> blind {}",
+        a_int.attainment(),
+        b_int.attainment()
+    );
+    // the latency story behind the attainment gap points the same way
+    assert!(
+        a_int.ttlt.mean < b_int.ttlt.mean,
+        "aware interactive TTLT {} !< blind {}",
+        a_int.ttlt.mean,
+        b_int.ttlt.mean
+    );
+    // and the weighted headline metric improves with it
+    assert!(
+        a.aggregate.slo_weighted_goodput() > b.aggregate.slo_weighted_goodput(),
+        "slo-weighted goodput: aware {} !> blind {}",
+        a.aggregate.slo_weighted_goodput(),
+        b.aggregate.slo_weighted_goodput()
+    );
+}
+
+#[test]
+fn batch_still_completes_under_sustained_interactive_load() {
+    // starvation guard: interactive traffic alone exceeds cluster capacity
+    // for the whole run; batch requests (with a deliberately shortened
+    // deadline so aging engages in-run) must all complete, and not merely
+    // in the drain tail after interactive pressure ends
+    let mut cfg = cluster_cfg(2, 200, 14.0);
+    cfg.slo.class_aware = true;
+    cfg.workload.slo_mix =
+        vec![(SloClass::Interactive, 0.85), (SloClass::Batch, 0.15)];
+    cfg.slo.specs.spec_mut(SloClass::Batch).ttft_target = 4.0;
+    cfg.slo.specs.spec_mut(SloClass::Batch).ttlt_target = 12.0;
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let submitted = by_class(workload.requests.iter().map(|r| r.slo));
+    assert!(submitted[SloClass::Batch.index()] > 0);
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
+    cluster.run(workload.requests).unwrap();
+    let outcomes = cluster.merged_outcomes();
+    let completed = by_class(outcomes.iter().map(|o| o.slo));
+    assert_eq!(
+        completed[SloClass::Batch.index()],
+        submitted[SloClass::Batch.index()],
+        "batch starved"
+    );
+    assert_eq!(cluster.aborted(), 0);
+    assert_eq!(cluster.rejected(), 0);
+    // aging really interleaves batch with the interactive stream: some
+    // batch request finishes before the last interactive does
+    let first_batch_done = outcomes
+        .iter()
+        .filter(|o| o.slo == SloClass::Batch)
+        .map(|o| o.completion)
+        .fold(f64::INFINITY, f64::min);
+    let last_interactive_done = outcomes
+        .iter()
+        .filter(|o| o.slo == SloClass::Interactive)
+        .map(|o| o.completion)
+        .fold(0.0, f64::max);
+    assert!(
+        first_batch_done < last_interactive_done,
+        "batch only ran in the drain tail: first batch {first_batch_done} \
+         vs last interactive {last_interactive_done}"
+    );
+}
+
+#[test]
+fn failure_during_provisioning_conserves_and_keeps_timeline_consistent() {
+    // regression: an outage hitting a replica that autoscaling has spawned
+    // but that has not yet joined the routable set. The replica must go
+    // down, then *resume* provisioning at recovery — an outage must never
+    // hand the cluster capacity before the provisioning delay elapses —
+    // and come up exactly at its originally scheduled spawn-ready instant.
+    // Conservation must be exact and the timeline must read
+    // provision -> fail -> recover -> up.
+    let mut cfg = cluster_cfg(2, 200, 30.0);
+    cfg.cluster.autoscale.kind = AutoscaleKind::Step;
+    cfg.cluster.autoscale.steps = vec![ScaleStep { at: 1.0, target: 3 }];
+    cfg.cluster.autoscale.provision_delay = 3.0; // ready at t=4 ...
+    cfg.cluster.autoscale.interval = 1.0;
+    // ... but the outage hits at t=2, while still provisioning
+    cfg.cluster.failures = vec![FailureEvent { replica: 2, at: 2.0, duration: 1.0 }];
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::RoundRobin);
+    cluster.run(workload.requests).unwrap();
+    assert_eq!(cluster.completed(), 200, "lost requests");
+    assert_eq!(cluster.in_flight_count(), 0);
+    let events: Vec<(f64, ScaleAction)> = cluster
+        .scaling_events
+        .iter()
+        .filter(|e| e.replica == 2)
+        .map(|e| (e.at, e.action))
+        .collect();
+    assert_eq!(
+        events,
+        vec![
+            (1.0, ScaleAction::Provision),
+            (2.0, ScaleAction::Fail),
+            (3.0, ScaleAction::Recover),
+            (4.0, ScaleAction::Up),
+        ],
+        "inconsistent lifecycle timeline for the provisioning-failed replica"
+    );
+    // recovered into the routable set and actually served
+    assert_eq!(cluster.replicas[2].state, ReplicaState::Active);
+    assert!(cluster.routed[2] > 0, "recovered replica never routed to");
+    let report = cluster.report(0.0);
+    assert!(
+        (report.downtime[2] - 1.0).abs() < 1e-9,
+        "downtime {} != outage duration 1.0",
+        report.downtime[2]
+    );
+}
+
+#[test]
+fn failure_on_never_provisioned_replica_is_a_hard_error() {
+    // with autoscaling on, outage targets beyond the initial fleet are
+    // legal *if* the scaler has spawned them by fire time; one that never
+    // exists must fail loudly at that instant, not silently no-op
+    let mut cfg = cluster_cfg(2, 40, 20.0);
+    cfg.cluster.autoscale.kind = AutoscaleKind::Step;
+    cfg.cluster.autoscale.steps = vec![ScaleStep { at: 1.0, target: 2 }]; // never grows
+    cfg.cluster.autoscale.interval = 1.0;
+    cfg.cluster.failures = vec![FailureEvent { replica: 7, at: 0.5, duration: 1.0 }];
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::RoundRobin);
+    let err = cluster.run(workload.requests).unwrap_err();
+    assert!(err.to_string().contains("replica 7"), "got: {err}");
+}
+
+/// Serialize a cluster report with the wallclock-measured overhead fields
+/// zeroed: they are the only nondeterministic numbers in the report, and
+/// the point of the golden test is that *everything else* is byte-stable.
+fn deterministic_json(mut r: ClusterReport) -> String {
+    r.aggregate.predict_overhead = 0.0;
+    r.aggregate.sched_overhead = 0.0;
+    for pr in &mut r.per_replica {
+        pr.predict_overhead = 0.0;
+        pr.sched_overhead = 0.0;
+    }
+    r.to_json().to_string()
+}
+
+#[test]
+fn golden_cluster_report_json_is_byte_identical_across_runs() {
+    // the full surface at once — class-aware serving, heterogeneous fleet,
+    // MMPP bursts, uncertainty-aware autoscaling, an outage, admission
+    // pressure — twice at one seed: the serialized ClusterReport must match
+    // byte for byte (this is what catches HashMap-iteration-order creep
+    // before it corrupts an A/B comparison)
+    let mut cfg = cluster_cfg(3, 160, 24.0);
+    cfg.slo.class_aware = true;
+    cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+    cfg.cluster.speeds = vec![1.0, 1.0, 0.5];
+    cfg.max_queue = 24;
+    cfg.request_timeout = 30.0;
+    cfg.cluster.failures = vec![FailureEvent { replica: 0, at: 2.0, duration: 1.5 }];
+    cfg.cluster.autoscale.kind = AutoscaleKind::UncertaintyAware;
+    cfg.cluster.autoscale.min_replicas = 2;
+    cfg.cluster.autoscale.max_replicas = 6;
+    cfg.cluster.autoscale.work_per_replica = 5.0e5;
+    cfg.cluster.autoscale.cooldown = 2.0;
+    cfg.cluster.autoscale.interval = 1.0;
+    cfg.cluster.autoscale.provision_delay = 1.0;
+    let a = run_router_experiment(&cfg, RouterKind::QuantileCost).unwrap();
+    let b = run_router_experiment(&cfg, RouterKind::QuantileCost).unwrap();
+    let ja = deterministic_json(a);
+    let jb = deterministic_json(b);
+    assert_eq!(ja, jb, "ClusterReport JSON differs between identical runs");
+}
