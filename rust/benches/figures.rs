@@ -981,6 +981,165 @@ fn fig13c(ctx: &Ctx) {
 }
 
 // ===========================================================================
+// Fig 14: correlated failure domains + migration-cost-aware scale-in
+// ===========================================================================
+fn fig14(ctx: &Ctx) {
+    use sagesched::config::{
+        ArrivalKind, AutoscaleKind, DomainFailureEvent, FailureDomain, FailureEvent,
+        RouterKind, ScaleStep,
+    };
+    println!("\n=== fig14: correlated failure domains + migration-aware scale-in ===");
+
+    // --- part A: independent vs correlated failures at equal downtime -----
+    // the same 4-replica cluster under MMPP bursts loses 3 replica-seconds
+    // of capacity two ways: three disjoint 1-replica outages (capacity
+    // never below 3/4) vs one rack outage downing all three at once
+    // (capacity 1/4, one pooled re-dispatch storm). Same seeded workload;
+    // the only difference is the failure *shape*.
+    let mut base = base_cfg();
+    base.cluster.replicas = 4;
+    base.workload.rps = 30.0;
+    base.workload.n_requests = ctx.n_requests(1200);
+    base.workload.arrival.kind = ArrivalKind::Mmpp;
+    base.workload.arrival.burst_factor = 5.0;
+    base.workload.arrival.burst_on_mean = 4.0;
+    base.workload.arrival.burst_off_mean = 12.0;
+    base.slo.class_aware = true;
+    let span = base.workload.n_requests as f64 / base.workload.rps;
+    let outage = span / 12.0;
+
+    let mut independent = base.clone();
+    independent.cluster.failures = vec![
+        FailureEvent { replica: 1, at: span / 4.0, duration: outage },
+        FailureEvent { replica: 2, at: span / 2.0, duration: outage },
+        FailureEvent { replica: 3, at: 3.0 * span / 4.0, duration: outage },
+    ];
+    let mut correlated = base.clone();
+    correlated.cluster.failure_domains = vec![FailureDomain {
+        name: "rack0".to_string(),
+        replicas: vec![1, 2, 3],
+    }];
+    correlated.cluster.domain_failures =
+        vec![DomainFailureEvent { domain: 0, at: span / 2.0, duration: outage }];
+
+    println!(
+        "| failure shape | goodput | interactive att | int TTLT p90 | re-routed \
+         | slo-w gp/rep-s |"
+    );
+    println!("|---|---|---|---|---|---|");
+    let mut rows = Vec::new();
+    let mut atts = Vec::new();
+    for (label, cfg) in [("independent", &independent), ("correlated", &correlated)] {
+        let r = sagesched::cluster::run_router_experiment(cfg, RouterKind::QuantileCost)
+            .expect("fig14 failure-shape experiment failed");
+        let n = cfg.workload.n_requests as u64;
+        let accounted =
+            r.aggregate.completed + r.aggregate.rejected + r.aggregate.aborted;
+        assert_eq!(accounted, n, "{label}: {accounted} accounted of {n}");
+        let att = r
+            .aggregate
+            .slo
+            .get("interactive")
+            .map(|s| s.attainment())
+            .unwrap_or(0.0);
+        let p90 = r
+            .aggregate
+            .slo
+            .get("interactive")
+            .map(|s| s.ttlt.p90)
+            .unwrap_or(0.0);
+        println!(
+            "| {label} | {:.3} | {:.3} | {:.2} | {} | {:.3} |",
+            r.aggregate.goodput(),
+            att,
+            p90,
+            r.re_routed,
+            r.slo_weighted_goodput_per_replica_second,
+        );
+        rows.push(format!(
+            "{label},{:.4},{:.4},{:.4},{},{:.5}",
+            r.aggregate.goodput(),
+            att,
+            p90,
+            r.re_routed,
+            r.slo_weighted_goodput_per_replica_second,
+        ));
+        atts.push(att);
+    }
+    write_csv(
+        "fig14_failure_shape",
+        "shape,goodput,interactive_attainment,interactive_ttlt_p90,re_routed,\
+         slo_weighted_goodput_per_replica_second",
+        &rows,
+    );
+    println!(
+        "  (equal downtime, different shape: correlated {:.3} vs independent \
+         {:.3} interactive attainment)",
+        atts[1], atts[0]
+    );
+
+    // --- part B: drain-only vs migration-cost-aware scale-in --------------
+    // a heterogeneous fleet (one replica at 0.3x speed) scales 3 -> 2
+    // mid-run. Drain-only waits out the victim's partially-generated work;
+    // migration-aware scale-in ships it to the survivors when the KV
+    // transfer is predicted cheaper, retiring the victim earlier at equal
+    // completions.
+    let mut sbase = base_cfg();
+    sbase.cluster.replicas = 3;
+    sbase.cluster.speeds = vec![1.0, 1.0, 0.3];
+    sbase.workload.rps = 24.0;
+    sbase.workload.n_requests = ctx.n_requests(960);
+    let step_at = sbase.workload.n_requests as f64 / sbase.workload.rps / 2.0;
+    sbase.cluster.autoscale.kind = AutoscaleKind::Step;
+    sbase.cluster.autoscale.steps = vec![ScaleStep { at: step_at, target: 2 }];
+    sbase.cluster.autoscale.interval = 1.0;
+
+    let mut mig = sbase.clone();
+    mig.cluster.migration_kv_per_token = 0.05;
+    mig.cluster.migration_quantile = 0.9;
+
+    println!("\n| scale-in | completed | migrated | replica-s | gp/rep-s | TTLT p90 |");
+    println!("|---|---|---|---|---|---|");
+    let mut rows = Vec::new();
+    let mut gps = Vec::new();
+    for (label, cfg) in [("drain-only", &sbase), ("migration-aware", &mig)] {
+        let r = sagesched::cluster::run_router_experiment(cfg, RouterKind::CostAware)
+            .expect("fig14 scale-in experiment failed");
+        let n = cfg.workload.n_requests as u64;
+        let accounted =
+            r.aggregate.completed + r.aggregate.rejected + r.aggregate.aborted;
+        assert_eq!(accounted, n, "{label}: {accounted} accounted of {n}");
+        println!(
+            "| {label} | {} | {} | {:.0} | {:.4} | {:.2} |",
+            r.aggregate.completed,
+            r.migrated,
+            r.total_replica_seconds(),
+            r.goodput_per_replica_second,
+            r.aggregate.ttlt.p90,
+        );
+        rows.push(format!(
+            "{label},{},{},{:.2},{:.5},{:.4}",
+            r.aggregate.completed,
+            r.migrated,
+            r.total_replica_seconds(),
+            r.goodput_per_replica_second,
+            r.aggregate.ttlt.p90,
+        ));
+        gps.push(r.goodput_per_replica_second);
+    }
+    write_csv(
+        "fig14_scale_in",
+        "scale_in,completed,migrated,replica_seconds,goodput_per_replica_second,\
+         ttlt_p90",
+        &rows,
+    );
+    println!(
+        "  (migration-aware {:.4} vs drain-only {:.4} goodput/replica-second)",
+        gps[1], gps[0]
+    );
+}
+
+// ===========================================================================
 // Fig 1a on the real engine (optional extended check)
 // ===========================================================================
 fn fig1a_real(ctx: &Ctx) {
@@ -1076,6 +1235,7 @@ fn main() {
         ("fig13a", fig13a),
         ("fig13b", fig13b),
         ("fig13c", fig13c),
+        ("fig14", fig14),
     ];
     let t0 = std::time::Instant::now();
     for (name, f) in &all {

@@ -38,10 +38,22 @@
 //!   of goodput).
 //!
 //! Every policy emits a desired replica *target*; the cluster owns the
-//! mechanism (spawn / drain / retire) and records a [`ScalingEvent`]
-//! timeline surfaced in [`crate::metrics::ClusterReport`] together with
-//! `replica_seconds` and goodput per replica-second — the metric a static
-//! fleet is compared on.
+//! mechanism (spawn / drain / retire — see
+//! [`AutoscaleDriver`](crate::cluster::AutoscaleDriver)) and records a
+//! [`ScalingEvent`] timeline surfaced in
+//! [`crate::metrics::ClusterReport`] together with `replica_seconds` and
+//! goodput per replica-second — the metric a static fleet is compared on.
+//!
+//! **Scale-in victim selection** is likewise the cluster's mechanism, with
+//! two modes: the legacy rule drains the active replica with the fewest
+//! live requests, while *migration-cost-aware* scale-in
+//! (`ClusterConfig::migration_kv_per_token > 0`) scores each candidate by
+//! its predicted drain cost — per partially-generated request, the cheaper
+//! of waiting out a quantile of its predicted remaining cost and shipping
+//! its KV — and lets the drain migrate partial work whose transfer beats
+//! the wait. That prices the decision on the predicted-remaining-cost
+//! *distribution* rather than a request count, in the same spirit as the
+//! uncertainty-aware provisioning target above.
 
 use crate::config::{AutoscaleConfig, AutoscaleKind, ScaleStep};
 use crate::util::stats::normal_quantile_clamped;

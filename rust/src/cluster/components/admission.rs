@@ -1,0 +1,117 @@
+//! [`SloAdmission`]: the placement/admission seam every dispatch path
+//! consults.
+
+use crate::cluster::ctx::ClusterCtx;
+use crate::cluster::replica::InFlight;
+use crate::core::Request;
+
+use super::ClusterComponent;
+
+/// The placement/admission concern: routing a request onto a replica under
+/// the coordinator's (possibly SLO-class-aware) admission verdict, with
+/// migration-exemption semantics.
+///
+/// Three rules, one home:
+///
+/// * A *fresh* arrival (and crash re-dispatch, which shares its admission
+///   semantics) is routed and submitted normally — the target's
+///   [`Coordinator::admits`](crate::serve::Coordinator::admits) verdict is
+///   consulted before submission so the has-room view can never disagree
+///   with `submit()`.
+/// * A *migration* (scale-in drain fallback, and stealing / partial moves,
+///   which call the coordinator's exempt paths directly) must never
+///   convert an already-admitted request into a rejection.
+/// * A scale-in drain with no admitting target falls back to re-admitting
+///   on the (draining) victim, which always fits: the request occupied one
+///   of the victim's admission slots moments ago and nothing was admitted
+///   there since.
+pub struct SloAdmission;
+
+impl SloAdmission {
+    /// Routing core shared by fresh dispatch and the scale-in drain path.
+    /// With `keep_on: Some(victim)` a routed target without admission
+    /// headroom — or an empty routable set — falls back to re-admitting on
+    /// the (draining) `victim`. Returns true when the request landed
+    /// somewhere other than the fallback.
+    pub fn place(
+        &self,
+        ctx: &mut ClusterCtx,
+        req: Request,
+        not_before: f64,
+        keep_on: Option<usize>,
+    ) -> anyhow::Result<bool> {
+        let pred = ctx.predictor.predict(&req);
+        let cost_dist = ctx.cost.cost_dist(req.input_len, &pred);
+        let pcost = cost_dist.mean();
+        let pvar = cost_dist.variance();
+        let weight = if ctx.cfg.slo.class_aware {
+            ctx.cfg.slo.specs.spec(req.slo).weight
+        } else {
+            1.0
+        };
+        let views = ctx.views();
+        let mut target = None;
+        if views.is_empty() {
+            if keep_on.is_none() {
+                anyhow::bail!(
+                    "cannot route request {}: none of the {} replicas is routable",
+                    req.id,
+                    ctx.replicas.len()
+                );
+            }
+        } else {
+            let slot = ctx.router.route(&req, pcost, &views);
+            if slot >= views.len() {
+                anyhow::bail!(
+                    "router {} returned position {slot} but only {} replicas are \
+                     routable",
+                    ctx.router.name(),
+                    views.len()
+                );
+            }
+            let i = views[slot].id;
+            // the coordinator's own (possibly class-aware) admission verdict,
+            // so the has-room view can never disagree with submit()
+            let has_room = ctx.replicas[i].coord.admits(req.slo);
+            if has_room || keep_on.is_none() {
+                target = Some(i);
+            }
+        }
+        let moved = target.is_some();
+        let i = target
+            .or(keep_on)
+            .expect("place: empty routable set without fallback already bailed");
+        let id = req.id;
+        ctx.replicas[i].coord.advance_to(req.arrival.max(not_before));
+        // the drain fallback is a *migration*: the request already passed
+        // admission on the victim, so re-admitting it there is exempt
+        let accepted = if moved {
+            ctx.replicas[i].coord.submit(req.clone())
+        } else {
+            ctx.replicas[i].coord.submit_exempt(req.clone())
+        };
+        debug_assert!(accepted || keep_on.is_none(), "drain re-admission must fit");
+        if accepted {
+            ctx.in_flight.insert(
+                id,
+                InFlight { replica: i, cost: pcost, var: pvar, weight, req },
+            );
+            ctx.backlog[i] += pcost;
+            ctx.backlog_var[i] += pvar;
+            ctx.backlog_weighted += weight * pcost;
+            ctx.backlog_weighted_var += weight * weight * pvar;
+            ctx.routed[i] += 1;
+            ctx.steal_dirty = true; // fresh queued work: steal verdicts change
+        }
+        // refusals are counted by the coordinator itself (sole owner of the
+        // rejected counter; see ClusterCtx::rejected)
+        Ok(moved && accepted)
+    }
+}
+
+impl ClusterComponent for SloAdmission {
+    fn name(&self) -> &'static str {
+        "slo-admission"
+    }
+    // no timed events: every placement path consults `place` synchronously
+}

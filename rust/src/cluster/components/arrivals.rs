@@ -1,0 +1,59 @@
+//! [`ArrivalSource`]: the workload's arrival stream as kernel events.
+
+use crate::cluster::ctx::ClusterCtx;
+use crate::cluster::kernel::{EventPayload, EventQueue, KernelEvent};
+use crate::core::Request;
+
+use super::ClusterComponent;
+
+/// Feeds the workload into the kernel: every request becomes an `Arrival`
+/// event (pushed in (arrival, id) order, so the kernel's insertion-order
+/// tie-break reproduces the exact legacy arrival interleaving), and each
+/// arrival is routed through [`SloAdmission`](super::SloAdmission) when
+/// its event fires.
+pub struct ArrivalSource {
+    requests: Vec<Request>,
+}
+
+impl ArrivalSource {
+    pub fn new(requests: Vec<Request>) -> ArrivalSource {
+        ArrivalSource { requests }
+    }
+}
+
+impl ClusterComponent for ArrivalSource {
+    fn name(&self) -> &'static str {
+        "arrival-source"
+    }
+
+    fn on_start(&mut self, _ctx: &mut ClusterCtx, kernel: &mut EventQueue) -> anyhow::Result<()> {
+        let mut requests = std::mem::take(&mut self.requests);
+        requests.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        for req in requests {
+            let at = req.arrival;
+            kernel.push(at, EventPayload::Arrival(req));
+        }
+        Ok(())
+    }
+
+    fn on_event(
+        &mut self,
+        ev: KernelEvent,
+        ctx: &mut ClusterCtx,
+        _kernel: &mut EventQueue,
+    ) -> anyhow::Result<Option<KernelEvent>> {
+        match ev.payload {
+            EventPayload::Arrival(req) => {
+                let at = ev.at;
+                ctx.dispatch(req, at)?;
+                Ok(None)
+            }
+            _ => Ok(Some(ev)),
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! [`AutoscaleDriver`]: the elastic-provisioning decision chain.
+
+use crate::autoscale::{AutoscalePolicy, ScaleAction};
+use crate::cluster::ctx::ClusterCtx;
+use crate::cluster::kernel::{EventPayload, EventQueue, KernelEvent};
+use crate::cluster::replica::ReplicaState;
+use crate::util::stats::normal_quantile_clamped;
+
+use super::ClusterComponent;
+
+/// Drives the elastic provisioning policy: seeds the periodic decision
+/// chain (each fired decision schedules its successor while arrivals
+/// remain or work is live, so the chain covers the drain tail too), fires
+/// the policy's scripted decision times, turns scale-out targets into
+/// provisioning spawns (spawn-ready events after the provisioning delay),
+/// and picks scale-in victims.
+///
+/// Victim selection: provisioning replicas are always cancelled first
+/// (they hold no work — a scale-out/scale-in whipsaw must not destroy warm
+/// serving capacity while a cold replica is still on its way up). Among
+/// active replicas, the legacy rule drains the one with the fewest live
+/// requests (ties to the highest index). With migration-cost-aware
+/// scale-in enabled (`migration_kv_per_token > 0`) the victim is instead
+/// the replica with the smallest *predicted drain cost* — each
+/// partially-generated request contributes the cheaper of waiting out a
+/// quantile of its predicted remaining cost and shipping its KV — so the
+/// cluster retires the replica whose work is closest to done or cheapest
+/// to move, not merely the one with the fewest requests.
+pub struct AutoscaleDriver {
+    policy: Option<Box<dyn AutoscalePolicy>>,
+    /// z-score of the migration-cost quantile (victim scoring).
+    z_migration: f64,
+}
+
+impl AutoscaleDriver {
+    pub fn new(cfg: &crate::config::ExperimentConfig) -> AutoscaleDriver {
+        AutoscaleDriver {
+            policy: crate::autoscale::make_autoscaler(&cfg.cluster.autoscale),
+            z_migration: normal_quantile_clamped(cfg.cluster.migration_quantile),
+        }
+    }
+
+    /// Run the policy at a decision point; scale-out spawns fresh replicas
+    /// (future spawn-ready events), scale-in begins draining victims
+    /// immediately. The desired target counts capacity that is present or
+    /// committed (active + provisioning + down).
+    fn on_decision(
+        &mut self,
+        at: f64,
+        ctx: &mut ClusterCtx,
+        kernel: &mut EventQueue,
+    ) -> anyhow::Result<()> {
+        let view = ctx.autoscale_view(at);
+        let target = self
+            .policy
+            .as_mut()
+            .expect("decision event without a policy")
+            .target(&view);
+        if let Some(target) = target {
+            let target = target.max(1);
+            let present = view.present();
+            if target > present {
+                let delay = ctx.cfg.cluster.autoscale.provision_delay;
+                for _ in 0..(target - present) {
+                    let i = ctx.spawn_replica(at);
+                    ctx.record(at, i, ScaleAction::Provision);
+                    kernel.push(at + delay, EventPayload::SpawnReady { replica: i });
+                }
+            } else {
+                let mut shrink = present - target;
+                while shrink > 0 {
+                    // cancel not-yet-ready replicas first (newest first):
+                    // they hold no work, so retiring them is free. The
+                    // pending spawn-ready event becomes a no-op (the state
+                    // is no longer Provisioning).
+                    if let Some(p) = ctx
+                        .replicas
+                        .iter()
+                        .rposition(|r| r.state == ReplicaState::Provisioning)
+                    {
+                        ctx.retire(p, at);
+                        shrink -= 1;
+                        continue;
+                    }
+                    let active: Vec<usize> = ctx
+                        .replicas
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, r)| r.state == ReplicaState::Active)
+                        .map(|(i, _)| i)
+                        .collect();
+                    // never drain the last routable replica: the cluster
+                    // must stay able to place re-routed and future work
+                    if active.len() <= 1 {
+                        break;
+                    }
+                    let victim = self.pick_victim(ctx, &active);
+                    ctx.begin_drain(victim, at)?;
+                    shrink -= 1;
+                }
+            }
+        }
+        // keep the periodic chain alive while there is anything left to
+        // decide about: feedback policies must be able to scale in during
+        // the drain tail after the last arrival. Once arrivals are
+        // exhausted and the cluster is idle the chain ends, which bounds
+        // the event stream.
+        if kernel.pending_decisions() == 0
+            && (kernel.pending_arrivals() > 0 || ctx.has_live_work())
+        {
+            kernel.push(
+                at + ctx.cfg.cluster.autoscale.interval,
+                EventPayload::Decision,
+            );
+        }
+        Ok(())
+    }
+
+    /// Pick the scale-in victim among `active` (non-empty).
+    fn pick_victim(&self, ctx: &ClusterCtx, active: &[usize]) -> usize {
+        if ctx.cfg.cluster.migration_kv_per_token > 0.0 {
+            // migration-cost-aware: smallest predicted drain cost, ties to
+            // the highest index (retire the newest replica first)
+            let scores: Vec<f64> = active
+                .iter()
+                .map(|&i| ctx.scale_in_drain_cost(i, self.z_migration))
+                .collect();
+            let mut best = 0usize;
+            for k in 1..active.len() {
+                let better = scores[k] < scores[best]
+                    || (scores[k] == scores[best] && active[k] > active[best]);
+                if better {
+                    best = k;
+                }
+            }
+            active[best]
+        } else {
+            // legacy rule: fewest live requests, ties to the highest index
+            *active
+                .iter()
+                .min_by_key(|&&i| (ctx.replicas[i].coord.live_count(), usize::MAX - i))
+                .expect("non-empty active set")
+        }
+    }
+}
+
+impl ClusterComponent for AutoscaleDriver {
+    fn name(&self) -> &'static str {
+        "autoscale-driver"
+    }
+
+    fn on_start(&mut self, ctx: &mut ClusterCtx, kernel: &mut EventQueue) -> anyhow::Result<()> {
+        if let Err(e) = ctx.cfg.cluster.autoscale.validate() {
+            anyhow::bail!("{e}");
+        }
+        if let Err(e) = ctx.cfg.cluster.validate() {
+            anyhow::bail!("{e}");
+        }
+        let Some(pol) = self.policy.as_ref() else {
+            return Ok(());
+        };
+        // seed the periodic chain; each fired decision extends it. Scripted
+        // steps fire exactly at their configured times, even past the last
+        // arrival (a late scale-in still frees capacity during the drain
+        // tail). A scripted step landing on the periodic seed must fire
+        // once, not twice.
+        let mut times = vec![ctx.cfg.cluster.autoscale.interval];
+        times.extend(pol.scheduled_times());
+        times.sort_by(|a, b| a.partial_cmp(b).expect("NaN decision time"));
+        times.dedup();
+        for t in times {
+            kernel.push(t, EventPayload::Decision);
+        }
+        Ok(())
+    }
+
+    fn on_event(
+        &mut self,
+        ev: KernelEvent,
+        ctx: &mut ClusterCtx,
+        kernel: &mut EventQueue,
+    ) -> anyhow::Result<Option<KernelEvent>> {
+        match ev.payload {
+            EventPayload::SpawnReady { replica } => {
+                ctx.apply_spawn_ready(replica, ev.at);
+                Ok(None)
+            }
+            EventPayload::Decision => {
+                self.on_decision(ev.at, ctx, kernel)?;
+                Ok(None)
+            }
+            _ => Ok(Some(ev)),
+        }
+    }
+}

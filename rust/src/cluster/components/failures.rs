@@ -1,0 +1,214 @@
+//! [`FailureInjector`]: scheduled outages — single replicas and
+//! correlated failure domains.
+
+use crate::cluster::ctx::ClusterCtx;
+use crate::cluster::kernel::{EventPayload, EventQueue, KernelEvent};
+use crate::config::AutoscaleKind;
+
+use super::ClusterComponent;
+
+/// Scheduled replica outages: single-replica failure/recovery windows and
+/// correlated failure domains.
+///
+/// Single-replica semantics are unchanged from the pre-component cluster:
+/// overlapping or touching windows on one replica merge into their union
+/// (otherwise the earliest recovery of a nested outage would resurrect the
+/// replica while a longer outage is still running, undercounting
+/// downtime).
+///
+/// A **domain outage** takes every member of a
+/// [`FailureDomain`](crate::config::FailureDomain) down in *one* event:
+/// all members are failed first — including ones still `Provisioning` —
+/// and only then is the pooled lost work re-dispatched, so the storm
+/// routes over the true survivor set (a sibling that dies in the same
+/// instant can never be handed work it is about to lose again). Domain
+/// windows may not overlap any other outage window on the same replica —
+/// that is a hard configuration error, because "who recovers this replica"
+/// would otherwise be ambiguous. At equal instants, single-replica events
+/// fire before domain events (kernel push order).
+#[derive(Default)]
+pub struct FailureInjector {
+    /// Per-domain member lists, normalized (sorted, deduped) once at
+    /// `on_start` so every fire/recover walks members in one
+    /// deterministic order without re-allocating per event.
+    members: Vec<Vec<usize>>,
+}
+
+impl ClusterComponent for FailureInjector {
+    fn name(&self) -> &'static str {
+        "failure-injector"
+    }
+
+    fn on_start(&mut self, ctx: &mut ClusterCtx, kernel: &mut EventQueue) -> anyhow::Result<()> {
+        let n = ctx.replicas.len();
+        // with autoscaling on, an outage may target a replica the scaler
+        // will have spawned by then (indices are deterministic); the check
+        // that it actually exists moves to the instant the event fires
+        let elastic = ctx.cfg.cluster.autoscale.kind != AutoscaleKind::Off;
+        let mut max_idx = n;
+        for f in &ctx.cfg.cluster.failures {
+            if f.replica >= n && !elastic {
+                anyhow::bail!(
+                    "failure event references replica {} but the cluster has \
+                     {n} replicas",
+                    f.replica
+                );
+            }
+            if let Err(e) = f.validate() {
+                anyhow::bail!("{e}");
+            }
+            max_idx = max_idx.max(f.replica + 1);
+        }
+        // validate domains + their outage schedule
+        let domains = &ctx.cfg.cluster.failure_domains;
+        for (d, dom) in domains.iter().enumerate() {
+            if dom.replicas.is_empty() {
+                anyhow::bail!("failure domain {d} ({}) has no member replicas", dom.name);
+            }
+            for &m in &dom.replicas {
+                if m >= n && !elastic {
+                    anyhow::bail!(
+                        "failure domain {d} ({}) references replica {m} but the \
+                         cluster has {n} replicas",
+                        dom.name
+                    );
+                }
+                max_idx = max_idx.max(m + 1);
+            }
+        }
+        for df in &ctx.cfg.cluster.domain_failures {
+            if df.domain >= domains.len() {
+                anyhow::bail!(
+                    "domain failure event references domain {} but only {} \
+                     failure domains are configured",
+                    df.domain,
+                    domains.len()
+                );
+            }
+            if let Err(e) = df.validate() {
+                anyhow::bail!("{e}");
+            }
+        }
+        self.members = domains
+            .iter()
+            .map(|d| {
+                let mut m = d.replicas.clone();
+                m.sort_unstable();
+                m.dedup();
+                m
+            })
+            .collect();
+        // merge overlapping single-replica windows into their union
+        let mut by_replica: Vec<Vec<(f64, f64)>> = vec![Vec::new(); max_idx];
+        for f in &ctx.cfg.cluster.failures {
+            by_replica[f.replica].push((f.at, f.at + f.duration));
+        }
+        let mut merged_by_replica: Vec<Vec<(f64, f64)>> = Vec::with_capacity(max_idx);
+        for mut windows in by_replica {
+            windows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut merged: Vec<(f64, f64)> = Vec::new();
+            for (start, end) in windows {
+                match merged.last_mut() {
+                    Some(last) if start <= last.1 => last.1 = last.1.max(end),
+                    _ => merged.push((start, end)),
+                }
+            }
+            merged_by_replica.push(merged);
+        }
+        // domain windows may not overlap any other outage window on the
+        // same replica (individual or another domain's): recovery ownership
+        // would be ambiguous
+        let mut domain_windows: Vec<Vec<(f64, f64)>> = vec![Vec::new(); max_idx];
+        for df in &ctx.cfg.cluster.domain_failures {
+            let window = (df.at, df.at + df.duration);
+            for &m in &self.members[df.domain] {
+                let overlaps = merged_by_replica[m]
+                    .iter()
+                    .chain(domain_windows[m].iter())
+                    .any(|&(s, e)| window.0 < e && s < window.1);
+                if overlaps {
+                    anyhow::bail!(
+                        "domain failure (domain {} at t={}) overlaps another \
+                         outage window on replica {m}; outage windows on one \
+                         replica must not overlap across failure domains",
+                        df.domain,
+                        df.at
+                    );
+                }
+                domain_windows[m].push(window);
+            }
+        }
+        // emit single-replica events in the legacy (at, class, replica)
+        // order so the kernel's insertion-order tie-break reproduces the
+        // pre-component event stream byte for byte
+        let mut singles: Vec<(f64, u8, usize)> = Vec::new();
+        for (replica, merged) in merged_by_replica.iter().enumerate() {
+            for &(start, end) in merged {
+                singles.push((start, 2, replica)); // fail
+                singles.push((end, 1, replica)); // recover
+            }
+        }
+        singles.sort_by(|a, b| a.partial_cmp(b).expect("NaN event time"));
+        for (at, class, replica) in singles {
+            let payload = if class == 2 {
+                EventPayload::Fail { replica }
+            } else {
+                EventPayload::Recover { replica }
+            };
+            kernel.push(at, payload);
+        }
+        // then domain events, in (at, class, domain) order
+        let mut dom_events: Vec<(f64, u8, usize)> = Vec::new();
+        for df in &ctx.cfg.cluster.domain_failures {
+            dom_events.push((df.at, 2, df.domain));
+            dom_events.push((df.at + df.duration, 1, df.domain));
+        }
+        dom_events.sort_by(|a, b| a.partial_cmp(b).expect("NaN event time"));
+        for (at, class, domain) in dom_events {
+            let payload = if class == 2 {
+                EventPayload::DomainFail { domain }
+            } else {
+                EventPayload::DomainRecover { domain }
+            };
+            kernel.push(at, payload);
+        }
+        Ok(())
+    }
+
+    fn on_event(
+        &mut self,
+        ev: KernelEvent,
+        ctx: &mut ClusterCtx,
+        _kernel: &mut EventQueue,
+    ) -> anyhow::Result<Option<KernelEvent>> {
+        match ev.payload {
+            EventPayload::Fail { replica } => {
+                let lost = ctx.fail_replica(replica, ev.at)?;
+                ctx.redispatch(lost, ev.at)?;
+                Ok(None)
+            }
+            EventPayload::Recover { replica } => {
+                ctx.apply_recovery(replica, ev.at);
+                Ok(None)
+            }
+            EventPayload::DomainFail { domain } => {
+                // fail every member first, pooling the lost work, then
+                // re-dispatch the whole storm over the true survivor set
+                let mut lost = Vec::new();
+                for &m in &self.members[domain] {
+                    lost.extend(ctx.fail_replica(m, ev.at)?);
+                }
+                ctx.domain_outages += 1;
+                ctx.redispatch(lost, ev.at)?;
+                Ok(None)
+            }
+            EventPayload::DomainRecover { domain } => {
+                for &m in &self.members[domain] {
+                    ctx.apply_recovery(m, ev.at);
+                }
+                Ok(None)
+            }
+            _ => Ok(Some(ev)),
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! The cluster component protocol: one implementation per serving concern.
+//!
+//! A [`ClusterComponent`] observes the shared [`ClusterCtx`] and talks to
+//! the rest of the cluster **through the event kernel**: it pushes
+//! [`EventPayload`](crate::cluster::kernel::EventPayload)s in `on_start`,
+//! handles the ones it owns in `on_event`, and may act at quiescent points
+//! (between events) in `on_quiescent`. Components never call each other;
+//! everything they share lives in the context, so adding a concern is a
+//! new component, not another branch woven into the orchestrator loop.
+//!
+//! The protocol, as driven by [`EventCluster`](crate::cluster::EventCluster):
+//!
+//! 1. `on_start(ctx, kernel)` once per component, in registration order —
+//!    validate configuration (fail fast, before any work is done) and push
+//!    the initial event schedule.
+//! 2. Each popped kernel event is offered to the components in
+//!    registration order; `on_event` either consumes it (returns `None`)
+//!    or passes it along (returns it back). An event no component consumes
+//!    is a hard error — silently dropped events are how schedulers rot.
+//! 3. `on_quiescent(ctx)` for every component at the top of every loop
+//!    iteration (the cluster is between events; replicas may be stepped
+//!    next).
+//!
+//! Five concerns, five implementations:
+//!
+//! * [`ArrivalSource`] — feeds the workload's arrival stream into the
+//!   kernel and routes each arrival when its event fires.
+//! * [`FailureInjector`] — scheduled single-replica outages *and*
+//!   correlated failure domains (rack/zone groups that fail as one event,
+//!   pooling every member's lost work into a single re-dispatch storm).
+//! * [`AutoscaleDriver`] — the autoscaler decision chain: periodic +
+//!   scripted decision points, scale-out spawns (provisioning delays as
+//!   spawn-ready events), and scale-in victim selection — either the
+//!   legacy fewest-live rule or, when `migration_kv_per_token > 0`,
+//!   migration-cost-aware scoring over each candidate's predicted
+//!   remaining work.
+//! * [`WorkStealer`] — quiescent-point migration of never-scheduled queued
+//!   work from backlogged replicas to idle ones, gated on transfer cost.
+//! * [`SloAdmission`] — the placement/admission seam. Unlike the other
+//!   four it owns no timed events: every placement path (fresh arrivals,
+//!   crash re-dispatch, scale-in drains) consults it synchronously,
+//!   because admission is a per-request verdict, not a scheduled
+//!   occurrence. It is registered like any component so the concern has
+//!   exactly one home.
+
+mod admission;
+mod arrivals;
+mod driver;
+mod failures;
+mod stealing;
+
+pub use admission::SloAdmission;
+pub use arrivals::ArrivalSource;
+pub use driver::AutoscaleDriver;
+pub use failures::FailureInjector;
+pub use stealing::WorkStealer;
+
+use crate::cluster::ctx::ClusterCtx;
+use crate::cluster::kernel::{EventQueue, KernelEvent};
+
+/// One serving concern of the event-driven cluster. See the module docs
+/// for the protocol; all hooks default to no-ops so a component only
+/// implements the phases it participates in.
+pub trait ClusterComponent {
+    /// Stable name for error messages and docs.
+    fn name(&self) -> &'static str;
+
+    /// Called once before the event loop: validate configuration and push
+    /// the initial event schedule.
+    fn on_start(&mut self, _ctx: &mut ClusterCtx, _kernel: &mut EventQueue) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Offered each popped event in registration order. Consume it and
+    /// return `Ok(None)`, or hand it back (`Ok(Some(ev))`) for the next
+    /// component. Ownership moves with the event so an arrival's
+    /// [`Request`](crate::core::Request) payload is never cloned.
+    fn on_event(
+        &mut self,
+        ev: KernelEvent,
+        _ctx: &mut ClusterCtx,
+        _kernel: &mut EventQueue,
+    ) -> anyhow::Result<Option<KernelEvent>> {
+        Ok(Some(ev))
+    }
+
+    /// Called at the top of every orchestrator iteration, between events.
+    fn on_quiescent(&mut self, _ctx: &mut ClusterCtx) -> anyhow::Result<()> {
+        Ok(())
+    }
+}

@@ -1,0 +1,459 @@
+//! Shared cluster state and mechanics: what every component observes.
+//!
+//! [`ClusterCtx`] owns the replica roster, the shared prediction service,
+//! the router, and all cross-replica bookkeeping (per-replica predicted
+//! backlog moments, the in-flight map, lifecycle counters, the scaling
+//! timeline). The components in [`crate::cluster::components`] decide
+//! *when* things happen (they pop kernel events); the context implements
+//! *what* happens: routing a request in, stepping a replica and
+//! reconciling its completions, taking a replica down, draining a
+//! scale-in victim (including migration-cost-aware moves of
+//! partially-generated work), and assembling the final
+//! [`ClusterReport`].
+//!
+//! Everything here is deterministic given the same call sequence:
+//! collections are only ever iterated in sorted or index order wherever
+//! float bookkeeping (and therefore downstream routing, scaling, and the
+//! report JSON) could observe the order.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::autoscale::ScalingEvent;
+use crate::config::{ExperimentConfig, RouterKind};
+use crate::core::{Request, RequestId};
+use crate::cost::CostModel;
+use crate::engine::Engine;
+use crate::metrics::{ClusterCounters, ClusterReport, RunReport};
+use crate::predictor::Predictor;
+
+use super::components::SloAdmission;
+use super::replica::{ClusterReplica, InFlight, ReplicaState};
+use super::router::{make_router, ClassAwareRouter, ReplicaView, Router};
+
+/// Shared state of the event-driven cluster: N coordinators on a shared
+/// virtual clock behind a [`Router`], with a shared prediction service and
+/// all cross-replica bookkeeping. Components mutate it through the
+/// mechanics methods below; [`EventCluster`](crate::cluster::EventCluster)
+/// derefs to it, so its fields and accessors are the cluster's public
+/// read surface.
+pub struct ClusterCtx {
+    pub cfg: ExperimentConfig,
+    pub replicas: Vec<ClusterReplica>,
+    pub router: Box<dyn Router>,
+    /// Shared prediction service (prices arrivals; learns from completions).
+    pub predictor: Box<dyn Predictor>,
+    pub(crate) cost: Box<dyn CostModel>,
+    /// id -> routing + predicted-cost bookkeeping.
+    pub(crate) in_flight: HashMap<RequestId, InFlight>,
+    /// Per-replica sum of predicted cost of in-flight requests.
+    pub(crate) backlog: Vec<f64>,
+    /// Per-replica sum of predicted cost *variance* of in-flight requests.
+    pub(crate) backlog_var: Vec<f64>,
+    /// Cluster-wide SLO-weighted backlog moments: Σ w·E[cost] and
+    /// Σ w²·Var[cost] over in-flight requests (w = 1 under class-blind
+    /// serving, so these equal the unweighted sums). Maintained
+    /// incrementally — never by iterating the in-flight map, whose order
+    /// is not deterministic — and consumed by the uncertainty-aware
+    /// autoscaler's weighted forecast.
+    pub(crate) backlog_weighted: f64,
+    pub(crate) backlog_weighted_var: f64,
+    /// Per-replica routed-request counts.
+    pub routed: Vec<u64>,
+    /// Requests re-dispatched through the router after a replica failure.
+    pub re_routed: u64,
+    /// Queued requests re-routed off a scale-in victim at drain time.
+    pub drained: u64,
+    /// Partially-generated requests migrated off a scale-in victim (KV
+    /// shipped, generated prefix preserved) instead of waiting out the
+    /// drain.
+    pub migrated: u64,
+    /// Queued requests migrated to an idle replica by work stealing.
+    pub stolen: u64,
+    /// Failure-domain outages that fired (each may take several replicas
+    /// down in one event).
+    pub domain_outages: u64,
+    /// Steal candidates rejected by the transfer-cost benefit gate at
+    /// least once.
+    pub(crate) steal_rejected: HashSet<RequestId>,
+    /// Whether anything that could change a steal verdict (queue contents,
+    /// backlogs, replica states) has happened since the last fruitless
+    /// stealing pass. The benefit gate makes "idle thief, nothing
+    /// profitable" a *persistent* state; without this flag every event-loop
+    /// iteration would rescan and re-sort the queues just to reach the same
+    /// verdict.
+    pub(crate) steal_dirty: bool,
+    /// Replica lifecycle timeline (provision/up/drain/retire/fail/recover).
+    pub scaling_events: Vec<ScalingEvent>,
+}
+
+impl ClusterCtx {
+    /// Build the shared state for a fresh cluster from `cfg` (replica
+    /// count / heterogeneity from `cfg.cluster`), with an explicit router.
+    pub(crate) fn new(cfg: &ExperimentConfig, router: RouterKind) -> ClusterCtx {
+        let n = cfg.cluster.replicas.max(1);
+        let replicas: Vec<ClusterReplica> = (0..n)
+            .map(|i| {
+                let profile = cfg.cluster.replica_profile(&cfg.engine, i);
+                let seed = cfg.seed ^ ((i as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+                ClusterReplica {
+                    coord: crate::serve::build_sim_coordinator_with(cfg, profile, seed),
+                    speed: cfg.cluster.speed_of(i),
+                    state: ReplicaState::Active,
+                    down_since: 0.0,
+                    downtime: 0.0,
+                    spawned_at: 0.0,
+                    ready_at: 0.0,
+                    retired_at: None,
+                    seen_outcomes: 0,
+                    seen_aborted: 0,
+                }
+            })
+            .collect();
+        let predictor = crate::predictor::make_predictor(
+            cfg.predictor,
+            cfg.workload.embed_dim,
+            cfg.history_capacity,
+            cfg.similarity_threshold,
+            cfg.seed ^ 0xc175_7e12,
+        );
+        let mut boxed = make_router(router, cfg.cluster.router_quantile);
+        if cfg.slo.class_aware {
+            boxed = Box::new(ClassAwareRouter::new(boxed));
+        }
+        ClusterCtx {
+            cfg: cfg.clone(),
+            backlog: vec![0.0; n],
+            backlog_var: vec![0.0; n],
+            backlog_weighted: 0.0,
+            backlog_weighted_var: 0.0,
+            routed: vec![0; n],
+            re_routed: 0,
+            drained: 0,
+            migrated: 0,
+            stolen: 0,
+            domain_outages: 0,
+            steal_rejected: HashSet::new(),
+            steal_dirty: true,
+            scaling_events: Vec::new(),
+            replicas,
+            router: boxed,
+            predictor,
+            cost: crate::cost::make_cost_model(cfg.cost_model),
+            in_flight: HashMap::new(),
+        }
+    }
+
+    // =======================================================================
+    // Read surface (tests, reports, examples)
+    // =======================================================================
+
+    /// Requests refused at admission, cluster-wide. Each coordinator owns
+    /// its own count (it is the sole place a refusal happens), so summing
+    /// here counts every rejection exactly once.
+    pub fn rejected(&self) -> u64 {
+        self.replicas.iter().map(|r| r.coord.rejected).sum()
+    }
+
+    /// Requests aborted by queue timeout, cluster-wide.
+    pub fn aborted(&self) -> u64 {
+        self.replicas.iter().map(|r| r.coord.aborted).sum()
+    }
+
+    /// Per-SLO-class admission rejections, cluster-wide (indexed by
+    /// [`SloClass::index`](crate::slo::SloClass::index)).
+    pub fn rejected_by_class(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for r in &self.replicas {
+            for (k, &n) in r.coord.rejected_by_class.iter().enumerate() {
+                out[k] += n;
+            }
+        }
+        out
+    }
+
+    /// Per-SLO-class queue-timeout aborts, cluster-wide (indexed by
+    /// [`SloClass::index`](crate::slo::SloClass::index)).
+    pub fn aborted_by_class(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for r in &self.replicas {
+            for (k, &n) in r.coord.aborted_by_class.iter().enumerate() {
+                out[k] += n;
+            }
+        }
+        out
+    }
+
+    /// Requests the cluster still tracks as in flight (0 after a completed
+    /// run — anything else means bookkeeping leaked).
+    pub fn in_flight_count(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Sum of per-replica predicted-cost backlogs (≈0 after a drained run).
+    pub fn total_backlog(&self) -> f64 {
+        self.backlog.iter().sum()
+    }
+
+    /// Cluster-wide SLO-weighted backlog mean (≈0 after a drained run;
+    /// equals [`ClusterCtx::total_backlog`] under class-blind serving up
+    /// to float accumulation order).
+    pub fn weighted_backlog(&self) -> f64 {
+        self.backlog_weighted
+    }
+
+    /// Steal candidates the transfer-cost benefit gate rejected (distinct
+    /// requests; one later stolen after backlog shifts still counts here).
+    pub fn steals_skipped(&self) -> u64 {
+        self.steal_rejected.len() as u64
+    }
+
+    /// Pre-warm the shared predictor and every replica's local predictor
+    /// with the offline corpus (`cfg.history_prewarm`).
+    pub fn prewarm(&mut self) {
+        crate::serve::prewarm_predictor(self.predictor.as_mut(), &self.cfg);
+        for r in &mut self.replicas {
+            crate::serve::prewarm_predictor(r.coord.predictor.as_mut(), &self.cfg);
+        }
+    }
+
+    /// Total completions across replicas.
+    pub fn completed(&self) -> usize {
+        self.replicas.iter().map(|r| r.coord.outcomes().len()).sum()
+    }
+
+    /// Merged outcome stream (unsorted).
+    pub fn merged_outcomes(&self) -> Vec<crate::core::RequestOutcome> {
+        let mut out = Vec::with_capacity(self.completed());
+        for r in &self.replicas {
+            out.extend_from_slice(r.coord.outcomes());
+        }
+        out
+    }
+
+    /// Cluster-level report (aggregate + per-replica + lifecycle counters +
+    /// scaling timeline).
+    pub fn report(&self, warmup_fraction: f64) -> ClusterReport {
+        let per_replica: Vec<RunReport> = self
+            .replicas
+            .iter()
+            .map(|r| r.coord.report(warmup_fraction))
+            .collect();
+        // an outage still open at report time is charged up to the
+        // cluster-wide clock horizon; a *retired* replica is simply gone —
+        // it must not count as "down" for the remainder of the run, and a
+        // replica added mid-run is charged only from its provisioning time
+        let horizon = self
+            .replicas
+            .iter()
+            .map(|r| r.coord.now())
+            .fold(0.0, f64::max);
+        let downtime: Vec<f64> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                r.downtime
+                    + if r.state == ReplicaState::Down {
+                        (horizon - r.down_since).max(0.0)
+                    } else {
+                        0.0
+                    }
+            })
+            .collect();
+        let replica_seconds: Vec<f64> = self
+            .replicas
+            .iter()
+            .map(|r| r.replica_seconds(horizon))
+            .collect();
+        ClusterReport::new(
+            self.router.name().to_string(),
+            per_replica,
+            ClusterCounters {
+                routed: self.routed.clone(),
+                re_routed: self.re_routed,
+                drained: self.drained,
+                migrated: self.migrated,
+                stolen: self.stolen,
+                steals_skipped: self.steals_skipped(),
+                domain_outages: self.domain_outages,
+                downtime,
+                replica_seconds,
+                scaling_events: self.scaling_events.clone(),
+            },
+            &self.merged_outcomes(),
+            warmup_fraction,
+            &self.cfg.slo.specs,
+        )
+    }
+
+    // =======================================================================
+    // Routing + stepping mechanics
+    // =======================================================================
+
+    /// Routable snapshot: one view per *routable* (Active) replica.
+    /// `ReplicaView::id` carries the true replica index, which no longer
+    /// matches the position in the returned slice once any replica is down,
+    /// provisioning, or draining — routers return positions, the dispatcher
+    /// maps them back through `id`.
+    pub(crate) fn views(&self) -> Vec<ReplicaView> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.routable())
+            .map(|(i, r)| ReplicaView {
+                id: i,
+                live: r.coord.live_count(),
+                kv_used_blocks: r.coord.kv.used_blocks(),
+                kv_total_blocks: r.coord.kv.total_blocks(),
+                now: r.coord.now(),
+                speed: r.speed,
+                max_batch: r.coord.engine.max_batch(),
+                predicted_backlog: self.backlog[i],
+                predicted_backlog_var: self.backlog_var[i],
+            })
+            .collect()
+    }
+
+    /// Index and clock of the busy replica with the smallest virtual time,
+    /// if any replica has live work. Only Active and Draining replicas can
+    /// hold live work (Down replicas are drained at failure time,
+    /// Provisioning/Retired ones never held any), so only those are
+    /// stepped — a Draining replica keeps running until its last live
+    /// request finishes.
+    pub(crate) fn earliest_busy(&self) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            let steppable = matches!(r.state, ReplicaState::Active | ReplicaState::Draining);
+            if !steppable || r.coord.is_idle() {
+                continue;
+            }
+            let t = r.coord.now();
+            if best.map_or(true, |(_, bt)| t < bt) {
+                best = Some((i, t));
+            }
+        }
+        best
+    }
+
+    /// Whether any replica still holds live (queued/running/preempted)
+    /// work.
+    pub(crate) fn has_live_work(&self) -> bool {
+        self.replicas.iter().any(|r| !r.coord.is_idle())
+    }
+
+    /// Route and submit one request. `not_before` is the earliest virtual
+    /// time the target may start it: the arrival time for fresh requests,
+    /// the failure instant for re-dispatched ones (an idle survivor with a
+    /// lagging clock must not serve work "before" the crash that freed it).
+    /// Fails hard when no replica is alive or the router returns an
+    /// out-of-range position — both are configuration/implementation errors
+    /// that must not be silently patched. A refused submission counts as a
+    /// rejection (crash re-dispatch and fresh arrivals share admission
+    /// semantics). Placement itself — including the admission consult — is
+    /// the [`SloAdmission`] component's concern.
+    pub(crate) fn dispatch(&mut self, req: Request, not_before: f64) -> anyhow::Result<()> {
+        SloAdmission.place(self, req, not_before, None)?;
+        Ok(())
+    }
+
+    /// Run one scheduling iteration on replica `i` and drain its new
+    /// completions into cluster bookkeeping (backlog release + shared
+    /// predictor learning). Returns false when the step made no observable
+    /// progress (clock, completions, aborts, and live set all unchanged) —
+    /// with live work that means the replica is wedged (e.g. a request that
+    /// can never fit its KV capacity) and the caller must not keep spinning.
+    fn step_replica(&mut self, i: usize) -> anyhow::Result<bool> {
+        let (now0, live0) = {
+            let c = &self.replicas[i].coord;
+            (c.now(), c.live_count())
+        };
+        self.replicas[i].coord.step()?;
+        let new: Vec<(RequestId, u32)> = {
+            let r = &self.replicas[i];
+            r.coord.outcomes()[r.seen_outcomes..]
+                .iter()
+                .map(|o| (o.id, o.output_len))
+                .collect()
+        };
+        self.replicas[i].seen_outcomes += new.len();
+        let live_now = self.replicas[i].coord.live_count();
+        let progressed =
+            !new.is_empty() || self.replicas[i].coord.now() > now0 || live_now != live0;
+        // completions / live-set changes move backlogs and can idle a
+        // replica — both alter steal verdicts; a bare clock advance cannot
+        if !new.is_empty() || live_now != live0 {
+            self.steal_dirty = true;
+        }
+        for (id, output_len) in new {
+            if let Some(f) = self.in_flight.remove(&id) {
+                self.release_backlog(f.replica, f.cost, f.var, f.weight);
+                self.predictor.observe(&f.req, output_len);
+            }
+        }
+        // Reconcile timeout-aborts: they leave the live set without an
+        // outcome, so their backlog contribution must be released here or
+        // the cost-aware router would shun this replica forever.
+        if self.replicas[i].coord.aborted > self.replicas[i].seen_aborted {
+            self.replicas[i].seen_aborted = self.replicas[i].coord.aborted;
+            let coord = &self.replicas[i].coord;
+            let mut gone: Vec<RequestId> = self
+                .in_flight
+                .iter()
+                .filter(|(id, entry)| entry.replica == i && !coord.is_live(**id))
+                .map(|(id, _)| *id)
+                .collect();
+            // the map's iteration order is not deterministic; releasing in
+            // id order keeps the float bookkeeping — and therefore every
+            // downstream routing/scaling decision and the report JSON —
+            // byte-identical across runs of the same seed
+            gone.sort_unstable();
+            for id in gone {
+                if let Some(f) = self.in_flight.remove(&id) {
+                    self.release_backlog(f.replica, f.cost, f.var, f.weight);
+                }
+            }
+        }
+        Ok(progressed)
+    }
+
+    /// Release one request's contribution to a replica's predicted-cost
+    /// moments and the cluster-wide weighted moments (floored at 0 against
+    /// accumulated float error).
+    pub(crate) fn release_backlog(&mut self, replica: usize, cost: f64, var: f64, weight: f64) {
+        self.backlog[replica] = (self.backlog[replica] - cost).max(0.0);
+        self.backlog_var[replica] = (self.backlog_var[replica] - var).max(0.0);
+        self.backlog_weighted = (self.backlog_weighted - weight * cost).max(0.0);
+        self.backlog_weighted_var =
+            (self.backlog_weighted_var - weight * weight * var).max(0.0);
+    }
+
+    /// Step replica `i` and fail loudly if it is wedged instead of spinning
+    /// forever. A no-progress step with live work means some request can
+    /// never be scheduled (e.g. its prompt needs more KV blocks than the
+    /// replica owns), which is a configuration error, not a transient.
+    /// A draining replica whose last live request just finished retires
+    /// here.
+    pub(crate) fn check_progress(&mut self, i: usize) -> anyhow::Result<()> {
+        if !self.step_replica(i)? {
+            anyhow::bail!(
+                "replica {i} is wedged: {} live request(s) but a scheduling \
+                 iteration made no progress — its capacity (kv_capacity {} \
+                 tokens, max_batch {}) cannot serve the routed workload",
+                self.replicas[i].coord.live_count(),
+                self.replicas[i].coord.kv.total_blocks()
+                    * self.replicas[i].coord.kv.block_tokens(),
+                self.replicas[i].coord.engine.max_batch(),
+            );
+        }
+        if self.replicas[i].state == ReplicaState::Draining
+            && self.replicas[i].coord.is_idle()
+        {
+            let at = self.replicas[i].coord.now();
+            self.retire(i, at);
+        }
+        Ok(())
+    }
+
+    // Replica lifecycle + scale-in mechanics live in
+    // `cluster/lifecycle.rs` (a second `impl ClusterCtx` block).
+}
+

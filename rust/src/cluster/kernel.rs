@@ -1,0 +1,233 @@
+//! The cluster event kernel: a virtual clock's deterministic event queue.
+//!
+//! Every timed occurrence in the event-driven cluster — request arrivals,
+//! replica outages and recoveries, domain-wide outages, autoscaler decision
+//! points, provisioning completions — is a [`KernelEvent`] in one
+//! [`EventQueue`]. The queue is a strict priority queue over the key
+//! `(time, class, seq)`:
+//!
+//! * `time` — the virtual instant the event fires (never NaN; every config
+//!   surface validates event times before they reach the kernel).
+//! * `class` — the [`EventPayload`]'s semantic rank at equal times:
+//!   capacity *arrives* (spawn-ready, recover) before capacity *leaves*
+//!   (fail), autoscaler decisions observe the post-transition state, and
+//!   arrivals route last so a same-instant arrival already sees the
+//!   post-transition replica set.
+//! * `seq` — a monotone push counter. Events with equal `(time, class)`
+//!   pop in exactly the order they were pushed, which is what keeps
+//!   same-seed cluster runs byte-identical: no heap/hash iteration order
+//!   ever leaks into the event stream.
+//!
+//! Components ([`crate::cluster::components`]) never hold private timers;
+//! they push events here and react when the orchestrator pops them. The
+//! kernel also tracks how many events of each class are pending so
+//! components can ask cheap questions like "are any arrivals still due?"
+//! (the autoscaler's decision chain ends when arrivals are exhausted and
+//! the cluster has drained).
+
+use std::collections::BinaryHeap;
+
+use crate::core::Request;
+
+/// What a kernel event does when it fires. The payload owns any data the
+/// handler needs (an arrival owns its [`Request`]), so popping an event
+/// transfers ownership to the handling component.
+#[derive(Clone, Debug)]
+pub enum EventPayload {
+    /// A provisioning delay elapsed: the replica becomes routable.
+    SpawnReady { replica: usize },
+    /// A configured single-replica outage ends.
+    Recover { replica: usize },
+    /// A configured failure-domain outage ends (all members recover).
+    DomainRecover { domain: usize },
+    /// A configured single-replica outage begins.
+    Fail { replica: usize },
+    /// A configured failure-domain outage begins: every member of the
+    /// domain fails at this one instant.
+    DomainFail { domain: usize },
+    /// An autoscaler decision point.
+    Decision,
+    /// A request arrives at the cluster front door.
+    Arrival(Request),
+}
+
+impl EventPayload {
+    /// Tie-break class at equal times (smaller fires first): capacity
+    /// arrives before capacity leaves, decisions observe the
+    /// post-transition state, arrivals route over the post-transition set.
+    pub fn class(&self) -> u8 {
+        match self {
+            EventPayload::SpawnReady { .. } => 0,
+            EventPayload::Recover { .. } | EventPayload::DomainRecover { .. } => 1,
+            EventPayload::Fail { .. } | EventPayload::DomainFail { .. } => 2,
+            EventPayload::Decision => 3,
+            EventPayload::Arrival(_) => 4,
+        }
+    }
+}
+
+/// Number of distinct [`EventPayload::class`] values (pending-count slots).
+const N_CLASSES: usize = 5;
+
+/// Class index of [`EventPayload::Decision`] events.
+const CLASS_DECISION: usize = 3;
+
+/// Class index of [`EventPayload::Arrival`] events.
+const CLASS_ARRIVAL: usize = 4;
+
+/// One scheduled event: fire time, tie-break class, push sequence number,
+/// and the payload handed to the handling component.
+#[derive(Clone, Debug)]
+pub struct KernelEvent {
+    /// Virtual fire time (seconds).
+    pub at: f64,
+    /// Tie-break class (see [`EventPayload::class`]).
+    pub class: u8,
+    /// Push sequence number (monotone; last key of the priority order).
+    pub seq: u64,
+    pub payload: EventPayload,
+}
+
+impl KernelEvent {
+    fn key(&self) -> (f64, u8, u64) {
+        (self.at, self.class, self.seq)
+    }
+}
+
+/// Min-heap entry wrapper: orders by `(at, class, seq)` ascending. `at` is
+/// compared with `total_cmp` — identical to `partial_cmp` for the non-NaN
+/// times the kernel accepts, and total so `Ord` is sound.
+struct Entry(KernelEvent);
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Entry) -> bool {
+        self.0.seq == other.0.seq
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Entry) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Entry) -> std::cmp::Ordering {
+        let (a, b) = (self.0.key(), other.0.key());
+        // reversed: BinaryHeap is a max-heap, the kernel wants the
+        // smallest key on top
+        b.0.total_cmp(&a.0)
+            .then(b.1.cmp(&a.1))
+            .then(b.2.cmp(&a.2))
+    }
+}
+
+/// Deterministic event queue for the cluster's virtual clock.
+///
+/// Ties at equal `(time, class)` break by push order, so pushing events in
+/// a deterministic order is sufficient for a byte-identical event stream —
+/// the queue never reorders equal-key events.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    next_seq: u64,
+    pending: [usize; N_CLASSES],
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `payload` at virtual time `at`. Panics on a NaN time —
+    /// every config surface rejects NaN before events are built, so one
+    /// reaching the kernel is an internal error, not bad user input.
+    pub fn push(&mut self, at: f64, payload: EventPayload) {
+        assert!(!at.is_nan(), "NaN event time reached the kernel");
+        let class = payload.class();
+        self.pending[class as usize] += 1;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Entry(KernelEvent { at, class, seq, payload }));
+    }
+
+    /// Remove and return the next event (smallest `(time, class, seq)`).
+    pub fn pop(&mut self) -> Option<KernelEvent> {
+        let ev = self.heap.pop().map(|e| e.0)?;
+        self.pending[ev.class as usize] -= 1;
+        Some(ev)
+    }
+
+    /// Fire time of the next event without removing it.
+    pub fn peek_at(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.0.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Pending arrival events (requests not yet routed).
+    pub fn pending_arrivals(&self) -> usize {
+        self.pending[CLASS_ARRIVAL]
+    }
+
+    /// Pending autoscaler decision points.
+    pub fn pending_decisions(&self) -> usize {
+        self.pending[CLASS_DECISION]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventPayload::Decision);
+        q.push(1.0, EventPayload::Decision);
+        q.push(2.0, EventPayload::Decision);
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.at)).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn equal_time_breaks_by_class_then_push_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventPayload::Decision);
+        q.push(1.0, EventPayload::Fail { replica: 9 });
+        q.push(1.0, EventPayload::SpawnReady { replica: 2 });
+        q.push(1.0, EventPayload::Fail { replica: 3 });
+        q.push(1.0, EventPayload::Recover { replica: 1 });
+        // class order: spawn-ready(0) < recover(1) < fail(2) < decision(3);
+        // the two fails keep their push order (9 before 3)
+        let order: Vec<u8> = std::iter::from_fn(|| q.pop().map(|e| e.class)).collect();
+        assert_eq!(order, vec![0, 1, 2, 2, 3]);
+    }
+
+    #[test]
+    fn pending_counts_track_pushes_and_pops() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.pending_decisions(), 0);
+        q.push(1.0, EventPayload::Decision);
+        q.push(2.0, EventPayload::Decision);
+        assert_eq!(q.pending_decisions(), 2);
+        q.pop();
+        assert_eq!(q.pending_decisions(), 1);
+        assert_eq!(q.pending_arrivals(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN event time")]
+    fn nan_times_are_rejected() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, EventPayload::Decision);
+    }
+}

@@ -1,0 +1,416 @@
+//! Replica lifecycle + scale-in mechanics of [`ClusterCtx`].
+//!
+//! A second `impl ClusterCtx` block (the state itself lives in
+//! [`crate::cluster::ctx`]): taking replicas down and re-dispatching the
+//! lost work, recovery and provisioning completion, the autoscaler's
+//! snapshot/spawn/drain/retire mechanism, and migration-cost-aware
+//! scale-in — pricing a quantile of each partially-generated request's
+//! predicted remaining cost against its KV transfer cost, both when
+//! *choosing* the victim and when *draining* it. The components in
+//! [`crate::cluster::components`] decide when these mechanics fire.
+
+use crate::autoscale::{AutoscaleView, ScaleAction, ScalingEvent};
+use crate::core::{Request, RequestId};
+use crate::util::stats::normal_quantile_clamped;
+
+use super::components::SloAdmission;
+use super::ctx::ClusterCtx;
+use super::replica::{ClusterReplica, ReplicaState};
+use super::router::ReplicaView;
+
+impl ClusterCtx {
+    /// Take replica `i` down at `at`, returning the live requests it lost
+    /// (crash semantics: queued, running, and preempted state is gone) with
+    /// their cluster-side bookkeeping already released. Shared by
+    /// single-replica and domain outages — the *caller* re-dispatches the
+    /// returned work, so a domain outage can pool the losses of every
+    /// member and route the whole storm over the true survivor set.
+    ///
+    /// A replica that was already draining for scale-in retires on the spot
+    /// (it was leaving anyway; the crash just lost the work it was
+    /// finishing). A replica still *provisioning* goes down holding no
+    /// work: if the outage ends before the provisioning delay would have,
+    /// the recovery resumes provisioning and the pending spawn-ready event
+    /// still activates it exactly on schedule; if the outage outlasts the
+    /// delay, the spawn-ready no-ops while down and the recovery activates
+    /// it. Either way an outage can only delay, never advance, the instant
+    /// capacity arrives. Failures on retired or already-down replicas are
+    /// no-ops; one naming a replica that was never provisioned is a hard
+    /// configuration error.
+    pub(crate) fn fail_replica(&mut self, i: usize, at: f64) -> anyhow::Result<Vec<Request>> {
+        if i >= self.replicas.len() {
+            anyhow::bail!(
+                "failure event at t={at} references replica {i}, but only \
+                 {} replicas have been provisioned by then",
+                self.replicas.len()
+            );
+        }
+        let was_draining = match self.replicas[i].state {
+            ReplicaState::Active => false,
+            ReplicaState::Draining => true,
+            ReplicaState::Provisioning => {
+                self.replicas[i].coord.advance_to(at);
+                self.record(at, i, ScaleAction::Fail);
+                self.replicas[i].state = ReplicaState::Down;
+                self.replicas[i].down_since = at;
+                return Ok(Vec::new());
+            }
+            _ => return Ok(Vec::new()),
+        };
+        self.replicas[i].coord.advance_to(at);
+        self.record(at, i, ScaleAction::Fail);
+        self.steal_dirty = true;
+        if was_draining {
+            self.retire(i, at);
+        } else {
+            self.replicas[i].state = ReplicaState::Down;
+            self.replicas[i].down_since = at;
+        }
+        let lost = self.replicas[i].coord.drain_live();
+        for req in &lost {
+            if let Some(f) = self.in_flight.remove(&req.id) {
+                debug_assert_eq!(f.replica, i, "in-flight map out of sync at failure");
+                self.release_backlog(f.replica, f.cost, f.var, f.weight);
+            }
+        }
+        Ok(lost)
+    }
+
+    /// Re-dispatch work lost to an outage through the router over the
+    /// survivors, in deterministic (arrival, id) order.
+    pub(crate) fn redispatch(&mut self, mut lost: Vec<Request>, at: f64) -> anyhow::Result<()> {
+        lost.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        self.re_routed += lost.len() as u64;
+        for req in lost {
+            self.dispatch(req, at)?;
+        }
+        Ok(())
+    }
+
+    /// A scheduled outage ends: the (empty) replica rejoins the routable
+    /// set and its downtime is charged. A replica whose provisioning was
+    /// interrupted by the outage — recovery lands before its `ready_at` —
+    /// *resumes* provisioning instead: the still-pending spawn-ready event
+    /// brings it up at the originally scheduled instant, so an outage can
+    /// never hand the cluster capacity earlier than the provisioning delay
+    /// allows. Replicas that retired while down stay retired.
+    pub(crate) fn apply_recovery(&mut self, i: usize, at: f64) {
+        if self.replicas[i].state != ReplicaState::Down {
+            return;
+        }
+        self.replicas[i].downtime += at - self.replicas[i].down_since;
+        self.replicas[i].coord.advance_to(at);
+        self.record(at, i, ScaleAction::Recover);
+        if at < self.replicas[i].ready_at {
+            self.replicas[i].state = ReplicaState::Provisioning;
+            return;
+        }
+        self.replicas[i].state = ReplicaState::Active;
+        self.steal_dirty = true; // a fresh idle thief just appeared
+    }
+
+    /// A provisioning delay elapsed: the cold replica joins the routable
+    /// set.
+    pub(crate) fn apply_spawn_ready(&mut self, i: usize, at: f64) {
+        if self.replicas[i].state != ReplicaState::Provisioning {
+            return;
+        }
+        self.replicas[i].state = ReplicaState::Active;
+        self.replicas[i].coord.advance_to(at);
+        self.record(at, i, ScaleAction::Up);
+        self.steal_dirty = true; // a fresh idle thief just appeared
+    }
+
+    /// Snapshot the cluster for the autoscaler.
+    pub(crate) fn autoscale_view(&self, now: f64) -> AutoscaleView {
+        let mut active = 0;
+        let mut provisioning = 0;
+        let mut down = 0;
+        let mut draining = 0;
+        let mut total_live = 0;
+        let mut total_queued = 0;
+        let mut occ_sum = 0.0;
+        for r in &self.replicas {
+            match r.state {
+                ReplicaState::Active => {
+                    active += 1;
+                    total_live += r.coord.live_count();
+                    total_queued += r.coord.queued_count();
+                    let total = r.coord.kv.total_blocks();
+                    if total > 0 {
+                        occ_sum += r.coord.kv.used_blocks() as f64 / total as f64;
+                    }
+                }
+                ReplicaState::Provisioning => provisioning += 1,
+                ReplicaState::Down => down += 1,
+                ReplicaState::Draining => draining += 1,
+                ReplicaState::Retired => {}
+            }
+        }
+        let mean_kv_occupancy = if active > 0 {
+            occ_sum / active as f64
+        } else {
+            0.0
+        };
+        AutoscaleView {
+            now,
+            active,
+            provisioning,
+            down,
+            draining,
+            total_live,
+            total_queued,
+            mean_kv_occupancy,
+            backlog_mean: self.backlog.iter().sum(),
+            backlog_var: self.backlog_var.iter().sum(),
+            backlog_weighted_mean: self.backlog_weighted,
+            backlog_weighted_var: self.backlog_weighted_var,
+        }
+    }
+
+    /// Append a fresh cold replica in the Provisioning state. Heterogeneity
+    /// vectors keep cycling at the new index, and the replica gets its own
+    /// deterministic seed, so elastic runs stay exactly reproducible.
+    pub(crate) fn spawn_replica(&mut self, now: f64) -> usize {
+        let i = self.replicas.len();
+        let profile = self.cfg.cluster.replica_profile(&self.cfg.engine, i);
+        let seed = self.cfg.seed ^ ((i as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let mut coord = crate::serve::build_sim_coordinator_with(&self.cfg, profile, seed);
+        if self.cfg.cluster.autoscale.prewarm {
+            crate::serve::prewarm_predictor(coord.predictor.as_mut(), &self.cfg);
+        }
+        coord.advance_to(now);
+        self.replicas.push(ClusterReplica {
+            coord,
+            speed: self.cfg.cluster.speed_of(i),
+            state: ReplicaState::Provisioning,
+            down_since: 0.0,
+            downtime: 0.0,
+            spawned_at: now,
+            ready_at: now + self.cfg.cluster.autoscale.provision_delay,
+            retired_at: None,
+            seen_outcomes: 0,
+            seen_aborted: 0,
+        });
+        self.backlog.push(0.0);
+        self.backlog_var.push(0.0);
+        self.routed.push(0);
+        i
+    }
+
+    /// The two terms of the migrate-vs-wait decision for one
+    /// partially-generated request on replica `victim`, or `None` when the
+    /// cluster no longer tracks it: `(wait_out, transfer)` where
+    /// `wait_out` is the quantile-`z` predicted *remaining* cost,
+    /// normalized by the victim's speed (a slow victim's tail is costed
+    /// honestly), and `transfer` is `migration_kv_per_token` × resident KV
+    /// tokens (prompt + generated prefix). Victim *scoring*
+    /// ([`ClusterCtx::scale_in_drain_cost`]) and the per-request drain
+    /// decision (`migrate_partials`) both price through this one helper so
+    /// the chosen victim's score always matches what its drain will do.
+    /// KV blocks a partially-generated request needs to take its next
+    /// decode token on a fresh replica (prompt + prefix + 1, in
+    /// [`crate::serve::KV_BLOCK_TOKENS`]-token blocks) — the same block
+    /// math the coordinator's batch packer uses.
+    fn blocks_for(input_len: u32, generated: u32) -> usize {
+        ((input_len + generated) as usize + 1).div_ceil(crate::serve::KV_BLOCK_TOKENS)
+    }
+
+    fn migration_terms(
+        &self,
+        victim: usize,
+        z: f64,
+        id: RequestId,
+        input_len: u32,
+        generated: u32,
+    ) -> Option<(f64, f64)> {
+        let f = self.in_flight.get(&id)?;
+        let speed = self.replicas[victim].speed.max(1e-9);
+        let total_q = f.cost + z * f.var.max(0.0).sqrt();
+        let consumed = self.cost.consumed(input_len, generated);
+        let wait_out = (total_q - consumed).max(0.0) / speed;
+        let transfer = self.cfg.cluster.migration_kv_per_token
+            * (input_len + generated) as f64;
+        Some((wait_out, transfer))
+    }
+
+    /// Estimated cost of draining replica `i` for scale-in, in
+    /// speed-normalized cost-model units: each partially-generated live
+    /// request contributes the *cheaper* of waiting out its predicted
+    /// remaining cost (at quantile `z`) and migrating its KV
+    /// (`migration_kv_per_token` × resident tokens). Never-scheduled
+    /// queued work re-routes for free and contributes nothing. This is
+    /// what the migration-cost-aware victim selection minimizes — a
+    /// replica with mostly almost-done (or cheaply movable) work is a
+    /// better victim than one holding long, expensive-to-move tails.
+    pub(crate) fn scale_in_drain_cost(&self, i: usize, z: f64) -> f64 {
+        let mut cost = 0.0;
+        for (id, input_len, generated) in self.replicas[i].coord.partial_meta() {
+            if let Some((wait_out, transfer)) =
+                self.migration_terms(i, z, id, input_len, generated)
+            {
+                cost += wait_out.min(transfer);
+            }
+        }
+        cost
+    }
+
+    /// Begin scale-in on `victim`: stop routing to it, re-route its
+    /// never-scheduled queued work through the router (those requests hold
+    /// no KV or engine state, so the migration is exact), and — when
+    /// migration-cost-aware scale-in is enabled
+    /// (`migration_kv_per_token > 0`) — migrate partially-generated
+    /// requests whose KV transfer is predicted cheaper than waiting out
+    /// their remaining generation. Whatever stays finishes in place.
+    /// Unlike crash re-dispatch, a *voluntary* scale-in must be lossless: a
+    /// queued request whose re-route target has no admission headroom (or
+    /// when no replica is routable at all) stays on the victim, which keeps
+    /// serving until its live set drains. Retires immediately when nothing
+    /// is left live.
+    pub(crate) fn begin_drain(&mut self, victim: usize, now: f64) -> anyhow::Result<()> {
+        self.replicas[victim].state = ReplicaState::Draining;
+        self.replicas[victim].coord.advance_to(now);
+        self.record(now, victim, ScaleAction::Drain);
+        let mut moved = self.replicas[victim].coord.drain_queued(usize::MAX);
+        for req in &moved {
+            if let Some(f) = self.in_flight.remove(&req.id) {
+                debug_assert_eq!(f.replica, victim, "in-flight map out of sync at drain");
+                self.release_backlog(f.replica, f.cost, f.var, f.weight);
+            }
+        }
+        moved.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        for req in moved {
+            if SloAdmission.place(self, req, now, Some(victim))? {
+                self.drained += 1;
+            }
+        }
+        self.migrate_partials(victim)?;
+        self.steal_dirty = true;
+        if self.replicas[victim].coord.is_idle() {
+            self.retire(victim, now);
+        }
+        Ok(())
+    }
+
+    /// Migration-cost-aware drain: move partially-generated requests off
+    /// the scale-in `victim` when shipping their KV is predicted cheaper
+    /// than waiting out the drain. Per candidate the comparison is the
+    /// configured quantile of its predicted *remaining* cost
+    /// (speed-normalized, so a slow victim's tail is costed honestly)
+    /// against `migration_kv_per_token` × resident KV tokens
+    /// (prompt + generated prefix). Migrated requests keep their generated
+    /// prefix and first-token timestamp — the target resumes them like a
+    /// preempted request (re-prefilling the prefix, the KV-reconstruction
+    /// work a real migration pays), it does not restart them. No-op when
+    /// the feature is off (`migration_kv_per_token == 0`) or no replica is
+    /// routable.
+    fn migrate_partials(&mut self, victim: usize) -> anyhow::Result<()> {
+        let kv_cost = self.cfg.cluster.migration_kv_per_token;
+        if kv_cost <= 0.0 {
+            return Ok(());
+        }
+        let views = self.views();
+        if views.is_empty() {
+            return Ok(());
+        }
+        let z = normal_quantile_clamped(self.cfg.cluster.migration_quantile);
+        let mut chosen: Vec<RequestId> = Vec::new();
+        // partial_meta is id-sorted, so candidate order — and therefore
+        // every routing decision below — is deterministic
+        for (id, input_len, generated) in self.replicas[victim].coord.partial_meta() {
+            let Some((wait_out, transfer)) =
+                self.migration_terms(victim, z, id, input_len, generated)
+            else {
+                continue;
+            };
+            // only migrate where the prompt + prefix can physically fit: a
+            // partial shipped to a replica with too little total KV would
+            // wedge it (the victim it already runs on is proof it fits
+            // *somewhere*, so un-placeable work simply finishes in place)
+            let needed = Self::blocks_for(input_len, generated);
+            let placeable = views.iter().any(|v| v.kv_total_blocks >= needed);
+            if placeable && transfer < wait_out {
+                chosen.push(id);
+            }
+        }
+        if chosen.is_empty() {
+            return Ok(());
+        }
+        // the victim's clock may have overshot the drain instant `now` (it
+        // was stepped until every busy replica caught up to the event), and
+        // its partials' prefixes include tokens generated up to that clock
+        // — the target must not resume a prefix before it could exist
+        let victim_now = self.replicas[victim].coord.now();
+        let moved = self.replicas[victim].coord.drain_partials(&chosen);
+        for m in moved {
+            let id = m.req.id;
+            let (pcost, pvar) = match self.in_flight.get(&id) {
+                Some(f) => (f.cost, f.var),
+                None => (0.0, 0.0),
+            };
+            // route over the replicas whose total KV can hold the prefix
+            // (non-empty: selection above required a fitting target)
+            let needed = Self::blocks_for(m.req.input_len, m.generated);
+            let eligible: Vec<ReplicaView> = self
+                .views()
+                .into_iter()
+                .filter(|v| v.kv_total_blocks >= needed)
+                .collect();
+            if eligible.is_empty() {
+                // belt-and-braces: finish in place on the draining victim
+                let accepted = self.replicas[victim].coord.submit_migrated(m);
+                debug_assert!(accepted, "victim re-admission is exempt");
+                continue;
+            }
+            let slot = self.router.route(&m.req, pcost, &eligible);
+            if slot >= eligible.len() {
+                anyhow::bail!(
+                    "router {} returned position {slot} but only {} replicas are \
+                     eligible",
+                    self.router.name(),
+                    eligible.len()
+                );
+            }
+            let target = eligible[slot].id;
+            self.replicas[target].coord.advance_to(victim_now);
+            // a migration is admission-exempt: the request already passed
+            // admission on the victim, so moving it can never reject it
+            let accepted = self.replicas[target].coord.submit_migrated(m);
+            debug_assert!(accepted, "migrated submission is admission-exempt");
+            if !accepted {
+                continue;
+            }
+            if let Some(entry) = self.in_flight.get_mut(&id) {
+                entry.replica = target;
+                self.backlog[victim] = (self.backlog[victim] - pcost).max(0.0);
+                self.backlog_var[victim] = (self.backlog_var[victim] - pvar).max(0.0);
+                self.backlog[target] += pcost;
+                self.backlog_var[target] += pvar;
+            }
+            self.migrated += 1;
+        }
+        Ok(())
+    }
+
+    /// Finalize a drained replica's exit.
+    pub(crate) fn retire(&mut self, i: usize, at: f64) {
+        let at = at.max(self.replicas[i].coord.now());
+        self.replicas[i].state = ReplicaState::Retired;
+        self.replicas[i].retired_at = Some(at);
+        self.record(at, i, ScaleAction::Retire);
+    }
+
+    pub(crate) fn record(&mut self, at: f64, replica: usize, action: ScaleAction) {
+        self.scaling_events.push(ScalingEvent { at, replica, action });
+    }
+}

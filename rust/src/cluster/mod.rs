@@ -1,535 +1,106 @@
 //! Multi-replica cluster serving (§4.4 scalability).
 //!
-//! Two modes live here:
+//! The event-driven cluster simulation is built from four pieces:
 //!
-//! **Event-driven cluster simulation** (the primary mode): N replicas, each
-//! a full [`Coordinator`]`<`[`SimEngine`]`>` — real continuous batching,
-//! KV-block accounting, preemption — driven on a shared *virtual* clock
-//! behind a pluggable [`Router`]. The event loop interleaves replica
-//! scheduling iterations and request arrivals in global-time order: while
-//! any busy replica's clock trails the next arrival it steps that replica
-//! (each step advances that replica's clock by its engine-charged seconds);
-//! once every busy replica has caught up, the arrival is routed using the
-//! replicas' *current* state and submitted. Replicas may be heterogeneous
-//! (per-replica speed / batch-size / KV-capacity from
-//! [`ClusterConfig`](crate::config::ClusterConfig)), and a *shared*
-//! prediction service (one history index fronting the whole cluster, as the
-//! paper's centralized scheduler has) prices each arrival for the
-//! cost-aware router and learns online from every replica's completions.
+//! * [`kernel`] — the virtual clock's deterministic event queue: every
+//!   timed occurrence is a [`KernelEvent`], ordered by `(time, class,
+//!   seq)` so same-seed runs are byte-identical.
+//! * [`ClusterCtx`] ([`ctx`]) — the shared state every concern observes:
+//!   the replica roster (each a full [`Coordinator`](crate::serve::Coordinator)
+//!   `<`[`SimEngine`](crate::engine::SimEngine)`>` — real continuous
+//!   batching, KV-block accounting, preemption), the pluggable [`Router`],
+//!   a *shared* prediction service (one history index fronting the whole
+//!   cluster, as the paper's centralized scheduler has), per-replica
+//!   predicted-backlog moments, and all lifecycle counters. Replica
+//!   lifecycle and scale-in mechanics (outages, drains, migration) are a
+//!   second `impl` block in [`lifecycle`].
+//! * [`components`] — the [`ClusterComponent`] implementations, one per
+//!   concern: [`ArrivalSource`] (workload in), [`FailureInjector`]
+//!   (single-replica outages + correlated failure domains),
+//!   [`AutoscaleDriver`] (elastic scale-out/in, including
+//!   migration-cost-aware victim selection), [`WorkStealer`]
+//!   (idle-replica stealing), and [`SloAdmission`] (the
+//!   placement/admission seam). Components talk through the kernel, never
+//!   to each other.
+//! * [`EventCluster`] (this file) — the orchestrator: it owns the context,
+//!   registers the components, and drives the loop — step the busiest
+//!   trailing replica until every busy replica has caught up to the next
+//!   event, then hand that event to its component. Replicas may be
+//!   heterogeneous (per-replica speed / batch-size / KV-capacity from
+//!   [`ClusterConfig`](crate::config::ClusterConfig)).
 //!
-//! Routers: `round-robin`, `least-loaded` (live-request count), `least-kv`
-//! (KV-block occupancy), `cost-aware` (predicted outstanding cost from
-//! the shared predictor's [`LengthDist`], normalized by replica speed), and
-//! `quantile-cost` (the distribution-aware variant: a configurable quantile
-//! of each replica's outstanding-cost distribution instead of its mean).
-//! Routers see only the *routable* replica set and return positions into
-//! it; the dispatcher maps positions back to replica ids.
+//! Routers ([`router`]): `round-robin`, `least-loaded` (live-request
+//! count), `least-kv` (KV-block occupancy), `cost-aware` (predicted
+//! outstanding cost from the shared predictor, normalized by replica
+//! speed), and `quantile-cost` (the distribution-aware variant), plus the
+//! [`ClassAwareRouter`] SLO wrapper. Routers see only the *routable*
+//! replica set and return positions into it; the dispatcher maps positions
+//! back to replica ids.
 //!
-//! **Replica lifecycle**: replicas move through
-//! [`ReplicaState`]s. [`ClusterConfig`](crate::config::ClusterConfig)
-//! may schedule [`FailureEvent`](crate::config::FailureEvent)s. At failure
-//! time the replica's live requests are drained (crash semantics — queued,
-//! running, and preempted state is lost), cluster bookkeeping for them is
-//! reconciled, and each is re-dispatched through the router over the
-//! survivors (`re_routed` in [`ClusterReport`]). The replica rejoins the
-//! routable set, empty, at recovery time; its downtime is reported
-//! per-replica. An [`AutoscalePolicy`](crate::autoscale::AutoscalePolicy)
-//! (see [`crate::autoscale`]) may additionally *add* replicas mid-run
-//! (spawned cold behind a provisioning delay, then routable) and *retire*
-//! them (scale-in: the victim stops receiving traffic, its queued work is
-//! re-routed — `drained` in the report — and it leaves once its live
-//! requests finish, so no request is ever stranded). Every transition is
-//! recorded on the [`ScalingEvent`] timeline, and the report charges each
-//! replica only for its provisioned lifetime (`replica_seconds`), yielding
-//! goodput per replica-second — the efficiency metric elastic and static
-//! fleets are compared on.
-//!
-//! Between events, **work stealing** lets an idle replica take up to half
-//! of the most-backlogged replica's never-scheduled (queued) requests —
-//! those hold no KV/engine state, so migration costs only the prompt
-//! transfer. Each steal is gated on a benefit check (speed-normalized
-//! backlog wait saved vs a per-request transfer penalty proportional to
-//! prompt length); candidates that fail the gate are counted in
-//! `steals_skipped`.
+//! Replica lifecycle ([`replica`]): replicas move through
+//! [`ReplicaState`]s — failures drain and re-dispatch live work over the
+//! survivors, domain outages do so for a whole rack/zone in one event,
+//! autoscaling spawns cold replicas behind a provisioning delay and
+//! retires drained victims (optionally migrating their partially-generated
+//! work when shipping KV beats waiting). Every transition lands on the
+//! [`ScalingEvent`](crate::autoscale::ScalingEvent) timeline, and the
+//! report charges each replica only for its provisioned lifetime
+//! (`replica_seconds`), yielding goodput per replica-second.
 //!
 //! Arrival pacing — including the bursty MMPP and diurnal processes under
 //! which failure/re-routing is most interesting — lives in
 //! [`crate::workload::arrivals`] and is configured per workload.
 //!
-//! **Overhead measurement** (the legacy fig12 mode, [`ClusterSim`]):
-//! wallclock-measured per-request predicting/scheduling latency of the
-//! shared services as the cluster grows, with M/M/1 queueing at the shared
-//! predictor. Kept as a secondary mode behind `sagesched cluster
-//! --overhead`.
+//! The legacy fig12 **overhead measurement** ([`ClusterSim`]) is kept as a
+//! secondary mode behind `sagesched cluster --overhead`; see [`overhead`].
 
-use std::collections::{HashMap, HashSet};
-use std::time::Instant;
+pub mod components;
+pub mod ctx;
+pub mod kernel;
+pub mod lifecycle;
+pub mod overhead;
+pub mod replica;
+pub mod router;
 
-use crate::autoscale::{AutoscalePolicy, ScaleAction, ScalingEvent};
+pub use components::{
+    ArrivalSource, AutoscaleDriver, ClusterComponent, FailureInjector, SloAdmission,
+    WorkStealer,
+};
+pub use ctx::ClusterCtx;
+pub use kernel::{EventPayload, EventQueue, KernelEvent};
+pub use overhead::{sched_scale, ClusterOverhead, ClusterSim};
+pub use replica::{ClusterReplica, ReplicaState};
+pub use router::{
+    argmin, make_router, route_least_loaded, ClassAwareRouter, CostAwareRouter,
+    LeastKvRouter, LeastLoadedRouter, QuantileCostRouter, ReplicaView, RoundRobinRouter,
+    Router,
+};
+
 use crate::config::{ExperimentConfig, RouterKind};
-use crate::core::{Request, RequestId};
-use crate::cost::CostModel;
-use crate::distribution::LengthDist;
-use crate::engine::{Engine, SimEngine};
-use crate::gittins::gittins_index_at_age;
+use crate::core::Request;
 use crate::metrics::{ClusterReport, RunReport};
-use crate::predictor::{HistoryPredictor, Predictor};
-use crate::serve::Coordinator;
-use crate::slo::SloClass;
-use crate::util::rng::Rng;
-use crate::util::stats::{mean, normal_quantile_clamped};
 use crate::workload::WorkloadGen;
 
-// ===========================================================================
-// Routers
-// ===========================================================================
-
-/// Snapshot of one replica's state at routing time.
-#[derive(Clone, Debug)]
-pub struct ReplicaView {
-    /// Replica index.
-    pub id: usize,
-    /// Live requests (queued + running + preempted).
-    pub live: usize,
-    /// Allocated KV blocks.
-    pub kv_used_blocks: usize,
-    /// Total KV blocks.
-    pub kv_total_blocks: usize,
-    /// Replica-local virtual clock (seconds).
-    pub now: f64,
-    /// Speed multiplier of this replica (1.0 = base profile).
-    pub speed: f64,
-    /// Max decode batch of this replica.
-    pub max_batch: usize,
-    /// Sum of predicted E[total cost] of requests routed here that have not
-    /// completed yet (maintained by the cluster from the shared predictor).
-    pub predicted_backlog: f64,
-    /// Sum of predicted Var[total cost] of the same requests — the second
-    /// moment the distribution-aware router and autoscaler consume (sums of
-    /// independent request costs: means and variances both add).
-    pub predicted_backlog_var: f64,
-}
-
-impl ReplicaView {
-    /// KV occupancy fraction in [0, 1].
-    pub fn kv_occupancy(&self) -> f64 {
-        if self.kv_total_blocks == 0 {
-            0.0
-        } else {
-            self.kv_used_blocks as f64 / self.kv_total_blocks as f64
-        }
-    }
-}
-
-/// A cluster front-door routing policy. Implementations must be
-/// deterministic given the same request/view sequence so cluster runs are
-/// exactly reproducible.
-pub trait Router: Send {
-    fn kind(&self) -> RouterKind;
-
-    fn name(&self) -> &'static str {
-        self.kind().name()
-    }
-
-    /// Pick a *position in the `replicas` slice* for `req` (the caller maps
-    /// it back to a replica through [`ReplicaView::id`]). The slice holds
-    /// only routable — alive — replicas, so positions and replica ids
-    /// diverge once any replica has failed; returning `ReplicaView::id`
-    /// here is a misroute. `predicted_cost` is the shared predictor's
-    /// E[total service cost] for this request (cost-model units);
-    /// `replicas` is never empty. Out-of-range returns are a hard dispatch
-    /// error, never clamped.
-    fn route(&mut self, req: &Request, predicted_cost: f64, replicas: &[ReplicaView]) -> usize;
-}
-
-/// Cycle through replicas in submission order.
-#[derive(Default)]
-pub struct RoundRobinRouter {
-    next: usize,
-}
-
-impl Router for RoundRobinRouter {
-    fn kind(&self) -> RouterKind {
-        RouterKind::RoundRobin
-    }
-
-    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
-        let i = self.next % replicas.len();
-        self.next = self.next.wrapping_add(1);
-        i
-    }
-}
-
-/// Fewest live requests; ties break to the lowest replica index.
-#[derive(Default)]
-pub struct LeastLoadedRouter;
-
-impl Router for LeastLoadedRouter {
-    fn kind(&self) -> RouterKind {
-        RouterKind::LeastLoaded
-    }
-
-    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
-        let loads: Vec<usize> = replicas.iter().map(|r| r.live).collect();
-        route_least_loaded(&loads)
-    }
-}
-
-/// Lowest KV-block occupancy fraction; ties break to the lowest index.
-#[derive(Default)]
-pub struct LeastKvRouter;
-
-impl Router for LeastKvRouter {
-    fn kind(&self) -> RouterKind {
-        RouterKind::LeastKv
-    }
-
-    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
-        let mut best = 0usize;
-        let mut best_occ = f64::INFINITY;
-        for (slot, r) in replicas.iter().enumerate() {
-            let occ = r.kv_occupancy();
-            if occ < best_occ {
-                best_occ = occ;
-                best = slot;
-            }
-        }
-        best
-    }
-}
-
-/// Smallest predicted outstanding cost normalized by replica speed — the
-/// uncertainty-aware router: it routes by E[remaining work], not by request
-/// *count*, so a replica stuck with a few predicted-long generations stops
-/// attracting traffic even while its live count is low.
-#[derive(Default)]
-pub struct CostAwareRouter;
-
-impl Router for CostAwareRouter {
-    fn kind(&self) -> RouterKind {
-        RouterKind::CostAware
-    }
-
-    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
-        let mut best = 0usize;
-        let mut best_load = f64::INFINITY;
-        for (slot, r) in replicas.iter().enumerate() {
-            let load = r.predicted_backlog / r.speed.max(1e-9);
-            if load < best_load {
-                best_load = load;
-                best = slot;
-            }
-        }
-        best
-    }
-}
-
-/// The distribution-aware router: smallest *quantile* of the predicted
-/// outstanding-cost distribution, normalized by replica speed. Per replica
-/// the outstanding cost is a sum of independent per-request cost
-/// distributions, so its quantile is taken under the normal approximation
-/// `Q_q ≈ μ + z_q·σ` over the tracked (mean, variance) sums. Against
-/// [`CostAwareRouter`] this penalizes replicas whose backlog is
-/// heavy-tailed: equal means, unequal tails — the quantile router spreads
-/// the tail risk, the mean router cannot see it.
-pub struct QuantileCostRouter {
-    /// z-score of the configured quantile.
-    z: f64,
-}
-
-impl QuantileCostRouter {
-    pub fn new(quantile: f64) -> QuantileCostRouter {
-        QuantileCostRouter { z: normal_quantile_clamped(quantile) }
-    }
-}
-
-impl Router for QuantileCostRouter {
-    fn kind(&self) -> RouterKind {
-        RouterKind::QuantileCost
-    }
-
-    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
-        let mut best = 0usize;
-        let mut best_load = f64::INFINITY;
-        for (slot, r) in replicas.iter().enumerate() {
-            let q = r.predicted_backlog + self.z * r.predicted_backlog_var.max(0.0).sqrt();
-            // negative q (possible at sub-median quantiles) still orders
-            // replicas correctly — clamping it would collapse the ordering
-            // and skew all ties to slot 0
-            let load = q / r.speed.max(1e-9);
-            if load < best_load {
-                best_load = load;
-                best = slot;
-            }
-        }
-        best
-    }
-}
-
-/// Build a router from its kind; `quantile` parameterizes
-/// [`RouterKind::QuantileCost`] (ignored by the others).
-pub fn make_router(kind: RouterKind, quantile: f64) -> Box<dyn Router> {
-    match kind {
-        RouterKind::RoundRobin => Box::new(RoundRobinRouter::default()),
-        RouterKind::LeastLoaded => Box::new(LeastLoadedRouter),
-        RouterKind::LeastKv => Box::new(LeastKvRouter),
-        RouterKind::CostAware => Box::new(CostAwareRouter),
-        RouterKind::QuantileCost => Box::new(QuantileCostRouter::new(quantile)),
-    }
-}
-
-/// SLO-class-aware routing wrapper: tight tiers get headroom, loose tiers
-/// keep the configured base router.
-///
-/// * `Interactive` requests are routed over the subset of replicas with KV
-///   headroom (occupancy at most `kv_headroom`; the full set when none
-///   qualifies), picked by the smallest *high quantile* of the outstanding
-///   predicted-cost distribution normalized by speed — the
-///   tail-risk-averse placement a tight TTFT budget wants. The per-tier
-///   quantile is how the distribution-aware router "provisions headroom"
-///   for the tier that cannot absorb a burst.
-/// * `Standard` and `Batch` requests are delegated to the wrapped router
-///   unchanged.
-///
-/// Composes with every [`RouterKind`]; it reports the inner router's kind
-/// and name so A/B labels stay comparable.
-pub struct ClassAwareRouter {
-    inner: Box<dyn Router>,
-    /// z-score of the Interactive placement quantile.
-    z_tight: f64,
-    /// KV-occupancy ceiling for Interactive-eligible replicas.
-    kv_headroom: f64,
-}
-
-impl ClassAwareRouter {
-    pub fn new(inner: Box<dyn Router>) -> ClassAwareRouter {
-        ClassAwareRouter {
-            inner,
-            z_tight: normal_quantile_clamped(0.95),
-            kv_headroom: 0.85,
-        }
-    }
-}
-
-impl Router for ClassAwareRouter {
-    fn kind(&self) -> RouterKind {
-        self.inner.kind()
-    }
-
-    fn route(&mut self, req: &Request, predicted_cost: f64, replicas: &[ReplicaView]) -> usize {
-        if req.slo != SloClass::Interactive {
-            return self.inner.route(req, predicted_cost, replicas);
-        }
-        let eligible: Vec<usize> = (0..replicas.len())
-            .filter(|&slot| replicas[slot].kv_occupancy() <= self.kv_headroom)
-            .collect();
-        let pool: Vec<usize> = if eligible.is_empty() {
-            (0..replicas.len()).collect()
-        } else {
-            eligible
-        };
-        let mut best = pool[0];
-        let mut best_load = f64::INFINITY;
-        for &slot in &pool {
-            let r = &replicas[slot];
-            let q = r.predicted_backlog
-                + self.z_tight * r.predicted_backlog_var.max(0.0).sqrt();
-            let load = q / r.speed.max(1e-9);
-            if load < best_load {
-                best_load = load;
-                best = slot;
-            }
-        }
-        best
-    }
-}
-
-/// Least-loaded routing decision across per-node live counts (exposed for
-/// tests and the cluster example).
-pub fn route_least_loaded(loads: &[usize]) -> usize {
-    loads
-        .iter()
-        .enumerate()
-        .min_by_key(|(_, &l)| l)
-        .map(|(i, _)| i)
-        .expect("route over empty cluster")
-}
-
-// ===========================================================================
-// Event-driven cluster
-// ===========================================================================
-
-/// Lifecycle state of one replica inside the event-driven cluster.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ReplicaState {
-    /// Spawned by a scale-out decision, still inside its provisioning
-    /// delay: not routable, holds no work.
-    Provisioning,
-    /// Routable and serving.
-    Active,
-    /// Failed: not routable, holds no work (drained at failure time), will
-    /// rejoin at its recovery event.
-    Down,
-    /// Scale-in victim: not routable, queued work already re-routed,
-    /// finishing its running/preempted requests in place.
-    Draining,
-    /// Retired for good (scale-in complete, or failed while draining).
-    Retired,
-}
-
-/// One serving replica inside the event-driven cluster.
-pub struct ClusterReplica {
-    pub coord: Coordinator<SimEngine>,
-    /// Speed multiplier this replica was built with.
-    pub speed: f64,
-    /// Lifecycle state; only [`ReplicaState::Active`] replicas are
-    /// routable, only Active/Draining ones can hold live work.
-    pub state: ReplicaState,
-    /// Virtual time the current outage began (meaningful while Down).
-    down_since: f64,
-    /// Accumulated downtime over completed outages (seconds).
-    pub downtime: f64,
-    /// Virtual time this replica was provisioned (0 for the initial fleet).
-    pub spawned_at: f64,
-    /// Virtual time this replica's provisioning delay elapses (0 for the
-    /// initial fleet, which starts Active). A recovery before this instant
-    /// resumes provisioning rather than activating the replica early.
-    ready_at: f64,
-    /// Virtual time the replica retired, if it did.
-    pub retired_at: Option<f64>,
-    /// Outcomes already drained into cluster-level bookkeeping.
-    seen_outcomes: usize,
-    /// Timeout-aborts already reconciled into cluster-level bookkeeping.
-    seen_aborted: u64,
-}
-
-impl ClusterReplica {
-    /// Whether routers may send new work here.
-    pub fn routable(&self) -> bool {
-        self.state == ReplicaState::Active
-    }
-
-    /// Provisioned lifetime up to `horizon`, excluding downtime — the
-    /// replica-seconds this replica is charged for. A replica added or
-    /// retired mid-run is charged only for its [spawned_at, retired_at)
-    /// span; an outage still open at `horizon` is charged to `horizon`.
-    pub fn replica_seconds(&self, horizon: f64) -> f64 {
-        let end = self.retired_at.unwrap_or(horizon);
-        let open_outage = if self.state == ReplicaState::Down {
-            (end - self.down_since).max(0.0)
-        } else {
-            0.0
-        };
-        (end - self.spawned_at - self.downtime - open_outage).max(0.0)
-    }
-}
-
-/// What a scheduled cluster event does when it fires.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum ClusterEventKind {
-    /// A provisioning delay elapsed: the replica becomes routable.
-    SpawnReady,
-    /// A configured outage ends.
-    Recover,
-    /// A configured outage begins.
-    Fail,
-    /// An autoscaler decision point.
-    Decision,
-}
-
-impl ClusterEventKind {
-    /// Tie-break rank at equal times: capacity arrives (spawn-ready,
-    /// recover) before capacity leaves (fail), and autoscaler decisions
-    /// observe the post-transition state.
-    fn rank(&self) -> u8 {
-        match self {
-            ClusterEventKind::SpawnReady => 0,
-            ClusterEventKind::Recover => 1,
-            ClusterEventKind::Fail => 2,
-            ClusterEventKind::Decision => 3,
-        }
-    }
-}
-
-/// One scheduled cluster event (failure/recovery from config, autoscaler
-/// decision points, dynamic spawn-ready events).
-#[derive(Clone, Copy, Debug)]
-struct ClusterEvent {
-    at: f64,
-    kind: ClusterEventKind,
-    /// Target replica (unused for `Decision`).
-    replica: usize,
-}
-
-impl ClusterEvent {
-    fn sort_key(&self) -> (f64, u8, usize) {
-        (self.at, self.kind.rank(), self.replica)
-    }
-}
-
-/// Cluster-side bookkeeping for one in-flight request: where it was routed
-/// and the first two moments of its predicted cost distribution.
-struct InFlight {
-    replica: usize,
-    /// Predicted E[total cost] (cost-model units).
-    cost: f64,
-    /// Predicted Var[total cost].
-    var: f64,
-    /// SLO weight of this request's class (1.0 under class-blind serving);
-    /// scales its contribution to the weighted forecast backlog the
-    /// uncertainty-aware autoscaler provisions for.
-    weight: f64,
-    /// Original request (kept for re-dispatch and predictor learning).
-    req: Request,
-}
-
-/// The event-driven multi-replica cluster: N coordinators on a shared
-/// virtual clock behind a [`Router`], with a shared prediction service,
-/// replica failure/recovery, elastic autoscaling, and idle-replica work
-/// stealing.
+/// The event-driven multi-replica cluster: a [`ClusterCtx`] driven by the
+/// registered [`ClusterComponent`]s over the [`kernel`]'s event queue.
+/// Derefs to [`ClusterCtx`], so all shared state and accessors (replica
+/// roster, counters, reports) are read directly off the cluster value.
 pub struct EventCluster {
-    pub cfg: ExperimentConfig,
-    pub replicas: Vec<ClusterReplica>,
-    pub router: Box<dyn Router>,
-    /// Shared prediction service (prices arrivals; learns from completions).
-    pub predictor: Box<dyn Predictor>,
-    /// Elastic provisioning policy (None = fixed fleet).
-    autoscaler: Option<Box<dyn AutoscalePolicy>>,
-    cost: Box<dyn CostModel>,
-    /// id -> routing + predicted-cost bookkeeping.
-    in_flight: HashMap<RequestId, InFlight>,
-    /// Per-replica sum of predicted cost of in-flight requests.
-    backlog: Vec<f64>,
-    /// Per-replica sum of predicted cost *variance* of in-flight requests.
-    backlog_var: Vec<f64>,
-    /// Cluster-wide SLO-weighted backlog moments: Σ w·E[cost] and
-    /// Σ w²·Var[cost] over in-flight requests (w = 1 under class-blind
-    /// serving, so these equal the unweighted sums). Maintained
-    /// incrementally — never by iterating the in-flight map, whose order
-    /// is not deterministic — and consumed by the uncertainty-aware
-    /// autoscaler's weighted forecast.
-    backlog_weighted: f64,
-    backlog_weighted_var: f64,
-    /// Per-replica routed-request counts.
-    pub routed: Vec<u64>,
-    /// Requests re-dispatched through the router after a replica failure.
-    pub re_routed: u64,
-    /// Queued requests re-routed off a scale-in victim at drain time.
-    pub drained: u64,
-    /// Queued requests migrated to an idle replica by work stealing.
-    pub stolen: u64,
-    /// Steal candidates rejected by the transfer-cost benefit gate at
-    /// least once.
-    steal_rejected: HashSet<RequestId>,
-    /// Whether anything that could change a steal verdict (queue contents,
-    /// backlogs, replica states) has happened since the last fruitless
-    /// stealing pass. The benefit gate makes "idle thief, nothing
-    /// profitable" a *persistent* state; without this flag every event-loop
-    /// iteration would rescan and re-sort the queues just to reach the same
-    /// verdict.
-    steal_dirty: bool,
-    /// Replica lifecycle timeline (provision/up/drain/retire/fail/recover).
-    pub scaling_events: Vec<ScalingEvent>,
+    ctx: ClusterCtx,
+}
+
+impl std::ops::Deref for EventCluster {
+    type Target = ClusterCtx;
+
+    fn deref(&self) -> &ClusterCtx {
+        &self.ctx
+    }
+}
+
+impl std::ops::DerefMut for EventCluster {
+    fn deref_mut(&mut self) -> &mut ClusterCtx {
+        &mut self.ctx
+    }
 }
 
 impl EventCluster {
@@ -537,116 +108,7 @@ impl EventCluster {
     /// autoscale policy from `cfg.cluster`), overriding the router with
     /// `router`.
     pub fn with_router(cfg: &ExperimentConfig, router: RouterKind) -> EventCluster {
-        let n = cfg.cluster.replicas.max(1);
-        let replicas: Vec<ClusterReplica> = (0..n)
-            .map(|i| {
-                let profile = cfg.cluster.replica_profile(&cfg.engine, i);
-                let seed = cfg.seed ^ ((i as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
-                ClusterReplica {
-                    coord: crate::serve::build_sim_coordinator_with(cfg, profile, seed),
-                    speed: cfg.cluster.speed_of(i),
-                    state: ReplicaState::Active,
-                    down_since: 0.0,
-                    downtime: 0.0,
-                    spawned_at: 0.0,
-                    ready_at: 0.0,
-                    retired_at: None,
-                    seen_outcomes: 0,
-                    seen_aborted: 0,
-                }
-            })
-            .collect();
-        let predictor = crate::predictor::make_predictor(
-            cfg.predictor,
-            cfg.workload.embed_dim,
-            cfg.history_capacity,
-            cfg.similarity_threshold,
-            cfg.seed ^ 0xc175_7e12,
-        );
-        let mut boxed = make_router(router, cfg.cluster.router_quantile);
-        if cfg.slo.class_aware {
-            boxed = Box::new(ClassAwareRouter::new(boxed));
-        }
-        EventCluster {
-            cfg: cfg.clone(),
-            backlog: vec![0.0; n],
-            backlog_var: vec![0.0; n],
-            backlog_weighted: 0.0,
-            backlog_weighted_var: 0.0,
-            routed: vec![0; n],
-            re_routed: 0,
-            drained: 0,
-            stolen: 0,
-            steal_rejected: HashSet::new(),
-            steal_dirty: true,
-            scaling_events: Vec::new(),
-            replicas,
-            router: boxed,
-            predictor,
-            autoscaler: crate::autoscale::make_autoscaler(&cfg.cluster.autoscale),
-            cost: crate::cost::make_cost_model(cfg.cost_model),
-            in_flight: HashMap::new(),
-        }
-    }
-
-    /// Requests refused at admission, cluster-wide. Each coordinator owns
-    /// its own count (it is the sole place a refusal happens), so summing
-    /// here counts every rejection exactly once.
-    pub fn rejected(&self) -> u64 {
-        self.replicas.iter().map(|r| r.coord.rejected).sum()
-    }
-
-    /// Requests aborted by queue timeout, cluster-wide.
-    pub fn aborted(&self) -> u64 {
-        self.replicas.iter().map(|r| r.coord.aborted).sum()
-    }
-
-    /// Per-SLO-class admission rejections, cluster-wide (indexed by
-    /// [`SloClass::index`]).
-    pub fn rejected_by_class(&self) -> [u64; 3] {
-        let mut out = [0u64; 3];
-        for r in &self.replicas {
-            for (k, &n) in r.coord.rejected_by_class.iter().enumerate() {
-                out[k] += n;
-            }
-        }
-        out
-    }
-
-    /// Per-SLO-class queue-timeout aborts, cluster-wide (indexed by
-    /// [`SloClass::index`]).
-    pub fn aborted_by_class(&self) -> [u64; 3] {
-        let mut out = [0u64; 3];
-        for r in &self.replicas {
-            for (k, &n) in r.coord.aborted_by_class.iter().enumerate() {
-                out[k] += n;
-            }
-        }
-        out
-    }
-
-    /// Requests the cluster still tracks as in flight (0 after a completed
-    /// run — anything else means bookkeeping leaked).
-    pub fn in_flight_count(&self) -> usize {
-        self.in_flight.len()
-    }
-
-    /// Sum of per-replica predicted-cost backlogs (≈0 after a drained run).
-    pub fn total_backlog(&self) -> f64 {
-        self.backlog.iter().sum()
-    }
-
-    /// Cluster-wide SLO-weighted backlog mean (≈0 after a drained run;
-    /// equals [`EventCluster::total_backlog`] under class-blind serving up
-    /// to float accumulation order).
-    pub fn weighted_backlog(&self) -> f64 {
-        self.backlog_weighted
-    }
-
-    /// Steal candidates the transfer-cost benefit gate rejected (distinct
-    /// requests; one later stolen after backlog shifts still counts here).
-    pub fn steals_skipped(&self) -> u64 {
-        self.steal_rejected.len() as u64
+        EventCluster { ctx: ClusterCtx::new(cfg, router) }
     }
 
     /// Build with the router configured in `cfg.cluster.router`.
@@ -654,943 +116,56 @@ impl EventCluster {
         EventCluster::with_router(cfg, cfg.cluster.router)
     }
 
-    /// Pre-warm the shared predictor and every replica's local predictor
-    /// with the offline corpus (`cfg.history_prewarm`).
-    pub fn prewarm(&mut self) {
-        crate::serve::prewarm_predictor(self.predictor.as_mut(), &self.cfg);
-        for r in &mut self.replicas {
-            crate::serve::prewarm_predictor(r.coord.predictor.as_mut(), &self.cfg);
-        }
-    }
-
-    /// Routable snapshot: one view per *routable* (Active) replica.
-    /// `ReplicaView::id` carries the true replica index, which no longer
-    /// matches the position in the returned slice once any replica is down,
-    /// provisioning, or draining — routers return positions, the dispatcher
-    /// maps them back through `id`.
-    fn views(&self) -> Vec<ReplicaView> {
-        self.replicas
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| r.routable())
-            .map(|(i, r)| ReplicaView {
-                id: i,
-                live: r.coord.live_count(),
-                kv_used_blocks: r.coord.kv.used_blocks(),
-                kv_total_blocks: r.coord.kv.total_blocks(),
-                now: r.coord.now(),
-                speed: r.speed,
-                max_batch: r.coord.engine.max_batch(),
-                predicted_backlog: self.backlog[i],
-                predicted_backlog_var: self.backlog_var[i],
-            })
-            .collect()
-    }
-
-    /// Index and clock of the busy replica with the smallest virtual time,
-    /// if any replica has live work. Only Active and Draining replicas can
-    /// hold live work (Down replicas are drained at failure time,
-    /// Provisioning/Retired ones never held any), so only those are
-    /// stepped — a Draining replica keeps running until its last live
-    /// request finishes.
-    fn earliest_busy(&self) -> Option<(usize, f64)> {
-        let mut best: Option<(usize, f64)> = None;
-        for (i, r) in self.replicas.iter().enumerate() {
-            let steppable = matches!(r.state, ReplicaState::Active | ReplicaState::Draining);
-            if !steppable || r.coord.is_idle() {
-                continue;
-            }
-            let t = r.coord.now();
-            if best.map_or(true, |(_, bt)| t < bt) {
-                best = Some((i, t));
-            }
-        }
-        best
-    }
-
-    /// Route and submit one request. `not_before` is the earliest virtual
-    /// time the target may start it: the arrival time for fresh requests,
-    /// the failure instant for re-dispatched ones (an idle survivor with a
-    /// lagging clock must not serve work "before" the crash that freed it).
-    /// Fails hard when no replica is alive or the router returns an
-    /// out-of-range position — both are configuration/implementation errors
-    /// that must not be silently patched (the old `.min(len-1)` clamp
-    /// turned router misroutes into quiet load skew). A refused submission
-    /// counts as a rejection (crash re-dispatch and fresh arrivals share
-    /// admission semantics).
-    fn dispatch(&mut self, req: Request, not_before: f64) -> anyhow::Result<()> {
-        self.place(req, not_before, None)?;
-        Ok(())
-    }
-
-    /// Routing core shared by [`EventCluster::dispatch`] and the scale-in
-    /// drain path. With `keep_on: Some(victim)` a routed target without
-    /// admission headroom — or an empty routable set — falls back to
-    /// re-admitting on the (draining) `victim`, which always fits: the
-    /// request occupied one of the victim's admission slots moments ago and
-    /// nothing was admitted there since. A *voluntary* scale-in must never
-    /// convert an already-admitted request into a rejection. Returns true
-    /// when the request landed somewhere other than the fallback.
-    fn place(
-        &mut self,
-        req: Request,
-        not_before: f64,
-        keep_on: Option<usize>,
-    ) -> anyhow::Result<bool> {
-        let pred = self.predictor.predict(&req);
-        let cost_dist = self.cost.cost_dist(req.input_len, &pred);
-        let pcost = cost_dist.mean();
-        let pvar = cost_dist.variance();
-        let weight = if self.cfg.slo.class_aware {
-            self.cfg.slo.specs.spec(req.slo).weight
-        } else {
-            1.0
-        };
-        let views = self.views();
-        let mut target = None;
-        if views.is_empty() {
-            if keep_on.is_none() {
-                anyhow::bail!(
-                    "cannot route request {}: none of the {} replicas is routable",
-                    req.id,
-                    self.replicas.len()
-                );
-            }
-        } else {
-            let slot = self.router.route(&req, pcost, &views);
-            if slot >= views.len() {
-                anyhow::bail!(
-                    "router {} returned position {slot} but only {} replicas are \
-                     routable",
-                    self.router.name(),
-                    views.len()
-                );
-            }
-            let i = views[slot].id;
-            // the coordinator's own (possibly class-aware) admission verdict,
-            // so the has-room view can never disagree with submit()
-            let has_room = self.replicas[i].coord.admits(req.slo);
-            if has_room || keep_on.is_none() {
-                target = Some(i);
-            }
-        }
-        let moved = target.is_some();
-        let i = target
-            .or(keep_on)
-            .expect("place: empty routable set without fallback already bailed");
-        let id = req.id;
-        self.replicas[i].coord.advance_to(req.arrival.max(not_before));
-        // the drain fallback is a *migration*: the request already passed
-        // admission on the victim, so re-admitting it there is exempt
-        let accepted = if moved {
-            self.replicas[i].coord.submit(req.clone())
-        } else {
-            self.replicas[i].coord.submit_exempt(req.clone())
-        };
-        debug_assert!(accepted || keep_on.is_none(), "drain re-admission must fit");
-        if accepted {
-            self.in_flight.insert(
-                id,
-                InFlight { replica: i, cost: pcost, var: pvar, weight, req },
-            );
-            self.backlog[i] += pcost;
-            self.backlog_var[i] += pvar;
-            self.backlog_weighted += weight * pcost;
-            self.backlog_weighted_var += weight * weight * pvar;
-            self.routed[i] += 1;
-            self.steal_dirty = true; // fresh queued work: steal verdicts change
-        }
-        // refusals are counted by the coordinator itself (sole owner of the
-        // rejected counter; see EventCluster::rejected)
-        Ok(moved && accepted)
-    }
-
-    /// Run one scheduling iteration on replica `i` and drain its new
-    /// completions into cluster bookkeeping (backlog release + shared
-    /// predictor learning). Returns false when the step made no observable
-    /// progress (clock, completions, aborts, and live set all unchanged) —
-    /// with live work that means the replica is wedged (e.g. a request that
-    /// can never fit its KV capacity) and the caller must not keep spinning.
-    fn step_replica(&mut self, i: usize) -> anyhow::Result<bool> {
-        let (now0, live0) = {
-            let c = &self.replicas[i].coord;
-            (c.now(), c.live_count())
-        };
-        self.replicas[i].coord.step()?;
-        let new: Vec<(RequestId, u32)> = {
-            let r = &self.replicas[i];
-            r.coord.outcomes()[r.seen_outcomes..]
-                .iter()
-                .map(|o| (o.id, o.output_len))
-                .collect()
-        };
-        self.replicas[i].seen_outcomes += new.len();
-        let live_now = self.replicas[i].coord.live_count();
-        let progressed =
-            !new.is_empty() || self.replicas[i].coord.now() > now0 || live_now != live0;
-        // completions / live-set changes move backlogs and can idle a
-        // replica — both alter steal verdicts; a bare clock advance cannot
-        if !new.is_empty() || live_now != live0 {
-            self.steal_dirty = true;
-        }
-        for (id, output_len) in new {
-            if let Some(f) = self.in_flight.remove(&id) {
-                self.release_backlog(f.replica, f.cost, f.var, f.weight);
-                self.predictor.observe(&f.req, output_len);
-            }
-        }
-        // Reconcile timeout-aborts: they leave the live set without an
-        // outcome, so their backlog contribution must be released here or
-        // the cost-aware router would shun this replica forever.
-        if self.replicas[i].coord.aborted > self.replicas[i].seen_aborted {
-            self.replicas[i].seen_aborted = self.replicas[i].coord.aborted;
-            let coord = &self.replicas[i].coord;
-            let mut gone: Vec<RequestId> = self
-                .in_flight
-                .iter()
-                .filter(|(id, entry)| entry.replica == i && !coord.is_live(**id))
-                .map(|(id, _)| *id)
-                .collect();
-            // the map's iteration order is not deterministic; releasing in
-            // id order keeps the float bookkeeping — and therefore every
-            // downstream routing/scaling decision and the report JSON —
-            // byte-identical across runs of the same seed
-            gone.sort_unstable();
-            for id in gone {
-                if let Some(f) = self.in_flight.remove(&id) {
-                    self.release_backlog(f.replica, f.cost, f.var, f.weight);
-                }
-            }
-        }
-        Ok(progressed)
-    }
-
-    /// Release one request's contribution to a replica's predicted-cost
-    /// moments and the cluster-wide weighted moments (floored at 0 against
-    /// accumulated float error).
-    fn release_backlog(&mut self, replica: usize, cost: f64, var: f64, weight: f64) {
-        self.backlog[replica] = (self.backlog[replica] - cost).max(0.0);
-        self.backlog_var[replica] = (self.backlog_var[replica] - var).max(0.0);
-        self.backlog_weighted = (self.backlog_weighted - weight * cost).max(0.0);
-        self.backlog_weighted_var =
-            (self.backlog_weighted_var - weight * weight * var).max(0.0);
-    }
-
     /// Drive the full arrival stream to completion: global-time-ordered
-    /// interleaving of replica iterations, routed arrivals, replica
-    /// failure/recovery events, and autoscaler decisions (whose scale-outs
-    /// schedule spawn-ready events after the provisioning delay), then
-    /// drain. Idle replicas steal queued work from backlogged peers between
-    /// events.
-    pub fn run(&mut self, mut requests: Vec<Request>) -> anyhow::Result<()> {
-        if let Err(e) = self.cfg.cluster.autoscale.validate() {
-            anyhow::bail!("{e}");
+    /// interleaving of replica iterations and kernel events (arrivals,
+    /// failure/recovery and domain outages, autoscaler decisions and
+    /// spawn-readies), then drain. The loop itself knows nothing about any
+    /// individual concern: components validate and seed the schedule in
+    /// `on_start`, act at quiescent points (work stealing), and consume
+    /// the events they own.
+    pub fn run(&mut self, requests: Vec<Request>) -> anyhow::Result<()> {
+        let mut kernel = EventQueue::new();
+        let mut components: Vec<Box<dyn ClusterComponent>> = vec![
+            Box::new(AutoscaleDriver::new(&self.ctx.cfg)),
+            Box::new(FailureInjector::default()),
+            Box::new(ArrivalSource::new(requests)),
+            Box::new(WorkStealer),
+            Box::new(SloAdmission),
+        ];
+        for c in components.iter_mut() {
+            c.on_start(&mut self.ctx, &mut kernel)?;
         }
-        requests.sort_by(|a, b| {
-            a.arrival
-                .partial_cmp(&b.arrival)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
-        let mut events = self.initial_events()?;
-        let mut idx = 0;
-        let mut eidx = 0;
         loop {
-            self.steal_work();
-            let next_arrival = requests.get(idx).map(|r| r.arrival);
-            let next_event = events.get(eidx).map(|e| e.at);
-            // scheduled events win ties so same-instant arrivals already
-            // route over the post-transition replica set
-            let event_first = match (next_event, next_arrival) {
-                (Some(te), Some(ta)) => te <= ta,
-                (Some(_), None) => true,
-                _ => false,
-            };
-            let next_t = match (next_event, next_arrival) {
-                (Some(te), Some(ta)) => Some(te.min(ta)),
-                (a, b) => a.or(b),
-            };
-            match (self.earliest_busy(), next_t) {
+            for c in components.iter_mut() {
+                c.on_quiescent(&mut self.ctx)?;
+            }
+            let next_t = kernel.peek_at();
+            match (self.ctx.earliest_busy(), next_t) {
                 // a busy replica trails the next event: advance it first
-                (Some((i, t)), Some(te)) if t < te => self.check_progress(i)?,
-                // all busy replicas have caught up: apply the event
+                (Some((i, t)), Some(te)) if t < te => self.ctx.check_progress(i)?,
+                // all busy replicas have caught up: fire the event
                 (_, Some(_)) => {
-                    if event_first {
-                        let ev = events[eidx];
-                        eidx += 1;
-                        let arrivals_pending = idx < requests.len();
-                        self.apply_event(ev, &mut events, eidx, arrivals_pending)?;
-                    } else {
-                        let r = requests[idx].clone();
-                        idx += 1;
-                        let at = r.arrival;
-                        self.dispatch(r, at)?;
+                    let mut ev = Some(kernel.pop().expect("peeked event vanished"));
+                    for c in components.iter_mut() {
+                        match ev.take() {
+                            Some(e) => ev = c.on_event(e, &mut self.ctx, &mut kernel)?,
+                            None => break,
+                        }
+                    }
+                    if let Some(e) = ev {
+                        anyhow::bail!(
+                            "no component consumed kernel event {:?} at t={}",
+                            e.payload,
+                            e.at
+                        );
                     }
                 }
                 // events exhausted: drain remaining work
-                (Some((i, _)), None) => self.check_progress(i)?,
+                (Some((i, _)), None) => self.ctx.check_progress(i)?,
                 (None, None) => break,
             }
         }
         Ok(())
-    }
-
-    /// Assemble the time-sorted scheduled-event stream: failure/recovery
-    /// transitions from the config, the autoscaler's first periodic
-    /// decision point (each fired decision schedules its successor while
-    /// arrivals remain or work is live, so the chain covers the drain tail
-    /// too), and the policy's own scripted times. Overlapping or touching
-    /// outage windows on one replica are merged into their union first —
-    /// otherwise the earliest recovery of a nested outage would resurrect
-    /// the replica while a longer outage is still running, undercounting
-    /// downtime.
-    fn initial_events(&self) -> anyhow::Result<Vec<ClusterEvent>> {
-        let n = self.replicas.len();
-        // with autoscaling on, an outage may target a replica the scaler
-        // will have spawned by then (indices are deterministic); the check
-        // that it actually exists moves to the instant the event fires
-        let elastic = self.autoscaler.is_some();
-        let mut max_idx = n;
-        for f in &self.cfg.cluster.failures {
-            if f.replica >= n && !elastic {
-                anyhow::bail!(
-                    "failure event references replica {} but the cluster has \
-                     {n} replicas",
-                    f.replica
-                );
-            }
-            if let Err(e) = f.validate() {
-                anyhow::bail!("{e}");
-            }
-            max_idx = max_idx.max(f.replica + 1);
-        }
-        let mut by_replica: Vec<Vec<(f64, f64)>> = vec![Vec::new(); max_idx];
-        for f in &self.cfg.cluster.failures {
-            by_replica[f.replica].push((f.at, f.at + f.duration));
-        }
-        let mut events = Vec::with_capacity(self.cfg.cluster.failures.len() * 2);
-        for (replica, mut windows) in by_replica.into_iter().enumerate() {
-            windows.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let mut merged: Vec<(f64, f64)> = Vec::new();
-            for (start, end) in windows {
-                match merged.last_mut() {
-                    Some(last) if start <= last.1 => last.1 = last.1.max(end),
-                    _ => merged.push((start, end)),
-                }
-            }
-            for (start, end) in merged {
-                events.push(ClusterEvent {
-                    at: start,
-                    kind: ClusterEventKind::Fail,
-                    replica,
-                });
-                events.push(ClusterEvent {
-                    at: end,
-                    kind: ClusterEventKind::Recover,
-                    replica,
-                });
-            }
-        }
-        if let Some(pol) = self.autoscaler.as_ref() {
-            // seed the periodic chain; Decision handling extends it
-            events.push(ClusterEvent {
-                at: self.cfg.cluster.autoscale.interval,
-                kind: ClusterEventKind::Decision,
-                replica: 0,
-            });
-            // scripted steps fire exactly at their configured times, even
-            // past the last arrival (a late scale-in still frees capacity
-            // during the drain tail)
-            for at in pol.scheduled_times() {
-                events.push(ClusterEvent {
-                    at,
-                    kind: ClusterEventKind::Decision,
-                    replica: 0,
-                });
-            }
-        }
-        events.sort_by(|a, b| {
-            a.sort_key()
-                .partial_cmp(&b.sort_key())
-                .expect("NaN event time")
-        });
-        // collapse duplicate decision instants (a scripted step landing on
-        // the periodic grid must fire once, not twice)
-        events.dedup_by(|a, b| {
-            a.kind == ClusterEventKind::Decision
-                && b.kind == ClusterEventKind::Decision
-                && a.at == b.at
-        });
-        Ok(events)
-    }
-
-    /// Apply one scheduled event; autoscaler decisions may append
-    /// spawn-ready events and their own successor decision point (inserted
-    /// in time order at/after `eidx`).
-    fn apply_event(
-        &mut self,
-        ev: ClusterEvent,
-        events: &mut Vec<ClusterEvent>,
-        eidx: usize,
-        arrivals_pending: bool,
-    ) -> anyhow::Result<()> {
-        match ev.kind {
-            ClusterEventKind::Fail => self.apply_failure(ev.replica, ev.at),
-            ClusterEventKind::Recover => {
-                self.apply_recovery(ev.replica, ev.at);
-                Ok(())
-            }
-            ClusterEventKind::SpawnReady => {
-                self.apply_spawn_ready(ev.replica, ev.at);
-                Ok(())
-            }
-            ClusterEventKind::Decision => {
-                let mut new_events = self.apply_decision(ev.at)?;
-                // keep the periodic chain alive while there is anything
-                // left to decide about: feedback policies must be able to
-                // scale in during the drain tail after the last arrival.
-                // Once arrivals are exhausted and the cluster is idle the
-                // chain ends, which bounds the event stream.
-                let chain_pending = events[eidx..]
-                    .iter()
-                    .any(|e| e.kind == ClusterEventKind::Decision);
-                if self.autoscaler.is_some()
-                    && !chain_pending
-                    && (arrivals_pending || self.has_live_work())
-                {
-                    new_events.push(ClusterEvent {
-                        at: ev.at + self.cfg.cluster.autoscale.interval,
-                        kind: ClusterEventKind::Decision,
-                        replica: 0,
-                    });
-                }
-                for new_ev in new_events {
-                    let pos = events[eidx..]
-                        .iter()
-                        .position(|e| e.sort_key() > new_ev.sort_key())
-                        .map(|p| eidx + p)
-                        .unwrap_or(events.len());
-                    events.insert(pos, new_ev);
-                }
-                Ok(())
-            }
-        }
-    }
-
-    /// Whether any replica still holds live (queued/running/preempted)
-    /// work.
-    fn has_live_work(&self) -> bool {
-        self.replicas.iter().any(|r| !r.coord.is_idle())
-    }
-
-    /// A scheduled outage begins: drain everything the replica held —
-    /// queued, running, and preempted requests lose their state, exactly as
-    /// a crash would — release the cluster-side backlog/in-flight
-    /// bookkeeping for them, and re-dispatch each one through the router
-    /// over the routable replicas. A replica that was already draining for
-    /// scale-in retires on the spot (it was leaving anyway; the crash just
-    /// lost the work it was finishing, which is re-routed like any other
-    /// failure). A replica still *provisioning* goes down holding no work:
-    /// if the outage ends before the provisioning delay would have, the
-    /// recovery resumes provisioning and the pending spawn-ready event
-    /// still activates it exactly on schedule; if the outage outlasts the
-    /// delay, the spawn-ready no-ops while down and the recovery activates
-    /// it (provisioning completed during the outage). Either way an outage
-    /// can only delay, never advance, the instant capacity arrives.
-    /// Failures on retired or already-down replicas are no-ops; one naming
-    /// a replica that was never provisioned is a hard configuration error.
-    fn apply_failure(&mut self, i: usize, at: f64) -> anyhow::Result<()> {
-        if i >= self.replicas.len() {
-            anyhow::bail!(
-                "failure event at t={at} references replica {i}, but only \
-                 {} replicas have been provisioned by then",
-                self.replicas.len()
-            );
-        }
-        let was_draining = match self.replicas[i].state {
-            ReplicaState::Active => false,
-            ReplicaState::Draining => true,
-            ReplicaState::Provisioning => {
-                self.replicas[i].coord.advance_to(at);
-                self.record(at, i, ScaleAction::Fail);
-                self.replicas[i].state = ReplicaState::Down;
-                self.replicas[i].down_since = at;
-                return Ok(());
-            }
-            _ => return Ok(()),
-        };
-        self.replicas[i].coord.advance_to(at);
-        self.record(at, i, ScaleAction::Fail);
-        self.steal_dirty = true;
-        if was_draining {
-            self.retire(i, at);
-        } else {
-            self.replicas[i].state = ReplicaState::Down;
-            self.replicas[i].down_since = at;
-        }
-        let mut lost = self.replicas[i].coord.drain_live();
-        for req in &lost {
-            if let Some(f) = self.in_flight.remove(&req.id) {
-                debug_assert_eq!(f.replica, i, "in-flight map out of sync at failure");
-                self.release_backlog(f.replica, f.cost, f.var, f.weight);
-            }
-        }
-        lost.sort_by(|a, b| {
-            a.arrival
-                .partial_cmp(&b.arrival)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
-        self.re_routed += lost.len() as u64;
-        for req in lost {
-            self.dispatch(req, at)?;
-        }
-        Ok(())
-    }
-
-    /// A scheduled outage ends: the (empty) replica rejoins the routable
-    /// set and its downtime is charged. A replica whose provisioning was
-    /// interrupted by the outage — recovery lands before its `ready_at` —
-    /// *resumes* provisioning instead: the still-pending spawn-ready event
-    /// brings it up at the originally scheduled instant, so an outage can
-    /// never hand the cluster capacity earlier than the provisioning delay
-    /// allows. Replicas that retired while down stay retired.
-    fn apply_recovery(&mut self, i: usize, at: f64) {
-        if self.replicas[i].state != ReplicaState::Down {
-            return;
-        }
-        self.replicas[i].downtime += at - self.replicas[i].down_since;
-        self.replicas[i].coord.advance_to(at);
-        self.record(at, i, ScaleAction::Recover);
-        if at < self.replicas[i].ready_at {
-            self.replicas[i].state = ReplicaState::Provisioning;
-            return;
-        }
-        self.replicas[i].state = ReplicaState::Active;
-        self.steal_dirty = true; // a fresh idle thief just appeared
-    }
-
-    /// A provisioning delay elapsed: the cold replica joins the routable
-    /// set.
-    fn apply_spawn_ready(&mut self, i: usize, at: f64) {
-        if self.replicas[i].state != ReplicaState::Provisioning {
-            return;
-        }
-        self.replicas[i].state = ReplicaState::Active;
-        self.replicas[i].coord.advance_to(at);
-        self.record(at, i, ScaleAction::Up);
-        self.steal_dirty = true; // a fresh idle thief just appeared
-    }
-
-    /// Run the autoscaler at a decision point. Scale-out spawns fresh
-    /// replicas (returned as future spawn-ready events); scale-in begins
-    /// draining victims immediately. The desired target counts capacity
-    /// that is present or committed (active + provisioning + down).
-    fn apply_decision(&mut self, now: f64) -> anyhow::Result<Vec<ClusterEvent>> {
-        let view = self.autoscale_view(now);
-        let target = match self.autoscaler.as_mut() {
-            None => return Ok(Vec::new()),
-            Some(p) => p.target(&view),
-        };
-        let Some(target) = target else {
-            return Ok(Vec::new());
-        };
-        let target = target.max(1);
-        let present = view.present();
-        if target > present {
-            let delay = self.cfg.cluster.autoscale.provision_delay;
-            let mut spawns = Vec::with_capacity(target - present);
-            for _ in 0..(target - present) {
-                let i = self.spawn_replica(now);
-                self.record(now, i, ScaleAction::Provision);
-                spawns.push(ClusterEvent {
-                    at: now + delay,
-                    kind: ClusterEventKind::SpawnReady,
-                    replica: i,
-                });
-            }
-            return Ok(spawns);
-        }
-        let mut shrink = present - target;
-        while shrink > 0 {
-            // cancel not-yet-ready replicas first (newest first): they hold
-            // no work, so retiring them is free — a scale-out/scale-in
-            // whipsaw must not destroy warm serving capacity while a cold
-            // replica is still on its way up. Its pending spawn-ready event
-            // becomes a no-op (the state is no longer Provisioning).
-            if let Some(p) = self
-                .replicas
-                .iter()
-                .rposition(|r| r.state == ReplicaState::Provisioning)
-            {
-                self.retire(p, now);
-                shrink -= 1;
-                continue;
-            }
-            let active: Vec<usize> = self
-                .replicas
-                .iter()
-                .enumerate()
-                .filter(|(_, r)| r.state == ReplicaState::Active)
-                .map(|(i, _)| i)
-                .collect();
-            // never drain the last routable replica: the cluster must stay
-            // able to place re-routed and future work
-            if active.len() <= 1 {
-                break;
-            }
-            // cheapest victim to drain: fewest live requests, ties to the
-            // highest index (retire the newest replica first)
-            let victim = *active
-                .iter()
-                .min_by_key(|&&i| (self.replicas[i].coord.live_count(), usize::MAX - i))
-                .expect("non-empty active set");
-            self.begin_drain(victim, now)?;
-            shrink -= 1;
-        }
-        Ok(Vec::new())
-    }
-
-    /// Snapshot the cluster for the autoscaler.
-    fn autoscale_view(&self, now: f64) -> crate::autoscale::AutoscaleView {
-        let mut active = 0;
-        let mut provisioning = 0;
-        let mut down = 0;
-        let mut draining = 0;
-        let mut total_live = 0;
-        let mut total_queued = 0;
-        let mut occ_sum = 0.0;
-        for r in &self.replicas {
-            match r.state {
-                ReplicaState::Active => {
-                    active += 1;
-                    total_live += r.coord.live_count();
-                    total_queued += r.coord.queued_count();
-                    let total = r.coord.kv.total_blocks();
-                    if total > 0 {
-                        occ_sum += r.coord.kv.used_blocks() as f64 / total as f64;
-                    }
-                }
-                ReplicaState::Provisioning => provisioning += 1,
-                ReplicaState::Down => down += 1,
-                ReplicaState::Draining => draining += 1,
-                ReplicaState::Retired => {}
-            }
-        }
-        let mean_kv_occupancy = if active > 0 {
-            occ_sum / active as f64
-        } else {
-            0.0
-        };
-        crate::autoscale::AutoscaleView {
-            now,
-            active,
-            provisioning,
-            down,
-            draining,
-            total_live,
-            total_queued,
-            mean_kv_occupancy,
-            backlog_mean: self.backlog.iter().sum(),
-            backlog_var: self.backlog_var.iter().sum(),
-            backlog_weighted_mean: self.backlog_weighted,
-            backlog_weighted_var: self.backlog_weighted_var,
-        }
-    }
-
-    /// Append a fresh cold replica in the Provisioning state. Heterogeneity
-    /// vectors keep cycling at the new index, and the replica gets its own
-    /// deterministic seed, so elastic runs stay exactly reproducible.
-    fn spawn_replica(&mut self, now: f64) -> usize {
-        let i = self.replicas.len();
-        let profile = self.cfg.cluster.replica_profile(&self.cfg.engine, i);
-        let seed = self.cfg.seed ^ ((i as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
-        let mut coord = crate::serve::build_sim_coordinator_with(&self.cfg, profile, seed);
-        if self.cfg.cluster.autoscale.prewarm {
-            crate::serve::prewarm_predictor(coord.predictor.as_mut(), &self.cfg);
-        }
-        coord.advance_to(now);
-        self.replicas.push(ClusterReplica {
-            coord,
-            speed: self.cfg.cluster.speed_of(i),
-            state: ReplicaState::Provisioning,
-            down_since: 0.0,
-            downtime: 0.0,
-            spawned_at: now,
-            ready_at: now + self.cfg.cluster.autoscale.provision_delay,
-            retired_at: None,
-            seen_outcomes: 0,
-            seen_aborted: 0,
-        });
-        self.backlog.push(0.0);
-        self.backlog_var.push(0.0);
-        self.routed.push(0);
-        i
-    }
-
-    /// Begin scale-in on `victim`: stop routing to it, re-route its
-    /// never-scheduled queued work through the router (those requests hold
-    /// no KV or engine state, so the migration is exact), and leave its
-    /// running/preempted requests to finish in place. Unlike crash
-    /// re-dispatch, a *voluntary* scale-in must be lossless: a queued
-    /// request whose re-route target has no admission headroom (or when no
-    /// replica is routable at all) stays on the victim, which keeps serving
-    /// until its live set drains. Retires immediately when nothing is left
-    /// live.
-    fn begin_drain(&mut self, victim: usize, now: f64) -> anyhow::Result<()> {
-        self.replicas[victim].state = ReplicaState::Draining;
-        self.replicas[victim].coord.advance_to(now);
-        self.record(now, victim, ScaleAction::Drain);
-        let mut moved = self.replicas[victim].coord.drain_queued(usize::MAX);
-        for req in &moved {
-            if let Some(f) = self.in_flight.remove(&req.id) {
-                debug_assert_eq!(f.replica, victim, "in-flight map out of sync at drain");
-                self.release_backlog(f.replica, f.cost, f.var, f.weight);
-            }
-        }
-        moved.sort_by(|a, b| {
-            a.arrival
-                .partial_cmp(&b.arrival)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
-        for req in moved {
-            if self.place(req, now, Some(victim))? {
-                self.drained += 1;
-            }
-        }
-        self.steal_dirty = true;
-        if self.replicas[victim].coord.is_idle() {
-            self.retire(victim, now);
-        }
-        Ok(())
-    }
-
-    /// Finalize a drained replica's exit.
-    fn retire(&mut self, i: usize, at: f64) {
-        let at = at.max(self.replicas[i].coord.now());
-        self.replicas[i].state = ReplicaState::Retired;
-        self.replicas[i].retired_at = Some(at);
-        self.record(at, i, ScaleAction::Retire);
-    }
-
-    fn record(&mut self, at: f64, replica: usize, action: ScaleAction) {
-        self.scaling_events.push(ScalingEvent { at, replica, action });
-    }
-
-    /// Idle-replica work stealing: while some routable replica sits idle
-    /// and another has more than one live request including never-scheduled
-    /// (queued) ones, migrate up to half of the victim's queued requests to
-    /// the idle replica. Queued requests hold no KV or engine state, so the
-    /// only migration cost is shipping the prompt — each candidate is gated
-    /// on a benefit check: the speed-normalized predicted backlog it stops
-    /// waiting behind must exceed a transfer penalty proportional to its
-    /// prompt length (`ClusterConfig::steal_transfer_per_token`; 0 restores
-    /// unconditional stealing). Rejected candidates are counted in
-    /// [`EventCluster::steals_skipped`]. The thief's clock is advanced to
-    /// the victim's so no request runs before the moment it was provably
-    /// stealable.
-    fn steal_work(&mut self) {
-        if !self.steal_dirty {
-            return; // nothing changed since the last fruitless pass
-        }
-        // the pass below runs to quiescence (it loops until no profitable
-        // steal remains), so afterwards only a state change can make a new
-        // pass worthwhile — the mutators set the flag again
-        self.steal_dirty = false;
-        let transfer = self.cfg.cluster.steal_transfer_per_token;
-        'pass: loop {
-            let thief = match self
-                .replicas
-                .iter()
-                .position(|r| r.routable() && r.coord.is_idle())
-            {
-                Some(t) => t,
-                None => return,
-            };
-            // candidate victims, most-queued first (ties to the lowest
-            // index for determinism); later victims are tried when the
-            // most-backlogged one has no gate-passing candidate, so a small
-            // cheap queue cannot shadow a profitable one
-            let mut victims: Vec<(usize, usize)> = self
-                .replicas
-                .iter()
-                .enumerate()
-                .filter(|(j, r)| {
-                    *j != thief && r.routable() && r.coord.live_count() >= 2
-                })
-                .map(|(j, r)| (j, r.coord.queued_count()))
-                .filter(|&(_, queued)| queued > 0)
-                .collect();
-            victims.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-            if victims.is_empty() {
-                return;
-            }
-            // cap at the thief's admission window (it is idle, so its live
-            // set is empty): stolen submissions must never be refused, or a
-            // request that was safely queued would count as rejected
-            let capacity = match self.replicas[thief].coord.max_queue {
-                0 => usize::MAX,
-                cap => cap,
-            };
-            for (v, v_queued) in victims {
-                let take = v_queued.div_ceil(2).min(capacity);
-                let speed_v = self.replicas[v].speed.max(1e-9);
-                let speed_t = self.replicas[thief].speed.max(1e-9);
-                // running tallies so each candidate is judged against the
-                // backlog as it would stand after the moves chosen so far.
-                // The benefit is the completion-time delta: the queue *and
-                // own service* it would pay on the victim, minus the queue
-                // it joins plus its own (speed-adjusted) service on the
-                // thief — so shipping work to a much slower replica is
-                // charged for the slower execution, not just the transfer.
-                let mut backlog_v = self.backlog[v];
-                let mut backlog_t = self.backlog[thief];
-                let meta = self.replicas[v].coord.queued_meta();
-                let mut chosen: Vec<RequestId> = Vec::with_capacity(take);
-                for &(id, input_len, _) in meta.iter().take(take) {
-                    let own = self.in_flight.get(&id).map(|f| f.cost).unwrap_or(0.0);
-                    let benefit = backlog_v / speed_v - (backlog_t + own) / speed_t;
-                    if transfer > 0.0 && benefit <= transfer * input_len as f64 {
-                        self.steal_rejected.insert(id);
-                        continue;
-                    }
-                    chosen.push(id);
-                    backlog_v = (backlog_v - own).max(0.0);
-                    backlog_t += own;
-                }
-                if chosen.is_empty() {
-                    continue; // nothing profitable here: try the next victim
-                }
-                let victim_now = self.replicas[v].coord.now();
-                let moved = self.replicas[v].coord.drain_ids(&chosen);
-                if moved.is_empty() {
-                    return;
-                }
-                self.replicas[thief].coord.advance_to(victim_now);
-                for req in moved {
-                    let id = req.id;
-                    // stealing is a migration: the request already passed
-                    // admission on the victim, so the thief must not
-                    // re-apply (class-aware) admission and refuse it
-                    let accepted = self.replicas[thief].coord.submit_exempt(req);
-                    debug_assert!(accepted, "idle thief must accept within its window");
-                    if !accepted {
-                        continue;
-                    }
-                    self.stolen += 1;
-                    if let Some(entry) = self.in_flight.get_mut(&id) {
-                        let (pcost, pvar) = (entry.cost, entry.var);
-                        let from = entry.replica;
-                        entry.replica = thief;
-                        self.backlog[from] = (self.backlog[from] - pcost).max(0.0);
-                        self.backlog_var[from] = (self.backlog_var[from] - pvar).max(0.0);
-                        self.backlog[thief] += pcost;
-                        self.backlog_var[thief] += pvar;
-                    }
-                }
-                // the thief is busy now; look for another idle replica
-                continue 'pass;
-            }
-            // no victim offered a profitable steal. An idle thief's own
-            // backlog is ~0, so the verdict would be the same for every
-            // other idle replica of any speed: stop the pass.
-            return;
-        }
-    }
-
-    /// Step replica `i` and fail loudly if it is wedged instead of spinning
-    /// forever. A no-progress step with live work means some request can
-    /// never be scheduled (e.g. its prompt needs more KV blocks than the
-    /// replica owns), which is a configuration error, not a transient.
-    /// A draining replica whose last live request just finished retires
-    /// here.
-    fn check_progress(&mut self, i: usize) -> anyhow::Result<()> {
-        if !self.step_replica(i)? {
-            anyhow::bail!(
-                "replica {i} is wedged: {} live request(s) but a scheduling \
-                 iteration made no progress — its capacity (kv_capacity {} \
-                 tokens, max_batch {}) cannot serve the routed workload",
-                self.replicas[i].coord.live_count(),
-                self.replicas[i].coord.kv.total_blocks()
-                    * self.replicas[i].coord.kv.block_tokens(),
-                self.replicas[i].coord.engine.max_batch(),
-            );
-        }
-        if self.replicas[i].state == ReplicaState::Draining
-            && self.replicas[i].coord.is_idle()
-        {
-            let at = self.replicas[i].coord.now();
-            self.retire(i, at);
-        }
-        Ok(())
-    }
-
-    /// Total completions across replicas.
-    pub fn completed(&self) -> usize {
-        self.replicas.iter().map(|r| r.coord.outcomes().len()).sum()
-    }
-
-    /// Merged outcome stream (unsorted).
-    pub fn merged_outcomes(&self) -> Vec<crate::core::RequestOutcome> {
-        let mut out = Vec::with_capacity(self.completed());
-        for r in &self.replicas {
-            out.extend_from_slice(r.coord.outcomes());
-        }
-        out
-    }
-
-    /// Cluster-level report (aggregate + per-replica + lifecycle counters +
-    /// scaling timeline).
-    pub fn report(&self, warmup_fraction: f64) -> ClusterReport {
-        let per_replica: Vec<RunReport> = self
-            .replicas
-            .iter()
-            .map(|r| r.coord.report(warmup_fraction))
-            .collect();
-        // an outage still open at report time is charged up to the
-        // cluster-wide clock horizon; a *retired* replica is simply gone —
-        // it must not count as "down" for the remainder of the run, and a
-        // replica added mid-run is charged only from its provisioning time
-        let horizon = self
-            .replicas
-            .iter()
-            .map(|r| r.coord.now())
-            .fold(0.0, f64::max);
-        let downtime: Vec<f64> = self
-            .replicas
-            .iter()
-            .map(|r| {
-                r.downtime
-                    + if r.state == ReplicaState::Down {
-                        (horizon - r.down_since).max(0.0)
-                    } else {
-                        0.0
-                    }
-            })
-            .collect();
-        let replica_seconds: Vec<f64> = self
-            .replicas
-            .iter()
-            .map(|r| r.replica_seconds(horizon))
-            .collect();
-        ClusterReport::new(
-            self.router.name().to_string(),
-            per_replica,
-            crate::metrics::ClusterCounters {
-                routed: self.routed.clone(),
-                re_routed: self.re_routed,
-                drained: self.drained,
-                stolen: self.stolen,
-                steals_skipped: self.steals_skipped(),
-                downtime,
-                replica_seconds,
-                scaling_events: self.scaling_events.clone(),
-            },
-            &self.merged_outcomes(),
-            warmup_fraction,
-            &self.cfg.slo.specs,
-        )
     }
 }
 
@@ -1639,255 +214,10 @@ pub fn run_cluster_experiment(
         .collect())
 }
 
-// ===========================================================================
-// Overhead measurement (legacy fig12 mode)
-// ===========================================================================
-
-/// Result of one cluster-scale overhead measurement.
-#[derive(Clone, Debug)]
-pub struct ClusterOverhead {
-    pub nodes: usize,
-    pub aggregate_rps: f64,
-    /// mean per-request predict latency, seconds (service + queueing)
-    pub predict_latency: f64,
-    /// mean per-request scheduling latency, seconds (priority eval + sort
-    /// at the configured queue depth)
-    pub sched_latency: f64,
-    /// total per-request overhead
-    pub total_latency: f64,
-    /// utilization of the shared predictor service
-    pub predictor_utilization: f64,
-}
-
-/// Cluster-scalability overhead simulator (wallclock-measured shared
-/// predictor + scheduler service times, M/M/1 queueing at the predictor).
-pub struct ClusterSim {
-    pub cfg: ExperimentConfig,
-    /// per-node request rate (paper: 8 RPS/node)
-    pub rps_per_node: f64,
-    /// scheduler queue depth to exercise (paper: up to 1,000 buffered)
-    pub queue_depth: usize,
-    /// number of measured prediction/scheduling operations per point
-    pub samples: usize,
-}
-
-impl ClusterSim {
-    pub fn new(cfg: ExperimentConfig) -> ClusterSim {
-        ClusterSim { cfg, rps_per_node: 8.0, queue_depth: 1000, samples: 200 }
-    }
-
-    /// Measure predict + schedule overhead for an `n_nodes` cluster.
-    pub fn measure(&self, n_nodes: usize) -> ClusterOverhead {
-        let mut rng = Rng::new(self.cfg.seed ^ (n_nodes as u64) << 8);
-
-        // --- build a warm shared history index at paper scale -------------
-        let mut wl_cfg = self.cfg.workload.clone();
-        wl_cfg.n_requests = self.cfg.history_capacity.min(10_000);
-        let warm = WorkloadGen::new(wl_cfg, self.cfg.seed ^ 0xc1).generate();
-        let mut predictor = HistoryPredictor::new(
-            self.cfg.workload.embed_dim,
-            self.cfg.history_capacity,
-            self.cfg.similarity_threshold,
-        );
-        for r in &warm.requests {
-            predictor.observe(r, r.true_output_len);
-        }
-
-        // --- measure predict service time ---------------------------------
-        let mut probe_cfg = self.cfg.workload.clone();
-        probe_cfg.n_requests = self.samples;
-        let probes = WorkloadGen::new(probe_cfg, self.cfg.seed ^ 0xc2).generate();
-        let mut service_times = Vec::with_capacity(self.samples);
-        let mut dists: Vec<LengthDist> = Vec::with_capacity(self.samples);
-        for r in &probes.requests {
-            let t0 = Instant::now();
-            let d = predictor.predict(r);
-            service_times.push(t0.elapsed().as_secs_f64());
-            dists.push(d);
-        }
-        let s_pred = mean(&service_times);
-
-        // The shared predictor serves the whole cluster: arrival rate
-        // lambda = nodes * rps; M/M/1 waiting time = rho/(1-rho) * s.
-        let lambda = n_nodes as f64 * self.rps_per_node;
-        let rho = (lambda * s_pred).min(0.99);
-        let predict_latency = s_pred + s_pred * rho / (1.0 - rho);
-
-        // --- measure scheduling latency at queue depth --------------------
-        // real Gittins evaluations + a real sort over `queue_depth` entries,
-        // replicating one coordinator iteration's scheduling work.
-        let cost: Box<dyn CostModel> = crate::cost::make_cost_model(self.cfg.cost_model);
-        let mut entries: Vec<(f64, LengthDist, u32, u32)> = (0..self.queue_depth)
-            .map(|i| {
-                let d = &dists[i % dists.len()];
-                let input = 64 + (rng.below(512) as u32);
-                let gen = rng.below(200) as u32;
-                (0.0, cost.cost_dist(input, d), input, gen)
-            })
-            .collect();
-        let mut sched_times = Vec::with_capacity(self.samples.min(50));
-        for _ in 0..self.samples.min(50) {
-            let t0 = Instant::now();
-            for e in entries.iter_mut() {
-                let consumed = cost.consumed(e.2, e.3);
-                e.0 = gittins_index_at_age(&e.1, consumed);
-            }
-            let mut order: Vec<usize> = (0..entries.len()).collect();
-            order.sort_by(|&a, &b| entries[a].0.partial_cmp(&entries[b].0).unwrap());
-            std::hint::black_box(&order);
-            sched_times.push(t0.elapsed().as_secs_f64());
-        }
-        // scheduling happens per node but the paper's centralized variant
-        // scales the work with cluster size; model one scheduler handling
-        // all nodes' queues round-robin. Up to 64 nodes one full-depth pass
-        // covers everyone; past that the pass count grows linearly.
-        let sched_latency = mean(&sched_times) * sched_scale(n_nodes);
-
-        ClusterOverhead {
-            nodes: n_nodes,
-            aggregate_rps: lambda,
-            predict_latency,
-            sched_latency,
-            total_latency: predict_latency + sched_latency,
-            predictor_utilization: rho,
-        }
-    }
-
-    /// Sweep cluster sizes (the paper's Fig. 12 x-axis).
-    pub fn sweep(&self, sizes: &[usize]) -> Vec<ClusterOverhead> {
-        sizes.iter().map(|&n| self.measure(n)).collect()
-    }
-}
-
-/// Centralized-scheduler work multiplier: `(n/64).max(1)` full-depth
-/// scheduling passes. Monotone non-decreasing in `n` — a small cluster pays
-/// one full pass, never a fraction of one. (The previous expression,
-/// `n / 64.0_f64.max(1.0)`, divided *every* cluster size by a constant 64
-/// due to operator precedence, so 1-node clusters reported 64× too little
-/// scheduling overhead.)
-pub fn sched_scale(n_nodes: usize) -> f64 {
-    (n_nodes as f64 / 64.0).max(1.0)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::PolicyKind;
-
-    #[test]
-    fn route_picks_min() {
-        assert_eq!(route_least_loaded(&[3, 1, 2]), 1);
-        assert_eq!(route_least_loaded(&[0]), 0);
-    }
-
-    fn view(id: usize, live: usize, used: usize, backlog: f64, speed: f64) -> ReplicaView {
-        ReplicaView {
-            id,
-            live,
-            kv_used_blocks: used,
-            kv_total_blocks: 100,
-            now: 0.0,
-            speed,
-            max_batch: 8,
-            predicted_backlog: backlog,
-            predicted_backlog_var: 0.0,
-        }
-    }
-
-    fn any_req() -> Request {
-        let mut cfg = crate::config::WorkloadConfig::default();
-        cfg.n_requests = 1;
-        WorkloadGen::new(cfg, 1).generate().requests.pop().unwrap()
-    }
-
-    #[test]
-    fn routers_pick_expected_replicas() {
-        let views = vec![
-            view(0, 4, 80, 500.0, 1.0),
-            view(1, 2, 90, 100.0, 1.0),
-            view(2, 3, 10, 400.0, 0.1),
-        ];
-        let r = any_req();
-        assert_eq!(LeastLoadedRouter.route(&r, 1.0, &views), 1);
-        assert_eq!(LeastKvRouter.route(&r, 1.0, &views), 2);
-        // cost-aware: 500/1, 100/1, 400/0.1=4000 -> replica 1
-        assert_eq!(CostAwareRouter.route(&r, 1.0, &views), 1);
-        let mut rr = RoundRobinRouter::default();
-        assert_eq!(rr.route(&r, 1.0, &views), 0);
-        assert_eq!(rr.route(&r, 1.0, &views), 1);
-        assert_eq!(rr.route(&r, 1.0, &views), 2);
-        assert_eq!(rr.route(&r, 1.0, &views), 0);
-    }
-
-    #[test]
-    fn routers_return_positions_not_ids_over_sparse_views() {
-        // the surviving view set after failures: ids 3/7/9, positions 0/1/2.
-        // returning `ReplicaView::id` here (the old bug) would be out of
-        // range or a misroute.
-        let views = vec![
-            view(3, 4, 80, 500.0, 1.0),
-            view(7, 2, 90, 100.0, 1.0),
-            view(9, 3, 10, 400.0, 1.0),
-        ];
-        let r = any_req();
-        assert_eq!(LeastLoadedRouter.route(&r, 1.0, &views), 1);
-        assert_eq!(LeastKvRouter.route(&r, 1.0, &views), 2);
-        assert_eq!(CostAwareRouter.route(&r, 1.0, &views), 1);
-        let mut rr = RoundRobinRouter::default();
-        for expect in [0usize, 1, 2, 0] {
-            assert_eq!(rr.route(&r, 1.0, &views), expect);
-        }
-    }
-
-    #[test]
-    fn make_router_builds_all_kinds() {
-        for kind in RouterKind::ALL {
-            assert_eq!(make_router(kind, 0.9).kind(), kind);
-        }
-    }
-
-    #[test]
-    fn quantile_router_avoids_heavy_tailed_backlogs() {
-        // equal mean backlogs, very different tails: the mean-based router
-        // ties to the lowest index, the quantile router steers to the
-        // narrow one
-        let mut views = vec![view(0, 3, 50, 400.0, 1.0), view(1, 3, 50, 400.0, 1.0)];
-        views[0].predicted_backlog_var = 250_000.0; // sd 500
-        views[1].predicted_backlog_var = 100.0; // sd 10
-        let r = any_req();
-        assert_eq!(CostAwareRouter.route(&r, 1.0, &views), 0);
-        let mut q = QuantileCostRouter::new(0.9);
-        assert_eq!(q.route(&r, 1.0, &views), 1);
-        // at q=0.5 (z=0) it degrades to exactly the mean router's choice
-        let mut q50 = QuantileCostRouter::new(0.5);
-        assert_eq!(q50.route(&r, 1.0, &views), 0);
-    }
-
-    #[test]
-    fn class_aware_router_gives_interactive_headroom() {
-        let mut r = ClassAwareRouter::new(Box::new(RoundRobinRouter::default()));
-        // replica 0: 95% KV occupancy (no headroom), small backlog;
-        // replica 1: plenty of headroom, larger backlog
-        let mut views = vec![view(0, 3, 95, 100.0, 1.0), view(1, 3, 10, 400.0, 1.0)];
-        let mut req = any_req();
-        req.slo = SloClass::Interactive;
-        // interactive avoids the KV-saturated replica even though its
-        // backlog is smaller
-        assert_eq!(r.route(&req, 1.0, &views), 1);
-        // batch delegates to the inner round-robin (first call -> slot 0)
-        req.slo = SloClass::Batch;
-        assert_eq!(r.route(&req, 1.0, &views), 0);
-        // no replica has KV headroom: fall back to the full set, picked on
-        // the p95 quantile of outstanding cost (tail-averse placement)
-        views[1].kv_used_blocks = 96;
-        views[0].predicted_backlog_var = 250_000.0; // sd 500
-        views[1].predicted_backlog_var = 0.0;
-        req.slo = SloClass::Interactive;
-        // q0 = 100 + 1.645*500 ~= 922 > q1 = 400
-        assert_eq!(r.route(&req, 1.0, &views), 1);
-        // wrapper is label-transparent for A/B reporting
-        assert_eq!(r.kind(), RouterKind::RoundRobin);
-    }
 
     #[test]
     fn event_cluster_conserves_requests() {
@@ -1910,52 +240,6 @@ mod tests {
         assert_eq!(report.aggregate.completed, 60);
         assert_eq!(report.aggregate.rejected, 0);
         assert!((report.aggregate.goodput() - 1.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn overhead_grows_with_cluster_size() {
-        let mut cfg = ExperimentConfig::default();
-        cfg.history_capacity = 2000; // keep the test quick
-        let sim = ClusterSim { samples: 30, queue_depth: 200, ..ClusterSim::new(cfg) };
-        let small = sim.measure(1);
-        let large = sim.measure(64);
-        assert!(large.total_latency > small.total_latency);
-        assert!(large.predictor_utilization >= small.predictor_utilization);
-    }
-
-    #[test]
-    fn sched_scale_never_discounts_small_clusters() {
-        // regression for the precedence bug `n / 64.0_f64.max(1.0)`: small
-        // clusters must pay one full scheduling pass, not 1/64th of one
-        assert_eq!(sched_scale(1), 1.0);
-        assert_eq!(sched_scale(16), 1.0);
-        assert_eq!(sched_scale(64), 1.0);
-        assert_eq!(sched_scale(128), 2.0);
-        let mut prev = 0.0;
-        for n in [1usize, 2, 8, 32, 64, 96, 128, 512] {
-            let s = sched_scale(n);
-            assert!(s >= prev, "sched_scale not monotone at {n}");
-            assert!(s >= 1.0);
-            prev = s;
-        }
-    }
-
-    #[test]
-    fn measured_sched_latency_comparable_across_sizes() {
-        // wallclock-level regression: under the old bug a 1-node cluster
-        // reported ~1/64th of the 64-node scheduling latency; fixed, both
-        // pay one full-depth pass and differ only by measurement noise
-        let mut cfg = ExperimentConfig::default();
-        cfg.history_capacity = 1000;
-        let sim = ClusterSim { samples: 20, queue_depth: 200, ..ClusterSim::new(cfg) };
-        let one = sim.measure(1);
-        let big = sim.measure(64);
-        assert!(
-            one.sched_latency > 0.1 * big.sched_latency,
-            "1-node sched latency {} implausibly below 64-node {}",
-            one.sched_latency,
-            big.sched_latency
-        );
     }
 
     #[test]
@@ -2014,6 +298,43 @@ mod tests {
         let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
         let err = cluster.run(workload.requests).unwrap_err();
         assert!(err.to_string().contains("routable"), "got: {err}");
+    }
+
+    #[test]
+    fn bad_domain_references_are_hard_errors() {
+        use crate::config::{DomainFailureEvent, FailureDomain};
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.n_requests = 5;
+        cfg.cluster.replicas = 2;
+        // event names a domain that does not exist
+        cfg.cluster.failure_domains =
+            vec![FailureDomain { name: "rack0".to_string(), replicas: vec![0, 1] }];
+        cfg.cluster.domain_failures =
+            vec![DomainFailureEvent { domain: 3, at: 1.0, duration: 1.0 }];
+        let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+        let mut cluster = EventCluster::with_router(&cfg, RouterKind::RoundRobin);
+        let err = cluster.run(workload.requests.clone()).unwrap_err();
+        assert!(err.to_string().contains("domain 3"), "got: {err}");
+        // domain names a replica that does not exist
+        let mut cfg2 = cfg.clone();
+        cfg2.cluster.failure_domains =
+            vec![FailureDomain { name: "rack0".to_string(), replicas: vec![0, 9] }];
+        cfg2.cluster.domain_failures =
+            vec![DomainFailureEvent { domain: 0, at: 1.0, duration: 1.0 }];
+        let mut cluster = EventCluster::with_router(&cfg2, RouterKind::RoundRobin);
+        let err = cluster.run(workload.requests.clone()).unwrap_err();
+        assert!(err.to_string().contains("replica 9"), "got: {err}");
+        // domain window overlapping an individual outage on a member
+        let mut cfg3 = cfg.clone();
+        cfg3.cluster.failure_domains =
+            vec![FailureDomain { name: "rack0".to_string(), replicas: vec![0, 1] }];
+        cfg3.cluster.domain_failures =
+            vec![DomainFailureEvent { domain: 0, at: 1.0, duration: 2.0 }];
+        cfg3.cluster.failures =
+            vec![crate::config::FailureEvent { replica: 1, at: 2.0, duration: 2.0 }];
+        let mut cluster = EventCluster::with_router(&cfg3, RouterKind::RoundRobin);
+        let err = cluster.run(workload.requests).unwrap_err();
+        assert!(err.to_string().contains("overlaps"), "got: {err}");
     }
 
     #[test]

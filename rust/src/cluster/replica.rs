@@ -1,0 +1,95 @@
+//! Replica lifecycle: the per-replica serving unit and its state machine.
+//!
+//! A [`ClusterReplica`] owns one full [`Coordinator`]`<`[`SimEngine`]`>`
+//! (continuous batching, KV accounting, preemption) plus the cluster-side
+//! lifecycle bookkeeping: its [`ReplicaState`], outage spans, provisioning
+//! instants, and how much of its history has already been reconciled into
+//! cluster-level counters. State transitions themselves are driven by the
+//! components in [`crate::cluster::components`] through
+//! [`ClusterCtx`](crate::cluster::ClusterCtx) — this module only defines
+//! what a replica *is*, not when it changes.
+
+use crate::core::Request;
+use crate::engine::SimEngine;
+use crate::serve::Coordinator;
+
+/// Lifecycle state of one replica inside the event-driven cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Spawned by a scale-out decision, still inside its provisioning
+    /// delay: not routable, holds no work.
+    Provisioning,
+    /// Routable and serving.
+    Active,
+    /// Failed: not routable, holds no work (drained at failure time), will
+    /// rejoin at its recovery event.
+    Down,
+    /// Scale-in victim: not routable, queued work already re-routed,
+    /// finishing its running/preempted requests in place.
+    Draining,
+    /// Retired for good (scale-in complete, or failed while draining).
+    Retired,
+}
+
+/// One serving replica inside the event-driven cluster.
+pub struct ClusterReplica {
+    pub coord: Coordinator<SimEngine>,
+    /// Speed multiplier this replica was built with.
+    pub speed: f64,
+    /// Lifecycle state; only [`ReplicaState::Active`] replicas are
+    /// routable, only Active/Draining ones can hold live work.
+    pub state: ReplicaState,
+    /// Virtual time the current outage began (meaningful while Down).
+    pub(crate) down_since: f64,
+    /// Accumulated downtime over completed outages (seconds).
+    pub downtime: f64,
+    /// Virtual time this replica was provisioned (0 for the initial fleet).
+    pub spawned_at: f64,
+    /// Virtual time this replica's provisioning delay elapses (0 for the
+    /// initial fleet, which starts Active). A recovery before this instant
+    /// resumes provisioning rather than activating the replica early.
+    pub(crate) ready_at: f64,
+    /// Virtual time the replica retired, if it did.
+    pub retired_at: Option<f64>,
+    /// Outcomes already drained into cluster-level bookkeeping.
+    pub(crate) seen_outcomes: usize,
+    /// Timeout-aborts already reconciled into cluster-level bookkeeping.
+    pub(crate) seen_aborted: u64,
+}
+
+impl ClusterReplica {
+    /// Whether routers may send new work here.
+    pub fn routable(&self) -> bool {
+        self.state == ReplicaState::Active
+    }
+
+    /// Provisioned lifetime up to `horizon`, excluding downtime — the
+    /// replica-seconds this replica is charged for. A replica added or
+    /// retired mid-run is charged only for its [spawned_at, retired_at)
+    /// span; an outage still open at `horizon` is charged to `horizon`.
+    pub fn replica_seconds(&self, horizon: f64) -> f64 {
+        let end = self.retired_at.unwrap_or(horizon);
+        let open_outage = if self.state == ReplicaState::Down {
+            (end - self.down_since).max(0.0)
+        } else {
+            0.0
+        };
+        (end - self.spawned_at - self.downtime - open_outage).max(0.0)
+    }
+}
+
+/// Cluster-side bookkeeping for one in-flight request: where it was routed
+/// and the first two moments of its predicted cost distribution.
+pub(crate) struct InFlight {
+    pub(crate) replica: usize,
+    /// Predicted E[total cost] (cost-model units).
+    pub(crate) cost: f64,
+    /// Predicted Var[total cost].
+    pub(crate) var: f64,
+    /// SLO weight of this request's class (1.0 under class-blind serving);
+    /// scales its contribution to the weighted forecast backlog the
+    /// uncertainty-aware autoscaler provisions for.
+    pub(crate) weight: f64,
+    /// Original request (kept for re-dispatch and predictor learning).
+    pub(crate) req: Request,
+}

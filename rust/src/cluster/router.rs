@@ -1,0 +1,421 @@
+//! Cluster front-door routing: replica snapshots and the router policies.
+//!
+//! A [`Router`] sees a slice of [`ReplicaView`]s — one per *routable*
+//! replica, snapshotted at routing time — and returns a **position in that
+//! slice** (never a replica id: the slice is sparse once any replica is
+//! down, provisioning, or draining; the dispatcher maps positions back
+//! through [`ReplicaView::id`]). Implementations must be deterministic
+//! given the same request/view sequence so cluster runs are exactly
+//! reproducible.
+//!
+//! Every scored router resolves ties with the single shared rule in
+//! [`argmin`]: the lowest position wins. Five base policies
+//! (round-robin / least-loaded / least-kv / cost-aware / quantile-cost)
+//! plus the [`ClassAwareRouter`] wrapper that gives tight SLO tiers
+//! tail-risk-averse placement over KV-headroom replicas.
+
+use crate::config::RouterKind;
+use crate::core::Request;
+use crate::slo::SloClass;
+use crate::util::stats::normal_quantile_clamped;
+
+/// Snapshot of one replica's state at routing time.
+#[derive(Clone, Debug)]
+pub struct ReplicaView {
+    /// Replica index.
+    pub id: usize,
+    /// Live requests (queued + running + preempted).
+    pub live: usize,
+    /// Allocated KV blocks.
+    pub kv_used_blocks: usize,
+    /// Total KV blocks.
+    pub kv_total_blocks: usize,
+    /// Replica-local virtual clock (seconds).
+    pub now: f64,
+    /// Speed multiplier of this replica (1.0 = base profile).
+    pub speed: f64,
+    /// Max decode batch of this replica.
+    pub max_batch: usize,
+    /// Sum of predicted E[total cost] of requests routed here that have not
+    /// completed yet (maintained by the cluster from the shared predictor).
+    pub predicted_backlog: f64,
+    /// Sum of predicted Var[total cost] of the same requests — the second
+    /// moment the distribution-aware router and autoscaler consume (sums of
+    /// independent request costs: means and variances both add).
+    pub predicted_backlog_var: f64,
+}
+
+impl ReplicaView {
+    /// KV occupancy fraction in [0, 1]. A replica with zero KV capacity
+    /// (possible under heterogeneous `kv_capacities` configs) reads as
+    /// fully unoccupied rather than `0/0 = NaN` — a NaN here would poison
+    /// every router comparison that touches occupancy, silently skewing
+    /// placement toward slot 0.
+    pub fn kv_occupancy(&self) -> f64 {
+        if self.kv_total_blocks == 0 {
+            0.0
+        } else {
+            self.kv_used_blocks as f64 / self.kv_total_blocks as f64
+        }
+    }
+}
+
+/// Position of the smallest score; ties break to the **lowest position** —
+/// the one tie-break rule shared by every scored router (and by
+/// [`route_least_loaded`]). A NaN score is never selected (it loses every
+/// comparison), but callers are expected to keep NaN out of their scores.
+/// Panics on an empty score list: routers are never offered an empty view
+/// set.
+pub fn argmin<S: PartialOrd>(scores: impl IntoIterator<Item = S>) -> usize {
+    let mut it = scores.into_iter();
+    let mut best_score = it.next().expect("argmin over an empty score list");
+    let mut best = 0usize;
+    for (i, s) in it.enumerate() {
+        if s < best_score {
+            best_score = s;
+            best = i + 1;
+        }
+    }
+    best
+}
+
+/// Least-loaded routing decision across per-node live counts (exposed for
+/// tests and the cluster example). Same implementation and tie-break as
+/// [`LeastLoadedRouter`]: both delegate to [`argmin`].
+pub fn route_least_loaded(loads: &[usize]) -> usize {
+    argmin(loads.iter().copied())
+}
+
+/// A cluster front-door routing policy. Implementations must be
+/// deterministic given the same request/view sequence so cluster runs are
+/// exactly reproducible.
+pub trait Router: Send {
+    fn kind(&self) -> RouterKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Pick a *position in the `replicas` slice* for `req` (the caller maps
+    /// it back to a replica through [`ReplicaView::id`]). The slice holds
+    /// only routable — alive — replicas, so positions and replica ids
+    /// diverge once any replica has failed; returning `ReplicaView::id`
+    /// here is a misroute. `predicted_cost` is the shared predictor's
+    /// E[total service cost] for this request (cost-model units);
+    /// `replicas` is never empty. Out-of-range returns are a hard dispatch
+    /// error, never clamped.
+    fn route(&mut self, req: &Request, predicted_cost: f64, replicas: &[ReplicaView]) -> usize;
+}
+
+/// Cycle through replicas in submission order.
+#[derive(Default)]
+pub struct RoundRobinRouter {
+    next: usize,
+}
+
+impl Router for RoundRobinRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::RoundRobin
+    }
+
+    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
+        let i = self.next % replicas.len();
+        self.next = self.next.wrapping_add(1);
+        i
+    }
+}
+
+/// Fewest live requests; ties break to the lowest position.
+#[derive(Default)]
+pub struct LeastLoadedRouter;
+
+impl Router for LeastLoadedRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::LeastLoaded
+    }
+
+    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
+        argmin(replicas.iter().map(|r| r.live))
+    }
+}
+
+/// Lowest KV-block occupancy fraction; ties break to the lowest position.
+#[derive(Default)]
+pub struct LeastKvRouter;
+
+impl Router for LeastKvRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::LeastKv
+    }
+
+    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
+        argmin(replicas.iter().map(|r| r.kv_occupancy()))
+    }
+}
+
+/// Smallest predicted outstanding cost normalized by replica speed — the
+/// uncertainty-aware router: it routes by E[remaining work], not by request
+/// *count*, so a replica stuck with a few predicted-long generations stops
+/// attracting traffic even while its live count is low.
+#[derive(Default)]
+pub struct CostAwareRouter;
+
+impl Router for CostAwareRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::CostAware
+    }
+
+    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
+        argmin(replicas.iter().map(|r| r.predicted_backlog / r.speed.max(1e-9)))
+    }
+}
+
+/// The distribution-aware router: smallest *quantile* of the predicted
+/// outstanding-cost distribution, normalized by replica speed. Per replica
+/// the outstanding cost is a sum of independent per-request cost
+/// distributions, so its quantile is taken under the normal approximation
+/// `Q_q ≈ μ + z_q·σ` over the tracked (mean, variance) sums. Against
+/// [`CostAwareRouter`] this penalizes replicas whose backlog is
+/// heavy-tailed: equal means, unequal tails — the quantile router spreads
+/// the tail risk, the mean router cannot see it.
+pub struct QuantileCostRouter {
+    /// z-score of the configured quantile.
+    z: f64,
+}
+
+impl QuantileCostRouter {
+    pub fn new(quantile: f64) -> QuantileCostRouter {
+        QuantileCostRouter { z: normal_quantile_clamped(quantile) }
+    }
+}
+
+impl Router for QuantileCostRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::QuantileCost
+    }
+
+    fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
+        argmin(replicas.iter().map(|r| {
+            let q = r.predicted_backlog + self.z * r.predicted_backlog_var.max(0.0).sqrt();
+            // negative q (possible at sub-median quantiles) still orders
+            // replicas correctly — clamping it would collapse the ordering
+            // and skew all ties to slot 0
+            q / r.speed.max(1e-9)
+        }))
+    }
+}
+
+/// Build a router from its kind; `quantile` parameterizes
+/// [`RouterKind::QuantileCost`] (ignored by the others).
+pub fn make_router(kind: RouterKind, quantile: f64) -> Box<dyn Router> {
+    match kind {
+        RouterKind::RoundRobin => Box::new(RoundRobinRouter::default()),
+        RouterKind::LeastLoaded => Box::new(LeastLoadedRouter),
+        RouterKind::LeastKv => Box::new(LeastKvRouter),
+        RouterKind::CostAware => Box::new(CostAwareRouter),
+        RouterKind::QuantileCost => Box::new(QuantileCostRouter::new(quantile)),
+    }
+}
+
+/// SLO-class-aware routing wrapper: tight tiers get headroom, loose tiers
+/// keep the configured base router.
+///
+/// * `Interactive` requests are routed over the subset of replicas with KV
+///   headroom (occupancy at most `kv_headroom`; the full set when none
+///   qualifies), picked by the smallest *high quantile* of the outstanding
+///   predicted-cost distribution normalized by speed — the
+///   tail-risk-averse placement a tight TTFT budget wants. The per-tier
+///   quantile is how the distribution-aware router "provisions headroom"
+///   for the tier that cannot absorb a burst.
+/// * `Standard` and `Batch` requests are delegated to the wrapped router
+///   unchanged.
+///
+/// Composes with every [`RouterKind`]; it reports the inner router's kind
+/// and name so A/B labels stay comparable.
+pub struct ClassAwareRouter {
+    inner: Box<dyn Router>,
+    /// z-score of the Interactive placement quantile.
+    z_tight: f64,
+    /// KV-occupancy ceiling for Interactive-eligible replicas.
+    kv_headroom: f64,
+}
+
+impl ClassAwareRouter {
+    pub fn new(inner: Box<dyn Router>) -> ClassAwareRouter {
+        ClassAwareRouter {
+            inner,
+            z_tight: normal_quantile_clamped(0.95),
+            kv_headroom: 0.85,
+        }
+    }
+}
+
+impl Router for ClassAwareRouter {
+    fn kind(&self) -> RouterKind {
+        self.inner.kind()
+    }
+
+    fn route(&mut self, req: &Request, predicted_cost: f64, replicas: &[ReplicaView]) -> usize {
+        if req.slo != SloClass::Interactive {
+            return self.inner.route(req, predicted_cost, replicas);
+        }
+        let eligible: Vec<usize> = (0..replicas.len())
+            .filter(|&slot| replicas[slot].kv_occupancy() <= self.kv_headroom)
+            .collect();
+        let pool: Vec<usize> = if eligible.is_empty() {
+            (0..replicas.len()).collect()
+        } else {
+            eligible
+        };
+        // pool is ascending, so argmin's lowest-position tie-break is the
+        // lowest-slot tie-break here too
+        let best = argmin(pool.iter().map(|&slot| {
+            let r = &replicas[slot];
+            let q = r.predicted_backlog + self.z_tight * r.predicted_backlog_var.max(0.0).sqrt();
+            q / r.speed.max(1e-9)
+        }));
+        pool[best]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadGen;
+
+    fn view(id: usize, live: usize, used: usize, backlog: f64, speed: f64) -> ReplicaView {
+        ReplicaView {
+            id,
+            live,
+            kv_used_blocks: used,
+            kv_total_blocks: 100,
+            now: 0.0,
+            speed,
+            max_batch: 8,
+            predicted_backlog: backlog,
+            predicted_backlog_var: 0.0,
+        }
+    }
+
+    fn any_req() -> Request {
+        let mut cfg = crate::config::WorkloadConfig::default();
+        cfg.n_requests = 1;
+        WorkloadGen::new(cfg, 1).generate().requests.pop().unwrap()
+    }
+
+    #[test]
+    fn route_picks_min() {
+        assert_eq!(route_least_loaded(&[3, 1, 2]), 1);
+        assert_eq!(route_least_loaded(&[0]), 0);
+    }
+
+    #[test]
+    fn argmin_ties_break_to_the_lowest_position() {
+        assert_eq!(argmin([2.0, 1.0, 1.0, 3.0]), 1);
+        assert_eq!(argmin([5usize, 5, 5]), 0);
+        assert_eq!(argmin([1.0]), 0);
+    }
+
+    #[test]
+    fn zero_kv_capacity_reads_as_unoccupied_not_nan() {
+        // heterogeneous configs can set a zero KV capacity; 0/0 must not
+        // become NaN (NaN loses every router comparison, silently skewing
+        // all placement toward slot 0)
+        let mut v = view(0, 3, 0, 100.0, 1.0);
+        v.kv_total_blocks = 0;
+        assert_eq!(v.kv_occupancy(), 0.0);
+        // and the least-kv router prefers it over a half-full replica
+        let views = vec![view(1, 3, 50, 100.0, 1.0), v];
+        let r = any_req();
+        assert_eq!(LeastKvRouter.route(&r, 1.0, &views), 1);
+    }
+
+    #[test]
+    fn routers_pick_expected_replicas() {
+        let views = vec![
+            view(0, 4, 80, 500.0, 1.0),
+            view(1, 2, 90, 100.0, 1.0),
+            view(2, 3, 10, 400.0, 0.1),
+        ];
+        let r = any_req();
+        assert_eq!(LeastLoadedRouter.route(&r, 1.0, &views), 1);
+        assert_eq!(LeastKvRouter.route(&r, 1.0, &views), 2);
+        // cost-aware: 500/1, 100/1, 400/0.1=4000 -> replica 1
+        assert_eq!(CostAwareRouter.route(&r, 1.0, &views), 1);
+        let mut rr = RoundRobinRouter::default();
+        assert_eq!(rr.route(&r, 1.0, &views), 0);
+        assert_eq!(rr.route(&r, 1.0, &views), 1);
+        assert_eq!(rr.route(&r, 1.0, &views), 2);
+        assert_eq!(rr.route(&r, 1.0, &views), 0);
+    }
+
+    #[test]
+    fn routers_return_positions_not_ids_over_sparse_views() {
+        // the surviving view set after failures: ids 3/7/9, positions 0/1/2.
+        // returning `ReplicaView::id` here (the old bug) would be out of
+        // range or a misroute.
+        let views = vec![
+            view(3, 4, 80, 500.0, 1.0),
+            view(7, 2, 90, 100.0, 1.0),
+            view(9, 3, 10, 400.0, 1.0),
+        ];
+        let r = any_req();
+        assert_eq!(LeastLoadedRouter.route(&r, 1.0, &views), 1);
+        assert_eq!(LeastKvRouter.route(&r, 1.0, &views), 2);
+        assert_eq!(CostAwareRouter.route(&r, 1.0, &views), 1);
+        let mut rr = RoundRobinRouter::default();
+        for expect in [0usize, 1, 2, 0] {
+            assert_eq!(rr.route(&r, 1.0, &views), expect);
+        }
+    }
+
+    #[test]
+    fn make_router_builds_all_kinds() {
+        for kind in RouterKind::ALL {
+            assert_eq!(make_router(kind, 0.9).kind(), kind);
+        }
+    }
+
+    #[test]
+    fn quantile_router_avoids_heavy_tailed_backlogs() {
+        // equal mean backlogs, very different tails: the mean-based router
+        // ties to the lowest index, the quantile router steers to the
+        // narrow one
+        let mut views = vec![view(0, 3, 50, 400.0, 1.0), view(1, 3, 50, 400.0, 1.0)];
+        views[0].predicted_backlog_var = 250_000.0; // sd 500
+        views[1].predicted_backlog_var = 100.0; // sd 10
+        let r = any_req();
+        assert_eq!(CostAwareRouter.route(&r, 1.0, &views), 0);
+        let mut q = QuantileCostRouter::new(0.9);
+        assert_eq!(q.route(&r, 1.0, &views), 1);
+        // at q=0.5 (z=0) it degrades to exactly the mean router's choice
+        let mut q50 = QuantileCostRouter::new(0.5);
+        assert_eq!(q50.route(&r, 1.0, &views), 0);
+    }
+
+    #[test]
+    fn class_aware_router_gives_interactive_headroom() {
+        let mut r = ClassAwareRouter::new(Box::new(RoundRobinRouter::default()));
+        // replica 0: 95% KV occupancy (no headroom), small backlog;
+        // replica 1: plenty of headroom, larger backlog
+        let mut views = vec![view(0, 3, 95, 100.0, 1.0), view(1, 3, 10, 400.0, 1.0)];
+        let mut req = any_req();
+        req.slo = SloClass::Interactive;
+        // interactive avoids the KV-saturated replica even though its
+        // backlog is smaller
+        assert_eq!(r.route(&req, 1.0, &views), 1);
+        // batch delegates to the inner round-robin (first call -> slot 0)
+        req.slo = SloClass::Batch;
+        assert_eq!(r.route(&req, 1.0, &views), 0);
+        // no replica has KV headroom: fall back to the full set, picked on
+        // the p95 quantile of outstanding cost (tail-averse placement)
+        views[1].kv_used_blocks = 96;
+        views[0].predicted_backlog_var = 250_000.0; // sd 500
+        views[1].predicted_backlog_var = 0.0;
+        req.slo = SloClass::Interactive;
+        // q0 = 100 + 1.645*500 ~= 922 > q1 = 400
+        assert_eq!(r.route(&req, 1.0, &views), 1);
+        // wrapper is label-transparent for A/B reporting
+        assert_eq!(r.kind(), RouterKind::RoundRobin);
+    }
+}

@@ -360,6 +360,112 @@ impl FailureEvent {
     }
 }
 
+/// One correlated failure domain for the event-driven cluster: a named
+/// group of replicas (a rack, a power zone, a network segment) that fails
+/// *together* when a [`DomainFailureEvent`] targets it. Replicas may be
+/// referenced before they exist when autoscaling is on (membership is by
+/// index, and autoscaled indices are deterministic); existence is checked
+/// at the instant the outage fires.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FailureDomain {
+    /// Label for reports and error messages (e.g. "rack0").
+    pub name: String,
+    /// Member replica indices.
+    pub replicas: Vec<usize>,
+}
+
+impl FailureDomain {
+    /// Parse a semicolon-separated domain list — the CLI's `--domains`
+    /// grammar, e.g. `rack0:0,1;rack1:2,3` (two domains of two replicas
+    /// each). The `name:` prefix is optional; unnamed groups are labeled
+    /// `domain<k>` by position.
+    pub fn parse_groups(s: &str) -> Result<Vec<FailureDomain>, String> {
+        s.split(';')
+            .enumerate()
+            .map(|(k, group)| {
+                let group = group.trim();
+                let (name, members) = match group.split_once(':') {
+                    Some((n, rest)) => (n.trim().to_string(), rest),
+                    None => (format!("domain{k}"), group),
+                };
+                let replicas: Result<Vec<usize>, String> = members
+                    .split(',')
+                    .map(|r| {
+                        r.trim().parse::<usize>().map_err(|_| {
+                            format!("domain {group:?}: bad replica index {r:?}")
+                        })
+                    })
+                    .collect();
+                let replicas = replicas?;
+                if replicas.is_empty() {
+                    return Err(format!("domain {group:?}: no replicas"));
+                }
+                Ok(FailureDomain { name, replicas })
+            })
+            .collect()
+    }
+}
+
+/// One scheduled failure-domain outage: every member of domain `domain`
+/// goes down at virtual time `at` — in a single event, so the pooled
+/// re-dispatch storm routes over the true survivor set — and all members
+/// recover, empty, at `at + duration`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DomainFailureEvent {
+    /// Index into [`ClusterConfig::failure_domains`].
+    pub domain: usize,
+    /// Virtual time of the outage (seconds).
+    pub at: f64,
+    /// Downtime before the members rejoin the routable set (seconds).
+    pub duration: f64,
+}
+
+impl DomainFailureEvent {
+    /// Same time bounds as [`FailureEvent::validate`]; NaN is rejected
+    /// explicitly because it slips through ordered comparisons.
+    pub fn validate(&self) -> Result<(), String> {
+        let bad_time = self.at.is_nan() || self.duration.is_nan();
+        if bad_time || self.at < 0.0 || self.duration <= 0.0 {
+            return Err(format!(
+                "domain failure event for domain {}: need at >= 0 and duration > 0",
+                self.domain
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse a comma-separated `domain@start+duration` list — the CLI's
+    /// `--fail-domain` grammar, e.g. `0@30+10` (domain 0 down from t=30
+    /// for 10 s). Mirrors [`FailureEvent::parse_list`].
+    pub fn parse_list(s: &str) -> Result<Vec<DomainFailureEvent>, String> {
+        s.split(',')
+            .map(|item| {
+                let item = item.trim();
+                let shape =
+                    || format!("domain failure {item:?}: expected domain@start+duration");
+                let (dom, rest) = item.split_once('@').ok_or_else(shape)?;
+                let (at, dur) = rest.split_once('+').ok_or_else(shape)?;
+                let ev = DomainFailureEvent {
+                    domain: dom
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("domain failure {item:?}: bad domain index"))?,
+                    at: at
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("domain failure {item:?}: bad start time"))?,
+                    duration: dur
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("domain failure {item:?}: bad duration"))?,
+                };
+                ev.validate().map_err(|e| format!("{e} (in {item:?})"))?;
+                Ok(ev)
+            })
+            .collect()
+    }
+}
+
 /// Which autoscaling policy drives elastic replica scale-out/in
 /// (see [`crate::autoscale`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -593,6 +699,11 @@ pub struct ClusterConfig {
     pub kv_capacities: Vec<usize>,
     /// Scheduled replica outages (failure + recovery; may be empty).
     pub failures: Vec<FailureEvent>,
+    /// Correlated failure domains (rack/zone groups; may be empty).
+    /// A [`DomainFailureEvent`] takes every member down in one event.
+    pub failure_domains: Vec<FailureDomain>,
+    /// Scheduled domain outages (indices into `failure_domains`).
+    pub domain_failures: Vec<DomainFailureEvent>,
     /// Elastic autoscaling policy (off by default).
     pub autoscale: AutoscaleConfig,
     /// Work stealing: cost-model units of transfer penalty per prompt
@@ -600,6 +711,19 @@ pub struct ClusterConfig {
     /// it costs to ship the prompt; 0 disables the gate (free migration,
     /// the pre-autoscale behavior).
     pub steal_transfer_per_token: f64,
+    /// Migration-cost-aware scale-in: cost-model units charged per
+    /// resident KV token (prompt + generated prefix) to migrate a
+    /// partially-generated request off a scale-in victim. When > 0, victim
+    /// selection minimizes predicted drain cost and drains migrate partial
+    /// work whose transfer is cheaper than waiting out its predicted
+    /// remaining cost; 0 (the default) keeps the legacy drain-only
+    /// behavior (only never-scheduled work moves).
+    pub migration_kv_per_token: f64,
+    /// Quantile of each live request's predicted *remaining* cost used by
+    /// migration-cost-aware scale-in (victim scoring and the per-request
+    /// migrate-vs-wait decision). Pricing the tail rather than the mean is
+    /// what keeps a predicted-long straggler from anchoring a drain.
+    pub migration_quantile: f64,
 }
 
 impl Default for ClusterConfig {
@@ -612,13 +736,30 @@ impl Default for ClusterConfig {
             batch_sizes: Vec::new(),
             kv_capacities: Vec::new(),
             failures: Vec::new(),
+            failure_domains: Vec::new(),
+            domain_failures: Vec::new(),
             autoscale: AutoscaleConfig::default(),
             steal_transfer_per_token: 2.0,
+            migration_kv_per_token: 0.0,
+            migration_quantile: 0.9,
         }
     }
 }
 
 impl ClusterConfig {
+    /// Migration-parameter bounds shared by every config surface (CLI,
+    /// JSON, and the cluster's own run-time validation) — one home, so the
+    /// valid ranges cannot drift between surfaces.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.migration_kv_per_token < 0.0 || self.migration_kv_per_token.is_nan() {
+            return Err("cluster.migration_kv_per_token must be >= 0".to_string());
+        }
+        if !(0.0 < self.migration_quantile && self.migration_quantile < 1.0) {
+            return Err("cluster.migration_quantile must be in (0,1)".to_string());
+        }
+        Ok(())
+    }
+
     fn cycled<T: Copy>(v: &[T], i: usize) -> Option<T> {
         if v.is_empty() {
             None
@@ -1054,6 +1195,60 @@ impl ExperimentConfig {
                 }
                 cfg.cluster.failures = failures;
             }
+            if let Some(doms) = c.get("failure_domains").and_then(Json::as_arr) {
+                let mut domains = Vec::new();
+                for (k, d) in doms.iter().enumerate() {
+                    let name = d
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .map(str::to_string)
+                        .unwrap_or_else(|| format!("domain{k}"));
+                    let members = d
+                        .get("replicas")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| {
+                            "cluster.failure_domains: missing replicas list".to_string()
+                        })?;
+                    let mut replicas = Vec::with_capacity(members.len());
+                    for m in members {
+                        let idx = m.as_u64().ok_or_else(|| {
+                            "cluster.failure_domains: non-integer replica index"
+                                .to_string()
+                        })? as usize;
+                        replicas.push(idx);
+                    }
+                    if replicas.is_empty() {
+                        return Err(format!(
+                            "cluster.failure_domains: domain {name} has no replicas"
+                        ));
+                    }
+                    domains.push(FailureDomain { name, replicas });
+                }
+                cfg.cluster.failure_domains = domains;
+            }
+            if let Some(fails) = c.get("domain_failures").and_then(Json::as_arr) {
+                let mut events = Vec::new();
+                for f in fails {
+                    let domain = f
+                        .get("domain")
+                        .and_then(Json::as_u64)
+                        .ok_or_else(|| {
+                            "cluster.domain_failures: missing domain index".to_string()
+                        })? as usize;
+                    let at = f.f64_or("at", -1.0);
+                    let duration = f.f64_or("duration", 0.0);
+                    let ev = DomainFailureEvent { domain, at, duration };
+                    ev.validate()
+                        .map_err(|e| format!("cluster.domain_failures: {e}"))?;
+                    events.push(ev);
+                }
+                cfg.cluster.domain_failures = events;
+            }
+            cfg.cluster.migration_kv_per_token =
+                c.f64_or("migration_kv_per_token", cfg.cluster.migration_kv_per_token);
+            cfg.cluster.migration_quantile =
+                c.f64_or("migration_quantile", cfg.cluster.migration_quantile);
+            cfg.cluster.validate()?;
             if let Some(a) = c.get("autoscale") {
                 let asc = &mut cfg.cluster.autoscale;
                 if let Some(kind) = a.get("kind").and_then(Json::as_str) {

@@ -16,8 +16,9 @@ use anyhow::{bail, Context, Result};
 
 use sagesched::cluster::{run_router_experiment, ClusterSim};
 use sagesched::config::{
-    ArrivalKind, AutoscaleKind, CostModelKind, EngineProfile, ExperimentConfig,
-    FailureEvent, PolicyKind, PredictorKind, RouterKind, ScaleStep,
+    ArrivalKind, AutoscaleKind, CostModelKind, DomainFailureEvent, EngineProfile,
+    ExperimentConfig, FailureDomain, FailureEvent, PolicyKind, PredictorKind,
+    RouterKind, ScaleStep,
 };
 use sagesched::metrics::ClusterReport;
 use sagesched::engine::RealEngine;
@@ -68,6 +69,17 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
         cfg.cluster.failures =
             FailureEvent::parse_list(f).map_err(|e| anyhow::anyhow!("--fail: {e}"))?;
     }
+    if let Some(d) = args.get("domains") {
+        cfg.cluster.failure_domains = FailureDomain::parse_groups(d)
+            .map_err(|e| anyhow::anyhow!("--domains: {e}"))?;
+    }
+    if let Some(f) = args.get("fail-domain") {
+        cfg.cluster.domain_failures = DomainFailureEvent::parse_list(f)
+            .map_err(|e| anyhow::anyhow!("--fail-domain: {e}"))?;
+        if cfg.cluster.failure_domains.is_empty() {
+            bail!("--fail-domain requires --domains (or failure_domains in the config)");
+        }
+    }
     cfg.similarity_threshold =
         args.f64_or("threshold", cfg.similarity_threshold as f64) as f32;
     cfg.bucket_tokens = args.u64_or("bucket", cfg.bucket_tokens as u64) as u32;
@@ -84,6 +96,13 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
         args.f64_or("steal-transfer", cfg.cluster.steal_transfer_per_token);
     if cfg.cluster.steal_transfer_per_token < 0.0 {
         bail!("--steal-transfer must be >= 0");
+    }
+    cfg.cluster.migration_kv_per_token =
+        args.f64_or("migrate-kv", cfg.cluster.migration_kv_per_token);
+    cfg.cluster.migration_quantile =
+        args.f64_or("migrate-quantile", cfg.cluster.migration_quantile);
+    if let Err(e) = cfg.cluster.validate() {
+        bail!("{e} (--migrate-kv/--migrate-quantile)");
     }
     if let Some(a) = args.get("autoscale") {
         cfg.cluster.autoscale.kind =
@@ -420,6 +439,27 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             );
         }
     }
+    for df in &cfg.cluster.domain_failures {
+        // a bad domain index is a hard error when the cluster runs; the
+        // banner just skips it
+        if let Some(dom) = cfg.cluster.failure_domains.get(df.domain) {
+            println!(
+                "# domain outage: {} (replicas {:?}) down {:.1}s..{:.1}s",
+                dom.name,
+                dom.replicas,
+                df.at,
+                df.at + df.duration
+            );
+        }
+    }
+    if cfg.cluster.migration_kv_per_token > 0.0 {
+        println!(
+            "# scale-in: migration-cost-aware (kv transfer {:.2}/token, \
+             remaining-cost quantile p{:.0})",
+            cfg.cluster.migration_kv_per_token,
+            cfg.cluster.migration_quantile * 100.0
+        );
+    }
     if cfg.slo.class_aware {
         let mix: Vec<String> = cfg
             .workload
@@ -439,7 +479,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     for r in &reports {
         println!(
             "# {}: goodput {:.1}% ({} completed, {} rejected, {} timed out, \
-             {} re-routed, {} drained, {} stolen, {} steals skipped) — \
+             {} re-routed, {} drained, {} migrated, {} stolen, {} steals \
+             skipped, {} domain outages) — \
              {:.0} replica-s, {:.3} goodput/replica-s, \
              {:.3} slo-weighted gp/replica-s",
             r.router,
@@ -449,8 +490,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             r.aggregate.aborted,
             r.re_routed,
             r.drained,
+            r.migrated,
             r.stolen,
             r.steals_skipped,
+            r.domain_outages,
             r.total_replica_seconds(),
             r.goodput_per_replica_second,
             r.slo_weighted_goodput_per_replica_second
@@ -529,7 +572,12 @@ const USAGE: &str = "usage: sagesched <run|sweep|smoke|serve|cluster> [flags]
              cost-aware,quantile-cost   --router-quantile 0.9
            --speeds 1.0,0.5 --batch-sizes 256,128 --kv-capacities 10000,6000
            --fail 1@30+10,0@60+5   replica outages (replica@start+duration)
+           --domains rack0:0,1;rack1:2,3   correlated failure domains
+           --fail-domain 0@30+10   domain outages (domain@start+duration)
            --steal-transfer 2      work-steal transfer penalty (cost/token)
+           --migrate-kv 0.5        migration-cost-aware scale-in: KV
+                                   transfer cost per resident token (0=off)
+           --migrate-quantile 0.9  remaining-cost quantile for migration
            --per-replica --json)
           autoscaling (elastic replica scale-out/in mid-run):
           --autoscale off|step|reactive|uncertainty

@@ -305,10 +305,17 @@ pub struct ClusterReport {
     pub re_routed: u64,
     /// Queued requests re-routed off scale-in victims at drain time.
     pub drained: u64,
+    /// Partially-generated requests migrated off scale-in victims (KV
+    /// shipped, generated prefix preserved) instead of waiting out the
+    /// drain.
+    pub migrated: u64,
     /// Queued requests migrated to an idle replica by work stealing.
     pub stolen: u64,
     /// Steal candidates rejected by the transfer-cost benefit gate.
     pub steals_skipped: u64,
+    /// Failure-domain outages that fired (each may down several replicas
+    /// in one event).
+    pub domain_outages: u64,
     /// Per-replica accumulated downtime (seconds; index = replica id).
     pub downtime: Vec<f64>,
     /// Per-replica provisioned lifetime minus downtime (seconds) — what
@@ -340,10 +347,14 @@ pub struct ClusterCounters {
     pub re_routed: u64,
     /// Requests re-routed off scale-in victims at drain time.
     pub drained: u64,
+    /// Partially-generated requests migrated off scale-in victims.
+    pub migrated: u64,
     /// Requests migrated by idle-replica work stealing.
     pub stolen: u64,
     /// Steal candidates rejected by the transfer-cost benefit gate.
     pub steals_skipped: u64,
+    /// Failure-domain outages that fired.
+    pub domain_outages: u64,
     /// Per-replica accumulated downtime (seconds).
     pub downtime: Vec<f64>,
     /// Per-replica provisioned lifetime minus downtime (seconds).
@@ -447,8 +458,10 @@ impl ClusterReport {
             routed: counters.routed,
             re_routed: counters.re_routed,
             drained: counters.drained,
+            migrated: counters.migrated,
             stolen: counters.stolen,
             steals_skipped: counters.steals_skipped,
+            domain_outages: counters.domain_outages,
             downtime: counters.downtime,
             replica_seconds: counters.replica_seconds,
             scaling_events: counters.scaling_events,
@@ -505,8 +518,10 @@ impl ClusterReport {
             ),
             ("re_routed", Json::num(self.re_routed as f64)),
             ("drained", Json::num(self.drained as f64)),
+            ("migrated", Json::num(self.migrated as f64)),
             ("stolen", Json::num(self.stolen as f64)),
             ("steals_skipped", Json::num(self.steals_skipped as f64)),
+            ("domain_outages", Json::num(self.domain_outages as f64)),
             (
                 "downtime",
                 Json::arr(self.downtime.iter().map(|&d| Json::num(d))),
@@ -611,8 +626,10 @@ mod tests {
             routed: vec![3, 1],
             re_routed: 2,
             drained: 3,
+            migrated: 1,
             stolen: 1,
             steals_skipped: 2,
+            domain_outages: 1,
             downtime: vec![0.0, 4.5],
             replica_seconds: vec![10.0, 6.0],
             scaling_events: vec![ScalingEvent {
@@ -642,6 +659,8 @@ mod tests {
         assert_eq!(c.drained, 3);
         assert_eq!(c.stolen, 1);
         assert_eq!(c.steals_skipped, 2);
+        assert_eq!(c.migrated, 1);
+        assert_eq!(c.domain_outages, 1);
         // 4 completions over 16 billed replica-seconds
         assert!((c.total_replica_seconds() - 16.0).abs() < 1e-12);
         assert!((c.goodput_per_replica_second - 0.25).abs() < 1e-12);

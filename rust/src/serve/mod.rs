@@ -34,6 +34,25 @@ use crate::workload::WorkloadGen;
 /// KV block size in tokens (vLLM default 16).
 pub const KV_BLOCK_TOKENS: usize = 16;
 
+/// A partially-generated request handed off between replicas at scale-in
+/// migration: the [`Request`] plus the serving progress that must survive
+/// the move. The generated prefix is *kept* — the receiving coordinator
+/// resumes the request like a preempted one (recompute-mode re-prefill of
+/// prompt + prefix, the KV-reconstruction work a real migration pays after
+/// the transfer), it does not restart it — and the first-token timestamp
+/// rides along so TTFT accounting stays honest across the move.
+#[derive(Clone, Debug)]
+pub struct MigratedRequest {
+    pub req: Request,
+    /// Tokens already generated on the source replica.
+    pub generated: u32,
+    /// When the first token was emitted (None if none was — callers only
+    /// migrate requests with `generated > 0`, which always have one).
+    pub first_token: Option<f64>,
+    /// Preemptions suffered so far (carried into the outcome).
+    pub preemptions: u32,
+}
+
 /// A live request inside the coordinator.
 struct Live {
     req: Request,
@@ -332,6 +351,76 @@ impl<E: Engine> Coordinator<E> {
             out.push(l.req);
         }
         out
+    }
+
+    /// (id, input_len, generated) of every *partially-generated* live
+    /// request — one holding engine/KV progress (`generated > 0`:
+    /// running, preempted, or re-queued after a migration) — in ascending
+    /// id order so callers iterate deterministically. The cluster's
+    /// migration-cost-aware scale-in uses this to price each candidate's
+    /// remaining work against its KV transfer cost *before* draining
+    /// anything.
+    pub fn partial_meta(&self) -> Vec<(crate::core::RequestId, u32, u32)> {
+        let mut v: Vec<(crate::core::RequestId, u32, u32)> = self
+            .live
+            .iter()
+            .filter(|l| l.generated > 0)
+            .map(|l| (l.req.id, l.req.input_len, l.generated))
+            .collect();
+        v.sort_unstable_by_key(|e| e.0);
+        v
+    }
+
+    /// Remove and return the partially-generated live requests with these
+    /// ids (in the order given), releasing their KV, engine, and policy
+    /// state on *this* replica; ids that are unknown or hold no progress
+    /// are skipped. Unlike [`Coordinator::drain_live`] (crash semantics),
+    /// the returned [`MigratedRequest`]s keep their generated prefix and
+    /// first-token timestamp — the receiving replica resumes them via
+    /// [`Coordinator::submit_migrated`].
+    pub fn drain_partials(&mut self, ids: &[crate::core::RequestId]) -> Vec<MigratedRequest> {
+        let mut out = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let found = self
+                .live
+                .iter()
+                .position(|l| l.req.id == id && l.generated > 0);
+            if let Some(i) = found {
+                let l = self.live.swap_remove(i);
+                self.kv.release(l.req.id);
+                self.policy.forget(l.req.id);
+                self.engine.evict(l.req.id);
+                out.push(MigratedRequest {
+                    req: l.req,
+                    generated: l.generated,
+                    first_token: l.first_token,
+                    preemptions: l.preemptions,
+                });
+            }
+        }
+        out
+    }
+
+    /// Admission-exempt intake of a migrated partially-generated request:
+    /// it enters in the *preempted* phase with its prefix length intact,
+    /// so the next scheduling iteration resumes it — recompute-mode
+    /// re-prefill of prompt + generated prefix, the KV-reconstruction work
+    /// a real migration pays on the target — rather than restarting it.
+    /// Always accepts (migrations must never convert an already-admitted
+    /// request into a rejection; see [`Coordinator::submit_exempt`]).
+    pub fn submit_migrated(&mut self, m: MigratedRequest) -> bool {
+        let generated = m.generated;
+        if !self.submit_with(m.req, true) {
+            return false; // unreachable: exempt submission never refuses
+        }
+        let l = self.live.last_mut().expect("just submitted");
+        if generated > 0 {
+            l.phase = Phase::Preempted;
+            l.generated = generated;
+        }
+        l.first_token = m.first_token;
+        l.preemptions = m.preemptions;
+        true
     }
 
     /// Blocks a request needs to take its next decode token.

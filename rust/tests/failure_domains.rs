@@ -1,0 +1,246 @@
+//! Correlated failure domains + migration-cost-aware scale-in integration
+//! tests: conservation of a domain outage across every router, the
+//! one-event semantics of a domain failure (all members transition at the
+//! same instant), provisioning members caught in a domain outage, the
+//! directional claim that correlated outages hurt the Interactive tier
+//! more than independent failures at equal total downtime, and the
+//! acceptance assert that migration-cost-aware scale-in does not lose to
+//! drain-only on goodput per replica-second.
+
+use std::collections::BTreeSet;
+
+use sagesched::autoscale::ScaleAction;
+use sagesched::cluster::{run_router_experiment, EventCluster, ReplicaState};
+use sagesched::config::{
+    AutoscaleKind, DomainFailureEvent, ExperimentConfig, FailureDomain, PolicyKind,
+    RouterKind, ScaleStep,
+};
+use sagesched::workload::WorkloadGen;
+
+fn cluster_cfg(replicas: usize, n: usize, rps: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = PolicyKind::SageSched;
+    cfg.workload.n_requests = n;
+    cfg.workload.rps = rps;
+    cfg.warmup_fraction = 0.0;
+    cfg.history_prewarm = 0; // keep the tests fast
+    cfg.cluster.replicas = replicas;
+    cfg
+}
+
+fn domain(name: &str, replicas: &[usize]) -> FailureDomain {
+    FailureDomain { name: name.to_string(), replicas: replicas.to_vec() }
+}
+
+#[test]
+fn domain_outage_conserves_requests_across_all_routers() {
+    let mut cfg = cluster_cfg(4, 160, 24.0);
+    cfg.cluster.failure_domains = vec![domain("rack0", &[1, 2])];
+    cfg.cluster.domain_failures =
+        vec![DomainFailureEvent { domain: 0, at: 2.0, duration: 2.0 }];
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let submitted: BTreeSet<u64> = workload.requests.iter().map(|r| r.id).collect();
+    for router in RouterKind::ALL {
+        let mut cluster = EventCluster::with_router(&cfg, router);
+        cluster.run(workload.requests.clone()).unwrap();
+        assert_eq!(cluster.rejected(), 0, "{router:?} rejected under domain outage");
+        assert_eq!(cluster.aborted(), 0, "{router:?} aborted under domain outage");
+        let outcomes = cluster.merged_outcomes();
+        assert_eq!(outcomes.len(), 160, "{router:?} lost or duplicated work");
+        let completed: BTreeSet<u64> = outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(completed, submitted, "{router:?} completion set mismatch");
+        assert_eq!(cluster.in_flight_count(), 0, "{router:?} leaked in-flight");
+        assert!(
+            cluster.total_backlog() < 1e-6,
+            "{router:?} backlog leak: {}",
+            cluster.total_backlog()
+        );
+        assert_eq!(cluster.domain_outages, 1, "{router:?} domain outage count");
+    }
+}
+
+#[test]
+fn domain_outage_downs_all_members_at_one_instant() {
+    let mut cfg = cluster_cfg(4, 160, 24.0);
+    cfg.cluster.failure_domains = vec![domain("rack0", &[1, 2])];
+    cfg.cluster.domain_failures =
+        vec![DomainFailureEvent { domain: 0, at: 2.0, duration: 1.5 }];
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::RoundRobin);
+    cluster.run(workload.requests).unwrap();
+    for member in [1usize, 2] {
+        let fails: Vec<f64> = cluster
+            .scaling_events
+            .iter()
+            .filter(|e| e.replica == member && e.action == ScaleAction::Fail)
+            .map(|e| e.at)
+            .collect();
+        assert_eq!(fails, vec![2.0], "member {member} fail instants");
+        let recovers: Vec<f64> = cluster
+            .scaling_events
+            .iter()
+            .filter(|e| e.replica == member && e.action == ScaleAction::Recover)
+            .map(|e| e.at)
+            .collect();
+        assert_eq!(recovers, vec![3.5], "member {member} recover instants");
+    }
+    let report = cluster.report(0.0);
+    assert!((report.downtime[1] - 1.5).abs() < 1e-9, "member 1 downtime");
+    assert!((report.downtime[2] - 1.5).abs() < 1e-9, "member 2 downtime");
+    assert_eq!(report.downtime[0], 0.0);
+    assert_eq!(report.domain_outages, 1);
+    // the storm re-dispatched the members' live work at the outage instant
+    assert!(cluster.re_routed > 0, "no re-dispatch storm observed");
+}
+
+#[test]
+fn domain_outage_hits_provisioning_members_without_advancing_capacity() {
+    // replica 4 is spawned at t=1 with a 2 s provisioning delay (ready at
+    // t=3). A domain outage covering it during provisioning must delay
+    // nothing if it ends before the delay would (recovery resumes
+    // provisioning; the pending spawn-ready still fires at t=3) — an
+    // outage can only delay capacity, never advance it.
+    let mut cfg = cluster_cfg(4, 200, 25.0);
+    cfg.cluster.autoscale.kind = AutoscaleKind::Step;
+    cfg.cluster.autoscale.steps = vec![ScaleStep { at: 1.0, target: 5 }];
+    cfg.cluster.autoscale.interval = 1.0;
+    cfg.cluster.autoscale.provision_delay = 2.0;
+    cfg.cluster.failure_domains = vec![domain("rack-new", &[4])];
+    cfg.cluster.domain_failures =
+        vec![DomainFailureEvent { domain: 0, at: 1.5, duration: 0.5 }];
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
+    cluster.run(workload.requests).unwrap();
+    let actions: Vec<(ScaleAction, f64)> = cluster
+        .scaling_events
+        .iter()
+        .filter(|e| e.replica == 4)
+        .map(|e| (e.action, e.at))
+        .collect();
+    assert_eq!(
+        actions,
+        vec![
+            (ScaleAction::Provision, 1.0),
+            (ScaleAction::Fail, 1.5),
+            (ScaleAction::Recover, 2.0),
+            (ScaleAction::Up, 3.0),
+        ],
+        "provisioning member lifecycle through a domain outage"
+    );
+    assert_eq!(cluster.replicas[4].state, ReplicaState::Active);
+    assert_eq!(cluster.completed(), 200);
+}
+
+#[test]
+fn correlated_outage_degrades_interactive_more_than_independent_failures() {
+    // equal total downtime (3 replica-seconds) delivered two ways: three
+    // replicas down for 1 s each in disjoint windows (capacity never below
+    // 3/4), vs one rack taking all three down together (capacity 1/4 for a
+    // full second plus one pooled re-dispatch storm). The correlated shape
+    // must not be *better* for the Interactive tier — that is the point of
+    // modeling failure domains at all.
+    let base = cluster_cfg(4, 240, 30.0);
+
+    let mut independent = base.clone();
+    independent.cluster.failures = vec![
+        sagesched::config::FailureEvent { replica: 1, at: 2.0, duration: 1.0 },
+        sagesched::config::FailureEvent { replica: 2, at: 3.5, duration: 1.0 },
+        sagesched::config::FailureEvent { replica: 3, at: 5.0, duration: 1.0 },
+    ];
+    let ind = run_router_experiment(&independent, RouterKind::LeastLoaded).unwrap();
+
+    let mut correlated = base.clone();
+    correlated.cluster.failure_domains = vec![domain("rack0", &[1, 2, 3])];
+    correlated.cluster.domain_failures =
+        vec![DomainFailureEvent { domain: 0, at: 3.5, duration: 1.0 }];
+    let cor = run_router_experiment(&correlated, RouterKind::LeastLoaded).unwrap();
+
+    for (label, r) in [("independent", &ind), ("correlated", &cor)] {
+        let n = 240;
+        let accounted = r.aggregate.completed + r.aggregate.rejected + r.aggregate.aborted;
+        assert_eq!(accounted, n, "{label}: {accounted} accounted of {n}");
+    }
+    let att = |r: &sagesched::metrics::ClusterReport| {
+        r.aggregate
+            .slo
+            .get("interactive")
+            .map(|s| s.attainment())
+            .unwrap_or(0.0)
+    };
+    assert!(
+        att(&cor) <= att(&ind) + 1e-9,
+        "correlated outage must not beat independent failures on interactive \
+         attainment: correlated {:.4} vs independent {:.4}",
+        att(&cor),
+        att(&ind)
+    );
+}
+
+#[test]
+fn migration_aware_scale_in_does_not_lose_to_drain_only() {
+    // a heterogeneous fleet scales 3 -> 2 mid-run. Drain-only keeps the
+    // victim alive until its partially-generated requests finish (billed
+    // replica-seconds all the while); migration-cost-aware scale-in ships
+    // that work to the survivors when the KV transfer is predicted cheaper
+    // than waiting, so the victim retires earlier at equal completions —
+    // goodput per replica-second must not get worse.
+    let mut base = cluster_cfg(3, 120, 30.0);
+    base.cluster.speeds = vec![1.0, 1.0, 0.3];
+    base.cluster.autoscale.kind = AutoscaleKind::Step;
+    base.cluster.autoscale.steps = vec![ScaleStep { at: 2.0, target: 2 }];
+    base.cluster.autoscale.interval = 1.0;
+
+    let drain_only = run_router_experiment(&base, RouterKind::CostAware).unwrap();
+
+    let mut migr_cfg = base.clone();
+    migr_cfg.cluster.migration_kv_per_token = 0.05; // cheap interconnect
+    migr_cfg.cluster.migration_quantile = 0.9;
+    let migrating = run_router_experiment(&migr_cfg, RouterKind::CostAware).unwrap();
+
+    for (label, r) in [("drain-only", &drain_only), ("migration", &migrating)] {
+        let accounted = r.aggregate.completed + r.aggregate.rejected + r.aggregate.aborted;
+        assert_eq!(accounted, 120, "{label}: {accounted} accounted of 120");
+    }
+    assert_eq!(drain_only.migrated, 0, "drain-only must not migrate partials");
+    assert!(
+        migrating.migrated > 0,
+        "migration-aware scale-in never migrated a partially-generated request"
+    );
+    assert!(
+        migrating.goodput_per_replica_second >= drain_only.goodput_per_replica_second,
+        "migration-aware scale-in lost on goodput/replica-second: {} < {}",
+        migrating.goodput_per_replica_second,
+        drain_only.goodput_per_replica_second
+    );
+}
+
+#[test]
+fn migrated_requests_complete_exactly_once_with_prefix_preserved() {
+    // conservation under migration: every request completes exactly once,
+    // and the migrated ones did not restart TTFT accounting (first tokens
+    // precede the scale-in instant for requests already running by then)
+    let mut cfg = cluster_cfg(3, 120, 30.0);
+    cfg.cluster.speeds = vec![1.0, 1.0, 0.3];
+    cfg.cluster.autoscale.kind = AutoscaleKind::Step;
+    cfg.cluster.autoscale.steps = vec![ScaleStep { at: 2.0, target: 2 }];
+    cfg.cluster.autoscale.interval = 1.0;
+    cfg.cluster.migration_kv_per_token = 0.05;
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let submitted: BTreeSet<u64> = workload.requests.iter().map(|r| r.id).collect();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::CostAware);
+    cluster.run(workload.requests).unwrap();
+    let outcomes = cluster.merged_outcomes();
+    let completed: BTreeSet<u64> = outcomes.iter().map(|o| o.id).collect();
+    assert_eq!(completed, submitted, "migration lost or duplicated work");
+    assert_eq!(cluster.in_flight_count(), 0);
+    assert!(cluster.total_backlog() < 1e-6);
+    assert!(cluster.migrated > 0, "scenario produced no migrations");
+    for o in &outcomes {
+        assert!(
+            o.first_token <= o.completion,
+            "request {}: first token after completion",
+            o.id
+        );
+        assert!(o.first_token >= o.arrival, "request {}: TTFT negative", o.id);
+    }
+}

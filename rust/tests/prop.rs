@@ -569,3 +569,116 @@ fn prop_normal_quantile_clamped_is_total_and_agrees_inside_range() {
     assert_eq!(normal_quantile_clamped(1.0), normal_quantile(0.999));
     assert_eq!(normal_quantile_clamped(0.0), normal_quantile(0.001));
 }
+
+// ---------------------------------------------------------------------------
+// cluster event-kernel invariants
+// ---------------------------------------------------------------------------
+
+use sagesched::cluster::{EventPayload, EventQueue};
+
+fn random_payload(rng: &mut Rng) -> EventPayload {
+    // arrivals are excluded only because they carry a full Request; their
+    // ordering goes through exactly the same (time, class, seq) key
+    match rng.below(4) {
+        0 => EventPayload::SpawnReady { replica: rng.below(8) as usize },
+        1 => EventPayload::Recover { replica: rng.below(8) as usize },
+        2 => EventPayload::Fail { replica: rng.below(8) as usize },
+        _ => EventPayload::Decision,
+    }
+}
+
+#[test]
+fn prop_kernel_equal_timestamp_events_pop_in_insertion_order() {
+    for_all(200, |rng| {
+        let mut q = EventQueue::new();
+        // several bursts of same-class events at a handful of shared
+        // timestamps: within each (time, class) group, pops must come back
+        // in exactly the push order (seq strictly increasing)
+        let n = 3 + rng.below(40) as usize;
+        for _ in 0..n {
+            let at = rng.below(4) as f64; // few distinct times -> many ties
+            q.push(at, EventPayload::Decision);
+        }
+        let mut prev: Option<(f64, u64)> = None;
+        while let Some(ev) = q.pop() {
+            if let Some((pat, pseq)) = prev {
+                assert!(ev.at >= pat, "time order violated: {} after {pat}", ev.at);
+                if ev.at == pat {
+                    assert!(
+                        ev.seq > pseq,
+                        "equal-time events reordered: seq {} after {pseq}",
+                        ev.seq
+                    );
+                }
+            }
+            prev = Some((ev.at, ev.seq));
+        }
+    });
+}
+
+#[test]
+fn prop_kernel_interleaved_push_pop_never_reorders() {
+    // model-based: a sorted reference list must agree with the queue under
+    // arbitrary interleavings of pushes and pops
+    for_all(200, |rng| {
+        let mut q = EventQueue::new();
+        let mut model: Vec<(f64, u8, u64)> = Vec::new();
+        let mut seq = 0u64;
+        for _ in 0..60 {
+            if rng.below(3) < 2 || model.is_empty() {
+                let at = rng.below(5) as f64 + if rng.below(2) == 0 { 0.5 } else { 0.0 };
+                let payload = random_payload(rng);
+                let class = payload.class();
+                q.push(at, payload);
+                model.push((at, class, seq));
+                seq += 1;
+            } else {
+                let min = *model
+                    .iter()
+                    .min_by(|a, b| a.partial_cmp(b).unwrap())
+                    .unwrap();
+                model.retain(|e| *e != min);
+                let ev = q.pop().expect("model says queue is non-empty");
+                assert_eq!(
+                    (ev.at, ev.class, ev.seq),
+                    min,
+                    "queue disagreed with the sorted model"
+                );
+            }
+        }
+        // drain: the remainder must come out exactly in model order
+        let mut rest = model;
+        rest.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for want in rest {
+            let ev = q.pop().expect("queue drained early");
+            assert_eq!((ev.at, ev.class, ev.seq), want);
+        }
+        assert!(q.pop().is_none(), "queue held events the model did not");
+        assert!(q.is_empty());
+    });
+}
+
+#[test]
+fn prop_kernel_class_ranks_order_capacity_before_decisions() {
+    // at one shared instant: spawn-ready and recoveries (capacity arrives)
+    // fire before failures (capacity leaves), which fire before autoscaler
+    // decisions — regardless of push order
+    for_all(100, |rng| {
+        let mut q = EventQueue::new();
+        let mut payloads = vec![
+            EventPayload::Decision,
+            EventPayload::Fail { replica: 0 },
+            EventPayload::Recover { replica: 1 },
+            EventPayload::SpawnReady { replica: 2 },
+        ];
+        rng.shuffle(&mut payloads);
+        for p in payloads {
+            q.push(7.0, p);
+        }
+        let classes: Vec<u8> = std::iter::from_fn(|| q.pop().map(|e| e.class)).collect();
+        let mut sorted = classes.clone();
+        sorted.sort_unstable();
+        assert_eq!(classes, sorted, "class ranks must order equal-time events");
+        assert_eq!(classes, vec![0, 1, 2, 3]);
+    });
+}
