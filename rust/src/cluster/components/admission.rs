@@ -41,6 +41,7 @@ impl SloAdmission {
         keep_on: Option<usize>,
     ) -> anyhow::Result<bool> {
         let pred = ctx.predictor.predict(&req);
+        let rank = ctx.predictor.predict_rank(&req);
         let cost_dist = ctx.cost.cost_dist(req.input_len, &pred);
         let pcost = cost_dist.mean();
         let pvar = cost_dist.variance();
@@ -94,7 +95,7 @@ impl SloAdmission {
         if accepted {
             ctx.in_flight.insert(
                 id,
-                InFlight { replica: i, cost: pcost, var: pvar, weight, req },
+                InFlight { replica: i, cost: pcost, var: pvar, weight, rank, req },
             );
             ctx.backlog[i] += pcost;
             ctx.backlog_var[i] += pvar;

@@ -72,6 +72,19 @@ pub struct ClusterCtx {
     /// Failure-domain outages that fired (each may take several replicas
     /// down in one event).
     pub domain_outages: u64,
+    /// Windowed Kendall's tau of the *shared* predictor's placement-time
+    /// rank scores against realised output lengths, over completions
+    /// cluster-wide. Overwrites the (non-summable) per-replica aggregate in
+    /// [`ClusterCtx::report`].
+    pub pred_tau: crate::util::stats::KendallTau,
+    /// Request ids whose completion was already fed to the shared
+    /// predictor. Completions are drained exactly once per replica via
+    /// `seen_outcomes` watermarks and the `in_flight` entry is removed on
+    /// first sight, but re-dispatch paths (failure re-route, scale-in
+    /// drain, stealing) re-insert entries under the same id — this set
+    /// guarantees one observation per request no matter how many replicas
+    /// touched it.
+    pub(crate) observed: HashSet<RequestId>,
     /// Steal candidates rejected by the transfer-cost benefit gate at
     /// least once.
     pub(crate) steal_rejected: HashSet<RequestId>,
@@ -132,6 +145,8 @@ impl ClusterCtx {
             migrated: 0,
             stolen: 0,
             domain_outages: 0,
+            pred_tau: crate::util::stats::KendallTau::new(256),
+            observed: HashSet::new(),
             steal_rejected: HashSet::new(),
             steal_dirty: true,
             scaling_events: Vec::new(),
@@ -264,7 +279,7 @@ impl ClusterCtx {
             .iter()
             .map(|r| r.replica_seconds(horizon))
             .collect();
-        ClusterReport::new(
+        let mut report = ClusterReport::new(
             self.router.name().to_string(),
             per_replica,
             ClusterCounters {
@@ -282,7 +297,14 @@ impl ClusterCtx {
             &self.merged_outcomes(),
             warmup_fraction,
             &self.cfg.slo.specs,
-        )
+        );
+        // per-replica taus measure the replicas' *local* predictors and are
+        // not summable; the aggregate reports the shared routing
+        // predictor's cluster-wide ordering quality instead (the hit/miss
+        // counters stay per-replica sums — those *are* additive)
+        report.aggregate.pred_tau = self.pred_tau.tau();
+        report.aggregate.pred_tau_n = self.pred_tau.len() as u64;
+        report
     }
 
     // =======================================================================
@@ -386,7 +408,13 @@ impl ClusterCtx {
         for (id, output_len) in new {
             if let Some(f) = self.in_flight.remove(&id) {
                 self.release_backlog(f.replica, f.cost, f.var, f.weight);
-                self.predictor.observe(&f.req, output_len);
+                // one observation per request: re-dispatch paths re-insert
+                // in-flight entries under the same id, so the removal above
+                // alone does not bound how often a request can land here
+                if self.observed.insert(id) {
+                    self.predictor.observe(&f.req, output_len);
+                    self.pred_tau.push(f.rank, output_len as f64);
+                }
             }
         }
         // Reconcile timeout-aborts: they leave the live set without an

@@ -90,6 +90,10 @@ pub(crate) struct InFlight {
     /// scales its contribution to the weighted forecast backlog the
     /// uncertainty-aware autoscaler provisions for.
     pub(crate) weight: f64,
+    /// Rank score the shared predictor assigned at placement time (larger =
+    /// longer expected output); paired with the realised output length at
+    /// completion to score the shared predictor's ordering quality.
+    pub(crate) rank: f64,
     /// Original request (kept for re-dispatch and predictor learning).
     pub(crate) req: Request,
 }

@@ -86,6 +86,9 @@ pub enum PredictorKind {
     Proxy,
     /// Ground-truth oracle distribution.
     Oracle,
+    /// Online pairwise learning-to-rank over prompt features with
+    /// exponential staleness decay (vllm-ltr style, drift-adaptive).
+    Ranking,
 }
 
 impl PredictorKind {
@@ -95,6 +98,7 @@ impl PredictorKind {
             PredictorKind::LengthHistory => "length-history",
             PredictorKind::Proxy => "proxy",
             PredictorKind::Oracle => "oracle",
+            PredictorKind::Ranking => "ranking",
         }
     }
 
@@ -104,6 +108,7 @@ impl PredictorKind {
             PredictorKind::LengthHistory,
             PredictorKind::Proxy,
             PredictorKind::Oracle,
+            PredictorKind::Ranking,
         ]
         .into_iter()
         .find(|p| p.name() == s)
@@ -884,6 +889,47 @@ impl EngineProfile {
     }
 }
 
+/// Mid-run workload drift: at a configurable point in the stream the
+/// topic → output-length mapping shifts (and optionally the dataset mix),
+/// while prompt *content* — embeddings, topic directions — stays fixed.
+/// That is the adversarial case for history-based prediction: retrieval
+/// keeps finding confident semantic matches whose recorded lengths now
+/// describe the wrong regime, so an adaptive predictor must unlearn, not
+/// merely fill a cold cache.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftConfig {
+    /// Fraction of `n_requests` after which the shift applies; 0 disables
+    /// drift entirely (the default — existing seeded traces are unchanged).
+    pub at_fraction: f64,
+    /// Rotate each dataset's per-topic output-length profiles among its
+    /// topics at the drift point (same marginals, remapped semantics).
+    pub remap_topics: bool,
+    /// Replacement dataset mix after the drift point; empty keeps the mix.
+    pub mix: Vec<(DatasetKind, f64)>,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { at_fraction: 0.0, remap_topics: true, mix: Vec::new() }
+    }
+}
+
+impl DriftConfig {
+    pub fn enabled(&self) -> bool {
+        self.at_fraction > 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..1.0).contains(&self.at_fraction) {
+            return Err(format!(
+                "drift.at_fraction must be in [0,1), got {}",
+                self.at_fraction
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Workload shape: dataset mixture, arrival process, size.
 #[derive(Clone, Debug)]
 pub struct WorkloadConfig {
@@ -911,6 +957,8 @@ pub struct WorkloadConfig {
     /// corpus, probe sets) sample from the same topic population — as
     /// different days of traffic over one user base would.
     pub topic_seed: u64,
+    /// Mid-run request-mix shift (disabled by default).
+    pub drift: DriftConfig,
 }
 
 impl Default for WorkloadConfig {
@@ -933,6 +981,7 @@ impl Default for WorkloadConfig {
             embed_sigma: 0.05,
             embed_dim: 64,
             topic_seed: 42,
+            drift: DriftConfig::default(),
         }
     }
 }
@@ -1100,6 +1149,24 @@ impl ExperimentConfig {
                         .map_err(|e| format!("workload.{e}"))?;
                     cfg.workload.slo_mix = mix;
                 }
+            }
+            if let Some(d) = w.get("drift") {
+                let drift = &mut cfg.workload.drift;
+                drift.at_fraction = d.f64_or("at_fraction", drift.at_fraction);
+                if let Some(remap) = d.get("remap_topics").and_then(Json::as_bool) {
+                    drift.remap_topics = remap;
+                }
+                if let Some(arr) = d.get("mix").and_then(Json::as_arr) {
+                    let mut mix = Vec::new();
+                    for item in arr {
+                        let name = item.str_or("dataset", "");
+                        let ds = DatasetKind::from_name(name)
+                            .ok_or_else(|| format!("unknown dataset {name}"))?;
+                        mix.push((ds, item.f64_or("weight", 1.0)));
+                    }
+                    drift.mix = mix;
+                }
+                drift.validate().map_err(|e| format!("workload.{e}"))?;
             }
         }
         if let Some(s) = j.get("slo") {
@@ -1337,6 +1404,28 @@ mod tests {
     fn from_json_rejects_unknown_policy() {
         let j = Json::parse(r#"{"policy":"zzz"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_json_parses_drift_block() {
+        let j = Json::parse(
+            r#"{"predictor":"ranking","workload":{"drift":{
+                "at_fraction":0.4,"remap_topics":false,
+                "mix":[{"dataset":"write","weight":3}]}}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.predictor, PredictorKind::Ranking);
+        assert_eq!(c.workload.drift.at_fraction, 0.4);
+        assert!(!c.workload.drift.remap_topics);
+        assert_eq!(c.workload.drift.mix, vec![(DatasetKind::Write, 3.0)]);
+        assert!(c.workload.drift.enabled());
+        // defaults: drift off
+        assert!(!WorkloadConfig::default().drift.enabled());
+        // out-of-range fraction rejected
+        let bad =
+            Json::parse(r#"{"workload":{"drift":{"at_fraction":1.5}}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
     }
 
     #[test]

@@ -194,6 +194,45 @@ impl<T: Clone> FlatIndex<T> {
         out
     }
 
+    /// Threshold search with nearest-neighbour fill: every payload with
+    /// similarity >= `threshold`, plus — when those number fewer than
+    /// `min_total` — the nearest below-threshold records to bring the
+    /// result up to `min_total` (or the whole index if smaller). One scan
+    /// serves both cases, so genuine above-threshold matches are never
+    /// dropped by the fallback and the fallback costs no second pass.
+    /// Threshold hits come first (scan order), fill entries follow in
+    /// descending similarity; the returned count of threshold hits lets
+    /// callers classify the retrieval. One pass plus a partial selection
+    /// over the below-threshold remainder only when fill is needed, so
+    /// the common all-hits case stays O(n) like `search_threshold`.
+    pub fn search_threshold_filled(
+        &self,
+        query: &Embedding,
+        threshold: f32,
+        min_total: usize,
+    ) -> (usize, Vec<(f32, &T)>) {
+        assert_eq!(query.dim(), self.dim);
+        let mut hits: Vec<(f32, &T)> = Vec::new();
+        let mut below: Vec<(f32, &T)> = Vec::new();
+        for (i, rec) in self.records.iter().enumerate() {
+            let s = dot(&self.flat[i * self.dim..(i + 1) * self.dim], &query.0);
+            if s >= threshold {
+                hits.push((s, &rec.payload));
+            } else {
+                below.push((s, &rec.payload));
+            }
+        }
+        let n_hits = hits.len();
+        if n_hits < min_total && !below.is_empty() {
+            let need = (min_total - n_hits).min(below.len());
+            below.select_nth_unstable_by(need - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
+            below.truncate(need);
+            below.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            hits.extend(below);
+        }
+        (n_hits, hits)
+    }
+
     /// Top-k most similar payloads (descending similarity). Uses partial
     /// selection (O(n + k log k)) rather than a full sort (§Perf).
     pub fn search_topk(&self, query: &Embedding, k: usize) -> Vec<(f32, &T)> {
@@ -293,6 +332,33 @@ mod tests {
         assert_eq!(*top[0].1, 3);
         assert_eq!(*top[1].1, 1);
         assert!(top[0].0 >= top[1].0);
+    }
+
+    #[test]
+    fn threshold_filled_keeps_hits_and_fills_nearest() {
+        let mut idx: FlatIndex<u32> = FlatIndex::new(4, 10);
+        let q = Embedding::normalize(vec![1.0, 0.0, 0.0, 0.0]);
+        idx.insert(Embedding::normalize(vec![1.0, 0.0, 0.0, 0.0]), 1); // hit
+        idx.insert(Embedding::normalize(vec![0.9, 0.1, 0.0, 0.0]), 2); // hit
+        idx.insert(Embedding::normalize(vec![0.5, 0.5, 0.0, 0.0]), 3); // near miss
+        idx.insert(Embedding::normalize(vec![0.0, 1.0, 0.0, 0.0]), 4); // far
+        // enough hits: no fill, no below-threshold entries
+        let (n, out) = idx.search_threshold_filled(&q, 0.8, 2);
+        assert_eq!(n, 2);
+        let mut ids: Vec<u32> = out.iter().map(|(_, &p)| p).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2]);
+        // short of min_total: genuine hits retained, nearest miss fills
+        let (n, out) = idx.search_threshold_filled(&q, 0.8, 3);
+        assert_eq!(n, 2);
+        let ids: Vec<u32> = out.iter().map(|(_, &p)| p).collect();
+        assert_eq!(ids.len(), 3);
+        assert!(ids.contains(&1) && ids.contains(&2), "threshold hits dropped");
+        assert_eq!(*ids.last().unwrap(), 3, "fill must be the nearest miss");
+        // min_total larger than the index: everything comes back
+        let (n, out) = idx.search_threshold_filled(&q, 0.8, 99);
+        assert_eq!(n, 2);
+        assert_eq!(out.len(), 4);
     }
 
     #[test]

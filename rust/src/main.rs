@@ -65,6 +65,19 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Err(e) = arr.validate() {
         bail!("{e} (--burst-factor/--burst-on/--burst-off/--diurnal-period/--diurnal-amplitude)");
     }
+    if let Some(d) = args.get("drift") {
+        // bare `--drift` (the parser stores "true") means "shift the mix at
+        // the halfway point"; an explicit value places the shift elsewhere
+        cfg.workload.drift.at_fraction = if d == "true" {
+            0.5
+        } else {
+            d.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--drift: bad fraction {d:?}"))?
+        };
+        if let Err(e) = cfg.workload.drift.validate() {
+            bail!("{e} (--drift)");
+        }
+    }
     if let Some(f) = args.get("fail") {
         cfg.cluster.failures =
             FailureEvent::parse_list(f).map_err(|e| anyhow::anyhow!("--fail: {e}"))?;
@@ -545,19 +558,22 @@ fn cmd_predquality(args: &Args) -> Result<()> {
     let mut w1_pred = 0.0;
     let mut w1_marg = 0.0;
     let mut mean_abs_err = 0.0;
+    let mut tau = sagesched::util::stats::KendallTau::new(n.max(2));
     for r in &probes.requests {
         let pred = predictor.predict(r);
         let truth = r.true_dist.as_ref().unwrap();
         w1_pred += pred.w1_distance(truth);
         w1_marg += marginal.w1_distance(truth);
         mean_abs_err += (pred.mean() - truth.mean()).abs();
+        tau.push(predictor.predict_rank(r), r.true_output_len as f64);
     }
     println!(
-        "predictor={} n={n} mean W1(pred,true)={:.1} W1(marginal,true)={:.1} meanErr={:.1}",
+        "predictor={} n={n} mean W1(pred,true)={:.1} W1(marginal,true)={:.1} meanErr={:.1} tau={:.3}",
         predictor.name(),
         w1_pred / n as f64,
         w1_marg / n as f64,
-        mean_abs_err / n as f64
+        mean_abs_err / n as f64,
+        tau.tau()
     );
     Ok(())
 }
@@ -599,6 +615,14 @@ const USAGE: &str = "usage: sagesched <run|sweep|smoke|serve|cluster> [flags]
           --arrival poisson|mmpp|diurnal
           --burst-factor 6 --burst-on 10 --burst-off 40       (mmpp)
           --diurnal-period 120 --diurnal-amplitude 0.8        (diurnal)
+  predictors (run / sweep / cluster / predquality):
+          --predictor history|length-history|proxy|oracle|ranking
+            ranking = online learning-to-rank over prompt features; adapts
+            under drift, reported as windowed Kendall's tau (pred_tau)
+          --drift [0.5]   mid-run workload shift: remap topic->length
+                          profiles after this fraction of requests (bare
+                          flag shifts at the halfway point; JSON config's
+                          workload.drift block adds dataset-mix switches)
   (run also accepts --trace file.jsonl to replay a recorded trace)";
 
 fn main() -> Result<()> {

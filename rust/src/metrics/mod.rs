@@ -131,6 +131,18 @@ pub struct RunReport {
     pub sched_overhead: f64,
     /// decode steps executed
     pub decode_steps: u64,
+    /// windowed Kendall's tau of the predictor's ranking scores against
+    /// realized output lengths (0 with fewer than 2 decisive pairs)
+    pub pred_tau: f64,
+    /// observations currently inside the tau window
+    pub pred_tau_n: u64,
+    /// predictor retrieval accounting: predictions served from enough
+    /// above-threshold matches / topped up by nearest-neighbour fallback /
+    /// answered with the cold-start prior (all zero for predictors with
+    /// no retrieval stage)
+    pub pred_threshold_hits: u64,
+    pub pred_fallback: u64,
+    pub pred_cold: u64,
 }
 
 impl RunReport {
@@ -283,6 +295,11 @@ impl RunReport {
             ("predict_overhead", Json::num(self.predict_overhead)),
             ("sched_overhead", Json::num(self.sched_overhead)),
             ("decode_steps", Json::num(self.decode_steps as f64)),
+            ("pred_tau", Json::num(self.pred_tau)),
+            ("pred_tau_n", Json::num(self.pred_tau_n as f64)),
+            ("pred_threshold_hits", Json::num(self.pred_threshold_hits as f64)),
+            ("pred_fallback", Json::num(self.pred_fallback as f64)),
+            ("pred_cold", Json::num(self.pred_cold as f64)),
         ])
     }
 }
@@ -405,7 +422,12 @@ impl ClusterReport {
             aggregate.decode_steps += r.decode_steps;
             aggregate.predict_overhead += r.predict_overhead;
             aggregate.sched_overhead += r.sched_overhead;
+            aggregate.pred_threshold_hits += r.pred_threshold_hits;
+            aggregate.pred_fallback += r.pred_fallback;
+            aggregate.pred_cold += r.pred_cold;
         }
+        // pred_tau is *not* summable across replicas; the cluster context
+        // overwrites it from its shared predictor's tau tracker
         // per-class loss counters live on the replicas' reports (each
         // coordinator owns its rejection/abort counts); attainment and
         // latency summaries come from the merged outcome stream

@@ -21,6 +21,27 @@ use crate::distribution::LengthDist;
 use crate::embedding::{Embedding, FlatIndex};
 use crate::util::rng::Rng;
 
+pub mod ranking;
+pub use ranking::RankingPredictor;
+
+/// Retrieval-outcome counters, split three ways so the report can tell a
+/// genuine semantic match from a relaxed one (the pre-fix accounting
+/// lumped fallback retrievals in with threshold hits):
+/// - `threshold_hits`: enough above-threshold matches on their own;
+/// - `fallback`: above-threshold matches kept but topped up with nearest
+///   below-threshold neighbours to reach `min_matches`;
+/// - `cold`: too little history even after the fill — prior returned.
+///
+/// Counters tick once per `predict()` call; the serving path calls
+/// `predict` both directly and through the `predict_point`/`predict_rank`
+/// defaults, so totals count predictions made, not requests admitted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PredictorStats {
+    pub threshold_hits: u64,
+    pub fallback: u64,
+    pub cold: u64,
+}
+
 /// A predictor maps an incoming request to an output-length distribution
 /// and learns from completed requests.
 pub trait Predictor: Send {
@@ -35,6 +56,23 @@ pub trait Predictor: Send {
     /// Point prediction (for SJF-style policies): distribution mean.
     fn predict_point(&mut self, req: &Request) -> f64 {
         self.predict(req).mean()
+    }
+
+    /// Ranking score: any value whose *ordering* across concurrent
+    /// requests tracks the ordering of true output lengths (larger score
+    /// = longer expected output). SJF-style policies sort by this, so a
+    /// predictor good at relative ordering but poorly calibrated in
+    /// absolute tokens (e.g. [`RankingPredictor`]) still schedules well.
+    /// Defaults to the point prediction, which preserves the pre-seam
+    /// behaviour for every analytic predictor.
+    fn predict_rank(&mut self, req: &Request) -> f64 {
+        self.predict_point(req)
+    }
+
+    /// Retrieval-outcome counters; all zero for predictors without a
+    /// retrieval stage.
+    fn stats(&self) -> PredictorStats {
+        PredictorStats::default()
     }
 }
 
@@ -65,9 +103,8 @@ pub struct HistoryPredictor {
     pub min_matches: usize,
     /// cap on distribution support (compression)
     pub max_support: usize,
-    /// count of predictions served from history vs prior (observability)
-    pub hits: u64,
-    pub misses: u64,
+    /// retrieval-outcome counters (observability)
+    pub stats: PredictorStats,
 }
 
 impl HistoryPredictor {
@@ -77,8 +114,7 @@ impl HistoryPredictor {
             threshold,
             min_matches: 5,
             max_support: 64,
-            hits: 0,
-            misses: 0,
+            stats: PredictorStats::default(),
         }
     }
 
@@ -90,19 +126,17 @@ impl HistoryPredictor {
         self.index.is_empty()
     }
 
-    /// Core retrieval: matches above threshold; when too few, relax to
-    /// top-k so the sampled distribution is never degenerate.
-    fn retrieve(&self, emb: &Embedding) -> Vec<u32> {
-        let hits = self.index.search_threshold(emb, self.threshold);
-        if hits.len() >= self.min_matches {
-            return hits.into_iter().map(|(_, r)| r.output_len).collect();
-        }
-        // augment with nearest neighbours (paper: public-dataset fallback)
-        self.index
-            .search_topk(emb, self.min_matches)
-            .into_iter()
-            .map(|(_, r)| r.output_len)
-            .collect()
+    /// Core retrieval: all matches above threshold, augmented with the
+    /// nearest below-threshold neighbours when they number fewer than
+    /// `min_matches` (paper: public-dataset fallback). The union keeps
+    /// every genuine semantic match — the fallback only *fills*, it never
+    /// replaces. Returns the retrieved lengths plus the count of true
+    /// threshold hits for the accounting split.
+    fn retrieve(&self, emb: &Embedding) -> (usize, Vec<u32>) {
+        let (n_hits, recs) =
+            self.index
+                .search_threshold_filled(emb, self.threshold, self.min_matches);
+        (n_hits, recs.into_iter().map(|(_, r)| r.output_len).collect())
     }
 }
 
@@ -112,12 +146,16 @@ impl Predictor for HistoryPredictor {
     }
 
     fn predict(&mut self, req: &Request) -> LengthDist {
-        let lens = self.retrieve(&req.embedding);
+        let (n_hits, lens) = self.retrieve(&req.embedding);
         if lens.len() < self.min_matches {
-            self.misses += 1;
+            self.stats.cold += 1;
             return cold_start_prior();
         }
-        self.hits += 1;
+        if n_hits >= self.min_matches {
+            self.stats.threshold_hits += 1;
+        } else {
+            self.stats.fallback += 1;
+        }
         let samples: Vec<f64> = lens.iter().map(|&l| l as f64).collect();
         LengthDist::from_samples(&samples).compress(self.max_support)
     }
@@ -125,6 +163,10 @@ impl Predictor for HistoryPredictor {
     fn observe(&mut self, req: &Request, output_len: u32) {
         self.index
             .insert(req.embedding.clone(), HistoryRecord { output_len });
+    }
+
+    fn stats(&self) -> PredictorStats {
+        self.stats
     }
 }
 
@@ -324,6 +366,7 @@ pub fn make_predictor(
         K::LengthHistory => Box::new(LengthHistoryPredictor::new(history_capacity)),
         K::Proxy => Box::new(ProxyPredictor::new(seed)),
         K::Oracle => Box::new(OraclePredictor),
+        K::Ranking => Box::new(RankingPredictor::new(embed_dim, seed)),
     }
 }
 
@@ -345,7 +388,28 @@ mod tests {
         let mut p = HistoryPredictor::new(64, 100, 0.8);
         let d = p.predict(&reqs[0]);
         assert!(d.len() > 10); // wide prior
-        assert_eq!(p.misses, 1);
+        assert_eq!(p.stats.cold, 1);
+        assert_eq!(p.stats.threshold_hits, 0);
+        assert_eq!(p.stats.fallback, 0);
+    }
+
+    #[test]
+    fn history_fallback_counted_separately_from_threshold_hits() {
+        let reqs = make_requests(40, 11);
+        let mut p = HistoryPredictor::new(64, 1000, 0.8);
+        // observe a handful of requests, then predict for a prompt from a
+        // different topic: retrieval must fill via nearest neighbours and
+        // the accounting must say "fallback", not "hit"
+        for r in &reqs[..20] {
+            p.observe(r, r.true_output_len);
+        }
+        let mut far = reqs[30].clone();
+        far.embedding = Embedding::normalize(vec![-1.0; 64]);
+        let d = p.predict(&far);
+        assert!(d.mean() > 0.0);
+        assert_eq!(p.stats.cold, 0);
+        assert_eq!(p.stats.threshold_hits, 0);
+        assert_eq!(p.stats.fallback, 1, "relaxed retrieval miscounted: {:?}", p.stats);
     }
 
     #[test]
@@ -452,7 +516,7 @@ mod tests {
     #[test]
     fn make_predictor_constructs_all() {
         use crate::config::PredictorKind as K;
-        for k in [K::History, K::LengthHistory, K::Proxy, K::Oracle] {
+        for k in [K::History, K::LengthHistory, K::Proxy, K::Oracle, K::Ranking] {
             let p = make_predictor(k, 64, 100, 0.8, 1);
             assert!(!p.name().is_empty());
         }

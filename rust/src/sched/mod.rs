@@ -39,6 +39,10 @@ pub struct ReqView<'a> {
     pub cost_dist: &'a LengthDist,
     /// Point output-length prediction.
     pub point_pred: f64,
+    /// Ranking score from the predictor's `predict_rank` seam: larger =
+    /// longer expected output. Equals `point_pred` for analytic
+    /// predictors; the ranking predictor supplies its learned score.
+    pub rank_pred: f64,
     /// Service cost already consumed, in cost-model units.
     pub consumed_cost: f64,
     /// Current time.
@@ -182,11 +186,12 @@ impl Policy for FastServePolicy {
 // SSJF
 // ---------------------------------------------------------------------------
 
-/// Speculative shortest-job-first (Qiu et al. 2024): order the queue by a
-/// proxy model's *point* output-length prediction; non-preemptive.
-/// The point prediction comes from the coordinator's predictor
-/// (`v.point_pred`), which for the Proxy predictor reproduces the paper's
-/// DistillBert error profile.
+/// Speculative shortest-job-first (Qiu et al. 2024): order the queue by
+/// the predictor's ranking score (`v.rank_pred`); non-preemptive. For
+/// analytic predictors the score *is* the point prediction (Proxy
+/// reproduces the paper's DistillBert error profile); for the ranking
+/// predictor it is the learned pairwise score — SJF only consumes the
+/// ordering, so any monotone score works.
 #[derive(Default)]
 pub struct SsjfPolicy {
     cached: HashMap<RequestId, f64>,
@@ -199,7 +204,7 @@ impl Policy for SsjfPolicy {
 
     fn priority(&mut self, v: &ReqView) -> f64 {
         // the prediction is made once at arrival and kept stable
-        *self.cached.entry(v.req.id).or_insert(v.point_pred)
+        *self.cached.entry(v.req.id).or_insert(v.rank_pred)
     }
 
     fn preemptive(&self) -> bool {
@@ -522,6 +527,7 @@ mod tests {
             pred_lengths: pred,
             cost_dist: cost,
             point_pred: pred.mean(),
+            rank_pred: pred.mean(),
             consumed_cost: cm.consumed(r.input_len, generated),
             now: 0.0,
         }
@@ -705,6 +711,7 @@ mod tests {
             pred_lengths: &d,
             cost_dist: &d,
             point_pred: d.mean(),
+            rank_pred: d.mean(),
             consumed_cost: 0.0,
             now: 0.0,
         };

@@ -63,6 +63,7 @@ struct Live {
     pred_lengths: LengthDist,
     cost_dist: LengthDist,
     point_pred: f64,
+    rank_pred: f64,
     priority: f64,
 }
 
@@ -97,6 +98,13 @@ pub struct Coordinator<E: Engine> {
     now: f64,
     live: Vec<Live>,
     outcomes: Vec<RequestOutcome>,
+    /// Windowed rank quality of the predictor: (rank score at admission,
+    /// realized output length) pushed once per first completion.
+    pub pred_tau: crate::util::stats::KendallTau,
+    /// Request ids already fed to `predictor.observe` — guards against
+    /// double-counting an observation when a request re-enters this
+    /// coordinator (failure re-route, migration bounce-back).
+    observed: std::collections::HashSet<crate::core::RequestId>,
     /// requests rejected at admission (queue full)
     pub rejected: u64,
     /// requests aborted after timing out in the queue
@@ -140,6 +148,8 @@ impl<E: Engine> Coordinator<E> {
             now: 0.0,
             live: Vec::new(),
             outcomes: Vec::new(),
+            pred_tau: crate::util::stats::KendallTau::new(256),
+            observed: Default::default(),
             rejected: 0,
             aborted: 0,
             rejected_by_class: [0; 3],
@@ -228,6 +238,7 @@ impl<E: Engine> Coordinator<E> {
         let t0 = Instant::now();
         let mut pred = self.predictor.predict(&req);
         let point = self.predictor.predict_point(&req);
+        let rank = self.predictor.predict_rank(&req);
         self.predict_overhead += t0.elapsed().as_secs_f64();
         if self.noise_mix > 0.0 {
             let noise = LengthDist::uniform(1.0, (pred.max() * 2.0).max(64.0), 24);
@@ -243,6 +254,7 @@ impl<E: Engine> Coordinator<E> {
             pred_lengths: pred,
             cost_dist,
             point_pred: point,
+            rank_pred: rank,
             priority: f64::INFINITY,
         });
         true
@@ -471,6 +483,7 @@ impl<E: Engine> Coordinator<E> {
                 pred_lengths: &l.pred_lengths,
                 cost_dist: &l.cost_dist,
                 point_pred: l.point_pred,
+                rank_pred: l.rank_pred,
                 consumed_cost: consumed,
                 now: self.now,
             };
@@ -667,9 +680,16 @@ impl<E: Engine> Coordinator<E> {
                 let l = self.live.swap_remove(i);
                 self.kv.release(l.req.id);
                 self.policy.forget(l.req.id);
-                let t0 = Instant::now();
-                self.predictor.observe(&l.req, l.generated);
-                self.predict_overhead += t0.elapsed().as_secs_f64();
+                // observe exactly once per request id: a request can pass
+                // through a coordinator more than once (failure re-route,
+                // migration), and feeding a duplicate observation would
+                // double its weight in the history window
+                if self.observed.insert(l.req.id) {
+                    let t0 = Instant::now();
+                    self.predictor.observe(&l.req, l.generated);
+                    self.predict_overhead += t0.elapsed().as_secs_f64();
+                    self.pred_tau.push(l.rank_pred, l.generated as f64);
+                }
                 let outcome = RequestOutcome {
                     id: l.req.id,
                     dataset: l.req.dataset,
@@ -741,6 +761,12 @@ impl<E: Engine> Coordinator<E> {
         r.aborted = self.aborted;
         r.swap_out_events = self.kv.swap_out_events;
         r.swap_in_events = self.kv.swap_in_events;
+        r.pred_tau = self.pred_tau.tau();
+        r.pred_tau_n = self.pred_tau.len() as u64;
+        let ps = self.predictor.stats();
+        r.pred_threshold_hits = ps.threshold_hits;
+        r.pred_fallback = ps.fallback;
+        r.pred_cold = ps.cold;
         r.predict_overhead = self.predict_overhead;
         r.sched_overhead = self.sched_overhead;
         let es = self.engine.stats();
@@ -801,6 +827,10 @@ pub fn prewarm_predictor(
     }
     let mut wl = cfg.workload.clone();
     wl.n_requests = cfg.history_prewarm;
+    // the corpus was profiled offline, before serving: it reflects the
+    // *pre*-drift regime (which is what makes mid-run drift adversarial
+    // for the history window)
+    wl.drift = Default::default();
     // distinct seed stream: the corpus is *not* the serving trace
     let corpus = WorkloadGen::new(wl, cfg.seed ^ 0x0ff1_ce).generate();
     for r in &corpus.requests {

@@ -421,6 +421,7 @@ mod tests {
             pred_lengths: pred,
             cost_dist: cost,
             point_pred: pred.mean(),
+            rank_pred: pred.mean(),
             consumed_cost: 0.0,
             now,
         }

@@ -146,6 +146,79 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
+/// Running windowed Kendall's tau over (predicted score, actual value)
+/// pairs — the rank-quality metric for output-length predictors: a
+/// scheduler that orders by predicted score only needs the *ordering* to
+/// be right, so tau (not MAE/W1) is the quantity that tracks scheduling
+/// value. Pairs live in a FIFO ring of `cap` observations; `tau()` scans
+/// all O(W²) pairs, which at the default window (256) is ~32k comparisons
+/// — negligible next to a single Gittins refresh.
+///
+/// Ties in either coordinate are excluded from both the numerator and the
+/// denominator (a tie carries no ordering information either way), so
+/// `tau` is the fraction of decisive pairs ordered correctly, rescaled to
+/// [-1, 1]. Fewer than 2 decisive pairs yields 0.
+#[derive(Clone, Debug)]
+pub struct KendallTau {
+    window: std::collections::VecDeque<(f64, f64)>,
+    cap: usize,
+}
+
+impl KendallTau {
+    pub fn new(cap: usize) -> KendallTau {
+        assert!(cap >= 2);
+        KendallTau { window: std::collections::VecDeque::with_capacity(cap), cap }
+    }
+
+    /// Record one (predicted score, actual value) observation, evicting
+    /// the oldest once the window is full.
+    pub fn push(&mut self, pred: f64, actual: f64) {
+        if !pred.is_finite() || !actual.is_finite() {
+            return;
+        }
+        if self.window.len() == self.cap {
+            self.window.pop_front();
+        }
+        self.window.push_back((pred, actual));
+    }
+
+    /// Number of observations currently in the window.
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+
+    /// Kendall's tau over the current window; 0.0 when fewer than 2
+    /// decisive (untied) pairs exist.
+    pub fn tau(&self) -> f64 {
+        let v: Vec<(f64, f64)> = self.window.iter().copied().collect();
+        let mut concordant = 0i64;
+        let mut discordant = 0i64;
+        for i in 0..v.len() {
+            for j in (i + 1)..v.len() {
+                let dp = v[i].0 - v[j].0;
+                let da = v[i].1 - v[j].1;
+                if dp == 0.0 || da == 0.0 {
+                    continue;
+                }
+                if (dp > 0.0) == (da > 0.0) {
+                    concordant += 1;
+                } else {
+                    discordant += 1;
+                }
+            }
+        }
+        let decisive = concordant + discordant;
+        if decisive < 2 {
+            return 0.0;
+        }
+        (concordant - discordant) as f64 / decisive as f64
+    }
+}
+
 /// Simple fixed-width histogram with overflow bucket.
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -237,6 +310,59 @@ mod tests {
         assert!((normal_cdf(-1.9599639845) - 0.025).abs() < 1e-4);
         assert!(normal_cdf(-8.0) < 1e-9);
         assert!(normal_cdf(8.0) > 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn kendall_tau_perfect_and_inverted() {
+        let mut t = KendallTau::new(64);
+        for i in 0..20 {
+            t.push(i as f64, (i * 3) as f64);
+        }
+        assert!((t.tau() - 1.0).abs() < 1e-12, "monotone ordering must give tau=1");
+        let mut t = KendallTau::new(64);
+        for i in 0..20 {
+            t.push(i as f64, -(i as f64));
+        }
+        assert!((t.tau() + 1.0).abs() < 1e-12, "inverted ordering must give tau=-1");
+    }
+
+    #[test]
+    fn kendall_tau_ties_are_excluded() {
+        let mut t = KendallTau::new(16);
+        // constant prediction: every pair tied in pred => no decisive pairs
+        for i in 0..10 {
+            t.push(1.0, i as f64);
+        }
+        assert_eq!(t.tau(), 0.0);
+        // one decisive pair is still below the 2-pair floor
+        let mut t = KendallTau::new(16);
+        t.push(1.0, 1.0);
+        t.push(2.0, 2.0);
+        assert_eq!(t.tau(), 0.0);
+    }
+
+    #[test]
+    fn kendall_tau_window_evicts_oldest() {
+        let mut t = KendallTau::new(8);
+        // fill with inverted pairs, then overwrite with concordant ones:
+        // once the window has turned over, tau must reflect only the new regime
+        for i in 0..8 {
+            t.push(i as f64, -(i as f64));
+        }
+        assert!(t.tau() < -0.99);
+        for i in 0..8 {
+            t.push(i as f64, i as f64);
+        }
+        assert_eq!(t.len(), 8);
+        assert!(t.tau() > 0.99, "stale inverted pairs must be evicted");
+    }
+
+    #[test]
+    fn kendall_tau_ignores_non_finite() {
+        let mut t = KendallTau::new(8);
+        t.push(f64::NAN, 1.0);
+        t.push(1.0, f64::INFINITY);
+        assert!(t.is_empty());
     }
 
     #[test]

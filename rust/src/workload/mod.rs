@@ -174,6 +174,50 @@ fn dataset_stem(kind: DatasetKind, topic_id: usize, rng: &mut Rng) -> String {
     }
 }
 
+/// Build the post-drift topic set: within each dataset, rotate the
+/// *length*-related fields (long/short modes, short weight, ground-truth
+/// distribution) among its topics by half the block while keeping every
+/// topic's embedding direction, stem, and profile in place. Prompts still
+/// look identical to the predictor — same cosine neighbourhoods — but the
+/// lengths those neighbourhoods imply are now wrong, so a history window
+/// full of pre-drift observations confidently mispredicts until it turns
+/// over. Deterministic and RNG-free: drift never perturbs seeded streams.
+fn remap_topic_lengths(topics: &[Topic]) -> Vec<Topic> {
+    let mut out = topics.to_vec();
+    let datasets: Vec<DatasetKind> = {
+        let mut ds = Vec::new();
+        for t in topics {
+            if !ds.contains(&t.dataset) {
+                ds.push(t.dataset);
+            }
+        }
+        ds
+    };
+    for kind in datasets {
+        let block: Vec<usize> = topics
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.dataset == kind)
+            .map(|(i, _)| i)
+            .collect();
+        let n = block.len();
+        if n < 2 {
+            continue;
+        }
+        let shift = (n / 2).max(1);
+        for (j, &dst) in block.iter().enumerate() {
+            let src = &topics[block[(j + shift) % n]];
+            let t = &mut out[dst];
+            t.output_mu = src.output_mu;
+            t.output_sigma = src.output_sigma;
+            t.short_weight = src.short_weight;
+            t.short_mu = src.short_mu;
+            t.true_dist = src.true_dist.clone();
+        }
+    }
+    out
+}
+
 /// The generated workload: requests sorted by arrival time.
 #[derive(Clone, Debug)]
 pub struct Workload {
@@ -186,6 +230,11 @@ pub struct Workload {
 pub struct WorkloadGen {
     cfg: WorkloadConfig,
     topics: Vec<Topic>,
+    /// post-drift topic set (same directions/stems, remapped length
+    /// profiles); `None` when drift is off or `remap_topics` is false
+    drifted: Option<Vec<Topic>>,
+    /// request index at which the drift applies
+    drift_at: usize,
     arrivals: Box<dyn arrivals::ArrivalProcess>,
     rng: Rng,
     /// SLO-class stamping stream — its own RNG so the class mix never
@@ -202,7 +251,15 @@ impl WorkloadGen {
         // request-stream seed (pre-warm corpora must match serving traces)
         let mut rng = Rng::new(cfg.topic_seed ^ 0x5eed_0001);
         let mut topics = Vec::new();
-        for (kind, _) in &cfg.mix {
+        // post-drift-mix datasets need topics too; appending them *after*
+        // the base mix leaves the existing topic universe untouched
+        let mut kinds: Vec<DatasetKind> = cfg.mix.iter().map(|(k, _)| *k).collect();
+        for (k, _) in &cfg.drift.mix {
+            if !kinds.contains(k) {
+                kinds.push(*k);
+            }
+        }
+        for kind in &kinds {
             let profile = DatasetProfile::of(*kind);
             // hierarchical topics: a few super-topics per dataset, each with
             // related sub-topics (cosine ~0.6 apart, partially-related
@@ -255,11 +312,53 @@ impl WorkloadGen {
                 });
             }
         }
+        // derive the post-drift topic set *without* consuming any RNG, so
+        // enabling drift never perturbs arrivals or pre-drift sampling
+        let drifted = if cfg.drift.enabled() && cfg.drift.remap_topics && cfg.n_requests > 0
+        {
+            Some(remap_topic_lengths(&topics))
+        } else {
+            None
+        };
+        let drift_at = (cfg.drift.at_fraction * cfg.n_requests as f64).floor() as usize;
         // switch to the request-stream seed for arrivals/sampling
         let rng = Rng::new(seed ^ 0x5eed_0002);
         let arrivals = arrivals::make_arrival_process(&cfg);
         let slo = ClassAssigner::new(&cfg.slo_mix, seed);
-        WorkloadGen { cfg, topics, arrivals, rng, slo, next_id: 0, clock: 0.0 }
+        WorkloadGen {
+            cfg,
+            topics,
+            drifted,
+            drift_at,
+            arrivals,
+            rng,
+            slo,
+            next_id: 0,
+            clock: 0.0,
+        }
+    }
+
+    /// True once `drift_at` requests have been emitted (always false with
+    /// drift disabled or in streaming mode with `n_requests == 0`).
+    pub fn drift_active(&self) -> bool {
+        self.cfg.drift.enabled()
+            && self.cfg.n_requests > 0
+            && self.next_id as usize >= self.drift_at
+    }
+
+    fn active_topics(&self) -> &[Topic] {
+        match &self.drifted {
+            Some(d) if self.drift_active() => d,
+            _ => &self.topics,
+        }
+    }
+
+    fn active_mix(&self) -> &[(DatasetKind, f64)] {
+        if self.drift_active() && !self.cfg.drift.mix.is_empty() {
+            &self.cfg.drift.mix
+        } else {
+            &self.cfg.mix
+        }
     }
 
     pub fn topics(&self) -> &[Topic] {
@@ -281,9 +380,9 @@ impl WorkloadGen {
     /// Sample a request with an explicit arrival time (used by figure
     /// benches needing deterministic arrivals).
     pub fn request_at(&mut self, arrival: f64) -> Request {
-        let weights: Vec<f64> = self.cfg.mix.iter().map(|(_, w)| *w).collect();
-        let ds_idx = self.rng.categorical(&weights);
-        let (kind, _) = self.cfg.mix[ds_idx];
+        let mix = self.active_mix();
+        let weights: Vec<f64> = mix.iter().map(|(_, w)| *w).collect();
+        let kind = mix[self.rng.categorical(&weights)].0;
         let topic_ids: Vec<usize> = self
             .topics
             .iter()
@@ -296,9 +395,11 @@ impl WorkloadGen {
     }
 
     /// Sample a request from a specific topic (fig4 uses this to replay one
-    /// prompt many times).
+    /// prompt many times). Post-drift, the topic's length profile comes
+    /// from the remapped set — its embedding direction and stem do not
+    /// change, which is exactly what poisons stale history.
     pub fn sample_from_topic(&mut self, topic_idx: usize, arrival: f64) -> Request {
-        let topic = self.topics[topic_idx].clone();
+        let topic = self.active_topics()[topic_idx].clone();
         let input_len = topic.sample_input(&mut self.rng);
         let true_output_len = topic.sample_output(&mut self.rng);
         let embedding = topic.direction.perturbed(self.cfg.embed_sigma, &mut self.rng);
@@ -458,6 +559,75 @@ mod tests {
         let b = gen(DatasetKind::ShareGpt, 50);
         for (x, y) in a.requests.iter().zip(&b.requests) {
             assert_eq!(x.input_len, y.input_len);
+            assert_eq!(x.true_output_len, y.true_output_len);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn drift_remaps_topic_lengths_but_not_embeddings() {
+        let mut cfg = WorkloadConfig::single(DatasetKind::Write);
+        cfg.n_requests = 1200;
+        cfg.drift.at_fraction = 0.5;
+        let w = WorkloadGen::new(cfg.clone(), 11).generate();
+        let base = WorkloadGen::new(
+            WorkloadConfig { drift: Default::default(), ..cfg.clone() },
+            11,
+        )
+        .generate();
+        // pre-drift segment is byte-identical to the undrifted trace
+        for (a, b) in w.requests[..600].iter().zip(&base.requests[..600]) {
+            assert_eq!(a.true_output_len, b.true_output_len);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.embedding, b.embedding);
+        }
+        // arrivals and topic assignment never change — only the lengths do
+        let mut changed = 0;
+        for (a, b) in w.requests[600..].iter().zip(&base.requests[600..]) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.topic, b.topic);
+            assert_eq!(a.embedding, b.embedding);
+            if a.true_output_len != b.true_output_len {
+                changed += 1;
+            }
+        }
+        assert!(changed > 300, "only {changed}/600 post-drift lengths changed");
+        // per-topic ground truth actually moved for at least half the topics
+        let mut moved = 0;
+        let mut total = 0;
+        for (post, pre) in w.requests[600..].iter().zip(&base.requests[600..]) {
+            if post.topic == pre.topic && total < 50 {
+                let d = post.true_dist.as_ref().unwrap();
+                let p = pre.true_dist.as_ref().unwrap();
+                total += 1;
+                if d.w1_distance(p) > 1.0 {
+                    moved += 1;
+                }
+            }
+        }
+        assert!(moved * 2 >= total, "true_dist moved for {moved}/{total}");
+    }
+
+    #[test]
+    fn drift_mix_switches_datasets_post_shift() {
+        let mut cfg = WorkloadConfig::single(DatasetKind::ShareGpt);
+        cfg.n_requests = 400;
+        cfg.drift.at_fraction = 0.5;
+        cfg.drift.remap_topics = false;
+        cfg.drift.mix = vec![(DatasetKind::Alpaca, 1.0)];
+        let w = WorkloadGen::new(cfg, 13).generate();
+        assert!(w.requests[..200].iter().all(|r| r.dataset == DatasetKind::ShareGpt));
+        assert!(w.requests[200..].iter().all(|r| r.dataset == DatasetKind::Alpaca));
+    }
+
+    #[test]
+    fn drift_disabled_is_identity() {
+        let mut cfg = WorkloadConfig::single(DatasetKind::ShareGpt);
+        cfg.n_requests = 150;
+        let a = WorkloadGen::new(cfg.clone(), 3).generate();
+        cfg.drift.remap_topics = true; // at_fraction still 0 => off
+        let b = WorkloadGen::new(cfg, 3).generate();
+        for (x, y) in a.requests.iter().zip(&b.requests) {
             assert_eq!(x.true_output_len, y.true_output_len);
             assert_eq!(x.arrival, y.arrival);
         }

@@ -236,6 +236,7 @@ fn sagesched_priorities_finite_and_refresh_across_buckets() {
             pred_lengths: &lengths,
             cost_dist: &cost_dist,
             point_pred: lengths.mean(),
+            rank_pred: lengths.mean(),
             consumed_cost: cm.consumed(req.input_len, generated),
             now: generated as f64,
         };

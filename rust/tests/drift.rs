@@ -1,0 +1,192 @@
+//! Workload-drift regression tests: the online ranking predictor must
+//! re-adapt after a mid-run request-mix shift while the static history
+//! window stays poisoned by stale observations, and the cluster's shared
+//! predictor must feed each completed request into `observe()` at most
+//! once no matter how many replicas touched it (failure re-route,
+//! scale-in drain/migration, stealing).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use sagesched::cluster::EventCluster;
+use sagesched::config::{
+    DatasetKind, ExperimentConfig, FailureEvent, PredictorKind, RouterKind,
+    ScaleStep, WorkloadConfig,
+};
+use sagesched::core::Request;
+use sagesched::distribution::LengthDist;
+use sagesched::predictor::{make_predictor, Predictor, PredictorStats};
+use sagesched::util::stats::KendallTau;
+use sagesched::workload::WorkloadGen;
+
+/// Kendall's tau of a predictor's rank scores over one stream segment,
+/// while the predictor keeps learning online (predict-then-observe, the
+/// serving order).
+fn run_segmented(
+    predictor: &mut dyn Predictor,
+    requests: &[Request],
+    segments: &[std::ops::Range<usize>],
+) -> Vec<f64> {
+    let mut taus: Vec<KendallTau> =
+        segments.iter().map(|s| KendallTau::new(s.len().max(2))).collect();
+    for (i, r) in requests.iter().enumerate() {
+        let rank = predictor.predict_rank(r);
+        for (t, s) in taus.iter_mut().zip(segments) {
+            if s.contains(&i) {
+                t.push(rank, r.true_output_len as f64);
+            }
+        }
+        predictor.observe(r, r.true_output_len);
+    }
+    taus.iter().map(|t| t.tau()).collect()
+}
+
+#[test]
+fn ranking_predictor_recovers_after_drift_history_does_not() {
+    // One drifted stream, two predictors. The drift remaps topic -> length
+    // profile while leaving embeddings untouched, so the 10k history
+    // window keeps retrieving same-topic neighbours whose recorded lengths
+    // come from the dead regime (plus the offline pre-warm corpus, which
+    // is pre-drift by construction). The ranking predictor's pairwise
+    // updates are driven by fresh completions with stale pairs decayed
+    // out, so its ordering quality must come back.
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload = WorkloadConfig::single(DatasetKind::ShareGpt);
+    cfg.workload.n_requests = 2_000;
+    cfg.workload.drift.at_fraction = 0.3; // shift at request 600
+    let requests = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate().requests;
+    let pre = 300..600; // trained, still pre-drift
+    let post = 1_700..2_000; // 1100+ post-drift completions to adapt on
+    let mut taus = HashMap::new();
+    for kind in [PredictorKind::History, PredictorKind::Ranking] {
+        let mut p = make_predictor(
+            kind,
+            cfg.workload.embed_dim,
+            cfg.history_capacity,
+            cfg.similarity_threshold,
+            cfg.seed,
+        );
+        sagesched::serve::prewarm_predictor(p.as_mut(), &cfg);
+        let t = run_segmented(p.as_mut(), &requests, &[pre.clone(), post.clone()]);
+        taus.insert(kind.name(), t);
+    }
+    let (hist_pre, hist_post) = (taus["history"][0], taus["history"][1]);
+    let (rank_pre, rank_post) = (taus["ranking"][0], taus["ranking"][1]);
+    assert!(
+        hist_pre > 0.1 && rank_pre > 0.1,
+        "both predictors must rank usefully before the drift \
+         (history {hist_pre:.3}, ranking {rank_pre:.3})"
+    );
+    assert!(
+        rank_post >= 0.8 * rank_pre,
+        "ranking predictor failed to re-adapt: tau {rank_pre:.3} -> {rank_post:.3}"
+    );
+    assert!(
+        hist_post < 0.8 * hist_pre,
+        "history window unexpectedly recovered (tau {hist_pre:.3} -> \
+         {hist_post:.3}) — is the drift actually poisoning retrieval?"
+    );
+}
+
+#[test]
+fn drift_flag_keeps_run_deterministic_and_reports_tau() {
+    // same seed + drift => byte-identical tau/counters; the report must
+    // actually carry the new predictor-quality fields
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.n_requests = 200;
+    cfg.workload.rps = 20.0;
+    cfg.workload.drift.at_fraction = 0.5;
+    cfg.history_prewarm = 200;
+    cfg.predictor = PredictorKind::Ranking;
+    let a = sagesched::serve::run_experiment(&cfg).unwrap();
+    let b = sagesched::serve::run_experiment(&cfg).unwrap();
+    assert_eq!(a.pred_tau, b.pred_tau);
+    assert_eq!(a.pred_tau_n, b.pred_tau_n);
+    assert_eq!(a.pred_cold, b.pred_cold);
+    assert!(a.pred_tau_n > 0, "completions must feed the tau window");
+    assert!(a.pred_tau.is_finite());
+    let json = a.to_json().to_string();
+    for key in ["pred_tau", "pred_tau_n", "pred_threshold_hits", "pred_fallback", "pred_cold"] {
+        assert!(json.contains(key), "report JSON lost {key}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared-predictor observation dedup across replicas
+// ---------------------------------------------------------------------------
+
+/// Wraps a predictor and counts `observe()` calls per request id.
+struct CountingPredictor {
+    inner: Box<dyn Predictor>,
+    observed: Arc<Mutex<HashMap<u64, u32>>>,
+}
+
+impl Predictor for CountingPredictor {
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+    fn predict(&mut self, req: &Request) -> LengthDist {
+        self.inner.predict(req)
+    }
+    fn predict_point(&mut self, req: &Request) -> f64 {
+        self.inner.predict_point(req)
+    }
+    fn predict_rank(&mut self, req: &Request) -> f64 {
+        self.inner.predict_rank(req)
+    }
+    fn observe(&mut self, req: &Request, output_len: u32) {
+        *self.observed.lock().unwrap().entry(req.id).or_insert(0) += 1;
+        self.inner.observe(req, output_len);
+    }
+    fn stats(&self) -> PredictorStats {
+        self.inner.stats()
+    }
+}
+
+#[test]
+fn cluster_shared_predictor_observes_each_request_at_most_once() {
+    // a run that exercises every re-dispatch path at once — replica
+    // failure (re-route), a scripted scale-in with migration-cost-aware
+    // drain, and a slow replica for work stealing — must still feed each
+    // completed request into the shared predictor exactly once
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.n_requests = 160;
+    cfg.workload.rps = 24.0;
+    cfg.warmup_fraction = 0.0;
+    cfg.history_prewarm = 0;
+    cfg.cluster.replicas = 4;
+    cfg.cluster.speeds = vec![1.0, 1.0, 1.0, 0.25];
+    cfg.cluster.failures = vec![FailureEvent { replica: 0, at: 1.5, duration: 3.0 }];
+    cfg.cluster.autoscale.kind = sagesched::config::AutoscaleKind::Step;
+    cfg.cluster.autoscale.steps = vec![ScaleStep { at: 4.0, target: 2 }];
+    cfg.cluster.autoscale.min_replicas = 2;
+    cfg.cluster.migration_kv_per_token = 0.5;
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::CostAware);
+    let observed = Arc::new(Mutex::new(HashMap::new()));
+    cluster.predictor = Box::new(CountingPredictor {
+        inner: make_predictor(
+            cfg.predictor,
+            cfg.workload.embed_dim,
+            cfg.history_capacity,
+            cfg.similarity_threshold,
+            cfg.seed,
+        ),
+        observed: Arc::clone(&observed),
+    });
+    cluster.run(workload.requests).unwrap();
+    let completed = cluster.completed();
+    assert!(completed > 0);
+    let counts = observed.lock().unwrap();
+    let doubles: Vec<(&u64, &u32)> =
+        counts.iter().filter(|(_, &n)| n > 1).collect();
+    assert!(
+        doubles.is_empty(),
+        "shared predictor observed requests more than once: {doubles:?}"
+    );
+    assert_eq!(
+        counts.len(),
+        completed,
+        "every completion must reach the shared predictor exactly once"
+    );
+}

@@ -682,3 +682,105 @@ fn prop_kernel_class_ranks_order_capacity_before_decisions() {
         assert_eq!(classes, vec![0, 1, 2, 3]);
     });
 }
+
+// ---------------------------------------------------------------------------
+// Kendall-tau estimator — it now scores every predictor's ordering quality
+// in RunReport/ClusterReport, so its range, sign, and windowing are pinned
+// by properties rather than the unit spot checks alone
+// ---------------------------------------------------------------------------
+
+use sagesched::util::stats::KendallTau;
+
+#[test]
+fn prop_kendall_tau_perfect_ordering_scores_one() {
+    // any strictly increasing monotone transform of the actuals is a
+    // perfect ranking: tau must be exactly 1 regardless of the values
+    for_all(200, |rng| {
+        let n = 2 + rng.below(60) as usize;
+        let scale = rng.range_f64(0.5, 2.0);
+        let mut t = KendallTau::new(n);
+        let mut prev = 0.0;
+        for _ in 0..n {
+            prev += rng.range_f64(0.1, 10.0);
+            let pred = prev * scale + prev * prev * 0.01;
+            t.push(pred, prev);
+        }
+        assert!((t.tau() - 1.0).abs() < 1e-12, "tau {} != 1", t.tau());
+    });
+}
+
+#[test]
+fn prop_kendall_tau_inverted_ordering_scores_minus_one() {
+    for_all(200, |rng| {
+        let n = 2 + rng.below(60) as usize;
+        let mut t = KendallTau::new(n);
+        let mut prev = 0.0;
+        for _ in 0..n {
+            prev += rng.range_f64(0.1, 10.0);
+            t.push(-prev, prev);
+        }
+        assert!((t.tau() + 1.0).abs() < 1e-12, "tau {} != -1", t.tau());
+    });
+}
+
+#[test]
+fn prop_kendall_tau_bounded_and_antisymmetric() {
+    // |tau| <= 1 on arbitrary data, and negating the predictions negates
+    // tau exactly (ties are excluded from both numerator and denominator)
+    for_all(200, |rng| {
+        let n = 2 + rng.below(80) as usize;
+        let pairs: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.normal(), (rng.below(20) + 1) as f64))
+            .collect();
+        let mut t = KendallTau::new(n);
+        let mut neg = KendallTau::new(n);
+        for &(p, a) in &pairs {
+            t.push(p, a);
+            neg.push(-p, a);
+        }
+        let tau = t.tau();
+        assert!((-1.0..=1.0).contains(&tau), "tau {tau} out of range");
+        assert!((tau + neg.tau()).abs() < 1e-12, "not antisymmetric");
+    });
+}
+
+#[test]
+fn prop_kendall_tau_independent_predictions_near_zero() {
+    // with 200 pairs the null std of tau is ~0.047; |tau| < 0.35 is a
+    // > 7-sigma bound, safe for every fixed seed the harness generates
+    for_all(60, |rng| {
+        let mut t = KendallTau::new(256);
+        for _ in 0..200 {
+            t.push(rng.normal(), rng.normal());
+        }
+        let tau = t.tau();
+        assert!(tau.abs() < 0.35, "independent data scored tau {tau}");
+    });
+}
+
+#[test]
+fn prop_kendall_tau_window_forgets_old_regime() {
+    // fill the window with an inverted regime, then push one full window
+    // of perfectly-ranked pairs: the estimate must recover to exactly 1,
+    // i.e. the stale regime is fully evicted (windowed decay)
+    for_all(100, |rng| {
+        let cap = 2 + rng.below(40) as usize;
+        let mut t = KendallTau::new(cap);
+        let mut x = 0.0;
+        for _ in 0..cap {
+            x += rng.range_f64(0.1, 5.0);
+            t.push(-x, x);
+        }
+        assert!((t.tau() + 1.0).abs() < 1e-12);
+        for _ in 0..cap {
+            x += rng.range_f64(0.1, 5.0);
+            t.push(x, x);
+        }
+        assert_eq!(t.len(), cap, "window must stay at capacity");
+        assert!(
+            (t.tau() - 1.0).abs() < 1e-12,
+            "stale regime survived the window: tau {}",
+            t.tau()
+        );
+    });
+}
