@@ -206,6 +206,7 @@ fn fig2b(_ctx: &Ctx) {
         embedding: sagesched::embedding::Embedding::normalize(vec![1.0, 0.0]),
         true_dist: Some(LengthDist::point(output as f64)),
         slo: sagesched::slo::SloClass::Standard,
+        prefix_key: Vec::new(),
     };
     // A: shortest output but a giant prompt — it monopolizes the KV pool.
     // Seven chat requests (slightly longer outputs, tiny prompts) could run
@@ -381,6 +382,7 @@ fn fig5b(ctx: &Ctx) {
             embedding: sagesched::embedding::Embedding::normalize(vec![1.0; 4]),
             true_dist: None,
             slo: sagesched::slo::SloClass::Standard,
+            prefix_key: Vec::new(),
         };
         eng.max_output = 240;
         let _ = eng.prefill(&req).unwrap();
@@ -1245,6 +1247,7 @@ fn fig1a_real(ctx: &Ctx) {
                 embedding: sagesched::embedding::Embedding::normalize(vec![1.0; 4]),
                 true_dist: None,
                 slo: sagesched::slo::SloClass::Standard,
+                prefix_key: Vec::new(),
             };
             let pr = eng.prefill(&req).unwrap();
             let mut generated = 1u32;
@@ -1273,6 +1276,78 @@ fn fig1a_real(ctx: &Ctx) {
         ));
     }
     write_csv("fig1a_real", "prompt,trials,min,median,max", &rows);
+}
+
+// ===========================================================================
+// Fig 16: session workloads — cache-affinity routing vs least-loaded as the
+// share of session (shared-prefix) traffic rises
+// ===========================================================================
+fn fig16(ctx: &Ctx) {
+    use sagesched::config::RouterKind;
+    println!("\n=== fig16: shared-prefix sessions + cache-affinity routing ===");
+    // Multi-turn sessions over a large shared system prompt: every turn
+    // re-submits the conversation, so a router that lands a session's turns
+    // on the replica already holding its prefix blocks skips most of the
+    // prefill. Sweep the fraction of arrivals that start sessions and
+    // compare session-blind least-loaded against the cache-affinity router
+    // on the same seeded workload.
+    let mut base = base_cfg();
+    base.cluster.replicas = 3;
+    base.workload.rps = 24.0;
+    base.workload.n_requests = ctx.n_requests(900);
+    base.slo.class_aware = true;
+    base.workload.sessions.enabled = true;
+    base.workload.sessions.system_prompt_tokens = 800;
+    base.workload.sessions.turns_mean = 5.0;
+    base.workload.sessions.think_mean = 3.0;
+    println!(
+        "| prefix share | router | int TTFT mean | int TTFT p90 | hit rate | \
+         prefill tokens saved | TTLT mean |"
+    );
+    println!("|---|---|---|---|---|---|---|");
+    let mut rows = Vec::new();
+    for share in [0.0, 0.3, 0.6, 0.9] {
+        let mut cfg = base.clone();
+        cfg.workload.sessions.prefix_share = share;
+        for router in [RouterKind::LeastLoaded, RouterKind::CacheAffinity] {
+            let r = sagesched::cluster::run_router_experiment(&cfg, router)
+                .expect("fig16 session experiment failed");
+            let (ttft_mean, ttft_p90) = r
+                .aggregate
+                .slo
+                .get("interactive")
+                .map(|s| (s.ttft.mean, s.ttft.p90))
+                .unwrap_or((0.0, 0.0));
+            println!(
+                "| {share:.1} | {} | {:.3} | {:.3} | {:.3} | {} | {:.3} |",
+                router.name(),
+                ttft_mean,
+                ttft_p90,
+                r.aggregate.kv_prefix_hit_rate(),
+                r.aggregate.kv_prefill_tokens_saved,
+                r.aggregate.ttlt.mean,
+            );
+            rows.push(format!(
+                "{share},{},{:.5},{:.5},{:.5},{},{:.5}",
+                router.name(),
+                ttft_mean,
+                ttft_p90,
+                r.aggregate.kv_prefix_hit_rate(),
+                r.aggregate.kv_prefill_tokens_saved,
+                r.aggregate.ttlt.mean,
+            ));
+        }
+    }
+    write_csv(
+        "fig16",
+        "prefix_share,router,interactive_ttft_mean,interactive_ttft_p90,\
+         prefix_hit_rate,prefill_tokens_saved,ttlt_mean",
+        &rows,
+    );
+    println!(
+        "  (rising prefix share: hit rate and tokens saved climb, and the \
+         cache-affinity router's warm placements cut interactive TTFT)"
+    );
 }
 
 fn main() {
@@ -1308,6 +1383,7 @@ fn main() {
         ("fig13c", fig13c),
         ("fig14", fig14),
         ("fig15", fig15),
+        ("fig16", fig16),
     ];
     let t0 = std::time::Instant::now();
     for (name, f) in &all {

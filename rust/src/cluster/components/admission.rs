@@ -50,8 +50,33 @@ impl SloAdmission {
         } else {
             1.0
         };
-        let views = ctx.views();
+        // per-request warmth: probe each routable replica's prefix index so
+        // cache-affinity scoring (and the backlog debit below) sees how
+        // much prefill this request would skip there. The probe is
+        // read-only; requests without a prefix chain skip it entirely.
+        let views = {
+            let mut vs = ctx.views();
+            if !req.prefix_key.is_empty() {
+                for v in &mut vs {
+                    let warm = ctx.replicas[v.id]
+                        .coord
+                        .kv
+                        .cached_prefix_tokens(&req.prefix_key, req.input_len as usize)
+                        as u32;
+                    if warm > 0 {
+                        v.warm_prefix_tokens = warm;
+                        let warm_cost = ctx
+                            .cost
+                            .cost_dist(req.input_len.saturating_sub(warm), &pred)
+                            .mean();
+                        v.warm_cost_saving = (pcost - warm_cost).max(0.0);
+                    }
+                }
+            }
+            vs
+        };
         let mut target = None;
+        let mut warm_saving = 0.0;
         if views.is_empty() {
             if keep_on.is_none() {
                 anyhow::bail!(
@@ -76,6 +101,7 @@ impl SloAdmission {
             let has_room = ctx.replicas[i].coord.admits(req.slo);
             if has_room || keep_on.is_none() {
                 target = Some(i);
+                warm_saving = views[slot].warm_cost_saving;
             }
         }
         let moved = target.is_some();
@@ -93,13 +119,18 @@ impl SloAdmission {
         };
         debug_assert!(accepted || keep_on.is_none(), "drain re-admission must fit");
         if accepted {
+            // the warm replica serves this request cheaper than the cold
+            // prediction says: book the debited cost so the backlog the
+            // routers/autoscaler see reflects the post-hit work (released
+            // symmetrically on completion — InFlight carries the same value)
+            let eff_cost = (pcost - warm_saving).max(0.0);
             ctx.in_flight.insert(
                 id,
-                InFlight { replica: i, cost: pcost, var: pvar, weight, rank, req },
+                InFlight { replica: i, cost: eff_cost, var: pvar, weight, rank, req },
             );
-            ctx.backlog[i] += pcost;
+            ctx.backlog[i] += eff_cost;
             ctx.backlog_var[i] += pvar;
-            ctx.backlog_weighted += weight * pcost;
+            ctx.backlog_weighted += weight * eff_cost;
             ctx.backlog_weighted_var += weight * weight * pvar;
             ctx.routed[i] += 1;
             ctx.steal_dirty = true; // fresh queued work: steal verdicts change

@@ -86,7 +86,33 @@ impl ClusterComponent for WorkStealer {
                 for &(id, input_len, _) in meta.iter().take(take) {
                     let own = ctx.in_flight.get(&id).map(|f| f.cost).unwrap_or(0.0);
                     let benefit = backlog_v / speed_v - (backlog_t + own) / speed_t;
-                    if transfer > 0.0 && benefit <= transfer * input_len as f64 {
+                    // abandoning warm prefix state is a real cost: tokens
+                    // cached on the victim but not on the thief would have
+                    // to be re-prefilled after the move, so they join the
+                    // prompt in the transfer penalty
+                    let warm_lost = {
+                        let chain = ctx.replicas[v]
+                            .coord
+                            .queued_request(id)
+                            .map(|r| r.prefix_key.clone())
+                            .unwrap_or_default();
+                        if chain.is_empty() {
+                            0
+                        } else {
+                            let on_victim = ctx.replicas[v]
+                                .coord
+                                .kv
+                                .cached_prefix_tokens(&chain, input_len as usize);
+                            let on_thief = ctx.replicas[thief]
+                                .coord
+                                .kv
+                                .cached_prefix_tokens(&chain, input_len as usize);
+                            on_victim.saturating_sub(on_thief)
+                        }
+                    };
+                    if transfer > 0.0
+                        && benefit <= transfer * (input_len as f64 + warm_lost as f64)
+                    {
                         ctx.steal_rejected.insert(id);
                         continue;
                     }

@@ -331,6 +331,10 @@ impl ClusterCtx {
                 max_batch: r.coord.engine.max_batch(),
                 predicted_backlog: self.backlog[i],
                 predicted_backlog_var: self.backlog_var[i],
+                // warmth is per-request: the admission path overwrites
+                // these after probing each replica's prefix index
+                warm_prefix_tokens: 0,
+                warm_cost_saving: 0.0,
             })
             .collect()
     }

@@ -361,11 +361,29 @@ impl ClusterCtx {
             // route over the replicas whose total KV can hold the prefix
             // (non-empty: selection above required a fitting target)
             let needed = Self::blocks_for(m.req.input_len, m.generated);
-            let eligible: Vec<ReplicaView> = self
+            let mut eligible: Vec<ReplicaView> = self
                 .views()
                 .into_iter()
                 .filter(|v| v.kv_total_blocks >= needed)
                 .collect();
+            // warmth for the cache-affinity router: a target already
+            // holding this session's shared prefix re-prefills less after
+            // the move. The saving is priced as the consumed-cost of the
+            // warm tokens' prefill (no length distribution survives to this
+            // path, so the prefill term is the honest estimate).
+            if !m.req.prefix_key.is_empty() {
+                for v in &mut eligible {
+                    let warm = self.replicas[v.id]
+                        .coord
+                        .kv
+                        .cached_prefix_tokens(&m.req.prefix_key, m.req.input_len as usize)
+                        as u32;
+                    if warm > 0 {
+                        v.warm_prefix_tokens = warm;
+                        v.warm_cost_saving = self.cost.consumed(warm, 0);
+                    }
+                }
+            }
             if eligible.is_empty() {
                 // belt-and-braces: finish in place on the draining victim
                 let accepted = self.replicas[victim].coord.submit_migrated(m);

@@ -43,6 +43,16 @@ pub struct ReplicaView {
     /// moment the distribution-aware router and autoscaler consume (sums of
     /// independent request costs: means and variances both add).
     pub predicted_backlog_var: f64,
+    /// Prefix tokens of the *request being routed* already resident in this
+    /// replica's KV cache (from `KvManager::cached_prefix_tokens`). Zero
+    /// for requests without a prefix chain and for views built outside the
+    /// dispatch path (autoscaler sizing, work stealing's generic views).
+    pub warm_prefix_tokens: u32,
+    /// Predicted service-cost saving (cost-model units) if this request
+    /// lands on this replica and reuses its warm prefix — the difference
+    /// between the cold predicted cost and the cost with the warm prefix
+    /// tokens removed from the prefill term. Zero when nothing is warm.
+    pub warm_cost_saving: f64,
 }
 
 impl ReplicaView {
@@ -205,6 +215,41 @@ impl Router for QuantileCostRouter {
     }
 }
 
+/// Session-sticky routing that trades cache affinity against load: the
+/// effective cost of placing the request on replica `r` is its outstanding
+/// predicted backlog plus this request's predicted cost *minus* what the
+/// replica's warm prefix state saves, all normalized by speed:
+///
+/// ```text
+/// score(r) = (backlog(r) + predicted_cost − warm_cost_saving(r)) / speed(r)
+/// ```
+///
+/// A replica holding a session's shared prefix therefore keeps attracting
+/// that session's turns — until its backlog exceeds a colder replica's by
+/// more than the prefill work the warm prefix saves, at which point the
+/// router willingly pays the cold prefill to rebalance. Requests with no
+/// warm state anywhere degrade to exactly [`CostAwareRouter`] + the
+/// request's own cost (an argmin-invariant constant shift only when speeds
+/// are equal; under heterogeneous speeds it also steers big requests to
+/// fast replicas).
+#[derive(Default)]
+pub struct CacheAffinityRouter;
+
+impl Router for CacheAffinityRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::CacheAffinity
+    }
+
+    fn route(&mut self, _req: &Request, predicted_cost: f64, replicas: &[ReplicaView]) -> usize {
+        argmin(replicas.iter().map(|r| {
+            // saving is capped by the request's own cost: stale probes can
+            // not make a placement look better than free
+            let saving = r.warm_cost_saving.clamp(0.0, predicted_cost.max(0.0));
+            (r.predicted_backlog + predicted_cost - saving) / r.speed.max(1e-9)
+        }))
+    }
+}
+
 /// Build a router from its kind; `quantile` parameterizes
 /// [`RouterKind::QuantileCost`] (ignored by the others).
 pub fn make_router(kind: RouterKind, quantile: f64) -> Box<dyn Router> {
@@ -214,6 +259,7 @@ pub fn make_router(kind: RouterKind, quantile: f64) -> Box<dyn Router> {
         RouterKind::LeastKv => Box::new(LeastKvRouter),
         RouterKind::CostAware => Box::new(CostAwareRouter),
         RouterKind::QuantileCost => Box::new(QuantileCostRouter::new(quantile)),
+        RouterKind::CacheAffinity => Box::new(CacheAffinityRouter),
     }
 }
 
@@ -294,6 +340,8 @@ mod tests {
             max_batch: 8,
             predicted_backlog: backlog,
             predicted_backlog_var: 0.0,
+            warm_prefix_tokens: 0,
+            warm_cost_saving: 0.0,
         }
     }
 
@@ -391,6 +439,42 @@ mod tests {
         // at q=0.5 (z=0) it degrades to exactly the mean router's choice
         let mut q50 = QuantileCostRouter::new(0.5);
         assert_eq!(q50.route(&r, 1.0, &views), 0);
+    }
+
+    #[test]
+    fn cache_affinity_sticks_to_warm_replicas_until_load_outweighs_saving() {
+        let r = any_req();
+        let mut ca = CacheAffinityRouter;
+        // replica 1 holds the session's warm prefix (saving 30); backlogs
+        // are close, so stickiness wins: 100+50 = 150 vs 120+50-30 = 140
+        let mut views = vec![view(0, 2, 10, 100.0, 1.0), view(1, 4, 40, 120.0, 1.0)];
+        views[1].warm_prefix_tokens = 256;
+        views[1].warm_cost_saving = 30.0;
+        assert_eq!(ca.route(&r, 50.0, &views), 1);
+        // once the warm replica's backlog grows past the saving, the router
+        // pays the cold prefill: 100+50 = 150 < 200+50-30 = 220
+        views[1].predicted_backlog = 200.0;
+        assert_eq!(ca.route(&r, 50.0, &views), 0);
+        // with no warm state anywhere it matches the cost-aware choice
+        views[1].warm_cost_saving = 0.0;
+        assert_eq!(ca.route(&r, 50.0, &views), CostAwareRouter.route(&r, 50.0, &views));
+    }
+
+    #[test]
+    fn cache_affinity_caps_saving_at_the_request_cost() {
+        // a stale/overlarge saving must not make a loaded replica look
+        // better than free work would: cap at predicted_cost
+        let r = any_req();
+        let mut ca = CacheAffinityRouter;
+        let mut views = vec![view(0, 1, 10, 100.0, 1.0), view(1, 8, 90, 140.0, 1.0)];
+        views[1].warm_cost_saving = 1e9;
+        // capped: 100+50 = 150 vs 140+50-50 = 140 -> still replica 1, but
+        // by the capped margin, not the raw 1e9
+        assert_eq!(ca.route(&r, 50.0, &views), 1);
+        views[1].predicted_backlog = 200.0;
+        // 100+50 = 150 < 200+50-50 = 200 -> rebalances despite the huge
+        // claimed saving
+        assert_eq!(ca.route(&r, 50.0, &views), 0);
     }
 
     #[test]

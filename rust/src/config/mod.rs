@@ -276,15 +276,23 @@ pub enum RouterKind {
     /// distribution-aware router: replicas holding heavy-tailed work repel
     /// traffic even when their mean backlog looks ordinary.
     QuantileCost,
+    /// Session stickiness vs load balance: each replica's predicted-cost
+    /// backlog is credited with the prefill cost its warm prefix cache
+    /// would save this request (probed through the shared-prefix KV
+    /// index), so a session's turns keep landing where their history is
+    /// warm — until the imbalance outweighs the recompute the cold
+    /// replica would pay.
+    CacheAffinity,
 }
 
 impl RouterKind {
-    pub const ALL: [RouterKind; 5] = [
+    pub const ALL: [RouterKind; 6] = [
         RouterKind::RoundRobin,
         RouterKind::LeastLoaded,
         RouterKind::LeastKv,
         RouterKind::CostAware,
         RouterKind::QuantileCost,
+        RouterKind::CacheAffinity,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -294,6 +302,7 @@ impl RouterKind {
             RouterKind::LeastKv => "least-kv",
             RouterKind::CostAware => "cost-aware",
             RouterKind::QuantileCost => "quantile-cost",
+            RouterKind::CacheAffinity => "cache-affinity",
         }
     }
 
@@ -930,6 +939,73 @@ impl DriftConfig {
     }
 }
 
+/// Multi-turn session traffic (see [`crate::workload`]): instead of
+/// independent single-shot requests, a fraction of arrivals *initiate
+/// sessions* — users who send a turn, wait out a think time, and come back
+/// with the conversation so far as a growing shared prefix. Turns carry an
+/// explicit prefix token-key chain on [`crate::core::Request`], which is
+/// what the shared-prefix KV cache and the cache-affinity router consume.
+/// Session structure is drawn from a dedicated RNG stream: with
+/// `enabled: false` (the default) existing seeded traces are byte-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionConfig {
+    /// Master switch; off = pure single-shot traffic, exactly as before.
+    pub enabled: bool,
+    /// Probability an arrival initiates a session rather than a single-shot
+    /// request. Higher = more traffic shares prefixes (fig16's x-axis).
+    pub prefix_share: f64,
+    /// Mean turns per session (geometric).
+    pub turns_mean: f64,
+    /// Mean user think time between turns, seconds (exponential).
+    pub think_mean: f64,
+    /// Tokens of the per-dataset shared system prompt every session of a
+    /// dataset pool starts from (the cross-session shareable prefix).
+    pub system_prompt_tokens: u32,
+    /// Distinct system prompts per dataset (sessions draw one uniformly;
+    /// fewer pools = more cross-session sharing).
+    pub prompts_per_dataset: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            enabled: false,
+            prefix_share: 0.6,
+            turns_mean: 4.0,
+            think_mean: 6.0,
+            system_prompt_tokens: 256,
+            prompts_per_dataset: 4,
+        }
+    }
+}
+
+impl SessionConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.prefix_share) {
+            return Err(format!(
+                "sessions.prefix_share must be in [0,1], got {}",
+                self.prefix_share
+            ));
+        }
+        if self.turns_mean < 1.0 {
+            return Err(format!(
+                "sessions.turns_mean must be >= 1, got {}",
+                self.turns_mean
+            ));
+        }
+        if self.think_mean <= 0.0 {
+            return Err(format!(
+                "sessions.think_mean must be > 0, got {}",
+                self.think_mean
+            ));
+        }
+        if self.prompts_per_dataset == 0 {
+            return Err("sessions.prompts_per_dataset must be >= 1".to_string());
+        }
+        Ok(())
+    }
+}
+
 /// Workload shape: dataset mixture, arrival process, size.
 #[derive(Clone, Debug)]
 pub struct WorkloadConfig {
@@ -959,6 +1035,8 @@ pub struct WorkloadConfig {
     pub topic_seed: u64,
     /// Mid-run request-mix shift (disabled by default).
     pub drift: DriftConfig,
+    /// Multi-turn session traffic (disabled by default).
+    pub sessions: SessionConfig,
 }
 
 impl Default for WorkloadConfig {
@@ -982,6 +1060,7 @@ impl Default for WorkloadConfig {
             embed_dim: 64,
             topic_seed: 42,
             drift: DriftConfig::default(),
+            sessions: SessionConfig::default(),
         }
     }
 }
@@ -1167,6 +1246,20 @@ impl ExperimentConfig {
                     drift.mix = mix;
                 }
                 drift.validate().map_err(|e| format!("workload.{e}"))?;
+            }
+            if let Some(s) = w.get("sessions") {
+                let se = &mut cfg.workload.sessions;
+                if let Some(enabled) = s.get("enabled").and_then(Json::as_bool) {
+                    se.enabled = enabled;
+                }
+                se.prefix_share = s.f64_or("prefix_share", se.prefix_share);
+                se.turns_mean = s.f64_or("turns_mean", se.turns_mean);
+                se.think_mean = s.f64_or("think_mean", se.think_mean);
+                se.system_prompt_tokens =
+                    s.f64_or("system_prompt_tokens", se.system_prompt_tokens as f64) as u32;
+                se.prompts_per_dataset =
+                    s.f64_or("prompts_per_dataset", se.prompts_per_dataset as f64) as usize;
+                se.validate().map_err(|e| format!("workload.{e}"))?;
             }
         }
         if let Some(s) = j.get("slo") {

@@ -8,6 +8,13 @@ use crate::slo::SloClass;
 /// Unique request identifier (monotone per workload).
 pub type RequestId = u64;
 
+/// KV block granularity in tokens (vLLM default page size). Lives in
+/// `core` because both the workload generator (prefix token-key chains are
+/// per-block) and the serving stack (block math) need it without a
+/// dependency cycle; [`crate::serve`] re-exports it for existing call
+/// sites.
+pub const KV_BLOCK_TOKENS: usize = 16;
+
 /// An inference request as submitted to the coordinator.
 ///
 /// `true_output_len` / `true_dist` are *hidden ground truth* produced by the
@@ -37,6 +44,14 @@ pub struct Request {
     /// Latency tier this request was submitted under (stamped by the
     /// workload generator; see [`crate::slo`]).
     pub slo: SloClass,
+    /// Prefix token-key chain: one key per [`KV_BLOCK_TOKENS`]-token block
+    /// of this request's full token sequence (prompt + reply), identifying
+    /// the block's content. Two requests whose chains agree on a leading
+    /// run share that prefix verbatim (same system prompt, same
+    /// conversation history), so the KV cache can serve those blocks
+    /// without re-prefilling. Empty for single-shot requests — every
+    /// prefix-reuse path degenerates to the private-blocks behavior.
+    pub prefix_key: Vec<u64>,
 }
 
 /// Lifecycle phase of a request inside the coordinator.

@@ -86,6 +86,19 @@ pub trait Engine: Send {
     /// Run prefill for a request (exclusive; no decode overlaps).
     fn prefill(&mut self, req: &Request) -> anyhow::Result<PrefillResult>;
 
+    /// Run prefill when the leading `cached_tokens` of the prompt are
+    /// already resident in shared KV blocks (prefix-cache hit): only the
+    /// uncached remainder is computed. Defaults to a full prefill —
+    /// engines that cannot reuse KV (e.g. the real PJRT engine, which
+    /// replays the whole prompt) simply ignore the hint.
+    fn prefill_cached(
+        &mut self,
+        req: &Request,
+        _cached_tokens: u32,
+    ) -> anyhow::Result<PrefillResult> {
+        self.prefill(req)
+    }
+
     /// One decode step over the given lanes. `resident_kv_tokens` is the
     /// total KV resident on the device (memory-pressure input to the
     /// roofline). Returns elapsed engine-busy seconds; sets

@@ -100,9 +100,20 @@ impl Engine for SimEngine {
     }
 
     fn prefill(&mut self, req: &Request) -> anyhow::Result<PrefillResult> {
-        let elapsed = self.prefill_time(req.input_len);
+        self.prefill_cached(req, 0)
+    }
+
+    fn prefill_cached(
+        &mut self,
+        req: &Request,
+        cached_tokens: u32,
+    ) -> anyhow::Result<PrefillResult> {
+        let cached = cached_tokens.min(req.input_len);
+        // the warm prefix skips its share of the quadratic prefill cost:
+        // what remains is extending a `cached`-token KV to `input_len`
+        let elapsed = (self.prefill_time(req.input_len) - self.prefill_time(cached)).max(0.0);
         self.busy_prefill += elapsed;
-        self.prefilled.insert(req.id, req.input_len);
+        self.prefilled.insert(req.id, req.input_len - cached);
         // prefill emits the first output token
         let finished = req.true_output_len <= 1;
         Ok(PrefillResult { elapsed, finished })
@@ -176,6 +187,7 @@ mod tests {
             embedding: Embedding::normalize(vec![1.0, 0.0]),
             true_dist: Some(LengthDist::point(output as f64)),
             slo: crate::slo::SloClass::Standard,
+            prefix_key: Vec::new(),
         }
     }
 
@@ -249,6 +261,20 @@ mod tests {
             big.decode_step(&mut lanes64, 6400).unwrap();
         }
         assert!(big.mean_utilization() > 2.0 * small.mean_utilization());
+    }
+
+    #[test]
+    fn cached_prefill_charges_only_the_remainder() {
+        let mut e = eng();
+        let r = req(1, 500, 10);
+        let full = e.prefill(&r).unwrap().elapsed;
+        let hit = e.prefill_cached(&r, 400).unwrap().elapsed;
+        let expect = e.prefill_time(500) - e.prefill_time(400);
+        assert!((hit - expect).abs() < 1e-12);
+        assert!(hit < full);
+        // a hit covering the whole prompt still charges nothing negative
+        let over = e.prefill_cached(&r, 10_000).unwrap().elapsed;
+        assert!(over >= 0.0);
     }
 
     #[test]

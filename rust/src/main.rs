@@ -145,6 +145,20 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
             bail!("{e} (--autoscale/--scale-* flags)");
         }
     }
+    if args.has("sessions") {
+        cfg.workload.sessions.enabled = true;
+    }
+    {
+        let s = &mut cfg.workload.sessions;
+        s.prefix_share = args.f64_or("prefix-share", s.prefix_share);
+        s.turns_mean = args.f64_or("session-turns", s.turns_mean);
+        s.think_mean = args.f64_or("session-think", s.think_mean);
+        s.system_prompt_tokens =
+            args.u64_or("system-prompt-tokens", s.system_prompt_tokens as u64) as u32;
+        if let Err(e) = s.validate() {
+            bail!("{e} (--sessions/--prefix-share/--session-* flags)");
+        }
+    }
     if args.has("slo-aware") {
         cfg.slo.class_aware = true;
     }
@@ -205,7 +219,33 @@ fn print_report(report: &RunReport, as_json: bool) {
             report.rejected,
             report.aborted
         );
+        print_kv_summary(report);
         print_slo_summary(report);
+    }
+}
+
+/// KV-cache occupancy / prefix-cache lines shared by `run` and `cluster`
+/// summaries.
+fn print_kv_summary(report: &RunReport) {
+    println!(
+        "  kv: peak {} blocks, fragmentation {:.3}, swap out/in {}/{}, \
+         peak swapped {} tokens",
+        report.kv_peak_used_blocks,
+        report.kv_fragmentation,
+        report.swap_out_events,
+        report.swap_in_events,
+        report.kv_swapped_tokens_peak,
+    );
+    if report.kv_prefix_lookups > 0 {
+        println!(
+            "  prefix cache: hit rate {:.1}% ({} of {} probes), \
+             {} prefill tokens saved, {} warm evictions",
+            report.kv_prefix_hit_rate() * 100.0,
+            report.kv_prefix_hits,
+            report.kv_prefix_lookups,
+            report.kv_prefill_tokens_saved,
+            report.kv_prefix_evictions,
+        );
     }
 }
 
@@ -319,6 +359,7 @@ fn cmd_smoke(args: &Args) -> Result<()> {
         embedding: sagesched::embedding::Embedding::normalize(vec![1.0; 8]),
         true_dist: None,
         slo: sagesched::slo::SloClass::Standard,
+        prefix_key: Vec::new(),
     };
     let _ = engine.prefill(&req)?;
     let mut lanes = vec![LaneState::new(&req, 1)];
@@ -473,6 +514,15 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             cfg.cluster.migration_quantile * 100.0
         );
     }
+    if cfg.workload.sessions.enabled {
+        let s = &cfg.workload.sessions;
+        println!(
+            "# sessions: on (prefix-share {:.2}, mean turns {:.1}, think {:.1}s, \
+             system prompt {} tokens, {} prompts/dataset)",
+            s.prefix_share, s.turns_mean, s.think_mean, s.system_prompt_tokens,
+            s.prompts_per_dataset
+        );
+    }
     if cfg.slo.class_aware {
         let mix: Vec<String> = cfg
             .workload
@@ -511,6 +561,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             r.goodput_per_replica_second,
             r.slo_weighted_goodput_per_replica_second
         );
+        print_kv_summary(&r.aggregate);
         print_slo_summary(&r.aggregate);
     }
     if let Some(r) = reports.iter().find(|r| !r.scaling_events.is_empty()) {
@@ -585,7 +636,9 @@ const USAGE: &str = "usage: sagesched <run|sweep|smoke|serve|cluster> [flags]
   serve   HTTP server over the real model     (--addr 127.0.0.1:8080)
   cluster event-driven multi-replica sim, one row per router
           (--replicas 4 --routers all|round-robin,least-loaded,least-kv,
-             cost-aware,quantile-cost   --router-quantile 0.9
+             cost-aware,quantile-cost,cache-affinity   --router-quantile 0.9
+             (cache-affinity: session-sticky placement — backlog minus the
+              prefill cost the target's warm shared-prefix blocks save)
            --speeds 1.0,0.5 --batch-sizes 256,128 --kv-capacities 10000,6000
            --fail 1@30+10,0@60+5   replica outages (replica@start+duration)
            --domains rack0:0,1;rack1:2,3   correlated failure domains
@@ -611,6 +664,15 @@ const USAGE: &str = "usage: sagesched <run|sweep|smoke|serve|cluster> [flags]
           --slo-mix interactive:0.25,standard:0.5,batch:0.25  stamping mix
           --slo-quantile 0.9           deadline-slack cost quantile
           (tier targets/weights via the JSON config's "slo" block)
+  session workloads (run / sweep / cluster / gen-trace):
+          --sessions                   multi-turn conversations: each turn's
+                                       prompt extends the previous context,
+                                       carrying a shared-prefix token-key
+                                       chain the KV cache can hit on
+          --prefix-share 0.6           fraction of arrivals starting sessions
+          --session-turns 4 --session-think 6   mean extra turns / think time
+          --system-prompt-tokens 256   per-dataset shared system-prompt size
+          (JSON config: the workload.sessions block, incl prompts_per_dataset)
   arrival-process flags (run / sweep / cluster / gen-trace):
           --arrival poisson|mmpp|diurnal
           --burst-factor 6 --burst-on 10 --burst-off 40       (mmpp)

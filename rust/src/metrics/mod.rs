@@ -143,6 +143,25 @@ pub struct RunReport {
     pub pred_threshold_hits: u64,
     pub pred_fallback: u64,
     pub pred_cold: u64,
+    /// Peak KV blocks allocated at any instant of the run.
+    pub kv_peak_used_blocks: u64,
+    /// Final internal fragmentation of the KV pool (fraction of allocated
+    /// block capacity not holding tokens; 0 for an idle manager). In the
+    /// cluster aggregate this is the *max* across replicas (worst case),
+    /// not a sum — fractions don't add.
+    pub kv_fragmentation: f64,
+    /// Prefix-cache probes at admission (one per request carrying a
+    /// prefix-key chain).
+    pub kv_prefix_lookups: u64,
+    /// Probes that found at least one warm prefix block.
+    pub kv_prefix_hits: u64,
+    /// Prompt tokens whose prefill was skipped via warm prefix blocks.
+    pub kv_prefill_tokens_saved: u64,
+    /// Warm (unreferenced, retained) prefix blocks evicted under memory
+    /// pressure.
+    pub kv_prefix_evictions: u64,
+    /// Peak host-side swapped-out token occupancy.
+    pub kv_swapped_tokens_peak: u64,
 }
 
 impl RunReport {
@@ -180,6 +199,16 @@ impl RunReport {
             }
         }
         r
+    }
+
+    /// Fraction of prefix-cache probes that found warm blocks (0.0 when no
+    /// request carried a prefix chain).
+    pub fn kv_prefix_hit_rate(&self) -> f64 {
+        if self.kv_prefix_lookups == 0 {
+            0.0
+        } else {
+            self.kv_prefix_hits as f64 / self.kv_prefix_lookups as f64
+        }
     }
 
     /// Fraction of submitted requests that completed (1.0 when lossless).
@@ -300,6 +329,23 @@ impl RunReport {
             ("pred_threshold_hits", Json::num(self.pred_threshold_hits as f64)),
             ("pred_fallback", Json::num(self.pred_fallback as f64)),
             ("pred_cold", Json::num(self.pred_cold as f64)),
+            ("kv_peak_used_blocks", Json::num(self.kv_peak_used_blocks as f64)),
+            ("kv_fragmentation", Json::num(self.kv_fragmentation)),
+            ("kv_prefix_lookups", Json::num(self.kv_prefix_lookups as f64)),
+            ("kv_prefix_hits", Json::num(self.kv_prefix_hits as f64)),
+            (
+                "kv_prefix_hit_rate",
+                Json::num(self.kv_prefix_hit_rate()),
+            ),
+            (
+                "kv_prefill_tokens_saved",
+                Json::num(self.kv_prefill_tokens_saved as f64),
+            ),
+            ("kv_prefix_evictions", Json::num(self.kv_prefix_evictions as f64)),
+            (
+                "kv_swapped_tokens_peak",
+                Json::num(self.kv_swapped_tokens_peak as f64),
+            ),
         ])
     }
 }
@@ -425,6 +471,14 @@ impl ClusterReport {
             aggregate.pred_threshold_hits += r.pred_threshold_hits;
             aggregate.pred_fallback += r.pred_fallback;
             aggregate.pred_cold += r.pred_cold;
+            aggregate.kv_peak_used_blocks += r.kv_peak_used_blocks;
+            aggregate.kv_prefix_lookups += r.kv_prefix_lookups;
+            aggregate.kv_prefix_hits += r.kv_prefix_hits;
+            aggregate.kv_prefill_tokens_saved += r.kv_prefill_tokens_saved;
+            aggregate.kv_prefix_evictions += r.kv_prefix_evictions;
+            aggregate.kv_swapped_tokens_peak += r.kv_swapped_tokens_peak;
+            // a fraction doesn't sum across replicas: report the worst case
+            aggregate.kv_fragmentation = aggregate.kv_fragmentation.max(r.kv_fragmentation);
         }
         // pred_tau is *not* summable across replicas; the cluster context
         // overwrites it from its shared predictor's tau tracker

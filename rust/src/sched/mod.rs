@@ -510,6 +510,7 @@ mod tests {
             embedding: Embedding::normalize(vec![1.0]),
             true_dist: Some(LengthDist::point(output as f64)),
             slo: crate::slo::SloClass::Standard,
+            prefix_key: Vec::new(),
         }
     }
 

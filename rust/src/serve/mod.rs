@@ -31,8 +31,10 @@ use crate::sched::{Policy, ReqView};
 use crate::slo::{ClassAwarePolicy, SloClass, SloConfig};
 use crate::workload::WorkloadGen;
 
-/// KV block size in tokens (vLLM default 16).
-pub const KV_BLOCK_TOKENS: usize = 16;
+/// KV block size in tokens (defined in [`crate::core`] so the workload
+/// generator's prefix chains and the block math agree; re-exported here for
+/// the serving-side call sites).
+pub use crate::core::KV_BLOCK_TOKENS;
 
 /// A partially-generated request handed off between replicas at scale-in
 /// migration: the [`Request`] plus the serving progress that must survive
@@ -65,6 +67,10 @@ struct Live {
     point_pred: f64,
     rank_pred: f64,
     priority: f64,
+    /// Effective prompt length after the prefix-cache probe at submission:
+    /// `input_len` minus tokens expected to be served warm. Cost/priority
+    /// math uses this so SSJF/Gittins ordering sees true post-hit cost.
+    eff_input: u32,
 }
 
 /// The coordinator: generic over the engine type (simulator or the real
@@ -244,7 +250,15 @@ impl<E: Engine> Coordinator<E> {
             let noise = LengthDist::uniform(1.0, (pred.max() * 2.0).max(64.0), 24);
             pred = pred.mix(&noise, self.noise_mix);
         }
-        let cost_dist = self.cost_model.cost_dist(req.input_len, &pred);
+        // probe the prefix cache: warm tokens skip prefill, so the cost
+        // distribution the scheduler ranks by is built on the *effective*
+        // prompt length (a prediction — the warm blocks can still be
+        // evicted before admission, which only makes us conservative)
+        let cached = self
+            .kv
+            .cached_prefix_tokens(&req.prefix_key, req.input_len as usize);
+        let eff_input = req.input_len - (cached as u32).min(req.input_len);
+        let cost_dist = self.cost_model.cost_dist(eff_input, &pred);
         self.live.push(Live {
             req,
             phase: Phase::Queued,
@@ -256,6 +270,7 @@ impl<E: Engine> Coordinator<E> {
             point_pred: point,
             rank_pred: rank,
             priority: f64::INFINITY,
+            eff_input,
         });
         true
     }
@@ -327,6 +342,17 @@ impl<E: Engine> Coordinator<E> {
         v.into_iter()
             .map(|l| (l.req.id, l.req.input_len, l.req.arrival))
             .collect()
+    }
+
+    /// Borrow a never-scheduled queued request by id (None for unknown ids
+    /// or requests already holding engine/KV state). The cluster's work
+    /// stealing reads the prefix chain through this to price the warm
+    /// cache state a steal would abandon on the victim.
+    pub fn queued_request(&self, id: crate::core::RequestId) -> Option<&Request> {
+        self.live
+            .iter()
+            .find(|l| l.req.id == id && l.phase == Phase::Queued && l.generated == 0)
+            .map(|l| &l.req)
     }
 
     /// Remove and return the never-scheduled queued requests with these ids
@@ -475,7 +501,7 @@ impl<E: Engine> Coordinator<E> {
         // --- priorities -------------------------------------------------
         let t0 = Instant::now();
         for l in &mut self.live {
-            let consumed = self.cost_model.consumed(l.req.input_len, l.generated);
+            let consumed = self.cost_model.consumed(l.eff_input, l.generated);
             let view = ReqView {
                 req: &l.req,
                 phase: l.phase,
@@ -623,11 +649,15 @@ impl<E: Engine> Coordinator<E> {
     fn admit_fresh(&mut self, i: usize) -> anyhow::Result<()> {
         let id = self.live[i].req.id;
         let tokens = self.live[i].req.input_len as usize + 1;
-        let ok = self.kv.grow_to(id, tokens);
-        debug_assert!(ok, "planned admission must fit");
-        let pr = self.engine.prefill(&self.live[i].req)?;
+        let outcome = self
+            .kv
+            .allocate_with_prefix(id, &self.live[i].req.prefix_key, tokens);
+        debug_assert!(outcome.is_some(), "planned admission must fit");
+        let cached = outcome.map(|o| o.cached_tokens).unwrap_or(0) as u32;
+        let pr = self.engine.prefill_cached(&self.live[i].req, cached)?;
         self.now += pr.elapsed;
         let l = &mut self.live[i];
+        l.eff_input = l.req.input_len - cached.min(l.req.input_len);
         l.generated = 1; // prefill emits the first token
         l.first_token = Some(self.now);
         l.phase = if pr.finished { Phase::Done } else { Phase::Running };
@@ -639,14 +669,27 @@ impl<E: Engine> Coordinator<E> {
         match self.preempt_mode {
             PreemptMode::Swap => {
                 if self.kv.residence(id) == Some(KvResidence::Swapped) {
-                    let tokens = self.kv.swap_in(id).expect("planned swap-in must fit");
-                    let dt = self.engine.swap_time(tokens);
-                    self.now += dt;
-                    self.engine.charge_swap(dt);
-                    // also grow for the next token
-                    let want = (self.live[i].req.input_len + self.live[i].generated) as usize + 1;
-                    let ok = self.kv.grow_to(id, want);
-                    debug_assert!(ok);
+                    match self.kv.swap_in(id) {
+                        Some(tokens) => {
+                            let dt = self.engine.swap_time(tokens);
+                            self.now += dt;
+                            self.engine.charge_swap(dt);
+                            // also grow for the next token
+                            let want = (self.live[i].req.input_len + self.live[i].generated)
+                                as usize
+                                + 1;
+                            let ok = self.kv.grow_to(id, want);
+                            debug_assert!(ok);
+                        }
+                        None => {
+                            // a shared block this sequence kept on GPU was
+                            // evicted while it was out: the swapped copy is
+                            // incomplete, so drop it and recompute
+                            self.kv.release(id);
+                            self.engine.preempt_release(id);
+                            self.recompute_resume(i)?;
+                        }
+                    }
                 } else {
                     // swapped state lost (shouldn't happen) — recompute
                     self.recompute_resume(i)?;
@@ -658,17 +701,21 @@ impl<E: Engine> Coordinator<E> {
         Ok(())
     }
 
-    /// Recompute-mode resume: re-prefill prompt + generated prefix.
+    /// Recompute-mode resume: re-prefill prompt + generated prefix. The
+    /// re-allocation goes through the prefix index, so blocks this very
+    /// sequence left warm at preemption (or a sibling session kept live)
+    /// shrink the recompute bill.
     fn recompute_resume(&mut self, i: usize) -> anyhow::Result<()> {
         let l = &self.live[i];
         let id = l.req.id;
         let tokens = (l.req.input_len + l.generated) as usize + 1;
-        let ok = self.kv.grow_to(id, tokens);
-        debug_assert!(ok);
+        let outcome = self.kv.allocate_with_prefix(id, &l.req.prefix_key, tokens);
+        debug_assert!(outcome.is_some(), "planned resume must fit");
+        let cached = outcome.map(|o| o.cached_tokens).unwrap_or(0) as u32;
         // charge a prefill over the full prefix (prompt + generated)
         let mut fake = l.req.clone();
         fake.input_len += l.generated;
-        let pr = self.engine.prefill(&fake)?;
+        let pr = self.engine.prefill_cached(&fake, cached)?;
         self.now += pr.elapsed;
         Ok(())
     }
@@ -761,6 +808,13 @@ impl<E: Engine> Coordinator<E> {
         r.aborted = self.aborted;
         r.swap_out_events = self.kv.swap_out_events;
         r.swap_in_events = self.kv.swap_in_events;
+        r.kv_peak_used_blocks = self.kv.peak_used_blocks as u64;
+        r.kv_fragmentation = self.kv.fragmentation();
+        r.kv_prefix_lookups = self.kv.prefix_lookups;
+        r.kv_prefix_hits = self.kv.prefix_hits;
+        r.kv_prefill_tokens_saved = self.kv.prefill_tokens_saved;
+        r.kv_prefix_evictions = self.kv.prefix_evictions;
+        r.kv_swapped_tokens_peak = self.kv.peak_swapped_tokens as u64;
         r.pred_tau = self.pred_tau.tau();
         r.pred_tau_n = self.pred_tau.len() as u64;
         let ps = self.predictor.stats();

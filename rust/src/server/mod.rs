@@ -175,6 +175,7 @@ pub fn serve(addr: &str, mut coord: Coordinator<RealEngine>) -> Result<ServerHan
                             // HTTP traffic defaults to the Standard tier
                             // (tiered serving is a simulator-side study)
                             slo: crate::slo::SloClass::Standard,
+                            prefix_key: Vec::new(),
                         };
                         if let Some(mt) = sub.max_tokens {
                             coord.engine.max_output = mt;

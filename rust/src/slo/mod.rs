@@ -405,6 +405,7 @@ mod tests {
             embedding: Embedding::normalize(vec![1.0]),
             true_dist: Some(LengthDist::point(50.0)),
             slo,
+            prefix_key: Vec::new(),
         }
     }
 

@@ -18,10 +18,10 @@ pub mod arrivals;
 pub mod trace;
 
 use crate::config::{DatasetKind, WorkloadConfig};
-use crate::core::Request;
+use crate::core::{Request, KV_BLOCK_TOKENS};
 use crate::distribution::LengthDist;
 use crate::embedding::Embedding;
-use crate::slo::ClassAssigner;
+use crate::slo::{ClassAssigner, SloClass};
 use crate::util::rng::Rng;
 
 /// Length statistics for one dataset (lognormal parameters + clamps).
@@ -225,6 +225,43 @@ pub struct Workload {
     pub topics: Vec<Topic>,
 }
 
+/// Total-context ceiling for a session: once the conversation-so-far plus
+/// the next user message would exceed this, the session retires instead of
+/// sending another turn. Matches the largest single-shot prompt the dataset
+/// profiles emit (Alpaca's `input_max`), so session traffic never needs
+/// more KV headroom than the worst single-shot request.
+const SESSION_CONTEXT_CAP: u32 = 3000;
+
+/// Content key for block `pos` of a prefix owned by `owner` (a system-prompt
+/// pool or one session's conversation) — splitmix64-style hash so distinct
+/// (owner, pos) pairs collide with negligible probability.
+fn chain_key(owner: u64, pos: usize) -> u64 {
+    let mut z = owner ^ (pos as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// One in-flight conversation: a user who keeps returning with the whole
+/// exchange so far as a growing shared prefix.
+struct SessionState {
+    topic_idx: usize,
+    /// Identifies this dataset's system-prompt pool entry (shared across
+    /// every session drawing the same pool index).
+    pool_key: u64,
+    /// Identifies this session's private conversation content.
+    session_salt: u64,
+    /// The class the session was admitted under (a conversation keeps its
+    /// latency tier across turns).
+    slo: SloClass,
+    /// Tokens of conversation so far (system prompt + all prompts+replies).
+    prefix_len: u32,
+    turns_left: u32,
+    turn: u32,
+    /// Arrival time of the next turn (previous turn + think time).
+    next_at: f64,
+}
+
 /// Workload generator: builds topics once, then streams requests paced by
 /// the configured [`arrivals::ArrivalProcess`].
 pub struct WorkloadGen {
@@ -240,6 +277,16 @@ pub struct WorkloadGen {
     /// SLO-class stamping stream — its own RNG so the class mix never
     /// perturbs the arrival/sampling streams of a seeded trace.
     slo: ClassAssigner,
+    /// Session-structure stream (initiation coin, pools, think times, turn
+    /// lengths) — dedicated so that with sessions disabled *nothing* here
+    /// is drawn and seeded single-shot traces stay byte-identical.
+    session_rng: Rng,
+    /// Conversations waiting out a think time.
+    sessions: Vec<SessionState>,
+    /// Arrival time of the next session-or-single-shot *initiation*, drawn
+    /// from the arrival process one step ahead so it can be interleaved
+    /// with pending session turns in time order.
+    next_init: Option<f64>,
     next_id: u64,
     clock: f64,
 }
@@ -325,6 +372,7 @@ impl WorkloadGen {
         let rng = Rng::new(seed ^ 0x5eed_0002);
         let arrivals = arrivals::make_arrival_process(&cfg);
         let slo = ClassAssigner::new(&cfg.slo_mix, seed);
+        let session_rng = Rng::new(seed ^ 0x5e55_0001);
         WorkloadGen {
             cfg,
             topics,
@@ -333,6 +381,9 @@ impl WorkloadGen {
             arrivals,
             rng,
             slo,
+            session_rng,
+            sessions: Vec::new(),
+            next_init: None,
             next_id: 0,
             clock: 0.0,
         }
@@ -370,11 +421,164 @@ impl WorkloadGen {
         self.topics.iter().filter(|t| t.dataset == kind).collect()
     }
 
-    /// Sample the next request (advances the arrival-process clock).
+    /// Sample the next request (advances the arrival-process clock). With
+    /// sessions enabled, initiations drawn from the arrival process are
+    /// interleaved in time order with the returning turns of open sessions;
+    /// disabled, this is exactly the original single-shot stream.
     pub fn next_request(&mut self) -> Request {
-        let gap = self.arrivals.next_gap(self.clock, &mut self.rng);
-        self.clock += gap;
-        self.request_at(self.clock)
+        if !self.cfg.sessions.enabled {
+            let gap = self.arrivals.next_gap(self.clock, &mut self.rng);
+            self.clock += gap;
+            return self.request_at(self.clock);
+        }
+        // one-step lookahead on the arrival process so pending turns can
+        // jump ahead of later initiations
+        let init_at = *self.next_init.get_or_insert_with(|| {
+            self.clock + self.arrivals.next_gap(self.clock, &mut self.rng)
+        });
+        let next_turn = self
+            .sessions
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.next_at.partial_cmp(&b.next_at).unwrap()
+            })
+            .map(|(i, s)| (i, s.next_at));
+        match next_turn {
+            Some((i, at)) if at < init_at => {
+                self.clock = self.clock.max(at);
+                self.session_turn(i)
+            }
+            _ => {
+                self.next_init = None;
+                self.clock = init_at;
+                self.initiate(init_at)
+            }
+        }
+    }
+
+    /// Prefix token-key chain covering every full block of `total_tokens`
+    /// of this session's context: leading system-prompt blocks are keyed by
+    /// the shared pool, the rest by the session's private salt. Key is a
+    /// pure function of (owner, position), so successive turns of one
+    /// session — and initial blocks of sibling sessions on the same pool —
+    /// produce byte-identical leading chains.
+    fn session_chain(&self, s: &SessionState, total_tokens: u32) -> Vec<u64> {
+        let bt = KV_BLOCK_TOKENS as u32;
+        let sys = self.cfg.sessions.system_prompt_tokens;
+        (0..(total_tokens / bt) as usize)
+            .map(|pos| {
+                let owner = if (pos as u32 + 1) * bt <= sys {
+                    s.pool_key
+                } else {
+                    s.session_salt
+                };
+                chain_key(owner, pos)
+            })
+            .collect()
+    }
+
+    /// Handle one arrival-process initiation: with probability
+    /// `prefix_share` it opens a session (first turn carries the shared
+    /// system prompt and seeds the conversation); otherwise it is a plain
+    /// single-shot request.
+    fn initiate(&mut self, arrival: f64) -> Request {
+        let mut req = self.request_at(arrival);
+        if self.session_rng.f64() >= self.cfg.sessions.prefix_share {
+            return req;
+        }
+        let sc = self.cfg.sessions.clone();
+        let ds_idx = DatasetKind::ALL
+            .iter()
+            .position(|&k| k == req.dataset)
+            .unwrap_or(0) as u64;
+        let pool_idx = self.session_rng.below(sc.prompts_per_dataset as u64);
+        let pool_key = chain_key(0x7001_5eed_u64 ^ (ds_idx << 32), pool_idx as usize);
+        let session_salt = self.session_rng.next_u64() | 1;
+        // geometric turn count with mean `turns_mean`
+        let go_on = 1.0 - 1.0 / sc.turns_mean.max(1.0);
+        let mut extra_turns = 0u32;
+        while self.session_rng.f64() < go_on && extra_turns < 64 {
+            extra_turns += 1;
+        }
+        // the shared system prompt precedes the user's first message
+        req.input_len += sc.system_prompt_tokens;
+        let mut s = SessionState {
+            topic_idx: req.topic,
+            pool_key,
+            session_salt,
+            slo: req.slo,
+            prefix_len: req.input_len + req.true_output_len,
+            turns_left: extra_turns,
+            turn: 1,
+            next_at: arrival + self.session_rng.exp(1.0 / sc.think_mean.max(1e-9)),
+        };
+        req.prefix_key = self.session_chain(&s, req.input_len + req.true_output_len);
+        if s.turns_left > 0 {
+            s.turn += 1;
+            self.sessions.push(s);
+        }
+        req
+    }
+
+    /// Emit the pending turn of session `i`: the whole conversation so far
+    /// returns as the prompt prefix, plus a fresh user message.
+    fn session_turn(&mut self, i: usize) -> Request {
+        let arrival = self.sessions[i].next_at;
+        let topic_idx = self.sessions[i].topic_idx;
+        let topic = self.active_topics()[topic_idx].clone();
+        let user_tokens = topic.sample_input(&mut self.session_rng);
+        let over_cap =
+            self.sessions[i].prefix_len + user_tokens > SESSION_CONTEXT_CAP;
+        if over_cap {
+            // context window exhausted: the conversation retires and the
+            // generator moves on to whatever is due next
+            self.sessions.swap_remove(i);
+            return self.next_request();
+        }
+        let input_len = self.sessions[i].prefix_len + user_tokens;
+        let true_output_len = topic.sample_output(&mut self.session_rng);
+        let embedding = topic
+            .direction
+            .perturbed(self.cfg.embed_sigma, &mut self.session_rng);
+        let (prompt, slo, prefix_key) = {
+            let s = &self.sessions[i];
+            (
+                format!(
+                    "{} session-{:x} turn-{} len-{user_tokens}",
+                    topic.stem, s.session_salt, s.turn
+                ),
+                s.slo,
+                self.session_chain(s, input_len + true_output_len),
+            )
+        };
+        // advance or retire the session
+        {
+            let think = self.session_rng.exp(1.0 / self.cfg.sessions.think_mean.max(1e-9));
+            let s = &mut self.sessions[i];
+            s.prefix_len = input_len + true_output_len;
+            s.turn += 1;
+            s.turns_left -= 1;
+            s.next_at = arrival + think;
+            if s.turns_left == 0 {
+                self.sessions.swap_remove(i);
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        Request {
+            id,
+            prompt,
+            input_len,
+            true_output_len,
+            arrival,
+            dataset: topic.dataset,
+            topic: topic_idx,
+            embedding,
+            true_dist: Some(topic.true_dist.clone()),
+            slo,
+            prefix_key,
+        }
     }
 
     /// Sample a request with an explicit arrival time (used by figure
@@ -418,6 +622,7 @@ impl WorkloadGen {
             embedding,
             true_dist: Some(topic.true_dist.clone()),
             slo: self.slo.next_class(),
+            prefix_key: Vec::new(),
         }
     }
 
@@ -649,6 +854,114 @@ mod tests {
             for pair in a.requests.windows(2) {
                 assert!(pair[0].arrival < pair[1].arrival, "{kind:?} not increasing");
             }
+        }
+    }
+
+    #[test]
+    fn sessions_disabled_is_byte_identical() {
+        // the session RNG stream must never be touched when disabled
+        let mut cfg = WorkloadConfig::default();
+        cfg.n_requests = 200;
+        let base = WorkloadGen::new(cfg.clone(), 17).generate();
+        cfg.sessions.prefix_share = 0.9; // everything but `enabled`
+        cfg.sessions.turns_mean = 8.0;
+        let off = WorkloadGen::new(cfg, 17).generate();
+        for (a, b) in base.requests.iter().zip(&off.requests) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.input_len, b.input_len);
+            assert_eq!(a.true_output_len, b.true_output_len);
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.slo, b.slo);
+            assert!(a.prefix_key.is_empty());
+            assert!(b.prefix_key.is_empty());
+        }
+    }
+
+    #[test]
+    fn session_turns_extend_a_consistent_prefix_chain() {
+        let mut cfg = WorkloadConfig::single(DatasetKind::ShareGpt);
+        cfg.n_requests = 400;
+        cfg.sessions.enabled = true;
+        cfg.sessions.prefix_share = 1.0;
+        let w = WorkloadGen::new(cfg, 23).generate();
+        // group turns by their first *private* key (the session identity
+        // is not exposed on Request, but the chain is)
+        let mut chains: std::collections::BTreeMap<u64, Vec<&Request>> = Default::default();
+        let sys_blocks = 256 / 16;
+        for r in &w.requests {
+            if r.prefix_key.len() > sys_blocks {
+                chains.entry(r.prefix_key[sys_blocks]).or_default().push(r);
+            }
+        }
+        let mut multi_turn = 0;
+        for turns in chains.values() {
+            if turns.len() < 2 {
+                continue;
+            }
+            multi_turn += 1;
+            let mut sorted: Vec<&&Request> = turns.iter().collect();
+            sorted.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+            for pair in sorted.windows(2) {
+                let (a, b) = (pair[0], pair[1]);
+                // a later turn's prompt contains the earlier conversation:
+                // chains agree on the earlier turn's full extent
+                assert!(b.input_len > a.input_len);
+                assert!(b.prefix_key.len() >= a.prefix_key.len());
+                assert_eq!(
+                    &b.prefix_key[..a.prefix_key.len()],
+                    &a.prefix_key[..],
+                    "turn chains diverge"
+                );
+                // the same SLO class rides the whole conversation
+                assert_eq!(a.slo, b.slo);
+            }
+        }
+        assert!(multi_turn > 5, "only {multi_turn} multi-turn sessions");
+        // arrivals stay sorted through the interleave
+        for pair in w.requests.windows(2) {
+            assert!(pair[0].arrival <= pair[1].arrival);
+        }
+        // ids dense + unique
+        let mut ids: Vec<u64> = w.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), w.requests.len());
+    }
+
+    #[test]
+    fn sessions_share_system_prompt_pools_across_users() {
+        let mut cfg = WorkloadConfig::single(DatasetKind::Write);
+        cfg.n_requests = 300;
+        cfg.sessions.enabled = true;
+        cfg.sessions.prefix_share = 1.0;
+        cfg.sessions.prompts_per_dataset = 2;
+        let w = WorkloadGen::new(cfg, 29).generate();
+        // every session's first chain key identifies its system-prompt
+        // pool; with 2 pools there are exactly 2 distinct leading keys
+        let leading: std::collections::BTreeSet<u64> = w
+            .requests
+            .iter()
+            .filter(|r| !r.prefix_key.is_empty())
+            .map(|r| r.prefix_key[0])
+            .collect();
+        assert_eq!(leading.len(), 2, "expected 2 shared pools, got {leading:?}");
+        // and context never exceeds the generator's cap
+        for r in &w.requests {
+            assert!(r.input_len <= SESSION_CONTEXT_CAP);
+        }
+    }
+
+    #[test]
+    fn session_traces_deterministic_given_seed() {
+        let mut cfg = WorkloadConfig::default();
+        cfg.n_requests = 250;
+        cfg.sessions.enabled = true;
+        let a = WorkloadGen::new(cfg.clone(), 31).generate();
+        let b = WorkloadGen::new(cfg, 31).generate();
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.input_len, y.input_len);
+            assert_eq!(x.prefix_key, y.prefix_key);
         }
     }
 

@@ -33,6 +33,14 @@ fn request_to_json(r: &Request) -> Json {
             Json::arr(r.embedding.0.iter().map(|&x| Json::num(x as f64))),
         ),
     ];
+    if !r.prefix_key.is_empty() {
+        // hex strings, not numbers: the keys are full 64-bit hashes and
+        // would lose precision through an f64 JSON number
+        fields.push((
+            "prefix_key",
+            Json::arr(r.prefix_key.iter().map(|k| Json::str(format!("{k:016x}")))),
+        ));
+    }
     if let Some(d) = &r.true_dist {
         fields.push((
             "dist_values",
@@ -88,6 +96,16 @@ fn request_from_json(j: &Json) -> Result<Request> {
         embedding: Embedding(embedding),
         true_dist,
         slo,
+        prefix_key: j
+            .get("prefix_key")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|v| v.as_str())
+                    .filter_map(|s| u64::from_str_radix(s, 16).ok())
+                    .collect()
+            })
+            .unwrap_or_default(),
     })
 }
 

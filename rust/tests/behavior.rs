@@ -224,6 +224,7 @@ fn sagesched_priorities_finite_and_refresh_across_buckets() {
         embedding: sagesched::embedding::Embedding::normalize(vec![1.0]),
         true_dist: None,
         slo: sagesched::slo::SloClass::Standard,
+        prefix_key: Vec::new(),
     };
     let lengths = LengthDist::from_weighted(&[(20.0, 0.7), (500.0, 0.3)]);
     let cost_dist = cm.cost_dist(req.input_len, &lengths);

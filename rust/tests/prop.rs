@@ -405,6 +405,183 @@ fn prop_kv_capacity_never_exceeded_under_growth_pressure() {
     });
 }
 
+#[test]
+fn prop_kv_shared_prefix_conservation_under_random_ops() {
+    // random sessions over a small pool of colliding chains: every op
+    // sequence preserves full block conservation (each block owned by
+    // exactly one of free/LRU-warm/referenced, refcounts exact), the
+    // read-only probe never mutates and always agrees with the allocation
+    // it predicts, and releasing everything returns the whole pool (warm
+    // retained blocks count as reclaimable free space)
+    for_all(120, |rng| {
+        let bt = 2 + rng.below(14) as usize;
+        let blocks = 24 + rng.below(40) as usize;
+        let mut kv = KvManager::new(blocks * bt, bt);
+        let chains: Vec<Vec<u64>> = (0..4u64)
+            .map(|c| (0..6u64).map(|i| c * 1000 + i + 1).collect())
+            .collect();
+        let mut live: Vec<u64> = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..250 {
+            match rng.below(4) {
+                0 => {
+                    let chain = &chains[rng.below(4) as usize];
+                    let keys = rng.below(7) as usize;
+                    let tokens = 1 + rng.below((blocks * bt / 4) as u64) as usize;
+                    // the probe is read-only and must predict the hit exactly
+                    let predicted = kv.cached_prefix_tokens(&chain[..keys], tokens - 1);
+                    if let Some(out) = kv.allocate_with_prefix(next, &chain[..keys], tokens)
+                    {
+                        assert_eq!(
+                            out.cached_tokens, predicted,
+                            "probe disagrees with allocation"
+                        );
+                        live.push(next);
+                    }
+                    next += 1;
+                }
+                1 => {
+                    if let Some(&id) = live.last() {
+                        let cur = kv.tokens_of(id);
+                        if kv.can_grow_to(id, cur + 1) {
+                            assert!(kv.grow_to(id, cur + 1));
+                        }
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let idx = rng.below(live.len() as u64) as usize;
+                        kv.release(live.swap_remove(idx));
+                    }
+                }
+                _ => {
+                    let chain = &chains[rng.below(4) as usize];
+                    let used = kv.used_blocks();
+                    let warm = kv.warm_blocks();
+                    let _ = kv.cached_prefix_tokens(chain, blocks * bt);
+                    assert_eq!(kv.used_blocks(), used, "probe mutated usage");
+                    assert_eq!(kv.warm_blocks(), warm, "probe mutated the LRU");
+                }
+            }
+            kv.assert_conserved();
+            assert_eq!(kv.used_blocks() + kv.free_blocks(), kv.total_blocks());
+        }
+        for id in live.drain(..) {
+            kv.release(id);
+        }
+        kv.assert_conserved();
+        assert_eq!(kv.used_blocks(), 0, "live blocks leaked");
+        assert_eq!(kv.free_blocks(), kv.total_blocks());
+        assert_eq!(kv.resident_tokens(), 0);
+    });
+}
+
+#[test]
+fn prop_kv_shared_blocks_survive_release_while_readers_live() {
+    // freeing-shared-with-live-readers must be impossible: releasing one
+    // reader of a shared prefix never frees (or warms) blocks the other
+    // reader still holds, and the last release retains the prefix warm
+    // without counting it as used
+    for_all(200, |rng| {
+        let bt = 2 + rng.below(30) as usize;
+        let mut kv = KvManager::new(32 * bt, bt);
+        let prefix_blocks = 1 + rng.below(6) as usize;
+        let chain: Vec<u64> = (0..prefix_blocks as u64).map(|i| 0xfeed + i).collect();
+        // prompt covers the whole chain plus a private in-block tail
+        let tail = 1 + rng.below(bt as u64) as usize;
+        let tokens = prefix_blocks * bt + tail + 1;
+        let need = tokens.div_ceil(bt);
+        let o1 = kv.allocate_with_prefix(1, &chain, tokens).unwrap();
+        assert_eq!(o1.cached_tokens, 0, "cold start cannot hit");
+        let o2 = kv.allocate_with_prefix(2, &chain, tokens).unwrap();
+        assert_eq!(o2.cached_blocks, prefix_blocks, "second reader shares the prefix");
+        assert_eq!(kv.used_blocks(), need + (need - prefix_blocks));
+        kv.release(1);
+        // only reader 1's private tail went away; the shared blocks stay
+        // referenced (not warm) and still probe hot for reader 2's session
+        assert_eq!(kv.used_blocks(), need, "shared prefix freed under a live reader");
+        assert_eq!(kv.warm_blocks(), 0);
+        assert_eq!(kv.cached_prefix_tokens(&chain, tokens), prefix_blocks * bt);
+        kv.assert_conserved();
+        kv.release(2);
+        assert_eq!(kv.used_blocks(), 0);
+        assert_eq!(kv.free_blocks(), kv.total_blocks());
+        assert_eq!(kv.warm_blocks(), prefix_blocks);
+        kv.assert_conserved();
+    });
+}
+
+#[test]
+fn prop_kv_swap_with_shared_prefixes_conserves_occupancy() {
+    // swap-out moves only private blocks to host while indexed blocks stay
+    // resident; random interleavings of allocate/swap-out/swap-in/release
+    // over a shared chain keep every conservation invariant, and draining
+    // the population returns both GPU blocks and host occupancy to zero
+    for_all(100, |rng| {
+        let bt = 2 + rng.below(12) as usize;
+        let blocks = 24 + rng.below(40) as usize;
+        let mut kv = KvManager::new(blocks * bt, bt);
+        let chain: Vec<u64> = (1..=8u64).collect();
+        let mut gpu: Vec<u64> = Vec::new();
+        let mut host: Vec<u64> = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..200 {
+            match rng.below(4) {
+                0 => {
+                    let tokens = 1 + rng.below((blocks * bt / 6) as u64) as usize;
+                    let keys = rng.below(9) as usize;
+                    if kv.allocate_with_prefix(next, &chain[..keys], tokens).is_some() {
+                        gpu.push(next);
+                    }
+                    next += 1;
+                }
+                1 => {
+                    if !gpu.is_empty() {
+                        let idx = rng.below(gpu.len() as u64) as usize;
+                        let id = gpu.swap_remove(idx);
+                        let moved = kv.swap_out(id);
+                        assert!(moved <= kv.tokens_of(id));
+                        host.push(id);
+                    }
+                }
+                2 => {
+                    if !host.is_empty() {
+                        let idx = rng.below(host.len() as u64) as usize;
+                        let id = host[idx];
+                        if kv.swap_in(id).is_some() {
+                            host.swap_remove(idx);
+                            gpu.push(id);
+                        } else if rng.below(2) == 0 {
+                            // kept prefix evicted or pool full: the caller
+                            // falls back to drop + recompute
+                            kv.drop_seq(id);
+                            host.swap_remove(idx);
+                        }
+                    }
+                }
+                _ => {
+                    if !gpu.is_empty() {
+                        let idx = rng.below(gpu.len() as u64) as usize;
+                        kv.release(gpu.swap_remove(idx));
+                    } else if !host.is_empty() {
+                        let idx = rng.below(host.len() as u64) as usize;
+                        kv.release(host.swap_remove(idx));
+                    }
+                }
+            }
+            kv.assert_conserved();
+            assert_eq!(kv.used_blocks() + kv.free_blocks(), kv.total_blocks());
+        }
+        for id in gpu.drain(..).chain(host.drain(..)) {
+            kv.release(id);
+        }
+        kv.assert_conserved();
+        assert_eq!(kv.used_blocks(), 0, "live blocks leaked");
+        assert_eq!(kv.swapped_tokens, 0, "host occupancy leaked");
+        assert_eq!(kv.resident_tokens(), 0);
+    });
+}
+
 // ---------------------------------------------------------------------------
 // flat index vs brute force
 // ---------------------------------------------------------------------------

@@ -36,6 +36,7 @@ fn req(id: u64, prompt: &str) -> Request {
         embedding: Embedding::normalize(vec![1.0; 64]),
         true_dist: None,
         slo: sagesched::slo::SloClass::Standard,
+        prefix_key: Vec::new(),
     }
 }
 
