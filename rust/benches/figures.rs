@@ -1350,6 +1350,122 @@ fn fig16(ctx: &Ctx) {
     );
 }
 
+// ===========================================================================
+// Fig 17: colocated vs disaggregated prefill/decode at equal hardware
+// ===========================================================================
+fn fig17(ctx: &Ctx) {
+    use sagesched::config::{PoolRole, RouterKind};
+    use sagesched::slo::SloClass;
+    println!("\n=== fig17: colocated vs disaggregated pools (equal hardware) ===");
+    // Four replicas either serve everything (colocated) or split 2+2 into
+    // a prefill pool and a decode pool behind the KV-transfer fabric. Same
+    // seeded workload per SLO mix; the disaggregated rows pay the fabric
+    // hop but keep long decode batches from sitting in front of fresh
+    // prompts' prefill — the interactive TTFT-attainment column is where
+    // that shows up.
+    let mut base = base_cfg();
+    base.cluster.replicas = 4;
+    base.workload.rps = 24.0;
+    base.workload.n_requests = ctx.n_requests(1200);
+    base.slo.class_aware = true;
+    let mixes: [(&str, Vec<(SloClass, f64)>); 3] = [
+        (
+            "interactive-heavy",
+            vec![
+                (SloClass::Interactive, 0.6),
+                (SloClass::Standard, 0.3),
+                (SloClass::Batch, 0.1),
+            ],
+        ),
+        (
+            "balanced",
+            vec![
+                (SloClass::Interactive, 0.25),
+                (SloClass::Standard, 0.5),
+                (SloClass::Batch, 0.25),
+            ],
+        ),
+        (
+            "batch-heavy",
+            vec![
+                (SloClass::Interactive, 0.1),
+                (SloClass::Standard, 0.3),
+                (SloClass::Batch, 0.6),
+            ],
+        ),
+    ];
+    println!(
+        "| slo mix | serving | int TTFT att | int TTFT p90 | goodput | \
+         fabric util | prefill/decode rep-s |"
+    );
+    println!("|---|---|---|---|---|---|---|");
+    let mut rows = Vec::new();
+    for (mix_name, mix) in &mixes {
+        let mut cfg = base.clone();
+        cfg.workload.slo_mix = mix.clone();
+        for disagg in [false, true] {
+            let mut cfg = cfg.clone();
+            let label = if disagg {
+                cfg.cluster.pools = vec![
+                    PoolRole::Prefill,
+                    PoolRole::Prefill,
+                    PoolRole::Decode,
+                    PoolRole::Decode,
+                ];
+                "disaggregated 2+2"
+            } else {
+                "colocated 4"
+            };
+            let r = sagesched::cluster::run_router_experiment(&cfg, RouterKind::QuantileCost)
+                .expect("fig17 experiment failed");
+            let n = cfg.workload.n_requests as u64;
+            let accounted =
+                r.aggregate.completed + r.aggregate.rejected + r.aggregate.aborted;
+            assert_eq!(accounted, n, "{mix_name}/{label}: lost requests");
+            let (ttft_att, ttft_p90) = r
+                .aggregate
+                .slo
+                .get("interactive")
+                .map(|s| (s.ttft_attainment(), s.ttft.p90))
+                .unwrap_or((0.0, 0.0));
+            let pools = if r.pool_replica_seconds.len() == 2 {
+                format!(
+                    "{:.0}/{:.0}",
+                    r.pool_replica_seconds[0], r.pool_replica_seconds[1]
+                )
+            } else {
+                "-".to_string()
+            };
+            println!(
+                "| {mix_name} | {label} | {:.3} | {:.3} | {:.3} | {:.3} | {pools} |",
+                ttft_att,
+                ttft_p90,
+                r.aggregate.goodput(),
+                r.transfer_utilization,
+            );
+            rows.push(format!(
+                "{mix_name},{label},{:.5},{:.5},{:.5},{:.5},{},{}",
+                ttft_att,
+                ttft_p90,
+                r.aggregate.goodput(),
+                r.transfer_utilization,
+                r.transfers,
+                pools,
+            ));
+        }
+    }
+    write_csv(
+        "fig17",
+        "slo_mix,serving,interactive_ttft_attainment,interactive_ttft_p90,\
+         goodput,transfer_utilization,transfers,pool_replica_seconds",
+        &rows,
+    );
+    println!(
+        "  (dedicated prefill capacity: interactive TTFT attainment up under \
+         interactive-heavy mixes at equal total hardware)"
+    );
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick =
@@ -1384,6 +1500,7 @@ fn main() {
         ("fig14", fig14),
         ("fig15", fig15),
         ("fig16", fig16),
+        ("fig17", fig17),
     ];
     let t0 = std::time::Instant::now();
     for (name, f) in &all {

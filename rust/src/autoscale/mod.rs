@@ -44,6 +44,13 @@
 //! [`crate::metrics::ClusterReport`] together with `replica_seconds` and
 //! goodput per replica-second — the metric a static fleet is compared on.
 //!
+//! Under **disaggregated serving** the driver runs one policy instance per
+//! pool over pool-scoped [`AutoscaleView`]s (see
+//! [`crate::cluster::disagg`]): the prefill pool is provisioned against
+//! the TTFT-weighted prefill share of the forecast, the decode pool
+//! against the completion-weighted decode share — the policies themselves
+//! are unchanged, they just see their pool's snapshot.
+//!
 //! **Scale-in victim selection** is likewise the cluster's mechanism, with
 //! two modes: the legacy rule drains the active replica with the fewest
 //! live requests, while *migration-cost-aware* scale-in

@@ -50,12 +50,21 @@ impl SloAdmission {
         } else {
             1.0
         };
+        // under disaggregation fresh arrivals (and crash re-dispatch, which
+        // restarts from scratch and so needs prefill again) enter through
+        // the prefill pool; a scale-in drain re-routes within its victim's
+        // own pool. Colocated serving resolves both to "every routable
+        // replica".
+        let pool = match keep_on {
+            Some(victim) => ctx.replicas[victim].pool,
+            None => ctx.intake_pool(),
+        };
         // per-request warmth: probe each routable replica's prefix index so
         // cache-affinity scoring (and the backlog debit below) sees how
         // much prefill this request would skip there. The probe is
         // read-only; requests without a prefix chain skip it entirely.
         let views = {
-            let mut vs = ctx.views();
+            let mut vs = ctx.views_for(pool);
             if !req.prefix_key.is_empty() {
                 for v in &mut vs {
                     let warm = ctx.replicas[v.id]
@@ -80,9 +89,11 @@ impl SloAdmission {
         if views.is_empty() {
             if keep_on.is_none() {
                 anyhow::bail!(
-                    "cannot route request {}: none of the {} replicas is routable",
+                    "cannot route request {}: none of the {} replicas is routable{}",
                     req.id,
-                    ctx.replicas.len()
+                    ctx.replicas.len(),
+                    pool.map(|p| format!(" in the {} pool", p.name()))
+                        .unwrap_or_default()
                 );
             }
         } else {

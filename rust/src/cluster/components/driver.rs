@@ -4,6 +4,7 @@ use crate::autoscale::{AutoscalePolicy, ScaleAction};
 use crate::cluster::ctx::ClusterCtx;
 use crate::cluster::kernel::{EventPayload, EventQueue, KernelEvent};
 use crate::cluster::replica::ReplicaState;
+use crate::config::PoolRole;
 use crate::util::stats::normal_quantile_clamped;
 
 use super::ClusterComponent;
@@ -26,43 +27,76 @@ use super::ClusterComponent;
 /// quantile of its predicted remaining cost and shipping its KV — so the
 /// cluster retires the replica whose work is closest to done or cheapest
 /// to move, not merely the one with the fewest requests.
+///
+/// Under disaggregated serving the driver holds one policy *instance per
+/// pool* (same [`AutoscaleConfig`](crate::config::AutoscaleConfig),
+/// independent cooldowns): at each decision point the prefill pool is
+/// sized against its TTFT-weighted prefill forecast and the decode pool
+/// against its completion-weighted decode forecast (see
+/// [`crate::cluster::disagg`]), spawns join the deciding pool, and victim
+/// selection never crosses a pool boundary (nor drains a pool's last
+/// active replica — each pool must stay routable).
 pub struct AutoscaleDriver {
-    policy: Option<Box<dyn AutoscalePolicy>>,
+    /// One policy per scaling scope: `[(pool, instance)]` — a single
+    /// `(None, _)` entry colocated, one entry per [`PoolRole`] under
+    /// disaggregation. Empty when autoscaling is off.
+    policies: Vec<(Option<PoolRole>, Box<dyn AutoscalePolicy>)>,
     /// z-score of the migration-cost quantile (victim scoring).
     z_migration: f64,
 }
 
 impl AutoscaleDriver {
     pub fn new(cfg: &crate::config::ExperimentConfig) -> AutoscaleDriver {
+        let mut policies: Vec<(Option<PoolRole>, Box<dyn AutoscalePolicy>)> = Vec::new();
+        if cfg.cluster.disagg() {
+            for role in PoolRole::ALL {
+                if let Some(p) = crate::autoscale::make_autoscaler(&cfg.cluster.autoscale)
+                {
+                    policies.push((Some(role), p));
+                }
+            }
+        } else if let Some(p) = crate::autoscale::make_autoscaler(&cfg.cluster.autoscale)
+        {
+            policies.push((None, p));
+        }
         AutoscaleDriver {
-            policy: crate::autoscale::make_autoscaler(&cfg.cluster.autoscale),
+            policies,
             z_migration: normal_quantile_clamped(cfg.cluster.migration_quantile),
         }
     }
 
-    /// Run the policy at a decision point; scale-out spawns fresh replicas
-    /// (future spawn-ready events), scale-in begins draining victims
-    /// immediately. The desired target counts capacity that is present or
-    /// committed (active + provisioning + down).
+    /// Run every policy at a decision point; scale-out spawns fresh
+    /// replicas (future spawn-ready events) into the deciding pool,
+    /// scale-in begins draining victims immediately. The desired target
+    /// counts capacity that is present or committed (active + provisioning
+    /// + down) within the policy's scope.
     fn on_decision(
         &mut self,
         at: f64,
         ctx: &mut ClusterCtx,
         kernel: &mut EventQueue,
     ) -> anyhow::Result<()> {
-        let view = ctx.autoscale_view(at);
-        let target = self
-            .policy
-            .as_mut()
-            .expect("decision event without a policy")
-            .target(&view);
-        if let Some(target) = target {
+        // decide first, act second: the decisions borrow the policies
+        // mutably (cooldown state) while reading ctx; the actions mutate
+        // ctx while victim scoring reads the driver
+        let decisions: Vec<(Option<PoolRole>, Option<usize>, usize)> = self
+            .policies
+            .iter_mut()
+            .map(|(pool, pol)| {
+                let view = match pool {
+                    Some(role) => ctx.pool_autoscale_view(at, *role),
+                    None => ctx.autoscale_view(at),
+                };
+                (*pool, pol.target(&view), view.present())
+            })
+            .collect();
+        for (pool, target, present) in decisions {
+            let Some(target) = target else { continue };
             let target = target.max(1);
-            let present = view.present();
             if target > present {
                 let delay = ctx.cfg.cluster.autoscale.provision_delay;
                 for _ in 0..(target - present) {
-                    let i = ctx.spawn_replica(at);
+                    let i = ctx.spawn_replica(at, pool);
                     ctx.record(at, i, ScaleAction::Provision);
                     kernel.push(at + delay, EventPayload::SpawnReady { replica: i });
                 }
@@ -73,11 +107,10 @@ impl AutoscaleDriver {
                     // they hold no work, so retiring them is free. The
                     // pending spawn-ready event becomes a no-op (the state
                     // is no longer Provisioning).
-                    if let Some(p) = ctx
-                        .replicas
-                        .iter()
-                        .rposition(|r| r.state == ReplicaState::Provisioning)
-                    {
+                    if let Some(p) = ctx.replicas.iter().rposition(|r| {
+                        r.state == ReplicaState::Provisioning
+                            && (pool.is_none() || r.pool == pool)
+                    }) {
                         ctx.retire(p, at);
                         shrink -= 1;
                         continue;
@@ -86,11 +119,15 @@ impl AutoscaleDriver {
                         .replicas
                         .iter()
                         .enumerate()
-                        .filter(|(_, r)| r.state == ReplicaState::Active)
+                        .filter(|(_, r)| {
+                            r.state == ReplicaState::Active
+                                && (pool.is_none() || r.pool == pool)
+                        })
                         .map(|(i, _)| i)
                         .collect();
-                    // never drain the last routable replica: the cluster
-                    // must stay able to place re-routed and future work
+                    // never drain the last routable replica of the scope:
+                    // the pool must stay able to place re-routed, future,
+                    // and fabric-delivered work
                     if active.len() <= 1 {
                         break;
                     }
@@ -102,11 +139,13 @@ impl AutoscaleDriver {
         }
         // keep the periodic chain alive while there is anything left to
         // decide about: feedback policies must be able to scale in during
-        // the drain tail after the last arrival. Once arrivals are
-        // exhausted and the cluster is idle the chain ends, which bounds
-        // the event stream.
+        // the drain tail after the last arrival — including requests still
+        // riding the transfer fabric. Once arrivals are exhausted and the
+        // cluster is idle the chain ends, which bounds the event stream.
         if kernel.pending_decisions() == 0
-            && (kernel.pending_arrivals() > 0 || ctx.has_live_work())
+            && (kernel.pending_arrivals() > 0
+                || kernel.pending_transfers() > 0
+                || ctx.has_live_work())
         {
             kernel.push(
                 at + ctx.cfg.cluster.autoscale.interval,
@@ -156,14 +195,16 @@ impl ClusterComponent for AutoscaleDriver {
         if let Err(e) = ctx.cfg.cluster.validate() {
             anyhow::bail!("{e}");
         }
-        let Some(pol) = self.policy.as_ref() else {
+        let Some((_, pol)) = self.policies.first() else {
             return Ok(());
         };
         // seed the periodic chain; each fired decision extends it. Scripted
         // steps fire exactly at their configured times, even past the last
         // arrival (a late scale-in still frees capacity during the drain
         // tail). A scripted step landing on the periodic seed must fire
-        // once, not twice.
+        // once, not twice. Per-pool instances share one config, so one
+        // instance's scripted times cover them all (each decision event
+        // runs every policy).
         let mut times = vec![ctx.cfg.cluster.autoscale.interval];
         times.extend(pol.scheduled_times());
         times.sort_by(|a, b| a.partial_cmp(b).expect("NaN decision time"));

@@ -17,11 +17,13 @@
 //!    registration order; `on_event` either consumes it (returns `None`)
 //!    or passes it along (returns it back). An event no component consumes
 //!    is a hard error — silently dropped events are how schedulers rot.
-//! 3. `on_quiescent(ctx)` for every component at the top of every loop
-//!    iteration (the cluster is between events; replicas may be stepped
-//!    next).
+//! 3. `on_quiescent(ctx, kernel)` for every component at the top of every
+//!    loop iteration (the cluster is between events; replicas may be
+//!    stepped next). Quiescent work may schedule follow-up events — the
+//!    transfer fabric turns each prefill completion it observes into a
+//!    timed delivery.
 //!
-//! Five concerns, five implementations:
+//! Six concerns, six implementations:
 //!
 //! * [`ArrivalSource`] — feeds the workload's arrival stream into the
 //!   kernel and routes each arrival when its event fires.
@@ -33,11 +35,18 @@
 //!   spawn-ready events), and scale-in victim selection — either the
 //!   legacy fewest-live rule or, when `migration_kv_per_token > 0`,
 //!   migration-cost-aware scoring over each candidate's predicted
-//!   remaining work.
+//!   remaining work. Under disaggregation it runs one policy instance per
+//!   pool with SLO-aware pool sizing (see [`crate::cluster::disagg`]).
 //! * [`WorkStealer`] — quiescent-point migration of never-scheduled queued
-//!   work from backlogged replicas to idle ones, gated on transfer cost.
-//! * [`SloAdmission`] — the placement/admission seam. Unlike the other
-//!   four it owns no timed events: every placement path (fresh arrivals,
+//!   work from backlogged replicas to idle ones, gated on transfer cost
+//!   (and confined within a pool under disaggregated serving).
+//! * [`TransferFabric`] — the disaggregation KV-transfer fabric: drains
+//!   prompts that reached first token off the prefill pool, queues them on
+//!   bandwidth-limited links, and delivers each as a timed
+//!   [`EventPayload::TransferDone`](crate::cluster::kernel::EventPayload)
+//!   into the decode pool. Inert in colocated mode.
+//! * [`SloAdmission`] — the placement/admission seam. Unlike the others
+//!   it owns no timed events: every placement path (fresh arrivals,
 //!   crash re-dispatch, scale-in drains) consults it synchronously,
 //!   because admission is a per-request verdict, not a scheduled
 //!   occurrence. It is registered like any component so the concern has
@@ -48,12 +57,14 @@ mod arrivals;
 mod driver;
 mod failures;
 mod stealing;
+mod transfer;
 
 pub use admission::SloAdmission;
 pub use arrivals::ArrivalSource;
 pub use driver::AutoscaleDriver;
 pub use failures::FailureInjector;
 pub use stealing::WorkStealer;
+pub use transfer::TransferFabric;
 
 use crate::cluster::ctx::ClusterCtx;
 use crate::cluster::kernel::{EventQueue, KernelEvent};
@@ -85,7 +96,13 @@ pub trait ClusterComponent {
     }
 
     /// Called at the top of every orchestrator iteration, between events.
-    fn on_quiescent(&mut self, _ctx: &mut ClusterCtx) -> anyhow::Result<()> {
+    /// Gets the kernel so quiescent-point observations can schedule timed
+    /// follow-ups (the transfer fabric's bandwidth-delayed deliveries).
+    fn on_quiescent(
+        &mut self,
+        _ctx: &mut ClusterCtx,
+        _kernel: &mut EventQueue,
+    ) -> anyhow::Result<()> {
         Ok(())
     }
 }

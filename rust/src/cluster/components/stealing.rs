@@ -1,6 +1,8 @@
 //! [`WorkStealer`]: transfer-cost-gated idle-replica work stealing.
 
 use crate::cluster::ctx::ClusterCtx;
+use crate::cluster::kernel::EventQueue;
+use crate::config::PoolRole;
 use crate::core::RequestId;
 
 use super::ClusterComponent;
@@ -17,7 +19,9 @@ use super::ClusterComponent;
 /// stealing). Rejected candidates are counted in
 /// [`ClusterCtx::steals_skipped`]. The thief's clock is advanced to the
 /// victim's so no request runs before the moment it was provably
-/// stealable.
+/// stealable. Under disaggregated serving stealing is confined within a
+/// pool: a decode replica must not steal never-prefilled prompts (they
+/// belong to the prefill pool), and vice versa.
 pub struct WorkStealer;
 
 impl ClusterComponent for WorkStealer {
@@ -25,7 +29,11 @@ impl ClusterComponent for WorkStealer {
         "work-stealer"
     }
 
-    fn on_quiescent(&mut self, ctx: &mut ClusterCtx) -> anyhow::Result<()> {
+    fn on_quiescent(
+        &mut self,
+        ctx: &mut ClusterCtx,
+        _kernel: &mut EventQueue,
+    ) -> anyhow::Result<()> {
         if !ctx.steal_dirty {
             return Ok(()); // nothing changed since the last fruitless pass
         }
@@ -35,127 +43,151 @@ impl ClusterComponent for WorkStealer {
         ctx.steal_dirty = false;
         let transfer = ctx.cfg.cluster.steal_transfer_per_token;
         'pass: loop {
-            let thief = match ctx
-                .replicas
-                .iter()
-                .position(|r| r.routable() && r.coord.is_idle())
-            {
-                Some(t) => t,
-                None => return Ok(()),
-            };
-            // candidate victims, most-queued first (ties to the lowest
-            // index for determinism); later victims are tried when the
-            // most-backlogged one has no gate-passing candidate, so a small
-            // cheap queue cannot shadow a profitable one
-            let mut victims: Vec<(usize, usize)> = ctx
+            // every idle replica is a candidate thief (lowest index first);
+            // under disaggregation an idle thief in one pool must not end
+            // the pass for the other pool, so all of them get a turn
+            let thieves: Vec<usize> = ctx
                 .replicas
                 .iter()
                 .enumerate()
-                .filter(|(j, r)| {
-                    *j != thief && r.routable() && r.coord.live_count() >= 2
-                })
-                .map(|(j, r)| (j, r.coord.queued_count()))
-                .filter(|&(_, queued)| queued > 0)
+                .filter(|(_, r)| r.routable() && r.coord.is_idle())
+                .map(|(t, _)| t)
                 .collect();
-            victims.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-            if victims.is_empty() {
+            if thieves.is_empty() {
                 return Ok(());
             }
-            // cap at the thief's admission window (it is idle, so its live
-            // set is empty): stolen submissions must never be refused, or a
-            // request that was safely queued would count as rejected
-            let capacity = match ctx.replicas[thief].coord.max_queue {
-                0 => usize::MAX,
-                cap => cap,
-            };
-            for (v, v_queued) in victims {
-                let take = v_queued.div_ceil(2).min(capacity);
-                let speed_v = ctx.replicas[v].speed.max(1e-9);
-                let speed_t = ctx.replicas[thief].speed.max(1e-9);
-                // running tallies so each candidate is judged against the
-                // backlog as it would stand after the moves chosen so far.
-                // The benefit is the completion-time delta: the queue *and
-                // own service* it would pay on the victim, minus the queue
-                // it joins plus its own (speed-adjusted) service on the
-                // thief — so shipping work to a much slower replica is
-                // charged for the slower execution, not just the transfer.
-                let mut backlog_v = ctx.backlog[v];
-                let mut backlog_t = ctx.backlog[thief];
-                let meta = ctx.replicas[v].coord.queued_meta();
-                let mut chosen: Vec<RequestId> = Vec::with_capacity(take);
-                for &(id, input_len, _) in meta.iter().take(take) {
-                    let own = ctx.in_flight.get(&id).map(|f| f.cost).unwrap_or(0.0);
-                    let benefit = backlog_v / speed_v - (backlog_t + own) / speed_t;
-                    // abandoning warm prefix state is a real cost: tokens
-                    // cached on the victim but not on the thief would have
-                    // to be re-prefilled after the move, so they join the
-                    // prompt in the transfer penalty
-                    let warm_lost = {
-                        let chain = ctx.replicas[v]
-                            .coord
-                            .queued_request(id)
-                            .map(|r| r.prefix_key.clone())
-                            .unwrap_or_default();
-                        if chain.is_empty() {
-                            0
-                        } else {
-                            let on_victim = ctx.replicas[v]
+            // one thief per pool: an idle thief's own backlog is ~0, so
+            // within a pool the gate verdict is the same for every idle
+            // replica — colocated serving (one pool of `None`) keeps its
+            // historical single-thief pass
+            let mut tried: Vec<Option<PoolRole>> = Vec::new();
+            for thief in thieves {
+                let pool = ctx.replicas[thief].pool;
+                if tried.contains(&pool) {
+                    continue;
+                }
+                tried.push(pool);
+                // candidate victims, most-queued first (ties to the lowest
+                // index for determinism); later victims are tried when the
+                // most-backlogged one has no gate-passing candidate, so a
+                // small cheap queue cannot shadow a profitable one
+                let mut victims: Vec<(usize, usize)> = ctx
+                    .replicas
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, r)| {
+                        *j != thief
+                            && r.routable()
+                            && r.pool == ctx.replicas[thief].pool
+                            && r.coord.live_count() >= 2
+                    })
+                    .map(|(j, r)| (j, r.coord.queued_count()))
+                    .filter(|&(_, queued)| queued > 0)
+                    .collect();
+                victims.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                if victims.is_empty() {
+                    continue; // this thief's pool has nothing to steal
+                }
+                // cap at the thief's admission window (it is idle, so its
+                // live set is empty): stolen submissions must never be
+                // refused, or a request that was safely queued would count
+                // as rejected
+                let capacity = match ctx.replicas[thief].coord.max_queue {
+                    0 => usize::MAX,
+                    cap => cap,
+                };
+                for (v, v_queued) in victims {
+                    let take = v_queued.div_ceil(2).min(capacity);
+                    let speed_v = ctx.replicas[v].speed.max(1e-9);
+                    let speed_t = ctx.replicas[thief].speed.max(1e-9);
+                    // running tallies so each candidate is judged against
+                    // the backlog as it would stand after the moves chosen
+                    // so far. The benefit is the completion-time delta: the
+                    // queue *and own service* it would pay on the victim,
+                    // minus the queue it joins plus its own (speed-adjusted)
+                    // service on the thief — so shipping work to a much
+                    // slower replica is charged for the slower execution,
+                    // not just the transfer.
+                    let mut backlog_v = ctx.backlog[v];
+                    let mut backlog_t = ctx.backlog[thief];
+                    let meta = ctx.replicas[v].coord.queued_meta();
+                    let mut chosen: Vec<RequestId> = Vec::with_capacity(take);
+                    for &(id, input_len, _) in meta.iter().take(take) {
+                        let own = ctx.in_flight.get(&id).map(|f| f.cost).unwrap_or(0.0);
+                        let benefit = backlog_v / speed_v - (backlog_t + own) / speed_t;
+                        // abandoning warm prefix state is a real cost:
+                        // tokens cached on the victim but not on the thief
+                        // would have to be re-prefilled after the move, so
+                        // they join the prompt in the transfer penalty
+                        let warm_lost = {
+                            let chain = ctx.replicas[v]
                                 .coord
-                                .kv
-                                .cached_prefix_tokens(&chain, input_len as usize);
-                            let on_thief = ctx.replicas[thief]
-                                .coord
-                                .kv
-                                .cached_prefix_tokens(&chain, input_len as usize);
-                            on_victim.saturating_sub(on_thief)
+                                .queued_request(id)
+                                .map(|r| r.prefix_key.clone())
+                                .unwrap_or_default();
+                            if chain.is_empty() {
+                                0
+                            } else {
+                                let on_victim = ctx.replicas[v]
+                                    .coord
+                                    .kv
+                                    .cached_prefix_tokens(&chain, input_len as usize);
+                                let on_thief = ctx.replicas[thief]
+                                    .coord
+                                    .kv
+                                    .cached_prefix_tokens(&chain, input_len as usize);
+                                on_victim.saturating_sub(on_thief)
+                            }
+                        };
+                        if transfer > 0.0
+                            && benefit <= transfer * (input_len as f64 + warm_lost as f64)
+                        {
+                            ctx.steal_rejected.insert(id);
+                            continue;
                         }
-                    };
-                    if transfer > 0.0
-                        && benefit <= transfer * (input_len as f64 + warm_lost as f64)
-                    {
-                        ctx.steal_rejected.insert(id);
-                        continue;
+                        chosen.push(id);
+                        backlog_v = (backlog_v - own).max(0.0);
+                        backlog_t += own;
                     }
-                    chosen.push(id);
-                    backlog_v = (backlog_v - own).max(0.0);
-                    backlog_t += own;
-                }
-                if chosen.is_empty() {
-                    continue; // nothing profitable here: try the next victim
-                }
-                let victim_now = ctx.replicas[v].coord.now();
-                let moved = ctx.replicas[v].coord.drain_ids(&chosen);
-                if moved.is_empty() {
-                    return Ok(());
-                }
-                ctx.replicas[thief].coord.advance_to(victim_now);
-                for req in moved {
-                    let id = req.id;
-                    // stealing is a migration: the request already passed
-                    // admission on the victim, so the thief must not
-                    // re-apply (class-aware) admission and refuse it
-                    let accepted = ctx.replicas[thief].coord.submit_exempt(req);
-                    debug_assert!(accepted, "idle thief must accept within its window");
-                    if !accepted {
-                        continue;
+                    if chosen.is_empty() {
+                        continue; // nothing profitable here: try the next victim
                     }
-                    ctx.stolen += 1;
-                    if let Some(entry) = ctx.in_flight.get_mut(&id) {
-                        let (pcost, pvar) = (entry.cost, entry.var);
-                        let from = entry.replica;
-                        entry.replica = thief;
-                        ctx.backlog[from] = (ctx.backlog[from] - pcost).max(0.0);
-                        ctx.backlog_var[from] = (ctx.backlog_var[from] - pvar).max(0.0);
-                        ctx.backlog[thief] += pcost;
-                        ctx.backlog_var[thief] += pvar;
+                    let victim_now = ctx.replicas[v].coord.now();
+                    let moved = ctx.replicas[v].coord.drain_ids(&chosen);
+                    if moved.is_empty() {
+                        return Ok(());
                     }
+                    ctx.replicas[thief].coord.advance_to(victim_now);
+                    for req in moved {
+                        let id = req.id;
+                        // stealing is a migration: the request already
+                        // passed admission on the victim, so the thief must
+                        // not re-apply (class-aware) admission and refuse it
+                        let accepted = ctx.replicas[thief].coord.submit_exempt(req);
+                        debug_assert!(accepted, "idle thief must accept within its window");
+                        if !accepted {
+                            continue;
+                        }
+                        ctx.stolen += 1;
+                        if let Some(entry) = ctx.in_flight.get_mut(&id) {
+                            let (pcost, pvar) = (entry.cost, entry.var);
+                            let from = entry.replica;
+                            entry.replica = thief;
+                            ctx.backlog[from] = (ctx.backlog[from] - pcost).max(0.0);
+                            ctx.backlog_var[from] = (ctx.backlog_var[from] - pvar).max(0.0);
+                            ctx.backlog[thief] += pcost;
+                            ctx.backlog_var[thief] += pvar;
+                        }
+                    }
+                    // the thief is busy now; look for another idle replica
+                    continue 'pass;
                 }
-                // the thief is busy now; look for another idle replica
-                continue 'pass;
+                // no victim offered this thief a profitable steal. An idle
+                // thief's own backlog is ~0, so within its pool the verdict
+                // would be the same for every other idle replica of any
+                // speed: move on to thieves in other pools.
             }
-            // no victim offered a profitable steal. An idle thief's own
-            // backlog is ~0, so the verdict would be the same for every
-            // other idle replica of any speed: stop the pass.
+            // every idle thief came up empty: stop the pass
             return Ok(());
         }
     }

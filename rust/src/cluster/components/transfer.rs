@@ -1,0 +1,245 @@
+//! [`TransferFabric`]: the bandwidth-limited KV-transfer fabric between
+//! the prefill and decode pools.
+//!
+//! Under disaggregated serving
+//! ([`ClusterConfig::pools`](crate::config::ClusterConfig) non-empty) the
+//! prefill pool runs each prompt to its first token and no further; the
+//! fabric is how the request — generated prefix, first-token timestamp,
+//! warm-prefix chain and all — reaches the decode pool:
+//!
+//! 1. **Extraction** (`on_quiescent`): every partially-generated request
+//!    on an Active or Draining prefill replica is drained off it
+//!    ([`Coordinator::drain_prefilled`](crate::serve::Coordinator::drain_prefilled),
+//!    id order) the moment the orchestrator observes it.
+//! 2. **Queueing**: each handoff occupies one fabric link for
+//!    `resident KV tokens / transfer_bandwidth` seconds, starting when
+//!    the earliest-free link frees up (ties to the lowest link index).
+//!    A burst of prefill completions therefore drains at
+//!    `transfer_links × transfer_bandwidth` aggregate throughput, and a
+//!    congested fabric delays deliveries — exactly the serialization a
+//!    real interconnect imposes.
+//! 3. **Delivery** (`on_event`): the completion is a timed
+//!    [`EventPayload::TransferDone`] kernel event, so same-seed runs stay
+//!    byte-identical. Delivery routes over the decode pool through the
+//!    cluster's dedicated decode router (KV-fit filtered, warm-prefix
+//!    probed) and resumes the request via
+//!    [`Coordinator::submit_migrated`](crate::serve::Coordinator::submit_migrated)
+//!    — the recompute re-prefill the target pays models the
+//!    KV-reconstruction work after the wire transfer.
+//!
+//! While a request rides the fabric it is on *no* replica: its per-replica
+//! backlog share is released at extraction and re-booked on the delivery
+//! target, while the cluster-wide weighted moments keep carrying it (the
+//! autoscaler still owes it capacity). If the decode pool has no routable
+//! replica at delivery time (e.g. a full-pool outage), the fabric degrades
+//! to delivering anywhere routable rather than losing an admitted request
+//! — conservation outranks pool discipline.
+//!
+//! In colocated mode the component is inert: no links, no extraction, and
+//! no `TransferDone` event is ever pushed.
+
+use crate::cluster::ctx::ClusterCtx;
+use crate::cluster::kernel::{EventPayload, EventQueue, KernelEvent};
+use crate::cluster::replica::ReplicaState;
+use crate::cluster::router::ReplicaView;
+use crate::config::PoolRole;
+use crate::serve::MigratedRequest;
+
+use super::ClusterComponent;
+
+/// The KV-transfer fabric between the prefill and decode pools. See the
+/// module docs; built via [`TransferFabric::new`] from
+/// [`ClusterConfig`](crate::config::ClusterConfig)'s `transfer_bandwidth`
+/// / `transfer_links` knobs.
+pub struct TransferFabric {
+    /// Earliest instant each link is free (empty in colocated mode, which
+    /// turns every hook into a no-op).
+    link_free: Vec<f64>,
+}
+
+impl TransferFabric {
+    pub fn new(cfg: &crate::config::ExperimentConfig) -> TransferFabric {
+        let links = if cfg.cluster.disagg() {
+            cfg.cluster.transfer_links.max(1)
+        } else {
+            0
+        };
+        TransferFabric { link_free: vec![0.0; links] }
+    }
+
+    /// KV blocks the handoff needs on its decode target (prompt + prefix
+    /// + 1 for the next token — the coordinator's own block math).
+    fn blocks_for(m: &MigratedRequest) -> usize {
+        ((m.req.input_len + m.generated) as usize + 1)
+            .div_ceil(crate::serve::KV_BLOCK_TOKENS)
+    }
+
+    /// Queue one handoff on the earliest-free link and schedule its
+    /// delivery event. Returns the delivery instant.
+    fn enqueue(
+        &mut self,
+        ctx: &mut ClusterCtx,
+        kernel: &mut EventQueue,
+        source: usize,
+        m: MigratedRequest,
+        at: f64,
+    ) -> f64 {
+        let tokens = (m.req.input_len + m.generated) as u64;
+        let delay = tokens as f64 / ctx.cfg.cluster.transfer_bandwidth;
+        let link = self
+            .link_free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1).then(a.0.cmp(&b.0)))
+            .map(|(l, _)| l)
+            .expect("fabric has at least one link in disagg mode");
+        let start = at.max(self.link_free[link]);
+        let done = start + delay;
+        self.link_free[link] = done;
+        ctx.transfer_busy += delay;
+        ctx.transfer_log.push((at, done, tokens));
+        ctx.in_transfer.insert(m.req.id);
+        // the work left its prefill replica: release the per-replica share
+        // (the weighted cluster-wide moments keep carrying it — the
+        // autoscaler still owes the request capacity while it's on the
+        // wire; the delivery books it onto the decode target)
+        if let Some(f) = ctx.in_flight.get(&m.req.id) {
+            let (cost, var) = (f.cost, f.var);
+            ctx.backlog[source] = (ctx.backlog[source] - cost).max(0.0);
+            ctx.backlog_var[source] = (ctx.backlog_var[source] - var).max(0.0);
+        }
+        kernel.push(done, EventPayload::TransferDone(m));
+        done
+    }
+
+    /// Deliver one completed transfer into the decode pool.
+    fn deliver(
+        &mut self,
+        ctx: &mut ClusterCtx,
+        m: MigratedRequest,
+        at: f64,
+    ) -> anyhow::Result<()> {
+        let id = m.req.id;
+        let tokens = (m.req.input_len + m.generated) as u64;
+        ctx.in_transfer.remove(&id);
+        let needed = Self::blocks_for(&m);
+        let fitting = |vs: Vec<ReplicaView>| -> Vec<ReplicaView> {
+            vs.into_iter().filter(|v| v.kv_total_blocks >= needed).collect()
+        };
+        let mut eligible = fitting(ctx.views_for(Some(PoolRole::Decode)));
+        if eligible.is_empty() {
+            // degraded mode (decode pool down or too small): conservation
+            // outranks pool discipline — deliver anywhere routable
+            eligible = fitting(ctx.views());
+        }
+        if eligible.is_empty() {
+            anyhow::bail!(
+                "cannot deliver transfer of request {id} at t={at}: no \
+                 routable replica can hold its {needed} KV blocks"
+            );
+        }
+        let (pcost, pvar) = match ctx.in_flight.get(&id) {
+            Some(f) => (f.cost, f.var),
+            None => (0.0, 0.0),
+        };
+        // warm-prefix probing, as every other migration path does: a decode
+        // replica already holding this session's shared prefix re-prefills
+        // less after the handoff
+        if !m.req.prefix_key.is_empty() {
+            for v in &mut eligible {
+                let warm = ctx.replicas[v.id]
+                    .coord
+                    .kv
+                    .cached_prefix_tokens(&m.req.prefix_key, m.req.input_len as usize)
+                    as u32;
+                if warm > 0 {
+                    v.warm_prefix_tokens = warm;
+                    v.warm_cost_saving = ctx.cost.consumed(warm, 0);
+                }
+            }
+        }
+        let router = ctx
+            .decode_router
+            .as_mut()
+            .expect("decode router exists whenever the fabric is live");
+        let slot = router.route(&m.req, pcost, &eligible);
+        if slot >= eligible.len() {
+            anyhow::bail!(
+                "decode router {} returned position {slot} but only {} \
+                 replicas are eligible",
+                router.name(),
+                eligible.len()
+            );
+        }
+        let target = eligible[slot].id;
+        // the delivery instant is already ≥ the source clock at extraction
+        // (the transfer takes positive time), so the prefix the target
+        // resumes cannot predate its own generation
+        ctx.replicas[target].coord.advance_to(at);
+        let accepted = ctx.replicas[target].coord.submit_migrated(m);
+        debug_assert!(accepted, "fabric delivery is admission-exempt");
+        if accepted {
+            if let Some(entry) = ctx.in_flight.get_mut(&id) {
+                entry.replica = target;
+                ctx.backlog[target] += pcost;
+                ctx.backlog_var[target] += pvar;
+            }
+            ctx.transfers += 1;
+            ctx.transfer_tokens += tokens;
+            ctx.steal_dirty = true;
+        }
+        Ok(())
+    }
+}
+
+impl ClusterComponent for TransferFabric {
+    fn name(&self) -> &'static str {
+        "transfer-fabric"
+    }
+
+    fn on_quiescent(
+        &mut self,
+        ctx: &mut ClusterCtx,
+        kernel: &mut EventQueue,
+    ) -> anyhow::Result<()> {
+        if self.link_free.is_empty() {
+            return Ok(()); // colocated: no fabric
+        }
+        // index order over replicas, id order within one replica's drain —
+        // the whole extraction sequence is deterministic, so link
+        // assignment and event seq numbers are too
+        for i in 0..ctx.replicas.len() {
+            let r = &ctx.replicas[i];
+            let steppable =
+                matches!(r.state, ReplicaState::Active | ReplicaState::Draining);
+            if !steppable || r.pool != Some(PoolRole::Prefill) {
+                continue;
+            }
+            if r.coord.partial_meta().is_empty() {
+                continue;
+            }
+            let at = r.coord.now();
+            let moved = ctx.replicas[i].coord.drain_prefilled();
+            for m in moved {
+                self.enqueue(ctx, kernel, i, m, at);
+            }
+            ctx.steal_dirty = true;
+        }
+        Ok(())
+    }
+
+    fn on_event(
+        &mut self,
+        ev: KernelEvent,
+        ctx: &mut ClusterCtx,
+        _kernel: &mut EventQueue,
+    ) -> anyhow::Result<Option<KernelEvent>> {
+        match ev.payload {
+            EventPayload::TransferDone(m) => {
+                self.deliver(ctx, m, ev.at)?;
+                Ok(None)
+            }
+            _ => Ok(Some(ev)),
+        }
+    }
+}

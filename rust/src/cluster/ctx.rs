@@ -19,7 +19,7 @@
 use std::collections::{HashMap, HashSet};
 
 use crate::autoscale::ScalingEvent;
-use crate::config::{ExperimentConfig, RouterKind};
+use crate::config::{ExperimentConfig, PoolRole, RouterKind};
 use crate::core::{Request, RequestId};
 use crate::cost::CostModel;
 use crate::engine::Engine;
@@ -40,6 +40,10 @@ pub struct ClusterCtx {
     pub cfg: ExperimentConfig,
     pub replicas: Vec<ClusterReplica>,
     pub router: Box<dyn Router>,
+    /// Decode-pool router under disaggregated serving: fabric handoffs
+    /// route through this separate instance (its own cursor/state), never
+    /// through the front-door `router`. `None` in colocated mode.
+    pub decode_router: Option<Box<dyn Router>>,
     /// Shared prediction service (prices arrivals; learns from completions).
     pub predictor: Box<dyn Predictor>,
     pub(crate) cost: Box<dyn CostModel>,
@@ -69,6 +73,25 @@ pub struct ClusterCtx {
     pub migrated: u64,
     /// Queued requests migrated to an idle replica by work stealing.
     pub stolen: u64,
+    /// Prefill→decode handoffs delivered over the KV-transfer fabric.
+    pub transfers: u64,
+    /// Resident KV tokens (prompt + generated prefix) moved over the
+    /// fabric.
+    pub transfer_tokens: u64,
+    /// Total link-busy seconds across all fabric links (utilization
+    /// numerator; the denominator is `links * horizon` at report time).
+    pub(crate) transfer_busy: f64,
+    /// Per-handoff fabric timeline: (enqueue instant, delivery instant,
+    /// resident KV tokens). Delivery never precedes
+    /// `enqueue + tokens / bandwidth` — the conservation/property tests
+    /// assert this invariant directly.
+    pub transfer_log: Vec<(f64, f64, u64)>,
+    /// Requests currently in flight on the fabric (drained off their
+    /// prefill replica, not yet delivered to a decode replica). Their
+    /// `in_flight` entry still names the source replica, so the
+    /// timeout-abort reconciliation in `step_replica` must not mistake
+    /// them for gone.
+    pub(crate) in_transfer: HashSet<RequestId>,
     /// Failure-domain outages that fired (each may take several replicas
     /// down in one event).
     pub domain_outages: u64,
@@ -112,6 +135,7 @@ impl ClusterCtx {
                     coord: crate::serve::build_sim_coordinator_with(cfg, profile, seed),
                     speed: cfg.cluster.speed_of(i),
                     state: ReplicaState::Active,
+                    pool: cfg.cluster.pool_of(i),
                     down_since: 0.0,
                     downtime: 0.0,
                     spawned_at: 0.0,
@@ -133,6 +157,14 @@ impl ClusterCtx {
         if cfg.slo.class_aware {
             boxed = Box::new(ClassAwareRouter::new(boxed));
         }
+        let decode_router = cfg.cluster.disagg().then(|| {
+            let kind = cfg.cluster.decode_router.unwrap_or(router);
+            let mut boxed = make_router(kind, cfg.cluster.router_quantile);
+            if cfg.slo.class_aware {
+                boxed = Box::new(ClassAwareRouter::new(boxed));
+            }
+            boxed
+        });
         ClusterCtx {
             cfg: cfg.clone(),
             backlog: vec![0.0; n],
@@ -144,6 +176,11 @@ impl ClusterCtx {
             drained: 0,
             migrated: 0,
             stolen: 0,
+            transfers: 0,
+            transfer_tokens: 0,
+            transfer_busy: 0.0,
+            transfer_log: Vec::new(),
+            in_transfer: HashSet::new(),
             domain_outages: 0,
             pred_tau: crate::util::stats::KendallTau::new(256),
             observed: HashSet::new(),
@@ -152,6 +189,7 @@ impl ClusterCtx {
             scaling_events: Vec::new(),
             replicas,
             router: boxed,
+            decode_router,
             predictor,
             cost: crate::cost::make_cost_model(cfg.cost_model),
             in_flight: HashMap::new(),
@@ -279,6 +317,26 @@ impl ClusterCtx {
             .iter()
             .map(|r| r.replica_seconds(horizon))
             .collect();
+        // per-pool replica-seconds (prefill, decode): the equal-hardware
+        // denominator the disaggregation benches compare against; empty
+        // under colocated serving (no replica carries a role)
+        let pool_replica_seconds: Vec<f64> = if self.cfg.cluster.disagg() {
+            let mut by_pool = vec![0.0; PoolRole::ALL.len()];
+            for (r, secs) in self.replicas.iter().zip(&replica_seconds) {
+                if let Some(p) = r.pool {
+                    by_pool[p.index()] += secs;
+                }
+            }
+            by_pool
+        } else {
+            Vec::new()
+        };
+        let links = self.cfg.cluster.transfer_links.max(1) as f64;
+        let transfer_utilization = if self.cfg.cluster.disagg() && horizon > 0.0 {
+            self.transfer_busy / (links * horizon)
+        } else {
+            0.0
+        };
         let mut report = ClusterReport::new(
             self.router.name().to_string(),
             per_replica,
@@ -289,6 +347,10 @@ impl ClusterCtx {
                 migrated: self.migrated,
                 stolen: self.stolen,
                 steals_skipped: self.steals_skipped(),
+                transfers: self.transfers,
+                transfer_tokens: self.transfer_tokens,
+                transfer_utilization,
+                pool_replica_seconds,
                 domain_outages: self.domain_outages,
                 downtime,
                 replica_seconds,
@@ -317,10 +379,18 @@ impl ClusterCtx {
     /// provisioning, or draining — routers return positions, the dispatcher
     /// maps them back through `id`.
     pub(crate) fn views(&self) -> Vec<ReplicaView> {
+        self.views_for(None)
+    }
+
+    /// Routable snapshot restricted to one pool (`None` = every routable
+    /// replica). Under disaggregated serving fresh work routes over
+    /// `Some(Prefill)` and fabric handoffs over `Some(Decode)`; colocated
+    /// replicas carry no role, so a pool filter there yields no views.
+    pub(crate) fn views_for(&self, pool: Option<PoolRole>) -> Vec<ReplicaView> {
         self.replicas
             .iter()
             .enumerate()
-            .filter(|(_, r)| r.routable())
+            .filter(|(_, r)| r.routable() && (pool.is_none() || r.pool == pool))
             .map(|(i, r)| ReplicaView {
                 id: i,
                 live: r.coord.live_count(),
@@ -337,6 +407,14 @@ impl ClusterCtx {
                 warm_cost_saving: 0.0,
             })
             .collect()
+    }
+
+    /// Pool fresh work routes over: the prefill pool under disaggregated
+    /// serving (crash re-dispatch included — a lost request restarts from
+    /// scratch, so it needs prefill again), every routable replica
+    /// otherwise.
+    pub(crate) fn intake_pool(&self) -> Option<PoolRole> {
+        self.cfg.cluster.disagg().then_some(PoolRole::Prefill)
     }
 
     /// Index and clock of the busy replica with the smallest virtual time,
@@ -430,7 +508,13 @@ impl ClusterCtx {
             let mut gone: Vec<RequestId> = self
                 .in_flight
                 .iter()
-                .filter(|(id, entry)| entry.replica == i && !coord.is_live(**id))
+                .filter(|(id, entry)| {
+                    entry.replica == i
+                        && !coord.is_live(**id)
+                        // a request on the fabric left this replica
+                        // deliberately; its entry survives until delivery
+                        && !self.in_transfer.contains(*id)
+                })
                 .map(|(id, _)| *id)
                 .collect();
             // the map's iteration order is not deterministic; releasing in

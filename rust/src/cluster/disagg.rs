@@ -1,0 +1,210 @@
+//! Disaggregated prefill/decode serving: per-pool autoscaler snapshots.
+//!
+//! With [`ClusterConfig::pools`](crate::config::ClusterConfig) non-empty
+//! the roster splits into a **prefill pool** (runs every prompt to its
+//! first token, then hands off) and a **decode pool** (finishes the
+//! generation it receives over the
+//! [`TransferFabric`](crate::cluster::TransferFabric)). The two pools do
+//! different work per request — one long compute-bound prefill vs many
+//! short memory-bound decode steps — so a single cluster-wide forecast
+//! would systematically mis-size both. This module gives the
+//! [`AutoscaleDriver`](crate::cluster::AutoscaleDriver) a per-pool
+//! [`AutoscaleView`] instead:
+//!
+//! * **State counts** (active/provisioning/down/draining, live/queued, KV
+//!   occupancy) are restricted to the pool's replicas.
+//! * **Forecast moments** split each in-flight request's predicted cost at
+//!   the prefill/decode boundary: the prefill part is the cost model's
+//!   consumed-cost of the prompt alone (`consumed(input_len, 0)`), the
+//!   decode part is the remainder. A request still on a prefill replica
+//!   owes its prefill part to the prefill pool *and* its decode part to
+//!   the decode pool (the work is coming — forecasting it early is the
+//!   whole point); a request on the fabric or already decoding owes only
+//!   its decode part. All predicted-cost *variance* is decode-side: given
+//!   the prompt, prefill cost is deterministic — output length is where
+//!   the uncertainty lives.
+//! * **SLO-aware weighting** (under `--slo-aware`): the prefill pool's
+//!   weighted moments use each class's TTFT-tightness weight
+//!   ([`SloSpecs::prefill_weight`](crate::slo::SloSpecs::prefill_weight) —
+//!   TTFT is paid entirely on the prefill side), the decode pool's use the
+//!   completion-tightness weight
+//!   ([`SloSpecs::decode_weight`](crate::slo::SloSpecs::decode_weight)).
+//!   The `UncertaintyAware` policy then provisions each pool for a
+//!   quantile of *its* weighted forecast: a burst of tight-TTFT
+//!   interactive prompts grows the prefill pool first, a backlog of long
+//!   deadline-bound generations grows the decode pool. Class-blind
+//!   serving weighs everything 1, as elsewhere.
+
+use crate::autoscale::AutoscaleView;
+use crate::config::PoolRole;
+use crate::core::RequestId;
+
+use super::ctx::ClusterCtx;
+use super::replica::ReplicaState;
+
+impl ClusterCtx {
+    /// Snapshot one pool for its autoscale policy instance. Mirrors
+    /// [`ClusterCtx::autoscale_view`] with every term restricted to (or
+    /// split for) `pool`; see the module docs for the split. Iteration is
+    /// id-sorted so the floating-point sums are deterministic.
+    pub(crate) fn pool_autoscale_view(&self, now: f64, pool: PoolRole) -> AutoscaleView {
+        let mut active = 0;
+        let mut provisioning = 0;
+        let mut down = 0;
+        let mut draining = 0;
+        let mut total_live = 0;
+        let mut total_queued = 0;
+        let mut occ_sum = 0.0;
+        for r in &self.replicas {
+            if r.pool != Some(pool) {
+                continue;
+            }
+            match r.state {
+                ReplicaState::Active => {
+                    active += 1;
+                    total_live += r.coord.live_count();
+                    total_queued += r.coord.queued_count();
+                    let total = r.coord.kv.total_blocks();
+                    if total > 0 {
+                        occ_sum += r.coord.kv.used_blocks() as f64 / total as f64;
+                    }
+                }
+                ReplicaState::Provisioning => provisioning += 1,
+                ReplicaState::Down => down += 1,
+                ReplicaState::Draining => draining += 1,
+                ReplicaState::Retired => {}
+            }
+        }
+        let mean_kv_occupancy = if active > 0 {
+            occ_sum / active as f64
+        } else {
+            0.0
+        };
+        let mut ids: Vec<RequestId> = self.in_flight.keys().copied().collect();
+        ids.sort_unstable();
+        let mut backlog_mean = 0.0;
+        let mut backlog_var = 0.0;
+        let mut backlog_weighted_mean = 0.0;
+        let mut backlog_weighted_var = 0.0;
+        for id in ids {
+            let f = &self.in_flight[&id];
+            let prefill = self.cost.consumed(f.req.input_len, 0).min(f.cost);
+            let decode = (f.cost - prefill).max(0.0);
+            // remaining prefill work is owed only while the request still
+            // sits in the prefill pool; once it rides the fabric (or lands
+            // on a decode replica) only decode work remains
+            let awaiting_prefill = !self.in_transfer.contains(&id)
+                && self.replicas[f.replica].pool == Some(PoolRole::Prefill);
+            let (mean, var) = match pool {
+                PoolRole::Prefill if awaiting_prefill => (prefill, 0.0),
+                PoolRole::Prefill => (0.0, 0.0),
+                PoolRole::Decode => (decode, f.var),
+            };
+            if mean <= 0.0 && var <= 0.0 {
+                continue;
+            }
+            let w = if self.cfg.slo.class_aware {
+                match pool {
+                    PoolRole::Prefill => self.cfg.slo.specs.prefill_weight(f.req.slo),
+                    PoolRole::Decode => self.cfg.slo.specs.decode_weight(f.req.slo),
+                }
+            } else {
+                1.0
+            };
+            backlog_mean += mean;
+            backlog_var += var;
+            backlog_weighted_mean += w * mean;
+            backlog_weighted_var += w * w * var;
+        }
+        AutoscaleView {
+            now,
+            active,
+            provisioning,
+            down,
+            draining,
+            total_live,
+            total_queued,
+            mean_kv_occupancy,
+            backlog_mean,
+            backlog_var,
+            backlog_weighted_mean,
+            backlog_weighted_var,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cluster::EventCluster;
+    use crate::config::{ExperimentConfig, PolicyKind, PoolRole, RouterKind};
+    use crate::workload::WorkloadGen;
+
+    fn disagg_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = PolicyKind::SageSched;
+        cfg.workload.n_requests = 40;
+        cfg.workload.rps = 20.0;
+        cfg.warmup_fraction = 0.0;
+        cfg.history_prewarm = 0;
+        cfg.cluster.replicas = 4;
+        cfg.cluster.pools = vec![PoolRole::Prefill, PoolRole::Decode];
+        cfg
+    }
+
+    #[test]
+    fn pool_views_partition_the_roster() {
+        let cfg = disagg_cfg();
+        let cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
+        let pf = cluster.pool_autoscale_view(0.0, PoolRole::Prefill);
+        let dec = cluster.pool_autoscale_view(0.0, PoolRole::Decode);
+        assert_eq!(pf.active, 2);
+        assert_eq!(dec.active, 2);
+        assert_eq!(pf.active + dec.active, cluster.autoscale_view(0.0).active);
+    }
+
+    #[test]
+    fn pool_forecasts_split_cost_at_the_prefill_boundary() {
+        let cfg = disagg_cfg();
+        let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+        let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
+        // dispatch a few arrivals without running: everything now waits in
+        // the prefill pool, so the prefill view owes the prompt work and
+        // the decode view already forecasts the decode remainder
+        for req in workload.requests.into_iter().take(8) {
+            let at = req.arrival;
+            cluster.dispatch(req, at).unwrap();
+        }
+        let pf = cluster.pool_autoscale_view(1.0, PoolRole::Prefill);
+        let dec = cluster.pool_autoscale_view(1.0, PoolRole::Decode);
+        assert!(pf.backlog_mean > 0.0, "prompts owe prefill work");
+        assert!(dec.backlog_mean > 0.0, "forecast decode work rides along");
+        assert!(
+            pf.backlog_var == 0.0,
+            "prefill cost is deterministic given the prompt"
+        );
+        assert!(dec.backlog_var > 0.0, "output-length uncertainty is decode-side");
+        let total = cluster.autoscale_view(1.0);
+        let sum = pf.backlog_mean + dec.backlog_mean;
+        assert!(
+            (sum - total.backlog_mean).abs() < 1e-6,
+            "pool split must conserve the cluster forecast: {sum} vs {}",
+            total.backlog_mean
+        );
+    }
+
+    #[test]
+    fn slo_aware_pools_weigh_tightness_not_just_class() {
+        use crate::slo::{SloClass, SloSpecs};
+        let specs = SloSpecs::default();
+        // interactive TTFT (2s) is 4x tighter than standard's (8s): the
+        // prefill weight must multiply the base weight by that tightness
+        let w = specs.prefill_weight(SloClass::Interactive);
+        let base = specs.spec(SloClass::Interactive).weight;
+        assert!((w - base * 4.0).abs() < 1e-12);
+        // standard is its own reference on both sides
+        assert!((specs.prefill_weight(SloClass::Standard) - 1.0).abs() < 1e-12);
+        assert!((specs.decode_weight(SloClass::Standard) - 1.0).abs() < 1e-12);
+        // batch deadlines are looser than standard's: weight shrinks
+        assert!(specs.decode_weight(SloClass::Batch) < specs.spec(SloClass::Batch).weight);
+    }
+}

@@ -28,6 +28,7 @@
 use std::collections::BinaryHeap;
 
 use crate::core::Request;
+use crate::serve::MigratedRequest;
 
 /// What a kernel event does when it fires. The payload owns any data the
 /// handler needs (an arrival owns its [`Request`]), so popping an event
@@ -47,6 +48,11 @@ pub enum EventPayload {
     DomainFail { domain: usize },
     /// An autoscaler decision point.
     Decision,
+    /// A KV transfer over the disaggregation fabric completes: the
+    /// prefilled request (generated prefix, first-token timestamp) lands
+    /// in the decode pool. Owns its [`MigratedRequest`] like an arrival
+    /// owns its [`Request`].
+    TransferDone(MigratedRequest),
     /// A request arrives at the cluster front door.
     Arrival(Request),
 }
@@ -54,26 +60,32 @@ pub enum EventPayload {
 impl EventPayload {
     /// Tie-break class at equal times (smaller fires first): capacity
     /// arrives before capacity leaves, decisions observe the
-    /// post-transition state, arrivals route over the post-transition set.
+    /// post-transition state, completed transfers deliver already-admitted
+    /// work before fresh arrivals route, arrivals route over the
+    /// post-transition set.
     pub fn class(&self) -> u8 {
         match self {
             EventPayload::SpawnReady { .. } => 0,
             EventPayload::Recover { .. } | EventPayload::DomainRecover { .. } => 1,
             EventPayload::Fail { .. } | EventPayload::DomainFail { .. } => 2,
             EventPayload::Decision => 3,
-            EventPayload::Arrival(_) => 4,
+            EventPayload::TransferDone(_) => 4,
+            EventPayload::Arrival(_) => 5,
         }
     }
 }
 
 /// Number of distinct [`EventPayload::class`] values (pending-count slots).
-const N_CLASSES: usize = 5;
+const N_CLASSES: usize = 6;
 
 /// Class index of [`EventPayload::Decision`] events.
 const CLASS_DECISION: usize = 3;
 
+/// Class index of [`EventPayload::TransferDone`] events.
+const CLASS_TRANSFER: usize = 4;
+
 /// Class index of [`EventPayload::Arrival`] events.
-const CLASS_ARRIVAL: usize = 4;
+const CLASS_ARRIVAL: usize = 5;
 
 /// One scheduled event: fire time, tie-break class, push sequence number,
 /// and the payload handed to the handling component.
@@ -181,6 +193,12 @@ impl EventQueue {
     /// Pending autoscaler decision points.
     pub fn pending_decisions(&self) -> usize {
         self.pending[CLASS_DECISION]
+    }
+
+    /// Pending KV-fabric transfer completions (requests in flight between
+    /// the prefill and decode pools — live work the cluster still owes).
+    pub fn pending_transfers(&self) -> usize {
+        self.pending[CLASS_TRANSFER]
     }
 }
 

@@ -10,6 +10,7 @@
 //! [`crate::cluster::components`] decide when these mechanics fire.
 
 use crate::autoscale::{AutoscaleView, ScaleAction, ScalingEvent};
+use crate::config::PoolRole;
 use crate::core::{Request, RequestId};
 use crate::util::stats::normal_quantile_clamped;
 
@@ -173,10 +174,11 @@ impl ClusterCtx {
         }
     }
 
-    /// Append a fresh cold replica in the Provisioning state. Heterogeneity
-    /// vectors keep cycling at the new index, and the replica gets its own
+    /// Append a fresh cold replica in the Provisioning state, joining pool
+    /// `pool` (`None` under colocated serving). Heterogeneity vectors keep
+    /// cycling at the new index, and the replica gets its own
     /// deterministic seed, so elastic runs stay exactly reproducible.
-    pub(crate) fn spawn_replica(&mut self, now: f64) -> usize {
+    pub(crate) fn spawn_replica(&mut self, now: f64, pool: Option<PoolRole>) -> usize {
         let i = self.replicas.len();
         let profile = self.cfg.cluster.replica_profile(&self.cfg.engine, i);
         let seed = self.cfg.seed ^ ((i as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
@@ -189,6 +191,7 @@ impl ClusterCtx {
             coord,
             speed: self.cfg.cluster.speed_of(i),
             state: ReplicaState::Provisioning,
+            pool,
             down_since: 0.0,
             downtime: 0.0,
             spawned_at: now,
@@ -319,7 +322,11 @@ impl ClusterCtx {
         if kv_cost <= 0.0 {
             return Ok(());
         }
-        let views = self.views();
+        // under disaggregation a drain migrates within the victim's pool:
+        // decode partials must not land on a prefill replica (or vice
+        // versa), or the pool discipline the fabric enforces would leak
+        let pool = self.replicas[victim].pool;
+        let views = self.views_for(pool);
         if views.is_empty() {
             return Ok(());
         }
@@ -362,7 +369,7 @@ impl ClusterCtx {
             // (non-empty: selection above required a fitting target)
             let needed = Self::blocks_for(m.req.input_len, m.generated);
             let mut eligible: Vec<ReplicaView> = self
-                .views()
+                .views_for(pool)
                 .into_iter()
                 .filter(|v| v.kv_total_blocks >= needed)
                 .collect();

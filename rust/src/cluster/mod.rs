@@ -18,8 +18,10 @@
 //!   concern: [`ArrivalSource`] (workload in), [`FailureInjector`]
 //!   (single-replica outages + correlated failure domains),
 //!   [`AutoscaleDriver`] (elastic scale-out/in, including
-//!   migration-cost-aware victim selection), [`WorkStealer`]
-//!   (idle-replica stealing), and [`SloAdmission`] (the
+//!   migration-cost-aware victim selection and per-pool policies under
+//!   disaggregation), [`TransferFabric`] (the disaggregated prefill →
+//!   decode KV handoff over bandwidth-limited links), [`WorkStealer`]
+//!   (idle-replica stealing, pool-confined), and [`SloAdmission`] (the
 //!   placement/admission seam). Components talk through the kernel, never
 //!   to each other.
 //! * [`EventCluster`] (this file) — the orchestrator: it owns the context,
@@ -51,11 +53,21 @@
 //! which failure/re-routing is most interesting — lives in
 //! [`crate::workload::arrivals`] and is configured per workload.
 //!
+//! Disaggregated serving ([`disagg`]): with
+//! [`ClusterConfig::pools`](crate::config::ClusterConfig) non-empty the
+//! roster splits into a prefill pool and a decode pool. Fresh arrivals
+//! route over the prefill pool only; once a request reaches its first
+//! token the [`TransferFabric`] ships its KV to the decode pool over
+//! bandwidth-limited links, and each pool is sized by its own autoscale
+//! policy instance against the pool's share of the forecast (TTFT-weighted
+//! prefill cost vs TPOT-weighted decode cost under the SLO-aware policy).
+//!
 //! The legacy fig12 **overhead measurement** ([`ClusterSim`]) is kept as a
 //! secondary mode behind `sagesched cluster --overhead`; see [`overhead`].
 
 pub mod components;
 pub mod ctx;
+pub mod disagg;
 pub mod kernel;
 pub mod lifecycle;
 pub mod overhead;
@@ -64,7 +76,7 @@ pub mod router;
 
 pub use components::{
     ArrivalSource, AutoscaleDriver, ClusterComponent, FailureInjector, SloAdmission,
-    WorkStealer,
+    TransferFabric, WorkStealer,
 };
 pub use ctx::ClusterCtx;
 pub use kernel::{EventPayload, EventQueue, KernelEvent};
@@ -129,6 +141,9 @@ impl EventCluster {
             Box::new(AutoscaleDriver::new(&self.ctx.cfg)),
             Box::new(FailureInjector::default()),
             Box::new(ArrivalSource::new(requests)),
+            // the fabric observes prefill completions before the stealer
+            // runs, so freshly-drained replicas are visible as steal targets
+            Box::new(TransferFabric::new(&self.ctx.cfg)),
             Box::new(WorkStealer),
             Box::new(SloAdmission),
         ];
@@ -137,7 +152,7 @@ impl EventCluster {
         }
         loop {
             for c in components.iter_mut() {
-                c.on_quiescent(&mut self.ctx)?;
+                c.on_quiescent(&mut self.ctx, &mut kernel)?;
             }
             let next_t = kernel.peek_at();
             match (self.ctx.earliest_busy(), next_t) {

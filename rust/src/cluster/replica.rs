@@ -9,6 +9,7 @@
 //! [`ClusterCtx`](crate::cluster::ClusterCtx) — this module only defines
 //! what a replica *is*, not when it changes.
 
+use crate::config::PoolRole;
 use crate::core::Request;
 use crate::engine::SimEngine;
 use crate::serve::Coordinator;
@@ -39,6 +40,10 @@ pub struct ClusterReplica {
     /// Lifecycle state; only [`ReplicaState::Active`] replicas are
     /// routable, only Active/Draining ones can hold live work.
     pub state: ReplicaState,
+    /// Pool role under disaggregated serving (`None` = colocated: the
+    /// replica runs both phases). Fixed at spawn; a replica never changes
+    /// pools.
+    pub pool: Option<PoolRole>,
     /// Virtual time the current outage began (meaningful while Down).
     pub(crate) down_since: f64,
     /// Accumulated downtime over completed outages (seconds).

@@ -689,6 +689,45 @@ impl AutoscaleConfig {
     }
 }
 
+/// Pool role of one replica under disaggregated prefill/decode serving.
+///
+/// Prefill replicas run prompts to first token and hand the request off
+/// through the KV-transfer fabric; decode replicas receive the handoff and
+/// run the remaining decode. With [`ClusterConfig::pools`] empty the
+/// cluster is *colocated* — every replica serves both phases — and no role
+/// is assigned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PoolRole {
+    /// Compute-bound pool: runs prompts to first token only.
+    Prefill,
+    /// Memory-bound pool: receives prefilled requests over the fabric and
+    /// decodes them to completion.
+    Decode,
+}
+
+impl PoolRole {
+    pub const ALL: [PoolRole; 2] = [PoolRole::Prefill, PoolRole::Decode];
+
+    /// Dense index (0 = prefill, 1 = decode) for per-pool counter arrays.
+    pub fn index(&self) -> usize {
+        match self {
+            PoolRole::Prefill => 0,
+            PoolRole::Decode => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolRole::Prefill => "prefill",
+            PoolRole::Decode => "decode",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PoolRole> {
+        PoolRole::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
 /// Multi-replica cluster shape for the event-driven cluster simulation.
 ///
 /// The heterogeneity vectors are *cycled* over replica indices (replica `i`
@@ -738,6 +777,25 @@ pub struct ClusterConfig {
     /// migrate-vs-wait decision). Pricing the tail rather than the mean is
     /// what keeps a predicted-long straggler from anchoring a drain.
     pub migration_quantile: f64,
+    /// Disaggregated prefill/decode serving: per-replica pool roles,
+    /// cycled over replica indices like the heterogeneity vectors. Empty
+    /// (the default) is colocated serving — every replica runs both
+    /// phases and no KV-transfer fabric exists. Non-empty lists must
+    /// yield at least one replica of each role over the initial fleet.
+    pub pools: Vec<PoolRole>,
+    /// KV-transfer fabric: bandwidth of one link in resident KV tokens
+    /// per second. A handoff of a request holding `input_len + generated`
+    /// KV tokens occupies a link for `tokens / bandwidth` seconds.
+    pub transfer_bandwidth: f64,
+    /// KV-transfer fabric: number of parallel links. Handoffs queue on
+    /// the earliest-free link, so a burst of prefill completions drains
+    /// at `links * bandwidth` aggregate throughput.
+    pub transfer_links: usize,
+    /// Router for delivering fabric handoffs into the decode pool. `None`
+    /// (the default) uses the front-door [`RouterKind`] — but always as a
+    /// separate instance, so per-pool router state (round-robin cursors)
+    /// never aliases. Ignored in colocated mode.
+    pub decode_router: Option<RouterKind>,
 }
 
 impl Default for ClusterConfig {
@@ -756,14 +814,20 @@ impl Default for ClusterConfig {
             steal_transfer_per_token: 2.0,
             migration_kv_per_token: 0.0,
             migration_quantile: 0.9,
+            pools: Vec::new(),
+            transfer_bandwidth: 20_000.0,
+            transfer_links: 2,
+            decode_router: None,
         }
     }
 }
 
 impl ClusterConfig {
-    /// Migration-parameter bounds shared by every config surface (CLI,
-    /// JSON, and the cluster's own run-time validation) — one home, so the
-    /// valid ranges cannot drift between surfaces.
+    /// Migration, stealing, and disaggregation parameter bounds shared by
+    /// every config surface (CLI, JSON, and the cluster's own run-time
+    /// validation) — one home, so the valid ranges cannot drift between
+    /// surfaces. Out-of-range quantiles are rejected here rather than
+    /// flowing silently into `normal_quantile`.
     pub fn validate(&self) -> Result<(), String> {
         if self.migration_kv_per_token < 0.0 || self.migration_kv_per_token.is_nan() {
             return Err("cluster.migration_kv_per_token must be >= 0".to_string());
@@ -771,7 +835,43 @@ impl ClusterConfig {
         if !(0.0 < self.migration_quantile && self.migration_quantile < 1.0) {
             return Err("cluster.migration_quantile must be in (0,1)".to_string());
         }
+        if self.steal_transfer_per_token < 0.0 || self.steal_transfer_per_token.is_nan()
+        {
+            return Err("cluster.steal_transfer_per_token must be >= 0".to_string());
+        }
+        if !(self.transfer_bandwidth > 0.0 && self.transfer_bandwidth.is_finite()) {
+            return Err("cluster.transfer_bandwidth must be finite and > 0".to_string());
+        }
+        if self.transfer_links == 0 {
+            return Err("cluster.transfer_links must be >= 1".to_string());
+        }
+        if !self.pools.is_empty() {
+            if self.replicas < 2 {
+                return Err(
+                    "cluster.pools: disaggregation needs at least 2 replicas".to_string()
+                );
+            }
+            for role in PoolRole::ALL {
+                if !(0..self.replicas).any(|i| self.pool_of(i) == Some(role)) {
+                    return Err(format!(
+                        "cluster.pools must yield at least one {} replica \
+                         over the initial fleet",
+                        role.name()
+                    ));
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Whether the cluster runs disaggregated prefill/decode pools.
+    pub fn disagg(&self) -> bool {
+        !self.pools.is_empty()
+    }
+
+    /// Pool role of replica `i` (cycled), `None` under colocated serving.
+    pub fn pool_of(&self, i: usize) -> Option<PoolRole> {
+        Self::cycled(&self.pools, i)
     }
 
     fn cycled<T: Copy>(v: &[T], i: usize) -> Option<T> {
@@ -1408,6 +1508,28 @@ impl ExperimentConfig {
                 c.f64_or("migration_kv_per_token", cfg.cluster.migration_kv_per_token);
             cfg.cluster.migration_quantile =
                 c.f64_or("migration_quantile", cfg.cluster.migration_quantile);
+            if let Some(pools) = c.get("pools").and_then(Json::as_arr) {
+                let mut parsed = Vec::with_capacity(pools.len());
+                for p in pools {
+                    let name = p.as_str().ok_or_else(|| {
+                        "cluster.pools: entries must be strings".to_string()
+                    })?;
+                    parsed.push(PoolRole::from_name(name).ok_or_else(|| {
+                        format!("cluster.pools: unknown pool role {name}")
+                    })?);
+                }
+                cfg.cluster.pools = parsed;
+            }
+            cfg.cluster.transfer_bandwidth =
+                c.f64_or("transfer_bandwidth", cfg.cluster.transfer_bandwidth);
+            cfg.cluster.transfer_links =
+                c.f64_or("transfer_links", cfg.cluster.transfer_links as f64) as usize;
+            if let Some(r) = c.get("decode_router").and_then(Json::as_str) {
+                cfg.cluster.decode_router = Some(
+                    RouterKind::from_name(r)
+                        .ok_or_else(|| format!("unknown decode_router {r}"))?,
+                );
+            }
             cfg.cluster.validate()?;
             if let Some(a) = c.get("autoscale") {
                 let asc = &mut cfg.cluster.autoscale;
@@ -1722,6 +1844,57 @@ mod tests {
             let j = Json::parse(bad).unwrap();
             assert!(ExperimentConfig::from_json(&j).is_err(), "accepted {bad}");
         }
+    }
+
+    #[test]
+    fn from_json_parses_disagg_blocks() {
+        let j = Json::parse(
+            r#"{"cluster":{"replicas":4,"pools":["prefill","decode"],
+                "transfer_bandwidth":5000,"transfer_links":3,
+                "decode_router":"least-kv"}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert!(c.cluster.disagg());
+        assert_eq!(c.cluster.pools, vec![PoolRole::Prefill, PoolRole::Decode]);
+        // roles cycle over replica indices like the heterogeneity vectors
+        assert_eq!(c.cluster.pool_of(2), Some(PoolRole::Prefill));
+        assert_eq!(c.cluster.pool_of(3), Some(PoolRole::Decode));
+        assert_eq!(c.cluster.transfer_bandwidth, 5000.0);
+        assert_eq!(c.cluster.transfer_links, 3);
+        assert_eq!(c.cluster.decode_router, Some(RouterKind::LeastKv));
+    }
+
+    #[test]
+    fn cluster_validate_rejects_out_of_range_knobs() {
+        // migration_quantile out of (0,1) must be a hard config error on
+        // every surface, not silently fed into normal_quantile
+        for bad in [
+            r#"{"cluster":{"migration_quantile":1.0}}"#,
+            r#"{"cluster":{"migration_quantile":0.0}}"#,
+            r#"{"cluster":{"migration_quantile":-0.5}}"#,
+            r#"{"cluster":{"migration_kv_per_token":-1}}"#,
+            r#"{"cluster":{"transfer_bandwidth":0}}"#,
+            r#"{"cluster":{"transfer_bandwidth":-2}}"#,
+            r#"{"cluster":{"transfer_links":0}}"#,
+            r#"{"cluster":{"pools":["prefill"]}}"#,
+            r#"{"cluster":{"pools":["zzz","decode"]}}"#,
+            r#"{"cluster":{"replicas":1,"pools":["prefill","decode"]}}"#,
+            r#"{"cluster":{"replicas":2,"pools":["decode","decode"]}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+        // the shared validator also rejects NaN knobs CLI parsing can produce
+        let mut c = ClusterConfig::default();
+        c.steal_transfer_per_token = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = ClusterConfig::default();
+        c.migration_quantile = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = ClusterConfig::default();
+        c.transfer_bandwidth = f64::INFINITY;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -17,8 +17,8 @@ use anyhow::{bail, Context, Result};
 use sagesched::cluster::{run_router_experiment, ClusterSim};
 use sagesched::config::{
     ArrivalKind, AutoscaleKind, CostModelKind, DomainFailureEvent, EngineProfile,
-    ExperimentConfig, FailureDomain, FailureEvent, PolicyKind, PredictorKind,
-    RouterKind, ScaleStep,
+    ExperimentConfig, FailureDomain, FailureEvent, PolicyKind, PoolRole,
+    PredictorKind, RouterKind, ScaleStep,
 };
 use sagesched::metrics::ClusterReport;
 use sagesched::engine::RealEngine;
@@ -114,8 +114,35 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
         args.f64_or("migrate-kv", cfg.cluster.migration_kv_per_token);
     cfg.cluster.migration_quantile =
         args.f64_or("migrate-quantile", cfg.cluster.migration_quantile);
+    // disaggregated prefill/decode serving: --disagg alone splits the
+    // roster alternating prefill/decode; --pool names the cycle explicitly
+    if args.has("disagg") && cfg.cluster.pools.is_empty() {
+        cfg.cluster.pools = vec![PoolRole::Prefill, PoolRole::Decode];
+    }
+    if let Some(p) = args.get("pool") {
+        cfg.cluster.pools = p
+            .split(',')
+            .map(|s| {
+                PoolRole::from_name(s.trim())
+                    .ok_or_else(|| anyhow::anyhow!("--pool: unknown pool role {s:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    cfg.cluster.transfer_bandwidth =
+        args.f64_or("transfer-bandwidth", cfg.cluster.transfer_bandwidth);
+    cfg.cluster.transfer_links =
+        args.usize_or("transfer-links", cfg.cluster.transfer_links);
+    if let Some(r) = args.get("decode-router") {
+        cfg.cluster.decode_router =
+            Some(RouterKind::from_name(r).context("unknown --decode-router")?);
+    }
     if let Err(e) = cfg.cluster.validate() {
-        bail!("{e} (--migrate-kv/--migrate-quantile)");
+        let hint = if e.contains("transfer") || e.contains("pool") {
+            "--disagg/--pool/--transfer-bandwidth/--transfer-links"
+        } else {
+            "--migrate-kv/--migrate-quantile"
+        };
+        bail!("{e} ({hint})");
     }
     if let Some(a) = args.get("autoscale") {
         cfg.cluster.autoscale.kind =
@@ -514,6 +541,22 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             cfg.cluster.migration_quantile * 100.0
         );
     }
+    if cfg.cluster.disagg() {
+        let pools: Vec<&str> = (0..cfg.cluster.replicas)
+            .map(|i| cfg.cluster.pool_of(i).map(|p| p.name()).unwrap_or("?"))
+            .collect();
+        println!(
+            "# disaggregated: pools [{}] · transfer fabric {} links × {:.0} \
+             tokens/s{}",
+            pools.join(","),
+            cfg.cluster.transfer_links,
+            cfg.cluster.transfer_bandwidth,
+            cfg.cluster
+                .decode_router
+                .map(|r| format!(" · decode router {}", r.name()))
+                .unwrap_or_default()
+        );
+    }
     if cfg.workload.sessions.enabled {
         let s = &cfg.workload.sessions;
         println!(
@@ -561,6 +604,21 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             r.goodput_per_replica_second,
             r.slo_weighted_goodput_per_replica_second
         );
+        if r.transfers > 0 || !r.pool_replica_seconds.is_empty() {
+            let pools = if r.pool_replica_seconds.len() == 2 {
+                format!(
+                    ", prefill/decode replica-s {:.0}/{:.0}",
+                    r.pool_replica_seconds[0], r.pool_replica_seconds[1]
+                )
+            } else {
+                String::new()
+            };
+            println!(
+                "  fabric: {} transfers, {} kv tokens shipped, utilization \
+                 {:.3}{pools}",
+                r.transfers, r.transfer_tokens, r.transfer_utilization
+            );
+        }
         print_kv_summary(&r.aggregate);
         print_slo_summary(&r.aggregate);
     }
@@ -657,6 +715,18 @@ const USAGE: &str = "usage: sagesched <run|sweep|smoke|serve|cluster> [flags]
           --scale-kv-high 0.85 --scale-kv-low 0.3 reactive KV watermarks
           --scale-quantile 0.9 --scale-work 1e6   uncertainty-aware
           --scale-prewarm               prewarm new replicas' predictors
+          disaggregated prefill/decode pools (cluster):
+          --disagg                      split replicas into prefill/decode
+                                        pools (alternating); prefill runs
+                                        each prompt to first token, a
+                                        bandwidth-limited KV-transfer fabric
+                                        ships it to the decode pool; each
+                                        pool autoscales independently
+          --pool prefill,prefill,decode,decode  explicit role cycle
+          --transfer-bandwidth 20000    fabric link bandwidth (kv tokens/s)
+          --transfer-links 2            parallel fabric links
+          --decode-router least-kv      decode-pool delivery router
+                                        (defaults to the main router)
   cluster --overhead   fig12 shared-service overhead sweep (--nodes 1,4,16,64)
   gen-trace record a workload trace           (--out trace.jsonl --n 1000)
   SLO classes (run / sweep / cluster / gen-trace):

@@ -29,6 +29,10 @@ pub struct SloClassStats {
     pub aborted: u64,
     /// Full-run completions that met both the TTFT and TTLT targets.
     pub attained: u64,
+    /// Full-run completions that met the TTFT target alone — the
+    /// first-token responsiveness headline disaggregated serving
+    /// optimizes for (a request may still miss its completion deadline).
+    pub ttft_attained: u64,
     /// Post-warmup outcomes the summaries below cover.
     pub measured: usize,
     pub ttft: Summary,
@@ -49,6 +53,19 @@ impl SloClassStats {
             0.0
         } else {
             self.attained as f64 / n as f64
+        }
+    }
+
+    /// Fraction of *submitted* requests whose first token met the TTFT
+    /// target (same denominator discipline as [`attainment`]).
+    ///
+    /// [`attainment`]: SloClassStats::attainment
+    pub fn ttft_attainment(&self) -> f64 {
+        let n = self.submitted();
+        if n == 0 {
+            0.0
+        } else {
+            self.ttft_attained as f64 / n as f64
         }
     }
 }
@@ -78,6 +95,9 @@ pub fn slo_class_stats(
             s.completed += 1;
             if spec.attained(o.ttft(), o.ttlt()) {
                 s.attained += 1;
+            }
+            if o.ttft() <= spec.ttft_target {
+                s.ttft_attained += 1;
             }
         }
         let sub: Vec<&RequestOutcome> =
@@ -291,6 +311,8 @@ impl RunReport {
                     ("aborted", Json::num(s.aborted as f64)),
                     ("attained", Json::num(s.attained as f64)),
                     ("attainment", Json::num(s.attainment())),
+                    ("ttft_attained", Json::num(s.ttft_attained as f64)),
+                    ("ttft_attainment", Json::num(s.ttft_attainment())),
                     ("measured", Json::num(s.measured as f64)),
                     ("ttft", summary(&s.ttft)),
                     ("ttlt", summary(&s.ttlt)),
@@ -398,6 +420,19 @@ pub struct ClusterReport {
     /// Completion imbalance: max replica completions / mean replica
     /// completions (1.0 = perfectly balanced; 0.0 when nothing completed).
     pub imbalance: f64,
+    /// Prefill→decode handoffs delivered over the KV-transfer fabric
+    /// (disaggregated serving; 0 colocated).
+    pub transfers: u64,
+    /// KV tokens shipped across the fabric (prompt + generated prefix per
+    /// handoff).
+    pub transfer_tokens: u64,
+    /// Fabric busy-time / (links × horizon): the fraction of aggregate
+    /// link capacity the handoffs consumed. 0 when colocated.
+    pub transfer_utilization: f64,
+    /// Billed replica-seconds by pool (`[prefill, decode]` in
+    /// [`PoolRole::ALL`](crate::config::PoolRole) order); empty when
+    /// colocated.
+    pub pool_replica_seconds: Vec<f64>,
 }
 
 /// Cluster lifecycle counters feeding a [`ClusterReport`] (kept separate so
@@ -424,6 +459,14 @@ pub struct ClusterCounters {
     pub replica_seconds: Vec<f64>,
     /// Replica lifecycle timeline.
     pub scaling_events: Vec<ScalingEvent>,
+    /// Prefill→decode handoffs delivered over the KV-transfer fabric.
+    pub transfers: u64,
+    /// KV tokens shipped across the fabric.
+    pub transfer_tokens: u64,
+    /// Fabric busy-time / (links × horizon).
+    pub transfer_utilization: f64,
+    /// Billed replica-seconds by pool (empty when colocated).
+    pub pool_replica_seconds: Vec<f64>,
 }
 
 impl ClusterReport {
@@ -472,6 +515,12 @@ impl ClusterReport {
             aggregate.pred_fallback += r.pred_fallback;
             aggregate.pred_cold += r.pred_cold;
             aggregate.kv_peak_used_blocks += r.kv_peak_used_blocks;
+            // summing lookups and hits separately makes the aggregate
+            // `kv_prefix_hit_rate()` *lookup-weighted*: a hot replica
+            // serving most of the probes dominates the cluster rate, while
+            // an idle replica's (vacuous) per-replica rate contributes
+            // nothing — averaging the per-replica rates would instead let
+            // it drag the cluster number toward 0
             aggregate.kv_prefix_lookups += r.kv_prefix_lookups;
             aggregate.kv_prefix_hits += r.kv_prefix_hits;
             aggregate.kv_prefill_tokens_saved += r.kv_prefill_tokens_saved;
@@ -544,6 +593,10 @@ impl ClusterReport {
             goodput_per_replica_second,
             slo_weighted_goodput_per_replica_second,
             imbalance,
+            transfers: counters.transfers,
+            transfer_tokens: counters.transfer_tokens,
+            transfer_utilization: counters.transfer_utilization,
+            pool_replica_seconds: counters.pool_replica_seconds,
         }
     }
 
@@ -625,6 +678,13 @@ impl ClusterReport {
                 Json::num(self.slo_weighted_goodput_per_replica_second),
             ),
             ("imbalance", Json::num(self.imbalance)),
+            ("transfers", Json::num(self.transfers as f64)),
+            ("transfer_tokens", Json::num(self.transfer_tokens as f64)),
+            ("transfer_utilization", Json::num(self.transfer_utilization)),
+            (
+                "pool_replica_seconds",
+                Json::arr(self.pool_replica_seconds.iter().map(|&s| Json::num(s))),
+            ),
         ])
     }
 }
@@ -713,6 +773,7 @@ mod tests {
                 replica: 1,
                 action: crate::autoscale::ScaleAction::Drain,
             }],
+            ..ClusterCounters::default()
         };
         let c = ClusterReport::new(
             "least-loaded".into(),
@@ -766,6 +827,44 @@ mod tests {
             2.0
         );
         assert!(j.get("aggregate").unwrap().f64_or("goodput", -1.0) > 0.0);
+    }
+
+    #[test]
+    fn cluster_kv_hit_rate_is_lookup_weighted() {
+        // one hot replica (1000 lookups, 80% hits) + one idle replica
+        // (2 lookups, 0 hits): the cluster rate must track the replica
+        // that served the probes (~79.8%), not the 40% a naive average of
+        // per-replica rates would claim
+        let mut hot = RunReport::from_outcomes(&[outcome(
+            1,
+            DatasetKind::ShareGpt,
+            0.0,
+            1.0,
+            2.0,
+        )]);
+        hot.kv_prefix_lookups = 1000;
+        hot.kv_prefix_hits = 800;
+        let mut idle =
+            RunReport::from_outcomes(&[outcome(2, DatasetKind::Write, 0.5, 1.5, 2.5)]);
+        idle.kv_prefix_lookups = 2;
+        idle.kv_prefix_hits = 0;
+        let merged = vec![
+            outcome(1, DatasetKind::ShareGpt, 0.0, 1.0, 2.0),
+            outcome(2, DatasetKind::Write, 0.5, 1.5, 2.5),
+        ];
+        let c = ClusterReport::new(
+            "least-loaded".into(),
+            vec![hot, idle],
+            ClusterCounters::default(),
+            &merged,
+            0.0,
+            &SloSpecs::default(),
+        );
+        assert_eq!(c.aggregate.kv_prefix_lookups, 1002);
+        assert_eq!(c.aggregate.kv_prefix_hits, 800);
+        let rate = c.aggregate.kv_prefix_hit_rate();
+        assert!((rate - 800.0 / 1002.0).abs() < 1e-12, "got {rate}");
+        assert!(rate > 0.75, "idle replica must not drag the rate to ~0.4");
     }
 
     #[test]

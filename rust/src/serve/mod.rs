@@ -439,6 +439,18 @@ impl<E: Engine> Coordinator<E> {
         out
     }
 
+    /// Drain *every* partially-generated live request, in ascending id
+    /// order — the disaggregated prefill pool's handoff seam: once a
+    /// prompt has run to first token (`generated > 0`) the request leaves
+    /// the prefill replica through the KV-transfer fabric and resumes in
+    /// the decode pool via [`Coordinator::submit_migrated`], keeping its
+    /// generated prefix, first-token timestamp, and warm-prefix chain.
+    pub fn drain_prefilled(&mut self) -> Vec<MigratedRequest> {
+        let ids: Vec<crate::core::RequestId> =
+            self.partial_meta().iter().map(|m| m.0).collect();
+        self.drain_partials(&ids)
+    }
+
     /// Admission-exempt intake of a migrated partially-generated request:
     /// it enters in the *preempted* phase with its prefix length intact,
     /// so the next scheduling iteration resumes it — recompute-mode

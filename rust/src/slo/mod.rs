@@ -165,6 +165,34 @@ impl SloSpecs {
         self.specs.iter()
     }
 
+    /// TTFT-tightness goodput weight of one class: the base weight scaled
+    /// by how much tighter its first-token target is than [`Standard`]'s
+    /// (`w · ttft_ref / ttft_target`). Under disaggregated serving this is
+    /// what the *prefill* pool provisions against — TTFT is paid entirely
+    /// on the prefill side, so a backlog of tight-TTFT work buys the
+    /// prefill pool proportionally more headroom.
+    ///
+    /// [`Standard`]: SloClass::Standard
+    pub fn prefill_weight(&self, class: SloClass) -> f64 {
+        let s = self.spec(class);
+        let ttft_ref = self.spec(SloClass::Standard).ttft_target;
+        s.weight * (ttft_ref / s.ttft_target)
+    }
+
+    /// Completion-tightness (TPOT-side) goodput weight of one class:
+    /// the base weight scaled by how much tighter its completion deadline
+    /// is than [`Standard`]'s (`w · ttlt_ref / ttlt_target`). Under
+    /// disaggregated serving this is what the *decode* pool provisions
+    /// against — token-by-token progress toward the deadline happens
+    /// entirely on the decode side.
+    ///
+    /// [`Standard`]: SloClass::Standard
+    pub fn decode_weight(&self, class: SloClass) -> f64 {
+        let s = self.spec(class);
+        let ttlt_ref = self.spec(SloClass::Standard).ttlt_target;
+        s.weight * (ttlt_ref / s.ttlt_target)
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         for s in &self.specs {
             let bad_num = s.ttft_target.is_nan()

@@ -1,0 +1,166 @@
+//! Disaggregated prefill/decode serving integration tests: request
+//! conservation through the KV-transfer fabric (no loss, no duplication,
+//! bandwidth-respecting delivery times), byte-identical same-seed reports
+//! in disagg mode, and survival of a prefill-pool outage.
+
+use std::collections::BTreeSet;
+
+use sagesched::cluster::{run_router_experiment, EventCluster};
+use sagesched::config::{
+    ExperimentConfig, FailureEvent, PolicyKind, PoolRole, RouterKind,
+};
+use sagesched::workload::WorkloadGen;
+
+fn disagg_cfg(n: usize, rps: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = PolicyKind::SageSched;
+    cfg.workload.n_requests = n;
+    cfg.workload.rps = rps;
+    cfg.warmup_fraction = 0.0;
+    cfg.history_prewarm = 0; // keep the tests fast
+    cfg.cluster.replicas = 4;
+    // [Prefill, Decode] cycles over 4 replicas: 0,2 prefill / 1,3 decode
+    cfg.cluster.pools = vec![PoolRole::Prefill, PoolRole::Decode];
+    cfg
+}
+
+#[test]
+fn fabric_conserves_requests_and_respects_bandwidth() {
+    // every request prefills in the prefill pool, rides the fabric, and
+    // finishes in the decode pool — exactly once, with every fabric hop
+    // taking at least tokens / bandwidth
+    let cfg = disagg_cfg(120, 24.0);
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let submitted: BTreeSet<u64> = workload.requests.iter().map(|r| r.id).collect();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
+    cluster.run(workload.requests).unwrap();
+    assert_eq!(cluster.rejected(), 0, "disagg run rejected requests");
+    let outcomes = cluster.merged_outcomes();
+    assert_eq!(outcomes.len(), 120, "lost or duplicated work");
+    let completed: BTreeSet<u64> = outcomes.iter().map(|o| o.id).collect();
+    assert_eq!(completed, submitted, "completion set != submission set");
+    assert_eq!(cluster.in_flight_count(), 0, "leaked in-flight entries");
+    assert!(
+        cluster.total_backlog() < 1e-6,
+        "leaked predicted backlog: {}",
+        cluster.total_backlog()
+    );
+    // every prompt must have crossed the fabric (at least once — degraded
+    // delivery under KV pressure can bounce a handoff back through prefill)
+    assert!(
+        cluster.transfers >= 120,
+        "only {} fabric handoffs for 120 prompts",
+        cluster.transfers
+    );
+    assert_eq!(cluster.transfer_log.len(), cluster.transfers as usize);
+    assert!(cluster.transfer_tokens > 0);
+    let bandwidth = cfg.cluster.transfer_bandwidth;
+    for &(enqueue, delivery, tokens) in &cluster.transfer_log {
+        let min_delay = tokens as f64 / bandwidth;
+        assert!(
+            delivery - enqueue >= min_delay - 1e-9,
+            "fabric delivered {tokens} tokens in {}s < {min_delay}s floor",
+            delivery - enqueue
+        );
+    }
+    // the report surfaces fabric + pool accounting
+    let report = cluster.report(0.0);
+    assert_eq!(report.transfers, cluster.transfers);
+    assert!(report.transfer_utilization > 0.0);
+    assert!(report.transfer_utilization <= 1.0 + 1e-9);
+    assert_eq!(report.pool_replica_seconds.len(), 2);
+    assert!(report.pool_replica_seconds.iter().all(|&s| s > 0.0));
+}
+
+#[test]
+fn congested_fabric_queues_instead_of_dropping() {
+    // one slow link: handoffs must queue behind each other (some delivery
+    // takes strictly longer than its own serialization time) and still all
+    // arrive
+    let mut cfg = disagg_cfg(120, 40.0);
+    cfg.cluster.transfer_links = 1;
+    cfg.cluster.transfer_bandwidth = 4_000.0;
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
+    cluster.run(workload.requests).unwrap();
+    assert_eq!(cluster.completed(), 120);
+    assert!(cluster.transfers >= 120);
+    let bandwidth = cfg.cluster.transfer_bandwidth;
+    let queued = cluster
+        .transfer_log
+        .iter()
+        .filter(|&&(enq, del, tokens)| del - enq > tokens as f64 / bandwidth + 1e-9)
+        .count();
+    assert!(
+        queued > 0,
+        "a single 4k-token/s link at 40 rps must make some handoff wait"
+    );
+}
+
+#[test]
+fn disagg_reports_are_bit_identical_across_runs() {
+    // same seed, same config, run twice: the fabric (link choice, queueing,
+    // delivery order) must be fully deterministic
+    let cfg = disagg_cfg(120, 20.0);
+    for router in [RouterKind::LeastLoaded, RouterKind::CostAware] {
+        let a = run_router_experiment(&cfg, router).unwrap();
+        let b = run_router_experiment(&cfg, router).unwrap();
+        assert_eq!(a.aggregate.measured, b.aggregate.measured, "{router:?}");
+        assert_eq!(a.aggregate.ttlt.mean, b.aggregate.ttlt.mean, "{router:?}");
+        assert_eq!(a.aggregate.ttlt.p99, b.aggregate.ttlt.p99, "{router:?}");
+        assert_eq!(a.aggregate.ttft.mean, b.aggregate.ttft.mean, "{router:?}");
+        assert_eq!(a.aggregate.makespan, b.aggregate.makespan, "{router:?}");
+        assert_eq!(a.transfers, b.transfers, "{router:?}");
+        assert_eq!(a.transfer_tokens, b.transfer_tokens, "{router:?}");
+        assert_eq!(
+            a.transfer_utilization, b.transfer_utilization,
+            "{router:?}"
+        );
+        assert_eq!(
+            a.pool_replica_seconds, b.pool_replica_seconds,
+            "{router:?}"
+        );
+        assert_eq!(a.routed, b.routed, "{router:?}");
+        let am: Vec<usize> = a.per_replica.iter().map(|r| r.measured).collect();
+        let bm: Vec<usize> = b.per_replica.iter().map(|r| r.measured).collect();
+        assert_eq!(am, bm, "{router:?}");
+    }
+}
+
+#[test]
+fn prefill_pool_outage_conserves_requests() {
+    // replica 0 (prefill pool) fails mid-run: its un-prefilled work is
+    // re-dispatched to the surviving prefill replica, handoffs keep
+    // flowing, and every request still completes exactly once
+    let mut cfg = disagg_cfg(120, 24.0);
+    cfg.cluster.failures = vec![FailureEvent { replica: 0, at: 1.5, duration: 3.0 }];
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let submitted: BTreeSet<u64> = workload.requests.iter().map(|r| r.id).collect();
+    let mut cluster = EventCluster::with_router(&cfg, RouterKind::LeastLoaded);
+    cluster.run(workload.requests).unwrap();
+    let outcomes = cluster.merged_outcomes();
+    let completed: BTreeSet<u64> = outcomes.iter().map(|o| o.id).collect();
+    assert_eq!(completed.len(), outcomes.len(), "duplicated completions");
+    let accounted = outcomes.len() as u64 + cluster.rejected() + cluster.aborted();
+    assert_eq!(accounted, 120, "lost requests under prefill outage");
+    assert_eq!(completed, submitted, "completion set mismatch");
+    assert!(cluster.transfers > 0, "fabric stalled after the outage");
+    assert_eq!(cluster.in_flight_count(), 0, "leaked in-flight entries");
+    assert!(cluster.total_backlog() < 1e-6, "leaked predicted backlog");
+    let report = cluster.report(0.0);
+    assert!((report.downtime[0] - 3.0).abs() < 1e-9);
+}
+
+#[test]
+fn colocated_runs_ignore_the_fabric() {
+    // with no pools configured the fabric must be inert: no transfers, no
+    // utilization, no pool accounting
+    let mut cfg = disagg_cfg(80, 20.0);
+    cfg.cluster.pools.clear();
+    let report = run_router_experiment(&cfg, RouterKind::LeastLoaded).unwrap();
+    assert_eq!(report.aggregate.measured, 80);
+    assert_eq!(report.transfers, 0);
+    assert_eq!(report.transfer_tokens, 0);
+    assert_eq!(report.transfer_utilization, 0.0);
+    assert!(report.pool_replica_seconds.is_empty());
+}
