@@ -1,0 +1,242 @@
+//! Raw-speed harness for the event kernel at fleet scale: one large
+//! MMPP + failures + domain outage + autoscale + sessions scenario, run
+//! under the incremental router indexes and (optionally) the retained
+//! full-rescan oracle, with byte-identical-report gates on both axes.
+//!
+//! Usage:
+//!   cargo bench --bench cluster_scale                 # full 1,000-replica run
+//!   cargo bench --bench cluster_scale -- --smoke      # CI-sized config
+//!   cargo bench --bench cluster_scale -- --skip-oracle
+//!   cargo bench --bench cluster_scale -- --out path/to/BENCH_cluster.json
+//!
+//! The harness exits non-zero if either gate fails:
+//!   1. run-twice: two indexed runs must serialize byte-identically
+//!      (catches nondeterminism creep before it corrupts an A/B number);
+//!   2. oracle: the indexed report must equal the full-rescan report byte
+//!      for byte (the ≥10x speedup claim is only meaningful if the fast
+//!      path computes the *same* simulation).
+//!
+//! Results land in `BENCH_cluster.json` (smoke mode writes under
+//! `bench_out/` so a CI run never clobbers the checked-in baseline).
+
+mod common;
+
+use std::time::Instant;
+
+use sagesched::cluster::EventCluster;
+use sagesched::config::{
+    ArrivalKind, AutoscaleKind, DomainFailureEvent, ExperimentConfig,
+    FailureDomain, FailureEvent, PolicyKind, PredictorKind, RouterKind,
+};
+use sagesched::metrics::{peak_rss_mb, ClusterReport, PerfStats};
+use sagesched::util::json::Json;
+use sagesched::workload::WorkloadGen;
+
+/// Serialize a report with the wallclock-measured overhead fields zeroed —
+/// the only nondeterministic numbers in it (same convention as the golden
+/// test in `tests/slo.rs`).
+fn deterministic_json(mut r: ClusterReport) -> String {
+    r.aggregate.predict_overhead = 0.0;
+    r.aggregate.sched_overhead = 0.0;
+    for pr in &mut r.per_replica {
+        pr.predict_overhead = 0.0;
+        pr.sched_overhead = 0.0;
+    }
+    r.to_json().to_string()
+}
+
+/// The campaign scenario: every hot path at once. Smoke mode shrinks the
+/// fleet and request count to CI scale but keeps every feature switched on
+/// so the same code paths are exercised.
+fn scenario(smoke: bool) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = PolicyKind::SageSched;
+    // the cheap distribution head: the bench measures the event kernel,
+    // not history-predictor lookups
+    cfg.predictor = PredictorKind::Proxy;
+    cfg.warmup_fraction = 0.0;
+    cfg.history_prewarm = 0;
+    cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+    cfg.workload.sessions.enabled = true;
+    cfg.cluster.router = RouterKind::QuantileCost;
+    cfg.cluster.autoscale.kind = AutoscaleKind::UncertaintyAware;
+    cfg.cluster.autoscale.interval = 1.0;
+    cfg.cluster.autoscale.cooldown = 2.0;
+    cfg.cluster.autoscale.provision_delay = 1.0;
+    cfg.cluster.autoscale.work_per_replica = 5.0e5;
+    if smoke {
+        cfg.cluster.replicas = 8;
+        cfg.workload.n_requests = 600;
+        cfg.workload.rps = 40.0;
+        cfg.cluster.autoscale.min_replicas = 6;
+        cfg.cluster.autoscale.max_replicas = 12;
+        cfg.cluster.failures =
+            vec![FailureEvent { replica: 1, at: 3.0, duration: 2.0 }];
+    } else {
+        cfg.cluster.replicas = 1000;
+        cfg.workload.n_requests = 1_000_000;
+        cfg.workload.rps = 2000.0;
+        cfg.cluster.autoscale.min_replicas = 900;
+        cfg.cluster.autoscale.max_replicas = 1100;
+        // individual outages plus a 20-replica rack outage, windows
+        // disjoint (overlapping windows on one replica are a config error)
+        cfg.cluster.failures = vec![
+            FailureEvent { replica: 3, at: 60.0, duration: 30.0 },
+            FailureEvent { replica: 17, at: 180.0, duration: 45.0 },
+        ];
+        cfg.cluster.failure_domains = vec![FailureDomain {
+            name: "rack0".to_string(),
+            replicas: (0..20).collect(),
+        }];
+        cfg.cluster.domain_failures =
+            vec![DomainFailureEvent { domain: 0, at: 300.0, duration: 20.0 }];
+    }
+    cfg
+}
+
+struct ModeRun {
+    stats: PerfStats,
+    report: String,
+}
+
+/// One full run of the scenario with the index fast paths on or off,
+/// timing each phase separately.
+fn run_mode(cfg: &ExperimentConfig, use_indexes: bool) -> ModeRun {
+    let mut phases: Vec<(String, f64)> = Vec::new();
+    let t_total = Instant::now();
+
+    let t = Instant::now();
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(cfg, cfg.cluster.router);
+    cluster.use_indexes = use_indexes;
+    phases.push(("build".to_string(), t.elapsed().as_secs_f64()));
+
+    let t = Instant::now();
+    cluster.prewarm();
+    phases.push(("prewarm".to_string(), t.elapsed().as_secs_f64()));
+
+    let t = Instant::now();
+    cluster.run(workload.requests).expect("cluster run failed");
+    let run_s = t.elapsed().as_secs_f64();
+    phases.push(("run".to_string(), run_s));
+
+    let kernel_events = cluster.kernel_events;
+    let replica_steps = cluster.replica_steps;
+
+    let t = Instant::now();
+    let report = deterministic_json(cluster.report(cfg.warmup_fraction));
+    phases.push(("report".to_string(), t.elapsed().as_secs_f64()));
+
+    let stats = PerfStats {
+        wall_s: t_total.elapsed().as_secs_f64(),
+        kernel_events,
+        replica_steps,
+        events_per_sec: (kernel_events + replica_steps) as f64
+            / run_s.max(1e-9),
+        peak_rss_mb: peak_rss_mb(),
+        phases,
+    };
+    ModeRun { stats, report }
+}
+
+fn print_stats(label: &str, s: &PerfStats) {
+    println!(
+        "  {label:>8}: {:.2}s wall, {} events + {} steps, {:.0} events/s, \
+         peak RSS {:.0} MB",
+        s.wall_s, s.kernel_events, s.replica_steps, s.events_per_sec,
+        s.peak_rss_mb
+    );
+    for (name, secs) in &s.phases {
+        println!("           - {name}: {secs:.3}s");
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let skip_oracle = args.iter().any(|a| a == "--skip-oracle");
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or(if smoke {
+            "bench_out/BENCH_cluster.json"
+        } else {
+            "BENCH_cluster.json"
+        })
+        .to_string();
+
+    let cfg = scenario(smoke);
+    println!(
+        "== cluster_scale ({}) — {} replicas, {} requests ==",
+        if smoke { "smoke" } else { "full" },
+        cfg.cluster.replicas,
+        cfg.workload.n_requests
+    );
+
+    // gate 1: run-twice determinism of the indexed path
+    let indexed = run_mode(&cfg, true);
+    print_stats("indexed", &indexed.stats);
+    let again = run_mode(&cfg, true);
+    if indexed.report != again.report {
+        eprintln!("FAIL: two indexed runs produced different reports");
+        std::process::exit(1);
+    }
+    println!("  run-twice: reports byte-identical");
+
+    // gate 2: indexed vs full-rescan oracle
+    let oracle = if skip_oracle {
+        println!("  oracle: skipped (--skip-oracle)");
+        None
+    } else {
+        let o = run_mode(&cfg, false);
+        print_stats("oracle", &o.stats);
+        if o.report != indexed.report {
+            eprintln!("FAIL: indexed report diverged from the rescan oracle");
+            std::process::exit(1);
+        }
+        println!("  oracle: reports byte-identical");
+        Some(o)
+    };
+
+    let speedup = oracle.as_ref().map(|o| {
+        indexed.stats.events_per_sec / o.stats.events_per_sec.max(1e-9)
+    });
+    if let Some(s) = speedup {
+        println!("  speedup: {s:.1}x events/sec");
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("cluster_scale")),
+        ("mode", Json::str(if smoke { "smoke" } else { "full" })),
+        ("replicas", Json::num(cfg.cluster.replicas as f64)),
+        ("requests", Json::num(cfg.workload.n_requests as f64)),
+        ("router", Json::str(cfg.cluster.router.name())),
+        ("indexed", indexed.stats.to_json()),
+        (
+            "oracle",
+            oracle
+                .as_ref()
+                .map(|o| o.stats.to_json())
+                .unwrap_or(Json::Null),
+        ),
+        (
+            "speedup_events_per_sec",
+            speedup.map(Json::num).unwrap_or(Json::Null),
+        ),
+        ("reports_byte_identical", Json::Bool(true)),
+    ]);
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+    }
+    match std::fs::write(&out, format!("{json}\n")) {
+        Ok(()) => println!("  [json] {out}"),
+        Err(e) => {
+            eprintln!("FAIL: could not write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -62,3 +62,27 @@ pub fn mean(xs: &[f64]) -> f64 {
         xs.iter().sum::<f64>() / xs.len() as f64
     }
 }
+
+/// Map `f` over `items` on one std thread each (rayon is unavailable
+/// offline), returning results in input order. Intended for a handful of
+/// independent sims — the fig sweeps run the same seeded workload under
+/// several routers/policies, and each run is internally deterministic, so
+/// same-seed outputs are unchanged: only wall-clock drops.
+pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .into_iter()
+            .map(|it| s.spawn(move || f(it)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel_map worker panicked"))
+            .collect()
+    })
+}

@@ -3,6 +3,7 @@
 
 use crate::cluster::ctx::ClusterCtx;
 use crate::cluster::replica::InFlight;
+use crate::cluster::router::FastPath;
 use crate::core::Request;
 
 use super::ClusterComponent;
@@ -25,7 +26,25 @@ use super::ClusterComponent;
 ///   on the (draining) victim, which always fits: the request occupied one
 ///   of the victim's admission slots moments ago and nothing was admitted
 ///   there since.
+///
+/// Fresh dispatches through a router with a declared [`FastPath`] are
+/// answered from the incremental indexes (`ClusterCtx::index_route`)
+/// without building any views; the full rescan below is kept verbatim for
+/// everything else — per-request-scored routers, drain re-admission, and
+/// the `use_indexes = false` differential oracle.
 pub struct SloAdmission;
+
+/// Resolved placement handed to the shared admission tail: where the
+/// request goes and the prediction bookkeeping that travels with it.
+struct Placement {
+    target: usize,
+    moved: bool,
+    warm_saving: f64,
+    pcost: f64,
+    pvar: f64,
+    weight: f64,
+    rank: f64,
+}
 
 impl SloAdmission {
     /// Routing core shared by fresh dispatch and the scale-in drain path.
@@ -50,6 +69,53 @@ impl SloAdmission {
         } else {
             1.0
         };
+        // fast path: fresh intake through an index-backed router skips the
+        // view build + rescan entirely. Drain re-admission (`keep_on`)
+        // keeps the rescan — it routes within the victim's pool and needs
+        // the admission-headroom fallback below.
+        if ctx.use_indexes && keep_on.is_none() {
+            let fp = ctx.router.fast_path(&req);
+            if fp != FastPath::Rescan {
+                if let Some(i) = ctx.index_route(fp) {
+                    // per-request warmth probe on the chosen replica only —
+                    // identical arithmetic to the per-view probe below, and
+                    // read-only, so probing one replica instead of all of
+                    // them changes nothing observable
+                    let mut warm_saving = 0.0;
+                    if !req.prefix_key.is_empty() {
+                        let warm = ctx.replicas[i]
+                            .coord
+                            .kv
+                            .cached_prefix_tokens(&req.prefix_key, req.input_len as usize)
+                            as u32;
+                        if warm > 0 {
+                            let warm_cost = ctx
+                                .cost
+                                .cost_dist(req.input_len.saturating_sub(warm), &pred)
+                                .mean();
+                            warm_saving = (pcost - warm_cost).max(0.0);
+                        }
+                    }
+                    return Ok(Self::admit(
+                        ctx,
+                        req,
+                        not_before,
+                        None,
+                        Placement {
+                            target: i,
+                            moved: true,
+                            warm_saving,
+                            pcost,
+                            pvar,
+                            weight,
+                            rank,
+                        },
+                    ));
+                }
+                // empty intake scope (or z-mismatched quantile): fall
+                // through so the rescan produces the canonical error path
+            }
+        }
         // under disaggregation fresh arrivals (and crash re-dispatch, which
         // restarts from scratch and so needs prefill again) enter through
         // the prefill pool; a scale-in drain re-routes within its victim's
@@ -119,7 +185,30 @@ impl SloAdmission {
         let i = target
             .or(keep_on)
             .expect("place: empty routable set without fallback already bailed");
+        Ok(Self::admit(
+            ctx,
+            req,
+            not_before,
+            keep_on,
+            Placement { target: i, moved, warm_saving, pcost, pvar, weight, rank },
+        ))
+    }
+
+    /// Shared admission tail of both routing paths: advance the target's
+    /// clock, submit (exempt for the drain fallback), and book the
+    /// predicted-cost moments on acceptance.
+    fn admit(
+        ctx: &mut ClusterCtx,
+        req: Request,
+        not_before: f64,
+        keep_on: Option<usize>,
+        p: Placement,
+    ) -> bool {
+        let Placement { target: i, moved, warm_saving, pcost, pvar, weight, rank } = p;
         let id = req.id;
+        if ctx.trace_dispatch {
+            ctx.dispatch_trace.push((id, i));
+        }
         ctx.replicas[i].coord.advance_to(req.arrival.max(not_before));
         // the drain fallback is a *migration*: the request already passed
         // admission on the victim, so re-admitting it there is exempt
@@ -146,9 +235,11 @@ impl SloAdmission {
             ctx.routed[i] += 1;
             ctx.steal_dirty = true; // fresh queued work: steal verdicts change
         }
+        // the clock advance alone changes the busy index even on refusal
+        ctx.sync_replica(i);
         // refusals are counted by the coordinator itself (sole owner of the
         // rejected counter; see ClusterCtx::rejected)
-        Ok(moved && accepted)
+        moved && accepted
     }
 }
 

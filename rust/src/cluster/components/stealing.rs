@@ -41,6 +41,15 @@ impl ClusterComponent for WorkStealer {
         // steal remains), so afterwards only a state change can make a new
         // pass worthwhile — the mutators set the flag again
         ctx.steal_dirty = false;
+        // with no idle routable replica there is no thief: the index makes
+        // that an O(1) verdict instead of a full roster scan
+        if ctx.use_indexes && ctx.indexes.idle_thieves() == 0 {
+            debug_assert!(
+                !ctx.replicas.iter().any(|r| r.routable() && r.coord.is_idle()),
+                "idle-thief index diverged from the roster"
+            );
+            return Ok(());
+        }
         let transfer = ctx.cfg.cluster.steal_transfer_per_token;
         'pass: loop {
             // every idle replica is a candidate thief (lowest index first);
@@ -179,6 +188,9 @@ impl ClusterComponent for WorkStealer {
                             ctx.backlog_var[thief] += pvar;
                         }
                     }
+                    // clocks, live sets, and backlogs moved on both sides
+                    ctx.sync_replica(v);
+                    ctx.sync_replica(thief);
                     // the thief is busy now; look for another idle replica
                     continue 'pass;
                 }

@@ -188,6 +188,8 @@ impl TransferFabric {
             ctx.transfer_tokens += tokens;
             ctx.steal_dirty = true;
         }
+        // the advance_to above moved the target's clock even on refusal
+        ctx.sync_replica(target);
         Ok(())
     }
 }
@@ -205,6 +207,13 @@ impl ClusterComponent for TransferFabric {
         if self.link_free.is_empty() {
             return Ok(()); // colocated: no fabric
         }
+        // a partial can only appear through a step/submit on a prefill
+        // replica, and every such mutation syncs that replica — which sets
+        // the dirty flag. So when nothing prefill-side changed since the
+        // last sweep, this scan would extract nothing: skip it.
+        if ctx.use_indexes && !ctx.indexes.fabric_dirty {
+            return Ok(());
+        }
         // index order over replicas, id order within one replica's drain —
         // the whole extraction sequence is deterministic, so link
         // assignment and event seq numbers are too
@@ -215,7 +224,8 @@ impl ClusterComponent for TransferFabric {
             if !steppable || r.pool != Some(PoolRole::Prefill) {
                 continue;
             }
-            if r.coord.partial_meta().is_empty() {
+            // cheap O(live) gate before partial_meta()'s allocation + sort
+            if !r.coord.has_partials() {
                 continue;
             }
             let at = r.coord.now();
@@ -224,6 +234,14 @@ impl ClusterComponent for TransferFabric {
                 self.enqueue(ctx, kernel, i, m, at);
             }
             ctx.steal_dirty = true;
+            // live set and backlog moved off this prefill replica
+            ctx.sync_replica(i);
+        }
+        // the sweep's own syncs re-dirtied the flag; everything it could
+        // observe has been extracted, so clear it until the next
+        // prefill-side change
+        if ctx.use_indexes {
+            ctx.indexes.fabric_dirty = false;
         }
         Ok(())
     }

@@ -16,7 +16,7 @@
 //! float bookkeeping (and therefore downstream routing, scaling, and the
 //! report JSON) could observe the order.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashSet;
 
 use crate::autoscale::ScalingEvent;
 use crate::config::{ExperimentConfig, PoolRole, RouterKind};
@@ -25,10 +25,12 @@ use crate::cost::CostModel;
 use crate::engine::Engine;
 use crate::metrics::{ClusterCounters, ClusterReport, RunReport};
 use crate::predictor::Predictor;
+use crate::util::stats::normal_quantile_clamped;
 
 use super::components::SloAdmission;
-use super::replica::{ClusterReplica, InFlight, ReplicaState};
-use super::router::{make_router, ClassAwareRouter, ReplicaView, Router};
+use super::index::{Metric, RouterIndexes, Sample};
+use super::replica::{ClusterReplica, InFlightTable, ReplicaState};
+use super::router::{make_router, ClassAwareRouter, FastPath, ReplicaView, Router};
 
 /// Shared state of the event-driven cluster: N coordinators on a shared
 /// virtual clock behind a [`Router`], with a shared prediction service and
@@ -47,8 +49,9 @@ pub struct ClusterCtx {
     /// Shared prediction service (prices arrivals; learns from completions).
     pub predictor: Box<dyn Predictor>,
     pub(crate) cost: Box<dyn CostModel>,
-    /// id -> routing + predicted-cost bookkeeping.
-    pub(crate) in_flight: HashMap<RequestId, InFlight>,
+    /// id -> routing + predicted-cost bookkeeping (slab-backed; iteration
+    /// order is arbitrary, consumers sort).
+    pub(crate) in_flight: InFlightTable,
     /// Per-replica sum of predicted cost of in-flight requests.
     pub(crate) backlog: Vec<f64>,
     /// Per-replica sum of predicted cost *variance* of in-flight requests.
@@ -120,6 +123,28 @@ pub struct ClusterCtx {
     pub(crate) steal_dirty: bool,
     /// Replica lifecycle timeline (provision/up/drain/retire/fail/recover).
     pub scaling_events: Vec<ScalingEvent>,
+    /// Incrementally-maintained router score indexes over the intake pool
+    /// (see `cluster/index.rs` for the determinism invariant).
+    pub(crate) indexes: RouterIndexes,
+    /// Differential-oracle toggle: when false, every dispatch and
+    /// quiescent scan uses the retained full-rescan code paths the indexes
+    /// replaced — byte-identical behaviour, pre-optimization cost. Set it
+    /// before the run starts; flipping it mid-run leaves the indexes stale.
+    pub use_indexes: bool,
+    /// When set, every dispatch appends `(request id, replica)` to
+    /// [`ClusterCtx::dispatch_trace`] — the equivalence suite compares
+    /// these traces between indexed and oracle runs.
+    pub trace_dispatch: bool,
+    /// Dispatch sequence recorded under [`ClusterCtx::trace_dispatch`].
+    pub dispatch_trace: Vec<(RequestId, usize)>,
+    /// Kernel events popped this run (perf accounting).
+    pub kernel_events: u64,
+    /// Replica scheduling iterations this run (perf accounting).
+    pub replica_steps: u64,
+    /// Scratch buffers reused across `step_replica` calls (allocation-churn
+    /// control in the hottest path).
+    scratch_completions: Vec<(RequestId, u32)>,
+    scratch_gone: Vec<RequestId>,
 }
 
 impl ClusterCtx {
@@ -165,7 +190,7 @@ impl ClusterCtx {
             }
             boxed
         });
-        ClusterCtx {
+        let mut ctx = ClusterCtx {
             cfg: cfg.clone(),
             backlog: vec![0.0; n],
             backlog_var: vec![0.0; n],
@@ -187,13 +212,28 @@ impl ClusterCtx {
             steal_rejected: HashSet::new(),
             steal_dirty: true,
             scaling_events: Vec::new(),
+            indexes: RouterIndexes::new(
+                cfg.cluster.disagg().then_some(PoolRole::Prefill),
+                normal_quantile_clamped(cfg.cluster.router_quantile),
+            ),
+            use_indexes: true,
+            trace_dispatch: false,
+            dispatch_trace: Vec::new(),
+            kernel_events: 0,
+            replica_steps: 0,
+            scratch_completions: Vec::new(),
+            scratch_gone: Vec::new(),
             replicas,
             router: boxed,
             decode_router,
             predictor,
             cost: crate::cost::make_cost_model(cfg.cost_model),
-            in_flight: HashMap::new(),
+            in_flight: InFlightTable::default(),
+        };
+        for i in 0..ctx.replicas.len() {
+            ctx.index_add_replica(i);
         }
+        ctx
     }
 
     // =======================================================================
@@ -422,8 +462,24 @@ impl ClusterCtx {
     /// hold live work (Down replicas are drained at failure time,
     /// Provisioning/Retired ones never held any), so only those are
     /// stepped — a Draining replica keeps running until its last live
-    /// request finishes.
-    pub(crate) fn earliest_busy(&self) -> Option<(usize, f64)> {
+    /// request finishes. Answered from the busy-clock index; the retained
+    /// roster scan is the oracle under `use_indexes = false` (and the
+    /// debug-build cross-check).
+    pub(crate) fn earliest_busy(&mut self) -> Option<(usize, f64)> {
+        if !self.use_indexes {
+            return self.earliest_busy_scan();
+        }
+        let best = self.indexes.earliest_busy();
+        debug_assert_eq!(
+            best,
+            self.earliest_busy_scan(),
+            "busy index diverged from the roster scan"
+        );
+        best
+    }
+
+    /// Full-roster scan behind [`ClusterCtx::earliest_busy`].
+    fn earliest_busy_scan(&self) -> Option<(usize, f64)> {
         let mut best: Option<(usize, f64)> = None;
         for (i, r) in self.replicas.iter().enumerate() {
             let steppable = matches!(r.state, ReplicaState::Active | ReplicaState::Draining);
@@ -436,6 +492,126 @@ impl ClusterCtx {
             }
         }
         best
+    }
+
+    /// Snapshot the per-replica fields the indexes score from.
+    fn sample_of(&self, i: usize) -> Sample {
+        let r = &self.replicas[i];
+        Sample {
+            state: r.state,
+            pool: r.pool,
+            is_idle: r.coord.is_idle(),
+            now: r.coord.now(),
+            live: r.coord.live_count(),
+            kv_used_blocks: r.coord.kv.used_blocks(),
+            kv_total_blocks: r.coord.kv.total_blocks(),
+            speed: r.speed,
+            backlog: self.backlog[i],
+            backlog_var: self.backlog_var[i],
+        }
+    }
+
+    /// Refresh replica `i`'s index entries after anything that may have
+    /// changed its state, clock, live set, KV usage, or backlog moments.
+    /// Every mutation site calls this; missing one is caught by the
+    /// debug-build cross-checks and the differential-equivalence suite.
+    pub(crate) fn sync_replica(&mut self, i: usize) {
+        if !self.use_indexes {
+            return;
+        }
+        let s = self.sample_of(i);
+        self.indexes.sync(i, &s);
+    }
+
+    /// Register a freshly-appended replica with the indexes. NOT gated on
+    /// `use_indexes`: the probe table must stay in lockstep with the
+    /// roster length even while the oracle runs, or enabling traces later
+    /// would index out of bounds.
+    pub(crate) fn index_add_replica(&mut self, i: usize) {
+        let s = self.sample_of(i);
+        self.indexes.add_replica(&s);
+    }
+
+    /// Answer a declared [`FastPath`] from the indexes: the replica id the
+    /// rescan would pick, or `None` when the fast path does not apply (or
+    /// the intake scope is empty — the caller falls through to the rescan,
+    /// which produces the canonical error). Debug builds cross-check every
+    /// answer against the rescan oracle.
+    pub(crate) fn index_route(&mut self, fp: FastPath) -> Option<usize> {
+        let choice = match fp {
+            FastPath::Rescan => None,
+            FastPath::RoundRobin => {
+                #[cfg(debug_assertions)]
+                {
+                    let ids: Vec<usize> = self
+                        .views_for(self.intake_pool())
+                        .iter()
+                        .map(|v| v.id)
+                        .collect();
+                    debug_assert_eq!(
+                        self.indexes.roster(),
+                        ids.as_slice(),
+                        "round-robin roster diverged from the routable view set"
+                    );
+                }
+                let len = self.indexes.roster().len();
+                if len == 0 {
+                    None
+                } else {
+                    let slot = self.router.advance_cursor(len);
+                    Some(self.indexes.roster()[slot])
+                }
+            }
+            FastPath::LeastLoaded => self.indexes.best(Metric::Live),
+            FastPath::LeastKv => self.indexes.best(Metric::Kv),
+            FastPath::CostAware => self.indexes.best(Metric::Cost),
+            FastPath::QuantileCost { z } => {
+                if z == self.indexes.quantile_z() {
+                    self.indexes.best(Metric::Quantile)
+                } else {
+                    None
+                }
+            }
+        };
+        #[cfg(debug_assertions)]
+        self.debug_check_index_route(fp, choice);
+        choice
+    }
+
+    /// Debug-build oracle: the scored fast paths must agree with a literal
+    /// rescan of the intake views using the routers' own arithmetic.
+    #[cfg(debug_assertions)]
+    fn debug_check_index_route(&self, fp: FastPath, choice: Option<usize>) {
+        use super::router::argmin;
+        match fp {
+            // Rescan never answered; RoundRobin already advanced the shared
+            // cursor, so re-running it here would skew the cycle
+            FastPath::Rescan | FastPath::RoundRobin => return,
+            FastPath::QuantileCost { z } if z != self.indexes.quantile_z() => return,
+            _ => {}
+        }
+        let views = self.views_for(self.intake_pool());
+        let expect = if views.is_empty() {
+            None
+        } else {
+            let slot = match fp {
+                FastPath::LeastLoaded => argmin(views.iter().map(|r| r.live)),
+                FastPath::LeastKv => argmin(views.iter().map(|r| r.kv_occupancy())),
+                FastPath::CostAware => {
+                    argmin(views.iter().map(|r| r.predicted_backlog / r.speed.max(1e-9)))
+                }
+                FastPath::QuantileCost { z } => argmin(views.iter().map(|r| {
+                    let q = r.predicted_backlog + z * r.predicted_backlog_var.max(0.0).sqrt();
+                    q / r.speed.max(1e-9)
+                })),
+                FastPath::Rescan | FastPath::RoundRobin => unreachable!(),
+            };
+            Some(views[slot].id)
+        };
+        debug_assert_eq!(
+            choice, expect,
+            "index fast path diverged from the rescan oracle for {fp:?}"
+        );
     }
 
     /// Whether any replica still holds live (queued/running/preempted)
@@ -466,18 +642,24 @@ impl ClusterCtx {
     /// with live work that means the replica is wedged (e.g. a request that
     /// can never fit its KV capacity) and the caller must not keep spinning.
     fn step_replica(&mut self, i: usize) -> anyhow::Result<bool> {
+        self.replica_steps += 1;
         let (now0, live0) = {
             let c = &self.replicas[i].coord;
             (c.now(), c.live_count())
         };
         self.replicas[i].coord.step()?;
-        let new: Vec<(RequestId, u32)> = {
+        // reuse one scratch buffer across steps: this is the hottest loop
+        // in the cluster, and a fresh Vec per step is pure churn
+        let mut new = std::mem::take(&mut self.scratch_completions);
+        new.clear();
+        {
             let r = &self.replicas[i];
-            r.coord.outcomes()[r.seen_outcomes..]
-                .iter()
-                .map(|o| (o.id, o.output_len))
-                .collect()
-        };
+            new.extend(
+                r.coord.outcomes()[r.seen_outcomes..]
+                    .iter()
+                    .map(|o| (o.id, o.output_len)),
+            );
+        }
         self.replicas[i].seen_outcomes += new.len();
         let live_now = self.replicas[i].coord.live_count();
         let progressed =
@@ -487,8 +669,12 @@ impl ClusterCtx {
         if !new.is_empty() || live_now != live0 {
             self.steal_dirty = true;
         }
-        for (id, output_len) in new {
+        for &(id, output_len) in new.iter() {
             if let Some(f) = self.in_flight.remove(&id) {
+                // every migration path rewrites `replica` when an entry
+                // moves, so a completion here always releases *this*
+                // replica's backlog — the single-sync below relies on it
+                debug_assert_eq!(f.replica, i, "completed on a replica it was not booked to");
                 self.release_backlog(f.replica, f.cost, f.var, f.weight);
                 // one observation per request: re-dispatch paths re-insert
                 // in-flight entries under the same id, so the removal above
@@ -499,35 +685,43 @@ impl ClusterCtx {
                 }
             }
         }
+        self.scratch_completions = new;
         // Reconcile timeout-aborts: they leave the live set without an
         // outcome, so their backlog contribution must be released here or
         // the cost-aware router would shun this replica forever.
         if self.replicas[i].coord.aborted > self.replicas[i].seen_aborted {
             self.replicas[i].seen_aborted = self.replicas[i].coord.aborted;
-            let coord = &self.replicas[i].coord;
-            let mut gone: Vec<RequestId> = self
-                .in_flight
-                .iter()
-                .filter(|(id, entry)| {
-                    entry.replica == i
-                        && !coord.is_live(**id)
-                        // a request on the fabric left this replica
-                        // deliberately; its entry survives until delivery
-                        && !self.in_transfer.contains(*id)
-                })
-                .map(|(id, _)| *id)
-                .collect();
-            // the map's iteration order is not deterministic; releasing in
-            // id order keeps the float bookkeeping — and therefore every
+            let mut gone = std::mem::take(&mut self.scratch_gone);
+            gone.clear();
+            {
+                let coord = &self.replicas[i].coord;
+                gone.extend(
+                    self.in_flight
+                        .iter()
+                        .filter(|(id, entry)| {
+                            entry.replica == i
+                                && !coord.is_live(**id)
+                                // a request on the fabric left this replica
+                                // deliberately; its entry survives until
+                                // delivery
+                                && !self.in_transfer.contains(*id)
+                        })
+                        .map(|(id, _)| *id),
+                );
+            }
+            // the table's iteration order is not deterministic; releasing
+            // in id order keeps the float bookkeeping — and therefore every
             // downstream routing/scaling decision and the report JSON —
             // byte-identical across runs of the same seed
             gone.sort_unstable();
-            for id in gone {
+            for &id in gone.iter() {
                 if let Some(f) = self.in_flight.remove(&id) {
                     self.release_backlog(f.replica, f.cost, f.var, f.weight);
                 }
             }
+            self.scratch_gone = gone;
         }
+        self.sync_replica(i);
         Ok(progressed)
     }
 

@@ -1,0 +1,569 @@
+//! Incrementally-maintained router score indexes.
+//!
+//! The scored routers (`least-loaded`, `least-kv`, `cost-aware`,
+//! `quantile-cost`) historically re-scored every routable replica on every
+//! dispatch — an O(replicas) rescan in the hottest path of the cluster
+//! kernel. [`RouterIndexes`] replaces those rescans with per-metric
+//! lazy-deletion min-heaps that are updated from `ClusterCtx` deltas
+//! (dispatch, completion, failure, drain, scale events), so a dispatch
+//! costs O(log replicas) amortized.
+//!
+//! # Determinism invariant
+//!
+//! **Index order must equal `argmin` rescan order, exactly.** The routers
+//! pick the *first* strict minimum over views sorted ascending by replica
+//! id (`router::argmin` uses `<`, so ties go to the lowest id). The heaps
+//! reproduce that order with a key of `(score, id)` under
+//! `f64::total_cmp`: equal scores order by ascending id, and the popped
+//! minimum is exactly the replica the rescan would have chosen. Two
+//! consequences the implementation must respect:
+//!
+//! * **No NaN keys.** `total_cmp` orders NaN, `<` never matches it; the
+//!   score expressions here replicate the routers' arithmetic
+//!   operation-for-operation, which is NaN-free by construction (divisors
+//!   are clamped, variances floored at zero).
+//! * **`-0.0` is canonicalized to `+0.0`** (`canon`). `total_cmp` orders
+//!   `-0.0 < +0.0`, but the rescan's `<` treats them as equal (tie → the
+//!   lowest id). Canonicalizing at keying time makes the heap agree with
+//!   the rescan on such ties.
+//!
+//! # Lazy deletion
+//!
+//! Heap entries are never removed in place. Each replica keeps a current
+//! `Probe` snapshot; an entry popped off a heap is valid only if the
+//! replica is still in scope and the entry's key equals the replica's
+//! current score — otherwise it is stale and discarded. Stale entries are
+//! bounded by compaction: when a heap grows past 4x the replica count (and
+//! past a small floor) it is rebuilt from the probe snapshots, keeping the
+//! amortized cost O(log replicas) per update.
+//!
+//! The indexes cover exactly one scope — the intake pool (all replicas
+//! colocated, the prefill pool under disaggregation) — because that is the
+//! only scope dispatch-rate-hot paths query. Cold paths (drain
+//! re-admission, migration, autoscale views) keep the retained rescan
+//! code, which doubles as the differential oracle when
+//! `ClusterCtx::use_indexes` is false.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::PoolRole;
+
+use super::replica::ReplicaState;
+
+/// The scored-router metrics that have an incremental index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Live request count (`least-loaded`).
+    Live,
+    /// KV-cache utilization fraction (`least-kv`).
+    Kv,
+    /// Mean backlog over speed (`cost-aware`).
+    Cost,
+    /// Quantile backlog over speed (`quantile-cost`).
+    Quantile,
+}
+
+impl Metric {
+    pub(crate) const ALL: [Metric; 4] = [Metric::Live, Metric::Kv, Metric::Cost, Metric::Quantile];
+
+    fn index(self) -> usize {
+        match self {
+            Metric::Live => 0,
+            Metric::Kv => 1,
+            Metric::Cost => 2,
+            Metric::Quantile => 3,
+        }
+    }
+}
+
+/// Snapshot of the per-replica fields the indexes derive scores from.
+/// Built by `ClusterCtx::sample_of` and fed through [`RouterIndexes::sync`]
+/// whenever a replica changes.
+#[derive(Clone, Copy)]
+pub(crate) struct Sample {
+    pub(crate) state: ReplicaState,
+    pub(crate) pool: Option<PoolRole>,
+    pub(crate) is_idle: bool,
+    pub(crate) now: f64,
+    pub(crate) live: usize,
+    pub(crate) kv_used_blocks: usize,
+    pub(crate) kv_total_blocks: usize,
+    pub(crate) speed: f64,
+    pub(crate) backlog: f64,
+    pub(crate) backlog_var: f64,
+}
+
+/// Current derived state of one replica: scope membership, busy/idle
+/// standing, clock, and the four metric scores. Heap entries are validated
+/// against this snapshot (lazy deletion).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Probe {
+    in_scope: bool,
+    busy: bool,
+    idle_thief: bool,
+    now: f64,
+    scores: [f64; 4],
+}
+
+/// `(key, id)` heap entry. `Ord` is reversed (BinaryHeap is a max-heap) so
+/// the top is the minimum key, ties broken by the **lowest** id — the
+/// exact `argmin` rescan order.
+struct ScoreEntry {
+    key: f64,
+    id: usize,
+}
+
+impl PartialEq for ScoreEntry {
+    fn eq(&self, other: &ScoreEntry) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for ScoreEntry {}
+
+impl PartialOrd for ScoreEntry {
+    fn partial_cmp(&self, other: &ScoreEntry) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ScoreEntry {
+    fn cmp(&self, other: &ScoreEntry) -> Ordering {
+        other
+            .key
+            .total_cmp(&self.key)
+            .then(other.id.cmp(&self.id))
+    }
+}
+
+/// Canonicalize `-0.0` to `+0.0` so `total_cmp` agrees with the rescan's
+/// `<` on zero-valued ties (see the module docs).
+fn canon(x: f64) -> f64 {
+    if x == 0.0 {
+        0.0
+    } else {
+        x
+    }
+}
+
+/// The incremental index set for one cluster run.
+pub struct RouterIndexes {
+    /// The indexed dispatch scope: `None` colocated, `Some(Prefill)` under
+    /// disaggregation. Fixed for the run.
+    intake: Option<PoolRole>,
+    /// z-score the quantile metric is keyed with; a router carrying a
+    /// different z falls back to the rescan path.
+    quantile_z: f64,
+    /// Per-replica derived snapshots, indexed by replica id.
+    probes: Vec<Probe>,
+    /// One lazy-deletion min-heap per [`Metric`].
+    score_heaps: [BinaryHeap<ScoreEntry>; 4],
+    /// Min-heap over busy replicas' clocks (`earliest_busy`).
+    busy_heap: BinaryHeap<ScoreEntry>,
+    /// Ascending ids of in-scope replicas (round-robin roster), rebuilt
+    /// lazily when membership changes.
+    roster: Vec<usize>,
+    roster_dirty: bool,
+    /// Count of routable idle replicas (work-stealer early exit).
+    idle_thieves: usize,
+    /// Set when a prefill-side replica changed since the transfer fabric
+    /// last swept; lets the fabric skip quiescent scans with no new
+    /// partials.
+    pub(crate) fabric_dirty: bool,
+}
+
+impl RouterIndexes {
+    pub(crate) fn new(intake: Option<PoolRole>, quantile_z: f64) -> RouterIndexes {
+        RouterIndexes {
+            intake,
+            quantile_z,
+            probes: Vec::new(),
+            score_heaps: Default::default(),
+            busy_heap: BinaryHeap::new(),
+            roster: Vec::new(),
+            roster_dirty: false,
+            idle_thieves: 0,
+            fabric_dirty: true,
+        }
+    }
+
+    pub(crate) fn quantile_z(&self) -> f64 {
+        self.quantile_z
+    }
+
+    pub(crate) fn idle_thieves(&self) -> usize {
+        self.idle_thieves
+    }
+
+    fn probe_of(&self, s: &Sample) -> Probe {
+        let in_scope =
+            s.state == ReplicaState::Active && (self.intake.is_none() || s.pool == self.intake);
+        let busy = matches!(s.state, ReplicaState::Active | ReplicaState::Draining) && !s.is_idle;
+        let idle_thief = s.state == ReplicaState::Active && s.is_idle;
+        // score arithmetic replicated operation-for-operation from the
+        // routers (see the module docs' determinism invariant)
+        let kv = if s.kv_total_blocks == 0 {
+            0.0
+        } else {
+            s.kv_used_blocks as f64 / s.kv_total_blocks as f64
+        };
+        let cost = s.backlog / s.speed.max(1e-9);
+        let q = s.backlog + self.quantile_z * s.backlog_var.max(0.0).sqrt();
+        let quant = q / s.speed.max(1e-9);
+        Probe {
+            in_scope,
+            busy,
+            idle_thief,
+            now: canon(s.now),
+            scores: [canon(s.live as f64), canon(kv), canon(cost), canon(quant)],
+        }
+    }
+
+    /// Register a freshly-appended replica (id = current probe count).
+    pub(crate) fn add_replica(&mut self, s: &Sample) {
+        let id = self.probes.len();
+        let p = self.probe_of(s);
+        if p.in_scope {
+            for m in Metric::ALL {
+                self.push_score(m.index(), ScoreEntry { key: p.scores[m.index()], id });
+            }
+            self.roster_dirty = true;
+        }
+        if p.busy {
+            self.push_busy(ScoreEntry { key: p.now, id });
+        }
+        if p.idle_thief {
+            self.idle_thieves += 1;
+        }
+        if s.pool == Some(PoolRole::Prefill) {
+            self.fabric_dirty = true;
+        }
+        self.probes.push(p);
+    }
+
+    /// Refresh replica `i` from a new sample, pushing heap entries for any
+    /// changed keys. Stale old entries are left behind (lazy deletion).
+    pub(crate) fn sync(&mut self, i: usize, s: &Sample) {
+        let p = self.probe_of(s);
+        let old = self.probes[i];
+        if p == old {
+            return;
+        }
+        if p.in_scope != old.in_scope {
+            self.roster_dirty = true;
+        }
+        for m in Metric::ALL {
+            let k = m.index();
+            let newly_in = p.in_scope && !old.in_scope;
+            if p.in_scope && (newly_in || p.scores[k] != old.scores[k]) {
+                self.push_score(k, ScoreEntry { key: p.scores[k], id: i });
+            }
+        }
+        if p.busy && (!old.busy || p.now != old.now) {
+            self.push_busy(ScoreEntry { key: p.now, id: i });
+        }
+        match (old.idle_thief, p.idle_thief) {
+            (false, true) => self.idle_thieves += 1,
+            (true, false) => self.idle_thieves -= 1,
+            _ => {}
+        }
+        if s.pool == Some(PoolRole::Prefill) {
+            self.fabric_dirty = true;
+        }
+        self.probes[i] = p;
+    }
+
+    /// The in-scope replica with the minimum score for `m` (ties → lowest
+    /// id), or `None` when the scope is empty. Pops stale entries.
+    pub(crate) fn best(&mut self, m: Metric) -> Option<usize> {
+        let k = m.index();
+        while let Some(top) = self.score_heaps[k].peek() {
+            let p = &self.probes[top.id];
+            if p.in_scope && p.scores[k] == top.key {
+                return Some(top.id);
+            }
+            self.score_heaps[k].pop();
+        }
+        None
+    }
+
+    /// The busy replica with the earliest clock (ties → lowest id), or
+    /// `None` when everything is idle. Pops stale entries.
+    pub(crate) fn earliest_busy(&mut self) -> Option<(usize, f64)> {
+        while let Some(top) = self.busy_heap.peek() {
+            let p = &self.probes[top.id];
+            if p.busy && p.now == top.key {
+                return Some((top.id, top.key));
+            }
+            self.busy_heap.pop();
+        }
+        None
+    }
+
+    /// Ascending ids of in-scope replicas (the round-robin roster).
+    pub(crate) fn roster(&mut self) -> &[usize] {
+        if self.roster_dirty {
+            self.roster.clear();
+            self.roster
+                .extend(self.probes.iter().enumerate().filter(|(_, p)| p.in_scope).map(|(i, _)| i));
+            self.roster_dirty = false;
+        }
+        &self.roster
+    }
+
+    fn push_score(&mut self, k: usize, e: ScoreEntry) {
+        self.score_heaps[k].push(e);
+        if self.score_heaps[k].len() > 64 && self.score_heaps[k].len() > 4 * self.probes.len() {
+            let rebuilt: BinaryHeap<ScoreEntry> = self
+                .probes
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.in_scope)
+                .map(|(id, p)| ScoreEntry { key: p.scores[k], id })
+                .collect();
+            self.score_heaps[k] = rebuilt;
+        }
+    }
+
+    fn push_busy(&mut self, e: ScoreEntry) {
+        self.busy_heap.push(e);
+        if self.busy_heap.len() > 64 && self.busy_heap.len() > 4 * self.probes.len() {
+            let rebuilt: BinaryHeap<ScoreEntry> = self
+                .probes
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.busy)
+                .map(|(id, p)| ScoreEntry { key: p.now, id })
+                .collect();
+            self.busy_heap = rebuilt;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(state: ReplicaState, pool: Option<PoolRole>) -> Sample {
+        Sample {
+            state,
+            pool,
+            is_idle: true,
+            now: 0.0,
+            live: 0,
+            kv_used_blocks: 0,
+            kv_total_blocks: 100,
+            speed: 1.0,
+            backlog: 0.0,
+            backlog_var: 0.0,
+        }
+    }
+
+    /// Rescan-oracle score of one sample, mirroring the router arithmetic.
+    fn score_of(z: f64, s: &Sample, m: Metric) -> f64 {
+        match m {
+            Metric::Live => s.live as f64,
+            Metric::Kv => {
+                if s.kv_total_blocks == 0 {
+                    0.0
+                } else {
+                    s.kv_used_blocks as f64 / s.kv_total_blocks as f64
+                }
+            }
+            Metric::Cost => s.backlog / s.speed.max(1e-9),
+            Metric::Quantile => {
+                (s.backlog + z * s.backlog_var.max(0.0).sqrt()) / s.speed.max(1e-9)
+            }
+        }
+    }
+
+    /// Naive strict-`<` argmin over in-scope samples — the rescan oracle.
+    fn naive_best(z: f64, intake: Option<PoolRole>, samples: &[Sample], m: Metric) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, s) in samples.iter().enumerate() {
+            let in_scope =
+                s.state == ReplicaState::Active && (intake.is_none() || s.pool == intake);
+            if !in_scope {
+                continue;
+            }
+            let sc = score_of(z, s, m);
+            if best.map_or(true, |(_, b)| sc < b) {
+                best = Some((i, sc));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    #[test]
+    fn ties_go_to_the_lowest_id() {
+        let z = 1.2815515655446004;
+        let mut idx = RouterIndexes::new(None, z);
+        for _ in 0..4 {
+            idx.add_replica(&sample(ReplicaState::Active, None));
+        }
+        for m in Metric::ALL {
+            assert_eq!(idx.best(m), Some(0), "{m:?} tie must go to the lowest id");
+        }
+        // raise replica 0's scores; the tie among 1..4 must go to 1
+        let mut s = sample(ReplicaState::Active, None);
+        s.live = 5;
+        s.kv_used_blocks = 50;
+        s.backlog = 3.0;
+        idx.sync(0, &s);
+        for m in Metric::ALL {
+            assert_eq!(idx.best(m), Some(1), "{m:?} tie must go to the lowest id");
+        }
+    }
+
+    #[test]
+    fn canon_folds_negative_zero() {
+        assert_eq!(canon(-0.0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(canon(1.5), 1.5);
+        assert_eq!(canon(-1.5), -1.5);
+    }
+
+    #[test]
+    fn busy_heap_ties_go_to_the_lowest_id() {
+        let mut idx = RouterIndexes::new(None, 0.0);
+        for _ in 0..3 {
+            let mut s = sample(ReplicaState::Active, None);
+            s.is_idle = false;
+            s.now = 2.0;
+            idx.add_replica(&s);
+        }
+        assert_eq!(idx.earliest_busy(), Some((0, 2.0)));
+        let mut s = sample(ReplicaState::Active, None);
+        s.is_idle = false;
+        s.now = 5.0;
+        idx.sync(0, &s);
+        assert_eq!(idx.earliest_busy(), Some((1, 2.0)));
+    }
+
+    #[test]
+    fn out_of_scope_replicas_are_invisible() {
+        let mut idx = RouterIndexes::new(Some(PoolRole::Prefill), 0.0);
+        idx.add_replica(&sample(ReplicaState::Active, Some(PoolRole::Decode)));
+        idx.add_replica(&sample(ReplicaState::Active, Some(PoolRole::Prefill)));
+        idx.add_replica(&sample(ReplicaState::Draining, Some(PoolRole::Prefill)));
+        for m in Metric::ALL {
+            assert_eq!(idx.best(m), Some(1));
+        }
+        assert_eq!(idx.roster(), &[1]);
+    }
+
+    /// Random delta interleavings: after every sync the index must agree
+    /// with the rescan oracle *and* with a rebuilt-from-scratch index, for
+    /// both intake scopes.
+    #[test]
+    fn random_deltas_match_rescan_and_rebuild() {
+        for (case, intake) in [(0u64, None), (1u64, Some(PoolRole::Prefill))] {
+            let z = 1.2815515655446004;
+            let mut rng = Rng::new(0xD17A + case);
+            let n = 10usize;
+            let mut samples: Vec<Sample> = (0..n)
+                .map(|i| {
+                    let pool = match intake {
+                        None => None,
+                        Some(_) => Some(if i % 2 == 0 {
+                            PoolRole::Prefill
+                        } else {
+                            PoolRole::Decode
+                        }),
+                    };
+                    sample(ReplicaState::Active, pool)
+                })
+                .collect();
+            let mut idx = RouterIndexes::new(intake, z);
+            for s in &samples {
+                idx.add_replica(s);
+            }
+            for step in 0..2000 {
+                let i = rng.below(samples.len() as u64) as usize;
+                let s = &mut samples[i];
+                match rng.below(8) {
+                    0 => {
+                        s.state = match rng.below(4) {
+                            0 => ReplicaState::Active,
+                            1 => ReplicaState::Draining,
+                            2 => ReplicaState::Down,
+                            _ => ReplicaState::Provisioning,
+                        };
+                    }
+                    1 => s.is_idle = !s.is_idle,
+                    2 => s.now += rng.below(100) as f64 / 10.0,
+                    3 => s.live = rng.below(40) as usize,
+                    4 => s.backlog = rng.below(1000) as f64 / 7.0,
+                    5 => s.backlog_var = rng.below(500) as f64 / 3.0,
+                    6 => s.kv_used_blocks = rng.below(100) as usize,
+                    _ => s.speed = 0.25 + rng.below(8) as f64 / 4.0,
+                }
+                let snap = samples[i];
+                idx.sync(i, &snap);
+                if step % 50 == 0 {
+                    // occasionally grow the fleet, like a scale-out spawn
+                    let pool = match intake {
+                        None => None,
+                        Some(p) => Some(p),
+                    };
+                    let fresh = sample(ReplicaState::Provisioning, pool);
+                    samples.push(fresh);
+                    idx.add_replica(&fresh);
+                }
+                // oracle checks
+                for m in Metric::ALL {
+                    assert_eq!(
+                        idx.best(m),
+                        naive_best(z, intake, &samples, m),
+                        "metric {m:?} diverged at step {step}"
+                    );
+                }
+                let naive_busy = samples
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| {
+                        matches!(s.state, ReplicaState::Active | ReplicaState::Draining)
+                            && !s.is_idle
+                    })
+                    .map(|(i, s)| (i, canon(s.now)))
+                    .fold(None::<(usize, f64)>, |best, (i, t)| {
+                        if best.map_or(true, |(_, bt)| t < bt) {
+                            Some((i, t))
+                        } else {
+                            best
+                        }
+                    });
+                assert_eq!(idx.earliest_busy(), naive_busy, "busy diverged at step {step}");
+                let naive_thieves = samples
+                    .iter()
+                    .filter(|s| s.state == ReplicaState::Active && s.is_idle)
+                    .count();
+                assert_eq!(idx.idle_thieves(), naive_thieves, "thieves diverged at step {step}");
+                let naive_roster: Vec<usize> = samples
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| {
+                        s.state == ReplicaState::Active
+                            && (intake.is_none() || s.pool == intake)
+                    })
+                    .map(|(i, _)| i)
+                    .collect();
+                assert_eq!(idx.roster(), naive_roster.as_slice(), "roster diverged at step {step}");
+                // rebuild-from-scratch must agree with the incremental state
+                if step % 100 == 0 {
+                    let mut rebuilt = RouterIndexes::new(intake, z);
+                    for s in &samples {
+                        rebuilt.add_replica(s);
+                    }
+                    for m in Metric::ALL {
+                        assert_eq!(idx.best(m), rebuilt.best(m));
+                    }
+                    assert_eq!(idx.earliest_busy(), rebuilt.earliest_busy());
+                    assert_eq!(idx.idle_thieves(), rebuilt.idle_thieves());
+                    assert_eq!(idx.roster(), rebuilt.roster());
+                }
+            }
+        }
+    }
+}

@@ -54,6 +54,7 @@ impl ClusterCtx {
                 self.record(at, i, ScaleAction::Fail);
                 self.replicas[i].state = ReplicaState::Down;
                 self.replicas[i].down_since = at;
+                self.sync_replica(i);
                 return Ok(Vec::new());
             }
             _ => return Ok(Vec::new()),
@@ -74,6 +75,7 @@ impl ClusterCtx {
                 self.release_backlog(f.replica, f.cost, f.var, f.weight);
             }
         }
+        self.sync_replica(i);
         Ok(lost)
     }
 
@@ -109,10 +111,12 @@ impl ClusterCtx {
         self.record(at, i, ScaleAction::Recover);
         if at < self.replicas[i].ready_at {
             self.replicas[i].state = ReplicaState::Provisioning;
+            self.sync_replica(i);
             return;
         }
         self.replicas[i].state = ReplicaState::Active;
         self.steal_dirty = true; // a fresh idle thief just appeared
+        self.sync_replica(i);
     }
 
     /// A provisioning delay elapsed: the cold replica joins the routable
@@ -125,6 +129,7 @@ impl ClusterCtx {
         self.replicas[i].coord.advance_to(at);
         self.record(at, i, ScaleAction::Up);
         self.steal_dirty = true; // a fresh idle thief just appeared
+        self.sync_replica(i);
     }
 
     /// Snapshot the cluster for the autoscaler.
@@ -203,6 +208,9 @@ impl ClusterCtx {
         self.backlog.push(0.0);
         self.backlog_var.push(0.0);
         self.routed.push(0);
+        // register with the indexes unconditionally: the probe table must
+        // stay in lockstep with the roster length (see index_add_replica)
+        self.index_add_replica(i);
         i
     }
 
@@ -292,6 +300,9 @@ impl ClusterCtx {
                 .unwrap()
                 .then(a.id.cmp(&b.id))
         });
+        // the victim must leave the index scope *before* the re-route
+        // dispatches below consult the fast paths
+        self.sync_replica(victim);
         for req in moved {
             if SloAdmission.place(self, req, now, Some(victim))? {
                 self.drained += 1;
@@ -423,7 +434,11 @@ impl ClusterCtx {
                 self.backlog_var[target] += pvar;
             }
             self.migrated += 1;
+            self.sync_replica(target);
         }
+        // one sync covers every per-move change on the victim side (live
+        // set, backlog) including the finish-in-place fallback
+        self.sync_replica(victim);
         Ok(())
     }
 
@@ -433,6 +448,7 @@ impl ClusterCtx {
         self.replicas[i].state = ReplicaState::Retired;
         self.replicas[i].retired_at = Some(at);
         self.record(at, i, ScaleAction::Retire);
+        self.sync_replica(i);
     }
 
     pub(crate) fn record(&mut self, at: f64, replica: usize, action: ScaleAction) {

@@ -62,12 +62,22 @@
 //! policy instance against the pool's share of the forecast (TTFT-weighted
 //! prefill cost vs TPOT-weighted decode cost under the SLO-aware policy).
 //!
+//! Dispatch-rate hot paths are answered from the incrementally-maintained
+//! score indexes in [`index`] (per-metric lazy-deletion heaps updated on
+//! every ctx delta) rather than full view rescans; setting
+//! `ClusterCtx::use_indexes` to false before a run retains the original
+//! rescan algorithms verbatim — the differential oracle the equivalence
+//! suite (and debug-build cross-checks) compare against. Index order
+//! equals [`argmin`] rescan order exactly, so same-seed reports are
+//! byte-identical either way.
+//!
 //! The legacy fig12 **overhead measurement** ([`ClusterSim`]) is kept as a
 //! secondary mode behind `sagesched cluster --overhead`; see [`overhead`].
 
 pub mod components;
 pub mod ctx;
 pub mod disagg;
+pub mod index;
 pub mod kernel;
 pub mod lifecycle;
 pub mod overhead;
@@ -160,6 +170,7 @@ impl EventCluster {
                 (Some((i, t)), Some(te)) if t < te => self.ctx.check_progress(i)?,
                 // all busy replicas have caught up: fire the event
                 (_, Some(_)) => {
+                    self.ctx.kernel_events += 1;
                     let mut ev = Some(kernel.pop().expect("peeked event vanished"));
                     for c in components.iter_mut() {
                         match ev.take() {

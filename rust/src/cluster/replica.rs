@@ -10,7 +10,7 @@
 //! what a replica *is*, not when it changes.
 
 use crate::config::PoolRole;
-use crate::core::Request;
+use crate::core::{Request, RequestId};
 use crate::engine::SimEngine;
 use crate::serve::Coordinator;
 
@@ -101,4 +101,75 @@ pub(crate) struct InFlight {
     pub(crate) rank: f64,
     /// Original request (kept for re-dispatch and predictor learning).
     pub(crate) req: Request,
+}
+
+/// Slab-backed in-flight table: `RequestId -> InFlight` with slot
+/// recycling. The hot dispatch/completion path inserts and removes one
+/// entry per request; a plain `HashMap<RequestId, InFlight>` pays an
+/// allocation (and eventual rehash churn) per insert, while the slab
+/// reuses freed slots via a free list and only the small id→slot index
+/// rehashes. Iteration order is arbitrary — callers that need determinism
+/// must sort, exactly as they did with the `HashMap` it replaced.
+#[derive(Default)]
+pub(crate) struct InFlightTable {
+    slots: Vec<Option<InFlight>>,
+    free: Vec<u32>,
+    index: std::collections::HashMap<RequestId, u32>,
+}
+
+impl InFlightTable {
+    pub(crate) fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub(crate) fn insert(&mut self, id: RequestId, f: InFlight) {
+        if let Some(&slot) = self.index.get(&id) {
+            self.slots[slot as usize] = Some(f);
+            return;
+        }
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s as usize] = Some(f);
+                s
+            }
+            None => {
+                self.slots.push(Some(f));
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.index.insert(id, slot);
+    }
+
+    pub(crate) fn remove(&mut self, id: &RequestId) -> Option<InFlight> {
+        let slot = self.index.remove(id)?;
+        self.free.push(slot);
+        self.slots[slot as usize].take()
+    }
+
+    pub(crate) fn get(&self, id: &RequestId) -> Option<&InFlight> {
+        let slot = *self.index.get(id)?;
+        self.slots[slot as usize].as_ref()
+    }
+
+    pub(crate) fn get_mut(&mut self, id: &RequestId) -> Option<&mut InFlight> {
+        let slot = *self.index.get(id)?;
+        self.slots[slot as usize].as_mut()
+    }
+
+    /// Iterate the live request ids in arbitrary order (callers sort).
+    pub(crate) fn keys(&self) -> impl Iterator<Item = &RequestId> {
+        self.index.keys()
+    }
+
+    /// Iterate `(id, entry)` pairs in arbitrary order (callers sort).
+    pub(crate) fn iter(&self) -> impl Iterator<Item = (&RequestId, &InFlight)> {
+        self.index.iter().map(|(id, &slot)| {
+            (
+                id,
+                self.slots[slot as usize]
+                    .as_ref()
+                    .expect("indexed slot is occupied"),
+            )
+        })
+    }
 }

@@ -13,6 +13,16 @@
 //! (round-robin / least-loaded / least-kv / cost-aware / quantile-cost)
 //! plus the [`ClassAwareRouter`] wrapper that gives tight SLO tiers
 //! tail-risk-averse placement over KV-headroom replicas.
+//!
+//! Routers whose score depends only on per-replica state (never on the
+//! request) additionally declare a [`FastPath`], letting the dispatcher
+//! answer them from the incremental indexes in
+//! [`crate::cluster::index`] instead of rescanning every view. The fast
+//! path must pick the *same replica* the rescan would — the indexes
+//! reproduce [`argmin`]'s lowest-position tie-break exactly — so a router
+//! whose score has any per-request term ([`CacheAffinityRouter`],
+//! [`ClassAwareRouter`] for Interactive traffic) declares
+//! [`FastPath::Rescan`] and keeps the full scan.
 
 use crate::config::RouterKind;
 use crate::core::Request;
@@ -96,6 +106,27 @@ pub fn route_least_loaded(loads: &[usize]) -> usize {
     argmin(loads.iter().copied())
 }
 
+/// How the dispatcher may answer a routing decision from the incremental
+/// indexes instead of a full view rescan. Declared per router (and per
+/// request, for wrappers that split traffic by class).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FastPath {
+    /// No index applies: build the views and call [`Router::route`].
+    Rescan,
+    /// Next roster slot in cursor order ([`RoundRobinRouter`]).
+    RoundRobin,
+    /// Minimum live count ([`LeastLoadedRouter`]).
+    LeastLoaded,
+    /// Minimum KV occupancy ([`LeastKvRouter`]).
+    LeastKv,
+    /// Minimum backlog / speed ([`CostAwareRouter`]).
+    CostAware,
+    /// Minimum backlog quantile / speed at z-score `z`
+    /// ([`QuantileCostRouter`]); the index only applies when `z` matches
+    /// the z the index was keyed with.
+    QuantileCost { z: f64 },
+}
+
 /// A cluster front-door routing policy. Implementations must be
 /// deterministic given the same request/view sequence so cluster runs are
 /// exactly reproducible.
@@ -104,6 +135,22 @@ pub trait Router: Send {
 
     fn name(&self) -> &'static str {
         self.kind().name()
+    }
+
+    /// Which incremental index (if any) answers this request's routing
+    /// decision identically to [`Router::route`] over the full view set.
+    /// Defaults to [`FastPath::Rescan`] (always correct).
+    fn fast_path(&self, _req: &Request) -> FastPath {
+        FastPath::Rescan
+    }
+
+    /// Advance any per-dispatch router state (the round-robin cursor) as a
+    /// fast-path dispatch would, returning the chosen slot in a roster of
+    /// `len` routable replicas. Must share state with [`Router::route`] so
+    /// fast-path and rescan dispatches interleave without skew. No-op slot
+    /// 0 for stateless routers.
+    fn advance_cursor(&mut self, _len: usize) -> usize {
+        0
     }
 
     /// Pick a *position in the `replicas` slice* for `req` (the caller maps
@@ -128,6 +175,18 @@ impl Router for RoundRobinRouter {
         RouterKind::RoundRobin
     }
 
+    fn fast_path(&self, _req: &Request) -> FastPath {
+        FastPath::RoundRobin
+    }
+
+    fn advance_cursor(&mut self, len: usize) -> usize {
+        // identical arithmetic to route(): one shared cursor, so fast-path
+        // and rescan dispatches interleave without skewing the cycle
+        let i = self.next % len;
+        self.next = self.next.wrapping_add(1);
+        i
+    }
+
     fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
         let i = self.next % replicas.len();
         self.next = self.next.wrapping_add(1);
@@ -144,6 +203,10 @@ impl Router for LeastLoadedRouter {
         RouterKind::LeastLoaded
     }
 
+    fn fast_path(&self, _req: &Request) -> FastPath {
+        FastPath::LeastLoaded
+    }
+
     fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
         argmin(replicas.iter().map(|r| r.live))
     }
@@ -156,6 +219,10 @@ pub struct LeastKvRouter;
 impl Router for LeastKvRouter {
     fn kind(&self) -> RouterKind {
         RouterKind::LeastKv
+    }
+
+    fn fast_path(&self, _req: &Request) -> FastPath {
+        FastPath::LeastKv
     }
 
     fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
@@ -173,6 +240,10 @@ pub struct CostAwareRouter;
 impl Router for CostAwareRouter {
     fn kind(&self) -> RouterKind {
         RouterKind::CostAware
+    }
+
+    fn fast_path(&self, _req: &Request) -> FastPath {
+        FastPath::CostAware
     }
 
     fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
@@ -202,6 +273,10 @@ impl QuantileCostRouter {
 impl Router for QuantileCostRouter {
     fn kind(&self) -> RouterKind {
         RouterKind::QuantileCost
+    }
+
+    fn fast_path(&self, _req: &Request) -> FastPath {
+        FastPath::QuantileCost { z: self.z }
     }
 
     fn route(&mut self, _req: &Request, _cost: f64, replicas: &[ReplicaView]) -> usize {
@@ -299,6 +374,20 @@ impl ClassAwareRouter {
 impl Router for ClassAwareRouter {
     fn kind(&self) -> RouterKind {
         self.inner.kind()
+    }
+
+    fn fast_path(&self, req: &Request) -> FastPath {
+        // Interactive placement filters by KV headroom and scores on the
+        // tight quantile — per-request logic no single index answers
+        if req.slo == SloClass::Interactive {
+            FastPath::Rescan
+        } else {
+            self.inner.fast_path(req)
+        }
+    }
+
+    fn advance_cursor(&mut self, len: usize) -> usize {
+        self.inner.advance_cursor(len)
     }
 
     fn route(&mut self, req: &Request, predicted_cost: f64, replicas: &[ReplicaView]) -> usize {
@@ -475,6 +564,49 @@ mod tests {
         // 100+50 = 150 < 200+50-50 = 200 -> rebalances despite the huge
         // claimed saving
         assert_eq!(ca.route(&r, 50.0, &views), 0);
+    }
+
+    #[test]
+    fn round_robin_cursor_is_shared_between_route_and_advance_cursor() {
+        let views = vec![
+            view(0, 0, 0, 0.0, 1.0),
+            view(1, 0, 0, 0.0, 1.0),
+            view(2, 0, 0, 0.0, 1.0),
+        ];
+        let r = any_req();
+        let mut rr = RoundRobinRouter::default();
+        // mixed fast-path/rescan dispatches must walk one cycle together
+        assert_eq!(rr.route(&r, 1.0, &views), 0);
+        assert_eq!(rr.advance_cursor(views.len()), 1);
+        assert_eq!(rr.route(&r, 1.0, &views), 2);
+        assert_eq!(rr.advance_cursor(views.len()), 0);
+    }
+
+    #[test]
+    fn fast_path_declarations_match_router_semantics() {
+        let req = any_req();
+        assert_eq!(
+            RoundRobinRouter::default().fast_path(&req),
+            FastPath::RoundRobin
+        );
+        assert_eq!(LeastLoadedRouter.fast_path(&req), FastPath::LeastLoaded);
+        assert_eq!(LeastKvRouter.fast_path(&req), FastPath::LeastKv);
+        assert_eq!(CostAwareRouter.fast_path(&req), FastPath::CostAware);
+        let q = QuantileCostRouter::new(0.9);
+        assert_eq!(
+            q.fast_path(&req),
+            FastPath::QuantileCost { z: normal_quantile_clamped(0.9) }
+        );
+        // per-request scores never get a fast path
+        assert_eq!(CacheAffinityRouter.fast_path(&req), FastPath::Rescan);
+        // the class-aware wrapper rescans Interactive traffic only
+        let wrapped = ClassAwareRouter::new(Box::new(CostAwareRouter));
+        let mut interactive = any_req();
+        interactive.slo = SloClass::Interactive;
+        assert_eq!(wrapped.fast_path(&interactive), FastPath::Rescan);
+        let mut batch = any_req();
+        batch.slo = SloClass::Batch;
+        assert_eq!(wrapped.fast_path(&batch), FastPath::CostAware);
     }
 
     #[test]

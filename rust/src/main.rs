@@ -755,7 +755,15 @@ const USAGE: &str = "usage: sagesched <run|sweep|smoke|serve|cluster> [flags]
                           profiles after this fraction of requests (bare
                           flag shifts at the halfway point; JSON config's
                           workload.drift block adds dataset-mix switches)
-  (run also accepts --trace file.jsonl to replay a recorded trace)";
+  (run also accepts --trace file.jsonl to replay a recorded trace)
+  performance:
+          the cluster sim routes dispatches through incrementally-maintained
+          score indexes (see cluster::index); results are byte-identical to
+          the pre-index full rescans, locked in by tests/perf_equiv.rs.
+          regenerate the checked-in BENCH_cluster.json baseline with
+            cargo bench --bench cluster_scale          (1,000-replica run)
+            cargo bench --bench cluster_scale -- --smoke   (CI-sized gate)
+          the harness exits non-zero on any report drift";
 
 fn main() -> Result<()> {
     let args = Args::from_env();

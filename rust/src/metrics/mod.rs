@@ -689,6 +689,68 @@ impl ClusterReport {
     }
 }
 
+/// Performance counters of one bench run — what `benches/cluster_scale.rs`
+/// records into `BENCH_cluster.json` so every later PR can show the perf
+/// trajectory. Not part of any `ClusterReport` (report JSON stays
+/// byte-identical across perf work by construction).
+#[derive(Clone, Debug, Default)]
+pub struct PerfStats {
+    /// Wall-clock seconds of the measured phase.
+    pub wall_s: f64,
+    /// Kernel events popped (arrivals, decisions, failures, transfers...).
+    pub kernel_events: u64,
+    /// Replica scheduling iterations driven.
+    pub replica_steps: u64,
+    /// (kernel_events + replica_steps) / wall_s — the headline rate.
+    pub events_per_sec: f64,
+    /// Peak RSS proxy in MiB (VmHWM; 0.0 where /proc is unavailable).
+    pub peak_rss_mb: f64,
+    /// Per-phase wall-clock breakdown, in phase order.
+    pub phases: Vec<(String, f64)>,
+}
+
+impl PerfStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("wall_s", Json::num(self.wall_s)),
+            ("kernel_events", Json::num(self.kernel_events as f64)),
+            ("replica_steps", Json::num(self.replica_steps as f64)),
+            ("events_per_sec", Json::num(self.events_per_sec)),
+            ("peak_rss_mb", Json::num(self.peak_rss_mb)),
+            (
+                "phases",
+                Json::Obj(
+                    self.phases
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Peak resident set size in MiB, read from `/proc/self/status` (`VmHWM`).
+/// A cheap high-water-mark proxy — good enough to track allocation-churn
+/// regressions run-over-run. Returns 0.0 on platforms without procfs.
+pub fn peak_rss_mb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

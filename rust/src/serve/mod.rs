@@ -409,6 +409,13 @@ impl<E: Engine> Coordinator<E> {
         v
     }
 
+    /// Whether any live request holds a generated prefix (`generated > 0`)
+    /// — the cheap O(live) gate the transfer fabric polls before paying
+    /// [`Coordinator::partial_meta`]'s allocation + sort.
+    pub fn has_partials(&self) -> bool {
+        self.live.iter().any(|l| l.generated > 0)
+    }
+
     /// Remove and return the partially-generated live requests with these
     /// ids (in the order given), releasing their KV, engine, and policy
     /// state on *this* replica; ids that are unknown or hold no progress

@@ -150,9 +150,16 @@ pub fn mean(xs: &[f64]) -> f64 {
 /// pairs — the rank-quality metric for output-length predictors: a
 /// scheduler that orders by predicted score only needs the *ordering* to
 /// be right, so tau (not MAE/W1) is the quantity that tracks scheduling
-/// value. Pairs live in a FIFO ring of `cap` observations; `tau()` scans
-/// all O(W²) pairs, which at the default window (256) is ~32k comparisons
-/// — negligible next to a single Gittins refresh.
+/// value. Pairs live in a FIFO ring of `cap` observations.
+///
+/// The concordant/discordant counts are maintained *incrementally*: each
+/// push compares the new pair against the W existing ones (O(W)), and an
+/// eviction subtracts exactly the relations the evicted pair once added —
+/// integer counters, so the running state equals a from-scratch recount
+/// bit-for-bit ([`KendallTau::tau_reference`] is the retained O(W²)
+/// oracle; a regression test pins them equal at every step). `tau()`
+/// itself is O(1). The previous implementation recounted all O(W²) pairs
+/// per *query* on the hot completion path.
 ///
 /// Ties in either coordinate are excluded from both the numerator and the
 /// denominator (a tie carries no ordering information either way), so
@@ -162,12 +169,34 @@ pub fn mean(xs: &[f64]) -> f64 {
 pub struct KendallTau {
     window: std::collections::VecDeque<(f64, f64)>,
     cap: usize,
+    concordant: i64,
+    discordant: i64,
 }
 
 impl KendallTau {
     pub fn new(cap: usize) -> KendallTau {
         assert!(cap >= 2);
-        KendallTau { window: std::collections::VecDeque::with_capacity(cap), cap }
+        KendallTau {
+            window: std::collections::VecDeque::with_capacity(cap),
+            cap,
+            concordant: 0,
+            discordant: 0,
+        }
+    }
+
+    /// +1 concordant, -1 discordant, 0 tied — symmetric in its arguments,
+    /// so subtracting an evicted pair's relations undoes exactly what its
+    /// insertion added.
+    fn relation(a: (f64, f64), b: (f64, f64)) -> i64 {
+        let dp = a.0 - b.0;
+        let da = a.1 - b.1;
+        if dp == 0.0 || da == 0.0 {
+            0
+        } else if (dp > 0.0) == (da > 0.0) {
+            1
+        } else {
+            -1
+        }
     }
 
     /// Record one (predicted score, actual value) observation, evicting
@@ -177,9 +206,24 @@ impl KendallTau {
             return;
         }
         if self.window.len() == self.cap {
-            self.window.pop_front();
+            let evicted = self.window.pop_front().expect("cap >= 2, so non-empty");
+            for &p in &self.window {
+                match Self::relation(evicted, p) {
+                    1 => self.concordant -= 1,
+                    -1 => self.discordant -= 1,
+                    _ => {}
+                }
+            }
         }
-        self.window.push_back((pred, actual));
+        let fresh = (pred, actual);
+        for &p in &self.window {
+            match Self::relation(fresh, p) {
+                1 => self.concordant += 1,
+                -1 => self.discordant += 1,
+                _ => {}
+            }
+        }
+        self.window.push_back(fresh);
     }
 
     /// Number of observations currently in the window.
@@ -192,22 +236,28 @@ impl KendallTau {
     }
 
     /// Kendall's tau over the current window; 0.0 when fewer than 2
-    /// decisive (untied) pairs exist.
+    /// decisive (untied) pairs exist. O(1) off the running counters.
     pub fn tau(&self) -> f64 {
+        let decisive = self.concordant + self.discordant;
+        if decisive < 2 {
+            return 0.0;
+        }
+        (self.concordant - self.discordant) as f64 / decisive as f64
+    }
+
+    /// The retained O(W²) recount — the oracle the incremental counters
+    /// are pinned against (regression tests assert `tau()` equals this
+    /// bit-for-bit at every step).
+    pub fn tau_reference(&self) -> f64 {
         let v: Vec<(f64, f64)> = self.window.iter().copied().collect();
         let mut concordant = 0i64;
         let mut discordant = 0i64;
         for i in 0..v.len() {
             for j in (i + 1)..v.len() {
-                let dp = v[i].0 - v[j].0;
-                let da = v[i].1 - v[j].1;
-                if dp == 0.0 || da == 0.0 {
-                    continue;
-                }
-                if (dp > 0.0) == (da > 0.0) {
-                    concordant += 1;
-                } else {
-                    discordant += 1;
+                match Self::relation(v[i], v[j]) {
+                    1 => concordant += 1,
+                    -1 => discordant += 1,
+                    _ => {}
                 }
             }
         }
@@ -363,6 +413,39 @@ mod tests {
         t.push(f64::NAN, 1.0);
         t.push(1.0, f64::INFINITY);
         assert!(t.is_empty());
+    }
+
+    #[test]
+    fn kendall_tau_incremental_matches_reference_exactly() {
+        // random sequences heavy in ties and negatives, with full window
+        // turnover: the incremental counters must equal the O(W²) recount
+        // bit-for-bit at every single step
+        let mut rng = crate::util::rng::Rng::new(0x7A0);
+        let mut t = KendallTau::new(16);
+        for _ in 0..100 {
+            // small integer grid so pred/actual ties are frequent
+            let pred = rng.below(8) as f64 - 3.0;
+            let actual = rng.below(8) as f64 - 3.0;
+            t.push(pred, actual);
+            assert_eq!(t.tau().to_bits(), t.tau_reference().to_bits());
+        }
+        assert_eq!(t.len(), 16);
+    }
+
+    #[test]
+    fn kendall_tau_pinned_values() {
+        // pinned by hand: pairs (1,2) (2,1) (3,3) — relations
+        // (1,2)-(2,1) discordant, (1,2)-(3,3) concordant,
+        // (2,1)-(3,3) concordant => tau = (2-1)/3
+        let mut t = KendallTau::new(8);
+        t.push(1.0, 2.0);
+        t.push(2.0, 1.0);
+        t.push(3.0, 3.0);
+        assert!((t.tau() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(t.tau().to_bits(), t.tau_reference().to_bits());
+        // a tie in pred drops the pair from both counts
+        t.push(3.0, 0.0); // ties with (3,3) in pred; decisive vs the rest
+        assert_eq!(t.tau().to_bits(), t.tau_reference().to_bits());
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Golden byte-identical `ClusterReport` matrix: the single golden scenario
+//! in `tests/slo.rs` extended across the feature surface — colocated,
+//! disaggregated pools, sessions, drift, and a domain outage.
+//!
+//! No literal report bytes are checked in: pinning the full JSON would
+//! freeze float formatting (and this repo's offline CI regenerates nothing),
+//! so "golden" here means two independent properties that together give the
+//! same guarantee:
+//!
+//!   1. *run-twice*: the same config serialized twice must match byte for
+//!      byte — any HashMap-iteration-order or uninitialized-state creep
+//!      shows up as a diff;
+//!   2. *oracle*: the indexed fast path must serialize byte-identically to
+//!      the retained full-rescan oracle (`use_indexes = false`), which IS
+//!      the pre-index report — so a pass certifies the before/after
+//!      byte-equality the raw-speed campaign promised.
+
+use sagesched::cluster::EventCluster;
+use sagesched::config::{
+    ArrivalKind, AutoscaleKind, DomainFailureEvent, ExperimentConfig,
+    FailureDomain, FailureEvent, PolicyKind, PoolRole, RouterKind,
+};
+use sagesched::metrics::ClusterReport;
+use sagesched::workload::WorkloadGen;
+
+fn cluster_cfg(replicas: usize, n: usize, rps: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = PolicyKind::SageSched;
+    cfg.workload.n_requests = n;
+    cfg.workload.rps = rps;
+    cfg.warmup_fraction = 0.0;
+    cfg.history_prewarm = 0;
+    cfg.cluster.replicas = replicas;
+    cfg
+}
+
+fn deterministic_json(mut r: ClusterReport) -> String {
+    r.aggregate.predict_overhead = 0.0;
+    r.aggregate.sched_overhead = 0.0;
+    for pr in &mut r.per_replica {
+        pr.predict_overhead = 0.0;
+        pr.sched_overhead = 0.0;
+    }
+    r.to_json().to_string()
+}
+
+fn report_json(cfg: &ExperimentConfig, use_indexes: bool) -> String {
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(cfg, RouterKind::QuantileCost);
+    cluster.use_indexes = use_indexes;
+    cluster.prewarm();
+    cluster.run(workload.requests).unwrap();
+    deterministic_json(cluster.report(cfg.warmup_fraction))
+}
+
+/// The two golden properties for one scenario.
+fn assert_golden(name: &str, cfg: &ExperimentConfig) {
+    let a = report_json(cfg, true);
+    let b = report_json(cfg, true);
+    assert_eq!(a, b, "{name}: indexed report differs between identical runs");
+    let oracle = report_json(cfg, false);
+    assert_eq!(
+        a, oracle,
+        "{name}: indexed report differs from the full-rescan oracle"
+    );
+}
+
+/// The `tests/slo.rs` golden scenario verbatim: class-aware serving,
+/// heterogeneous fleet, MMPP bursts, uncertainty-aware autoscaling, an
+/// outage, admission pressure.
+fn golden_base() -> ExperimentConfig {
+    let mut cfg = cluster_cfg(3, 160, 24.0);
+    cfg.slo.class_aware = true;
+    cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+    cfg.cluster.speeds = vec![1.0, 1.0, 0.5];
+    cfg.max_queue = 24;
+    cfg.request_timeout = 30.0;
+    cfg.cluster.failures =
+        vec![FailureEvent { replica: 0, at: 2.0, duration: 1.5 }];
+    cfg.cluster.autoscale.kind = AutoscaleKind::UncertaintyAware;
+    cfg.cluster.autoscale.min_replicas = 2;
+    cfg.cluster.autoscale.max_replicas = 6;
+    cfg.cluster.autoscale.work_per_replica = 5.0e5;
+    cfg.cluster.autoscale.cooldown = 2.0;
+    cfg.cluster.autoscale.interval = 1.0;
+    cfg.cluster.autoscale.provision_delay = 1.0;
+    cfg
+}
+
+#[test]
+fn golden_colocated() {
+    assert_golden("colocated", &golden_base());
+}
+
+#[test]
+fn golden_disagg() {
+    // autoscale stays off here: pool roles cycle over the initial fleet
+    // and the scenario pins an even prefill/decode split
+    let mut cfg = cluster_cfg(4, 160, 24.0);
+    cfg.slo.class_aware = true;
+    cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+    cfg.max_queue = 24;
+    cfg.request_timeout = 30.0;
+    cfg.cluster.pools = vec![PoolRole::Prefill, PoolRole::Decode];
+    cfg.cluster.failures =
+        vec![FailureEvent { replica: 0, at: 2.0, duration: 1.5 }];
+    assert_golden("disagg", &cfg);
+}
+
+#[test]
+fn golden_sessions() {
+    let mut cfg = golden_base();
+    cfg.workload.sessions.enabled = true;
+    cfg.workload.sessions.prefix_share = 0.7;
+    assert_golden("sessions", &cfg);
+}
+
+#[test]
+fn golden_drift() {
+    let mut cfg = golden_base();
+    cfg.workload.drift.at_fraction = 0.5;
+    assert_golden("drift", &cfg);
+}
+
+#[test]
+fn golden_domain_outage() {
+    let mut cfg = golden_base();
+    cfg.cluster.failures.clear();
+    cfg.cluster.failure_domains = vec![FailureDomain {
+        name: "rack0".to_string(),
+        replicas: vec![0, 1],
+    }];
+    cfg.cluster.domain_failures =
+        vec![DomainFailureEvent { domain: 0, at: 2.0, duration: 1.5 }];
+    assert_golden("domain-outage", &cfg);
+}

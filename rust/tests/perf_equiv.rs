@@ -1,0 +1,267 @@
+//! Differential equivalence suite for the incremental router indexes: the
+//! fast path (`use_indexes = true`, the default) must produce the *exact*
+//! dispatch sequence and the byte-identical `ClusterReport` of the retained
+//! full-rescan oracle (`use_indexes = false` — the pre-index algorithms,
+//! kept verbatim), for every router, across a matrix of scenarios that
+//! together exercise every index mutation path: failures, autoscaling,
+//! work stealing, disaggregated pools, sessions, drift, and all of them at
+//! once. In debug builds every indexed dispatch additionally cross-checks
+//! itself against an inline rescan (`debug_assert`s inside
+//! `ClusterCtx::index_route`), so these tests double as property tests of
+//! the heap invariants; the release-mode CI job reruns them with the
+//! asserts compiled out, which is what certifies the fast path itself.
+
+use sagesched::cluster::EventCluster;
+use sagesched::config::{
+    ArrivalKind, AutoscaleKind, ExperimentConfig, FailureDomain, FailureEvent,
+    PolicyKind, PoolRole, RouterKind,
+};
+use sagesched::metrics::ClusterReport;
+use sagesched::util::rng::Rng;
+use sagesched::workload::WorkloadGen;
+
+fn cluster_cfg(replicas: usize, n: usize, rps: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = PolicyKind::SageSched;
+    cfg.workload.n_requests = n;
+    cfg.workload.rps = rps;
+    cfg.warmup_fraction = 0.0;
+    cfg.history_prewarm = 0; // keep the tests fast
+    cfg.cluster.replicas = replicas;
+    cfg
+}
+
+/// Same zeroing convention as the golden test in `tests/slo.rs`: the
+/// wallclock overhead fields are the only nondeterministic numbers.
+fn deterministic_json(mut r: ClusterReport) -> String {
+    r.aggregate.predict_overhead = 0.0;
+    r.aggregate.sched_overhead = 0.0;
+    for pr in &mut r.per_replica {
+        pr.predict_overhead = 0.0;
+        pr.sched_overhead = 0.0;
+    }
+    r.to_json().to_string()
+}
+
+/// One full run returning the dispatch trace (request id, replica) in
+/// dispatch order plus the deterministic report JSON.
+fn run_once(
+    cfg: &ExperimentConfig,
+    router: RouterKind,
+    use_indexes: bool,
+) -> (Vec<(u64, usize)>, String) {
+    let workload = WorkloadGen::new(cfg.workload.clone(), cfg.seed).generate();
+    let mut cluster = EventCluster::with_router(cfg, router);
+    cluster.use_indexes = use_indexes;
+    cluster.trace_dispatch = true;
+    cluster.prewarm();
+    cluster.run(workload.requests).unwrap();
+    let trace = std::mem::take(&mut cluster.dispatch_trace);
+    let report = deterministic_json(cluster.report(cfg.warmup_fraction));
+    (trace, report)
+}
+
+/// Assert indexed == oracle on both the dispatch sequence and the report,
+/// for every router, under one scenario config.
+fn assert_equivalent(name: &str, cfg: &ExperimentConfig) {
+    for router in RouterKind::ALL {
+        let (fast_trace, fast_report) = run_once(cfg, router, true);
+        let (slow_trace, slow_report) = run_once(cfg, router, false);
+        assert!(
+            !fast_trace.is_empty(),
+            "{name}/{router:?}: empty dispatch trace — scenario dispatched \
+             nothing, the comparison is vacuous"
+        );
+        if let Some(k) =
+            (0..fast_trace.len().min(slow_trace.len()))
+                .find(|&k| fast_trace[k] != slow_trace[k])
+        {
+            panic!(
+                "{name}/{router:?}: dispatch {k} diverged — indexed {:?} vs \
+                 oracle {:?}",
+                fast_trace[k], slow_trace[k]
+            );
+        }
+        assert_eq!(
+            fast_trace.len(),
+            slow_trace.len(),
+            "{name}/{router:?}: dispatch counts diverged"
+        );
+        assert_eq!(
+            fast_report, slow_report,
+            "{name}/{router:?}: reports diverged despite identical dispatches"
+        );
+    }
+}
+
+fn baseline() -> ExperimentConfig {
+    cluster_cfg(5, 220, 30.0)
+}
+
+#[test]
+fn baseline_matches_oracle() {
+    assert_equivalent("baseline", &baseline());
+}
+
+#[test]
+fn failures_match_oracle() {
+    // crashes exercise sync-on-fail, the pooled redispatch storm (fresh
+    // `keep_on == None` placements through the fast path), and recovery
+    let mut cfg = baseline();
+    cfg.cluster.failures = vec![
+        FailureEvent { replica: 1, at: 2.0, duration: 1.5 },
+        FailureEvent { replica: 3, at: 4.0, duration: 2.0 },
+    ];
+    assert_equivalent("failures", &cfg);
+}
+
+#[test]
+fn domain_outage_matches_oracle() {
+    // a whole domain leaves and rejoins the index scope in one event
+    let mut cfg = baseline();
+    cfg.cluster.failure_domains = vec![FailureDomain {
+        name: "rack0".to_string(),
+        replicas: vec![0, 1],
+    }];
+    cfg.cluster.domain_failures =
+        vec![sagesched::config::DomainFailureEvent {
+            domain: 0,
+            at: 2.0,
+            duration: 1.5,
+        }];
+    assert_equivalent("domain-outage", &cfg);
+}
+
+#[test]
+fn autoscale_matches_oracle() {
+    // spawn/drain/retire churn the roster and the heaps; drains route
+    // with `keep_on` (rescan path) while fresh traffic stays indexed
+    let mut cfg = baseline();
+    cfg.cluster.autoscale.kind = AutoscaleKind::UncertaintyAware;
+    cfg.cluster.autoscale.min_replicas = 2;
+    cfg.cluster.autoscale.max_replicas = 8;
+    cfg.cluster.autoscale.work_per_replica = 5.0e5;
+    cfg.cluster.autoscale.cooldown = 2.0;
+    cfg.cluster.autoscale.interval = 1.0;
+    cfg.cluster.autoscale.provision_delay = 0.5;
+    assert_equivalent("autoscale", &cfg);
+}
+
+#[test]
+fn stealing_matches_oracle() {
+    // bursty arrivals onto a heterogeneous fleet with free steals: the
+    // idle-thief count gate must agree with the oracle's quiescent rescan
+    let mut cfg = baseline();
+    cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+    cfg.workload.arrival.burst_factor = 5.0;
+    cfg.cluster.speeds = vec![1.0, 1.0, 0.5, 0.5, 0.5];
+    cfg.cluster.steal_transfer_per_token = 0.0;
+    assert_equivalent("stealing", &cfg);
+}
+
+#[test]
+fn disagg_matches_oracle() {
+    // the index scope narrows to the prefill pool; fabric handoffs into
+    // decode stay on the rescan path, gated by `fabric_dirty`
+    let mut cfg = cluster_cfg(6, 220, 30.0);
+    cfg.cluster.pools = vec![PoolRole::Prefill, PoolRole::Decode];
+    assert_equivalent("disagg", &cfg);
+}
+
+#[test]
+fn sessions_match_oracle() {
+    // multi-turn traffic; CacheAffinity declares Rescan and must still
+    // agree with itself under the toggle (sanity that the toggle is inert
+    // for rescan-only routers)
+    let mut cfg = baseline();
+    cfg.workload.sessions.enabled = true;
+    cfg.workload.sessions.prefix_share = 0.7;
+    assert_equivalent("sessions", &cfg);
+}
+
+#[test]
+fn drift_matches_oracle() {
+    // mid-run mix shift changes predicted costs, stressing score updates
+    let mut cfg = baseline();
+    cfg.workload.drift.at_fraction = 0.5;
+    assert_equivalent("drift", &cfg);
+}
+
+#[test]
+fn kitchen_sink_matches_oracle() {
+    // everything at once: the scenario most likely to interleave index
+    // mutations in an order no single-feature test reaches
+    let mut cfg = cluster_cfg(6, 260, 36.0);
+    cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+    cfg.workload.sessions.enabled = true;
+    cfg.workload.drift.at_fraction = 0.5;
+    cfg.cluster.speeds = vec![1.0, 1.0, 0.5];
+    cfg.cluster.failures =
+        vec![FailureEvent { replica: 2, at: 2.0, duration: 1.5 }];
+    cfg.cluster.autoscale.kind = AutoscaleKind::UncertaintyAware;
+    cfg.cluster.autoscale.min_replicas = 3;
+    cfg.cluster.autoscale.max_replicas = 9;
+    cfg.cluster.autoscale.work_per_replica = 5.0e5;
+    cfg.cluster.autoscale.cooldown = 2.0;
+    cfg.cluster.autoscale.interval = 1.0;
+    cfg.cluster.autoscale.provision_delay = 0.5;
+    assert_equivalent("kitchen-sink", &cfg);
+}
+
+#[test]
+fn class_aware_wrapper_matches_oracle() {
+    // the seventh router: the class-aware wrapper forwards Batch traffic
+    // to the inner fast path and forces Interactive onto the rescan
+    let mut cfg = baseline();
+    cfg.slo.class_aware = true;
+    assert_equivalent("class-aware", &cfg);
+}
+
+#[test]
+fn random_scenarios_match_oracle() {
+    // proptest-style: seeded random small scenarios interleave ctx deltas
+    // (failures, scaling, stealing, sessions) in orders the hand-written
+    // matrix does not; each must still match the oracle exactly
+    let mut rng = Rng::new(0xEC_5EED);
+    for case in 0..6u64 {
+        let mut cfg = cluster_cfg(
+            2 + rng.below(4) as usize,
+            (120 + rng.below(80) as usize) & !1,
+            18.0 + rng.below(18) as f64,
+        );
+        cfg.seed = 100 + case;
+        if rng.below(2) == 1 {
+            cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+        }
+        if rng.below(2) == 1 {
+            cfg.workload.sessions.enabled = true;
+        }
+        if rng.below(2) == 1 {
+            let r = rng.below(cfg.cluster.replicas as u64) as usize;
+            cfg.cluster.failures = vec![FailureEvent {
+                replica: r,
+                at: 1.0 + rng.f64() * 2.0,
+                duration: 0.5 + rng.f64(),
+            }];
+        }
+        if rng.below(2) == 1 {
+            cfg.cluster.autoscale.kind = AutoscaleKind::UncertaintyAware;
+            cfg.cluster.autoscale.min_replicas = 2;
+            cfg.cluster.autoscale.max_replicas = cfg.cluster.replicas + 3;
+            cfg.cluster.autoscale.work_per_replica = 5.0e5;
+            cfg.cluster.autoscale.cooldown = 2.0;
+            cfg.cluster.autoscale.interval = 1.0;
+            cfg.cluster.autoscale.provision_delay = 0.5;
+        }
+        // two routers per case keeps the runtime bounded; rotate so all
+        // six appear across the six cases
+        let i = (case as usize) % RouterKind::ALL.len();
+        let j = (i + 3) % RouterKind::ALL.len();
+        for router in [RouterKind::ALL[i], RouterKind::ALL[j]] {
+            let (ft, fr) = run_once(&cfg, router, true);
+            let (st, sr) = run_once(&cfg, router, false);
+            assert_eq!(ft, st, "case {case}/{router:?}: traces diverged");
+            assert_eq!(fr, sr, "case {case}/{router:?}: reports diverged");
+        }
+    }
+}
