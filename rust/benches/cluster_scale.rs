@@ -1,7 +1,8 @@
-//! Raw-speed harness for the event kernel at fleet scale: one large
-//! MMPP + failures + domain outage + autoscale + sessions scenario, run
-//! under the incremental router indexes and (optionally) the retained
-//! full-rescan oracle, with byte-identical-report gates on both axes.
+//! Raw-speed harness for the event kernel at fleet scale: a large
+//! MMPP + failures + domain outage + autoscale + sessions baseline plus a
+//! session-heavy disaggregated cache-affinity scenario, each run under the
+//! incremental router indexes and (optionally) the retained full-rescan
+//! oracle, with byte-identical-report gates on both axes.
 //!
 //! Usage:
 //!   cargo bench --bench cluster_scale                 # full 1,000-replica run
@@ -9,12 +10,18 @@
 //!   cargo bench --bench cluster_scale -- --skip-oracle
 //!   cargo bench --bench cluster_scale -- --out path/to/BENCH_cluster.json
 //!
-//! The harness exits non-zero if either gate fails:
-//!   1. run-twice: two indexed runs must serialize byte-identically
-//!      (catches nondeterminism creep before it corrupts an A/B number);
+//! The harness exits non-zero if any gate fails:
+//!   1. run-twice: two indexed runs must serialize byte-identically,
+//!      fast-path counters included (catches nondeterminism creep before
+//!      it corrupts an A/B number);
 //!   2. oracle: the indexed report must equal the full-rescan report byte
-//!      for byte (the ≥10x speedup claim is only meaningful if the fast
-//!      path computes the *same* simulation).
+//!      for byte outside the fast-path accounting block — the one section
+//!      designed to differ between modes (the ≥10x speedup claim is only
+//!      meaningful if the fast path computes the *same* simulation);
+//!   3. hit-rate floor (smoke): the baseline scenario's combined fast-path
+//!      hit rate must stay above [`SMOKE_HIT_RATE_FLOOR`], so a regression
+//!      that silently diverts dispatches onto the rescan path fails CI
+//!      even though the reports still agree.
 //!
 //! Results land in `BENCH_cluster.json` (smoke mode writes under
 //! `bench_out/` so a CI run never clobbers the checked-in baseline).
@@ -26,21 +33,32 @@ use std::time::Instant;
 use sagesched::cluster::EventCluster;
 use sagesched::config::{
     ArrivalKind, AutoscaleKind, DomainFailureEvent, ExperimentConfig,
-    FailureDomain, FailureEvent, PolicyKind, PredictorKind, RouterKind,
+    FailureDomain, FailureEvent, PolicyKind, PoolRole, PredictorKind, RouterKind,
 };
-use sagesched::metrics::{peak_rss_mb, ClusterReport, PerfStats};
+use sagesched::metrics::{peak_rss_mb, ClusterReport, FastPathStats, PerfStats};
 use sagesched::util::json::Json;
 use sagesched::workload::WorkloadGen;
 
+/// Minimum combined fast-path hit rate the smoke baseline must sustain.
+/// The baseline routes through quantile-cost, whose declared fast path is
+/// a pure index lookup — in practice nearly every dispatch hits, so 0.5
+/// leaves head-room for scope-empty windows during outages while still
+/// catching any change that diverts dispatch wholesale onto the rescan.
+const SMOKE_HIT_RATE_FLOOR: f64 = 0.5;
+
 /// Serialize a report with the wallclock-measured overhead fields zeroed —
 /// the only nondeterministic numbers in it (same convention as the golden
-/// test in `tests/slo.rs`).
-fn deterministic_json(mut r: ClusterReport) -> String {
+/// test in `tests/slo.rs`). `strip_fastpath` additionally drops the
+/// per-scope fast-path counters for cross-mode comparisons.
+fn deterministic_json(mut r: ClusterReport, strip_fastpath: bool) -> String {
     r.aggregate.predict_overhead = 0.0;
     r.aggregate.sched_overhead = 0.0;
     for pr in &mut r.per_replica {
         pr.predict_overhead = 0.0;
         pr.sched_overhead = 0.0;
+    }
+    if strip_fastpath {
+        r.fastpath = FastPathStats::default();
     }
     r.to_json().to_string()
 }
@@ -94,9 +112,40 @@ fn scenario(smoke: bool) -> ExperimentConfig {
     cfg
 }
 
+/// The tentpole's own scenario: session-heavy traffic over disaggregated
+/// pools with the cache-affinity router, so the shortlist + dominance-bound
+/// fast path and the decode-scope index twin carry the dispatch load.
+fn scenario_session_disagg(smoke: bool) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = PolicyKind::SageSched;
+    cfg.predictor = PredictorKind::Proxy;
+    cfg.warmup_fraction = 0.0;
+    cfg.history_prewarm = 0;
+    cfg.workload.arrival.kind = ArrivalKind::Mmpp;
+    cfg.workload.sessions.enabled = true;
+    cfg.workload.sessions.prefix_share = 0.8;
+    cfg.cluster.router = RouterKind::CacheAffinity;
+    cfg.cluster.pools = vec![PoolRole::Prefill, PoolRole::Decode];
+    if smoke {
+        cfg.cluster.replicas = 6;
+        cfg.workload.n_requests = 400;
+        cfg.workload.rps = 30.0;
+    } else {
+        cfg.cluster.replicas = 400;
+        cfg.workload.n_requests = 300_000;
+        cfg.workload.rps = 800.0;
+    }
+    cfg
+}
+
 struct ModeRun {
     stats: PerfStats,
-    report: String,
+    /// Report with fast-path counters kept (run-twice determinism gate).
+    report_full: String,
+    /// Report with fast-path counters stripped (cross-mode oracle gate).
+    report_stripped: String,
+    /// Combined fast-path hit rate over every dispatch scope.
+    hit_rate: f64,
 }
 
 /// One full run of the scenario with the index fast paths on or off,
@@ -124,7 +173,10 @@ fn run_mode(cfg: &ExperimentConfig, use_indexes: bool) -> ModeRun {
     let replica_steps = cluster.replica_steps;
 
     let t = Instant::now();
-    let report = deterministic_json(cluster.report(cfg.warmup_fraction));
+    let report = cluster.report(cfg.warmup_fraction);
+    let hit_rate = report.fastpath.hit_rate();
+    let report_full = deterministic_json(report.clone(), false);
+    let report_stripped = deterministic_json(report, true);
     phases.push(("report".to_string(), t.elapsed().as_secs_f64()));
 
     let stats = PerfStats {
@@ -136,7 +188,86 @@ fn run_mode(cfg: &ExperimentConfig, use_indexes: bool) -> ModeRun {
         peak_rss_mb: peak_rss_mb(),
         phases,
     };
-    ModeRun { stats, report }
+    ModeRun { stats, report_full, report_stripped, hit_rate }
+}
+
+/// Run one scenario through both gates; returns `(indexed, oracle)`.
+fn run_scenario(
+    label: &str,
+    cfg: &ExperimentConfig,
+    skip_oracle: bool,
+) -> (ModeRun, Option<ModeRun>) {
+    println!(
+        "== {label} — {} replicas, {} requests, router {} ==",
+        cfg.cluster.replicas,
+        cfg.workload.n_requests,
+        cfg.cluster.router.name()
+    );
+    // gate 1: run-twice determinism of the indexed path (counters included)
+    let indexed = run_mode(cfg, true);
+    print_stats("indexed", &indexed.stats);
+    println!("  fast-path hit rate: {:.3}", indexed.hit_rate);
+    let again = run_mode(cfg, true);
+    if indexed.report_full != again.report_full {
+        eprintln!("FAIL: {label}: two indexed runs produced different reports");
+        std::process::exit(1);
+    }
+    println!("  run-twice: reports byte-identical");
+
+    // gate 2: indexed vs full-rescan oracle (fast-path counters stripped —
+    // the one section designed to differ between modes)
+    let oracle = if skip_oracle {
+        println!("  oracle: skipped (--skip-oracle)");
+        None
+    } else {
+        let o = run_mode(cfg, false);
+        print_stats("oracle", &o.stats);
+        if o.report_stripped != indexed.report_stripped {
+            eprintln!(
+                "FAIL: {label}: indexed report diverged from the rescan oracle"
+            );
+            std::process::exit(1);
+        }
+        println!("  oracle: reports byte-identical");
+        Some(o)
+    };
+    let speedup = oracle.as_ref().map(|o| {
+        indexed.stats.events_per_sec / o.stats.events_per_sec.max(1e-9)
+    });
+    if let Some(s) = speedup {
+        println!("  speedup: {s:.1}x events/sec");
+    }
+    (indexed, oracle)
+}
+
+/// The per-scenario block of the output JSON.
+fn scenario_json(
+    cfg: &ExperimentConfig,
+    indexed: &ModeRun,
+    oracle: &Option<ModeRun>,
+) -> Vec<(&'static str, Json)> {
+    let speedup = oracle.as_ref().map(|o| {
+        indexed.stats.events_per_sec / o.stats.events_per_sec.max(1e-9)
+    });
+    vec![
+        ("replicas", Json::num(cfg.cluster.replicas as f64)),
+        ("requests", Json::num(cfg.workload.n_requests as f64)),
+        ("router", Json::str(cfg.cluster.router.name())),
+        ("indexed", indexed.stats.to_json()),
+        ("fastpath_hit_rate", Json::num(indexed.hit_rate)),
+        (
+            "oracle",
+            oracle
+                .as_ref()
+                .map(|o| o.stats.to_json())
+                .unwrap_or(Json::Null),
+        ),
+        (
+            "speedup_events_per_sec",
+            speedup.map(Json::num).unwrap_or(Json::Null),
+        ),
+        ("reports_byte_identical", Json::Bool(true)),
+    ]
 }
 
 fn print_stats(label: &str, s: &PerfStats) {
@@ -168,65 +299,46 @@ fn main() {
         .to_string();
 
     let cfg = scenario(smoke);
-    println!(
-        "== cluster_scale ({}) — {} replicas, {} requests ==",
-        if smoke { "smoke" } else { "full" },
-        cfg.cluster.replicas,
-        cfg.workload.n_requests
+    let label = format!(
+        "cluster_scale ({}) baseline",
+        if smoke { "smoke" } else { "full" }
     );
+    let (indexed, oracle) = run_scenario(&label, &cfg, skip_oracle);
 
-    // gate 1: run-twice determinism of the indexed path
-    let indexed = run_mode(&cfg, true);
-    print_stats("indexed", &indexed.stats);
-    let again = run_mode(&cfg, true);
-    if indexed.report != again.report {
-        eprintln!("FAIL: two indexed runs produced different reports");
+    // gate 3 (smoke / CI): the baseline's combined hit rate must hold its
+    // floor, so a change that silently diverts dispatch onto the rescan
+    // path fails even though the reports still agree
+    if smoke && indexed.hit_rate < SMOKE_HIT_RATE_FLOOR {
+        eprintln!(
+            "FAIL: smoke fast-path hit rate {:.3} below the {SMOKE_HIT_RATE_FLOOR} floor",
+            indexed.hit_rate
+        );
         std::process::exit(1);
     }
-    println!("  run-twice: reports byte-identical");
-
-    // gate 2: indexed vs full-rescan oracle
-    let oracle = if skip_oracle {
-        println!("  oracle: skipped (--skip-oracle)");
-        None
-    } else {
-        let o = run_mode(&cfg, false);
-        print_stats("oracle", &o.stats);
-        if o.report != indexed.report {
-            eprintln!("FAIL: indexed report diverged from the rescan oracle");
-            std::process::exit(1);
-        }
-        println!("  oracle: reports byte-identical");
-        Some(o)
-    };
-
-    let speedup = oracle.as_ref().map(|o| {
-        indexed.stats.events_per_sec / o.stats.events_per_sec.max(1e-9)
-    });
-    if let Some(s) = speedup {
-        println!("  speedup: {s:.1}x events/sec");
+    if smoke {
+        println!(
+            "  hit-rate floor: {:.3} >= {SMOKE_HIT_RATE_FLOOR}",
+            indexed.hit_rate
+        );
     }
 
-    let json = Json::obj(vec![
+    let sd_cfg = scenario_session_disagg(smoke);
+    let sd_label = format!(
+        "cluster_scale ({}) session+disagg",
+        if smoke { "smoke" } else { "full" }
+    );
+    let (sd_indexed, sd_oracle) = run_scenario(&sd_label, &sd_cfg, skip_oracle);
+
+    let mut fields = vec![
         ("bench", Json::str("cluster_scale")),
         ("mode", Json::str(if smoke { "smoke" } else { "full" })),
-        ("replicas", Json::num(cfg.cluster.replicas as f64)),
-        ("requests", Json::num(cfg.workload.n_requests as f64)),
-        ("router", Json::str(cfg.cluster.router.name())),
-        ("indexed", indexed.stats.to_json()),
-        (
-            "oracle",
-            oracle
-                .as_ref()
-                .map(|o| o.stats.to_json())
-                .unwrap_or(Json::Null),
-        ),
-        (
-            "speedup_events_per_sec",
-            speedup.map(Json::num).unwrap_or(Json::Null),
-        ),
-        ("reports_byte_identical", Json::Bool(true)),
-    ]);
+    ];
+    fields.extend(scenario_json(&cfg, &indexed, &oracle));
+    fields.push((
+        "session_disagg",
+        Json::obj(scenario_json(&sd_cfg, &sd_indexed, &sd_oracle)),
+    ));
+    let json = Json::obj(fields);
     if let Some(dir) = std::path::Path::new(&out).parent() {
         if !dir.as_os_str().is_empty() {
             let _ = std::fs::create_dir_all(dir);

@@ -63,26 +63,68 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
-/// Map `f` over `items` on one std thread each (rayon is unavailable
-/// offline), returning results in input order. Intended for a handful of
-/// independent sims — the fig sweeps run the same seeded workload under
-/// several routers/policies, and each run is internally deterministic, so
-/// same-seed outputs are unchanged: only wall-clock drops.
+/// Map `f` over `items` on a bounded pool of std threads (rayon is
+/// unavailable offline), returning results in input order. The items form
+/// one shared work queue drained by `min(len, available_parallelism)`
+/// workers, so a flattened router × seed grid keeps every core busy until
+/// the queue is empty instead of over-subscribing one thread per item.
+/// Each run is internally deterministic and results are re-assembled in
+/// input order, so same-seed outputs (and printed order) are unchanged:
+/// only wall-clock drops.
 pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
 {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let n = items.len();
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n)
+        .max(1);
     let f = &f;
+    // hand-rolled claim-by-index queue: workers bump `next` and write the
+    // result into the slot of the item they claimed, preserving input order
+    let queue: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|it| Mutex::new(Some(it))).collect();
+    let queue = &queue;
+    let next = AtomicUsize::new(0);
+    let next = &next;
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let slots = &slots;
     std::thread::scope(|s| {
-        let handles: Vec<_> = items
-            .into_iter()
-            .map(|it| s.spawn(move || f(it)))
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        return;
+                    }
+                    let it = queue[i]
+                        .lock()
+                        .expect("parallel_map queue poisoned")
+                        .take()
+                        .expect("parallel_map item claimed twice");
+                    let r = f(it);
+                    *slots[i].lock().expect("parallel_map slot poisoned") = Some(r);
+                })
+            })
             .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("parallel_map worker panicked"))
-            .collect()
-    })
+        for h in handles {
+            h.join().expect("parallel_map worker panicked");
+        }
+    });
+    slots
+        .iter()
+        .map(|slot| {
+            slot.lock()
+                .expect("parallel_map slot poisoned")
+                .take()
+                .expect("parallel_map worker left a slot empty")
+        })
+        .collect()
 }

@@ -50,6 +50,13 @@ fn run_point(cfg: &ExperimentConfig) -> (f64, f64) {
     (r.ttlt.mean, r.ttft.mean)
 }
 
+/// Column means of one parameter point's per-seed `(ttlt, ttft)` chunk.
+fn point_means(chunk: &[(f64, f64)]) -> (f64, f64) {
+    let ttlts: Vec<f64> = chunk.iter().map(|p| p.0).collect();
+    let ttfts: Vec<f64> = chunk.iter().map(|p| p.1).collect();
+    (mean(&ttlts), mean(&ttfts))
+}
+
 /// Default predictor pairing per policy, as each baseline's paper uses.
 fn natural_predictor(policy: PolicyKind) -> PredictorKind {
     match policy {
@@ -459,18 +466,17 @@ fn fig6(_ctx: &Ctx) {
 // ===========================================================================
 fn fig7(ctx: &Ctx) {
     println!("\n=== fig7: end-to-end TTLT/TTFT, mixed datasets ===");
-    let mut rows = Vec::new();
-    for engine in [EngineProfile::a40_llama8b(), EngineProfile::h800_qwen32b()] {
-        for rps in [4.0, 6.0, 8.0, 10.0, 12.0] {
-            println!("\n-- {} @ {rps} rps --", engine.name);
-            println!("| policy | TTLT mean | TTFT mean |");
-            println!("|---|---|---|");
-            let mut best_baseline = f64::INFINITY;
-            let mut sage = f64::INFINITY;
+    let engines = [EngineProfile::a40_llama8b(), EngineProfile::h800_qwen32b()];
+    let rates = [4.0, 6.0, 8.0, 10.0, 12.0];
+    let seeds = ctx.seeds(2);
+    // flatten the whole engine x rps x policy x seed grid into one work
+    // queue so the pool stays busy across cells; printing below walks the
+    // results in the same order the grid was built, so output is unchanged
+    let mut cfgs = Vec::new();
+    for engine in &engines {
+        for &rps in &rates {
             for policy in PolicyKind::PAPER_BASELINES {
-                let mut ttlts = Vec::new();
-                let mut ttfts = Vec::new();
-                for seed in ctx.seeds(2) {
+                for &seed in &seeds {
                     let mut cfg = base_cfg();
                     cfg.engine = engine.clone();
                     cfg.policy = policy;
@@ -478,11 +484,24 @@ fn fig7(ctx: &Ctx) {
                     cfg.workload.rps = rps;
                     cfg.workload.n_requests = ctx.n_requests(1200);
                     cfg.seed = seed;
-                    let (ttlt, ttft) = run_point(&cfg);
-                    ttlts.push(ttlt);
-                    ttfts.push(ttft);
+                    cfgs.push(cfg);
                 }
-                let (t, f) = (mean(&ttlts), mean(&ttfts));
+            }
+        }
+    }
+    let points = parallel_map(cfgs, |cfg| run_point(&cfg));
+    let mut chunks = points.chunks(seeds.len());
+    let mut rows = Vec::new();
+    for engine in &engines {
+        for rps in rates {
+            println!("\n-- {} @ {rps} rps --", engine.name);
+            println!("| policy | TTLT mean | TTFT mean |");
+            println!("|---|---|---|");
+            let mut best_baseline = f64::INFINITY;
+            let mut sage = f64::INFINITY;
+            for policy in PolicyKind::PAPER_BASELINES {
+                let chunk = chunks.next().expect("fig7 grid/result mismatch");
+                let (t, f) = point_means(chunk);
                 println!("| {} | {t:.2} | {f:.2} |", policy.name());
                 rows.push(format!(
                     "{},{rps},{},{t:.3},{f:.3}",
@@ -507,15 +526,12 @@ fn fig7(ctx: &Ctx) {
 // ===========================================================================
 fn fig8(ctx: &Ctx) {
     println!("\n=== fig8: end-to-end per dataset (h800 @ 8 rps) ===");
-    let mut rows = Vec::new();
+    let seeds = ctx.seeds(2);
+    // one flat dataset x policy x seed queue (see fig7)
+    let mut cfgs = Vec::new();
     for ds in DatasetKind::ALL {
-        println!("\n-- {} --", ds.name());
-        println!("| policy | TTLT mean | TTFT mean |");
-        println!("|---|---|---|");
         for policy in PolicyKind::PAPER_BASELINES {
-            let mut ttlts = Vec::new();
-            let mut ttfts = Vec::new();
-            for seed in ctx.seeds(2) {
+            for &seed in &seeds {
                 let mut cfg = base_cfg();
                 cfg.engine = EngineProfile::h800_qwen32b();
                 cfg.policy = policy;
@@ -524,22 +540,25 @@ fn fig8(ctx: &Ctx) {
                 cfg.workload.rps = 8.0;
                 cfg.workload.n_requests = ctx.n_requests(1200);
                 cfg.seed = seed;
-                let (t, f) = run_point(&cfg);
-                ttlts.push(t);
-                ttfts.push(f);
+                cfgs.push(cfg);
             }
-            println!(
-                "| {} | {:.2} | {:.2} |",
-                policy.name(),
-                mean(&ttlts),
-                mean(&ttfts)
-            );
+        }
+    }
+    let points = parallel_map(cfgs, |cfg| run_point(&cfg));
+    let mut chunks = points.chunks(seeds.len());
+    let mut rows = Vec::new();
+    for ds in DatasetKind::ALL {
+        println!("\n-- {} --", ds.name());
+        println!("| policy | TTLT mean | TTFT mean |");
+        println!("|---|---|---|");
+        for policy in PolicyKind::PAPER_BASELINES {
+            let chunk = chunks.next().expect("fig8 grid/result mismatch");
+            let (t, f) = point_means(chunk);
+            println!("| {} | {t:.2} | {f:.2} |", policy.name());
             rows.push(format!(
-                "{},{},{:.3},{:.3}",
+                "{},{},{t:.3},{f:.3}",
                 ds.name(),
-                policy.name(),
-                mean(&ttlts),
-                mean(&ttfts)
+                policy.name()
             ));
         }
     }
@@ -553,23 +572,33 @@ fn fig9(ctx: &Ctx) {
     println!("\n=== fig9: predictor ablation (SageSched policy) ===");
     println!("| predictor | TTLT mean | W1(pred, true) |");
     println!("|---|---|---|");
-    let mut rows = Vec::new();
-    for pred in [
+    let preds = [
         PredictorKind::History,
         PredictorKind::LengthHistory,
         PredictorKind::Proxy,
         PredictorKind::Oracle,
-    ] {
-        let mut ttlts = Vec::new();
-        for seed in ctx.seeds(2) {
+    ];
+    let seeds = ctx.seeds(2);
+    // one flat predictor x seed queue; the cheap W1 probe stays in the
+    // sequential print loop
+    let mut cfgs = Vec::new();
+    for &pred in &preds {
+        for &seed in &seeds {
             let mut cfg = base_cfg();
             cfg.policy = PolicyKind::SageSched;
             cfg.predictor = pred;
             cfg.workload.rps = 8.0;
             cfg.workload.n_requests = ctx.n_requests(1200);
             cfg.seed = seed;
-            ttlts.push(run_point(&cfg).0);
+            cfgs.push(cfg);
         }
+    }
+    let points = parallel_map(cfgs, |cfg| run_point(&cfg));
+    let mut chunks = points.chunks(seeds.len());
+    let mut rows = Vec::new();
+    for pred in preds {
+        let chunk = chunks.next().expect("fig9 grid/result mismatch");
+        let (ttlt, _) = point_means(chunk);
         // prediction quality probe
         let cfg = base_cfg();
         let mut p = sagesched::predictor::make_predictor(pred, 64, 10_000, 0.8, 3);
@@ -583,8 +612,8 @@ fn fig9(ctx: &Ctx) {
             .map(|r| p.predict(r).w1_distance(r.true_dist.as_ref().unwrap()))
             .sum::<f64>()
             / probes.requests.len() as f64;
-        println!("| {} | {:.2} | {:.1} |", pred.name(), mean(&ttlts), w1);
-        rows.push(format!("{},{:.3},{w1:.2}", pred.name(), mean(&ttlts)));
+        println!("| {} | {ttlt:.2} | {w1:.1} |", pred.name());
+        rows.push(format!("{},{ttlt:.3},{w1:.2}", pred.name()));
     }
     write_csv("fig9", "predictor,ttlt_mean,w1", &rows);
 }
@@ -596,24 +625,33 @@ fn fig10(ctx: &Ctx) {
     println!("\n=== fig10: cost-model ablation (SageSched policy) ===");
     println!("| cost model | TTLT mean |");
     println!("|---|---|");
-    let mut rows = Vec::new();
-    for cm in [
+    let cms = [
         CostModelKind::ResourceBound,
         CostModelKind::OutputLen,
         CostModelKind::OverallLen,
-    ] {
-        let mut ttlts = Vec::new();
-        for seed in ctx.seeds(3) {
+    ];
+    let seeds = ctx.seeds(3);
+    // one flat cost-model x seed queue (see fig7)
+    let mut cfgs = Vec::new();
+    for &cm in &cms {
+        for &seed in &seeds {
             let mut cfg = base_cfg();
             cfg.policy = PolicyKind::SageSched;
             cfg.cost_model = cm;
             cfg.workload.rps = 8.0;
             cfg.workload.n_requests = ctx.n_requests(1200);
             cfg.seed = seed;
-            ttlts.push(run_point(&cfg).0);
+            cfgs.push(cfg);
         }
-        println!("| {} | {:.2} |", cm.name(), mean(&ttlts));
-        rows.push(format!("{},{:.3}", cm.name(), mean(&ttlts)));
+    }
+    let points = parallel_map(cfgs, |cfg| run_point(&cfg));
+    let mut chunks = points.chunks(seeds.len());
+    let mut rows = Vec::new();
+    for cm in cms {
+        let chunk = chunks.next().expect("fig10 grid/result mismatch");
+        let (ttlt, _) = point_means(chunk);
+        println!("| {} | {ttlt:.2} |", cm.name());
+        rows.push(format!("{},{ttlt:.3}", cm.name()));
     }
     write_csv("fig10", "cost_model,ttlt_mean", &rows);
 }
@@ -625,26 +663,36 @@ fn fig11(ctx: &Ctx) {
     println!("\n=== fig11: Mean vs Gittins vs SageSched, +noise ===");
     println!("| policy | TTLT (clean) | TTLT (noisy 1:4) | degradation |");
     println!("|---|---|---|---|");
-    let mut rows = Vec::new();
-    for policy in [
+    let policies = [
         PolicyKind::MeanCost,
         PolicyKind::GittinsStatic,
         PolicyKind::SageSched,
-    ] {
-        let mut clean = Vec::new();
-        let mut noisy = Vec::new();
-        for seed in ctx.seeds(3) {
-            for (noise, acc) in [(0.0, &mut clean), (0.2, &mut noisy)] {
+    ];
+    let seeds = ctx.seeds(3);
+    // one flat policy x noise x seed queue: per policy, the first seed-chunk
+    // is the clean run, the second the noisy one
+    let mut cfgs = Vec::new();
+    for &policy in &policies {
+        for noise in [0.0, 0.2] {
+            for &seed in &seeds {
                 let mut cfg = base_cfg();
                 cfg.policy = policy;
                 cfg.workload.rps = 8.0;
                 cfg.workload.n_requests = ctx.n_requests(1200);
                 cfg.noise_mix = noise;
                 cfg.seed = seed;
-                acc.push(run_point(&cfg).0);
+                cfgs.push(cfg);
             }
         }
-        let (c, n) = (mean(&clean), mean(&noisy));
+    }
+    let points = parallel_map(cfgs, |cfg| run_point(&cfg));
+    let mut chunks = points.chunks(seeds.len());
+    let mut rows = Vec::new();
+    for policy in policies {
+        let clean = chunks.next().expect("fig11 grid/result mismatch");
+        let noisy = chunks.next().expect("fig11 grid/result mismatch");
+        let (c, _) = point_means(clean);
+        let (n, _) = point_means(noisy);
         println!(
             "| {} | {c:.2} | {n:.2} | {:+.1}% |",
             policy.name(),
@@ -867,19 +915,28 @@ fn fig13a(ctx: &Ctx) {
     println!("\n=== fig13a: similarity-threshold sensitivity ===");
     println!("| threshold | TTLT mean |");
     println!("|---|---|");
-    let mut rows = Vec::new();
-    for th in [0.6f32, 0.7, 0.8, 0.9, 0.95] {
-        let mut ttlts = Vec::new();
-        for seed in ctx.seeds(3) {
+    let thresholds = [0.6f32, 0.7, 0.8, 0.9, 0.95];
+    let seeds = ctx.seeds(3);
+    // one flat threshold x seed queue (see fig7)
+    let mut cfgs = Vec::new();
+    for &th in &thresholds {
+        for &seed in &seeds {
             let mut cfg = base_cfg();
             cfg.similarity_threshold = th;
             cfg.workload.rps = 8.0;
             cfg.workload.n_requests = ctx.n_requests(1200);
             cfg.seed = seed;
-            ttlts.push(run_point(&cfg).0);
+            cfgs.push(cfg);
         }
-        println!("| {th} | {:.2} |", mean(&ttlts));
-        rows.push(format!("{th},{:.3}", mean(&ttlts)));
+    }
+    let points = parallel_map(cfgs, |cfg| run_point(&cfg));
+    let mut chunks = points.chunks(seeds.len());
+    let mut rows = Vec::new();
+    for th in thresholds {
+        let chunk = chunks.next().expect("fig13a grid/result mismatch");
+        let (ttlt, _) = point_means(chunk);
+        println!("| {th} | {ttlt:.2} |");
+        rows.push(format!("{th},{ttlt:.3}"));
     }
     write_csv("fig13a", "threshold,ttlt_mean", &rows);
 }
@@ -888,19 +945,28 @@ fn fig13b(ctx: &Ctx) {
     println!("\n=== fig13b: Gittins bucket-size sensitivity ===");
     println!("| bucket (tokens) | TTLT mean |");
     println!("|---|---|");
-    let mut rows = Vec::new();
-    for bucket in [25u32, 50, 100, 200, 400, 800] {
-        let mut ttlts = Vec::new();
-        for seed in ctx.seeds(3) {
+    let buckets = [25u32, 50, 100, 200, 400, 800];
+    let seeds = ctx.seeds(3);
+    // one flat bucket x seed queue (see fig7)
+    let mut cfgs = Vec::new();
+    for &bucket in &buckets {
+        for &seed in &seeds {
             let mut cfg = base_cfg();
             cfg.bucket_tokens = bucket;
             cfg.workload.rps = 8.0;
             cfg.workload.n_requests = ctx.n_requests(1200);
             cfg.seed = seed;
-            ttlts.push(run_point(&cfg).0);
+            cfgs.push(cfg);
         }
-        println!("| {bucket} | {:.2} |", mean(&ttlts));
-        rows.push(format!("{bucket},{:.3}", mean(&ttlts)));
+    }
+    let points = parallel_map(cfgs, |cfg| run_point(&cfg));
+    let mut chunks = points.chunks(seeds.len());
+    let mut rows = Vec::new();
+    for bucket in buckets {
+        let chunk = chunks.next().expect("fig13b grid/result mismatch");
+        let (ttlt, _) = point_means(chunk);
+        println!("| {bucket} | {ttlt:.2} |");
+        rows.push(format!("{bucket},{ttlt:.3}"));
     }
     write_csv("fig13b", "bucket_tokens,ttlt_mean", &rows);
 }
@@ -1161,30 +1227,43 @@ fn fig15(ctx: &Ctx) {
     // over the final completions of each run.
     println!("| predictor | goodput steady | goodput post-drift | tau steady | tau post-drift |");
     println!("|---|---|---|---|---|");
-    let mut rows = Vec::new();
-    for pred in [PredictorKind::History, PredictorKind::Ranking, PredictorKind::Oracle] {
-        let mut gp = [0.0f64; 2];
-        let mut tau = [0.0f64; 2];
-        let mut tau_n = [0u64; 2];
-        for (i, drift) in [0.0, 0.5].iter().enumerate() {
-            let mut gps = Vec::new();
-            let mut taus = Vec::new();
-            let mut ns = Vec::new();
-            for seed in ctx.seeds(2) {
+    let preds =
+        [PredictorKind::History, PredictorKind::Ranking, PredictorKind::Oracle];
+    let seeds = ctx.seeds(2);
+    // one flat predictor x drift x seed queue; per predictor, the first
+    // seed-chunk is the steady run, the second the drifted one
+    let mut cfgs = Vec::new();
+    for &pred in &preds {
+        for drift in [0.0, 0.5] {
+            for &seed in &seeds {
                 let mut cfg = base_cfg();
                 cfg.policy = PolicyKind::SageSched;
                 cfg.predictor = pred;
                 cfg.workload.rps = 14.0;
                 cfg.workload.n_requests = ctx.n_requests(1600);
-                cfg.workload.drift.at_fraction = *drift;
+                cfg.workload.drift.at_fraction = drift;
                 cfg.request_timeout = 25.0;
                 cfg.warmup_fraction = 0.5;
                 cfg.seed = seed;
-                let r = run_experiment(&cfg).expect("fig15 experiment failed");
-                gps.push(r.goodput());
-                taus.push(r.pred_tau);
-                ns.push(r.pred_tau_n as f64);
+                cfgs.push(cfg);
             }
+        }
+    }
+    let points = parallel_map(cfgs, |cfg| {
+        let r = run_experiment(&cfg).expect("fig15 experiment failed");
+        (r.goodput(), r.pred_tau, r.pred_tau_n as f64)
+    });
+    let mut chunks = points.chunks(seeds.len());
+    let mut rows = Vec::new();
+    for pred in preds {
+        let mut gp = [0.0f64; 2];
+        let mut tau = [0.0f64; 2];
+        let mut tau_n = [0u64; 2];
+        for i in 0..2 {
+            let chunk = chunks.next().expect("fig15 grid/result mismatch");
+            let gps: Vec<f64> = chunk.iter().map(|p| p.0).collect();
+            let taus: Vec<f64> = chunk.iter().map(|p| p.1).collect();
+            let ns: Vec<f64> = chunk.iter().map(|p| p.2).collect();
             gp[i] = mean(&gps);
             tau[i] = mean(&taus);
             tau_n[i] = mean(&ns) as u64;

@@ -1,10 +1,11 @@
 //! [`SloAdmission`]: the placement/admission seam every dispatch path
 //! consults.
 
-use crate::cluster::ctx::ClusterCtx;
+use crate::cluster::ctx::{ClusterCtx, FastPathOutcome, WarmPricing};
 use crate::cluster::replica::InFlight;
 use crate::cluster::router::FastPath;
 use crate::core::Request;
+use crate::metrics::DispatchScope;
 
 use super::ClusterComponent;
 
@@ -27,11 +28,13 @@ use super::ClusterComponent;
 ///   of the victim's admission slots moments ago and nothing was admitted
 ///   there since.
 ///
-/// Fresh dispatches through a router with a declared [`FastPath`] are
-/// answered from the incremental indexes (`ClusterCtx::index_route`)
-/// without building any views; the full rescan below is kept verbatim for
-/// everything else — per-request-scored routers, drain re-admission, and
-/// the `use_indexes = false` differential oracle.
+/// Dispatches through a router with a declared [`FastPath`] — fresh
+/// intake *and* drain re-admission, each against the index instance
+/// covering its pool — are answered from the incremental indexes
+/// (`ClusterCtx::index_route` / `ClusterCtx::affinity_route`) without
+/// building any views; the full rescan below is kept verbatim as the
+/// fallback for failed dominance bounds and as the `use_indexes = false`
+/// differential oracle.
 pub struct SloAdmission;
 
 /// Resolved placement handed to the shared admission tail: where the
@@ -69,53 +72,6 @@ impl SloAdmission {
         } else {
             1.0
         };
-        // fast path: fresh intake through an index-backed router skips the
-        // view build + rescan entirely. Drain re-admission (`keep_on`)
-        // keeps the rescan — it routes within the victim's pool and needs
-        // the admission-headroom fallback below.
-        if ctx.use_indexes && keep_on.is_none() {
-            let fp = ctx.router.fast_path(&req);
-            if fp != FastPath::Rescan {
-                if let Some(i) = ctx.index_route(fp) {
-                    // per-request warmth probe on the chosen replica only —
-                    // identical arithmetic to the per-view probe below, and
-                    // read-only, so probing one replica instead of all of
-                    // them changes nothing observable
-                    let mut warm_saving = 0.0;
-                    if !req.prefix_key.is_empty() {
-                        let warm = ctx.replicas[i]
-                            .coord
-                            .kv
-                            .cached_prefix_tokens(&req.prefix_key, req.input_len as usize)
-                            as u32;
-                        if warm > 0 {
-                            let warm_cost = ctx
-                                .cost
-                                .cost_dist(req.input_len.saturating_sub(warm), &pred)
-                                .mean();
-                            warm_saving = (pcost - warm_cost).max(0.0);
-                        }
-                    }
-                    return Ok(Self::admit(
-                        ctx,
-                        req,
-                        not_before,
-                        None,
-                        Placement {
-                            target: i,
-                            moved: true,
-                            warm_saving,
-                            pcost,
-                            pvar,
-                            weight,
-                            rank,
-                        },
-                    ));
-                }
-                // empty intake scope (or z-mismatched quantile): fall
-                // through so the rescan produces the canonical error path
-            }
-        }
         // under disaggregation fresh arrivals (and crash re-dispatch, which
         // restarts from scratch and so needs prefill again) enter through
         // the prefill pool; a scale-in drain re-routes within its victim's
@@ -125,6 +81,66 @@ impl SloAdmission {
             Some(victim) => ctx.replicas[victim].pool,
             None => ctx.intake_pool(),
         };
+        let scope = if keep_on.is_some() { DispatchScope::Drain } else { DispatchScope::Intake };
+        // fast path: intake *and* drain re-admission through an
+        // index-backed router skip the view build + rescan entirely,
+        // dispatching from the index instance covering `pool`.
+        let fp = ctx.router.fast_path(&req);
+        let attempted =
+            ctx.use_indexes && fp != FastPath::Rescan && ctx.scoped_indexes(pool).is_some();
+        let fast_target = if attempted {
+            match fp {
+                FastPath::Affinity => {
+                    ctx.affinity_route(&req, pcost, pool, WarmPricing::Admission(&pred))
+                }
+                _ => ctx.index_route(fp, pool, false),
+            }
+        } else {
+            None
+        };
+        if let Some(i) = fast_target {
+            ctx.count_fastpath(scope, FastPathOutcome::Hit);
+            // the coordinator's admission verdict, mirroring the rescan
+            // path: a drain re-admission without headroom falls back to
+            // the (draining) victim
+            let has_room = ctx.replicas[i].coord.admits(req.slo);
+            let (target, moved) = if has_room || keep_on.is_none() {
+                (i, true)
+            } else {
+                (keep_on.expect("fallback without a drain victim"), false)
+            };
+            // per-request warmth probe on the chosen replica only —
+            // identical arithmetic to the per-view probe below, and
+            // read-only, so probing one replica instead of all of them
+            // changes nothing observable. The fallback victim books no
+            // saving, exactly like the rescan path.
+            let mut warm_saving = 0.0;
+            if moved && !req.prefix_key.is_empty() {
+                let warm = ctx.replicas[target]
+                    .coord
+                    .kv
+                    .cached_prefix_tokens(&req.prefix_key, req.input_len as usize)
+                    as u32;
+                if warm > 0 {
+                    let warm_cost = ctx
+                        .cost
+                        .cost_dist(req.input_len.saturating_sub(warm), &pred)
+                        .mean();
+                    warm_saving = (pcost - warm_cost).max(0.0);
+                }
+            }
+            return Ok(Self::admit(
+                ctx,
+                req,
+                not_before,
+                keep_on,
+                Placement { target, moved, warm_saving, pcost, pvar, weight, rank },
+            ));
+        }
+        ctx.count_fastpath(
+            scope,
+            if attempted { FastPathOutcome::Fallback } else { FastPathOutcome::Rescan },
+        );
         // per-request warmth: probe each routable replica's prefix index so
         // cache-affinity scoring (and the backlog debit below) sees how
         // much prefill this request would skip there. The probe is
@@ -219,6 +235,9 @@ impl SloAdmission {
         };
         debug_assert!(accepted || keep_on.is_none(), "drain re-admission must fit");
         if accepted {
+            // a landing is where prefix caching can begin: keep the
+            // warm-site superset invariant the affinity fast path relies on
+            ctx.note_warm_site(&req, i);
             // the warm replica serves this request cheaper than the cold
             // prediction says: book the debited cost so the backlog the
             // routers/autoscaler see reflects the post-hit work (released

@@ -169,6 +169,10 @@ impl ClusterComponent for WorkStealer {
                     ctx.replicas[thief].coord.advance_to(victim_now);
                     for req in moved {
                         let id = req.id;
+                        // a landing is where prefix caching can begin: keep
+                        // the warm-site superset invariant the affinity fast
+                        // path relies on
+                        ctx.note_warm_site(&req, thief);
                         // stealing is a migration: the request already
                         // passed admission on the victim, so the thief must
                         // not re-apply (class-aware) admission and refuse it

@@ -38,11 +38,12 @@
 //! In colocated mode the component is inert: no links, no extraction, and
 //! no `TransferDone` event is ever pushed.
 
-use crate::cluster::ctx::ClusterCtx;
+use crate::cluster::ctx::{ClusterCtx, FastPathOutcome, WarmPricing};
 use crate::cluster::kernel::{EventPayload, EventQueue, KernelEvent};
 use crate::cluster::replica::ReplicaState;
-use crate::cluster::router::ReplicaView;
+use crate::cluster::router::{FastPath, ReplicaView};
 use crate::config::PoolRole;
+use crate::metrics::DispatchScope;
 use crate::serve::MigratedRequest;
 
 use super::ClusterComponent;
@@ -123,59 +124,102 @@ impl TransferFabric {
         let tokens = (m.req.input_len + m.generated) as u64;
         ctx.in_transfer.remove(&id);
         let needed = Self::blocks_for(&m);
-        let fitting = |vs: Vec<ReplicaView>| -> Vec<ReplicaView> {
-            vs.into_iter().filter(|v| v.kv_total_blocks >= needed).collect()
-        };
-        let mut eligible = fitting(ctx.views_for(Some(PoolRole::Decode)));
-        if eligible.is_empty() {
-            // degraded mode (decode pool down or too small): conservation
-            // outranks pool discipline — deliver anywhere routable
-            eligible = fitting(ctx.views());
-        }
-        if eligible.is_empty() {
-            anyhow::bail!(
-                "cannot deliver transfer of request {id} at t={at}: no \
-                 routable replica can hold its {needed} KV blocks"
-            );
-        }
         let (pcost, pvar) = match ctx.in_flight.get(&id) {
             Some(f) => (f.cost, f.var),
             None => (0.0, 0.0),
         };
-        // warm-prefix probing, as every other migration path does: a decode
-        // replica already holding this session's shared prefix re-prefills
-        // less after the handoff
-        if !m.req.prefix_key.is_empty() {
-            for v in &mut eligible {
-                let warm = ctx.replicas[v.id]
-                    .coord
-                    .kv
-                    .cached_prefix_tokens(&m.req.prefix_key, m.req.input_len as usize)
-                    as u32;
-                if warm > 0 {
-                    v.warm_prefix_tokens = warm;
-                    v.warm_cost_saving = ctx.cost.consumed(warm, 0);
-                }
+        // fast path: dispatch from the decode-scope index when the
+        // per-request KV-fit filter is vacuous there — every in-scope
+        // replica holds at least `needed` blocks (the scope min), so the
+        // filtered eligible set below would equal the scope exactly — and
+        // the scope is non-empty (a populated scope also rules the
+        // degraded any-pool fallback out)
+        let fp = ctx
+            .decode_router
+            .as_ref()
+            .expect("decode router exists whenever the fabric is live")
+            .fast_path(&m.req);
+        let mut attempted = false;
+        if ctx.use_indexes && fp != FastPath::Rescan {
+            if let Some(idx) = ctx.scoped_indexes_mut(Some(PoolRole::Decode)) {
+                attempted =
+                    !idx.roster().is_empty() && needed <= idx.aggregates().kv_total_min;
             }
         }
-        let router = ctx
-            .decode_router
-            .as_mut()
-            .expect("decode router exists whenever the fabric is live");
-        let slot = router.route(&m.req, pcost, &eligible);
-        if slot >= eligible.len() {
-            anyhow::bail!(
-                "decode router {} returned position {slot} but only {} \
-                 replicas are eligible",
-                router.name(),
-                eligible.len()
+        let fast_target = if attempted {
+            match fp {
+                FastPath::Affinity => ctx.affinity_route(
+                    &m.req,
+                    pcost,
+                    Some(PoolRole::Decode),
+                    WarmPricing::Consumed,
+                ),
+                _ => ctx.index_route(fp, Some(PoolRole::Decode), true),
+            }
+        } else {
+            None
+        };
+        let target = if let Some(t) = fast_target {
+            ctx.count_fastpath(DispatchScope::Decode, FastPathOutcome::Hit);
+            t
+        } else {
+            ctx.count_fastpath(
+                DispatchScope::Decode,
+                if attempted { FastPathOutcome::Fallback } else { FastPathOutcome::Rescan },
             );
-        }
-        let target = eligible[slot].id;
+            let fitting = |vs: Vec<ReplicaView>| -> Vec<ReplicaView> {
+                vs.into_iter().filter(|v| v.kv_total_blocks >= needed).collect()
+            };
+            let mut eligible = fitting(ctx.views_for(Some(PoolRole::Decode)));
+            if eligible.is_empty() {
+                // degraded mode (decode pool down or too small): conservation
+                // outranks pool discipline — deliver anywhere routable
+                eligible = fitting(ctx.views());
+            }
+            if eligible.is_empty() {
+                anyhow::bail!(
+                    "cannot deliver transfer of request {id} at t={at}: no \
+                     routable replica can hold its {needed} KV blocks"
+                );
+            }
+            // warm-prefix probing, as every other migration path does: a
+            // decode replica already holding this session's shared prefix
+            // re-prefills less after the handoff
+            if !m.req.prefix_key.is_empty() {
+                for v in &mut eligible {
+                    let warm = ctx.replicas[v.id]
+                        .coord
+                        .kv
+                        .cached_prefix_tokens(&m.req.prefix_key, m.req.input_len as usize)
+                        as u32;
+                    if warm > 0 {
+                        v.warm_prefix_tokens = warm;
+                        v.warm_cost_saving = ctx.cost.consumed(warm, 0);
+                    }
+                }
+            }
+            let router = ctx
+                .decode_router
+                .as_mut()
+                .expect("decode router exists whenever the fabric is live");
+            let slot = router.route(&m.req, pcost, &eligible);
+            if slot >= eligible.len() {
+                anyhow::bail!(
+                    "decode router {} returned position {slot} but only {} \
+                     replicas are eligible",
+                    router.name(),
+                    eligible.len()
+                );
+            }
+            eligible[slot].id
+        };
         // the delivery instant is already ≥ the source clock at extraction
         // (the transfer takes positive time), so the prefix the target
         // resumes cannot predate its own generation
         ctx.replicas[target].coord.advance_to(at);
+        // a landing is where prefix caching can begin: keep the warm-site
+        // superset invariant the affinity fast path relies on
+        ctx.note_warm_site(&m.req, target);
         let accepted = ctx.replicas[target].coord.submit_migrated(m);
         debug_assert!(accepted, "fabric delivery is admission-exempt");
         if accepted {

@@ -16,21 +16,51 @@
 //! float bookkeeping (and therefore downstream routing, scaling, and the
 //! report JSON) could observe the order.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
 use crate::autoscale::ScalingEvent;
 use crate::config::{ExperimentConfig, PoolRole, RouterKind};
 use crate::core::{Request, RequestId};
 use crate::cost::CostModel;
+use crate::distribution::LengthDist;
 use crate::engine::Engine;
-use crate::metrics::{ClusterCounters, ClusterReport, RunReport};
+use crate::metrics::{
+    ClusterCounters, ClusterReport, DispatchScope, FastPathStats, RunReport,
+};
 use crate::predictor::Predictor;
 use crate::util::stats::normal_quantile_clamped;
 
 use super::components::SloAdmission;
-use super::index::{Metric, RouterIndexes, Sample};
+use super::index::{canon, Metric, RouterIndexes, Sample};
 use super::replica::{ClusterReplica, InFlightTable, ReplicaState};
-use super::router::{make_router, ClassAwareRouter, FastPath, ReplicaView, Router};
+use super::router::{
+    make_router, ClassAwareRouter, FastPath, ReplicaView, Router, TIGHT_KV_HEADROOM,
+    TIGHT_QUANTILE,
+};
+
+/// How the affinity fast path prices a candidate's warm prefix, mirroring
+/// the two rescan paths' arithmetic exactly.
+pub(crate) enum WarmPricing<'a> {
+    /// Admission-path saving: cold predicted cost minus the predicted cost
+    /// with the warm tokens removed from the prefill term (needs the
+    /// request's length prediction).
+    Admission(&'a LengthDist),
+    /// Migration/delivery saving: the cost model's prefill cost of the
+    /// tokens already resident (`CostModel::consumed`).
+    Consumed,
+}
+
+/// How a dispatch site resolved its placement, for the per-scope
+/// fast-path coverage counters: answered from the indexes (`Hit`),
+/// attempted but bailed to the rescan (`Fallback` — dominance bound or
+/// fit-filter failure), or never attempted (`Rescan` — router declared
+/// it, no index covers the scope, or the differential oracle is running).
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum FastPathOutcome {
+    Hit,
+    Fallback,
+    Rescan,
+}
 
 /// Shared state of the event-driven cluster: N coordinators on a shared
 /// virtual clock behind a [`Router`], with a shared prediction service and
@@ -126,6 +156,25 @@ pub struct ClusterCtx {
     /// Incrementally-maintained router score indexes over the intake pool
     /// (see `cluster/index.rs` for the determinism invariant).
     pub(crate) indexes: RouterIndexes,
+    /// Decode-pool twin of `indexes` under disaggregated serving: the
+    /// transfer fabric's delivery router, decode-side drain re-admission,
+    /// and decode-side migration all dispatch from it. Synced in lockstep
+    /// with the intake instance from the same delta seam. `None` in
+    /// colocated mode (the intake instance already covers every replica).
+    pub(crate) decode_indexes: Option<RouterIndexes>,
+    /// Prefix head key → replica ids where a request carrying that head
+    /// has landed. A *superset* of the replicas whose KV cache holds the
+    /// head block (landing is when caching can begin; entries are lazily
+    /// pruned when an affinity probe proves the head cold), which is what
+    /// the affinity fast path needs: any replica with a nonzero warm
+    /// saving for a request is guaranteed to be listed under the
+    /// request's head, so every unlisted replica can be bounded by its
+    /// base score alone.
+    pub(crate) warm_sites: HashMap<u64, Vec<usize>>,
+    /// Fast-path coverage counters per dispatch scope (hits, dominance/
+    /// filter fallbacks, declared rescans). Observability only — never an
+    /// input to any routing decision.
+    pub fastpath: FastPathStats,
     /// Differential-oracle toggle: when false, every dispatch and
     /// quiescent scan uses the retained full-rescan code paths the indexes
     /// replaced — byte-identical behaviour, pre-optimization cost. Set it
@@ -145,6 +194,9 @@ pub struct ClusterCtx {
     /// control in the hottest path).
     scratch_completions: Vec<(RequestId, u32)>,
     scratch_gone: Vec<RequestId>,
+    /// Scratch buffers reused across affinity fast-path dispatches.
+    scratch_shortlist: Vec<usize>,
+    scratch_warm: Vec<usize>,
 }
 
 impl ClusterCtx {
@@ -215,7 +267,19 @@ impl ClusterCtx {
             indexes: RouterIndexes::new(
                 cfg.cluster.disagg().then_some(PoolRole::Prefill),
                 normal_quantile_clamped(cfg.cluster.router_quantile),
+                normal_quantile_clamped(TIGHT_QUANTILE),
+                TIGHT_KV_HEADROOM,
             ),
+            decode_indexes: cfg.cluster.disagg().then(|| {
+                RouterIndexes::new(
+                    Some(PoolRole::Decode),
+                    normal_quantile_clamped(cfg.cluster.router_quantile),
+                    normal_quantile_clamped(TIGHT_QUANTILE),
+                    TIGHT_KV_HEADROOM,
+                )
+            }),
+            warm_sites: HashMap::new(),
+            fastpath: FastPathStats::default(),
             use_indexes: true,
             trace_dispatch: false,
             dispatch_trace: Vec::new(),
@@ -223,6 +287,8 @@ impl ClusterCtx {
             replica_steps: 0,
             scratch_completions: Vec::new(),
             scratch_gone: Vec::new(),
+            scratch_shortlist: Vec::new(),
+            scratch_warm: Vec::new(),
             replicas,
             router: boxed,
             decode_router,
@@ -395,6 +461,7 @@ impl ClusterCtx {
                 downtime,
                 replica_seconds,
                 scaling_events: self.scaling_events.clone(),
+                fastpath: self.fastpath,
             },
             &self.merged_outcomes(),
             warmup_fraction,
@@ -521,6 +588,9 @@ impl ClusterCtx {
         }
         let s = self.sample_of(i);
         self.indexes.sync(i, &s);
+        if let Some(d) = self.decode_indexes.as_mut() {
+            d.sync(i, &s);
+        }
     }
 
     /// Register a freshly-appended replica with the indexes. NOT gated on
@@ -530,67 +600,153 @@ impl ClusterCtx {
     pub(crate) fn index_add_replica(&mut self, i: usize) {
         let s = self.sample_of(i);
         self.indexes.add_replica(&s);
+        if let Some(d) = self.decode_indexes.as_mut() {
+            d.add_replica(&s);
+        }
     }
 
-    /// Answer a declared [`FastPath`] from the indexes: the replica id the
-    /// rescan would pick, or `None` when the fast path does not apply (or
-    /// the intake scope is empty — the caller falls through to the rescan,
-    /// which produces the canonical error). Debug builds cross-check every
-    /// answer against the rescan oracle.
-    pub(crate) fn index_route(&mut self, fp: FastPath) -> Option<usize> {
+    /// The index instance covering dispatch scope `pool`: the intake
+    /// instance for the intake pool, the decode twin for the decode pool
+    /// under disaggregation, `None` for any scope no index covers (the
+    /// caller rescans).
+    pub(crate) fn scoped_indexes(&self, pool: Option<PoolRole>) -> Option<&RouterIndexes> {
+        if pool == self.intake_pool() {
+            Some(&self.indexes)
+        } else if pool == Some(PoolRole::Decode) {
+            self.decode_indexes.as_ref()
+        } else {
+            None
+        }
+    }
+
+    /// Mutable twin of [`ClusterCtx::scoped_indexes`].
+    pub(crate) fn scoped_indexes_mut(
+        &mut self,
+        pool: Option<PoolRole>,
+    ) -> Option<&mut RouterIndexes> {
+        if pool == self.intake_pool() {
+            Some(&mut self.indexes)
+        } else if pool == Some(PoolRole::Decode) {
+            self.decode_indexes.as_mut()
+        } else {
+            None
+        }
+    }
+
+    /// Bump one of the per-scope fast-path coverage counters.
+    pub(crate) fn count_fastpath(&mut self, scope: DispatchScope, outcome: FastPathOutcome) {
+        let c = self.fastpath.scope_mut(scope);
+        match outcome {
+            FastPathOutcome::Hit => c.hits += 1,
+            FastPathOutcome::Fallback => c.fallbacks += 1,
+            FastPathOutcome::Rescan => c.rescans += 1,
+        }
+    }
+
+    /// Answer a declared [`FastPath`] from the index covering dispatch
+    /// scope `pool`: the replica id the rescan would pick, or `None` when
+    /// the fast path does not apply (no index covers the scope, a
+    /// z-mismatch, or the scope is empty — the caller falls through to the
+    /// rescan, which produces the canonical error/fallback). `decode` names
+    /// which router's round-robin cursor a [`FastPath::RoundRobin`] answer
+    /// advances. [`FastPath::Affinity`] is not answered here — call
+    /// [`ClusterCtx::affinity_route`], which needs the request's cost and
+    /// pricing. Debug builds cross-check every answer against the rescan
+    /// oracle.
+    pub(crate) fn index_route(
+        &mut self,
+        fp: FastPath,
+        pool: Option<PoolRole>,
+        decode: bool,
+    ) -> Option<usize> {
+        if self.scoped_indexes(pool).is_none() {
+            return None;
+        }
         let choice = match fp {
-            FastPath::Rescan => None,
+            FastPath::Rescan | FastPath::Affinity => None,
             FastPath::RoundRobin => {
                 #[cfg(debug_assertions)]
                 {
-                    let ids: Vec<usize> = self
-                        .views_for(self.intake_pool())
-                        .iter()
-                        .map(|v| v.id)
-                        .collect();
+                    let ids: Vec<usize> =
+                        self.views_for(pool).iter().map(|v| v.id).collect();
                     debug_assert_eq!(
-                        self.indexes.roster(),
+                        self.scoped_indexes_mut(pool).unwrap().roster(),
                         ids.as_slice(),
                         "round-robin roster diverged from the routable view set"
                     );
                 }
-                let len = self.indexes.roster().len();
+                let len = self.scoped_indexes_mut(pool).unwrap().roster().len();
                 if len == 0 {
                     None
                 } else {
-                    let slot = self.router.advance_cursor(len);
-                    Some(self.indexes.roster()[slot])
+                    let slot = if decode {
+                        self.decode_router
+                            .as_mut()
+                            .expect("decode dispatch without a decode router")
+                            .advance_cursor(len)
+                    } else {
+                        self.router.advance_cursor(len)
+                    };
+                    Some(self.scoped_indexes_mut(pool).unwrap().roster()[slot])
                 }
             }
-            FastPath::LeastLoaded => self.indexes.best(Metric::Live),
-            FastPath::LeastKv => self.indexes.best(Metric::Kv),
-            FastPath::CostAware => self.indexes.best(Metric::Cost),
+            FastPath::LeastLoaded => {
+                self.scoped_indexes_mut(pool).unwrap().best(Metric::Live)
+            }
+            FastPath::LeastKv => self.scoped_indexes_mut(pool).unwrap().best(Metric::Kv),
+            FastPath::CostAware => {
+                self.scoped_indexes_mut(pool).unwrap().best(Metric::Cost)
+            }
             FastPath::QuantileCost { z } => {
-                if z == self.indexes.quantile_z() {
-                    self.indexes.best(Metric::Quantile)
+                let idx = self.scoped_indexes_mut(pool).unwrap();
+                if z == idx.quantile_z() {
+                    idx.best(Metric::Quantile)
+                } else {
+                    None
+                }
+            }
+            FastPath::TightQuantile { z } => {
+                let idx = self.scoped_indexes_mut(pool).unwrap();
+                if z == idx.tight_z() {
+                    // mirror the class-aware eligibility rule: the
+                    // headroom-filtered heap when any replica qualifies,
+                    // the full scope otherwise
+                    if idx.headroom_count() > 0 {
+                        idx.best(Metric::TightHeadroom)
+                    } else {
+                        idx.best(Metric::TightQuantile)
+                    }
                 } else {
                     None
                 }
             }
         };
         #[cfg(debug_assertions)]
-        self.debug_check_index_route(fp, choice);
+        self.debug_check_index_route(fp, pool, choice);
         choice
     }
 
     /// Debug-build oracle: the scored fast paths must agree with a literal
-    /// rescan of the intake views using the routers' own arithmetic.
+    /// rescan of the scope's views using the routers' own arithmetic.
     #[cfg(debug_assertions)]
-    fn debug_check_index_route(&self, fp: FastPath, choice: Option<usize>) {
+    fn debug_check_index_route(
+        &self,
+        fp: FastPath,
+        pool: Option<PoolRole>,
+        choice: Option<usize>,
+    ) {
         use super::router::argmin;
+        let Some(idx) = self.scoped_indexes(pool) else { return };
         match fp {
-            // Rescan never answered; RoundRobin already advanced the shared
-            // cursor, so re-running it here would skew the cycle
-            FastPath::Rescan | FastPath::RoundRobin => return,
-            FastPath::QuantileCost { z } if z != self.indexes.quantile_z() => return,
+            // Rescan/Affinity never answered here; RoundRobin already
+            // advanced the shared cursor, so re-running it would skew the
+            // cycle
+            FastPath::Rescan | FastPath::Affinity | FastPath::RoundRobin => return,
+            FastPath::QuantileCost { z } if z != idx.quantile_z() => return,
+            FastPath::TightQuantile { z } if z != idx.tight_z() => return,
             _ => {}
         }
-        let views = self.views_for(self.intake_pool());
+        let views = self.views_for(pool);
         let expect = if views.is_empty() {
             None
         } else {
@@ -604,13 +760,227 @@ impl ClusterCtx {
                     let q = r.predicted_backlog + z * r.predicted_backlog_var.max(0.0).sqrt();
                     q / r.speed.max(1e-9)
                 })),
-                FastPath::Rescan | FastPath::RoundRobin => unreachable!(),
+                FastPath::TightQuantile { z } => {
+                    // the class-aware Interactive rescan, verbatim
+                    let eligible: Vec<usize> = (0..views.len())
+                        .filter(|&s| views[s].kv_occupancy() <= TIGHT_KV_HEADROOM)
+                        .collect();
+                    let pool_slots: Vec<usize> = if eligible.is_empty() {
+                        (0..views.len()).collect()
+                    } else {
+                        eligible
+                    };
+                    let best = argmin(pool_slots.iter().map(|&s| {
+                        let r = &views[s];
+                        let q = r.predicted_backlog
+                            + z * r.predicted_backlog_var.max(0.0).sqrt();
+                        q / r.speed.max(1e-9)
+                    }));
+                    pool_slots[best]
+                }
+                FastPath::Rescan | FastPath::Affinity | FastPath::RoundRobin => {
+                    unreachable!()
+                }
             };
             Some(views[slot].id)
         };
         debug_assert_eq!(
             choice, expect,
             "index fast path diverged from the rescan oracle for {fp:?}"
+        );
+    }
+
+    /// Record that a request carrying prefix head `req.prefix_key[0]`
+    /// landed on replica `i` — maintaining the warm-site superset
+    /// invariant (see [`ClusterCtx::warm_sites`]). Every landing path
+    /// (admission, stealing, migration, fabric delivery) calls this;
+    /// missing one would let a warm replica hide from the affinity fast
+    /// path and diverge from the rescan oracle. Not gated on
+    /// `use_indexes`: the map must be identical whichever mode runs, so a
+    /// mid-run comparison of the two modes' state stays meaningful.
+    pub(crate) fn note_warm_site(&mut self, req: &Request, i: usize) {
+        if let Some(&head) = req.prefix_key.first() {
+            let sites = self.warm_sites.entry(head).or_default();
+            if !sites.contains(&i) {
+                sites.push(i);
+            }
+        }
+    }
+
+    /// Cache-affinity dispatch from the scope's cost heap: probe only a
+    /// bounded shortlist (top-K base scores) plus the request's known warm
+    /// sites, and accept the winner only when a dominance bound proves no
+    /// unprobed replica can beat it. Returns `None` — caller falls back to
+    /// the rescan — when no index covers the scope, the scope is empty, or
+    /// the bound fails.
+    ///
+    /// Soundness of the bound: every replica outside the probed candidate
+    /// set has zero warm saving (the warm-site superset invariant), so its
+    /// full score `(backlog + pcost − 0) / speed` is at least
+    /// `max(backlog/speed, pcost/speed_max)` — both floors are monotone
+    /// under IEEE rounding — and `backlog/speed` for every unprobed
+    /// replica is at least the shortlist runner-up's base score. On a tie
+    /// with the bound, the winner stands only when the bound came from the
+    /// runner-up's base score and the winner's id is lower: any unprobed
+    /// achiever then shares the runner-up's base score, and the heap's
+    /// `(score, id)` order guarantees its id is at least the runner-up's.
+    /// A tie against the `pcost/speed_max` floor proves nothing about ids,
+    /// so it falls back.
+    pub(crate) fn affinity_route(
+        &mut self,
+        req: &Request,
+        pcost: f64,
+        pool: Option<PoolRole>,
+        pricing: WarmPricing<'_>,
+    ) -> Option<usize> {
+        // the bound needs pcost ≥ 0 (true for every cost model in tree;
+        // guard anyway so a future signed or NaN cost cannot misroute)
+        if pcost.is_nan() || pcost < 0.0 {
+            return None;
+        }
+        let k = self.cfg.cluster.shortlist_k;
+        self.scoped_indexes(pool)?;
+        let mut warm = std::mem::take(&mut self.scratch_warm);
+        let mut cand = std::mem::take(&mut self.scratch_shortlist);
+        warm.clear();
+        cand.clear();
+        let head = req.prefix_key.first().copied();
+        if let Some(h) = head {
+            if let Some(sites) = self.warm_sites.get(&h) {
+                let idx = self.scoped_indexes(pool).unwrap();
+                warm.extend(sites.iter().copied().filter(|&i| idx.in_scope(i)));
+            }
+        }
+        let idx = self.scoped_indexes_mut(pool).unwrap();
+        let next = idx.shortlist(Metric::Cost, k, |id| warm.contains(&id), &mut cand);
+        let agg = idx.aggregates();
+        for &w in &warm {
+            if !cand.contains(&w) {
+                cand.push(w);
+            }
+        }
+        // probe the candidates with the exact rescan arithmetic; collect
+        // warm-site entries proven cold for lazy pruning
+        let mut best: Option<(f64, usize)> = None;
+        let mut pruned = false;
+        for &i in &cand {
+            let mut warm_tokens = 0u32;
+            if !req.prefix_key.is_empty() {
+                warm_tokens = self.replicas[i]
+                    .coord
+                    .kv
+                    .cached_prefix_tokens(&req.prefix_key, req.input_len as usize)
+                    as u32;
+            }
+            let saving = if warm_tokens > 0 {
+                match &pricing {
+                    WarmPricing::Admission(pred) => {
+                        let warm_cost = self
+                            .cost
+                            .cost_dist(req.input_len.saturating_sub(warm_tokens), pred)
+                            .mean();
+                        (pcost - warm_cost).max(0.0)
+                    }
+                    WarmPricing::Consumed => self.cost.consumed(warm_tokens, 0),
+                }
+            } else {
+                // a zero probe with at least one whole block of prompt
+                // proves the head block is not resident — for *every*
+                // request sharing this head — so the warm-site entry can
+                // go (a future landing re-inserts it)
+                if warm.contains(&i)
+                    && req.input_len as usize > self.replicas[i].coord.kv.block_tokens()
+                {
+                    warm.retain(|&w| w != i);
+                    pruned = true;
+                }
+                0.0
+            };
+            let s = saving.clamp(0.0, pcost.max(0.0));
+            let full = (self.backlog[i] + pcost - s) / self.replicas[i].speed.max(1e-9);
+            if best.map_or(true, |(bf, bi)| full < bf || (full == bf && i < bi)) {
+                best = Some((full, i));
+            }
+        }
+        if pruned {
+            if let Some(h) = head {
+                if let Some(sites) = self.warm_sites.get_mut(&h) {
+                    // drop exactly the probed-and-proven-cold entries: a
+                    // site outside `cand` was never probed (out of scope)
+                    // and stays; a probed site stays iff still warm-listed
+                    sites.retain(|i| warm.contains(i) || !cand.contains(i));
+                    if sites.is_empty() {
+                        self.warm_sites.remove(&h);
+                    }
+                }
+            }
+        }
+        let accept = match (best, next) {
+            (None, _) => false, // empty scope: rescan produces the canonical path
+            (Some(_), None) => true, // candidates cover the whole scope
+            (Some((best_full, best_id)), Some((base_next, id_next))) => {
+                let floor = canon(pcost / agg.speed_max);
+                let bound = base_next.max(floor);
+                best_full < bound
+                    || (best_full == bound && base_next >= floor && best_id < id_next)
+            }
+        };
+        let choice = if accept { best.map(|(_, i)| i) } else { None };
+        self.scratch_warm = warm;
+        self.scratch_shortlist = cand;
+        #[cfg(debug_assertions)]
+        if choice.is_some() {
+            self.debug_check_affinity_route(req, pcost, pool, &pricing, choice);
+        }
+        choice
+    }
+
+    /// Debug-build oracle for [`ClusterCtx::affinity_route`]: an accepted
+    /// shortlist winner must equal the full-rescan cache-affinity pick.
+    #[cfg(debug_assertions)]
+    fn debug_check_affinity_route(
+        &self,
+        req: &Request,
+        pcost: f64,
+        pool: Option<PoolRole>,
+        pricing: &WarmPricing<'_>,
+        choice: Option<usize>,
+    ) {
+        let views = self.views_for(pool);
+        let mut best: Option<(f64, usize)> = None;
+        for v in &views {
+            let mut warm_tokens = 0u32;
+            if !req.prefix_key.is_empty() {
+                warm_tokens = self.replicas[v.id]
+                    .coord
+                    .kv
+                    .cached_prefix_tokens(&req.prefix_key, req.input_len as usize)
+                    as u32;
+            }
+            let raw = if warm_tokens > 0 {
+                match pricing {
+                    WarmPricing::Admission(pred) => {
+                        let warm_cost = self
+                            .cost
+                            .cost_dist(req.input_len.saturating_sub(warm_tokens), pred)
+                            .mean();
+                        (pcost - warm_cost).max(0.0)
+                    }
+                    WarmPricing::Consumed => self.cost.consumed(warm_tokens, 0),
+                }
+            } else {
+                0.0
+            };
+            let saving = raw.clamp(0.0, pcost.max(0.0));
+            let score = (v.predicted_backlog + pcost - saving) / v.speed.max(1e-9);
+            if best.map_or(true, |(b, _)| score < b) {
+                best = Some((score, v.id));
+            }
+        }
+        debug_assert_eq!(
+            choice,
+            best.map(|(_, id)| id),
+            "affinity shortlist diverged from the rescan oracle"
         );
     }
 

@@ -8,6 +8,24 @@
 //! (dispatch, completion, failure, drain, scale events), so a dispatch
 //! costs O(log replicas) amortized.
 //!
+//! Routers whose score carries a *per-request* term (cache-affinity
+//! warmth, the class-aware Interactive placement) are served by two
+//! extensions on top of the replica-keyed heaps:
+//!
+//! * **Pure conditional metrics.** The class-aware Interactive score
+//!   (`TightQuantile`) and its KV-headroom-filtered variant
+//!   (`TightHeadroom`) are replica-keyed once the request class is known,
+//!   so they get ordinary heaps plus a maintained count of
+//!   headroom-eligible replicas to pick between them.
+//! * **Shortlist + dominance bound.** Scores of the form
+//!   `base(replica) − adjustment(replica, request)` with a bounded
+//!   adjustment (cache-affinity warm savings) are resolved by
+//!   [`RouterIndexes::shortlist`]: pop the top-K candidates by base
+//!   score, let the caller apply the exact per-request adjustment to only
+//!   those, and return the best *non-candidate* base score so the caller
+//!   can prove no replica outside the shortlist can win — falling back to
+//!   the full rescan when the bound fails.
+//!
 //! # Determinism invariant
 //!
 //! **Index order must equal `argmin` rescan order, exactly.** The routers
@@ -31,17 +49,19 @@
 //!
 //! Heap entries are never removed in place. Each replica keeps a current
 //! `Probe` snapshot; an entry popped off a heap is valid only if the
-//! replica is still in scope and the entry's key equals the replica's
-//! current score — otherwise it is stale and discarded. Stale entries are
-//! bounded by compaction: when a heap grows past 4x the replica count (and
-//! past a small floor) it is rebuilt from the probe snapshots, keeping the
-//! amortized cost O(log replicas) per update.
+//! replica is still a member of that heap and the entry's key equals the
+//! replica's current score — otherwise it is stale and discarded. Stale
+//! entries are bounded by compaction: when a heap grows past 4x the
+//! replica count (and past a small floor) it is rebuilt from the probe
+//! snapshots, keeping the amortized cost O(log replicas) per update.
 //!
-//! The indexes cover exactly one scope — the intake pool (all replicas
-//! colocated, the prefill pool under disaggregation) — because that is the
-//! only scope dispatch-rate-hot paths query. Cold paths (drain
-//! re-admission, migration, autoscale views) keep the retained rescan
-//! code, which doubles as the differential oracle when
+//! Each instance covers exactly one dispatch scope. The intake instance
+//! (all replicas colocated, the prefill pool under disaggregation) serves
+//! fresh admission; under disaggregation a second instance scoped to the
+//! decode pool serves the transfer fabric's delivery router, drain
+//! re-admission, and migration target selection. Both are synced in
+//! lockstep from the same `ClusterCtx::sync_replica` delta seam. The
+//! retained rescan code doubles as the differential oracle when
 //! `ClusterCtx::use_indexes` is false.
 
 use std::cmp::Ordering;
@@ -62,17 +82,43 @@ pub enum Metric {
     Cost,
     /// Quantile backlog over speed (`quantile-cost`).
     Quantile,
+    /// Tight-quantile backlog over speed (class-aware Interactive
+    /// placement), unfiltered — the fallback pool when no replica has
+    /// KV headroom.
+    TightQuantile,
+    /// Same score as [`Metric::TightQuantile`] but membership also
+    /// requires KV occupancy at or under the class-aware headroom bound.
+    TightHeadroom,
 }
 
 impl Metric {
-    pub(crate) const ALL: [Metric; 4] = [Metric::Live, Metric::Kv, Metric::Cost, Metric::Quantile];
+    pub(crate) const ALL: [Metric; 6] = [
+        Metric::Live,
+        Metric::Kv,
+        Metric::Cost,
+        Metric::Quantile,
+        Metric::TightQuantile,
+        Metric::TightHeadroom,
+    ];
 
+    /// Heap slot for this metric.
     fn index(self) -> usize {
         match self {
             Metric::Live => 0,
             Metric::Kv => 1,
             Metric::Cost => 2,
             Metric::Quantile => 3,
+            Metric::TightQuantile => 4,
+            Metric::TightHeadroom => 5,
+        }
+    }
+
+    /// Score slot: `TightHeadroom` shares `TightQuantile`'s score, the
+    /// two heaps differ only in membership.
+    fn score_index(self) -> usize {
+        match self {
+            Metric::TightHeadroom => 4,
+            m => m.index(),
         }
     }
 }
@@ -95,15 +141,39 @@ pub(crate) struct Sample {
 }
 
 /// Current derived state of one replica: scope membership, busy/idle
-/// standing, clock, and the four metric scores. Heap entries are validated
+/// standing, clock, headroom eligibility, raw capacity fields for the
+/// scope aggregates, and the metric scores. Heap entries are validated
 /// against this snapshot (lazy deletion).
 #[derive(Clone, Copy, Debug, PartialEq)]
 struct Probe {
     in_scope: bool,
     busy: bool,
     idle_thief: bool,
+    /// KV occupancy at or under the class-aware headroom bound.
+    headroom: bool,
     now: f64,
-    scores: [f64; 4],
+    /// Raw speed (aggregate input; scores already fold in the divisor
+    /// clamp).
+    speed: f64,
+    /// Raw KV capacity in blocks (aggregate input for fit filters).
+    kv_total: usize,
+    scores: [f64; 5],
+}
+
+/// Scope-wide reductions over in-scope replicas, recomputed lazily when a
+/// membership/speed/capacity delta lands. Fit filters and the shortlist
+/// dominance bound consult these instead of rescanning.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) struct Aggregates {
+    /// `max(speed.max(1e-9))` over in-scope replicas; `0.0` when the
+    /// scope is empty.
+    pub(crate) speed_max: f64,
+    /// Min KV capacity (blocks) over in-scope replicas; `usize::MAX`
+    /// when empty. A per-request fit filter `kv_total >= needed` is
+    /// vacuous iff `needed <= kv_total_min`.
+    pub(crate) kv_total_min: usize,
+    /// Max KV capacity (blocks) over in-scope replicas; `0` when empty.
+    pub(crate) kv_total_max: usize,
 }
 
 /// `(key, id)` heap entry. `Ord` is reversed (BinaryHeap is a max-heap) so
@@ -139,7 +209,7 @@ impl Ord for ScoreEntry {
 
 /// Canonicalize `-0.0` to `+0.0` so `total_cmp` agrees with the rescan's
 /// `<` on zero-valued ties (see the module docs).
-fn canon(x: f64) -> f64 {
+pub(crate) fn canon(x: f64) -> f64 {
     if x == 0.0 {
         0.0
     } else {
@@ -147,18 +217,23 @@ fn canon(x: f64) -> f64 {
     }
 }
 
-/// The incremental index set for one cluster run.
+/// The incremental index set for one dispatch scope.
 pub struct RouterIndexes {
-    /// The indexed dispatch scope: `None` colocated, `Some(Prefill)` under
-    /// disaggregation. Fixed for the run.
-    intake: Option<PoolRole>,
+    /// The indexed dispatch scope: `None` colocated, `Some(pool)` for one
+    /// pool under disaggregation. Fixed for the run.
+    scope: Option<PoolRole>,
     /// z-score the quantile metric is keyed with; a router carrying a
     /// different z falls back to the rescan path.
     quantile_z: f64,
+    /// z-score the tight-quantile (class-aware Interactive) metrics are
+    /// keyed with.
+    tight_z: f64,
+    /// KV-occupancy bound for [`Metric::TightHeadroom`] membership.
+    kv_headroom: f64,
     /// Per-replica derived snapshots, indexed by replica id.
     probes: Vec<Probe>,
     /// One lazy-deletion min-heap per [`Metric`].
-    score_heaps: [BinaryHeap<ScoreEntry>; 4],
+    score_heaps: [BinaryHeap<ScoreEntry>; 6],
     /// Min-heap over busy replicas' clocks (`earliest_busy`).
     busy_heap: BinaryHeap<ScoreEntry>,
     /// Ascending ids of in-scope replicas (round-robin roster), rebuilt
@@ -167,6 +242,16 @@ pub struct RouterIndexes {
     roster_dirty: bool,
     /// Count of routable idle replicas (work-stealer early exit).
     idle_thieves: usize,
+    /// Count of in-scope replicas with KV headroom — decides whether the
+    /// class-aware Interactive placement uses the filtered heap or the
+    /// full-scope fallback.
+    headroom_count: usize,
+    /// Scope aggregates, recomputed lazily (see [`Aggregates`]).
+    agg: Aggregates,
+    agg_dirty: bool,
+    /// Scratch for [`RouterIndexes::shortlist`] pops (avoids per-dispatch
+    /// allocation).
+    scratch: Vec<ScoreEntry>,
     /// Set when a prefill-side replica changed since the transfer fabric
     /// last swept; lets the fabric skip quiescent scans with no new
     /// partials.
@@ -174,16 +259,27 @@ pub struct RouterIndexes {
 }
 
 impl RouterIndexes {
-    pub(crate) fn new(intake: Option<PoolRole>, quantile_z: f64) -> RouterIndexes {
+    pub(crate) fn new(
+        scope: Option<PoolRole>,
+        quantile_z: f64,
+        tight_z: f64,
+        kv_headroom: f64,
+    ) -> RouterIndexes {
         RouterIndexes {
-            intake,
+            scope,
             quantile_z,
+            tight_z,
+            kv_headroom,
             probes: Vec::new(),
             score_heaps: Default::default(),
             busy_heap: BinaryHeap::new(),
             roster: Vec::new(),
             roster_dirty: false,
             idle_thieves: 0,
+            headroom_count: 0,
+            agg: Aggregates { speed_max: 0.0, kv_total_min: usize::MAX, kv_total_max: 0 },
+            agg_dirty: false,
+            scratch: Vec::new(),
             fabric_dirty: true,
         }
     }
@@ -192,13 +288,33 @@ impl RouterIndexes {
         self.quantile_z
     }
 
+    pub(crate) fn tight_z(&self) -> f64 {
+        self.tight_z
+    }
+
     pub(crate) fn idle_thieves(&self) -> usize {
         self.idle_thieves
     }
 
+    /// In-scope replicas currently under the KV-headroom bound.
+    pub(crate) fn headroom_count(&self) -> usize {
+        self.headroom_count
+    }
+
+    /// Whether replica `id` is currently inside this index's scope.
+    pub(crate) fn in_scope(&self, id: usize) -> bool {
+        self.probes.get(id).is_some_and(|p| p.in_scope)
+    }
+
+    /// Heap membership for `m`: in scope, plus the KV-headroom bound for
+    /// [`Metric::TightHeadroom`].
+    fn member(p: &Probe, m: Metric) -> bool {
+        p.in_scope && (m != Metric::TightHeadroom || p.headroom)
+    }
+
     fn probe_of(&self, s: &Sample) -> Probe {
         let in_scope =
-            s.state == ReplicaState::Active && (self.intake.is_none() || s.pool == self.intake);
+            s.state == ReplicaState::Active && (self.scope.is_none() || s.pool == self.scope);
         let busy = matches!(s.state, ReplicaState::Active | ReplicaState::Draining) && !s.is_idle;
         let idle_thief = s.state == ReplicaState::Active && s.is_idle;
         // score arithmetic replicated operation-for-operation from the
@@ -211,12 +327,17 @@ impl RouterIndexes {
         let cost = s.backlog / s.speed.max(1e-9);
         let q = s.backlog + self.quantile_z * s.backlog_var.max(0.0).sqrt();
         let quant = q / s.speed.max(1e-9);
+        let tq = s.backlog + self.tight_z * s.backlog_var.max(0.0).sqrt();
+        let tight = tq / s.speed.max(1e-9);
         Probe {
             in_scope,
             busy,
             idle_thief,
+            headroom: kv <= self.kv_headroom,
             now: canon(s.now),
-            scores: [canon(s.live as f64), canon(kv), canon(cost), canon(quant)],
+            speed: s.speed,
+            kv_total: s.kv_total_blocks,
+            scores: [canon(s.live as f64), canon(kv), canon(cost), canon(quant), canon(tight)],
         }
     }
 
@@ -224,11 +345,17 @@ impl RouterIndexes {
     pub(crate) fn add_replica(&mut self, s: &Sample) {
         let id = self.probes.len();
         let p = self.probe_of(s);
-        if p.in_scope {
-            for m in Metric::ALL {
-                self.push_score(m.index(), ScoreEntry { key: p.scores[m.index()], id });
+        for m in Metric::ALL {
+            if Self::member(&p, m) {
+                self.push_score(m, ScoreEntry { key: p.scores[m.score_index()], id });
             }
+        }
+        if p.in_scope {
             self.roster_dirty = true;
+            self.agg_dirty = true;
+        }
+        if Self::member(&p, Metric::TightHeadroom) {
+            self.headroom_count += 1;
         }
         if p.busy {
             self.push_busy(ScoreEntry { key: p.now, id });
@@ -253,12 +380,26 @@ impl RouterIndexes {
         if p.in_scope != old.in_scope {
             self.roster_dirty = true;
         }
+        if p.in_scope != old.in_scope
+            || (p.in_scope && (p.speed != old.speed || p.kv_total != old.kv_total))
+        {
+            self.agg_dirty = true;
+        }
         for m in Metric::ALL {
-            let k = m.index();
-            let newly_in = p.in_scope && !old.in_scope;
-            if p.in_scope && (newly_in || p.scores[k] != old.scores[k]) {
-                self.push_score(k, ScoreEntry { key: p.scores[k], id: i });
+            let si = m.score_index();
+            let was = Self::member(&old, m);
+            let is = Self::member(&p, m);
+            if is && (!was || p.scores[si] != old.scores[si]) {
+                self.push_score(m, ScoreEntry { key: p.scores[si], id: i });
             }
+        }
+        match (
+            Self::member(&old, Metric::TightHeadroom),
+            Self::member(&p, Metric::TightHeadroom),
+        ) {
+            (false, true) => self.headroom_count += 1,
+            (true, false) => self.headroom_count -= 1,
+            _ => {}
         }
         if p.busy && (!old.busy || p.now != old.now) {
             self.push_busy(ScoreEntry { key: p.now, id: i });
@@ -274,18 +415,85 @@ impl RouterIndexes {
         self.probes[i] = p;
     }
 
-    /// The in-scope replica with the minimum score for `m` (ties → lowest
-    /// id), or `None` when the scope is empty. Pops stale entries.
+    /// The member replica with the minimum score for `m` (ties → lowest
+    /// id), or `None` when the heap's membership is empty. Pops stale
+    /// entries.
     pub(crate) fn best(&mut self, m: Metric) -> Option<usize> {
-        let k = m.index();
-        while let Some(top) = self.score_heaps[k].peek() {
+        let h = m.index();
+        let si = m.score_index();
+        while let Some(top) = self.score_heaps[h].peek() {
             let p = &self.probes[top.id];
-            if p.in_scope && p.scores[k] == top.key {
+            if Self::member(p, m) && p.scores[si] == top.key {
                 return Some(top.id);
             }
-            self.score_heaps[k].pop();
+            self.score_heaps[h].pop();
         }
         None
+    }
+
+    /// Top-`k` member replicas by `m`'s base score, in ascending
+    /// `(score, id)` order, appended to `out` — skipping ids for which
+    /// `is_extra` holds (the caller already has those as candidates, they
+    /// must not consume shortlist slots nor be reported as the runner-up).
+    /// Returns the best non-extra `(base_score, id)` *outside* the
+    /// shortlist, or `None` when the shortlist (plus extras) exhausts the
+    /// scope. Every valid popped entry is pushed back, so the heap
+    /// invariant (each member has a valid entry) is preserved; duplicate
+    /// valid entries encountered along the way are dropped (free
+    /// compaction).
+    pub(crate) fn shortlist(
+        &mut self,
+        m: Metric,
+        k: usize,
+        is_extra: impl Fn(usize) -> bool,
+        out: &mut Vec<usize>,
+    ) -> Option<(f64, usize)> {
+        let h = m.index();
+        let si = m.score_index();
+        let mut next: Option<(f64, usize)> = None;
+        let mut picked = 0usize;
+        self.scratch.clear();
+        while let Some(top) = self.score_heaps[h].pop() {
+            let p = &self.probes[top.id];
+            if !(Self::member(p, m) && p.scores[si] == top.key) {
+                continue; // stale: lazy deletion
+            }
+            if self.scratch.iter().any(|e| e.id == top.id) {
+                continue; // duplicate valid entry: keep one copy only
+            }
+            if !is_extra(top.id) {
+                if picked >= k {
+                    next = Some((top.key, top.id));
+                    self.scratch.push(top);
+                    break;
+                }
+                picked += 1;
+                out.push(top.id);
+            }
+            self.scratch.push(top);
+        }
+        let entries = std::mem::take(&mut self.scratch);
+        for e in entries {
+            self.score_heaps[h].push(e);
+        }
+        next
+    }
+
+    /// Scope aggregates (speed max, KV capacity min/max), recomputed if a
+    /// relevant delta landed since the last call.
+    pub(crate) fn aggregates(&mut self) -> Aggregates {
+        if self.agg_dirty {
+            let mut agg =
+                Aggregates { speed_max: 0.0, kv_total_min: usize::MAX, kv_total_max: 0 };
+            for p in self.probes.iter().filter(|p| p.in_scope) {
+                agg.speed_max = agg.speed_max.max(p.speed.max(1e-9));
+                agg.kv_total_min = agg.kv_total_min.min(p.kv_total);
+                agg.kv_total_max = agg.kv_total_max.max(p.kv_total);
+            }
+            self.agg = agg;
+            self.agg_dirty = false;
+        }
+        self.agg
     }
 
     /// The busy replica with the earliest clock (ties → lowest id), or
@@ -312,17 +520,19 @@ impl RouterIndexes {
         &self.roster
     }
 
-    fn push_score(&mut self, k: usize, e: ScoreEntry) {
-        self.score_heaps[k].push(e);
-        if self.score_heaps[k].len() > 64 && self.score_heaps[k].len() > 4 * self.probes.len() {
+    fn push_score(&mut self, m: Metric, e: ScoreEntry) {
+        let h = m.index();
+        self.score_heaps[h].push(e);
+        if self.score_heaps[h].len() > 64 && self.score_heaps[h].len() > 4 * self.probes.len() {
+            let si = m.score_index();
             let rebuilt: BinaryHeap<ScoreEntry> = self
                 .probes
                 .iter()
                 .enumerate()
-                .filter(|(_, p)| p.in_scope)
-                .map(|(id, p)| ScoreEntry { key: p.scores[k], id })
+                .filter(|(_, p)| Self::member(p, m))
+                .map(|(id, p)| ScoreEntry { key: p.scores[si], id })
                 .collect();
-            self.score_heaps[k] = rebuilt;
+            self.score_heaps[h] = rebuilt;
         }
     }
 
@@ -345,6 +555,13 @@ impl RouterIndexes {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    const TIGHT_Z: f64 = 1.6448536269514722;
+    const HEADROOM: f64 = 0.85;
+
+    fn index(scope: Option<PoolRole>, z: f64) -> RouterIndexes {
+        RouterIndexes::new(scope, z, TIGHT_Z, HEADROOM)
+    }
 
     fn sample(state: ReplicaState, pool: Option<PoolRole>) -> Sample {
         Sample {
@@ -376,16 +593,23 @@ mod tests {
             Metric::Quantile => {
                 (s.backlog + z * s.backlog_var.max(0.0).sqrt()) / s.speed.max(1e-9)
             }
+            Metric::TightQuantile | Metric::TightHeadroom => {
+                (s.backlog + TIGHT_Z * s.backlog_var.max(0.0).sqrt()) / s.speed.max(1e-9)
+            }
         }
     }
 
-    /// Naive strict-`<` argmin over in-scope samples — the rescan oracle.
-    fn naive_best(z: f64, intake: Option<PoolRole>, samples: &[Sample], m: Metric) -> Option<usize> {
+    fn member_of(scope: Option<PoolRole>, s: &Sample, m: Metric) -> bool {
+        let in_scope = s.state == ReplicaState::Active && (scope.is_none() || s.pool == scope);
+        let kv = score_of(0.0, s, Metric::Kv);
+        in_scope && (m != Metric::TightHeadroom || kv <= HEADROOM)
+    }
+
+    /// Naive strict-`<` argmin over member samples — the rescan oracle.
+    fn naive_best(z: f64, scope: Option<PoolRole>, samples: &[Sample], m: Metric) -> Option<usize> {
         let mut best: Option<(usize, f64)> = None;
         for (i, s) in samples.iter().enumerate() {
-            let in_scope =
-                s.state == ReplicaState::Active && (intake.is_none() || s.pool == intake);
-            if !in_scope {
+            if !member_of(scope, s, m) {
                 continue;
             }
             let sc = score_of(z, s, m);
@@ -396,10 +620,43 @@ mod tests {
         best.map(|(i, _)| i)
     }
 
+    /// Naive shortlist oracle: members sorted ascending `(canon(score), id)`,
+    /// extras skipped; first `k` non-extras plus the `(k+1)`-th as runner-up.
+    fn naive_shortlist(
+        z: f64,
+        scope: Option<PoolRole>,
+        samples: &[Sample],
+        m: Metric,
+        k: usize,
+        extras: &[usize],
+    ) -> (Vec<usize>, Option<(f64, usize)>) {
+        let mut members: Vec<(f64, usize)> = samples
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| member_of(scope, s, m))
+            .map(|(i, s)| (canon(score_of(z, s, m)), i))
+            .collect();
+        members.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut out = Vec::new();
+        let mut next = None;
+        for (sc, i) in members {
+            if extras.contains(&i) {
+                continue;
+            }
+            if out.len() < k {
+                out.push(i);
+            } else {
+                next = Some((sc, i));
+                break;
+            }
+        }
+        (out, next)
+    }
+
     #[test]
     fn ties_go_to_the_lowest_id() {
         let z = 1.2815515655446004;
-        let mut idx = RouterIndexes::new(None, z);
+        let mut idx = index(None, z);
         for _ in 0..4 {
             idx.add_replica(&sample(ReplicaState::Active, None));
         }
@@ -426,7 +683,7 @@ mod tests {
 
     #[test]
     fn busy_heap_ties_go_to_the_lowest_id() {
-        let mut idx = RouterIndexes::new(None, 0.0);
+        let mut idx = index(None, 0.0);
         for _ in 0..3 {
             let mut s = sample(ReplicaState::Active, None);
             s.is_idle = false;
@@ -443,7 +700,7 @@ mod tests {
 
     #[test]
     fn out_of_scope_replicas_are_invisible() {
-        let mut idx = RouterIndexes::new(Some(PoolRole::Prefill), 0.0);
+        let mut idx = index(Some(PoolRole::Prefill), 0.0);
         idx.add_replica(&sample(ReplicaState::Active, Some(PoolRole::Decode)));
         idx.add_replica(&sample(ReplicaState::Active, Some(PoolRole::Prefill)));
         idx.add_replica(&sample(ReplicaState::Draining, Some(PoolRole::Prefill)));
@@ -453,18 +710,60 @@ mod tests {
         assert_eq!(idx.roster(), &[1]);
     }
 
+    #[test]
+    fn headroom_heap_excludes_hot_replicas() {
+        let mut idx = index(None, 0.0);
+        // replica 0: over the headroom bound but lower tight score
+        let mut s = sample(ReplicaState::Active, None);
+        s.kv_used_blocks = 90; // occupancy 0.9 > 0.85
+        idx.add_replica(&s);
+        let mut s = sample(ReplicaState::Active, None);
+        s.backlog = 5.0;
+        idx.add_replica(&s);
+        assert_eq!(idx.best(Metric::TightQuantile), Some(0));
+        assert_eq!(idx.best(Metric::TightHeadroom), Some(1));
+        assert_eq!(idx.headroom_count(), 1);
+        // cool replica 0 back under the bound
+        let mut s = sample(ReplicaState::Active, None);
+        s.kv_used_blocks = 10;
+        idx.sync(0, &s);
+        assert_eq!(idx.best(Metric::TightHeadroom), Some(0));
+        assert_eq!(idx.headroom_count(), 2);
+    }
+
+    #[test]
+    fn shortlist_skips_extras_and_reports_runner_up() {
+        let mut idx = index(None, 0.0);
+        for b in [4.0, 1.0, 3.0, 2.0, 5.0] {
+            let mut s = sample(ReplicaState::Active, None);
+            s.backlog = b;
+            idx.add_replica(&s);
+        }
+        // base order by Cost: 1 (1.0), 3 (2.0), 2 (3.0), 0 (4.0), 4 (5.0)
+        let mut out = Vec::new();
+        let next = idx.shortlist(Metric::Cost, 2, |id| id == 3, &mut out);
+        assert_eq!(out, vec![1, 2], "extras must not consume shortlist slots");
+        assert_eq!(next, Some((4.0, 0)));
+        // the pops must not have corrupted the heap
+        assert_eq!(idx.best(Metric::Cost), Some(1));
+        let mut out = Vec::new();
+        let next = idx.shortlist(Metric::Cost, 10, |_| false, &mut out);
+        assert_eq!(out, vec![1, 3, 2, 0, 4]);
+        assert_eq!(next, None, "shortlist covering the scope has no runner-up");
+    }
+
     /// Random delta interleavings: after every sync the index must agree
     /// with the rescan oracle *and* with a rebuilt-from-scratch index, for
     /// both intake scopes.
     #[test]
     fn random_deltas_match_rescan_and_rebuild() {
-        for (case, intake) in [(0u64, None), (1u64, Some(PoolRole::Prefill))] {
+        for (case, scope) in [(0u64, None), (1u64, Some(PoolRole::Prefill))] {
             let z = 1.2815515655446004;
             let mut rng = Rng::new(0xD17A + case);
             let n = 10usize;
             let mut samples: Vec<Sample> = (0..n)
                 .map(|i| {
-                    let pool = match intake {
+                    let pool = match scope {
                         None => None,
                         Some(_) => Some(if i % 2 == 0 {
                             PoolRole::Prefill
@@ -475,14 +774,14 @@ mod tests {
                     sample(ReplicaState::Active, pool)
                 })
                 .collect();
-            let mut idx = RouterIndexes::new(intake, z);
+            let mut idx = index(scope, z);
             for s in &samples {
                 idx.add_replica(s);
             }
             for step in 0..2000 {
                 let i = rng.below(samples.len() as u64) as usize;
                 let s = &mut samples[i];
-                match rng.below(8) {
+                match rng.below(9) {
                     0 => {
                         s.state = match rng.below(4) {
                             0 => ReplicaState::Active,
@@ -497,13 +796,14 @@ mod tests {
                     4 => s.backlog = rng.below(1000) as f64 / 7.0,
                     5 => s.backlog_var = rng.below(500) as f64 / 3.0,
                     6 => s.kv_used_blocks = rng.below(100) as usize,
+                    7 => s.kv_total_blocks = 50 + rng.below(100) as usize,
                     _ => s.speed = 0.25 + rng.below(8) as f64 / 4.0,
                 }
                 let snap = samples[i];
                 idx.sync(i, &snap);
                 if step % 50 == 0 {
                     // occasionally grow the fleet, like a scale-out spawn
-                    let pool = match intake {
+                    let pool = match scope {
                         None => None,
                         Some(p) => Some(p),
                     };
@@ -515,7 +815,7 @@ mod tests {
                 for m in Metric::ALL {
                     assert_eq!(
                         idx.best(m),
-                        naive_best(z, intake, &samples, m),
+                        naive_best(z, scope, &samples, m),
                         "metric {m:?} diverged at step {step}"
                     );
                 }
@@ -540,19 +840,50 @@ mod tests {
                     .filter(|s| s.state == ReplicaState::Active && s.is_idle)
                     .count();
                 assert_eq!(idx.idle_thieves(), naive_thieves, "thieves diverged at step {step}");
+                let naive_headroom = samples
+                    .iter()
+                    .filter(|s| member_of(scope, s, Metric::TightHeadroom))
+                    .count();
+                assert_eq!(
+                    idx.headroom_count(),
+                    naive_headroom,
+                    "headroom count diverged at step {step}"
+                );
                 let naive_roster: Vec<usize> = samples
                     .iter()
                     .enumerate()
                     .filter(|(_, s)| {
                         s.state == ReplicaState::Active
-                            && (intake.is_none() || s.pool == intake)
+                            && (scope.is_none() || s.pool == scope)
                     })
                     .map(|(i, _)| i)
                     .collect();
                 assert_eq!(idx.roster(), naive_roster.as_slice(), "roster diverged at step {step}");
+                // aggregates oracle
+                let mut naive_agg =
+                    Aggregates { speed_max: 0.0, kv_total_min: usize::MAX, kv_total_max: 0 };
+                for (_, s) in samples.iter().enumerate().filter(|(i, _)| naive_roster.contains(i))
+                {
+                    naive_agg.speed_max = naive_agg.speed_max.max(s.speed.max(1e-9));
+                    naive_agg.kv_total_min = naive_agg.kv_total_min.min(s.kv_total_blocks);
+                    naive_agg.kv_total_max = naive_agg.kv_total_max.max(s.kv_total_blocks);
+                }
+                assert_eq!(idx.aggregates(), naive_agg, "aggregates diverged at step {step}");
+                // shortlist oracle (random k and extras)
+                let k = 1 + rng.below(4) as usize;
+                let extras: Vec<usize> = (0..samples.len())
+                    .filter(|_| rng.below(8) == 0)
+                    .collect();
+                let mut got = Vec::new();
+                let got_next =
+                    idx.shortlist(Metric::Cost, k, |id| extras.contains(&id), &mut got);
+                let (want, want_next) =
+                    naive_shortlist(z, scope, &samples, Metric::Cost, k, &extras);
+                assert_eq!(got, want, "shortlist diverged at step {step}");
+                assert_eq!(got_next, want_next, "shortlist runner-up diverged at step {step}");
                 // rebuild-from-scratch must agree with the incremental state
                 if step % 100 == 0 {
-                    let mut rebuilt = RouterIndexes::new(intake, z);
+                    let mut rebuilt = index(scope, z);
                     for s in &samples {
                         rebuilt.add_replica(s);
                     }
@@ -561,7 +892,9 @@ mod tests {
                     }
                     assert_eq!(idx.earliest_busy(), rebuilt.earliest_busy());
                     assert_eq!(idx.idle_thieves(), rebuilt.idle_thieves());
+                    assert_eq!(idx.headroom_count(), rebuilt.headroom_count());
                     assert_eq!(idx.roster(), rebuilt.roster());
+                    assert_eq!(idx.aggregates(), rebuilt.aggregates());
                 }
             }
         }

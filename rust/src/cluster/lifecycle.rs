@@ -12,12 +12,13 @@
 use crate::autoscale::{AutoscaleView, ScaleAction, ScalingEvent};
 use crate::config::PoolRole;
 use crate::core::{Request, RequestId};
+use crate::metrics::DispatchScope;
 use crate::util::stats::normal_quantile_clamped;
 
 use super::components::SloAdmission;
-use super::ctx::ClusterCtx;
+use super::ctx::{ClusterCtx, FastPathOutcome, WarmPricing};
 use super::replica::{ClusterReplica, ReplicaState};
-use super::router::ReplicaView;
+use super::router::{FastPath, ReplicaView};
 
 impl ClusterCtx {
     /// Take replica `i` down at `at`, returning the live requests it lost
@@ -376,49 +377,97 @@ impl ClusterCtx {
                 Some(f) => (f.cost, f.var),
                 None => (0.0, 0.0),
             };
-            // route over the replicas whose total KV can hold the prefix
-            // (non-empty: selection above required a fitting target)
             let needed = Self::blocks_for(m.req.input_len, m.generated);
-            let mut eligible: Vec<ReplicaView> = self
-                .views_for(pool)
-                .into_iter()
-                .filter(|v| v.kv_total_blocks >= needed)
-                .collect();
-            // warmth for the cache-affinity router: a target already
-            // holding this session's shared prefix re-prefills less after
-            // the move. The saving is priced as the consumed-cost of the
-            // warm tokens' prefill (no length distribution survives to this
-            // path, so the prefill term is the honest estimate).
-            if !m.req.prefix_key.is_empty() {
-                for v in &mut eligible {
-                    let warm = self.replicas[v.id]
-                        .coord
-                        .kv
-                        .cached_prefix_tokens(&m.req.prefix_key, m.req.input_len as usize)
-                        as u32;
-                    if warm > 0 {
-                        v.warm_prefix_tokens = warm;
-                        v.warm_cost_saving = self.cost.consumed(warm, 0);
-                    }
+            // fast path: answer the target selection from the index scope
+            // covering the victim's pool when the per-request KV-fit filter
+            // is vacuous there — every in-scope replica holds at least
+            // `needed` blocks (the scope min), so the filtered eligible set
+            // below would equal the scope exactly
+            let fp = self.router.fast_path(&m.req);
+            let mut attempted = false;
+            if self.use_indexes && fp != FastPath::Rescan {
+                if let Some(idx) = self.scoped_indexes_mut(pool) {
+                    attempted = !idx.roster().is_empty()
+                        && needed <= idx.aggregates().kv_total_min;
                 }
             }
-            if eligible.is_empty() {
-                // belt-and-braces: finish in place on the draining victim
-                let accepted = self.replicas[victim].coord.submit_migrated(m);
-                debug_assert!(accepted, "victim re-admission is exempt");
-                continue;
-            }
-            let slot = self.router.route(&m.req, pcost, &eligible);
-            if slot >= eligible.len() {
-                anyhow::bail!(
-                    "router {} returned position {slot} but only {} replicas are \
-                     eligible",
-                    self.router.name(),
-                    eligible.len()
-                );
-            }
-            let target = eligible[slot].id;
+            let fast_target = if attempted {
+                match fp {
+                    FastPath::Affinity => {
+                        self.affinity_route(&m.req, pcost, pool, WarmPricing::Consumed)
+                    }
+                    _ => self.index_route(fp, pool, false),
+                }
+            } else {
+                None
+            };
+            let target = match fast_target {
+                Some(t) => {
+                    self.count_fastpath(DispatchScope::Migration, FastPathOutcome::Hit);
+                    t
+                }
+                None => {
+                    self.count_fastpath(
+                        DispatchScope::Migration,
+                        if attempted {
+                            FastPathOutcome::Fallback
+                        } else {
+                            FastPathOutcome::Rescan
+                        },
+                    );
+                    // route over the replicas whose total KV can hold the
+                    // prefix (non-empty: selection above required a fitting
+                    // target)
+                    let mut eligible: Vec<ReplicaView> = self
+                        .views_for(pool)
+                        .into_iter()
+                        .filter(|v| v.kv_total_blocks >= needed)
+                        .collect();
+                    // warmth for the cache-affinity router: a target already
+                    // holding this session's shared prefix re-prefills less
+                    // after the move. The saving is priced as the
+                    // consumed-cost of the warm tokens' prefill (no length
+                    // distribution survives to this path, so the prefill
+                    // term is the honest estimate).
+                    if !m.req.prefix_key.is_empty() {
+                        for v in &mut eligible {
+                            let warm = self.replicas[v.id]
+                                .coord
+                                .kv
+                                .cached_prefix_tokens(
+                                    &m.req.prefix_key,
+                                    m.req.input_len as usize,
+                                )
+                                as u32;
+                            if warm > 0 {
+                                v.warm_prefix_tokens = warm;
+                                v.warm_cost_saving = self.cost.consumed(warm, 0);
+                            }
+                        }
+                    }
+                    if eligible.is_empty() {
+                        // belt-and-braces: finish in place on the draining
+                        // victim
+                        let accepted = self.replicas[victim].coord.submit_migrated(m);
+                        debug_assert!(accepted, "victim re-admission is exempt");
+                        continue;
+                    }
+                    let slot = self.router.route(&m.req, pcost, &eligible);
+                    if slot >= eligible.len() {
+                        anyhow::bail!(
+                            "router {} returned position {slot} but only {} replicas \
+                             are eligible",
+                            self.router.name(),
+                            eligible.len()
+                        );
+                    }
+                    eligible[slot].id
+                }
+            };
             self.replicas[target].coord.advance_to(victim_now);
+            // a landing is where prefix caching can begin: keep the
+            // warm-site superset invariant the affinity fast path relies on
+            self.note_warm_site(&m.req, target);
             // a migration is admission-exempt: the request already passed
             // admission on the victim, so moving it can never reject it
             let accepted = self.replicas[target].coord.submit_migrated(m);

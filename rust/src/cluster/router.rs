@@ -14,20 +14,32 @@
 //! plus the [`ClassAwareRouter`] wrapper that gives tight SLO tiers
 //! tail-risk-averse placement over KV-headroom replicas.
 //!
-//! Routers whose score depends only on per-replica state (never on the
-//! request) additionally declare a [`FastPath`], letting the dispatcher
-//! answer them from the incremental indexes in
+//! Every router additionally declares a [`FastPath`], letting the
+//! dispatcher answer it from the incremental indexes in
 //! [`crate::cluster::index`] instead of rescanning every view. The fast
 //! path must pick the *same replica* the rescan would — the indexes
-//! reproduce [`argmin`]'s lowest-position tie-break exactly — so a router
-//! whose score has any per-request term ([`CacheAffinityRouter`],
-//! [`ClassAwareRouter`] for Interactive traffic) declares
-//! [`FastPath::Rescan`] and keeps the full scan.
+//! reproduce [`argmin`]'s lowest-position tie-break exactly. Replica-keyed
+//! scores map to a single index heap; per-request scores get
+//! request-conditional treatment: [`CacheAffinityRouter`] declares
+//! [`FastPath::Affinity`] (base-score shortlist + warm-site probes under a
+//! dominance bound, rescan when the bound fails) and [`ClassAwareRouter`]
+//! declares [`FastPath::TightQuantile`] for Interactive traffic (the score
+//! is replica-keyed once the class is known). [`FastPath::Rescan`] remains
+//! the always-correct fallback.
 
 use crate::config::RouterKind;
 use crate::core::Request;
 use crate::slo::SloClass;
 use crate::util::stats::normal_quantile_clamped;
+
+/// Quantile the class-aware wrapper places Interactive traffic by. Shared
+/// with the index layer so the tight-quantile heaps are keyed with the
+/// same z-score the router scores with.
+pub const TIGHT_QUANTILE: f64 = 0.95;
+
+/// KV-occupancy ceiling for Interactive-eligible replicas, shared with
+/// the index layer's headroom-filtered heap.
+pub const TIGHT_KV_HEADROOM: f64 = 0.85;
 
 /// Snapshot of one replica's state at routing time.
 #[derive(Clone, Debug)]
@@ -125,6 +137,17 @@ pub enum FastPath {
     /// ([`QuantileCostRouter`]); the index only applies when `z` matches
     /// the z the index was keyed with.
     QuantileCost { z: f64 },
+    /// Cache-affinity placement ([`CacheAffinityRouter`]): resolved from
+    /// the cost-metric heap via a bounded shortlist plus the known warm
+    /// sites for the request's prefix, accepted only when a dominance
+    /// bound proves no other replica can win; otherwise the dispatcher
+    /// falls back to the rescan.
+    Affinity,
+    /// Class-aware Interactive placement ([`ClassAwareRouter`]): minimum
+    /// tight-quantile backlog / speed over KV-headroom replicas (the full
+    /// scope when none has headroom). Applies only when `z` matches the z
+    /// the index's tight heaps were keyed with.
+    TightQuantile { z: f64 },
 }
 
 /// A cluster front-door routing policy. Implementations must be
@@ -315,6 +338,10 @@ impl Router for CacheAffinityRouter {
         RouterKind::CacheAffinity
     }
 
+    fn fast_path(&self, _req: &Request) -> FastPath {
+        FastPath::Affinity
+    }
+
     fn route(&mut self, _req: &Request, predicted_cost: f64, replicas: &[ReplicaView]) -> usize {
         argmin(replicas.iter().map(|r| {
             // saving is capped by the request's own cost: stale probes can
@@ -365,8 +392,8 @@ impl ClassAwareRouter {
     pub fn new(inner: Box<dyn Router>) -> ClassAwareRouter {
         ClassAwareRouter {
             inner,
-            z_tight: normal_quantile_clamped(0.95),
-            kv_headroom: 0.85,
+            z_tight: normal_quantile_clamped(TIGHT_QUANTILE),
+            kv_headroom: TIGHT_KV_HEADROOM,
         }
     }
 }
@@ -378,9 +405,10 @@ impl Router for ClassAwareRouter {
 
     fn fast_path(&self, req: &Request) -> FastPath {
         // Interactive placement filters by KV headroom and scores on the
-        // tight quantile — per-request logic no single index answers
+        // tight quantile — replica-keyed once the class is known, so the
+        // index layer's tight heaps answer it
         if req.slo == SloClass::Interactive {
-            FastPath::Rescan
+            FastPath::TightQuantile { z: self.z_tight }
         } else {
             self.inner.fast_path(req)
         }
@@ -597,13 +625,17 @@ mod tests {
             q.fast_path(&req),
             FastPath::QuantileCost { z: normal_quantile_clamped(0.9) }
         );
-        // per-request scores never get a fast path
-        assert_eq!(CacheAffinityRouter.fast_path(&req), FastPath::Rescan);
-        // the class-aware wrapper rescans Interactive traffic only
+        // per-request warmth resolves through the shortlist fast path
+        assert_eq!(CacheAffinityRouter.fast_path(&req), FastPath::Affinity);
+        // the class-aware wrapper fast-paths Interactive onto the tight
+        // heaps and delegates everything else to the inner router
         let wrapped = ClassAwareRouter::new(Box::new(CostAwareRouter));
         let mut interactive = any_req();
         interactive.slo = SloClass::Interactive;
-        assert_eq!(wrapped.fast_path(&interactive), FastPath::Rescan);
+        assert_eq!(
+            wrapped.fast_path(&interactive),
+            FastPath::TightQuantile { z: normal_quantile_clamped(TIGHT_QUANTILE) }
+        );
         let mut batch = any_req();
         batch.slo = SloClass::Batch;
         assert_eq!(wrapped.fast_path(&batch), FastPath::CostAware);

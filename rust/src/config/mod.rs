@@ -796,6 +796,13 @@ pub struct ClusterConfig {
     /// separate instance, so per-pool router state (round-robin cursors)
     /// never aliases. Ignored in colocated mode.
     pub decode_router: Option<RouterKind>,
+    /// Shortlist width of the cache-affinity dispatch fast path: the
+    /// per-request score adjustment is applied to the `shortlist_k`
+    /// best-base-score replicas (plus every known warm site) and a
+    /// dominance bound proves no replica outside the shortlist can win —
+    /// falling back to the full rescan when it can't. Larger values trade
+    /// per-dispatch work for fewer fallbacks; must be >= 1.
+    pub shortlist_k: usize,
 }
 
 impl Default for ClusterConfig {
@@ -818,6 +825,7 @@ impl Default for ClusterConfig {
             transfer_bandwidth: 20_000.0,
             transfer_links: 2,
             decode_router: None,
+            shortlist_k: 8,
         }
     }
 }
@@ -844,6 +852,9 @@ impl ClusterConfig {
         }
         if self.transfer_links == 0 {
             return Err("cluster.transfer_links must be >= 1".to_string());
+        }
+        if self.shortlist_k == 0 {
+            return Err("cluster.shortlist_k must be >= 1".to_string());
         }
         if !self.pools.is_empty() {
             if self.replicas < 2 {
@@ -1530,6 +1541,13 @@ impl ExperimentConfig {
                         .ok_or_else(|| format!("unknown decode_router {r}"))?,
                 );
             }
+            let shortlist = c.f64_or("shortlist_k", cfg.cluster.shortlist_k as f64);
+            if shortlist < 1.0 {
+                // negative values must be rejected *before* the usize cast
+                // below silently wraps them into huge widths
+                return Err("cluster.shortlist_k must be >= 1".to_string());
+            }
+            cfg.cluster.shortlist_k = shortlist as usize;
             cfg.cluster.validate()?;
             if let Some(a) = c.get("autoscale") {
                 let asc = &mut cfg.cluster.autoscale;
@@ -1877,6 +1895,8 @@ mod tests {
             r#"{"cluster":{"transfer_bandwidth":0}}"#,
             r#"{"cluster":{"transfer_bandwidth":-2}}"#,
             r#"{"cluster":{"transfer_links":0}}"#,
+            r#"{"cluster":{"shortlist_k":0}}"#,
+            r#"{"cluster":{"shortlist_k":-4}}"#,
             r#"{"cluster":{"pools":["prefill"]}}"#,
             r#"{"cluster":{"pools":["zzz","decode"]}}"#,
             r#"{"cluster":{"replicas":1,"pools":["prefill","decode"]}}"#,
@@ -1895,6 +1915,20 @@ mod tests {
         let mut c = ClusterConfig::default();
         c.transfer_bandwidth = f64::INFINITY;
         assert!(c.validate().is_err());
+        let mut c = ClusterConfig::default();
+        c.shortlist_k = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_parses_shortlist_k() {
+        let j = Json::parse(r#"{"cluster":{"shortlist_k":3}}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.cluster.shortlist_k, 3);
+        // omitted → the safe default
+        let j = Json::parse(r#"{"cluster":{}}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.cluster.shortlist_k, ClusterConfig::default().shortlist_k);
     }
 
     #[test]

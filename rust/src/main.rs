@@ -20,7 +20,7 @@ use sagesched::config::{
     ExperimentConfig, FailureDomain, FailureEvent, PolicyKind, PoolRole,
     PredictorKind, RouterKind, ScaleStep,
 };
-use sagesched::metrics::ClusterReport;
+use sagesched::metrics::{ClusterReport, DispatchScope};
 use sagesched::engine::RealEngine;
 use sagesched::metrics::RunReport;
 use sagesched::runtime::Runtime;
@@ -136,8 +136,11 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
         cfg.cluster.decode_router =
             Some(RouterKind::from_name(r).context("unknown --decode-router")?);
     }
+    cfg.cluster.shortlist_k = args.usize_or("shortlist-k", cfg.cluster.shortlist_k);
     if let Err(e) = cfg.cluster.validate() {
-        let hint = if e.contains("transfer") || e.contains("pool") {
+        let hint = if e.contains("shortlist") {
+            "--shortlist-k"
+        } else if e.contains("transfer") || e.contains("pool") {
             "--disagg/--pool/--transfer-bandwidth/--transfer-links"
         } else {
             "--migrate-kv/--migrate-quantile"
@@ -619,6 +622,31 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                 r.transfers, r.transfer_tokens, r.transfer_utilization
             );
         }
+        // per-scope hits/fallbacks/rescans, shown only when the indexes
+        // actually answered or attempted something (the oracle mode's
+        // all-rescan tally would be noise)
+        let attempted: u64 = DispatchScope::ALL
+            .iter()
+            .map(|&s| {
+                let sc = r.fastpath.scope(s);
+                sc.hits + sc.fallbacks
+            })
+            .sum();
+        if attempted > 0 {
+            let per: Vec<String> = DispatchScope::ALL
+                .iter()
+                .filter(|&&s| r.fastpath.scope(s).decisions() > 0)
+                .map(|&s| {
+                    let sc = r.fastpath.scope(s);
+                    format!("{} {}/{}/{}", s.name(), sc.hits, sc.fallbacks, sc.rescans)
+                })
+                .collect();
+            println!(
+                "  fast path: {:.1}% hits — h/f/r by scope: {}",
+                r.fastpath.hit_rate() * 100.0,
+                per.join(", ")
+            );
+        }
         print_kv_summary(&r.aggregate);
         print_slo_summary(&r.aggregate);
     }
@@ -760,6 +788,29 @@ const USAGE: &str = "usage: sagesched <run|sweep|smoke|serve|cluster> [flags]
           the cluster sim routes dispatches through incrementally-maintained
           score indexes (see cluster::index); results are byte-identical to
           the pre-index full rescans, locked in by tests/perf_equiv.rs.
+          fast-path coverage (router x dispatch scope; h = index hit,
+          s = shortlist + dominance bound, may fall back; - = full rescan):
+            router          intake  decode  drain  migration
+            round-robin       h       h       h       h
+            least-loaded      h       h       h       h
+            least-kv          h       h       h       h
+            cost-aware        h       h       h       h
+            quantile-cost     h       h       h       h
+            cache-affinity    s       s       s       s
+            class-aware wrap  h*      h*      h*      h*
+          h* = interactive arm answered from the tight-quantile/headroom
+          index pair; other classes per the wrapped router above.
+          decode/migration scopes additionally require the per-request
+          KV-fit filter to be vacuous (scope-min total KV suffices),
+          otherwise the dispatch is a counted rescan.
+          --shortlist-k 8   cache-affinity shortlist width: the per-request
+                            warm-prefix adjustment is applied to the K
+                            best-base-score replicas plus every known warm
+                            site; a dominance bound proves nothing outside
+                            can win, else the dispatch falls back to the
+                            full rescan (counted; >= 1, hard error on 0)
+          per-scope hits/fallbacks/rescans are reported in the cluster
+          summary and the report JSON's \"fastpath\" block.
           regenerate the checked-in BENCH_cluster.json baseline with
             cargo bench --bench cluster_scale          (1,000-replica run)
             cargo bench --bench cluster_scale -- --smoke   (CI-sized gate)

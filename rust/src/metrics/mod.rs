@@ -433,6 +433,135 @@ pub struct ClusterReport {
     /// [`PoolRole::ALL`](crate::config::PoolRole) order); empty when
     /// colocated.
     pub pool_replica_seconds: Vec<f64>,
+    /// Per-scope dispatch fast-path accounting (index-answered hits,
+    /// shortlist/dominance-bound fallbacks, unconditional rescans). The
+    /// only mode-dependent report section: oracle-vs-indexed byte
+    /// comparisons strip it, same-mode determinism gates keep it.
+    pub fastpath: FastPathStats,
+}
+
+/// Which dispatch seam a routing decision belongs to, for fast-path
+/// accounting: fresh intake (and crash re-dispatch), decode-side delivery
+/// off the KV-transfer fabric, scale-in drain re-admission, and scale-in
+/// migration of partially-generated requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchScope {
+    Intake,
+    Decode,
+    Drain,
+    Migration,
+}
+
+impl DispatchScope {
+    pub const ALL: [DispatchScope; 4] = [
+        DispatchScope::Intake,
+        DispatchScope::Decode,
+        DispatchScope::Drain,
+        DispatchScope::Migration,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchScope::Intake => "intake",
+            DispatchScope::Decode => "decode",
+            DispatchScope::Drain => "drain",
+            DispatchScope::Migration => "migration",
+        }
+    }
+}
+
+/// Fast-path accounting for one dispatch scope. Every routing decision on
+/// the scope lands in exactly one bucket.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FastPathScope {
+    /// Decisions answered straight from the incremental indexes (for the
+    /// affinity shortlist: the dominance bound held).
+    pub hits: u64,
+    /// Fast path attempted but not conclusive — shortlist dominance bound
+    /// failed, or an index answer was unavailable — so the full rescan ran.
+    pub fallbacks: u64,
+    /// Fast path not attempted at all: indexes off, a `Rescan`-declared
+    /// router, no index instance covering the scope, or a per-request
+    /// precondition (e.g. a non-vacuous KV-fit filter) held.
+    pub rescans: u64,
+}
+
+impl FastPathScope {
+    /// Total routing decisions taken on this scope.
+    pub fn decisions(&self) -> u64 {
+        self.hits + self.fallbacks + self.rescans
+    }
+}
+
+/// Per-scope [`FastPathScope`] counters carried on a [`ClusterReport`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FastPathStats {
+    pub intake: FastPathScope,
+    pub decode: FastPathScope,
+    pub drain: FastPathScope,
+    pub migration: FastPathScope,
+}
+
+impl FastPathStats {
+    pub fn scope(&self, s: DispatchScope) -> &FastPathScope {
+        match s {
+            DispatchScope::Intake => &self.intake,
+            DispatchScope::Decode => &self.decode,
+            DispatchScope::Drain => &self.drain,
+            DispatchScope::Migration => &self.migration,
+        }
+    }
+
+    pub fn scope_mut(&mut self, s: DispatchScope) -> &mut FastPathScope {
+        match s {
+            DispatchScope::Intake => &mut self.intake,
+            DispatchScope::Decode => &mut self.decode,
+            DispatchScope::Drain => &mut self.drain,
+            DispatchScope::Migration => &mut self.migration,
+        }
+    }
+
+    /// Index-answered decisions across every scope.
+    pub fn hits(&self) -> u64 {
+        DispatchScope::ALL.iter().map(|&s| self.scope(s).hits).sum()
+    }
+
+    /// All routing decisions across every scope.
+    pub fn decisions(&self) -> u64 {
+        DispatchScope::ALL
+            .iter()
+            .map(|&s| self.scope(s).decisions())
+            .sum()
+    }
+
+    /// hits / decisions over all scopes (0.0 when nothing was dispatched).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.decisions();
+        if total > 0 {
+            self.hits() as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            DispatchScope::ALL
+                .iter()
+                .map(|&s| {
+                    let fp = self.scope(s);
+                    (
+                        s.name().to_string(),
+                        Json::obj(vec![
+                            ("hits", Json::num(fp.hits as f64)),
+                            ("fallbacks", Json::num(fp.fallbacks as f64)),
+                            ("rescans", Json::num(fp.rescans as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
 }
 
 /// Cluster lifecycle counters feeding a [`ClusterReport`] (kept separate so
@@ -467,6 +596,8 @@ pub struct ClusterCounters {
     pub transfer_utilization: f64,
     /// Billed replica-seconds by pool (empty when colocated).
     pub pool_replica_seconds: Vec<f64>,
+    /// Per-scope dispatch fast-path accounting.
+    pub fastpath: FastPathStats,
 }
 
 impl ClusterReport {
@@ -597,6 +728,7 @@ impl ClusterReport {
             transfer_tokens: counters.transfer_tokens,
             transfer_utilization: counters.transfer_utilization,
             pool_replica_seconds: counters.pool_replica_seconds,
+            fastpath: counters.fastpath,
         }
     }
 
@@ -685,14 +817,18 @@ impl ClusterReport {
                 "pool_replica_seconds",
                 Json::arr(self.pool_replica_seconds.iter().map(|&s| Json::num(s))),
             ),
+            // the only mode-dependent section; oracle-vs-indexed
+            // comparisons zero the `fastpath` field before serializing
+            ("fastpath", self.fastpath.to_json()),
         ])
     }
 }
 
 /// Performance counters of one bench run — what `benches/cluster_scale.rs`
 /// records into `BENCH_cluster.json` so every later PR can show the perf
-/// trajectory. Not part of any `ClusterReport` (report JSON stays
-/// byte-identical across perf work by construction).
+/// trajectory. Not part of any `ClusterReport`: aside from the `fastpath`
+/// accounting block (which oracle comparisons strip), report JSON stays
+/// byte-identical across perf work by construction.
 #[derive(Clone, Debug, Default)]
 pub struct PerfStats {
     /// Wall-clock seconds of the measured phase.

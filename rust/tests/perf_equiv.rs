@@ -14,9 +14,9 @@
 use sagesched::cluster::EventCluster;
 use sagesched::config::{
     ArrivalKind, AutoscaleKind, ExperimentConfig, FailureDomain, FailureEvent,
-    PolicyKind, PoolRole, RouterKind,
+    PolicyKind, PoolRole, RouterKind, ScaleStep,
 };
-use sagesched::metrics::ClusterReport;
+use sagesched::metrics::{ClusterReport, FastPathStats};
 use sagesched::util::rng::Rng;
 use sagesched::workload::WorkloadGen;
 
@@ -32,7 +32,10 @@ fn cluster_cfg(replicas: usize, n: usize, rps: f64) -> ExperimentConfig {
 }
 
 /// Same zeroing convention as the golden test in `tests/slo.rs`: the
-/// wallclock overhead fields are the only nondeterministic numbers.
+/// wallclock overhead fields are the only nondeterministic numbers. The
+/// fast-path accounting block is stripped too — it is the one section
+/// *designed* to differ between the indexed run and the all-rescan oracle;
+/// everything else must stay byte-identical.
 fn deterministic_json(mut r: ClusterReport) -> String {
     r.aggregate.predict_overhead = 0.0;
     r.aggregate.sched_overhead = 0.0;
@@ -40,6 +43,7 @@ fn deterministic_json(mut r: ClusterReport) -> String {
         pr.predict_overhead = 0.0;
         pr.sched_overhead = 0.0;
     }
+    r.fastpath = FastPathStats::default();
     r.to_json().to_string()
 }
 
@@ -161,8 +165,8 @@ fn stealing_matches_oracle() {
 
 #[test]
 fn disagg_matches_oracle() {
-    // the index scope narrows to the prefill pool; fabric handoffs into
-    // decode stay on the rescan path, gated by `fabric_dirty`
+    // the intake scope narrows to the prefill pool; fabric handoffs into
+    // decode dispatch from the decode-scope index twin
     let mut cfg = cluster_cfg(6, 220, 30.0);
     cfg.cluster.pools = vec![PoolRole::Prefill, PoolRole::Decode];
     assert_equivalent("disagg", &cfg);
@@ -170,13 +174,81 @@ fn disagg_matches_oracle() {
 
 #[test]
 fn sessions_match_oracle() {
-    // multi-turn traffic; CacheAffinity declares Rescan and must still
-    // agree with itself under the toggle (sanity that the toggle is inert
-    // for rescan-only routers)
+    // multi-turn traffic; CacheAffinity dispatches through the shortlist +
+    // dominance-bound fast path and must agree with the oracle exactly,
+    // fallbacks included
     let mut cfg = baseline();
     cfg.workload.sessions.enabled = true;
     cfg.workload.sessions.prefix_share = 0.7;
     assert_equivalent("sessions", &cfg);
+}
+
+#[test]
+fn affinity_shortlist_matches_oracle() {
+    // session-heavy traffic with a deliberately tiny shortlist: warm sites
+    // pile up on few replicas, so the dominance bound is exercised right at
+    // its failure edge — both the accept and the counted-fallback branches
+    // must reproduce the oracle's argmin exactly
+    let mut cfg = cluster_cfg(6, 260, 34.0);
+    cfg.workload.sessions.enabled = true;
+    cfg.workload.sessions.prefix_share = 0.8;
+    cfg.cluster.shortlist_k = 1;
+    assert_equivalent("affinity-shortlist-k1", &cfg);
+    cfg.cluster.shortlist_k = 3;
+    assert_equivalent("affinity-shortlist-k3", &cfg);
+}
+
+#[test]
+fn class_aware_interactive_disagg_matches_oracle() {
+    // class-aware Interactive under disaggregation: the tight-quantile /
+    // headroom index pair answers Interactive dispatch on the prefill
+    // intake scope and on decode-side delivery, including the
+    // eligible-empty <=> headroom-count-zero fallback
+    let mut cfg = cluster_cfg(6, 240, 32.0);
+    cfg.slo.class_aware = true;
+    cfg.cluster.pools = vec![PoolRole::Prefill, PoolRole::Decode];
+    assert_equivalent("class-aware-disagg", &cfg);
+}
+
+#[test]
+fn congested_decode_delivery_matches_oracle() {
+    // a starved fabric (one slow link) queues handoffs and delivers them in
+    // bursts onto a small decode pool — the decode-scope fast path sees
+    // back-to-back deliveries with KV filling up, so the fit-filter
+    // vacuousness gate flips mid-run
+    let mut cfg = cluster_cfg(6, 240, 34.0);
+    cfg.cluster.pools = vec![
+        PoolRole::Prefill,
+        PoolRole::Prefill,
+        PoolRole::Prefill,
+        PoolRole::Decode,
+    ];
+    cfg.cluster.transfer_links = 1;
+    cfg.cluster.transfer_bandwidth = 4_000.0;
+    cfg.workload.sessions.enabled = true;
+    assert_equivalent("congested-decode", &cfg);
+}
+
+#[test]
+fn migration_heavy_scale_in_matches_oracle() {
+    // scripted scale-in with cheap KV migration: drains re-admit queued
+    // work (Drain scope) and ship partials (Migration scope) through the
+    // per-pool indexed path, against the oracle's per-move rescan
+    let mut cfg = cluster_cfg(6, 260, 34.0);
+    cfg.cluster.migration_kv_per_token = 0.001;
+    cfg.cluster.autoscale.kind = AutoscaleKind::Step;
+    cfg.cluster.autoscale.steps = vec![
+        ScaleStep { at: 2.0, target: 3 },
+        ScaleStep { at: 5.0, target: 6 },
+        ScaleStep { at: 7.0, target: 2 },
+    ];
+    cfg.cluster.autoscale.min_replicas = 2;
+    cfg.cluster.autoscale.max_replicas = 8;
+    cfg.cluster.autoscale.provision_delay = 0.5;
+    cfg.cluster.autoscale.cooldown = 0.5;
+    cfg.cluster.autoscale.interval = 0.5;
+    cfg.workload.sessions.enabled = true;
+    assert_equivalent("migration-heavy", &cfg);
 }
 
 #[test]
@@ -211,7 +283,8 @@ fn kitchen_sink_matches_oracle() {
 #[test]
 fn class_aware_wrapper_matches_oracle() {
     // the seventh router: the class-aware wrapper forwards Batch traffic
-    // to the inner fast path and forces Interactive onto the rescan
+    // to the inner fast path and answers Interactive from the
+    // tight-quantile/headroom index pair
     let mut cfg = baseline();
     cfg.slo.class_aware = true;
     assert_equivalent("class-aware", &cfg);
